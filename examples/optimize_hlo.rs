@@ -1,0 +1,53 @@
+//! Plan a real JAX-lowered HLO module: parse the artifact, run every
+//! planner, and tabulate the memory plans.
+//!
+//! ```sh
+//! make artifacts-tiny
+//! cargo run --release --example optimize_hlo -- --hlo artifacts-tiny/train_step.hlo.txt
+//! ```
+
+use roam::benchkit::{mib, reduction_pct};
+use roam::planner::model_baseline::{model_plan, ModelCfg, Streaming};
+use roam::planner::{heuristic::heuristic_plan, pytorch, roam_plan, RoamCfg};
+use roam::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let path = args.get("hlo", "artifacts-tiny/train_step.hlo.txt");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("cannot read {path}: {e}. Run `make artifacts-tiny` first."));
+    let g = roam::hlo::parse_hlo_text(&text).expect("parse HLO");
+    println!(
+        "{path}: {} ops, {} tensors, {} dynamic bytes",
+        g.n_ops(),
+        g.n_tensors(),
+        g.dynamic_bytes()
+    );
+
+    let plans = [
+        pytorch(&g),
+        heuristic_plan(&g),
+        model_plan(&g, &ModelCfg {
+            streaming: Streaming::Multi,
+            time_limit_secs: args.f64("time-limit", 15.0),
+            ..Default::default()
+        }),
+        roam_plan(&g, &RoamCfg::default()),
+    ];
+    let base = plans[0].actual_peak;
+    println!(
+        "\n{:<10} {:>10} {:>10} {:>8} {:>9} {:>9}",
+        "planner", "Tp(MiB)", "act(MiB)", "frag%", "time(s)", "vs torch"
+    );
+    for p in &plans {
+        println!(
+            "{:<10} {:>10} {:>10} {:>8.2} {:>9.2} {:>8.1}%",
+            p.planner,
+            mib(p.theoretical_peak),
+            mib(p.actual_peak),
+            p.frag_pct(),
+            p.planning_secs,
+            reduction_pct(base, p.actual_peak)
+        );
+    }
+}

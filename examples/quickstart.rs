@@ -1,0 +1,47 @@
+//! Quickstart: plan a training graph with ROAM and compare against the
+//! PyTorch baseline.
+//!
+//! ```sh
+//! cargo run --release --example quickstart -- [--model vit] [--batch 1]
+//! ```
+
+use roam::benchkit::reduction_pct;
+use roam::models::{self, BuildCfg, ModelKind};
+use roam::planner::{pytorch, roam_plan, RoamCfg};
+use roam::util::cli::Args;
+use roam::util::human_bytes;
+
+fn main() {
+    let args = Args::from_env();
+    let name = args.get("model", "vit");
+    let kind = ModelKind::from_name(&name).expect("unknown model");
+    let cfg = BuildCfg {
+        batch: args.usize("batch", 1),
+        ..Default::default()
+    };
+
+    println!("building {} (batch {}) training graph...", name, cfg.batch);
+    let g = models::build(kind, &cfg);
+    println!("  {} operators, {} tensors", g.n_ops(), g.n_tensors());
+    println!("  weights+opt state (resident): {}", human_bytes(g.persistent_bytes()));
+
+    println!("\nplanning with ROAM...");
+    let plan = roam_plan(&g, &RoamCfg::default());
+    println!("  theoretical peak : {}", human_bytes(plan.theoretical_peak));
+    println!("  actual peak      : {}", human_bytes(plan.actual_peak));
+    println!("  fragmentation    : {:.2}%", plan.frag_pct());
+    println!("  planning time    : {:.2}s", plan.planning_secs);
+
+    println!("\nPyTorch baseline (program order + caching allocator)...");
+    let base = pytorch(&g);
+    println!("  theoretical peak : {}", human_bytes(base.theoretical_peak));
+    println!("  actual peak      : {}", human_bytes(base.actual_peak));
+    println!("  fragmentation    : {:.2}%", base.frag_pct());
+
+    println!(
+        "\nROAM saves {:.1}% of dynamic memory ({} → {})",
+        reduction_pct(base.actual_peak, plan.actual_peak),
+        human_bytes(base.actual_peak),
+        human_bytes(plan.actual_peak)
+    );
+}

@@ -1,0 +1,94 @@
+"""AOT lowering: JAX train step → HLO text artifacts for the Rust runtime.
+
+HLO *text* is the interchange format (NOT a serialized HloModuleProto):
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Usage:
+    python -m compile.aot --preset gpt100m --out-dir ../artifacts
+    python -m compile.aot --preset tiny    --out-dir ../artifacts-tiny
+
+Outputs: <out-dir>/{init.hlo.txt, train_step.hlo.txt, meta.json}.
+`make artifacts` is a no-op when outputs are newer than the inputs.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import PRESETS, make_init, make_train_step, param_count
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bundle(preset: str, out_dir: str) -> dict:
+    cfg = PRESETS[preset]
+    n_params = param_count(cfg)
+    os.makedirs(out_dir, exist_ok=True)
+
+    # init() -> (params, m, v, step)
+    init = make_init(cfg)
+    init_text = to_hlo_text(jax.jit(init).lower())
+    init_name = "init.hlo.txt"
+    with open(os.path.join(out_dir, init_name), "w") as f:
+        f.write(init_text)
+
+    # train_step(params, m, v, step, tokens, targets) -> (params, m, v, step, loss)
+    step = make_train_step(cfg)
+    flat = jax.ShapeDtypeStruct((n_params,), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    toks = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    step_text = to_hlo_text(
+        jax.jit(step).lower(flat, flat, flat, scalar, toks, toks)
+    )
+    step_name = "train_step.hlo.txt"
+    with open(os.path.join(out_dir, step_name), "w") as f:
+        f.write(step_text)
+
+    meta = {
+        "preset": preset,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layer": cfg.n_layer,
+        "n_head": cfg.n_head,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "param_count": n_params,
+        "train_step": step_name,
+        "init": init_name,
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="gpt100m", choices=sorted(PRESETS))
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    meta = lower_bundle(args.preset, args.out_dir)
+    sizes = {
+        name: os.path.getsize(os.path.join(args.out_dir, meta[name]))
+        for name in ("init", "train_step")
+    }
+    print(
+        f"lowered preset={args.preset} params={meta['param_count']:,} "
+        f"→ {args.out_dir} ({sizes})"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""L1: fused flash-attention Pallas kernel.
+
+The paper's system (ROAM) is a graph-level planner, so the kernel's role
+here is to be the *real compute hot-spot* of the L2 model that the planner
+and runtime operate on. It is a streaming (flash) attention: the softmax is
+computed online per query block with a running (max, denominator)
+accumulator, so the S×S score matrix is never materialised — the kernel
+equivalent of the paper's memory thesis (don't keep big temporaries alive).
+
+TPU-shaped structure (see DESIGN.md §Hardware-Adaptation):
+  * grid = (B·H, S/BLK_Q): one program instance per query block per head;
+  * BlockSpec tiles q into VMEM-sized [BLK_Q, D] blocks; k/v stream in
+    [BLK_K, D] blocks via a fori_loop — the HBM↔VMEM schedule CUDA
+    implementations express with threadblocks;
+  * accumulation in f32 regardless of the input dtype (MXU-style).
+
+VMEM footprint per instance (f32, BLK_Q=BLK_K=64, D=64):
+  q (64·64) + k/v blocks (2·64·64) + acc (64·64) + m/l (2·64) ≈ 66 KiB,
+comfortably inside a TPU core's ~16 MiB VMEM; BLK sizes are multiples of
+the 8×128/128×128 VPU/MXU tiles. interpret=True is mandatory on this
+CPU-only image — compiled TPU lowering would emit a Mosaic custom-call the
+CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLK_Q = 64
+DEFAULT_BLK_K = 64
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, blk_k: int, causal: bool, scale: float):
+    """One query block against all key/value blocks (streaming softmax)."""
+    q = q_ref[...].astype(jnp.float32) * scale  # [blk_q, d]
+    blk_q, d = q.shape
+    s_total = k_ref.shape[0]
+    n_kblocks = s_total // blk_k
+
+    q_block_idx = pl.program_id(1)
+    q_offset = q_block_idx * blk_q
+
+    def body(kb, carry):
+        acc, m_prev, l_prev = carry
+        k = k_ref[pl.dslice(kb * blk_k, blk_k), :].astype(jnp.float32)
+        v = v_ref[pl.dslice(kb * blk_k, blk_k), :].astype(jnp.float32)
+        scores = q @ k.T  # [blk_q, blk_k]
+        if causal:
+            q_ids = q_offset + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+            k_ids = kb * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+            scores = jnp.where(q_ids >= k_ids, scores, NEG_INF)
+        m_cur = jnp.maximum(m_prev, scores.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(scores - m_cur[:, None])
+        l_cur = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_cur, l_cur
+
+    acc0 = jnp.zeros((blk_q, d), jnp.float32)
+    m0 = jnp.full((blk_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((blk_q,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, n_kblocks, body, (acc0, m0, l0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "blk_q", "blk_k"))
+def _attention_impl(q, k, v, causal=True, blk_q=DEFAULT_BLK_Q, blk_k=DEFAULT_BLK_K):
+    """Fused attention over [B, H, S, D] inputs (Pallas, interpret mode).
+
+    Sequence length must be divisible by the block sizes; callers pick
+    blocks accordingly (the L2 model uses S=128 with 64×64 blocks).
+
+    Differentiable via a recompute-style custom VJP (the flash-attention
+    strategy: the forward never materialises the S×S probabilities; the
+    backward recomputes them from the saved q/k/v).
+    """
+    b, h, s, d = q.shape
+    blk_q = min(blk_q, s)
+    blk_k = min(blk_k, s)
+    assert s % blk_q == 0 and s % blk_k == 0, (s, blk_q, blk_k)
+    scale = 1.0 / (d ** 0.5)
+
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+
+    kernel = functools.partial(
+        _attn_kernel, blk_k=blk_k, causal=causal, scale=scale
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, s // blk_q),
+        in_specs=[
+            pl.BlockSpec((None, blk_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, blk_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def attention(q, k, v, causal=True, blk_q=DEFAULT_BLK_Q, blk_k=DEFAULT_BLK_K):
+    """Differentiable fused attention: forward via the Pallas kernel,
+    backward via the flash-style recompute VJP below."""
+    return _attention_impl(q, k, v, causal, blk_q, blk_k)
+
+
+def _attention_fwd(q, k, v, causal, blk_q, blk_k):
+    return _attention_impl(q, k, v, causal, blk_q, blk_k), (q, k, v)
+
+
+def _attention_bwd(causal, blk_q, blk_k, saved, do):
+    """Closed-form attention backward, recomputing the probabilities."""
+    q, k, v = saved
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    dof = do.astype(jnp.float32)
+    d = qf.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    if causal:
+        s = qf.shape[2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p, dof)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", dof, vf)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.einsum("bhqk,bhkd->bhqd", ds, kf) * scale
+    dk = jnp.einsum("bhqk,bhqd->bhkd", ds, qf) * scale
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)

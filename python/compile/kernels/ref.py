@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: `python/tests/test_kernel.py`
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernel
+(interpret=True) matches these to tight tolerances.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal=True):
+    """Naive softmax attention.
+
+    Args:
+      q, k, v: [B, H, S, D] arrays.
+      causal: apply a lower-triangular mask.
+
+    Returns:
+      [B, H, S, D] attention output, computed in f32.
+    """
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+        jnp.asarray(d, jnp.float32)
+    )
+    if causal:
+        s = q.shape[2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last dimension."""
+    x = x.astype(jnp.float32)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def softmax_xent_ref(logits, targets):
+    """Mean token cross-entropy. logits [N, V], targets [N] int."""
+    logits = logits.astype(jnp.float32)
+    zmax = logits.max(-1)
+    logz = jnp.log(jnp.sum(jnp.exp(logits - zmax[:, None]), -1)) + zmax
+    gold = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)

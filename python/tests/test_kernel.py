@@ -1,0 +1,106 @@
+"""L1 correctness: the Pallas attention kernel vs the pure-jnp oracle.
+
+hypothesis sweeps shapes/dtypes/block sizes; assert_allclose against
+ref.py is THE correctness signal for the kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention, _attention_impl
+from compile.kernels.ref import attention_ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(1, 3),
+    s_blocks=st.integers(1, 4),
+    d=st.sampled_from([16, 32, 64]),
+    causal=st.booleans(),
+    blk=st.sampled_from([16, 32]),
+)
+def test_kernel_matches_ref_shapes(b, h, s_blocks, d, causal, blk):
+    s = blk * s_blocks
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(b * 100 + h * 10 + s), 3)
+    q = _rand(k1, (b, h, s, d), jnp.float32)
+    k = _rand(k2, (b, h, s, d), jnp.float32)
+    v = _rand(k3, (b, h, s, d), jnp.float32)
+    out = attention(q, k, v, causal, blk, blk)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, ref, atol=3e-5, rtol=3e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    causal=st.booleans(),
+)
+def test_kernel_dtypes(dtype, causal):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = _rand(k1, (1, 2, 64, 32), dtype)
+    k = _rand(k2, (1, 2, 64, 32), dtype)
+    v = _rand(k3, (1, 2, 64, 32), dtype)
+    out = attention(q, k, v, causal)
+    assert out.dtype == dtype
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 3e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(out.astype(jnp.float32), ref, atol=tol, rtol=tol)
+
+
+def test_block_size_invariance():
+    """All block decompositions must agree bit-for-bit-ish."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = _rand(k1, (1, 1, 128, 64), jnp.float32)
+    k = _rand(k2, (1, 1, 128, 64), jnp.float32)
+    v = _rand(k3, (1, 1, 128, 64), jnp.float32)
+    base = attention(q, k, v, True, 128, 128)
+    for blk_q in (32, 64):
+        for blk_k in (32, 64, 128):
+            out = _attention_impl(q, k, v, True, blk_q, blk_k)
+            np.testing.assert_allclose(out, base, atol=2e-5, rtol=2e-5)
+
+
+def test_gradients_match_ref():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = _rand(k1, (1, 2, 64, 32), jnp.float32)
+    k = _rand(k2, (1, 2, 64, 32), jnp.float32)
+    v = _rand(k3, (1, 2, 64, 32), jnp.float32)
+
+    def scalar(fn):
+        return lambda q, k, v: (fn(q, k, v, causal=True) ** 2).sum()
+
+    g_kernel = jax.grad(scalar(attention), argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(
+        lambda q, k, v: (attention_ref(q, k, v, causal=True) ** 2).sum(),
+        argnums=(0, 1, 2),
+    )(q, k, v)
+    for a, b in zip(g_kernel, g_ref):
+        np.testing.assert_allclose(a, b, atol=3e-4, rtol=3e-4)
+
+
+def test_causal_mask_blocks_future():
+    """Perturbing a future key/value must not change earlier outputs."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = _rand(k1, (1, 1, 64, 16), jnp.float32)
+    k = _rand(k2, (1, 1, 64, 16), jnp.float32)
+    v = _rand(k3, (1, 1, 64, 16), jnp.float32)
+    base = attention(q, k, v, True)
+    v2 = v.at[0, 0, 63, :].add(100.0)
+    out = attention(q, k, v2, True)
+    np.testing.assert_allclose(out[0, 0, :63], base[0, 0, :63], atol=1e-6)
+    assert not np.allclose(out[0, 0, 63], base[0, 0, 63])
+
+
+def test_rejects_indivisible_seq():
+    q = jnp.zeros((1, 1, 48, 16), jnp.float32)
+    with pytest.raises(AssertionError):
+        _attention_impl(q, q, q, True, 32, 32)

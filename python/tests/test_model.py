@@ -1,0 +1,104 @@
+"""L2 correctness: model shapes, flat-parameter packing, training descent."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    PRESETS,
+    Config,
+    forward,
+    init_params,
+    loss_fn,
+    make_init,
+    make_train_step,
+    param_count,
+    param_shapes,
+    unflatten,
+)
+
+
+CFG = PRESETS["tiny"]
+
+
+def test_param_count_100m_class():
+    n = param_count(PRESETS["gpt100m"])
+    assert 80_000_000 < n < 120_000_000, n
+
+
+def test_unflatten_roundtrip():
+    flat = init_params(CFG, jax.random.PRNGKey(0))
+    assert flat.shape == (param_count(CFG),)
+    parts = unflatten(CFG, flat)
+    total = sum(int(np.prod(v.shape)) for v in parts.values())
+    assert total == param_count(CFG)
+    for name, shp in param_shapes(CFG):
+        assert parts[name].shape == tuple(shp)
+    # Gains init to 1, biases to 0.
+    assert float(parts["ln1_g"].mean()) == pytest.approx(1.0)
+    assert float(parts["bq"].std()) == 0.0
+
+
+def test_forward_shapes_and_determinism():
+    flat = init_params(CFG, jax.random.PRNGKey(1))
+    tok = jnp.zeros((CFG.batch, CFG.seq_len), jnp.int32)
+    logits = forward(CFG, flat, tok)
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+    logits2 = forward(CFG, flat, tok)
+    np.testing.assert_array_equal(logits, logits2)
+
+
+def test_causality_of_full_model():
+    """Changing a later token must not change earlier logits."""
+    flat = init_params(CFG, jax.random.PRNGKey(2))
+    rng = np.random.RandomState(0)
+    tok = jnp.array(rng.randint(0, CFG.vocab, (1, CFG.seq_len)), jnp.int32)
+    tok2 = tok.at[0, -1].set((int(tok[0, -1]) + 1) % CFG.vocab)
+    a = forward(CFG, flat, tok)
+    b = forward(CFG, flat, tok2)
+    np.testing.assert_allclose(a[0, :-1], b[0, :-1], atol=1e-5)
+
+
+def test_loss_at_init_near_uniform():
+    flat = init_params(CFG, jax.random.PRNGKey(3))
+    rng = np.random.RandomState(1)
+    tok = jnp.array(rng.randint(0, CFG.vocab, (CFG.batch, CFG.seq_len)), jnp.int32)
+    loss = float(loss_fn(CFG, flat, tok, tok))
+    # Tied embeddings make init logits mildly non-uniform; stay within a
+    # couple of nats of ln(V).
+    assert abs(loss - np.log(CFG.vocab)) < 2.5, loss
+
+
+def test_training_reduces_loss():
+    step = jax.jit(make_train_step(CFG))
+    p, m, v, s = make_init(CFG)()
+    rng = np.random.RandomState(2)
+    tok = jnp.array(rng.randint(0, CFG.vocab, (CFG.batch, CFG.seq_len)), jnp.int32)
+    losses = []
+    for _ in range(10):
+        p, m, v, s, loss = step(p, m, v, s, tok, tok)
+        losses.append(float(loss))
+    assert losses[-1] < 0.7 * losses[0], losses
+    assert float(s) == 10.0
+
+
+def test_pallas_and_ref_paths_agree():
+    cfg_ref = Config(**{**CFG.__dict__, "use_pallas": False})
+    flat = init_params(CFG, jax.random.PRNGKey(4))
+    rng = np.random.RandomState(3)
+    tok = jnp.array(rng.randint(0, CFG.vocab, (1, CFG.seq_len)), jnp.int32)
+    a = forward(CFG, flat, tok)
+    b = forward(cfg_ref, flat, tok)
+    np.testing.assert_allclose(a, b, atol=2e-4, rtol=2e-4)
+
+
+def test_adam_state_updates():
+    step = jax.jit(make_train_step(CFG))
+    p0, m0, v0, s0 = make_init(CFG)()
+    rng = np.random.RandomState(4)
+    tok = jnp.array(rng.randint(0, CFG.vocab, (CFG.batch, CFG.seq_len)), jnp.int32)
+    p1, m1, v1, s1, _ = step(p0, m0, v0, s0, tok, tok)
+    assert float(jnp.abs(m1).max()) > 0.0
+    assert float(jnp.abs(v1).max()) > 0.0
+    assert not np.allclose(p0, p1)

@@ -1,0 +1,51 @@
+//! Ablation (§IV-A): the weight-update delay radius `r`. Sweeps `r` on
+//! BERT and MobileNet (the models the paper highlights for huge update
+//! temporaries) and reports the theoretical peak and how many update
+//! branches were delayed. `r → ∞` disables delaying; `r = 0` delays
+//! aggressively whenever the load test fires.
+//!
+//! `cargo bench --bench abl_delay_radius [-- --radii 0,0.5,1,2,4,1e9]`
+
+use roam::benchkit::{mib, Report};
+use roam::models::{self, BuildCfg, ModelKind};
+use roam::planner::{roam_plan, RoamCfg};
+use roam::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let radii: Vec<f64> = args
+        .get("radii", "0,0.5,1,2,4,1e9")
+        .split(',')
+        .map(|s| s.parse().expect("--radii"))
+        .collect();
+
+    let mut rep = Report::new(
+        "abl_delay_radius",
+        "Ablation: weight-update delay radius r",
+        &["model", "r", "theoretical_peak_MiB", "actual_peak_MiB", "delayed_branches"],
+    );
+
+    for kind in [ModelKind::Bert, ModelKind::Mobilenet] {
+        let g = models::build(kind, &BuildCfg::default());
+        for &r in &radii {
+            let plan = roam_plan(&g, &RoamCfg {
+                delay_radius: r,
+                ..Default::default()
+            });
+            let delayed = plan
+                .stats
+                .iter()
+                .find(|(k, _)| k == "delayed_weight_updates")
+                .map(|(_, v)| *v)
+                .unwrap_or(0.0);
+            rep.row(&[
+                kind.name().to_string(),
+                format!("{r}"),
+                mib(plan.theoretical_peak),
+                mib(plan.actual_peak),
+                format!("{delayed}"),
+            ]);
+        }
+    }
+    rep.finish();
+}

@@ -1,0 +1,51 @@
+//! Ablation (§IV-C): the `node_limit` parameter — the efficiency/quality
+//! trade-off of the subgraph-tree split-down. Small limits mean more,
+//! cheaper leaves (fast, possibly worse peaks); huge limits approach
+//! whole-segment exact solves.
+//!
+//! `cargo bench --bench abl_node_limit [-- --limits 8,16,32,64,128]`
+
+use roam::benchkit::{mib, Report};
+use roam::models::{self, BuildCfg, ModelKind};
+use roam::planner::{roam_plan, RoamCfg};
+use roam::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let limits: Vec<usize> = args
+        .get("limits", "8,16,32,64,128")
+        .split(',')
+        .map(|s| s.parse().expect("--limits"))
+        .collect();
+
+    let mut rep = Report::new(
+        "abl_node_limit",
+        "Ablation: subgraph-tree node_limit",
+        &["model", "node_limit", "leaves", "time_s", "theoretical_peak_MiB", "frag"],
+    );
+
+    for kind in [ModelKind::Bert, ModelKind::Efficientnet] {
+        let g = models::build(kind, &BuildCfg::default());
+        for &nl in &limits {
+            let plan = roam_plan(&g, &RoamCfg {
+                node_limit: nl,
+                ..Default::default()
+            });
+            let leaves = plan
+                .stats
+                .iter()
+                .find(|(k, _)| k == "order_tasks")
+                .map(|(_, v)| *v)
+                .unwrap_or(0.0);
+            rep.row(&[
+                kind.name().to_string(),
+                nl.to_string(),
+                format!("{leaves}"),
+                format!("{:.2}", plan.planning_secs),
+                mib(plan.theoretical_peak),
+                format!("{:.2}%", plan.frag_pct()),
+            ]);
+        }
+    }
+    rep.finish();
+}

@@ -1,0 +1,54 @@
+//! Fig 11: overall memory reduction (%) of ROAM vs PyTorch, the heuristic
+//! baseline (LESCEA+LLFB), and MODeL-MS — actual peak memory of the full
+//! execution plan (order + layout) on the seven-model suite, batch 1 & 32.
+//!
+//! `cargo bench --bench fig11_overall [-- --time-limit 20 --batches 1,32]`
+
+use roam::benchkit::{eval_suite_graphs, mib, reduction_pct, Report};
+use roam::planner::model_baseline::{model_plan, ModelCfg, Streaming};
+use roam::planner::{heuristic::heuristic_plan, pytorch, roam_plan, RoamCfg};
+use roam::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let time_limit = args.f64("time-limit", 6.0);
+    let batches: Vec<usize> = args
+        .get("batches", "1,32")
+        .split(',')
+        .map(|s| s.parse().expect("--batches"))
+        .collect();
+
+    let mut rep = Report::new(
+        "fig11_overall",
+        "Fig 11: overall memory reduction vs baselines (actual peak)",
+        &[
+            "workload", "pytorch_MiB", "heuristic_MiB", "model_ms_MiB", "roam_MiB",
+            "red_vs_pytorch", "red_vs_heur", "red_vs_model",
+        ],
+    );
+
+    for (label, g) in eval_suite_graphs(&batches) {
+        let pt = pytorch(&g);
+        let h = heuristic_plan(&g);
+        let mm = model_plan(&g, &ModelCfg {
+            streaming: Streaming::Multi,
+            time_limit_secs: time_limit,
+            ..Default::default()
+        });
+        let r = roam_plan(&g, &RoamCfg {
+            multi_stream: true,
+            ..Default::default()
+        });
+        rep.row(&[
+            label,
+            mib(pt.actual_peak),
+            mib(h.actual_peak),
+            mib(mm.actual_peak),
+            mib(r.actual_peak),
+            format!("{:.1}%", reduction_pct(pt.actual_peak, r.actual_peak)),
+            format!("{:.1}%", reduction_pct(h.actual_peak, r.actual_peak)),
+            format!("{:.1}%", reduction_pct(mm.actual_peak, r.actual_peak)),
+        ]);
+    }
+    rep.finish();
+}

@@ -1,0 +1,57 @@
+//! Fig 12: memory reduction (%) from operator-order optimization alone —
+//! theoretical peak of ROAM's order vs PyTorch program order, LESCEA, and
+//! MODeL-MS, on the seven-model suite at batch 1 & 32.
+//!
+//! `cargo bench --bench fig12_order [-- --time-limit 15]`
+
+use roam::benchkit::{eval_suite_graphs, mib, reduction_pct, Report};
+use roam::planner::model_baseline::whole_graph_order;
+use roam::planner::{roam_plan, RoamCfg};
+use roam::sched::lescea::lescea_order;
+use roam::sched::sim::theoretical_peak;
+use roam::sched::Schedule;
+use roam::util::cli::Args;
+use roam::util::timer::Deadline;
+
+fn main() {
+    let args = Args::from_env();
+    let time_limit = args.f64("time-limit", 5.0);
+    let batches: Vec<usize> = args
+        .get("batches", "1,32")
+        .split(',')
+        .map(|s| s.parse().expect("--batches"))
+        .collect();
+
+    let mut rep = Report::new(
+        "fig12_order",
+        "Fig 12: theoretical-peak reduction from order optimization",
+        &[
+            "workload", "pytorch", "lescea", "model_ms", "roam",
+            "red_vs_pytorch", "red_vs_lescea", "red_vs_model",
+        ],
+    );
+
+    for (label, g) in eval_suite_graphs(&batches) {
+        let tp = |o: &[usize]| theoretical_peak(&g, &Schedule::from_order(o));
+        let p_pt = tp(&roam::graph::topo::program_order(&g));
+        let p_les = tp(&lescea_order(&g));
+        let p_model = tp(&whole_graph_order(
+            &g,
+            Deadline::after_secs(time_limit),
+            500_000,
+        ));
+        let r = roam_plan(&g, &RoamCfg::default());
+        let p_roam = r.theoretical_peak;
+        rep.row(&[
+            label,
+            mib(p_pt),
+            mib(p_les),
+            mib(p_model),
+            mib(p_roam),
+            format!("{:.1}%", reduction_pct(p_pt, p_roam)),
+            format!("{:.1}%", reduction_pct(p_les, p_roam)),
+            format!("{:.1}%", reduction_pct(p_model, p_roam)),
+        ]);
+    }
+    rep.finish();
+}

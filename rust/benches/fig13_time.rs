@@ -1,0 +1,45 @@
+//! Fig 13: ROAM time-to-optimization per model in single-streaming and
+//! multi-streaming, batch 1 & 32.
+//!
+//! `cargo bench --bench fig13_time [-- --runs 3]`
+
+use roam::benchkit::{eval_suite_graphs, Report};
+use roam::planner::{roam_plan, RoamCfg};
+use roam::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let runs = args.usize("runs", 1).max(1);
+    let batches: Vec<usize> = args
+        .get("batches", "1,32")
+        .split(',')
+        .map(|s| s.parse().expect("--batches"))
+        .collect();
+
+    let mut rep = Report::new(
+        "fig13_time",
+        "Fig 13: ROAM optimization time (s), SS & MS",
+        &["workload", "ops", "ss_secs", "ms_secs"],
+    );
+    for (label, g) in eval_suite_graphs(&batches) {
+        // Average over `runs` to smooth the multi-processing jitter the
+        // paper also averages away (§V-A: 10 runs).
+        let mut ss = 0.0;
+        let mut ms = 0.0;
+        for _ in 0..runs {
+            ss += roam_plan(&g, &RoamCfg::default()).planning_secs;
+            ms += roam_plan(&g, &RoamCfg {
+                multi_stream: true,
+                ..Default::default()
+            })
+            .planning_secs;
+        }
+        rep.row(&[
+            label,
+            g.n_ops().to_string(),
+            format!("{:.2}", ss / runs as f64),
+            format!("{:.2}", ms / runs as f64),
+        ]);
+    }
+    rep.finish();
+}

@@ -1,0 +1,50 @@
+//! Fig 14: time-to-optimization speedup of ROAM vs the heuristic pipeline
+//! (single-streaming) and vs MODeL (multi-streaming). The paper reports
+//! T_baseline / T_ROAM ratios ≥ 53.6× vs MODeL; AlexNet/VGG are skipped
+//! (all methods finish in seconds there, as in the paper).
+//!
+//! `cargo bench --bench fig14_speedup [-- --time-limit 30]`
+
+use roam::benchkit::{eval_suite_graphs, Report};
+use roam::planner::model_baseline::{model_plan, ModelCfg, Streaming};
+use roam::planner::{heuristic::heuristic_plan, roam_plan, RoamCfg};
+use roam::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let time_limit = args.f64("time-limit", 8.0);
+    let batches: Vec<usize> = args
+        .get("batches", "1,32")
+        .split(',')
+        .map(|s| s.parse().expect("--batches"))
+        .collect();
+
+    let mut rep = Report::new(
+        "fig14_speedup",
+        "Fig 14: optimization-time speedup (T_baseline / T_ROAM)",
+        &["workload", "roam_s", "heur_s", "model_ms_s", "ss_vs_heur", "ms_vs_model"],
+    );
+
+    for (label, g) in eval_suite_graphs(&batches) {
+        if label.starts_with("alexnet") || label.starts_with("vgg") {
+            continue; // paper: "all methods consume very limited time"
+        }
+        let r = roam_plan(&g, &RoamCfg::default());
+        let h = heuristic_plan(&g);
+        let mm = model_plan(&g, &ModelCfg {
+            streaming: Streaming::Multi,
+            time_limit_secs: time_limit,
+            ..Default::default()
+        });
+        let t_r = r.planning_secs.max(1e-4);
+        rep.row(&[
+            label,
+            format!("{:.3}", r.planning_secs),
+            format!("{:.3}", h.planning_secs),
+            format!("{:.3}", mm.planning_secs),
+            format!("{:.2}x", h.planning_secs / t_r),
+            format!("{:.2}x", mm.planning_secs / t_r),
+        ]);
+    }
+    rep.finish();
+}

@@ -1,0 +1,67 @@
+//! Fig 15: time-to-optimization vs operator count — ROAM's near-linear
+//! scaling vs MODeL's blow-up. The sweep uses the depth-parameterised
+//! synthetic transformer plus the real suite; for MODeL we both run the
+//! time-limited search and print the whole-graph ILP's integer-variable
+//! count (the quantity whose explosion the paper blames, §V-D).
+//!
+//! `cargo bench --bench fig15_scaling [-- --time-limit 20 --depths 1,2,4,8]`
+
+use roam::benchkit::Report;
+use roam::ilp::order_ilp::formulation_size;
+use roam::models::{self, BuildCfg, ModelKind};
+use roam::planner::model_baseline::{model_plan, ModelCfg, Streaming};
+use roam::planner::{roam_plan, RoamCfg};
+use roam::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let time_limit = args.f64("time-limit", 6.0);
+    let depths: Vec<usize> = args
+        .get("depths", "1,2,4,8,12")
+        .split(',')
+        .map(|s| s.parse().expect("--depths"))
+        .collect();
+
+    let mut rep = Report::new(
+        "fig15_scaling",
+        "Fig 15: optimization time vs #operators (ROAM vs MODeL)",
+        &["workload", "ops", "roam_s", "model_ms_s", "model_hit_limit", "ilp_int_vars"],
+    );
+
+    let mut workloads: Vec<(String, roam::Graph)> = depths
+        .iter()
+        .map(|&d| {
+            let g = models::build(ModelKind::SyntheticTransformer, &BuildCfg {
+                depth: d,
+                ..Default::default()
+            });
+            (format!("synth-L{d}"), g)
+        })
+        .collect();
+    // Add BERT — the paper's outlier (large unsplittable segments).
+    workloads.push((
+        "bert/bs1".to_string(),
+        models::build(ModelKind::Bert, &BuildCfg::default()),
+    ));
+    workloads.sort_by_key(|(_, g)| g.n_ops());
+
+    for (label, g) in workloads {
+        let r = roam_plan(&g, &RoamCfg::default());
+        let mm = model_plan(&g, &ModelCfg {
+            streaming: Streaming::Multi,
+            time_limit_secs: time_limit,
+            ..Default::default()
+        });
+        let f = formulation_size(&g, g.n_ops());
+        let hit = mm.planning_secs >= time_limit * 0.9;
+        rep.row(&[
+            label,
+            g.n_ops().to_string(),
+            format!("{:.2}", r.planning_secs),
+            format!("{:.2}", mm.planning_secs),
+            hit.to_string(),
+            f.int_vars.to_string(),
+        ]);
+    }
+    rep.finish();
+}

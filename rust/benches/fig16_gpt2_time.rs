@@ -1,0 +1,48 @@
+//! Fig 16: GPT2-XL time-to-optimization — ROAM vs the heuristic pipeline
+//! (LESCEA order + LLFB layout), batch 1/2/4. The paper's headline here is
+//! that ROAM stays in the same time band as the small models while the
+//! heuristics blow up on the 10k-op graph (avg 19.2× speedup), and that
+//! MODeL cannot even instantiate its ILP (> 22M integer variables) — we
+//! print that formulation size rather than attempting the hopeless solve.
+//!
+//! `cargo bench --bench fig16_gpt2_time [-- --batches 1,2,4]`
+
+use roam::benchkit::Report;
+use roam::ilp::order_ilp::formulation_size;
+use roam::models::{self, BuildCfg, ModelKind};
+use roam::planner::{heuristic::heuristic_plan, roam_plan, RoamCfg};
+use roam::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let batches: Vec<usize> = args
+        .get("batches", "1")
+        .split(',')
+        .map(|s| s.parse().expect("--batches"))
+        .collect();
+
+    let mut rep = Report::new(
+        "fig16_gpt2_time",
+        "Fig 16: GPT2-XL optimization time, ROAM vs heuristics",
+        &["batch", "ops", "roam_s", "heuristic_s", "speedup", "model_ilp_int_vars"],
+    );
+
+    for &batch in &batches {
+        let g = models::build(ModelKind::Gpt2Xl, &BuildCfg {
+            batch,
+            ..Default::default()
+        });
+        let f = formulation_size(&g, g.n_ops());
+        let r = roam_plan(&g, &RoamCfg::default());
+        let h = heuristic_plan(&g);
+        rep.row(&[
+            format!("bs{batch}"),
+            g.n_ops().to_string(),
+            format!("{:.2}", r.planning_secs),
+            format!("{:.2}", h.planning_secs),
+            format!("{:.2}x", h.planning_secs / r.planning_secs.max(1e-4)),
+            f.int_vars.to_string(),
+        ]);
+    }
+    rep.finish();
+}

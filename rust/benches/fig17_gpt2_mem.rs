@@ -1,0 +1,49 @@
+//! Fig 17: GPT2-XL memory saving + fragmentation at batch 1/2/4 —
+//! PyTorch vs heuristics (LESCEA+LLFB) vs ROAM. The top table of the
+//! paper's figure is the fragmentation row set; the bars are actual peaks.
+//!
+//! `cargo bench --bench fig17_gpt2_mem [-- --batches 1,2,4]`
+
+use roam::benchkit::{mib, reduction_pct, Report};
+use roam::models::{self, BuildCfg, ModelKind};
+use roam::planner::{heuristic::heuristic_plan, pytorch, roam_plan, RoamCfg};
+use roam::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let batches: Vec<usize> = args
+        .get("batches", "1,2")
+        .split(',')
+        .map(|s| s.parse().expect("--batches"))
+        .collect();
+
+    let mut rep = Report::new(
+        "fig17_gpt2_mem",
+        "Fig 17: GPT2-XL memory saving + fragmentation",
+        &[
+            "batch", "pytorch_MiB", "heur_MiB", "roam_MiB",
+            "pytorch_frag", "heur_frag", "roam_frag", "red_vs_pytorch",
+        ],
+    );
+
+    for &batch in &batches {
+        let g = models::build(ModelKind::Gpt2Xl, &BuildCfg {
+            batch,
+            ..Default::default()
+        });
+        let pt = pytorch(&g);
+        let h = heuristic_plan(&g);
+        let r = roam_plan(&g, &RoamCfg::default());
+        rep.row(&[
+            format!("bs{batch}"),
+            mib(pt.actual_peak),
+            mib(h.actual_peak),
+            mib(r.actual_peak),
+            format!("{:.2}%", pt.frag_pct()),
+            format!("{:.2}%", h.frag_pct()),
+            format!("{:.2}%", r.frag_pct()),
+            format!("{:.1}%", reduction_pct(pt.actual_peak, r.actual_peak)),
+        ]);
+    }
+    rep.finish();
+}

@@ -1,0 +1,67 @@
+//! Table I: fragmentation (%) = (actual − theoretical) / theoretical for
+//! PyTorch (dynamic caching allocator), LLFB, Ours-SS, MODeL-MS and
+//! Ours-MS, on the seven-model suite at batch 1 & 32.
+//!
+//! `cargo bench --bench table1_frag [-- --time-limit 15 --extra]`
+//! (`--extra` adds the greedy-by-size ablation column.)
+
+use roam::benchkit::{eval_suite_graphs, Report};
+use roam::layout::greedy_size::greedy_by_size;
+use roam::layout::llfb::llfb;
+use roam::planner::model_baseline::{model_plan, ModelCfg, Streaming};
+use roam::planner::{layout_items, pytorch, roam_plan, RoamCfg};
+use roam::sched::Schedule;
+use roam::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let time_limit = args.f64("time-limit", 5.0);
+    let extra = args.flag("extra");
+    let batches: Vec<usize> = args
+        .get("batches", "1,32")
+        .split(',')
+        .map(|s| s.parse().expect("--batches"))
+        .collect();
+
+    let mut cols = vec!["workload", "pytorch", "llfb", "ours_ss", "model_ms", "ours_ms"];
+    if extra {
+        cols.push("greedy_size");
+    }
+    let mut rep = Report::new("table1_frag", "Table I: fragmentation (%)", &cols);
+
+    for (label, g) in eval_suite_graphs(&batches) {
+        // PyTorch column: dynamic allocation on the program order.
+        let pt = pytorch(&g);
+        // LLFB column: LLFB layout on the same program order.
+        let sched = Schedule::from_order(&roam::graph::topo::program_order(&g));
+        let items = layout_items(&g, &sched);
+        let tp = roam::sched::sim::theoretical_peak(&g, &sched);
+        let frag = |arena: u64, tp: u64| {
+            if tp == 0 { 0.0 } else { 100.0 * arena.saturating_sub(tp) as f64 / tp as f64 }
+        };
+        let llfb_arena = llfb(&items).arena_size(&items);
+        // Ours-SS / Ours-MS.
+        let r_ss = roam_plan(&g, &RoamCfg::default());
+        let r_ms = roam_plan(&g, &RoamCfg { multi_stream: true, ..Default::default() });
+        // MODeL-MS.
+        let mm = model_plan(&g, &ModelCfg {
+            streaming: Streaming::Multi,
+            time_limit_secs: time_limit,
+            ..Default::default()
+        });
+        let mut row = vec![
+            label,
+            format!("{:.2}", pt.frag_pct()),
+            format!("{:.2}", frag(llfb_arena, tp)),
+            format!("{:.2}", r_ss.frag_pct()),
+            format!("{:.2}", mm.frag_pct()),
+            format!("{:.2}", r_ms.frag_pct()),
+        ];
+        if extra {
+            let gs = greedy_by_size(&items).arena_size(&items);
+            row.push(format!("{:.2}", frag(gs, tp)));
+        }
+        rep.row(&row);
+    }
+    rep.finish();
+}

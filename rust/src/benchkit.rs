@@ -1,0 +1,162 @@
+//! Bench harness (criterion is not vendorable offline).
+//!
+//! Each `rust/benches/*.rs` target (`harness = false`) reproduces one table
+//! or figure of the paper: it runs the planners over the workloads, prints
+//! the same rows/series the paper reports, and appends machine-readable
+//! JSON to `bench_results/` for EXPERIMENTS.md.
+
+use crate::util::json::Json;
+use crate::util::Stopwatch;
+use std::io::Write as _;
+
+/// A running bench report: a named table of rows.
+pub struct Report {
+    pub name: String,
+    pub title: String,
+    columns: Vec<String>,
+    rows: Vec<Vec<String>>,
+    json_rows: Vec<Json>,
+    sw: Stopwatch,
+}
+
+impl Report {
+    /// Start a report with column headers.
+    pub fn new(name: &str, title: &str, columns: &[&str]) -> Report {
+        println!("\n=== {title} ===");
+        Report {
+            name: name.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            json_rows: Vec::new(),
+            sw: Stopwatch::start(),
+        }
+    }
+
+    /// Add a row (also echoed to stdout immediately so long benches show
+    /// progress).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.columns.len(), "column count mismatch");
+        let mut obj = Vec::new();
+        for (c, v) in self.columns.iter().zip(cells.iter()) {
+            obj.push((c.as_str(), Json::Str(v.clone())));
+        }
+        self.json_rows.push(Json::obj(obj));
+        self.rows.push(cells.to_vec());
+        self.print_last();
+    }
+
+    fn print_last(&self) {
+        let widths: Vec<usize> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                self.rows
+                    .iter()
+                    .map(|r| r[i].len())
+                    .chain(std::iter::once(c.len()))
+                    .max()
+                    .unwrap_or(8)
+            })
+            .collect();
+        if self.rows.len() == 1 {
+            let header: Vec<String> = self
+                .columns
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect();
+            println!("{}", header.join("  "));
+        }
+        let last = self.rows.last().unwrap();
+        let line: Vec<String> = last
+            .iter()
+            .zip(&widths)
+            .map(|(v, w)| format!("{v:>w$}"))
+            .collect();
+        println!("{}", line.join("  "));
+    }
+
+    /// Write `bench_results/<name>.json` and a closing line.
+    pub fn finish(self) {
+        let dir = std::path::Path::new("bench_results");
+        let _ = std::fs::create_dir_all(dir);
+        let out = Json::obj(vec![
+            ("bench", Json::Str(self.name.clone())),
+            ("title", Json::Str(self.title.clone())),
+            ("elapsed_secs", Json::Num(self.sw.secs())),
+            ("rows", Json::Arr(self.json_rows.clone())),
+        ]);
+        let path = dir.join(format!("{}.json", self.name));
+        if let Ok(mut f) = std::fs::File::create(&path) {
+            let _ = writeln!(f, "{}", out.pretty());
+        }
+        println!(
+            "--- {} done in {:.1}s → {}",
+            self.name,
+            self.sw.secs(),
+            path.display()
+        );
+    }
+}
+
+/// Build the paper's small-model evaluation suite (§V-A): the seven models
+/// at the given batch sizes, Adam optimizer. Returns `(label, graph)`.
+pub fn eval_suite_graphs(batches: &[usize]) -> Vec<(String, crate::Graph)> {
+    use crate::models::{self, BuildCfg, ModelKind};
+    let mut out = Vec::new();
+    for &kind in ModelKind::eval_suite() {
+        for &batch in batches {
+            let g = models::build(kind, &BuildCfg {
+                batch,
+                ..Default::default()
+            });
+            out.push((format!("{}/bs{}", kind.name(), batch), g));
+        }
+    }
+    out
+}
+
+/// Format bytes as MiB with one decimal (bench tables).
+pub fn mib(b: u64) -> String {
+    format!("{:.1}", b as f64 / (1024.0 * 1024.0))
+}
+
+/// Format a ratio as a percentage string.
+pub fn pct(x: f64) -> String {
+    format!("{x:.1}%")
+}
+
+/// Percent reduction of `ours` relative to `base`.
+pub fn reduction_pct(base: u64, ours: u64) -> f64 {
+    if base == 0 {
+        return 0.0;
+    }
+    100.0 * (base.saturating_sub(ours)) as f64 / base as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_writes_json() {
+        let mut r = Report::new("testbench", "Test", &["model", "value"]);
+        r.row(&["alexnet".into(), "1.0".into()]);
+        r.row(&["vgg".into(), "2.0".into()]);
+        r.finish();
+        let text = std::fs::read_to_string("bench_results/testbench.json").unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 2);
+        let _ = std::fs::remove_file("bench_results/testbench.json");
+    }
+
+    #[test]
+    fn helpers() {
+        assert_eq!(mib(1024 * 1024), "1.0");
+        assert_eq!(reduction_pct(200, 150), 25.0);
+        assert_eq!(reduction_pct(0, 10), 0.0);
+        assert_eq!(pct(35.66), "35.7%");
+    }
+}

@@ -1,0 +1,12 @@
+//! Training coordinator: the L3 driver that owns the end-to-end loop.
+//!
+//! The coordinator loads the AOT artifacts, runs ROAM planning over the
+//! *real* lowered train-step graph (reporting the paper's metrics on it),
+//! then drives training: synthetic-corpus batches in, loss out, steps
+//! timed — with Python nowhere on the path.
+
+pub mod data;
+pub mod trainer;
+
+pub use data::Corpus;
+pub use trainer::{TrainCfg, Trainer};

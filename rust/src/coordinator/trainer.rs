@@ -1,0 +1,181 @@
+//! The training loop driver.
+//!
+//! Boundary contract with `python/compile/aot.py` (kept deliberately
+//! narrow — parameters travel as one flat f32 vector, so the PJRT call has
+//! six inputs and five outputs regardless of model size):
+//!
+//! ```text
+//! init()                                  -> (params, m, v, step)
+//! train_step(params, m, v, step, tokens, targets)
+//!     -> (params', m', v', step', loss)
+//! ```
+
+use crate::coordinator::data::Corpus;
+use crate::runtime::artifact::Artifacts;
+use crate::runtime::{LoadedModule, Runtime};
+use crate::util::Stopwatch;
+use anyhow::{bail, Context, Result};
+
+/// Training-run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    pub steps: usize,
+    pub log_every: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            steps: 200,
+            log_every: 10,
+            seed: 0,
+        }
+    }
+}
+
+/// One logged point of the loss curve.
+#[derive(Clone, Copy, Debug)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f32,
+    pub secs: f64,
+}
+
+/// Training state: compiled modules + current parameters.
+pub struct Trainer {
+    pub artifacts: Artifacts,
+    client: xla::PjRtClient,
+    step_mod: LoadedModule,
+    /// (params, m, v, step) literals carried across steps.
+    state: Vec<xla::Literal>,
+    corpus: Corpus,
+    batch: usize,
+    seq: usize,
+    pub history: Vec<StepLog>,
+}
+
+impl Trainer {
+    /// Load artifacts, compile, and run `init` to create the state.
+    pub fn new(rt: &Runtime, artifacts: Artifacts, seed: u64) -> Result<Trainer> {
+        let init = rt
+            .load_hlo_text(&artifacts.init_path())
+            .context("compiling init")?;
+        let step_mod = rt
+            .load_hlo_text(&artifacts.train_step_path())
+            .context("compiling train_step")?;
+        let state = init.run(&[]).context("running init")?;
+        if state.len() != 4 {
+            bail!("init must return (params, m, v, step), got {}", state.len());
+        }
+        let batch = artifacts.meta.batch;
+        let seq = artifacts.meta.seq_len;
+        let corpus = Corpus::new(artifacts.meta.vocab, seed);
+        Ok(Trainer {
+            artifacts,
+            client: rt.client.clone(),
+            step_mod,
+            state,
+            corpus,
+            batch,
+            seq,
+            history: Vec::new(),
+        })
+    }
+
+    /// Run one optimizer step; returns the loss.
+    pub fn step(&mut self) -> Result<f32> {
+        let sw = Stopwatch::start();
+        let (tokens, targets) = self.corpus.next_batch(self.batch, self.seq);
+        let tok = xla::Literal::vec1(&tokens)
+            .reshape(&[self.batch as i64, self.seq as i64])?;
+        let tgt = xla::Literal::vec1(&targets)
+            .reshape(&[self.batch as i64, self.seq as i64])?;
+        let args: Vec<&xla::Literal> = self
+            .state
+            .iter()
+            .chain([&tok, &tgt])
+            .collect();
+        let mut out = self.step_mod.run_refs(&self.client, &args)?;
+        if out.len() != 5 {
+            bail!("train_step must return 5 values, got {}", out.len());
+        }
+        let loss = out.pop().unwrap().get_first_element::<f32>()?;
+        self.state = out;
+        let log = StepLog {
+            step: self.history.len() + 1,
+            loss,
+            secs: sw.secs(),
+        };
+        self.history.push(log);
+        Ok(loss)
+    }
+
+    /// Drive a full run, printing the loss curve.
+    pub fn train(&mut self, cfg: &TrainCfg) -> Result<()> {
+        let total = Stopwatch::start();
+        for i in 0..cfg.steps {
+            let loss = self.step()?;
+            if (i + 1) % cfg.log_every == 0 || i == 0 {
+                let last = self.history.last().unwrap();
+                println!(
+                    "step {:>5}  loss {:>8.4}  {:>7.2} ms/step  ({:.1}s elapsed)",
+                    i + 1,
+                    loss,
+                    last.secs * 1e3,
+                    total.secs()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Mean loss over the first / last `k` logged steps (smoke-test metric).
+    pub fn loss_drop(&self, k: usize) -> Option<(f32, f32)> {
+        if self.history.len() < 2 * k {
+            return None;
+        }
+        let head: f32 =
+            self.history[..k].iter().map(|l| l.loss).sum::<f32>() / k as f32;
+        let tail: f32 = self.history[self.history.len() - k..]
+            .iter()
+            .map(|l| l.loss)
+            .sum::<f32>()
+            / k as f32;
+        Some((head, tail))
+    }
+}
+
+impl LoadedModule {
+    /// Execute with borrowed literal args.
+    ///
+    /// Inputs are staged to device buffers explicitly via
+    /// `buffer_from_host_literal` + `execute_b` rather than the crate's
+    /// literal-taking `execute`: the latter's C shim leaks its internally
+    /// created input buffers (~3× the parameter bytes per step — the 91M-
+    /// param trainer OOM-ed at ~30 steps before this change; see
+    /// EXPERIMENTS.md §Perf).
+    pub fn run_refs(&self, client: &xla::PjRtClient, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let mut bufs = Vec::with_capacity(args.len());
+        for lit in args {
+            bufs.push(client.buffer_from_host_literal(None, lit)?);
+        }
+        let outs = self.exe_ref().execute_b::<xla::PjRtBuffer>(&bufs)?;
+        drop(bufs);
+        let lit = outs[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::coordinator::data::Corpus;
+
+    #[test]
+    fn corpus_feeds_trainer_shapes() {
+        let mut c = Corpus::new(512, 3);
+        let (t, y) = c.next_batch(4, 64);
+        assert_eq!(t.len(), 4 * 64);
+        assert_eq!(y.len(), 4 * 64);
+    }
+}

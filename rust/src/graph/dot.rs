@@ -1,0 +1,65 @@
+//! Graphviz DOT export for debugging and the docs.
+//!
+//! `roam export-dot --model vit | dot -Tpng > vit.png` renders the training
+//! graph with phases colour-coded and tensor sizes on the edges.
+
+use super::{Graph, Phase};
+use crate::util::human_bytes;
+use std::fmt::Write as _;
+
+/// Render the graph as a DOT digraph string.
+pub fn to_dot(g: &Graph) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "digraph \"{}\" {{", g.name);
+    let _ = writeln!(s, "  rankdir=TB; node [shape=box, fontsize=10];");
+    for op in &g.ops {
+        let color = match op.phase {
+            Phase::Forward => "lightblue",
+            Phase::Loss => "gold",
+            Phase::Backward => "lightpink",
+            Phase::Update => "lightgreen",
+        };
+        let _ = writeln!(
+            s,
+            "  op{} [label=\"{}\", style=filled, fillcolor={}];",
+            op.id, op.name, color
+        );
+    }
+    for t in &g.tensors {
+        if let Some(p) = t.producer {
+            for &c in &t.consumers {
+                let _ = writeln!(
+                    s,
+                    "  op{} -> op{} [label=\"{} ({})\", fontsize=8];",
+                    p,
+                    c,
+                    t.name,
+                    human_bytes(t.size)
+                );
+            }
+        }
+    }
+    let _ = writeln!(s, "}}");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpKind, TensorClass};
+
+    #[test]
+    fn renders_nodes_and_edges() {
+        let mut g = Graph::new("d");
+        let x = g.add_input_tensor("x", 1024, TensorClass::Input);
+        let (_, t) = g.add_op("a", OpKind::Other, Phase::Forward, &[x],
+            &[("t", 2048, TensorClass::Activation)]);
+        g.add_op("b", OpKind::Other, Phase::Backward, &[t[0]],
+            &[("u", 1, TensorClass::Gradient)]);
+        let dot = to_dot(&g);
+        assert!(dot.contains("digraph"));
+        assert!(dot.contains("op0 -> op1"));
+        assert!(dot.contains("2.00 KiB"));
+        assert!(dot.contains("lightpink")); // backward colouring
+    }
+}

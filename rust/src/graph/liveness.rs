@@ -1,0 +1,168 @@
+//! Tensor lifetime computation.
+//!
+//! Given a schedule (a timestep per operator — positions of a single-stream
+//! order, or a multi-stream assignment where several ops share a timestep),
+//! each tensor gets a closed interval `[birth, death]` of timesteps during
+//! which it occupies memory:
+//!
+//! * `birth` = timestep of the producer (0 for graph inputs),
+//! * `death` = max timestep over consumers; producers' own timestep when
+//!   there is no consumer; the horizon when the tensor is a graph output.
+//!
+//! Persistent tensors (weights / optimizer state) are assigned the full
+//! `[0, horizon]` interval — they are excluded from arena planning but the
+//! interval keeps the simulators honest if they are included.
+
+use super::{Graph, OpId, TensorId};
+
+/// Closed interval of timesteps a tensor is resident.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Lifetime {
+    pub birth: usize,
+    pub death: usize,
+}
+
+impl Lifetime {
+    /// Do two lifetimes overlap (share at least one timestep)?
+    #[inline]
+    pub fn overlaps(&self, other: &Lifetime) -> bool {
+        self.birth <= other.death && other.birth <= self.death
+    }
+
+    /// Interval length in timesteps.
+    pub fn len(&self) -> usize {
+        self.death - self.birth + 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // closed intervals are never empty
+    }
+}
+
+/// Compute lifetimes for every tensor under the timestep assignment `ts`
+/// (one entry per op). `horizon` is the last timestep (usually
+/// `max(ts)`); outputs and persistents live until it.
+pub fn lifetimes_with_horizon(g: &Graph, ts: &[usize], horizon: usize) -> Vec<Lifetime> {
+    assert_eq!(ts.len(), g.n_ops());
+    g.tensors
+        .iter()
+        .map(|t| {
+            if t.class.is_persistent() {
+                return Lifetime {
+                    birth: 0,
+                    death: horizon,
+                };
+            }
+            let birth = t.producer.map(|p| ts[p]).unwrap_or(0);
+            let mut death = t.consumers.iter().map(|&c| ts[c]).max().unwrap_or(birth);
+            if t.is_output {
+                death = horizon;
+            }
+            debug_assert!(death >= birth, "consumer scheduled before producer");
+            Lifetime { birth, death }
+        })
+        .collect()
+}
+
+/// Lifetimes under a timestep assignment, horizon = max timestep.
+pub fn lifetimes(g: &Graph, ts: &[usize]) -> Vec<Lifetime> {
+    let horizon = ts.iter().copied().max().unwrap_or(0);
+    lifetimes_with_horizon(g, ts, horizon)
+}
+
+/// Convert a single-stream order (permutation of ops) into a timestep
+/// assignment (`ts[op] = position in the order`).
+pub fn order_to_timesteps(order: &[OpId]) -> Vec<usize> {
+    let mut ts = vec![usize::MAX; order.len()];
+    for (pos, &v) in order.iter().enumerate() {
+        ts[v] = pos;
+    }
+    debug_assert!(ts.iter().all(|&t| t != usize::MAX), "order not a permutation");
+    ts
+}
+
+/// Ids of dynamic (non-persistent) tensors — the set the planner places.
+pub fn dynamic_tensors(g: &Graph) -> Vec<TensorId> {
+    g.tensors
+        .iter()
+        .filter(|t| !t.class.is_persistent())
+        .map(|t| t.id)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpKind, Phase, TensorClass};
+
+    fn chain3() -> Graph {
+        // a -> t0 -> b -> t1 -> c, weight w into a, t_loss output of c.
+        let mut g = Graph::new("c3");
+        let w = g.add_input_tensor("w", 100, TensorClass::Weight);
+        let x = g.add_input_tensor("x", 10, TensorClass::Input);
+        let (_, t0) = g.add_op("a", OpKind::Other, Phase::Forward, &[w, x],
+            &[("t0", 5, TensorClass::Activation)]);
+        let (_, t1) = g.add_op("b", OpKind::Other, Phase::Forward, &[t0[0]],
+            &[("t1", 6, TensorClass::Activation)]);
+        let (_, t2) = g.add_op("c", OpKind::Other, Phase::Loss, &[t1[0]],
+            &[("loss", 4, TensorClass::TempBuffer)]);
+        g.mark_output(t2[0]);
+        g
+    }
+
+    #[test]
+    fn basic_lifetimes() {
+        let g = chain3();
+        let ts = order_to_timesteps(&[0, 1, 2]);
+        let lt = lifetimes(&g, &ts);
+        // w: persistent, full horizon.
+        assert_eq!(lt[0], Lifetime { birth: 0, death: 2 });
+        // x: input, consumed by op a at t=0.
+        assert_eq!(lt[1], Lifetime { birth: 0, death: 0 });
+        // t0: born t=0 (a), dies t=1 (b).
+        assert_eq!(lt[2], Lifetime { birth: 0, death: 1 });
+        // t1: born 1, dies 2.
+        assert_eq!(lt[3], Lifetime { birth: 1, death: 2 });
+        // loss: output → lives to horizon.
+        assert_eq!(lt[4], Lifetime { birth: 2, death: 2 });
+    }
+
+    #[test]
+    fn overlap_predicate() {
+        let a = Lifetime { birth: 0, death: 3 };
+        let b = Lifetime { birth: 3, death: 5 };
+        let c = Lifetime { birth: 4, death: 6 };
+        assert!(a.overlaps(&b)); // touch at 3
+        assert!(!a.overlaps(&c));
+        assert!(b.overlaps(&c));
+        assert_eq!(a.len(), 4);
+    }
+
+    #[test]
+    fn multi_stream_shared_timestep() {
+        let g = chain3();
+        // b and c crammed into the same timestep is invalid for chain3
+        // (c consumes b's output), but a two-stream assignment where a is
+        // at 0 and b at 1, c at 1 would break producer<consumer; instead
+        // test a legal MS assignment identical to SS here.
+        let lt = lifetimes(&g, &[0, 1, 2]);
+        assert_eq!(lt.len(), g.n_tensors());
+    }
+
+    #[test]
+    fn no_consumer_dies_at_birth() {
+        let mut g = Graph::new("dead");
+        let x = g.add_input_tensor("x", 1, TensorClass::Input);
+        g.add_op("a", OpKind::Other, Phase::Forward, &[x],
+            &[("dead", 7, TensorClass::TempBuffer)]);
+        let lt = lifetimes(&g, &[0]);
+        assert_eq!(lt[1], Lifetime { birth: 0, death: 0 });
+    }
+
+    #[test]
+    fn dynamic_tensor_filter() {
+        let g = chain3();
+        let dy = dynamic_tensors(&g);
+        assert_eq!(dy, vec![1, 2, 3, 4]); // everything but the weight
+    }
+}

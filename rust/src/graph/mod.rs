@@ -1,0 +1,353 @@
+//! Computation-graph substrate.
+//!
+//! ROAM models a DNN training program as a DAG `G = (V, E)` where vertices
+//! are operators and edges are tensors (§III-B of the paper). This module
+//! owns the data structure every other layer consumes: the model builders
+//! emit it, the HLO parser produces it from real JAX artifacts, and the
+//! schedulers / layout solvers / planner all read it.
+//!
+//! Memory semantics: a tensor becomes **live** when its producer executes
+//! and **dies** after its last consumer executes (tensors without consumers
+//! die immediately after production, except graph *outputs* which live to
+//! the end). *Persistent* tensors (weights, optimizer moments) occupy a
+//! constant resident set that planning can't move; they are accounted
+//! separately so the planner optimises only the dynamic arena — exactly the
+//! part PyTorch's caching allocator manages.
+
+pub mod dot;
+pub mod liveness;
+pub mod random;
+pub mod reach;
+pub mod topo;
+pub mod validate;
+
+pub use liveness::{lifetimes, lifetimes_with_horizon, Lifetime};
+pub use reach::Reachability;
+
+/// Operator index into [`Graph::ops`].
+pub type OpId = usize;
+/// Tensor index into [`Graph::tensors`].
+pub type TensorId = usize;
+
+/// Which training stage an operator belongs to (§III-A).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum Phase {
+    /// Forward propagation.
+    Forward,
+    /// Loss computation (the fwd/bwd boundary; peak memory usually here).
+    Loss,
+    /// Backward propagation.
+    Backward,
+    /// Weight update (optimizer step) — the flexibly schedulable branch.
+    Update,
+}
+
+/// Coarse operator category. The planner is category-agnostic (it only
+/// reads tensor sizes), but categories drive the synthetic-graph builders,
+/// DOT rendering and a few heuristic baselines (e.g. LESCEA tie-breaks).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum OpKind {
+    Conv,
+    MatMul,
+    BatchNorm,
+    LayerNorm,
+    Activation, // relu/gelu/swish...
+    Softmax,
+    Pool,
+    Elementwise, // add/mul/scale...
+    Reshape,
+    Reduce,
+    Embed,
+    Loss,
+    GradAcc,
+    OptimStep,
+    Input,
+    Other,
+}
+
+/// How a tensor behaves over a training step — drives the shared-tensor
+/// rules (§IV-B) and the weight-update scheduler (§IV-A).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum TensorClass {
+    /// Created in forward, preserved until its gradient consumer (§III-A).
+    Activation,
+    /// Produced in backward for a parameter; consumed by the update branch.
+    Gradient,
+    /// Short-lived scratch (optimizer temporaries, softmax scratch, ...).
+    TempBuffer,
+    /// Parameter — persistent across steps, not placed in the dynamic arena.
+    Weight,
+    /// Optimizer state (Adam m/v) — persistent like weights.
+    OptState,
+    /// Mini-batch input — live from step start.
+    Input,
+}
+
+impl TensorClass {
+    /// Persistent tensors live across steps and are excluded from the
+    /// dynamically planned arena.
+    pub fn is_persistent(self) -> bool {
+        matches!(self, TensorClass::Weight | TensorClass::OptState)
+    }
+}
+
+/// A tensor (edge) in the graph.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub id: TensorId,
+    pub name: String,
+    /// Size in bytes (`size_e` in the paper).
+    pub size: u64,
+    /// Producing operator; `None` for graph inputs / parameters.
+    pub producer: Option<OpId>,
+    /// Consuming operators (may be empty for outputs / dead values).
+    pub consumers: Vec<OpId>,
+    pub class: TensorClass,
+    /// Graph output: kept live until the end of the step.
+    pub is_output: bool,
+}
+
+/// An operator (vertex) in the graph.
+#[derive(Clone, Debug)]
+pub struct Op {
+    pub id: OpId,
+    pub name: String,
+    pub kind: OpKind,
+    pub phase: Phase,
+    pub inputs: Vec<TensorId>,
+    pub outputs: Vec<TensorId>,
+}
+
+/// The computation graph: operators + tensors + derived op-level adjacency.
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub name: String,
+    pub ops: Vec<Op>,
+    pub tensors: Vec<Tensor>,
+}
+
+impl Graph {
+    /// Empty graph with a name.
+    pub fn new(name: impl Into<String>) -> Self {
+        Graph {
+            name: name.into(),
+            ops: Vec::new(),
+            tensors: Vec::new(),
+        }
+    }
+
+    pub fn n_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.tensors.len()
+    }
+
+    /// Add a graph-input tensor (no producer): weights, inputs, opt state.
+    pub fn add_input_tensor(
+        &mut self,
+        name: impl Into<String>,
+        size: u64,
+        class: TensorClass,
+    ) -> TensorId {
+        let id = self.tensors.len();
+        self.tensors.push(Tensor {
+            id,
+            name: name.into(),
+            size,
+            producer: None,
+            consumers: Vec::new(),
+            class,
+            is_output: false,
+        });
+        id
+    }
+
+    /// Add an operator consuming `inputs`; `outputs` describes the tensors
+    /// it produces as `(name, size, class)` triples. Returns the op id and
+    /// the ids of the produced tensors.
+    pub fn add_op(
+        &mut self,
+        name: impl Into<String>,
+        kind: OpKind,
+        phase: Phase,
+        inputs: &[TensorId],
+        outputs: &[(&str, u64, TensorClass)],
+    ) -> (OpId, Vec<TensorId>) {
+        let op_id = self.ops.len();
+        let mut out_ids = Vec::with_capacity(outputs.len());
+        for (oname, size, class) in outputs {
+            let tid = self.tensors.len();
+            self.tensors.push(Tensor {
+                id: tid,
+                name: oname.to_string(),
+                size: *size,
+                producer: Some(op_id),
+                consumers: Vec::new(),
+                class: *class,
+                is_output: false,
+            });
+            out_ids.push(tid);
+        }
+        for &tid in inputs {
+            self.tensors[tid].consumers.push(op_id);
+        }
+        self.ops.push(Op {
+            id: op_id,
+            name: name.into(),
+            kind,
+            phase,
+            inputs: inputs.to_vec(),
+            outputs: out_ids.clone(),
+        });
+        (op_id, out_ids)
+    }
+
+    /// Mark a tensor as a graph output (pinned live to the end of step).
+    pub fn mark_output(&mut self, t: TensorId) {
+        self.tensors[t].is_output = true;
+    }
+
+    /// Operator-level predecessor ids (dedup'd, order of first appearance).
+    pub fn preds(&self, v: OpId) -> Vec<OpId> {
+        let mut out = Vec::new();
+        for &t in &self.ops[v].inputs {
+            if let Some(p) = self.tensors[t].producer {
+                if !out.contains(&p) {
+                    out.push(p);
+                }
+            }
+        }
+        out
+    }
+
+    /// Operator-level successor ids (dedup'd).
+    pub fn succs(&self, v: OpId) -> Vec<OpId> {
+        let mut out = Vec::new();
+        for &t in &self.ops[v].outputs {
+            for &c in &self.tensors[t].consumers {
+                if !out.contains(&c) {
+                    out.push(c);
+                }
+            }
+        }
+        out
+    }
+
+    /// Adjacency lists for all ops at once (cheaper than per-op calls in
+    /// the hot analyses). Returns `(preds, succs)`.
+    pub fn adjacency(&self) -> (Vec<Vec<OpId>>, Vec<Vec<OpId>>) {
+        let n = self.ops.len();
+        let mut preds = vec![Vec::new(); n];
+        let mut succs = vec![Vec::new(); n];
+        for op in &self.ops {
+            for &t in &op.inputs {
+                if let Some(p) = self.tensors[t].producer {
+                    if !preds[op.id].contains(&p) {
+                        preds[op.id].push(p);
+                        succs[p].push(op.id);
+                    }
+                }
+            }
+        }
+        (preds, succs)
+    }
+
+    /// Sum of persistent tensor sizes (weights + optimizer state) — the
+    /// constant resident set the dynamic arena sits on top of.
+    pub fn persistent_bytes(&self) -> u64 {
+        self.tensors
+            .iter()
+            .filter(|t| t.class.is_persistent())
+            .map(|t| t.size)
+            .sum()
+    }
+
+    /// Sum of *dynamic* (non-persistent) tensor sizes.
+    pub fn dynamic_bytes(&self) -> u64 {
+        self.tensors
+            .iter()
+            .filter(|t| !t.class.is_persistent())
+            .map(|t| t.size)
+            .sum()
+    }
+
+    /// Sum of activation sizes — `esti_pm` of eq. (4).
+    pub fn activation_bytes(&self) -> u64 {
+        self.tensors
+            .iter()
+            .filter(|t| t.class == TensorClass::Activation)
+            .map(|t| t.size)
+            .sum()
+    }
+
+    /// Ops in a given phase.
+    pub fn ops_in_phase(&self, phase: Phase) -> impl Iterator<Item = &Op> {
+        self.ops.iter().filter(move |o| o.phase == phase)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// a -> t1 -> b -> t2 -> c ; plus weight w consumed by a.
+    fn tiny() -> Graph {
+        let mut g = Graph::new("tiny");
+        let w = g.add_input_tensor("w", 100, TensorClass::Weight);
+        let x = g.add_input_tensor("x", 10, TensorClass::Input);
+        let (_a, t1) = g.add_op(
+            "a",
+            OpKind::MatMul,
+            Phase::Forward,
+            &[w, x],
+            &[("t1", 20, TensorClass::Activation)],
+        );
+        let (_b, t2) = g.add_op(
+            "b",
+            OpKind::Activation,
+            Phase::Forward,
+            &[t1[0]],
+            &[("t2", 20, TensorClass::Activation)],
+        );
+        let (_c, t3) = g.add_op(
+            "c",
+            OpKind::Loss,
+            Phase::Loss,
+            &[t2[0]],
+            &[("loss", 4, TensorClass::TempBuffer)],
+        );
+        g.mark_output(t3[0]);
+        g
+    }
+
+    #[test]
+    fn build_and_adjacency() {
+        let g = tiny();
+        assert_eq!(g.n_ops(), 3);
+        assert_eq!(g.n_tensors(), 5);
+        assert_eq!(g.preds(1), vec![0]);
+        assert_eq!(g.succs(0), vec![1]);
+        assert_eq!(g.preds(0), Vec::<OpId>::new());
+        let (p, s) = g.adjacency();
+        assert_eq!(p[2], vec![1]);
+        assert_eq!(s[1], vec![2]);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let g = tiny();
+        assert_eq!(g.persistent_bytes(), 100);
+        assert_eq!(g.dynamic_bytes(), 10 + 20 + 20 + 4);
+        assert_eq!(g.activation_bytes(), 40);
+    }
+
+    #[test]
+    fn consumers_registered() {
+        let g = tiny();
+        assert_eq!(g.tensors[0].consumers, vec![0]); // w consumed by op a
+        assert_eq!(g.tensors[2].consumers, vec![1]); // t1 consumed by b
+        assert!(g.tensors[4].is_output);
+    }
+}

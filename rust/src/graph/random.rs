@@ -1,0 +1,207 @@
+//! Random training-graph generator for property-based tests.
+//!
+//! Generates small but *structurally training-like* DAGs: a forward chain
+//! with random skip connections and fan-outs, a mirrored backward pass that
+//! consumes forward activations, and per-parameter weight-update branches.
+//! Every scheduler/layout invariant test in the repo sweeps over these.
+
+use super::{Graph, OpKind, Phase, TensorClass};
+use crate::util::Pcg64;
+
+/// Knobs for the generator.
+#[derive(Clone, Debug)]
+pub struct RandomGraphCfg {
+    /// Number of forward ops (total graph is ~3x this).
+    pub fwd_ops: usize,
+    /// Probability of an extra skip edge from an earlier activation.
+    pub skip_p: f64,
+    /// Probability that a forward op also emits a temp buffer.
+    pub temp_p: f64,
+    /// Max tensor size in bytes (sizes are uniform in [64, max]).
+    pub max_size: u64,
+    /// Fraction of forward ops that carry a trainable parameter.
+    pub param_p: f64,
+    /// Use Adam-style 3-buffer update branches (else single SGD op).
+    pub adam: bool,
+}
+
+impl Default for RandomGraphCfg {
+    fn default() -> Self {
+        RandomGraphCfg {
+            fwd_ops: 12,
+            skip_p: 0.3,
+            temp_p: 0.3,
+            max_size: 4096,
+            param_p: 0.5,
+            adam: true,
+        }
+    }
+}
+
+/// Generate a random training graph.
+pub fn random_training_graph(rng: &mut Pcg64, cfg: &RandomGraphCfg) -> Graph {
+    let mut g = Graph::new("random");
+    let sz = |rng: &mut Pcg64| 64 + rng.gen_range(cfg.max_size.max(65) - 64);
+
+    let x = g.add_input_tensor("x", sz(rng), TensorClass::Input);
+
+    // Forward chain with skips. Track (activation tensor, param tensor).
+    let mut acts: Vec<usize> = vec![x];
+    let mut params: Vec<(usize, usize)> = Vec::new(); // (param tensor, fwd op)
+    for i in 0..cfg.fwd_ops {
+        let mut inputs = vec![*acts.last().unwrap()];
+        if acts.len() > 2 && rng.chance(cfg.skip_p) {
+            let skip = acts[rng.usize_in(0, acts.len() - 1)];
+            if !inputs.contains(&skip) {
+                inputs.push(skip);
+            }
+        }
+        let has_param = rng.chance(cfg.param_p);
+        let w = if has_param {
+            let w = g.add_input_tensor(format!("w{i}"), sz(rng), TensorClass::Weight);
+            inputs.push(w);
+            Some(w)
+        } else {
+            None
+        };
+        let mut outs = vec![(format!("act{i}"), sz(rng), TensorClass::Activation)];
+        if rng.chance(cfg.temp_p) {
+            outs.push((format!("tmp{i}"), sz(rng), TensorClass::TempBuffer));
+        }
+        let outs_ref: Vec<(&str, u64, TensorClass)> =
+            outs.iter().map(|(n, s, c)| (n.as_str(), *s, *c)).collect();
+        let (op, produced) = g.add_op(
+            format!("fwd{i}"),
+            OpKind::MatMul,
+            Phase::Forward,
+            &inputs,
+            &outs_ref,
+        );
+        acts.push(produced[0]);
+        if let Some(w) = w {
+            params.push((w, op));
+        }
+    }
+
+    // Loss.
+    let (_, loss_out) = g.add_op(
+        "loss",
+        OpKind::Loss,
+        Phase::Loss,
+        &[*acts.last().unwrap()],
+        &[("loss", 64, TensorClass::TempBuffer)],
+    );
+    let mut grad = loss_out[0];
+
+    // Backward mirror: each bwd op consumes the corresponding activation
+    // and the incoming gradient; parameterised ops also emit a weight grad.
+    let mut wgrads: Vec<(usize, usize)> = Vec::new(); // (grad tensor, param tensor)
+    for i in (0..cfg.fwd_ops).rev() {
+        let act = acts[i + 1];
+        let fwd_op = g.tensors[act].producer.unwrap();
+        let has_param = params.iter().any(|&(_, op)| op == fwd_op);
+        let mut outs = vec![(format!("dact{i}"), g.tensors[acts[i]].size, TensorClass::Gradient)];
+        if has_param {
+            let w = params.iter().find(|&&(_, op)| op == fwd_op).unwrap().0;
+            outs.push((format!("dw{i}"), g.tensors[w].size, TensorClass::Gradient));
+        }
+        let outs_ref: Vec<(&str, u64, TensorClass)> =
+            outs.iter().map(|(n, s, c)| (n.as_str(), *s, *c)).collect();
+        let (_, produced) = g.add_op(
+            format!("bwd{i}"),
+            OpKind::MatMul,
+            Phase::Backward,
+            &[act, grad],
+            &outs_ref,
+        );
+        grad = produced[0];
+        if has_param {
+            let w = params.iter().find(|&&(_, op)| op == fwd_op).unwrap().0;
+            wgrads.push((produced[1], w));
+        }
+    }
+
+    // Weight-update branches.
+    for (k, &(dw, w)) in wgrads.iter().enumerate() {
+        let wsize = g.tensors[w].size;
+        if cfg.adam {
+            let m = g.add_input_tensor(format!("adam_m{k}"), wsize, TensorClass::OptState);
+            let v = g.add_input_tensor(format!("adam_v{k}"), wsize, TensorClass::OptState);
+            // Fig 6 structure: a few temporaries then the in-place update.
+            let (_, t1) = g.add_op(
+                format!("adam_mul{k}"),
+                OpKind::Elementwise,
+                Phase::Update,
+                &[dw, m],
+                &[("t1", wsize, TensorClass::TempBuffer)],
+            );
+            let (_, t2) = g.add_op(
+                format!("adam_sq{k}"),
+                OpKind::Elementwise,
+                Phase::Update,
+                &[dw, v],
+                &[("t2", wsize, TensorClass::TempBuffer)],
+            );
+            let (_, t3) = g.add_op(
+                format!("adam_norm{k}"),
+                OpKind::Elementwise,
+                Phase::Update,
+                &[t1[0], t2[0]],
+                &[("t3", wsize, TensorClass::TempBuffer)],
+            );
+            let (_, out) = g.add_op(
+                format!("adam_step{k}"),
+                OpKind::OptimStep,
+                Phase::Update,
+                &[t3[0], w],
+                &[("w_new", wsize, TensorClass::TempBuffer)],
+            );
+            g.mark_output(out[0]);
+        } else {
+            let (_, out) = g.add_op(
+                format!("sgd_step{k}"),
+                OpKind::OptimStep,
+                Phase::Update,
+                &[dw, w],
+                &[("w_new", wsize, TensorClass::TempBuffer)],
+            );
+            g.mark_output(out[0]);
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate::validate;
+    use crate::util::quick::forall;
+
+    #[test]
+    fn random_graphs_are_valid() {
+        forall("random graphs validate", 100, |rng| {
+            let cfg = RandomGraphCfg {
+                fwd_ops: rng.usize_in(2, 20),
+                adam: rng.chance(0.5),
+                ..Default::default()
+            };
+            let g = random_training_graph(rng, &cfg);
+            let defects = validate(&g);
+            if defects.is_empty() {
+                Ok(())
+            } else {
+                Err(format!("{defects:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn has_all_phases() {
+        let mut rng = Pcg64::new(1);
+        let g = random_training_graph(&mut rng, &RandomGraphCfg::default());
+        use crate::graph::Phase::*;
+        for ph in [Forward, Loss, Backward] {
+            assert!(g.ops.iter().any(|o| o.phase == ph), "missing {ph:?}");
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Transitive reachability, ASAP/ALAP schedules and comparability counts.
+//!
+//! These analyses drive two pillars of ROAM:
+//!
+//! * **Memory-insensitive operator detection** (§IV-A): an operator whose
+//!   scheduling timestep is the same in *every* topological order is one
+//!   that is comparable (ordered by precedence) with every other operator:
+//!   `|pred*(v)| + |succ*(v)| = n - 1`. We compute transitive predecessor /
+//!   successor sets with word-parallel bitset propagation.
+//! * **`is_alive` estimation for the weight-update scheduler** (eq. 5): the
+//!   paper derives liveness bounds "from the earliest possible execution
+//!   time and the latest mandatory execution time of operators, which
+//!   calculates the number of all transitive predecessors and successors" —
+//!   i.e. ASAP(v) = |pred*(v)| and ALAP(v) = n - 1 - |succ*(v)| in a
+//!   single-stream schedule.
+
+use super::{Graph, OpId};
+use crate::util::BitSet;
+
+/// Transitive-closure data for a graph.
+pub struct Reachability {
+    /// `above[v]` = set of transitive predecessors of `v` (excluding `v`).
+    pub above: Vec<BitSet>,
+    /// `below[v]` = set of transitive successors of `v` (excluding `v`).
+    pub below: Vec<BitSet>,
+    /// A topological order used during construction.
+    pub topo: Vec<OpId>,
+}
+
+impl Reachability {
+    /// Compute both closures in O(n·m/64) words of work.
+    pub fn compute(g: &Graph) -> Reachability {
+        let n = g.n_ops();
+        let topo = super::topo::program_order(g);
+        let (preds, succs) = g.adjacency();
+        let mut above: Vec<BitSet> = (0..n).map(|_| BitSet::new(n)).collect();
+        let mut below: Vec<BitSet> = (0..n).map(|_| BitSet::new(n)).collect();
+
+        // Forward pass in topo order: above[v] = ∪_{p∈preds(v)} above[p] ∪ {p}.
+        for &v in &topo {
+            // Collect into a scratch set to avoid aliasing `above[v]` while
+            // reading `above[p]`.
+            let mut acc = BitSet::new(n);
+            for &p in &preds[v] {
+                acc.union_with(&above[p]);
+                acc.set(p);
+            }
+            above[v] = acc;
+        }
+        // Backward pass in reverse topo order.
+        for &v in topo.iter().rev() {
+            let mut acc = BitSet::new(n);
+            for &s in &succs[v] {
+                acc.union_with(&below[s]);
+                acc.set(s);
+            }
+            below[v] = acc;
+        }
+        Reachability { above, below, topo }
+    }
+
+    /// Number of ops this graph has.
+    pub fn n(&self) -> usize {
+        self.above.len()
+    }
+
+    /// Is `u` a strict transitive predecessor of `v`?
+    pub fn precedes(&self, u: OpId, v: OpId) -> bool {
+        self.above[v].get(u)
+    }
+
+    /// Are `u` and `v` comparable (one precedes the other)?
+    pub fn comparable(&self, u: OpId, v: OpId) -> bool {
+        u == v || self.precedes(u, v) || self.precedes(v, u)
+    }
+
+    /// Memory-insensitive test: `v` is ordered w.r.t. *every* other op, so
+    /// its timestep is fixed across all topological orders (§IV-A).
+    pub fn is_memory_insensitive(&self, v: OpId) -> bool {
+        self.above[v].count() + self.below[v].count() == self.n() - 1
+    }
+
+    /// Earliest possible single-stream timestep of `v` (0-based):
+    /// every transitive predecessor must run first.
+    pub fn asap(&self, v: OpId) -> usize {
+        self.above[v].count()
+    }
+
+    /// Latest mandatory single-stream timestep of `v` (0-based):
+    /// all transitive successors must run after.
+    pub fn alap(&self, v: OpId) -> usize {
+        self.n() - 1 - self.below[v].count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpKind, Phase, TensorClass};
+
+    /// chain a->b->c with a side branch a->d->c  (b,d incomparable).
+    fn braid() -> Graph {
+        let mut g = Graph::new("braid");
+        let x = g.add_input_tensor("x", 1, TensorClass::Input);
+        let (_, ta) = g.add_op("a", OpKind::Other, Phase::Forward, &[x],
+            &[("ta", 1, TensorClass::Activation)]);
+        let (_, tb) = g.add_op("b", OpKind::Other, Phase::Forward, &[ta[0]],
+            &[("tb", 1, TensorClass::Activation)]);
+        let (_, td) = g.add_op("d", OpKind::Other, Phase::Forward, &[ta[0]],
+            &[("td", 1, TensorClass::Activation)]);
+        g.add_op("c", OpKind::Other, Phase::Forward, &[tb[0], td[0]],
+            &[("tc", 1, TensorClass::Activation)]);
+        g
+    }
+
+    #[test]
+    fn closures() {
+        let g = braid();
+        let r = Reachability::compute(&g);
+        assert!(r.precedes(0, 3));
+        assert!(r.precedes(1, 3));
+        assert!(!r.precedes(1, 2)); // b and d incomparable
+        assert!(!r.comparable(1, 2));
+        assert!(r.comparable(0, 3));
+    }
+
+    #[test]
+    fn memory_insensitive_ops() {
+        let g = braid();
+        let r = Reachability::compute(&g);
+        assert!(r.is_memory_insensitive(0)); // a: before everything
+        assert!(r.is_memory_insensitive(3)); // c: after everything
+        assert!(!r.is_memory_insensitive(1)); // b floats against d
+        assert!(!r.is_memory_insensitive(2));
+    }
+
+    #[test]
+    fn asap_alap_bounds() {
+        let g = braid();
+        let r = Reachability::compute(&g);
+        assert_eq!(r.asap(0), 0);
+        assert_eq!(r.alap(0), 0); // must be first
+        assert_eq!(r.asap(3), 3);
+        assert_eq!(r.alap(3), 3); // must be last
+        assert_eq!(r.asap(1), 1);
+        assert_eq!(r.alap(1), 2); // b can be step 1 or 2
+        assert!(r.asap(2) <= r.alap(2));
+    }
+
+    #[test]
+    fn chain_all_insensitive() {
+        let mut g = Graph::new("chain");
+        let mut prev = g.add_input_tensor("x", 1, TensorClass::Input);
+        for i in 0..5 {
+            let (_, t) = g.add_op(format!("op{i}"), OpKind::Other, Phase::Forward,
+                &[prev], &[("t", 1, TensorClass::Activation)]);
+            prev = t[0];
+        }
+        let r = Reachability::compute(&g);
+        for v in 0..5 {
+            assert!(r.is_memory_insensitive(v));
+            assert_eq!(r.asap(v), v);
+            assert_eq!(r.alap(v), v);
+        }
+    }
+}

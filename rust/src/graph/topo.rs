@@ -1,0 +1,127 @@
+//! Topological orderings with pluggable tie-breaking.
+//!
+//! Kahn's algorithm where the choice among *ready* operators is the policy:
+//! * [`program_order`] — lowest op id first. Model builders emit ops in
+//!   definition order, so this reproduces **PyTorch**'s "execute in the
+//!   order defined in the program" baseline (§I).
+//! * [`ready_queue_order`] — FIFO by in-queue time, i.e. **TensorFlow**'s
+//!   executor policy (§I).
+//! * [`is_topological`] — validity check used by every test/invariant.
+
+use super::{Graph, OpId};
+use std::collections::VecDeque;
+
+/// PyTorch baseline: among ready ops always pick the smallest op id
+/// (= order of definition in the program).
+pub fn program_order(g: &Graph) -> Vec<OpId> {
+    let (preds, succs) = g.adjacency();
+    let n = g.n_ops();
+    let mut indeg: Vec<usize> = preds.iter().map(|p| p.len()).collect();
+    // A binary heap of Reverse(id) would be O(log n); for clarity and
+    // because n is ≤ ~2·10⁴ we use a sorted insertion-free scan via a
+    // BinaryHeap on Reverse.
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let mut ready: BinaryHeap<Reverse<OpId>> = (0..n)
+        .filter(|&v| indeg[v] == 0)
+        .map(Reverse)
+        .collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(Reverse(v)) = ready.pop() {
+        order.push(v);
+        for &s in &succs[v] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                ready.push(Reverse(s));
+            }
+        }
+    }
+    assert_eq!(order.len(), n, "graph has a cycle");
+    order
+}
+
+/// TensorFlow baseline: FIFO queue of ready operators ordered by the time
+/// they became ready (ties broken by op id at initialisation).
+pub fn ready_queue_order(g: &Graph) -> Vec<OpId> {
+    let (preds, succs) = g.adjacency();
+    let n = g.n_ops();
+    let mut indeg: Vec<usize> = preds.iter().map(|p| p.len()).collect();
+    let mut q: VecDeque<OpId> = (0..n).filter(|&v| indeg[v] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(v) = q.pop_front() {
+        order.push(v);
+        for &s in &succs[v] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                q.push_back(s);
+            }
+        }
+    }
+    assert_eq!(order.len(), n, "graph has a cycle");
+    order
+}
+
+/// Check that `order` is a permutation of the ops respecting all edges.
+pub fn is_topological(g: &Graph, order: &[OpId]) -> bool {
+    if order.len() != g.n_ops() {
+        return false;
+    }
+    let mut pos = vec![usize::MAX; g.n_ops()];
+    for (i, &v) in order.iter().enumerate() {
+        if v >= g.n_ops() || pos[v] != usize::MAX {
+            return false; // out of range or duplicate
+        }
+        pos[v] = i;
+    }
+    for op in &g.ops {
+        for p in g.preds(op.id) {
+            if pos[p] >= pos[op.id] {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpKind, Phase, TensorClass};
+
+    /// Diamond: a -> {b, c} -> d.
+    fn diamond() -> Graph {
+        let mut g = Graph::new("diamond");
+        let x = g.add_input_tensor("x", 8, TensorClass::Input);
+        let (_, ta) = g.add_op("a", OpKind::Other, Phase::Forward, &[x],
+            &[("ta", 8, TensorClass::Activation)]);
+        let (_, tb) = g.add_op("b", OpKind::Other, Phase::Forward, &[ta[0]],
+            &[("tb", 8, TensorClass::Activation)]);
+        let (_, tc) = g.add_op("c", OpKind::Other, Phase::Forward, &[ta[0]],
+            &[("tc", 8, TensorClass::Activation)]);
+        g.add_op("d", OpKind::Other, Phase::Forward, &[tb[0], tc[0]],
+            &[("td", 8, TensorClass::Activation)]);
+        g
+    }
+
+    #[test]
+    fn program_order_prefers_low_ids() {
+        let g = diamond();
+        assert_eq!(program_order(&g), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn ready_queue_is_valid() {
+        let g = diamond();
+        let o = ready_queue_order(&g);
+        assert!(is_topological(&g, &o));
+    }
+
+    #[test]
+    fn is_topological_rejects_violations() {
+        let g = diamond();
+        assert!(is_topological(&g, &[0, 1, 2, 3]));
+        assert!(!is_topological(&g, &[1, 0, 2, 3])); // b before a
+        assert!(!is_topological(&g, &[0, 1, 2]));    // missing op
+        assert!(!is_topological(&g, &[0, 1, 1, 3])); // duplicate
+    }
+}

@@ -1,0 +1,142 @@
+//! Structural validation of graphs.
+//!
+//! Every producer of a `Graph` (model builders, the HLO parser, the random
+//! generator used by property tests) runs through [`validate`] in its
+//! tests; the planner calls it in debug builds before planning.
+
+use super::Graph;
+
+/// A structural defect in a graph.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Defect {
+    /// Tensor's `id` field doesn't match its index.
+    TensorIdMismatch(usize),
+    /// Op's `id` field doesn't match its index.
+    OpIdMismatch(usize),
+    /// Op references a tensor id out of range.
+    DanglingTensorRef { op: usize, tensor: usize },
+    /// Tensor lists a consumer that doesn't list it as input (or vice versa).
+    InconsistentConsumer { tensor: usize, op: usize },
+    /// Tensor producer doesn't list it as an output.
+    InconsistentProducer { tensor: usize, op: usize },
+    /// The op-level graph has a cycle.
+    Cycle,
+    /// A tensor has zero size (legal in HLO, but suspicious in builders).
+    ZeroSize(usize),
+}
+
+/// Validate; returns all defects found (empty = structurally sound).
+pub fn validate(g: &Graph) -> Vec<Defect> {
+    let mut defects = Vec::new();
+    for (i, t) in g.tensors.iter().enumerate() {
+        if t.id != i {
+            defects.push(Defect::TensorIdMismatch(i));
+        }
+        if t.size == 0 {
+            defects.push(Defect::ZeroSize(i));
+        }
+        if let Some(p) = t.producer {
+            if p >= g.n_ops() {
+                defects.push(Defect::DanglingTensorRef { op: p, tensor: i });
+            } else if !g.ops[p].outputs.contains(&i) {
+                defects.push(Defect::InconsistentProducer { tensor: i, op: p });
+            }
+        }
+        for &c in &t.consumers {
+            if c >= g.n_ops() {
+                defects.push(Defect::DanglingTensorRef { op: c, tensor: i });
+            } else if !g.ops[c].inputs.contains(&i) {
+                defects.push(Defect::InconsistentConsumer { tensor: i, op: c });
+            }
+        }
+    }
+    for (i, op) in g.ops.iter().enumerate() {
+        if op.id != i {
+            defects.push(Defect::OpIdMismatch(i));
+        }
+        for &t in op.inputs.iter().chain(op.outputs.iter()) {
+            if t >= g.n_tensors() {
+                defects.push(Defect::DanglingTensorRef { op: i, tensor: t });
+            }
+        }
+    }
+    // Cycle check: Kahn must visit everything.
+    let (preds, succs) = g.adjacency();
+    let mut indeg: Vec<usize> = preds.iter().map(|p| p.len()).collect();
+    let mut stack: Vec<usize> = (0..g.n_ops()).filter(|&v| indeg[v] == 0).collect();
+    let mut seen = 0;
+    while let Some(v) = stack.pop() {
+        seen += 1;
+        for &s in &succs[v] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                stack.push(s);
+            }
+        }
+    }
+    if seen != g.n_ops() {
+        defects.push(Defect::Cycle);
+    }
+    defects
+}
+
+/// Panic with a readable report if the graph is defective.
+pub fn assert_valid(g: &Graph) {
+    let d = validate(g);
+    assert!(
+        d.is_empty(),
+        "graph '{}' has {} structural defects: {:?}",
+        g.name,
+        d.len(),
+        &d[..d.len().min(10)]
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, OpKind, Phase, TensorClass};
+
+    #[test]
+    fn clean_graph_validates() {
+        let mut g = Graph::new("ok");
+        let x = g.add_input_tensor("x", 4, TensorClass::Input);
+        g.add_op("a", OpKind::Other, Phase::Forward, &[x],
+            &[("t", 4, TensorClass::Activation)]);
+        assert!(validate(&g).is_empty());
+    }
+
+    #[test]
+    fn detects_zero_size() {
+        let mut g = Graph::new("z");
+        g.add_input_tensor("x", 0, TensorClass::Input);
+        assert_eq!(validate(&g), vec![Defect::ZeroSize(0)]);
+    }
+
+    #[test]
+    fn detects_inconsistent_consumer() {
+        let mut g = Graph::new("bad");
+        let x = g.add_input_tensor("x", 4, TensorClass::Input);
+        g.add_op("a", OpKind::Other, Phase::Forward, &[x],
+            &[("t", 4, TensorClass::Activation)]);
+        // Corrupt: claim tensor 1 is consumed by op 0 without listing input.
+        g.tensors[1].consumers.push(0);
+        assert!(validate(&g)
+            .iter()
+            .any(|d| matches!(d, Defect::InconsistentConsumer { .. })));
+    }
+
+    #[test]
+    fn detects_cycle() {
+        let mut g = Graph::new("cyc");
+        let x = g.add_input_tensor("x", 4, TensorClass::Input);
+        let (a, t0) = g.add_op("a", OpKind::Other, Phase::Forward, &[x],
+            &[("t0", 4, TensorClass::Activation)]);
+        let (_b, t1) = g.add_op("b", OpKind::Other, Phase::Forward, &[t0[0]],
+            &[("t1", 4, TensorClass::Activation)]);
+        // Corrupt: feed b's output back into a.
+        g.ops[a].inputs.push(t1[0]);
+        g.tensors[t1[0]].consumers.push(a);
+        assert!(validate(&g).contains(&Defect::Cycle));
+    }
+}

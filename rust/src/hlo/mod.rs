@@ -1,0 +1,19 @@
+//! HLO-text front end: parse XLA HLO modules (as produced by
+//! `python/compile/aot.py`) into ROAM graphs.
+//!
+//! This is the bridge that lets the planner run on *real* JAX-lowered
+//! training computations instead of only the synthetic model builders: the
+//! L2 train step lowers to HLO text, the PJRT runtime executes that same
+//! text, and this parser recovers the operator/tensor DAG (byte-accurate
+//! shapes) for graph-level memory planning.
+//!
+//! Scope: the ENTRY computation's instruction list. Called computations
+//! (fusions, while bodies, reducers) appear as single operators whose
+//! output sizes come from their declared result shapes — exactly the
+//! granularity a graph-level planner wants.
+
+pub mod parser;
+pub mod shape;
+
+pub use parser::{parse_hlo_text, ParseError};
+pub use shape::{dtype_bytes, parse_shape, Shape};

@@ -1,0 +1,258 @@
+//! HLO-text → [`Graph`] parser (ENTRY computation).
+
+use super::shape::{parse_shape, Shape};
+use crate::graph::{Graph, OpKind, Phase, TensorClass};
+use std::collections::HashMap;
+use std::fmt;
+
+/// Parse failure with line number.
+#[derive(Debug, Clone)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "hlo parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Map an HLO opcode to a coarse category.
+fn op_kind(opcode: &str) -> OpKind {
+    match opcode {
+        "dot" => OpKind::MatMul,
+        "convolution" => OpKind::Conv,
+        "reduce" | "reduce-window" => OpKind::Reduce,
+        "exponential" | "tanh" | "logistic" | "rsqrt" | "sqrt" | "log" => OpKind::Activation,
+        "add" | "subtract" | "multiply" | "divide" | "maximum" | "minimum" | "select"
+        | "compare" | "power" | "negate" | "abs" | "clamp" => OpKind::Elementwise,
+        "reshape" | "transpose" | "bitcast" | "broadcast" | "slice" | "concatenate"
+        | "get-tuple-element" | "tuple" | "copy" | "convert" | "dynamic-slice"
+        | "dynamic-update-slice" | "gather" | "scatter" | "pad" | "reverse" | "iota" => {
+            OpKind::Reshape
+        }
+        "parameter" => OpKind::Input,
+        "constant" => OpKind::Other,
+        "fusion" | "call" | "while" | "conditional" | "custom-call" => OpKind::Other,
+        _ => OpKind::Other,
+    }
+}
+
+/// Parse HLO text and build the ENTRY computation's graph.
+///
+/// * `parameter` instructions become graph-input tensors (class `Input` —
+///   HLO has no weight/activation distinction; callers can reclassify by
+///   name or size if they care).
+/// * Every other instruction becomes one operator producing one tensor of
+///   its declared result size (tuple results count total bytes; the
+///   `get-tuple-element` projections that follow are zero-ish-cost ops).
+/// * The ROOT instruction's tensor is marked as a graph output.
+pub fn parse_hlo_text(text: &str) -> Result<Graph, ParseError> {
+    let mut g = Graph::new("hlo");
+    // name -> tensor id produced by that instruction.
+    let mut produced: HashMap<String, usize> = HashMap::new();
+    let mut in_entry = false;
+    let mut root_tensor: Option<usize> = None;
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.starts_with("ENTRY") {
+            in_entry = true;
+            continue;
+        }
+        if !in_entry {
+            continue;
+        }
+        if line.starts_with('}') {
+            break;
+        }
+        if line.is_empty() || line.starts_with("//") {
+            continue;
+        }
+        // `[ROOT ]%name = shape opcode(operands), attrs`
+        let err = |msg: &str| ParseError {
+            line: lineno + 1,
+            msg: msg.to_string(),
+        };
+        let (lhs, rhs) = line.split_once('=').ok_or_else(|| err("missing '='"))?;
+        let is_root = lhs.trim_start().starts_with("ROOT");
+        let name = lhs
+            .trim()
+            .trim_start_matches("ROOT")
+            .trim()
+            .trim_start_matches('%')
+            .to_string();
+        let rhs = rhs.trim();
+        let (shape, after_shape) =
+            parse_shape(rhs, 0).ok_or_else(|| err("cannot parse result shape"))?;
+        let rest = rhs[after_shape..].trim_start();
+        let opcode: String = rest
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '-' || *c == '_')
+            .collect();
+        if opcode.is_empty() {
+            return Err(err("missing opcode"));
+        }
+
+        if opcode == "parameter" {
+            let tid = g.add_input_tensor(name.clone(), shape.bytes().max(1), TensorClass::Input);
+            produced.insert(name, tid);
+            if is_root {
+                root_tensor = Some(tid);
+            }
+            continue;
+        }
+
+        // Operand list: the parenthesised group right after the opcode.
+        let after_op = &rest[opcode.len()..];
+        let operands = parse_operand_names(after_op);
+        let mut inputs = Vec::new();
+        for op_name in operands {
+            if let Some(&tid) = produced.get(&op_name) {
+                inputs.push(tid);
+            }
+            // Unknown names are references to nested computations
+            // (reducers, fusion bodies) — not data operands; skip.
+        }
+        let (_, outs) = g.add_op(
+            name.clone(),
+            op_kind(&opcode),
+            Phase::Forward,
+            &inputs,
+            &[(&name, shape.bytes().max(1), class_for(&opcode, &shape))],
+        );
+        produced.insert(name, outs[0]);
+        if is_root {
+            root_tensor = Some(outs[0]);
+        }
+    }
+
+    if !in_entry {
+        return Err(ParseError {
+            line: 0,
+            msg: "no ENTRY computation found".to_string(),
+        });
+    }
+    if let Some(t) = root_tensor {
+        g.mark_output(t);
+    }
+    Ok(g)
+}
+
+/// Tensor class heuristic for HLO results: constants and shape plumbing
+/// are temp buffers; compute results are activations.
+fn class_for(opcode: &str, _shape: &Shape) -> TensorClass {
+    match opcode {
+        "constant" | "iota" => TensorClass::TempBuffer,
+        _ => TensorClass::Activation,
+    }
+}
+
+/// Extract `%name` operand references from the operand group of an
+/// instruction line (depth-aware: stops at the group's closing paren, so
+/// attribute payloads like `calls=%fused` after it are excluded).
+fn parse_operand_names(s: &str) -> Vec<String> {
+    let b = s.as_bytes();
+    let mut i = 0;
+    while i < b.len() && b[i] != b'(' {
+        i += 1;
+    }
+    if i == b.len() {
+        return Vec::new();
+    }
+    let mut depth = 0i32;
+    let mut names = Vec::new();
+    while i < b.len() {
+        match b[i] {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            b'%' => {
+                let start = i + 1;
+                let mut j = start;
+                while j < b.len()
+                    && (b[j].is_ascii_alphanumeric()
+                        || b[j] == b'.'
+                        || b[j] == b'_'
+                        || b[j] == b'-')
+                {
+                    j += 1;
+                }
+                names.push(s[start..j].to_string());
+                i = j;
+                continue;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    names
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate::validate;
+
+    const SAMPLE: &str = r#"
+HloModule jit_fn, entry_computation_layout={(f32[2,2]{1,0}, f32[2,2]{1,0})->(f32[2,2]{1,0})}
+
+ENTRY %main.9 (Arg_0.1: f32[2,2], Arg_1.2: f32[2,2]) -> (f32[2,2]) {
+  %Arg_0.1 = f32[2,2]{1,0} parameter(0)
+  %Arg_1.2 = f32[2,2]{1,0} parameter(1)
+  %dot.3 = f32[2,2]{1,0} dot(f32[2,2]{1,0} %Arg_0.1, f32[2,2]{1,0} %Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %constant.4 = f32[] constant(2)
+  %broadcast.5 = f32[2,2]{1,0} broadcast(f32[] %constant.4), dimensions={}
+  %add.6 = f32[2,2]{1,0} add(f32[2,2]{1,0} %dot.3, f32[2,2]{1,0} %broadcast.5)
+  ROOT %tuple.8 = (f32[2,2]{1,0}) tuple(f32[2,2]{1,0} %add.6)
+}
+"#;
+
+    #[test]
+    fn parses_sample_module() {
+        let g = parse_hlo_text(SAMPLE).unwrap();
+        assert!(validate(&g).is_empty(), "{:?}", validate(&g));
+        // 2 parameters (input tensors, not ops) + 5 instruction ops.
+        assert_eq!(g.n_ops(), 5);
+        assert_eq!(g.n_tensors(), 7);
+        // dot consumes both parameters.
+        let dot = g.ops.iter().find(|o| o.name.starts_with("dot")).unwrap();
+        assert_eq!(dot.inputs.len(), 2);
+        assert_eq!(dot.kind, OpKind::MatMul);
+        // Root tuple marked as output.
+        let root = g.tensors.iter().find(|t| t.is_output).unwrap();
+        assert_eq!(root.size, 16);
+    }
+
+    #[test]
+    fn planner_runs_on_parsed_hlo() {
+        let g = parse_hlo_text(SAMPLE).unwrap();
+        let plan = crate::planner::roam_plan(&g, &crate::planner::RoamCfg {
+            parallel: false,
+            ..Default::default()
+        });
+        assert!(crate::graph::topo::is_topological(&g, &plan.order));
+        assert!(plan.actual_peak >= plan.theoretical_peak);
+    }
+
+    #[test]
+    fn rejects_non_hlo() {
+        assert!(parse_hlo_text("this is not hlo").is_err());
+        assert!(parse_hlo_text("ENTRY %e () -> f32[] {\n  garbage\n}").is_err());
+    }
+
+    #[test]
+    fn operand_extraction_ignores_attributes() {
+        let names = parse_operand_names(
+            "(f32[2]{0} %a, (f32[2], s32[]) %b), calls=%fused_computation",
+        );
+        assert_eq!(names, vec!["a".to_string(), "b".to_string()]);
+    }
+}

@@ -1,0 +1,210 @@
+//! HLO shape strings: `f32[128,768]{1,0}`, `(f32[2,2]{1,0}, s32[])`, ...
+
+/// A parsed HLO shape: either an array or a tuple.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Shape {
+    Array { dtype: String, dims: Vec<u64> },
+    Tuple(Vec<Shape>),
+    /// Opaque/token shapes (zero bytes).
+    Token,
+}
+
+impl Shape {
+    /// Total size in bytes (tuples sum their elements).
+    pub fn bytes(&self) -> u64 {
+        match self {
+            Shape::Array { dtype, dims } => {
+                let n: u64 = dims.iter().product::<u64>().max(1);
+                // Sub-byte types (e.g. pred) still occupy ≥1 byte each here.
+                n * dtype_bytes(dtype)
+            }
+            Shape::Tuple(elems) => elems.iter().map(|s| s.bytes()).sum(),
+            Shape::Token => 0,
+        }
+    }
+
+    /// Tuple arity (1 for arrays).
+    pub fn arity(&self) -> usize {
+        match self {
+            Shape::Tuple(e) => e.len(),
+            _ => 1,
+        }
+    }
+
+    /// Tuple element (self for arrays when i == 0).
+    pub fn element(&self, i: usize) -> &Shape {
+        match self {
+            Shape::Tuple(e) => &e[i],
+            s if i == 0 => s,
+            _ => panic!("element {i} of non-tuple"),
+        }
+    }
+}
+
+/// Bytes per element for an HLO primitive type.
+pub fn dtype_bytes(d: &str) -> u64 {
+    match d {
+        "f64" | "s64" | "u64" | "c64" => 8,
+        "f32" | "s32" | "u32" => 4,
+        "f16" | "bf16" | "s16" | "u16" => 2,
+        "s8" | "u8" | "pred" | "f8e4m3fn" | "f8e5m2" | "s4" | "u4" => 1,
+        "c128" => 16,
+        _ => 4, // unknown: assume word-sized
+    }
+}
+
+/// Skip spaces and `/*index=N*/`-style comments (HLO prints them inside
+/// long tuple shapes).
+fn skip_ws_comments(b: &[u8], mut i: usize) -> usize {
+    loop {
+        while i < b.len() && b[i] == b' ' {
+            i += 1;
+        }
+        if i + 1 < b.len() && b[i] == b'/' && b[i + 1] == b'*' {
+            i += 2;
+            while i + 1 < b.len() && !(b[i] == b'*' && b[i + 1] == b'/') {
+                i += 1;
+            }
+            i = (i + 2).min(b.len());
+        } else {
+            return i;
+        }
+    }
+}
+
+/// Parse a shape starting at `s[pos]`; returns the shape and the index one
+/// past its end. Layout annotations (`{1,0}`) are consumed and discarded.
+pub fn parse_shape(s: &str, pos: usize) -> Option<(Shape, usize)> {
+    let b = s.as_bytes();
+    let mut i = skip_ws_comments(b, pos);
+    if i < b.len() && b[i] == b'(' {
+        // Tuple.
+        i += 1;
+        // Empty tuple `()` is legal HLO.
+        if skip_ws_comments(b, i) < b.len() && b[skip_ws_comments(b, i)] == b')' {
+            return Some((Shape::Tuple(Vec::new()), skip_ws_comments(b, i) + 1));
+        }
+        let mut elems = Vec::new();
+        loop {
+            let (sh, ni) = parse_shape(s, i)?;
+            elems.push(sh);
+            i = skip_ws_comments(b, ni);
+            match b.get(i) {
+                Some(b',') => i += 1,
+                Some(b')') => {
+                    i += 1;
+                    break;
+                }
+                _ => return None,
+            }
+        }
+        return Some((Shape::Tuple(elems), i));
+    }
+    // Identifier (dtype or `token`).
+    let start = i;
+    while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+        i += 1;
+    }
+    if i == start {
+        return None;
+    }
+    let ident = &s[start..i];
+    if ident == "token" {
+        return Some((Shape::Token, i));
+    }
+    let mut dims = Vec::new();
+    if i < b.len() && b[i] == b'[' {
+        i += 1;
+        let dstart = i;
+        while i < b.len() && b[i] != b']' {
+            i += 1;
+        }
+        let inner = &s[dstart..i];
+        i += 1; // skip ']'
+        if !inner.trim().is_empty() {
+            for d in inner.split(',') {
+                // Dynamic dims print as "<=N"; take the bound.
+                let d = d.trim().trim_start_matches("<=");
+                dims.push(d.parse::<u64>().ok()?);
+            }
+        }
+    }
+    // Optional layout `{...}` (may contain nested metadata braces).
+    if i < b.len() && b[i] == b'{' {
+        let mut depth = 0i32;
+        while i < b.len() {
+            match b[i] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        i += 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+    }
+    Some((
+        Shape::Array {
+            dtype: ident.to_string(),
+            dims,
+        },
+        i,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_and_array() {
+        let (s, e) = parse_shape("f32[] ", 0).unwrap();
+        assert_eq!(s.bytes(), 4);
+        assert_eq!(e, 5);
+        let (s, _) = parse_shape("bf16[128,768]{1,0}", 0).unwrap();
+        assert_eq!(s.bytes(), 128 * 768 * 2);
+    }
+
+    #[test]
+    fn tuples() {
+        let (s, _) = parse_shape("(f32[2,2]{1,0}, s32[], pred[8])", 0).unwrap();
+        assert_eq!(s.arity(), 3);
+        assert_eq!(s.bytes(), 16 + 4 + 8);
+        assert_eq!(s.element(1).bytes(), 4);
+    }
+
+    #[test]
+    fn nested_tuple() {
+        let (s, _) = parse_shape("((f32[4], f32[4]), f32[])", 0).unwrap();
+        assert_eq!(s.arity(), 2);
+        assert_eq!(s.bytes(), 16 + 16 + 4);
+    }
+
+    #[test]
+    fn tuple_with_index_comments() {
+        let (s, _) =
+            parse_shape("(f32[2]{0}, /*index=1*/s32[], /*index=2*/f32[4]{0})", 0).unwrap();
+        assert_eq!(s.arity(), 3);
+        assert_eq!(s.bytes(), 8 + 4 + 16);
+    }
+
+    #[test]
+    fn token_and_dynamic() {
+        let (s, _) = parse_shape("token[]", 0).unwrap();
+        assert_eq!(s, Shape::Token);
+        let (s, _) = parse_shape("f32[<=16,4]", 0).unwrap();
+        assert_eq!(s.bytes(), 16 * 4 * 4);
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(dtype_bytes("f32"), 4);
+        assert_eq!(dtype_bytes("bf16"), 2);
+        assert_eq!(dtype_bytes("pred"), 1);
+        assert_eq!(dtype_bytes("f64"), 8);
+    }
+}

@@ -1,0 +1,268 @@
+//! Branch-and-bound MILP driver over the simplex LP relaxation.
+//!
+//! Depth-first search branching on the most-fractional integer variable,
+//! with incumbent pruning and a wall-clock deadline — mirroring how the
+//! paper runs its ILP solver "with a time limit of 3600 s" (§V-A) and
+//! takes the incumbent when time runs out.
+
+use super::model::{Cmp, LinExpr, Model};
+use super::simplex::{solve_lp, LpStatus};
+use crate::util::timer::Deadline;
+
+/// MILP outcome.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MilpStatus {
+    /// Search space exhausted: incumbent is optimal.
+    Optimal,
+    /// Deadline/node budget hit with a feasible incumbent.
+    Feasible,
+    /// Proven infeasible.
+    Infeasible,
+    /// Deadline hit before any incumbent was found.
+    Unknown,
+}
+
+/// MILP configuration.
+#[derive(Clone, Debug)]
+pub struct MilpCfg {
+    pub deadline: Deadline,
+    pub max_nodes: u64,
+    /// Absolute objective tolerance for pruning.
+    pub gap_tol: f64,
+}
+
+impl Default for MilpCfg {
+    fn default() -> Self {
+        MilpCfg {
+            deadline: Deadline::unlimited(),
+            max_nodes: 100_000,
+            gap_tol: 1e-6,
+        }
+    }
+}
+
+/// MILP result.
+#[derive(Clone, Debug)]
+pub struct MilpResult {
+    pub status: MilpStatus,
+    pub x: Vec<f64>,
+    pub objective: f64,
+    pub nodes: u64,
+}
+
+const INT_TOL: f64 = 1e-6;
+
+/// Solve `m` by branch-and-bound. An optional warm-start feasible solution
+/// seeds the incumbent (the planner passes its heuristic solution).
+pub fn solve_milp(m: &Model, cfg: &MilpCfg, warm: Option<&[f64]>) -> MilpResult {
+    let mut best: Option<(f64, Vec<f64>)> = None;
+    if let Some(w) = warm {
+        if m.feasible(w, 1e-6) {
+            best = Some((m.objective.eval(w), w.to_vec()));
+        }
+    }
+    let mut nodes = 0u64;
+    let mut exhausted = true;
+    // Stack of bound overrides: (var, lo, hi) lists per node.
+    let mut stack: Vec<Vec<(usize, f64, f64)>> = vec![Vec::new()];
+
+    while let Some(bounds) = stack.pop() {
+        nodes += 1;
+        if cfg.deadline.expired() || nodes > cfg.max_nodes {
+            exhausted = false;
+            break;
+        }
+        // Apply bounds to a scratch model.
+        let mut node = m.clone();
+        let mut bad = false;
+        for &(v, lo, hi) in &bounds {
+            node.vars[v].lo = node.vars[v].lo.max(lo);
+            node.vars[v].hi = node.vars[v].hi.min(hi);
+            if node.vars[v].lo > node.vars[v].hi + 1e-12 {
+                bad = true;
+            }
+        }
+        if bad {
+            continue;
+        }
+        let rel = solve_lp(&node);
+        match rel.status {
+            LpStatus::Infeasible => continue,
+            LpStatus::Unbounded | LpStatus::IterLimit => {
+                // Numerical trouble: treat as unexplorable (conservative).
+                exhausted = false;
+                continue;
+            }
+            LpStatus::Optimal => {}
+        }
+        if let Some((b, _)) = &best {
+            if rel.objective >= *b - cfg.gap_tol {
+                continue; // bound prune
+            }
+        }
+        // Find most fractional integer variable.
+        let frac = m
+            .vars
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.integer)
+            .map(|(i, _)| (i, (rel.x[i] - rel.x[i].round()).abs()))
+            .filter(|&(_, f)| f > INT_TOL)
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        match frac {
+            None => {
+                // Integral: new incumbent.
+                let mut x = rel.x.clone();
+                for (i, v) in m.vars.iter().enumerate() {
+                    if v.integer {
+                        x[i] = x[i].round();
+                    }
+                }
+                let obj = m.objective.eval(&x);
+                if best.as_ref().map(|(b, _)| obj < *b).unwrap_or(true) {
+                    best = Some((obj, x));
+                }
+            }
+            Some((v, _)) => {
+                let f = rel.x[v].floor();
+                // Explore the side closer to the relaxation first
+                // (pushed last = popped first).
+                let mut down = bounds.clone();
+                down.push((v, f64::NEG_INFINITY, f));
+                let mut up = bounds;
+                up.push((v, f + 1.0, f64::INFINITY));
+                if rel.x[v] - f > 0.5 {
+                    stack.push(down);
+                    stack.push(up);
+                } else {
+                    stack.push(up);
+                    stack.push(down);
+                }
+            }
+        }
+    }
+
+    match best {
+        Some((obj, x)) => MilpResult {
+            status: if exhausted {
+                MilpStatus::Optimal
+            } else {
+                MilpStatus::Feasible
+            },
+            x,
+            objective: obj,
+            nodes,
+        },
+        None => MilpResult {
+            status: if exhausted {
+                MilpStatus::Infeasible
+            } else {
+                MilpStatus::Unknown
+            },
+            x: Vec::new(),
+            objective: f64::NAN,
+            nodes,
+        },
+    }
+}
+
+/// Convenience: add the constraint `a + b ≤ 1` (mutual exclusion).
+pub fn at_most_one(m: &mut Model, a: usize, b: usize) {
+    m.constrain(LinExpr::new().term(a, 1.0).term(b, 1.0), Cmp::Le, 1.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ilp::model::{Cmp, LinExpr, Model};
+
+    #[test]
+    fn knapsack() {
+        // max 10a + 6b + 4c (min negative) s.t. a+b+c <= 2 (binary).
+        let mut m = Model::new();
+        let a = m.add_bin("a");
+        let b = m.add_bin("b");
+        let c = m.add_bin("c");
+        m.constrain(
+            LinExpr::new().term(a, 1.0).term(b, 1.0).term(c, 1.0),
+            Cmp::Le,
+            2.0,
+        );
+        m.minimize(LinExpr::new().term(a, -10.0).term(b, -6.0).term(c, -4.0));
+        let r = solve_milp(&m, &MilpCfg::default(), None);
+        assert_eq!(r.status, MilpStatus::Optimal);
+        assert!((r.objective - (-16.0)).abs() < 1e-6);
+        assert_eq!(r.x[a].round() as i64, 1);
+        assert_eq!(r.x[b].round() as i64, 1);
+        assert_eq!(r.x[c].round() as i64, 0);
+    }
+
+    #[test]
+    fn integer_rounding_matters() {
+        // min -x s.t. 2x <= 3, x integer in [0, 5] → x = 1 (LP gives 1.5).
+        let mut m = Model::new();
+        let x = m.add_int("x", 0.0, 5.0);
+        m.constrain(LinExpr::new().term(x, 2.0), Cmp::Le, 3.0);
+        m.minimize(LinExpr::new().term(x, -1.0));
+        let r = solve_milp(&m, &MilpCfg::default(), None);
+        assert_eq!(r.status, MilpStatus::Optimal);
+        assert_eq!(r.x[x].round() as i64, 1);
+    }
+
+    #[test]
+    fn infeasible_milp() {
+        let mut m = Model::new();
+        let x = m.add_bin("x");
+        m.constrain(LinExpr::var(x), Cmp::Ge, 2.0);
+        m.minimize(LinExpr::var(x));
+        let r = solve_milp(&m, &MilpCfg::default(), None);
+        assert_eq!(r.status, MilpStatus::Infeasible);
+    }
+
+    #[test]
+    fn warm_start_used_when_budget_zero() {
+        let mut m = Model::new();
+        let x = m.add_bin("x");
+        m.minimize(LinExpr::var(x));
+        let warm = vec![1.0];
+        let r = solve_milp(
+            &m,
+            &MilpCfg {
+                max_nodes: 0,
+                ..Default::default()
+            },
+            Some(&warm),
+        );
+        assert_eq!(r.status, MilpStatus::Feasible);
+        assert_eq!(r.x, warm);
+    }
+
+    #[test]
+    fn big_m_disjunction() {
+        // Two unit tasks must not overlap on a resource:
+        // o1, o2 in [0, 10], either o1 + 1 <= o2 or o2 + 1 <= o1.
+        // min o1 + o2 → {0, 1}.
+        let mut m = Model::new();
+        let o1 = m.add_var("o1", 0.0, 10.0);
+        let o2 = m.add_var("o2", 0.0, 10.0);
+        let z = m.add_bin("z"); // z=1 ⇒ o1 below o2
+        let big = 100.0;
+        // o1 + 1 - o2 <= M(1-z)
+        m.constrain(
+            LinExpr::new().term(o1, 1.0).term(o2, -1.0).term(z, big),
+            Cmp::Le,
+            big - 1.0,
+        );
+        // o2 + 1 - o1 <= Mz
+        m.constrain(
+            LinExpr::new().term(o2, 1.0).term(o1, -1.0).term(z, -big),
+            Cmp::Le,
+            -1.0,
+        );
+        m.minimize(LinExpr::new().term(o1, 1.0).term(o2, 1.0));
+        let r = solve_milp(&m, &MilpCfg::default(), None);
+        assert_eq!(r.status, MilpStatus::Optimal);
+        assert!((r.objective - 1.0).abs() < 1e-6, "obj {}", r.objective);
+        assert!((r.x[o1] - r.x[o2]).abs() >= 1.0 - 1e-6);
+    }
+}

@@ -1,0 +1,32 @@
+//! Integer-linear-programming substrate (§IV-D).
+//!
+//! The paper solves both leaf sub-problems with ILP ("a highly effective
+//! method ... shown to provide near-optimal solutions given enough time").
+//! No external solver is vendorable offline, so this module implements the
+//! whole stack from scratch:
+//!
+//! * [`model`] — LP/MILP model builder (variables, bounds, integrality,
+//!   linear constraints, minimisation objective),
+//! * [`simplex`] — dense two-phase primal simplex with Bland's rule,
+//! * [`bb`] — branch-and-bound MILP driver with deadline + incumbent,
+//! * [`order_ilp`] — the paper's operator-ordering formulation (per-tensor
+//!   creation/preservation variables `C`/`P`),
+//! * [`layout_ilp`] — the DSA formulation (offset variables + pairwise
+//!   above/below binaries with big-M non-overlap constraints).
+//!
+//! Scale expectations are part of the reproduction: these formulations are
+//! solvable for leaf-sized subgraphs (tens of ops) and blow up on whole
+//! training graphs — `order_ilp::formulation_size` reproduces the paper's
+//! "more than 22 million integer decision variables" observation for
+//! GPT2-XL (§V-D) without attempting the hopeless solve. The combinatorial
+//! solvers ([`crate::sched::bnb`], [`crate::layout::dsa`]) are the
+//! production path; the ILPs cross-validate them on small instances.
+
+pub mod bb;
+pub mod layout_ilp;
+pub mod model;
+pub mod order_ilp;
+pub mod simplex;
+
+pub use bb::{solve_milp, MilpCfg, MilpResult, MilpStatus};
+pub use model::{Cmp, LinExpr, Model, VarId};

@@ -1,0 +1,178 @@
+//! LP / MILP model representation.
+
+/// Variable handle.
+pub type VarId = usize;
+
+/// Comparison operator of a constraint row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// Sparse linear expression: Σ coef·var.
+#[derive(Clone, Debug, Default)]
+pub struct LinExpr {
+    pub terms: Vec<(VarId, f64)>,
+}
+
+impl LinExpr {
+    pub fn new() -> Self {
+        LinExpr { terms: Vec::new() }
+    }
+
+    pub fn term(mut self, v: VarId, c: f64) -> Self {
+        self.terms.push((v, c));
+        self
+    }
+
+    /// Single-variable expression.
+    pub fn var(v: VarId) -> Self {
+        LinExpr {
+            terms: vec![(v, 1.0)],
+        }
+    }
+
+    pub fn add(&mut self, v: VarId, c: f64) {
+        self.terms.push((v, c));
+    }
+
+    /// Evaluate under an assignment.
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        self.terms.iter().map(|&(v, c)| c * x[v]).sum()
+    }
+}
+
+/// A variable's metadata.
+#[derive(Clone, Debug)]
+pub struct Var {
+    pub name: String,
+    pub lo: f64,
+    pub hi: f64,
+    pub integer: bool,
+}
+
+/// A constraint row `expr cmp rhs`.
+#[derive(Clone, Debug)]
+pub struct Constraint {
+    pub expr: LinExpr,
+    pub cmp: Cmp,
+    pub rhs: f64,
+}
+
+/// A minimisation MILP.
+#[derive(Clone, Debug, Default)]
+pub struct Model {
+    pub vars: Vec<Var>,
+    pub constraints: Vec<Constraint>,
+    pub objective: LinExpr,
+}
+
+impl Model {
+    pub fn new() -> Self {
+        Model::default()
+    }
+
+    /// Continuous variable in `[lo, hi]`.
+    pub fn add_var(&mut self, name: impl Into<String>, lo: f64, hi: f64) -> VarId {
+        self.vars.push(Var {
+            name: name.into(),
+            lo,
+            hi,
+            integer: false,
+        });
+        self.vars.len() - 1
+    }
+
+    /// Binary 0/1 variable.
+    pub fn add_bin(&mut self, name: impl Into<String>) -> VarId {
+        self.vars.push(Var {
+            name: name.into(),
+            lo: 0.0,
+            hi: 1.0,
+            integer: true,
+        });
+        self.vars.len() - 1
+    }
+
+    /// Integer variable in `[lo, hi]`.
+    pub fn add_int(&mut self, name: impl Into<String>, lo: f64, hi: f64) -> VarId {
+        self.vars.push(Var {
+            name: name.into(),
+            lo,
+            hi,
+            integer: true,
+        });
+        self.vars.len() - 1
+    }
+
+    pub fn constrain(&mut self, expr: LinExpr, cmp: Cmp, rhs: f64) {
+        self.constraints.push(Constraint { expr, cmp, rhs });
+    }
+
+    pub fn minimize(&mut self, obj: LinExpr) {
+        self.objective = obj;
+    }
+
+    pub fn n_vars(&self) -> usize {
+        self.vars.len()
+    }
+
+    pub fn n_int_vars(&self) -> usize {
+        self.vars.iter().filter(|v| v.integer).count()
+    }
+
+    pub fn n_constraints(&self) -> usize {
+        self.constraints.len()
+    }
+
+    /// Is `x` feasible within tolerance?
+    pub fn feasible(&self, x: &[f64], tol: f64) -> bool {
+        if x.len() != self.vars.len() {
+            return false;
+        }
+        for (i, v) in self.vars.iter().enumerate() {
+            if x[i] < v.lo - tol || x[i] > v.hi + tol {
+                return false;
+            }
+            if v.integer && (x[i] - x[i].round()).abs() > tol {
+                return false;
+            }
+        }
+        self.constraints.iter().all(|c| {
+            let lhs = c.expr.eval(x);
+            match c.cmp {
+                Cmp::Le => lhs <= c.rhs + tol,
+                Cmp::Ge => lhs >= c.rhs - tol,
+                Cmp::Eq => (lhs - c.rhs).abs() <= tol,
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_check_feasibility() {
+        let mut m = Model::new();
+        let x = m.add_var("x", 0.0, 10.0);
+        let y = m.add_bin("y");
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, 5.0), Cmp::Le, 8.0);
+        m.minimize(LinExpr::new().term(x, -1.0));
+        assert_eq!(m.n_vars(), 2);
+        assert_eq!(m.n_int_vars(), 1);
+        assert!(m.feasible(&[3.0, 1.0], 1e-6));
+        assert!(!m.feasible(&[4.0, 1.0], 1e-6)); // 4 + 5 > 8
+        assert!(!m.feasible(&[3.0, 0.5], 1e-6)); // fractional binary
+        assert!(!m.feasible(&[11.0, 0.0], 1e-6)); // bound violation
+    }
+
+    #[test]
+    fn expr_eval() {
+        let e = LinExpr::new().term(0, 2.0).term(1, -1.0);
+        assert_eq!(e.eval(&[3.0, 4.0]), 2.0);
+    }
+}

@@ -1,0 +1,382 @@
+//! Dense two-phase primal simplex.
+//!
+//! Solves the LP relaxation of a [`Model`]: variables are shifted to
+//! `x' = x − lo ≥ 0`, upper bounds become explicit `≤` rows, all rows get
+//! slack/surplus variables, phase 1 drives artificial variables out, phase
+//! 2 optimises the real objective. Bland's rule guarantees termination.
+//!
+//! Dense tableaus are O((m+n)·n) per pivot — plenty for the leaf-sized
+//! formulations ROAM feeds it, and *intentionally* hopeless for
+//! whole-training-graph formulations (that asymmetry is the phenomenon the
+//! paper measures; see `ilp::order_ilp::formulation_size`).
+
+use super::model::{Cmp, Model};
+
+/// LP outcome.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LpStatus {
+    Optimal,
+    Infeasible,
+    Unbounded,
+    /// Iteration limit hit (numerical safety valve).
+    IterLimit,
+}
+
+/// LP solution.
+#[derive(Clone, Debug)]
+pub struct LpSolution {
+    pub status: LpStatus,
+    /// Variable values in the original (unshifted) space.
+    pub x: Vec<f64>,
+    pub objective: f64,
+}
+
+const EPS: f64 = 1e-9;
+
+/// Solve the LP relaxation of `m` (integrality ignored).
+pub fn solve_lp(m: &Model) -> LpSolution {
+    let n = m.vars.len();
+
+    // Build rows: original constraints (shifted) + upper-bound rows.
+    // Shifted var x' = x - lo, so a row Σ c x cmp b becomes Σ c x' cmp b - Σ c·lo.
+    struct Row {
+        coefs: Vec<f64>, // dense over n structural vars
+        cmp: Cmp,
+        rhs: f64,
+    }
+    let mut rows: Vec<Row> = Vec::with_capacity(m.constraints.len() + n);
+    for c in &m.constraints {
+        let mut coefs = vec![0.0; n];
+        let mut shift = 0.0;
+        for &(v, k) in &c.expr.terms {
+            coefs[v] += k;
+            shift += k * m.vars[v].lo;
+        }
+        rows.push(Row {
+            coefs,
+            cmp: c.cmp,
+            rhs: c.rhs - shift,
+        });
+    }
+    for (i, v) in m.vars.iter().enumerate() {
+        if v.hi.is_finite() {
+            let mut coefs = vec![0.0; n];
+            coefs[i] = 1.0;
+            rows.push(Row {
+                coefs,
+                cmp: Cmp::Le,
+                rhs: v.hi - v.lo,
+            });
+        }
+    }
+    // Normalise RHS to be ≥ 0 by negating rows.
+    for r in rows.iter_mut() {
+        if r.rhs < 0.0 {
+            for c in r.coefs.iter_mut() {
+                *c = -*c;
+            }
+            r.rhs = -r.rhs;
+            r.cmp = match r.cmp {
+                Cmp::Le => Cmp::Ge,
+                Cmp::Ge => Cmp::Le,
+                Cmp::Eq => Cmp::Eq,
+            };
+        }
+    }
+
+    let m_rows = rows.len();
+    // Column layout: [structural n][slack/surplus s][artificial a][rhs]
+    let n_slack = rows
+        .iter()
+        .filter(|r| matches!(r.cmp, Cmp::Le | Cmp::Ge))
+        .count();
+    // Artificials for Ge and Eq rows.
+    let n_art = rows
+        .iter()
+        .filter(|r| matches!(r.cmp, Cmp::Ge | Cmp::Eq))
+        .count();
+    let total = n + n_slack + n_art;
+    let mut t = vec![vec![0.0f64; total + 1]; m_rows];
+    let mut basis = vec![0usize; m_rows];
+    let mut si = n;
+    let mut ai = n + n_slack;
+    for (r, row) in rows.iter().enumerate() {
+        t[r][..n].copy_from_slice(&row.coefs);
+        t[r][total] = row.rhs;
+        match row.cmp {
+            Cmp::Le => {
+                t[r][si] = 1.0;
+                basis[r] = si;
+                si += 1;
+            }
+            Cmp::Ge => {
+                t[r][si] = -1.0;
+                si += 1;
+                t[r][ai] = 1.0;
+                basis[r] = ai;
+                ai += 1;
+            }
+            Cmp::Eq => {
+                t[r][ai] = 1.0;
+                basis[r] = ai;
+                ai += 1;
+            }
+        }
+    }
+
+    let max_iters = 50 * (m_rows + total).max(100);
+
+    // Phase 1: minimise sum of artificials.
+    if n_art > 0 {
+        let mut z = vec![0.0f64; total + 1];
+        for (r, &b) in basis.iter().enumerate() {
+            if b >= n + n_slack {
+                for c in 0..=total {
+                    z[c] += t[r][c];
+                }
+            }
+        }
+        // Reduced costs for phase 1: cost 1 on artificials.
+        // z currently holds Σ (artificial rows); reduced cost of col j =
+        // z[j] (since c_j = 0 for non-artificial, 1 for artificial basic).
+        match pivot_loop(&mut t, &mut basis, &mut z, total, n + n_slack, max_iters) {
+            PivotOutcome::Optimal => {}
+            PivotOutcome::Unbounded => {
+                return LpSolution {
+                    status: LpStatus::Infeasible,
+                    x: vec![0.0; n],
+                    objective: f64::NAN,
+                }
+            }
+            PivotOutcome::IterLimit => {
+                return LpSolution {
+                    status: LpStatus::IterLimit,
+                    x: vec![0.0; n],
+                    objective: f64::NAN,
+                }
+            }
+        }
+        if z[total] > 1e-6 {
+            return LpSolution {
+                status: LpStatus::Infeasible,
+                x: vec![0.0; n],
+                objective: f64::NAN,
+            };
+        }
+        // Drive any remaining artificial out of the basis if possible.
+        for r in 0..m_rows {
+            if basis[r] >= n + n_slack {
+                if let Some(j) = (0..n + n_slack).find(|&j| t[r][j].abs() > EPS) {
+                    do_pivot(&mut t, &mut basis, r, j, total);
+                }
+            }
+        }
+    }
+
+    // Phase 2: real objective (shifted space). minimize c^T x.
+    let mut cost = vec![0.0f64; total + 1];
+    for &(v, k) in &m.objective.terms {
+        cost[v] += k;
+    }
+    // Reduced-cost row: z_j - c_j form. Start with -c then add back basics.
+    let mut z = vec![0.0f64; total + 1];
+    for j in 0..=total {
+        z[j] = -cost[j];
+    }
+    for (r, &b) in basis.iter().enumerate() {
+        if cost[b] != 0.0 {
+            let f = cost[b];
+            for c in 0..=total {
+                z[c] += f * t[r][c];
+            }
+        }
+    }
+    let limit_cols = n + n_slack; // artificials barred from re-entering
+    let status = match pivot_loop_max(&mut t, &mut basis, &mut z, total, limit_cols, max_iters) {
+        PivotOutcome::Optimal => LpStatus::Optimal,
+        PivotOutcome::Unbounded => LpStatus::Unbounded,
+        PivotOutcome::IterLimit => LpStatus::IterLimit,
+    };
+
+    // Extract solution (unshift).
+    let mut x = vec![0.0f64; n];
+    for (r, &b) in basis.iter().enumerate() {
+        if b < n {
+            x[b] = t[r][total];
+        }
+    }
+    for (i, v) in m.vars.iter().enumerate() {
+        x[i] += v.lo;
+    }
+    let objective = m.objective.eval(&x);
+    LpSolution {
+        status,
+        x,
+        objective,
+    }
+}
+
+enum PivotOutcome {
+    Optimal,
+    Unbounded,
+    IterLimit,
+}
+
+/// Phase-1 loop: minimise (z row holds positive reduced costs to shrink).
+/// Entering column: any with z[j] > EPS (Bland: smallest index).
+fn pivot_loop(
+    t: &mut [Vec<f64>],
+    basis: &mut [usize],
+    z: &mut [f64],
+    total: usize,
+    limit_cols: usize,
+    max_iters: usize,
+) -> PivotOutcome {
+    for _ in 0..max_iters {
+        let Some(j) = (0..limit_cols).find(|&j| z[j] > EPS) else {
+            return PivotOutcome::Optimal;
+        };
+        match ratio_test(t, j, total) {
+            None => return PivotOutcome::Unbounded,
+            Some(r) => {
+                do_pivot(t, basis, r, j, total);
+                update_z(z, t, r, j, total);
+            }
+        }
+    }
+    PivotOutcome::IterLimit
+}
+
+/// Phase-2 loop for a minimisation written as z_j - c_j: entering column has
+/// z[j] > EPS as well (same convention as phase 1, objective decreases).
+fn pivot_loop_max(
+    t: &mut [Vec<f64>],
+    basis: &mut [usize],
+    z: &mut [f64],
+    total: usize,
+    limit_cols: usize,
+    max_iters: usize,
+) -> PivotOutcome {
+    pivot_loop(t, basis, z, total, limit_cols, max_iters)
+}
+
+fn ratio_test(t: &[Vec<f64>], j: usize, total: usize) -> Option<usize> {
+    let mut best: Option<(f64, usize)> = None;
+    for (r, row) in t.iter().enumerate() {
+        if row[j] > EPS {
+            let ratio = row[total] / row[j];
+            match best {
+                None => best = Some((ratio, r)),
+                Some((br, _)) if ratio < br - EPS => best = Some((ratio, r)),
+                _ => {}
+            }
+        }
+    }
+    best.map(|(_, r)| r)
+}
+
+fn do_pivot(t: &mut [Vec<f64>], basis: &mut [usize], r: usize, j: usize, total: usize) {
+    let piv = t[r][j];
+    for c in 0..=total {
+        t[r][c] /= piv;
+    }
+    for rr in 0..t.len() {
+        if rr != r && t[rr][j].abs() > EPS {
+            let f = t[rr][j];
+            for c in 0..=total {
+                t[rr][c] -= f * t[r][c];
+            }
+        }
+    }
+    basis[r] = j;
+}
+
+fn update_z(z: &mut [f64], t: &[Vec<f64>], r: usize, j: usize, total: usize) {
+    let f = z[j];
+    if f.abs() > EPS {
+        for c in 0..=total {
+            z[c] -= f * t[r][c];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ilp::model::{Cmp, LinExpr, Model};
+
+    #[test]
+    fn simple_min() {
+        // min -x - 2y  s.t. x + y <= 4, x <= 3, y <= 2, x,y >= 0.
+        let mut m = Model::new();
+        let x = m.add_var("x", 0.0, 3.0);
+        let y = m.add_var("y", 0.0, 2.0);
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, 1.0), Cmp::Le, 4.0);
+        m.minimize(LinExpr::new().term(x, -1.0).term(y, -2.0));
+        let s = solve_lp(&m);
+        assert_eq!(s.status, LpStatus::Optimal);
+        // Optimum: y = 2, x = 2, obj = -6.
+        assert!((s.objective - (-6.0)).abs() < 1e-6, "obj = {}", s.objective);
+        assert!((s.x[x] - 2.0).abs() < 1e-6);
+        assert!((s.x[y] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn equality_and_ge() {
+        // min x + y  s.t. x + y = 5, x >= 2.
+        let mut m = Model::new();
+        let x = m.add_var("x", 0.0, 100.0);
+        let y = m.add_var("y", 0.0, 100.0);
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, 1.0), Cmp::Eq, 5.0);
+        m.constrain(LinExpr::var(x), Cmp::Ge, 2.0);
+        m.minimize(LinExpr::new().term(x, 1.0).term(y, 1.0));
+        let s = solve_lp(&m);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.objective - 5.0).abs() < 1e-6);
+        assert!(s.x[x] >= 2.0 - 1e-6);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut m = Model::new();
+        let x = m.add_var("x", 0.0, 1.0);
+        m.constrain(LinExpr::var(x), Cmp::Ge, 2.0);
+        m.minimize(LinExpr::var(x));
+        assert_eq!(solve_lp(&m).status, LpStatus::Infeasible);
+    }
+
+    #[test]
+    fn nonzero_lower_bounds() {
+        // min x  s.t. x >= 0, 3 <= x <= 7  → x = 3.
+        let mut m = Model::new();
+        let x = m.add_var("x", 3.0, 7.0);
+        m.minimize(LinExpr::var(x));
+        let s = solve_lp(&m);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.x[x] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn respects_upper_bounds() {
+        // max x (min -x) with x ≤ 5 via bound only.
+        let mut m = Model::new();
+        let x = m.add_var("x", 0.0, 5.0);
+        m.minimize(LinExpr::new().term(x, -1.0));
+        let s = solve_lp(&m);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.x[x] - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_does_not_cycle() {
+        // Klee-Minty-ish tiny degenerate case; Bland must terminate.
+        let mut m = Model::new();
+        let x = m.add_var("x", 0.0, 10.0);
+        let y = m.add_var("y", 0.0, 10.0);
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, 1.0), Cmp::Le, 0.0);
+        m.minimize(LinExpr::new().term(x, -1.0).term(y, -1.0));
+        let s = solve_lp(&m);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!(s.objective.abs() < 1e-6);
+    }
+}

@@ -1,0 +1,255 @@
+//! PyTorch-style caching-allocator simulator — the "PyTorch" baseline.
+//!
+//! PyTorch assigns tensor addresses *dynamically at creation time*, with no
+//! knowledge of future lifetimes (§I, Fig 3). The CUDA caching allocator's
+//! observable behaviour, reproduced here:
+//!
+//! * sizes round up to 512-byte multiples;
+//! * allocation searches the free list for the **best-fit** block (smallest
+//!   block ≥ request), splitting the remainder back into the free list;
+//! * if nothing fits, the arena is *extended at the top* (cudaMalloc);
+//! * frees coalesce with adjacent free blocks.
+//!
+//! The high-water mark of the arena is the actual peak memory. Replaying a
+//! schedule's alloc/free event stream through this allocator yields the
+//! PyTorch rows of Fig 11 / Table I.
+
+use super::{Item, Layout};
+
+const ROUND: u64 = 512;
+
+fn round_up(x: u64) -> u64 {
+    x.div_ceil(ROUND) * ROUND
+}
+
+/// A block in the arena.
+#[derive(Clone, Copy, Debug)]
+struct Block {
+    off: u64,
+    len: u64,
+    free: bool,
+}
+
+/// Dynamic best-fit allocator with splitting and coalescing.
+pub struct CachingAllocator {
+    /// Blocks sorted by offset, covering [0, top).
+    blocks: Vec<Block>,
+    top: u64,
+    peak: u64,
+}
+
+impl Default for CachingAllocator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CachingAllocator {
+    pub fn new() -> Self {
+        CachingAllocator {
+            blocks: Vec::new(),
+            top: 0,
+            peak: 0,
+        }
+    }
+
+    /// Allocate `size` bytes; returns the offset.
+    pub fn alloc(&mut self, size: u64) -> u64 {
+        let size = round_up(size.max(1));
+        // Best fit: smallest free block that is large enough.
+        let mut best: Option<usize> = None;
+        for (i, b) in self.blocks.iter().enumerate() {
+            if b.free && b.len >= size {
+                match best {
+                    None => best = Some(i),
+                    Some(j) if b.len < self.blocks[j].len => best = Some(i),
+                    _ => {}
+                }
+            }
+        }
+        if let Some(i) = best {
+            let b = self.blocks[i];
+            self.blocks[i] = Block {
+                off: b.off,
+                len: size,
+                free: false,
+            };
+            if b.len > size {
+                self.blocks.insert(
+                    i + 1,
+                    Block {
+                        off: b.off + size,
+                        len: b.len - size,
+                        free: true,
+                    },
+                );
+            }
+            return b.off;
+        }
+        // Extend the arena.
+        let off = self.top;
+        self.blocks.push(Block {
+            off,
+            len: size,
+            free: false,
+        });
+        self.top += size;
+        self.peak = self.peak.max(self.top);
+        off
+    }
+
+    /// Free the block at `offset`.
+    pub fn free(&mut self, offset: u64) {
+        let i = self
+            .blocks
+            .iter()
+            .position(|b| b.off == offset && !b.free)
+            .expect("free of unknown offset");
+        self.blocks[i].free = true;
+        // Coalesce with next, then with previous.
+        if i + 1 < self.blocks.len() && self.blocks[i + 1].free
+            && self.blocks[i].off + self.blocks[i].len == self.blocks[i + 1].off
+        {
+            self.blocks[i].len += self.blocks[i + 1].len;
+            self.blocks.remove(i + 1);
+        }
+        if i > 0 && self.blocks[i - 1].free
+            && self.blocks[i - 1].off + self.blocks[i - 1].len == self.blocks[i].off
+        {
+            self.blocks[i - 1].len += self.blocks[i].len;
+            self.blocks.remove(i);
+        }
+    }
+
+    /// Arena high-water mark so far.
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+}
+
+/// Replay items (with their lifetimes from some schedule) through the
+/// allocator in birth order (ties: death order, then id — creation order in
+/// the program). Returns the resulting layout and the actual peak.
+pub fn dynamic_layout(items: &[Item]) -> (Layout, u64) {
+    #[derive(Clone, Copy)]
+    enum Ev {
+        Alloc(usize), // item index
+        Free(usize),
+    }
+    let mut events: Vec<(usize, usize, Ev)> = Vec::with_capacity(items.len() * 2);
+    for (i, it) in items.iter().enumerate() {
+        // Alloc sorts before free at the same timestep boundary? No:
+        // a tensor dying at t is freed *after* ops at t complete, while
+        // a tensor born at t is allocated when its producer runs. Closed
+        // intervals ⇒ both coexist at t: process frees of step t at t+1.
+        events.push((it.life.birth * 2, i, Ev::Alloc(i)));
+        events.push((it.life.death * 2 + 1, i, Ev::Free(i)));
+    }
+    events.sort_by_key(|&(t, id, _)| (t, id));
+    let mut alloc = CachingAllocator::new();
+    let mut offsets = vec![(0usize, 0u64); 0];
+    let mut where_at = vec![0u64; items.len()];
+    for (_, _, ev) in events {
+        match ev {
+            Ev::Alloc(i) => {
+                let off = alloc.alloc(items[i].size);
+                where_at[i] = off;
+                offsets.push((items[i].id, off));
+            }
+            Ev::Free(i) => alloc.free(where_at[i]),
+        }
+    }
+    (Layout { offsets }, alloc.peak())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::sim::{conflicts, lower_bound};
+    use crate::graph::Lifetime;
+    use crate::util::quick::forall;
+
+    fn it(id: usize, birth: usize, death: usize, size: u64) -> Item {
+        Item {
+            id,
+            life: Lifetime { birth, death },
+            size,
+        }
+    }
+
+    #[test]
+    fn reuses_freed_blocks() {
+        let mut a = CachingAllocator::new();
+        let x = a.alloc(1000);
+        a.free(x);
+        let y = a.alloc(800);
+        assert_eq!(x, y, "freed block must be reused");
+        assert_eq!(a.peak(), round_up(1000));
+    }
+
+    #[test]
+    fn best_fit_picks_smallest() {
+        let mut a = CachingAllocator::new();
+        let big = a.alloc(4096);
+        let _hold1 = a.alloc(512); // separates the two future holes
+        let small = a.alloc(512);
+        let _hold2 = a.alloc(512);
+        a.free(big);
+        a.free(small);
+        // A 512 request must take the small hole, not the big one.
+        let z = a.alloc(512);
+        assert_eq!(z, small);
+    }
+
+    #[test]
+    fn coalescing_merges_neighbours() {
+        let mut a = CachingAllocator::new();
+        let x = a.alloc(512);
+        let y = a.alloc(512);
+        a.free(x);
+        a.free(y);
+        // Both freed and coalesced: a 1024 alloc fits without growing.
+        let z = a.alloc(1024);
+        assert_eq!(z, 0);
+        assert_eq!(a.peak(), 1024);
+    }
+
+    #[test]
+    fn fig3_fragmentation() {
+        // The paper's Fig 3: dynamic allocation can OOM/fragment where a
+        // lifetime-aware layout fits. 16MB dies, 12MB lives across, 20MB
+        // arrives — dynamic placement cannot reuse the 16MB hole for 20MB.
+        const MB: u64 = 1 << 20;
+        let items = [
+            it(0, 0, 1, 16 * MB),
+            it(1, 0, 3, 12 * MB),
+            it(2, 2, 3, 20 * MB),
+        ];
+        let (l, peak) = dynamic_layout(&items);
+        assert!(conflicts(&items, &l).is_empty());
+        let lb = lower_bound(&items); // 32 MB
+        assert_eq!(lb, 32 * MB);
+        assert!(peak > lb, "dynamic allocator must fragment here: {peak}");
+    }
+
+    #[test]
+    fn random_replays_are_conflict_free() {
+        forall("caching allocator validity", 60, |rng| {
+            let n = rng.usize_in(1, 50);
+            let items: Vec<Item> = (0..n)
+                .map(|id| {
+                    let b = rng.usize_in(0, 40);
+                    it(id, b, b + rng.usize_in(0, 15), 1 + rng.gen_range(1 << 16))
+                })
+                .collect();
+            let (l, peak) = dynamic_layout(&items);
+            if !conflicts(&items, &l).is_empty() {
+                return Err("conflict".into());
+            }
+            if peak < lower_bound(&items) {
+                return Err("peak below LB".into());
+            }
+            Ok(())
+        });
+    }
+}

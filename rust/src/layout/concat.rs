@@ -1,0 +1,198 @@
+//! Sub-layout concatenation (eq. 9) with address-conflict repair (Fig 9).
+//!
+//! ROAM solves memory layout per subgraph, then merges the sub-layouts into
+//! one arena. Merely stacking them fragments long-term (Fig 5a); instead
+//! each sub-layout is constrained to keep its *activations at the bottom*
+//! (offsets `[0, act_bytes)`) and the combined layout bases subgraph `i` at
+//! the cumulative activation size of subgraphs before it (Fig 5b / eq. 9):
+//!
+//! ```text
+//! base_i = base_{i-1} + Σ_{e ∈ m_{i-1}^atvs} size_e
+//! m[e]   = base_i + m_i[e]
+//! ```
+//!
+//! Subgraphs must be passed outermost-first (longest-lived activations
+//! first) so lower bases hold longer-lived activations. Temporaries of
+//! different subgraphs are time-disjoint by construction of the subgraph
+//! windows, so the only cross-subgraph conflicts come from *shared tensors*
+//! whose lifetime crosses windows; the repair pass re-places the smaller /
+//! shorter-lived side of every conflicting pair with best-fit (Fig 9).
+
+use super::fit::{lowest_fit, Placed};
+use super::sim::conflicts;
+use super::{Item, Layout};
+use std::collections::HashMap;
+
+/// One solved subgraph layout, ready for concatenation.
+#[derive(Clone, Debug)]
+pub struct SubLayout {
+    /// Items with lifetimes in the *global* timestep space.
+    pub items: Vec<Item>,
+    /// Local offsets (activations at the bottom).
+    pub layout: Layout,
+    /// Σ activation sizes in this sub-layout (the base increment).
+    pub activation_bytes: u64,
+}
+
+/// Result of concatenation.
+#[derive(Clone, Debug)]
+pub struct Concatenated {
+    pub layout: Layout,
+    pub arena: u64,
+    /// Number of items re-placed by the conflict-repair pass.
+    pub reassigned: usize,
+}
+
+/// Concatenate sub-layouts (eq. 9) and repair residual conflicts (Fig 9).
+pub fn concat(subs: &[SubLayout]) -> Concatenated {
+    let mut base = 0u64;
+    let mut all_items: Vec<Item> = Vec::new();
+    let mut offsets: HashMap<usize, u64> = HashMap::new();
+    for sub in subs {
+        for &(id, off) in &sub.layout.offsets {
+            offsets.insert(id, base + off);
+        }
+        all_items.extend_from_slice(&sub.items);
+        base += sub.activation_bytes;
+    }
+    repair_conflicts(&all_items, offsets)
+}
+
+/// The Fig-9 repair pass, standalone: given a tentative global offset
+/// assignment, evict the smaller / shorter-lived item of every conflicting
+/// pair and re-place the evictees by best-fit around everything that stays
+/// fixed. The ROAM planner uses this directly after window assembly.
+pub fn repair_conflicts(all_items: &[Item], mut offsets: HashMap<usize, u64>) -> Concatenated {
+    let layout = Layout {
+        offsets: offsets.iter().map(|(&k, &v)| (k, v)).collect(),
+    };
+    let confl = conflicts(all_items, &layout);
+    let mut reassigned = 0usize;
+    if !confl.is_empty() {
+        let by_id: HashMap<usize, Item> = all_items.iter().map(|it| (it.id, *it)).collect();
+        let mut evict: Vec<usize> = Vec::new();
+        for c in &confl {
+            let (a, b) = (by_id[&c.a], by_id[&c.b]);
+            // Prefer evicting temporaries "characterized by smaller sizes
+            // and shorter lifetimes" (Fig 9 discussion). If one side was
+            // already evicted the pair is resolved.
+            if evict.contains(&a.id) || evict.contains(&b.id) {
+                continue;
+            }
+            let pick = if (a.size, a.life.len()) <= (b.size, b.life.len()) {
+                a.id
+            } else {
+                b.id
+            };
+            evict.push(pick);
+        }
+        for id in &evict {
+            offsets.remove(id);
+        }
+        // Re-place evicted items (largest first) against everything fixed.
+        evict.sort_by_key(|id| std::cmp::Reverse(by_id[id].size));
+        let mut placed: Vec<Placed> = all_items
+            .iter()
+            .filter_map(|other| {
+                offsets
+                    .get(&other.id)
+                    .map(|&off| Placed { item: *other, offset: off })
+            })
+            .collect();
+        for id in evict {
+            let it = by_id[&id];
+            let off = lowest_fit(&it, &placed, 0);
+            offsets.insert(id, off);
+            placed.push(Placed { item: it, offset: off });
+            reassigned += 1;
+        }
+    }
+
+    let layout = Layout {
+        offsets: offsets.into_iter().collect(),
+    };
+    let arena = layout.arena_size(all_items);
+    Concatenated {
+        layout,
+        arena,
+        reassigned,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::sim::{assert_valid, lower_bound};
+    use crate::graph::Lifetime;
+
+    fn it(id: usize, birth: usize, death: usize, size: u64) -> Item {
+        Item {
+            id,
+            life: Lifetime { birth, death },
+            size,
+        }
+    }
+
+    /// Two nested subgraphs shaped like a fwd/bwd pairing:
+    /// sub0 (outer): activation [0,9] sized 100 at bottom, temp [0,1] above.
+    /// sub1 (inner): activation [3,6] sized 50, temp [4,5].
+    #[test]
+    fn stacks_on_activation_bases() {
+        let sub0 = SubLayout {
+            items: vec![it(0, 0, 9, 100), it(1, 0, 1, 30)],
+            layout: Layout {
+                offsets: vec![(0, 0), (1, 100)],
+            },
+            activation_bytes: 100,
+        };
+        let sub1 = SubLayout {
+            items: vec![it(2, 3, 6, 50), it(3, 4, 5, 20)],
+            layout: Layout {
+                offsets: vec![(2, 0), (3, 50)],
+            },
+            activation_bytes: 50,
+        };
+        let c = concat(&[sub0.clone(), sub1.clone()]);
+        let all: Vec<Item> = sub0.items.iter().chain(sub1.items.iter()).copied().collect();
+        assert_valid(&all, &c.layout);
+        assert_eq!(c.layout.offset_of(0), 0);
+        assert_eq!(c.layout.offset_of(2), 100); // base_1 = act of sub0
+        assert_eq!(c.layout.offset_of(3), 150);
+        assert_eq!(c.reassigned, 0);
+    }
+
+    #[test]
+    fn repairs_shared_tensor_conflicts() {
+        // sub0's temp (id 1) lives long (a shared tensor) and overlaps
+        // sub1's temp in time; naive concat collides them at offset 100.
+        let sub0 = SubLayout {
+            items: vec![it(0, 0, 9, 100), it(1, 0, 7, 30)],
+            layout: Layout {
+                offsets: vec![(0, 0), (1, 100)],
+            },
+            activation_bytes: 100,
+        };
+        let sub1 = SubLayout {
+            items: vec![it(2, 3, 6, 50), it(3, 4, 5, 60)],
+            layout: Layout {
+                offsets: vec![(2, 0), (3, 50)],
+            },
+            activation_bytes: 50,
+        };
+        // sub1 items are based at 100: act at [100,150), temp at [150,210).
+        // sub0 temp at [100,130) lives [0,7] — conflicts with sub1 act
+        // [3,6] at [100,150). Repair must fix it.
+        let c = concat(&[sub0.clone(), sub1.clone()]);
+        let all: Vec<Item> = sub0.items.iter().chain(sub1.items.iter()).copied().collect();
+        assert_valid(&all, &c.layout);
+        assert!(c.reassigned > 0);
+        assert!(c.arena >= lower_bound(&all));
+    }
+
+    #[test]
+    fn empty_input() {
+        let c = concat(&[]);
+        assert_eq!(c.arena, 0);
+        assert_eq!(c.reassigned, 0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Shared placement primitive: lowest feasible offset for an item given
+//! already-placed neighbours.
+//!
+//! All best-fit-style layout solvers (LLFB, greedy-by-size, the repair pass
+//! in [`super::concat`], and the candidate enumeration in [`super::dsa`])
+//! reduce to the same question: *given the tensors already placed whose
+//! lifetimes overlap mine, what offsets could I sit at?* By the classic
+//! bottom-left normalisation argument, it suffices to consider offset 0 and
+//! the tops of overlapping placed items.
+
+use super::Item;
+
+/// A placed rectangle: item + assigned offset.
+#[derive(Clone, Copy, Debug)]
+pub struct Placed {
+    pub item: Item,
+    pub offset: u64,
+}
+
+/// Lowest offset ≥ `min_offset` where `it` (size `it.size`, lifetime
+/// `it.life`) fits without conflicting with `placed`.
+pub fn lowest_fit(it: &Item, placed: &[Placed], min_offset: u64) -> u64 {
+    // Gather items overlapping in time, sorted by offset.
+    let mut over: Vec<(u64, u64)> = placed
+        .iter()
+        .filter(|p| p.item.life.overlaps(&it.life))
+        .map(|p| (p.offset, p.offset + p.item.size))
+        .collect();
+    over.sort_unstable();
+    // Sweep for the first gap of it.size starting at min_offset.
+    let mut cursor = min_offset;
+    for &(lo, hi) in &over {
+        if lo >= cursor + it.size {
+            break; // gap [cursor, lo) fits
+        }
+        cursor = cursor.max(hi);
+    }
+    cursor
+}
+
+/// Candidate offsets for branch-and-bound: `min_offset` plus the top of
+/// every time-overlapping placed item (deduplicated, ascending, feasible
+/// ones only).
+pub fn candidate_offsets(it: &Item, placed: &[Placed], min_offset: u64) -> Vec<u64> {
+    let over: Vec<(u64, u64)> = placed
+        .iter()
+        .filter(|p| p.item.life.overlaps(&it.life))
+        .map(|p| (p.offset, p.offset + p.item.size))
+        .collect();
+    let mut cands: Vec<u64> = std::iter::once(min_offset)
+        .chain(over.iter().map(|&(_, hi)| hi.max(min_offset)))
+        .collect();
+    cands.sort_unstable();
+    cands.dedup();
+    // Keep only offsets where the item actually fits.
+    cands.retain(|&c| {
+        over.iter()
+            .all(|&(lo, hi)| c + it.size <= lo || c >= hi)
+    });
+    cands
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Lifetime;
+
+    fn it(id: usize, birth: usize, death: usize, size: u64) -> Item {
+        Item {
+            id,
+            life: Lifetime { birth, death },
+            size,
+        }
+    }
+
+    #[test]
+    fn fits_in_gap() {
+        let placed = vec![
+            Placed { item: it(0, 0, 5, 10), offset: 0 },
+            Placed { item: it(1, 0, 5, 10), offset: 30 },
+        ];
+        // Gap [10, 30): a 20-unit tensor fits at 10.
+        assert_eq!(lowest_fit(&it(2, 1, 2, 20), &placed, 0), 10);
+        // A 25-unit tensor must go on top.
+        assert_eq!(lowest_fit(&it(3, 1, 2, 25), &placed, 0), 40);
+    }
+
+    #[test]
+    fn ignores_time_disjoint() {
+        let placed = vec![Placed { item: it(0, 0, 1, 100), offset: 0 }];
+        assert_eq!(lowest_fit(&it(1, 2, 3, 50), &placed, 0), 0);
+    }
+
+    #[test]
+    fn respects_min_offset() {
+        assert_eq!(lowest_fit(&it(0, 0, 1, 10), &[], 64), 64);
+    }
+
+    #[test]
+    fn candidates_are_feasible_and_sorted() {
+        let placed = vec![
+            Placed { item: it(0, 0, 5, 10), offset: 0 },
+            Placed { item: it(1, 0, 5, 10), offset: 40 },
+        ];
+        // 0 infeasible (hits the block at 0), 10 fits the gap, 50 on top.
+        let c = candidate_offsets(&it(2, 1, 2, 20), &placed, 0);
+        assert_eq!(c, vec![10, 50]);
+        // A 35-unit tensor doesn't fit the gap: top placement only.
+        let c = candidate_offsets(&it(3, 1, 2, 35), &placed, 0);
+        assert_eq!(c, vec![50]);
+    }
+}

@@ -1,0 +1,78 @@
+//! Size-ordered best-fit layout (Pisarchyk & Lee 2020) — the
+//! inference-oriented greedy the paper cites in Related Work §VI-B2.
+//! Included as an ablation baseline (`benches/table1_frag.rs --extra`).
+
+use super::fit::{lowest_fit, Placed};
+use super::{Item, Layout};
+
+/// Place items largest-first at the lowest feasible offset.
+pub fn greedy_by_size(items: &[Item]) -> Layout {
+    greedy_by_size_with(items, &[])
+}
+
+/// Largest-first best-fit around pre-placed fixed obstacles.
+pub fn greedy_by_size_with(items: &[Item], fixed: &[Placed]) -> Layout {
+    let mut order: Vec<usize> = (0..items.len()).collect();
+    order.sort_by(|&a, &b| {
+        items[b]
+            .size
+            .cmp(&items[a].size)
+            .then(items[b].life.len().cmp(&items[a].life.len()))
+            .then(items[a].id.cmp(&items[b].id))
+    });
+    let mut placed: Vec<Placed> = fixed.to_vec();
+    let mut offsets = Vec::with_capacity(items.len());
+    for i in order {
+        let it = items[i];
+        let off = lowest_fit(&it, &placed, 0);
+        placed.push(Placed { item: it, offset: off });
+        offsets.push((it.id, off));
+    }
+    Layout { offsets }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::sim::{assert_valid, conflicts, lower_bound};
+    use crate::graph::Lifetime;
+    use crate::util::quick::forall;
+
+    fn it(id: usize, birth: usize, death: usize, size: u64) -> Item {
+        Item {
+            id,
+            life: Lifetime { birth, death },
+            size,
+        }
+    }
+
+    #[test]
+    fn big_tensors_first() {
+        let items = [it(0, 0, 3, 10), it(1, 1, 2, 100)];
+        let l = greedy_by_size(&items);
+        assert_valid(&items, &l);
+        assert_eq!(l.offset_of(1), 0); // biggest at the bottom
+        assert_eq!(l.offset_of(0), 100);
+    }
+
+    #[test]
+    fn random_validity() {
+        forall("greedy-by-size validity", 80, |rng| {
+            let n = rng.usize_in(1, 30);
+            let items: Vec<Item> = (0..n)
+                .map(|id| {
+                    let b = rng.usize_in(0, 20);
+                    it(id, b, b + rng.usize_in(0, 8), 1 + rng.gen_range(512))
+                })
+                .collect();
+            let l = greedy_by_size(&items);
+            if !conflicts(&items, &l).is_empty() {
+                return Err("conflict".into());
+            }
+            if l.arena_size(&items) < lower_bound(&items) {
+                return Err("below LB".into());
+            }
+            Ok(())
+        });
+    }
+}

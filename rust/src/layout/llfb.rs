@@ -1,0 +1,114 @@
+//! LLFB — Long-Lived First Best-fit (Sekiyama et al. 2018), heuristic
+//! baseline of §V-A.
+//!
+//! Tensors are placed in order of decreasing lifetime length (ties: larger
+//! first, then id), each at the lowest feasible offset. The paper shows
+//! LLFB matches the ILP on small instances but is "unpredictable across all
+//! models and may result in fragmentation levels as high as 18.89%" when
+//! lifetimes are closely intertwined (Table I) — behaviour our Table-1
+//! bench reproduces.
+
+use super::fit::{lowest_fit, Placed};
+use super::{Item, Layout};
+
+/// Place items long-lived-first with best-fit around pre-placed fixed
+/// obstacles (used by the planner, which fixes activation stacks first).
+pub fn llfb_with(items: &[Item], fixed: &[Placed]) -> Layout {
+    let mut order: Vec<usize> = (0..items.len()).collect();
+    order.sort_by(|&a, &b| {
+        let la = items[a].life.len();
+        let lb = items[b].life.len();
+        lb.cmp(&la)
+            .then(items[b].size.cmp(&items[a].size))
+            .then(items[a].id.cmp(&items[b].id))
+    });
+    let mut placed: Vec<Placed> = fixed.to_vec();
+    let mut offsets = Vec::with_capacity(items.len());
+    for i in order {
+        let it = items[i];
+        let off = lowest_fit(&it, &placed, 0);
+        placed.push(Placed { item: it, offset: off });
+        offsets.push((it.id, off));
+    }
+    Layout { offsets }
+}
+
+/// Place items long-lived-first with best-fit.
+pub fn llfb(items: &[Item]) -> Layout {
+    llfb_with(items, &[])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::sim::{assert_valid, lower_bound};
+    use crate::graph::Lifetime;
+    use crate::util::quick::forall;
+
+    fn it(id: usize, birth: usize, death: usize, size: u64) -> Item {
+        Item {
+            id,
+            life: Lifetime { birth, death },
+            size,
+        }
+    }
+
+    #[test]
+    fn long_lived_goes_to_bottom() {
+        let items = [
+            it(0, 0, 9, 10),  // long-lived
+            it(1, 0, 1, 100), // short but big
+            it(2, 5, 6, 100),
+        ];
+        let l = llfb(&items);
+        assert_valid(&items, &l);
+        assert_eq!(l.offset_of(0), 0);
+        // The two short tensors are time-disjoint: they share [10, 110).
+        assert_eq!(l.offset_of(1), 10);
+        assert_eq!(l.offset_of(2), 10);
+        assert_eq!(l.arena_size(&items), 110);
+        assert_eq!(lower_bound(&items), 110);
+    }
+
+    #[test]
+    fn known_pathology_interleaved_lifetimes() {
+        // The regime the paper calls out: tensors with similar, heavily
+        // intertwined lifetimes where LLFB's fixed order fragments.
+        let items = [
+            it(0, 0, 6, 40),
+            it(1, 0, 3, 60),
+            it(2, 2, 8, 60),
+            it(3, 5, 9, 60),
+        ];
+        let l = llfb(&items);
+        assert_valid(&items, &l);
+        // LB: max live = 40+60+60 = 160 (t ∈ [2,3] and [5,6]).
+        assert_eq!(lower_bound(&items), 160);
+        // LLFB is valid but may exceed the LB (fragmentation) — just
+        // assert validity + record that arena ≥ LB.
+        assert!(l.arena_size(&items) >= 160);
+    }
+
+    #[test]
+    fn random_layouts_always_valid() {
+        forall("llfb validity", 100, |rng| {
+            let n = rng.usize_in(1, 40);
+            let items: Vec<Item> = (0..n)
+                .map(|id| {
+                    let b = rng.usize_in(0, 30);
+                    let d = b + rng.usize_in(0, 10);
+                    it(id, b, d, 1 + rng.gen_range(1000))
+                })
+                .collect();
+            let l = llfb(&items);
+            let c = super::super::sim::conflicts(&items, &l);
+            if !c.is_empty() {
+                return Err(format!("{c:?}"));
+            }
+            if l.arena_size(&items) < lower_bound(&items) {
+                return Err("arena below lower bound: impossible".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,102 @@
+//! Memory-layout management: static offset assignment for tensors
+//! (the Dynamic Storage Allocation problem, §IV-B).
+//!
+//! A **layout** maps each dynamic tensor to a byte offset in a single
+//! arena. Validity: tensors whose lifetimes overlap must not overlap in
+//! address space. The **actual peak** is the arena high-water mark
+//! `max(offset + size)`; **fragmentation** is its excess over the
+//! theoretical peak `Tp(G, s)` (the paper's metric, §V-B):
+//!
+//! ```text
+//! frag% = (actual_peak − theoretical_peak) / theoretical_peak
+//! ```
+//!
+//! Solvers in this module:
+//! * [`caching_alloc`] — PyTorch-style runtime caching allocator
+//!   (the "PyTorch" baseline column in Table I),
+//! * [`llfb`] — Long-Lived-First Best-fit (Sekiyama et al. 2018),
+//! * [`greedy_size`] — size-ordered best-fit (Pisarchyk & Lee 2020),
+//! * [`dsa`] — branch-and-bound offset search with the theoretical peak as
+//!   lower bound (the "accurate method" used on subgraph-tree leaves),
+//! * [`concat`] — ROAM's sub-layout concatenation (eq. 9) with
+//!   address-conflict repair (Fig 9).
+
+pub mod caching_alloc;
+pub mod concat;
+pub mod dsa;
+pub mod fit;
+pub mod greedy_size;
+pub mod llfb;
+pub mod sim;
+
+use crate::graph::Lifetime;
+
+/// A tensor to place: lifetime interval + size. Layout solvers operate on
+/// these, decoupled from the `Graph` (the planner extracts them per
+/// subgraph, benches generate synthetic ones).
+#[derive(Clone, Copy, Debug)]
+pub struct Item {
+    /// Caller-side identifier (tensor id).
+    pub id: usize,
+    pub life: Lifetime,
+    pub size: u64,
+}
+
+/// A computed layout: `offset[i]` for each input item (parallel to the
+/// items slice passed to the solver).
+#[derive(Clone, Debug, Default)]
+pub struct Layout {
+    /// (item id, offset) pairs.
+    pub offsets: Vec<(usize, u64)>,
+}
+
+impl Layout {
+    /// Arena high-water mark given the items (actual peak memory).
+    pub fn arena_size(&self, items: &[Item]) -> u64 {
+        let by_id: std::collections::HashMap<usize, u64> =
+            self.offsets.iter().copied().collect();
+        items
+            .iter()
+            .filter_map(|it| by_id.get(&it.id).map(|&o| o + it.size))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Offset of an item id (panics if missing).
+    pub fn offset_of(&self, id: usize) -> u64 {
+        self.offsets
+            .iter()
+            .find(|&&(i, _)| i == id)
+            .map(|&(_, o)| o)
+            .unwrap_or_else(|| panic!("item {id} not placed"))
+    }
+}
+
+/// Fragmentation percentage given actual and theoretical peaks.
+pub fn frag_pct(actual: u64, theoretical: u64) -> f64 {
+    if theoretical == 0 {
+        return 0.0;
+    }
+    100.0 * (actual.saturating_sub(theoretical)) as f64 / theoretical as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_and_frag() {
+        let items = [
+            Item { id: 0, life: Lifetime { birth: 0, death: 1 }, size: 100 },
+            Item { id: 1, life: Lifetime { birth: 2, death: 3 }, size: 50 },
+        ];
+        let l = Layout {
+            offsets: vec![(0, 0), (1, 0)],
+        };
+        assert_eq!(l.arena_size(&items), 100);
+        assert_eq!(l.offset_of(1), 0);
+        assert_eq!(frag_pct(120, 100), 20.0);
+        assert_eq!(frag_pct(100, 100), 0.0);
+        assert_eq!(frag_pct(0, 0), 0.0);
+    }
+}

@@ -1,0 +1,115 @@
+//! Layout validation and metrics — the ground-truth oracle every layout
+//! solver is tested against.
+
+use super::{Item, Layout};
+
+/// An address conflict between two items overlapping in time and space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Conflict {
+    pub a: usize,
+    pub b: usize,
+}
+
+/// Check that no two lifetime-overlapping items overlap in address space.
+/// Returns all conflicts (empty = valid). O(n²) — fine for validation; the
+/// solvers maintain validity incrementally.
+pub fn conflicts(items: &[Item], layout: &Layout) -> Vec<Conflict> {
+    let off: std::collections::HashMap<usize, u64> = layout.offsets.iter().copied().collect();
+    let mut out = Vec::new();
+    for (i, a) in items.iter().enumerate() {
+        let (Some(&oa), sa) = (off.get(&a.id), a.size) else {
+            continue;
+        };
+        for b in items.iter().skip(i + 1) {
+            let (Some(&ob), sb) = (off.get(&b.id), b.size) else {
+                continue;
+            };
+            if a.life.overlaps(&b.life) && oa < ob + sb && ob < oa + sa {
+                out.push(Conflict { a: a.id, b: b.id });
+            }
+        }
+    }
+    out
+}
+
+/// Panic if the layout has conflicts or unplaced items.
+pub fn assert_valid(items: &[Item], layout: &Layout) {
+    let placed: std::collections::HashSet<usize> =
+        layout.offsets.iter().map(|&(i, _)| i).collect();
+    for it in items {
+        assert!(placed.contains(&it.id), "item {} not placed", it.id);
+    }
+    let c = conflicts(items, layout);
+    assert!(c.is_empty(), "layout has {} conflicts: {:?}", c.len(), &c[..c.len().min(5)]);
+}
+
+/// The tight lower bound on any layout's arena: the max over timesteps of
+/// live bytes (= theoretical peak over these items).
+pub fn lower_bound(items: &[Item]) -> u64 {
+    if items.is_empty() {
+        return 0;
+    }
+    let horizon = items.iter().map(|i| i.life.death).max().unwrap() + 2;
+    let mut delta = vec![0i64; horizon + 1];
+    for it in items {
+        delta[it.life.birth] += it.size as i64;
+        delta[it.life.death + 1] -= it.size as i64;
+    }
+    let mut cur = 0i64;
+    let mut peak = 0i64;
+    for d in delta {
+        cur += d;
+        peak = peak.max(cur);
+    }
+    peak as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Lifetime;
+
+    fn it(id: usize, birth: usize, death: usize, size: u64) -> Item {
+        Item {
+            id,
+            life: Lifetime { birth, death },
+            size,
+        }
+    }
+
+    #[test]
+    fn detects_conflicts() {
+        let items = [it(0, 0, 2, 100), it(1, 1, 3, 50)];
+        let bad = Layout {
+            offsets: vec![(0, 0), (1, 50)], // overlaps [50,100) while alive together
+        };
+        assert_eq!(conflicts(&items, &bad), vec![Conflict { a: 0, b: 1 }]);
+        let good = Layout {
+            offsets: vec![(0, 0), (1, 100)],
+        };
+        assert!(conflicts(&items, &good).is_empty());
+    }
+
+    #[test]
+    fn disjoint_lifetimes_may_share_addresses() {
+        let items = [it(0, 0, 1, 100), it(1, 2, 3, 100)];
+        let l = Layout {
+            offsets: vec![(0, 0), (1, 0)],
+        };
+        assert!(conflicts(&items, &l).is_empty());
+        assert_eq!(l.arena_size(&items), 100);
+    }
+
+    #[test]
+    fn lower_bound_is_max_live() {
+        // Fig-3 shaped: 16 and 20 MB disjoint in time, 12 MB spanning both.
+        let items = [it(0, 0, 1, 16), it(1, 2, 3, 20), it(2, 0, 3, 12)];
+        assert_eq!(lower_bound(&items), 32); // 20 + 12
+    }
+
+    #[test]
+    fn empty_items() {
+        assert_eq!(lower_bound(&[]), 0);
+        assert!(conflicts(&[], &Layout::default()).is_empty());
+    }
+}

@@ -1,0 +1,53 @@
+//! # ROAM — memory-efficient DNN training via operator ordering + memory layout
+//!
+//! Reproduction of *ROAM: memory-efficient large DNN training via optimized
+//! operator ordering and memory layout* (Shu et al., 2023).
+//!
+//! ROAM operates on the computation-graph level. Given a training graph
+//! (operators + tensors with byte sizes), it derives an **execution plan**:
+//!
+//! * an operator **execution order** minimising the *theoretical peak memory*
+//!   ([`sched`]), and
+//! * a static **memory layout** (byte offset per tensor) minimising the
+//!   *actual peak* / fragmentation ([`layout`]).
+//!
+//! Scalability to 10k+-operator training graphs comes from divide and
+//! conquer: split at *memory-insensitive operators* into *independent
+//! segments*, pair forward/backward segments into subgraphs, organise them
+//! in a **subgraph tree** ([`segments`]), solve each leaf exactly with
+//! branch-and-bound / ILP ([`ilp`]), and concatenate the sub-plans
+//! ([`planner`]).
+//!
+//! The crate additionally ships the substrates a reproduction needs:
+//! model-graph builders for the paper's eight evaluation models
+//! ([`models`]), the PyTorch / LESCEA / LLFB / MODeL baselines, an HLO text
+//! parser so the planner can run on real JAX-lowered graphs ([`hlo`]), a
+//! PJRT runtime ([`runtime`]) and a training coordinator ([`coordinator`])
+//! that drive the end-to-end example.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use roam::models::{self, ModelKind, BuildCfg};
+//! use roam::planner::{roam_plan, RoamCfg};
+//!
+//! let g = models::build(ModelKind::Bert, &BuildCfg { batch: 1, ..Default::default() });
+//! let plan = roam_plan(&g, &RoamCfg::default());
+//! println!("theoretical peak = {} actual peak = {} frag = {:.2}%",
+//!          plan.theoretical_peak, plan.actual_peak, plan.frag_pct());
+//! ```
+
+pub mod benchkit;
+pub mod coordinator;
+pub mod graph;
+pub mod hlo;
+pub mod ilp;
+pub mod layout;
+pub mod models;
+pub mod planner;
+pub mod runtime;
+pub mod sched;
+pub mod segments;
+pub mod util;
+
+pub use graph::Graph;

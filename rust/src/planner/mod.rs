@@ -1,0 +1,232 @@
+//! Execution planners: ROAM and the paper's baselines.
+//!
+//! A planner turns a training [`Graph`] into an [`ExecutionPlan`]: an
+//! operator execution order plus a static memory layout, with the metrics
+//! the paper evaluates (theoretical peak, actual peak, fragmentation,
+//! time-to-optimization).
+//!
+//! * [`roam`] — the paper's system: subgraph tree + exact leaf solvers +
+//!   concatenation (§IV).
+//! * [`heuristic`] — LESCEA ordering + LLFB layout (the heuristic baseline
+//!   of §V-A).
+//! * [`pytorch`] — program order + caching-allocator simulation (the
+//!   PyTorch baseline).
+//! * [`model_baseline`] — MODeL-style whole-graph exact optimization under
+//!   a wall-clock time limit, in single- and multi-streaming variants.
+
+pub mod heuristic;
+pub mod model_baseline;
+pub mod roam;
+
+pub use roam::{roam_plan, RoamCfg};
+
+use crate::graph::{Graph, OpId, TensorId};
+use crate::layout::sim::conflicts;
+use crate::layout::{frag_pct, Item, Layout};
+use crate::sched::sim::profile;
+use crate::sched::Schedule;
+use crate::util::json::Json;
+
+/// A complete execution plan with its evaluated metrics.
+#[derive(Clone, Debug)]
+pub struct ExecutionPlan {
+    /// Which planner produced it ("roam-ss", "pytorch", ...).
+    pub planner: String,
+    /// Operator execution order (single-stream view).
+    pub order: Vec<OpId>,
+    /// Timestep assignment (may be multi-stream).
+    pub schedule: Schedule,
+    /// Byte offset per dynamic tensor.
+    pub offsets: Vec<(TensorId, u64)>,
+    /// Tp(G, s): max live dynamic bytes under the schedule.
+    pub theoretical_peak: u64,
+    /// Arena high-water mark of the layout.
+    pub actual_peak: u64,
+    /// Constant resident set (weights + optimizer state).
+    pub persistent: u64,
+    /// Wall-clock seconds spent planning.
+    pub planning_secs: f64,
+    /// Planner-specific counters (leaves solved, conflicts repaired, ...).
+    pub stats: Vec<(String, f64)>,
+}
+
+impl ExecutionPlan {
+    /// Fragmentation percentage (§V-B definition).
+    pub fn frag_pct(&self) -> f64 {
+        frag_pct(self.actual_peak, self.theoretical_peak)
+    }
+
+    /// Total device memory the plan needs.
+    pub fn total_bytes(&self) -> u64 {
+        self.actual_peak + self.persistent
+    }
+
+    /// Serialise to JSON (for `roam optimize --out plan.json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("planner", Json::Str(self.planner.clone())),
+            (
+                "order",
+                Json::Arr(self.order.iter().map(|&v| Json::Num(v as f64)).collect()),
+            ),
+            (
+                "timesteps",
+                Json::Arr(
+                    self.schedule
+                        .ts
+                        .iter()
+                        .map(|&t| Json::Num(t as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "offsets",
+                Json::Arr(
+                    self.offsets
+                        .iter()
+                        .map(|&(t, o)| {
+                            Json::Arr(vec![Json::Num(t as f64), Json::Num(o as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("theoretical_peak", Json::Num(self.theoretical_peak as f64)),
+            ("actual_peak", Json::Num(self.actual_peak as f64)),
+            ("persistent", Json::Num(self.persistent as f64)),
+            ("planning_secs", Json::Num(self.planning_secs)),
+            (
+                "stats",
+                Json::Obj(
+                    self.stats
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse a plan back from JSON.
+    pub fn from_json(j: &Json) -> Option<ExecutionPlan> {
+        let order: Vec<OpId> = j
+            .get("order")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_u64().unwrap_or(0) as usize)
+            .collect();
+        let ts: Vec<usize> = j
+            .get("timesteps")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_u64().unwrap_or(0) as usize)
+            .collect();
+        let offsets = j
+            .get("offsets")?
+            .as_arr()?
+            .iter()
+            .filter_map(|p| {
+                Some((
+                    p.at(0)?.as_u64()? as usize,
+                    p.at(1)?.as_u64()?,
+                ))
+            })
+            .collect();
+        Some(ExecutionPlan {
+            planner: j.get("planner")?.as_str()?.to_string(),
+            order,
+            schedule: Schedule { ts },
+            offsets,
+            theoretical_peak: j.get("theoretical_peak")?.as_u64()?,
+            actual_peak: j.get("actual_peak")?.as_u64()?,
+            persistent: j.get("persistent")?.as_u64()?,
+            planning_secs: j.get("planning_secs")?.as_f64()?,
+            stats: Vec::new(),
+        })
+    }
+}
+
+/// Extract dynamic-tensor layout items from a graph + schedule.
+pub fn layout_items(g: &Graph, sched: &Schedule) -> Vec<Item> {
+    let horizon = sched.horizon().max(1);
+    let lt = crate::graph::lifetimes_with_horizon(g, &sched.ts, horizon - 1);
+    g.tensors
+        .iter()
+        .filter(|t| !t.class.is_persistent())
+        .map(|t| Item {
+            id: t.id,
+            life: lt[t.id],
+            size: t.size,
+        })
+        .collect()
+}
+
+/// Evaluate a (schedule, layout) pair into an [`ExecutionPlan`], verifying
+/// layout validity in the process.
+pub fn evaluate(
+    g: &Graph,
+    planner: &str,
+    sched: Schedule,
+    layout: &Layout,
+    planning_secs: f64,
+    stats: Vec<(String, f64)>,
+) -> ExecutionPlan {
+    let items = layout_items(g, &sched);
+    debug_assert!(
+        conflicts(&items, layout).is_empty(),
+        "{planner}: layout has address conflicts"
+    );
+    let prof = profile(g, &sched);
+    ExecutionPlan {
+        planner: planner.to_string(),
+        order: sched.to_order(),
+        schedule: sched,
+        offsets: layout.offsets.clone(),
+        theoretical_peak: prof.peak,
+        actual_peak: layout.arena_size(&items),
+        persistent: prof.persistent,
+        planning_secs,
+        stats,
+    }
+}
+
+/// PyTorch baseline: program-definition order + dynamic caching allocator.
+pub fn pytorch(g: &Graph) -> ExecutionPlan {
+    let sw = crate::util::Stopwatch::start();
+    let order = crate::graph::topo::program_order(g);
+    let sched = Schedule::from_order(&order);
+    let items = layout_items(g, &sched);
+    let (layout, peak) = crate::layout::caching_alloc::dynamic_layout(&items);
+    let mut plan = evaluate(g, "pytorch", sched, &layout, sw.secs(), Vec::new());
+    // The allocator's high-water mark (with 512-B rounding and split
+    // blocks) is the honest actual peak, ≥ the layout extent.
+    plan.actual_peak = plan.actual_peak.max(peak);
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{self, BuildCfg, ModelKind};
+
+    #[test]
+    fn pytorch_plan_on_alexnet() {
+        let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
+        let p = pytorch(&g);
+        assert!(crate::graph::topo::is_topological(&g, &p.order));
+        assert!(p.actual_peak >= p.theoretical_peak);
+        assert!(p.frag_pct() >= 0.0);
+        assert!(p.persistent > 0);
+    }
+
+    #[test]
+    fn plan_json_roundtrip() {
+        let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
+        let p = pytorch(&g);
+        let j = p.to_json();
+        let back = ExecutionPlan::from_json(&j).unwrap();
+        assert_eq!(back.order, p.order);
+        assert_eq!(back.offsets.len(), p.offsets.len());
+        assert_eq!(back.theoretical_peak, p.theoretical_peak);
+        assert_eq!(back.actual_peak, p.actual_peak);
+    }
+}

@@ -1,0 +1,101 @@
+//! Artifact directory: HLO text files + `meta.json` written by
+//! `python/compile/aot.py`.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Metadata of an AOT-compiled model bundle.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub param_count: u64,
+    /// File names of the lowered computations.
+    pub train_step: String,
+    pub init: String,
+}
+
+/// An artifact bundle on disk.
+#[derive(Clone, Debug)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub meta: ArtifactMeta,
+}
+
+impl Artifacts {
+    /// Load `meta.json` from `dir`.
+    pub fn load(dir: &Path) -> Result<Artifacts> {
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let num = |k: &str| -> Result<u64> {
+            j.get(k)
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| anyhow!("meta.json missing numeric field '{k}'"))
+        };
+        let s = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .map(|x| x.to_string())
+                .ok_or_else(|| anyhow!("meta.json missing string field '{k}'"))
+        };
+        Ok(Artifacts {
+            dir: dir.to_path_buf(),
+            meta: ArtifactMeta {
+                vocab: num("vocab")? as usize,
+                d_model: num("d_model")? as usize,
+                n_layer: num("n_layer")? as usize,
+                n_head: num("n_head")? as usize,
+                seq_len: num("seq_len")? as usize,
+                batch: num("batch")? as usize,
+                param_count: num("param_count")?,
+                train_step: s("train_step")?,
+                init: s("init")?,
+            },
+        })
+    }
+
+    pub fn train_step_path(&self) -> PathBuf {
+        self.dir.join(&self.meta.train_step)
+    }
+
+    pub fn init_path(&self) -> PathBuf {
+        self.dir.join(&self.meta.init)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_roundtrip() {
+        let dir = std::env::temp_dir().join("roam_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"vocab": 8192, "d_model": 768, "n_layer": 12, "n_head": 12,
+                "seq_len": 128, "batch": 4, "param_count": 91000000,
+                "train_step": "train_step.hlo.txt", "init": "init.hlo.txt"}"#,
+        )
+        .unwrap();
+        let a = Artifacts::load(&dir).unwrap();
+        assert_eq!(a.meta.vocab, 8192);
+        assert_eq!(a.meta.param_count, 91_000_000);
+        assert!(a.train_step_path().ends_with("train_step.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let dir = std::env::temp_dir().join("roam_meta_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("meta.json"), r#"{"vocab": 1}"#).unwrap();
+        assert!(Artifacts::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! PJRT runtime: load AOT artifacts (HLO text lowered by
+//! `python/compile/aot.py`) and execute them on the CPU PJRT client.
+//!
+//! Python never runs on the training path: `make artifacts` lowers the L2
+//! JAX train step once; this module compiles the text with the `xla` crate
+//! (`HloModuleProto::from_text_file` → `XlaComputation` → `compile`) and
+//! the coordinator drives `execute` in a loop. HLO *text* is the
+//! interchange format — jax ≥ 0.5 emits protos with 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+pub mod artifact;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled computation ready to execute.
+pub struct LoadedModule {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT client plus the modules loaded from an artifact directory.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    /// Platform string for logs.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModule> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedModule {
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            exe,
+        })
+    }
+
+    /// Read an HLO text file and parse it into a ROAM graph for planning.
+    pub fn parse_graph(&self, path: &Path) -> Result<crate::graph::Graph> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        crate::hlo::parse_hlo_text(&text).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+}
+
+impl LoadedModule {
+    /// Underlying executable (for call styles defined in other modules).
+    pub fn exe_ref(&self) -> &xla::PjRtLoadedExecutable {
+        &self.exe
+    }
+
+    /// Execute with literal inputs; returns the output tuple's elements.
+    ///
+    /// JAX computations are lowered with `return_tuple=True`, so the result
+    /// is one tuple literal which this method decomposes.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self.exe.execute::<xla::Literal>(args)?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny HLO module written by hand: f(x, y) = (x·y + 2,) over
+    /// f32[2,2] — the same computation as /opt/xla-example.
+    const HLO: &str = r#"HloModule jit_fn
+
+ENTRY %main.9 (Arg_0.1: f32[2,2], Arg_1.2: f32[2,2]) -> (f32[2,2]) {
+  %Arg_0.1 = f32[2,2]{1,0} parameter(0)
+  %Arg_1.2 = f32[2,2]{1,0} parameter(1)
+  %dot.3 = f32[2,2]{1,0} dot(f32[2,2]{1,0} %Arg_0.1, f32[2,2]{1,0} %Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %constant.4 = f32[] constant(2)
+  %broadcast.5 = f32[2,2]{1,0} broadcast(f32[] %constant.4), dimensions={}
+  %add.6 = f32[2,2]{1,0} add(f32[2,2]{1,0} %dot.3, f32[2,2]{1,0} %broadcast.5)
+  ROOT %tuple.8 = (f32[2,2]{1,0}) tuple(f32[2,2]{1,0} %add.6)
+}
+"#;
+
+    #[test]
+    fn load_and_execute_roundtrip() {
+        let dir = std::env::temp_dir().join("roam_rt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fn.hlo.txt");
+        std::fs::write(&path, HLO).unwrap();
+
+        let rt = Runtime::cpu().expect("cpu client");
+        assert!(!rt.platform().is_empty());
+        let m = rt.load_hlo_text(&path).expect("compile");
+        let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2]).unwrap();
+        let y = xla::Literal::vec1(&[1f32, 1., 1., 1.]).reshape(&[2, 2]).unwrap();
+        let out = m.run(&[x, y]).expect("execute");
+        assert_eq!(out.len(), 1);
+        let v = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(v, vec![5., 5., 9., 9.]);
+
+        // The same artifact parses into a plannable graph.
+        let g = rt.parse_graph(&path).expect("parse");
+        assert_eq!(g.n_ops(), 5);
+    }
+}

@@ -1,0 +1,480 @@
+//! Exact single-stream ordering by branch-and-bound over topological
+//! prefixes — the "accurate method" ROAM applies to subgraph-tree leaves.
+//!
+//! Key observation: once the *set* of executed operators is fixed, the live
+//! memory is fixed too (a tensor is live iff its producer ran and some
+//! consumer didn't), regardless of the order within the prefix. The search
+//! therefore memoises on the executed set: reaching the same set again with
+//! an equal-or-worse prefix peak is pruned. Combined with incumbent pruning
+//! (seeded by LESCEA) and greedy child ordering this solves the ≤ 64-op
+//! leaves produced by `node_limit` in microseconds-to-milliseconds.
+//!
+//! The same optimisation problem is also formulated as an ILP in
+//! [`crate::ilp::order_ilp`] (the paper's §IV-D formulation); the two
+//! solvers cross-validate each other in the test suite.
+
+use super::lescea::lescea_order;
+use super::sim::theoretical_peak;
+use super::Schedule;
+use crate::graph::{Graph, OpId};
+use crate::util::timer::Deadline;
+use std::collections::HashMap;
+
+/// Result of a branch-and-bound ordering run.
+#[derive(Clone, Debug)]
+pub struct BnbResult {
+    pub order: Vec<OpId>,
+    pub peak: u64,
+    /// True when the search space was exhausted (proved optimal); false if
+    /// the deadline or node budget cut the run short (best incumbent).
+    pub proved_optimal: bool,
+    pub nodes_explored: u64,
+}
+
+/// Configuration for the exact scheduler.
+#[derive(Clone, Debug)]
+pub struct BnbCfg {
+    pub deadline: Deadline,
+    /// Hard cap on search nodes (backstop against adversarial leaves).
+    pub max_nodes: u64,
+}
+
+impl Default for BnbCfg {
+    fn default() -> Self {
+        BnbCfg {
+            deadline: Deadline::unlimited(),
+            max_nodes: 4_000_000,
+        }
+    }
+}
+
+/// Find a minimum-theoretical-peak single-stream order for `g`.
+///
+/// Graphs with more than 128 ops fall back to the LESCEA order (callers —
+/// the planner's subgraph-tree leaves — are kept below `node_limit` ≤ 128).
+pub fn min_peak_order(g: &Graph, cfg: &BnbCfg) -> BnbResult {
+    let n = g.n_ops();
+    // Incumbent: best of LESCEA and program order.
+    let mut best_order = lescea_order(g);
+    let mut best_peak = theoretical_peak(g, &Schedule::from_order(&best_order));
+    let po = crate::graph::topo::program_order(g);
+    let pp = theoretical_peak(g, &Schedule::from_order(&po));
+    if pp < best_peak {
+        best_peak = pp;
+        best_order = po;
+    }
+    if n == 0 || n > 128 {
+        return BnbResult {
+            order: best_order,
+            peak: best_peak,
+            proved_optimal: n == 0,
+            nodes_explored: 0,
+        };
+    }
+
+    // Cheap lower bound: every op must hold its distinct dynamic inputs
+    // plus all its outputs at its own timestep. If an incumbent already
+    // meets it, skip the search (common for conv/matmul-dominated leaves).
+    let lb = ordering_lower_bound(g);
+    if best_peak <= lb {
+        return BnbResult {
+            order: best_order,
+            peak: best_peak,
+            proved_optimal: true,
+            nodes_explored: 0,
+        };
+    }
+
+    let mut s = Search::new(g, cfg.clone(), best_peak, best_order);
+    s.dfs();
+    BnbResult {
+        order: s.best_order,
+        peak: s.best_peak,
+        proved_optimal: !s.cut_short,
+        nodes_explored: s.nodes,
+    }
+}
+
+/// Max over ops of the op's own footprint (distinct dynamic inputs +
+/// dynamic outputs) — a valid lower bound on any order's peak.
+pub fn ordering_lower_bound(g: &Graph) -> u64 {
+    let mut lb = 0u64;
+    for op in &g.ops {
+        let mut fp = 0u64;
+        for (i, &t) in op.inputs.iter().enumerate() {
+            if op.inputs[..i].contains(&t) {
+                continue;
+            }
+            if !g.tensors[t].class.is_persistent() {
+                fp += g.tensors[t].size;
+            }
+        }
+        for &t in &op.outputs {
+            if !g.tensors[t].class.is_persistent() {
+                fp += g.tensors[t].size;
+            }
+        }
+        lb = lb.max(fp);
+    }
+    lb
+}
+
+struct Search<'a> {
+    g: &'a Graph,
+    cfg: BnbCfg,
+    preds: Vec<Vec<OpId>>,
+    succs: Vec<Vec<OpId>>,
+    /// remaining[t]: outstanding consumer count of tensor t.
+    remaining: Vec<usize>,
+    indeg: Vec<usize>,
+    executed: u128,
+    live: u64,
+    prefix: Vec<OpId>,
+    prefix_peak: u64,
+    best_peak: u64,
+    best_order: Vec<OpId>,
+    /// executed-set → lowest prefix peak seen.
+    memo: HashMap<u128, u64>,
+    nodes: u64,
+    cut_short: bool,
+}
+
+impl<'a> Search<'a> {
+    fn new(g: &'a Graph, cfg: BnbCfg, best_peak: u64, best_order: Vec<OpId>) -> Self {
+        let (preds, succs) = g.adjacency();
+        let indeg = preds.iter().map(|p| p.len()).collect();
+        let remaining: Vec<usize> = g.tensors.iter().map(|t| t.consumers.len()).collect();
+        // Initial live set: dynamic graph inputs (producer = None).
+        let live = g
+            .tensors
+            .iter()
+            .filter(|t| t.producer.is_none() && !t.class.is_persistent())
+            .map(|t| t.size)
+            .sum();
+        Search {
+            g,
+            cfg,
+            preds,
+            succs,
+            remaining,
+            indeg,
+            executed: 0,
+            live,
+            prefix: Vec::with_capacity(g.n_ops()),
+            prefix_peak: live,
+            best_peak,
+            best_order,
+            memo: HashMap::new(),
+            nodes: 0,
+            cut_short: false,
+        }
+    }
+
+    /// Memory at the timestep `v` executes, and the live delta after it.
+    fn step_effect(&self, v: OpId) -> (u64, i64) {
+        let g = self.g;
+        let mut outs = 0u64;
+        let mut keep = 0i64;
+        for &t in &g.ops[v].outputs {
+            let tt = &g.tensors[t];
+            if tt.class.is_persistent() {
+                continue;
+            }
+            outs += tt.size;
+            if !tt.consumers.is_empty() || tt.is_output {
+                keep += tt.size as i64;
+            }
+        }
+        let mut freed = 0i64;
+        for (i, &t) in g.ops[v].inputs.iter().enumerate() {
+            // Count each distinct tensor once even if it appears twice.
+            if g.ops[v].inputs[..i].contains(&t) {
+                continue;
+            }
+            let tt = &g.tensors[t];
+            if tt.class.is_persistent() || tt.is_output {
+                continue;
+            }
+            let uses = g.ops[v].inputs.iter().filter(|&&x| x == t).count();
+            if self.remaining[t] == uses {
+                freed += tt.size as i64;
+            }
+        }
+        // Peak while executing v: everything previously live + all outputs.
+        (self.live + outs, keep - freed)
+    }
+
+    fn dfs(&mut self) {
+        self.nodes += 1;
+        if self.nodes > self.cfg.max_nodes
+            || (self.nodes & 0x3FF == 0 && self.cfg.deadline.expired())
+        {
+            self.cut_short = true;
+            return;
+        }
+        let n = self.g.n_ops();
+        if self.prefix.len() == n {
+            if self.prefix_peak < self.best_peak {
+                self.best_peak = self.prefix_peak;
+                self.best_order = self.prefix.clone();
+            }
+            return;
+        }
+        // Memoised dominance check.
+        match self.memo.get(&self.executed) {
+            Some(&p) if p <= self.prefix_peak => return,
+            _ => {
+                self.memo.insert(self.executed, self.prefix_peak);
+            }
+        }
+
+        // Ready ops, greedily ordered by their step memory (small first).
+        let mut ready: Vec<(u64, i64, OpId)> = (0..n)
+            .filter(|&v| self.executed & (1u128 << v) == 0 && self.indeg[v] == 0)
+            .map(|v| {
+                let (at, delta) = self.step_effect(v);
+                (at, delta, v)
+            })
+            .collect();
+        ready.sort_by_key(|&(at, delta, v)| (at, delta, v));
+
+        for (at_mem, _delta, v) in ready {
+            let new_peak = self.prefix_peak.max(at_mem);
+            if new_peak >= self.best_peak {
+                // Children are sorted by at_mem: all later ones are ≥ too,
+                // but their *future* could differ... no: new_peak only grows
+                // with at_mem, so every later child is also pruned.
+                break;
+            }
+            self.apply(v);
+            let saved_peak = self.prefix_peak;
+            self.prefix_peak = new_peak;
+            self.dfs();
+            self.prefix_peak = saved_peak;
+            self.undo(v);
+            if self.cut_short {
+                return;
+            }
+        }
+    }
+
+    fn apply(&mut self, v: OpId) {
+        self.executed |= 1u128 << v;
+        self.prefix.push(v);
+        for &s in &self.succs[v] {
+            self.indeg[s] -= 1;
+        }
+        let g = self.g;
+        for &t in &g.ops[v].outputs {
+            let tt = &g.tensors[t];
+            if !tt.class.is_persistent() && (!tt.consumers.is_empty() || tt.is_output) {
+                self.live += tt.size;
+            }
+        }
+        for &t in &g.ops[v].inputs {
+            self.remaining[t] -= 1;
+        }
+        // Free tensors whose consumers are all done.
+        for (i, &t) in g.ops[v].inputs.iter().enumerate() {
+            if g.ops[v].inputs[..i].contains(&t) {
+                continue;
+            }
+            let tt = &g.tensors[t];
+            if tt.class.is_persistent() || tt.is_output {
+                continue;
+            }
+            if self.remaining[t] == 0 {
+                self.live -= tt.size;
+            }
+        }
+    }
+
+    fn undo(&mut self, v: OpId) {
+        let g = self.g;
+        for (i, &t) in g.ops[v].inputs.iter().enumerate() {
+            if g.ops[v].inputs[..i].contains(&t) {
+                continue;
+            }
+            let tt = &g.tensors[t];
+            if tt.class.is_persistent() || tt.is_output {
+                continue;
+            }
+            if self.remaining[t] == 0 {
+                self.live += tt.size;
+            }
+        }
+        for &t in &g.ops[v].inputs {
+            self.remaining[t] += 1;
+        }
+        for &t in &g.ops[v].outputs {
+            let tt = &g.tensors[t];
+            if !tt.class.is_persistent() && (!tt.consumers.is_empty() || tt.is_output) {
+                self.live -= tt.size;
+            }
+        }
+        for &s in &self.succs[v] {
+            self.indeg[s] += 1;
+        }
+        self.prefix.pop();
+        self.executed &= !(1u128 << v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::random::{random_training_graph, RandomGraphCfg};
+    use crate::graph::topo::is_topological;
+    use crate::graph::{Graph, OpKind, Phase, TensorClass};
+    use crate::util::quick::forall;
+
+    #[test]
+    fn beats_program_order_on_fig2() {
+        // Same structure as the paper's Fig 2: two parallel branches, one
+        // heavy one light; the exact solver must schedule the freeing
+        // branch first.
+        const MB: u64 = 1 << 20;
+        let mut g = Graph::new("fig2");
+        let x = g.add_input_tensor("x", MB, TensorClass::Input);
+        let (_, a) = g.add_op("A", OpKind::Other, Phase::Forward, &[x], &[
+            ("tA", 60 * MB, TensorClass::Activation),
+            ("t0", 10 * MB, TensorClass::Activation),
+        ]);
+        let (_, b) = g.add_op("B", OpKind::Other, Phase::Forward, &[a[1]], &[
+            ("tB", 30 * MB, TensorClass::Activation),
+        ]);
+        let (_, c) = g.add_op("C", OpKind::Other, Phase::Forward, &[a[0]], &[
+            ("tC", 5 * MB, TensorClass::Activation),
+        ]);
+        let (_, d) = g.add_op("D", OpKind::Other, Phase::Forward, &[b[0], c[0]], &[
+            ("out", MB, TensorClass::Activation),
+        ]);
+        g.mark_output(d[0]);
+
+        let r = min_peak_order(&g, &BnbCfg::default());
+        assert!(r.proved_optimal);
+        assert!(is_topological(&g, &r.order));
+        // Optimal runs C (frees tA=60MB before B's 30MB allocation).
+        let naive = theoretical_peak(&g, &Schedule::from_order(&[0, 1, 2, 3]));
+        assert!(r.peak <= naive);
+    }
+
+    #[test]
+    fn optimal_never_worse_than_baselines_on_random_graphs() {
+        forall("bnb ≤ lescea and program order", 40, |rng| {
+            let fwd_ops = rng.usize_in(2, 8);
+            let g = random_training_graph(rng, &RandomGraphCfg {
+                fwd_ops,
+                ..Default::default()
+            });
+            let r = min_peak_order(&g, &BnbCfg::default());
+            if !is_topological(&g, &r.order) {
+                return Err("not topological".into());
+            }
+            // The reported peak must match the simulator's.
+            let simulated = theoretical_peak(&g, &Schedule::from_order(&r.order));
+            if simulated != r.peak {
+                return Err(format!("peak mismatch: bnb {} sim {}", r.peak, simulated));
+            }
+            let les = theoretical_peak(&g, &super::super::lescea::lescea(&g));
+            let po = theoretical_peak(
+                &g,
+                &Schedule::from_order(&crate::graph::topo::program_order(&g)),
+            );
+            if r.peak <= les && r.peak <= po {
+                Ok(())
+            } else {
+                Err(format!("bnb {} > lescea {} or program {}", r.peak, les, po))
+            }
+        });
+    }
+
+    #[test]
+    fn exhaustive_cross_check_small() {
+        // Brute-force all topological orders of a 6-op random graph and
+        // confirm bnb's optimum matches.
+        forall("bnb matches brute force", 12, |rng| {
+            let g = random_training_graph(rng, &RandomGraphCfg {
+                fwd_ops: 2,
+                ..Default::default()
+            });
+            if g.n_ops() > 9 {
+                return Ok(()); // keep brute force tiny
+            }
+            let r = min_peak_order(&g, &BnbCfg::default());
+            let brute = brute_force_min_peak(&g);
+            if r.peak == brute {
+                Ok(())
+            } else {
+                Err(format!("bnb {} brute {}", r.peak, brute))
+            }
+        });
+    }
+
+    fn brute_force_min_peak(g: &Graph) -> u64 {
+        fn rec(
+            g: &Graph,
+            succs: &[Vec<OpId>],
+            indeg: &mut [usize],
+            done: &mut Vec<bool>,
+            order: &mut Vec<OpId>,
+            best: &mut u64,
+        ) {
+            if order.len() == g.n_ops() {
+                let p = theoretical_peak(g, &Schedule::from_order(order));
+                *best = (*best).min(p);
+                return;
+            }
+            for v in 0..g.n_ops() {
+                if !done[v] && indeg[v] == 0 {
+                    done[v] = true;
+                    order.push(v);
+                    for &s in &succs[v] {
+                        indeg[s] -= 1;
+                    }
+                    rec(g, succs, indeg, done, order, best);
+                    for &s in &succs[v] {
+                        indeg[s] += 1;
+                    }
+                    order.pop();
+                    done[v] = false;
+                }
+            }
+        }
+        let (preds, succs) = g.adjacency();
+        let mut indeg: Vec<usize> = preds.iter().map(|p| p.len()).collect();
+        let mut done = vec![false; g.n_ops()];
+        let mut order = Vec::new();
+        let mut best = u64::MAX;
+        rec(g, &succs, &mut indeg, &mut done, &mut order, &mut best);
+        best
+    }
+
+    #[test]
+    fn node_budget_falls_back_to_incumbent() {
+        let mut rng = crate::util::Pcg64::new(11);
+        let g = random_training_graph(&mut rng, &RandomGraphCfg {
+            fwd_ops: 14,
+            ..Default::default()
+        });
+        let r = min_peak_order(&g, &BnbCfg {
+            max_nodes: 10,
+            ..Default::default()
+        });
+        assert!(is_topological(&g, &r.order));
+        assert!(!r.proved_optimal);
+    }
+
+    #[test]
+    fn oversized_graph_falls_back() {
+        let mut rng = crate::util::Pcg64::new(3);
+        let g = random_training_graph(&mut rng, &RandomGraphCfg {
+            fwd_ops: 60, // > 128 total ops
+            ..Default::default()
+        });
+        assert!(g.n_ops() > 128);
+        let r = min_peak_order(&g, &BnbCfg::default());
+        assert!(is_topological(&g, &r.order));
+        assert!(!r.proved_optimal);
+    }
+}

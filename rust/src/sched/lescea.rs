@@ -1,0 +1,158 @@
+//! LESCEA-style greedy scheduling baseline (Han et al., DAC'06; §V-A).
+//!
+//! At every step, among the *ready* operators pick the one whose execution
+//! yields the least memory increase (newly allocated outputs minus inputs
+//! freed by their last consumer). The paper notes XLA's default ordering
+//! heuristic follows the same principle and that it "struggles to handle
+//! scenarios with diverse tensor sizes" (§V-B) — which our Fig-12 bench
+//! reproduces.
+
+use super::Schedule;
+use crate::graph::{Graph, OpId};
+
+/// Greedy least-memory-increase topological order.
+pub fn lescea_order(g: &Graph) -> Vec<OpId> {
+    let (preds, succs) = g.adjacency();
+    let n = g.n_ops();
+    let mut indeg: Vec<usize> = preds.iter().map(|p| p.len()).collect();
+    // Remaining consumer count per tensor: when it hits 0 the tensor frees.
+    let mut remaining: Vec<usize> = g.tensors.iter().map(|t| t.consumers.len()).collect();
+    let mut ready: Vec<OpId> = (0..n).filter(|&v| indeg[v] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+
+    while !ready.is_empty() {
+        // Score each ready op by its memory delta.
+        let mut best_i = 0usize;
+        let mut best_delta = i64::MAX;
+        for (i, &v) in ready.iter().enumerate() {
+            let delta = mem_delta(g, v, &remaining);
+            // Tie-break by op id for determinism (matches definition order).
+            if delta < best_delta || (delta == best_delta && v < ready[best_i]) {
+                best_delta = delta;
+                best_i = i;
+            }
+        }
+        let v = ready.swap_remove(best_i);
+        order.push(v);
+        // Account consumption.
+        for &t in &g.ops[v].inputs {
+            remaining[t] -= 1;
+        }
+        for &s in &succs[v] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                ready.push(s);
+            }
+        }
+    }
+    assert_eq!(order.len(), n, "graph has a cycle");
+    order
+}
+
+/// Memory delta of running `v` now: +outputs (non-persistent), −inputs
+/// whose last outstanding consumer is `v` (and which are not outputs).
+fn mem_delta(g: &Graph, v: OpId, remaining: &[usize]) -> i64 {
+    let mut d = 0i64;
+    for &t in &g.ops[v].outputs {
+        if !g.tensors[t].class.is_persistent() {
+            d += g.tensors[t].size as i64;
+        }
+    }
+    for &t in &g.ops[v].inputs {
+        let tt = &g.tensors[t];
+        if tt.class.is_persistent() || tt.is_output {
+            continue;
+        }
+        // How many times does v consume t? (usually once)
+        let uses = g.ops[v].inputs.iter().filter(|&&x| x == t).count();
+        if remaining[t] == uses {
+            d -= tt.size as i64;
+        }
+    }
+    d
+}
+
+/// Convenience: LESCEA as a [`Schedule`].
+pub fn lescea(g: &Graph) -> Schedule {
+    Schedule::from_order(&lescea_order(g))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topo::is_topological;
+    use crate::graph::random::{random_training_graph, RandomGraphCfg};
+    use crate::graph::{Graph, OpKind, Phase, TensorClass};
+    use crate::sched::sim::theoretical_peak;
+    use crate::sched::Schedule;
+    use crate::util::quick::forall;
+
+    #[test]
+    fn prefers_memory_freeing_branch() {
+        // A emits big tensor for D and small for B; B->C frees the small
+        // chain. LESCEA should run the freeing chain before idling on big
+        // allocations. Build: A -> big(100)->D, A -> s(10)->B, B -> s2(5)->C,
+        // C -> s3(1) -> D.
+        let mut g = Graph::new("t");
+        let x = g.add_input_tensor("x", 1, TensorClass::Input);
+        let (_, a) = g.add_op("A", OpKind::Other, Phase::Forward, &[x], &[
+            ("big", 100, TensorClass::Activation),
+            ("s", 10, TensorClass::Activation),
+        ]);
+        let (_, b) = g.add_op("B", OpKind::Other, Phase::Forward, &[a[1]], &[
+            ("s2", 5, TensorClass::Activation),
+        ]);
+        let (_, c) = g.add_op("C", OpKind::Other, Phase::Forward, &[b[0]], &[
+            ("s3", 1, TensorClass::Activation),
+        ]);
+        g.add_op("D", OpKind::Other, Phase::Forward, &[a[0], c[0]], &[
+            ("out", 1, TensorClass::Activation),
+        ]);
+        let o = lescea_order(&g);
+        assert!(is_topological(&g, &o));
+        assert_eq!(o, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn always_topological_on_random_graphs() {
+        forall("lescea is topological", 60, |rng| {
+            let fwd_ops = rng.usize_in(2, 15);
+            let g = random_training_graph(rng, &RandomGraphCfg {
+                fwd_ops,
+                ..Default::default()
+            });
+            let o = lescea_order(&g);
+            if is_topological(&g, &o) {
+                Ok(())
+            } else {
+                Err("non-topological order".into())
+            }
+        });
+    }
+
+    #[test]
+    fn no_worse_than_pathological_program_order() {
+        // On a graph designed so program order is bad, LESCEA should win.
+        // Chain of k branches each emitting a large tensor consumed late.
+        let mut g = Graph::new("p");
+        let x = g.add_input_tensor("x", 1, TensorClass::Input);
+        let mut lates = Vec::new();
+        // Program order lists all producers first, consumers last.
+        for i in 0..4 {
+            let (_, t) = g.add_op(format!("prod{i}"), OpKind::Other, Phase::Forward,
+                &[x], &[("big", 50, TensorClass::Activation)]);
+            lates.push(t[0]);
+        }
+        for (i, &t) in lates.iter().enumerate() {
+            let (_, o) = g.add_op(format!("cons{i}"), OpKind::Other, Phase::Forward,
+                &[t], &[("small", 1, TensorClass::Activation)]);
+            g.mark_output(o[0]);
+        }
+        let po = crate::graph::topo::program_order(&g);
+        let lo = lescea_order(&g);
+        let pp = theoretical_peak(&g, &Schedule::from_order(&po));
+        let lp = theoretical_peak(&g, &Schedule::from_order(&lo));
+        assert!(lp <= pp, "lescea {lp} vs program {pp}");
+        assert!(lp < 150, "lescea should interleave producers/consumers");
+    }
+}

@@ -1,0 +1,89 @@
+//! Operator scheduling: theoretical-peak simulation, baseline orders,
+//! exact solvers and the memory-aware weight-update scheduler.
+//!
+//! The *theoretical peak memory* `Tp(G, s)` of a schedule `s` is the
+//! maximum over timesteps of the total size of live dynamic tensors
+//! (§III-B). Schedules come in two flavours (§V-A):
+//!
+//! * **single-streaming (SS)** — a permutation of the operators, one per
+//!   timestep (what a single-GPU execution engine actually runs);
+//! * **multi-streaming (MS)** — a timestep assignment where several ops may
+//!   share a timestep (MODeL's native formulation; a relaxation of SS).
+//!
+//! Both are represented as a timestep-per-op vector ([`Schedule`]); SS
+//! schedules are bijective assignments.
+
+pub mod bnb;
+pub mod lescea;
+pub mod sim;
+pub mod weight_update;
+
+use crate::graph::OpId;
+
+/// A schedule: `ts[op]` = the discrete timestep at which `op` executes.
+/// For single-stream schedules this is a permutation (see
+/// [`crate::graph::liveness::order_to_timesteps`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Schedule {
+    pub ts: Vec<usize>,
+}
+
+impl Schedule {
+    /// From a single-stream order (permutation of op ids).
+    pub fn from_order(order: &[OpId]) -> Schedule {
+        Schedule {
+            ts: crate::graph::liveness::order_to_timesteps(order),
+        }
+    }
+
+    /// Recover an execution order: ops sorted by timestep (stable by id
+    /// within a shared timestep).
+    pub fn to_order(&self) -> Vec<OpId> {
+        let mut ids: Vec<OpId> = (0..self.ts.len()).collect();
+        ids.sort_by_key(|&v| (self.ts[v], v));
+        ids
+    }
+
+    /// Is this a valid single-stream schedule (bijective)?
+    pub fn is_single_stream(&self) -> bool {
+        let n = self.ts.len();
+        let mut seen = vec![false; n];
+        self.ts.iter().all(|&t| {
+            if t < n && !seen[t] {
+                seen[t] = true;
+                true
+            } else {
+                false
+            }
+        })
+    }
+
+    /// Number of timesteps used.
+    pub fn horizon(&self) -> usize {
+        self.ts.iter().copied().max().map(|m| m + 1).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn order_roundtrip() {
+        let s = Schedule::from_order(&[2, 0, 1]);
+        assert_eq!(s.ts, vec![1, 2, 0]);
+        assert_eq!(s.to_order(), vec![2, 0, 1]);
+        assert!(s.is_single_stream());
+        assert_eq!(s.horizon(), 3);
+    }
+
+    #[test]
+    fn multi_stream_detected() {
+        let s = Schedule {
+            ts: vec![0, 0, 1],
+        };
+        assert!(!s.is_single_stream());
+        assert_eq!(s.horizon(), 2);
+        assert_eq!(s.to_order(), vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,393 @@
+//! Memory-aware scheduler for weight-update branches (§IV-A, eqs. 4–6).
+//!
+//! Weight updates are the flexibly-schedulable part of a training graph:
+//! once `dw` exists, the optimizer branch can run immediately or at any
+//! later point. Running it immediately while most activations are still
+//! resident adds `α · size_grad` of temporaries on top of an already-high
+//! load (Fig 7a); delaying it too long keeps every gradient alive (Fig 7b).
+//!
+//! The paper's strategy, implemented here literally:
+//!
+//! 1. `esti_pm = Σ size(activations)`                         (eq. 4)
+//! 2. `mem_atvs_t = Σ is_alive(e, t) · size(e)` where `is_alive` comes from
+//!    ASAP/ALAP bounds derived from transitive pred/succ counts   (eq. 5)
+//! 3. `mem_used_t = mem_atvs_t + α · size_grad`               (eq. 6)
+//! 4. delay iff `size_grad / avg_tensor_size > r` **and**
+//!    `mem_used_t > esti_pm`; the branch is then assigned to the earliest
+//!    later segment whose estimated load fits, bounded by the end of the
+//!    backward pass.
+//!
+//! The assignment is materialised as *control edges* (1-byte control
+//! tensors) added to the graph, which downstream segment formation and the
+//! leaf solvers then respect.
+
+use crate::graph::{Graph, OpId, OpKind, Phase, Reachability, TensorClass};
+
+/// Optimizer-dependent temporary layering coefficient α (Fig 6: Adam's
+/// update branch packs into 3 layers; SGD needs 1).
+pub fn alpha_for(g: &Graph) -> u64 {
+    let has_opt_state = g
+        .tensors
+        .iter()
+        .any(|t| t.class == TensorClass::OptState);
+    if has_opt_state {
+        3
+    } else {
+        1
+    }
+}
+
+/// Configuration for the weight-update scheduler.
+#[derive(Clone, Debug)]
+pub struct WuCfg {
+    /// Delay radius `r`: minimum grad-size/avg-size ratio to consider
+    /// delaying (the paper determines it empirically; default 2.0,
+    /// ablated in `benches/abl_delay_radius.rs`).
+    pub delay_radius: f64,
+    /// Override α (None = derive from optimizer state presence).
+    pub alpha: Option<u64>,
+}
+
+impl Default for WuCfg {
+    fn default() -> Self {
+        WuCfg {
+            delay_radius: 2.0,
+            alpha: None,
+        }
+    }
+}
+
+/// One weight-update branch: the ops updating a single parameter.
+#[derive(Clone, Debug)]
+pub struct UpdateBranch {
+    pub ops: Vec<OpId>,
+    /// The gradient tensor feeding the branch.
+    pub grad: usize,
+    /// Earliest single-stream timestep the branch could start (ASAP of its
+    /// first op).
+    pub ready: usize,
+}
+
+/// Outcome of the assignment pass.
+#[derive(Clone, Debug)]
+pub struct WuAssignment {
+    /// Control edges `(before, after)` to add to the graph.
+    pub control_edges: Vec<(OpId, OpId)>,
+    pub delayed: usize,
+    pub total: usize,
+}
+
+/// Discover the update branches of a training graph: for every
+/// `OptimStep` op, its transitive predecessors within the Update phase.
+pub fn update_branches(g: &Graph, reach: &Reachability) -> Vec<UpdateBranch> {
+    let mut branches = Vec::new();
+    for op in &g.ops {
+        if op.kind != OpKind::OptimStep || op.phase != Phase::Update {
+            continue;
+        }
+        let mut ops: Vec<OpId> = reach.above[op.id]
+            .iter()
+            .filter(|&p| g.ops[p].phase == Phase::Update)
+            .collect();
+        ops.push(op.id);
+        ops.sort_unstable();
+        // The gradient is the largest Gradient-class tensor consumed from
+        // outside the branch.
+        let grad = ops
+            .iter()
+            .flat_map(|&o| g.ops[o].inputs.iter().copied())
+            .filter(|&t| g.tensors[t].class == TensorClass::Gradient)
+            .max_by_key(|&t| g.tensors[t].size);
+        let Some(grad) = grad else { continue };
+        let ready = ops.iter().map(|&o| reach.asap(o)).min().unwrap_or(0);
+        branches.push(UpdateBranch { ops, grad, ready });
+    }
+    branches
+}
+
+/// Estimated activation load at timestep `t` (eq. 5): sum of activations
+/// that *may* be alive, from ASAP/ALAP windows.
+pub struct ActivationLoad {
+    /// (window_start, window_end, size) per activation.
+    windows: Vec<(usize, usize, u64)>,
+    /// Σ activation sizes — `esti_pm` (eq. 4).
+    pub esti_pm: u64,
+}
+
+impl ActivationLoad {
+    pub fn compute(g: &Graph, reach: &Reachability) -> ActivationLoad {
+        let n = g.n_ops();
+        let mut windows = Vec::new();
+        let mut esti_pm = 0u64;
+        for t in &g.tensors {
+            if t.class != TensorClass::Activation {
+                continue;
+            }
+            esti_pm += t.size;
+            let start = t.producer.map(|p| reach.asap(p)).unwrap_or(0);
+            let end = t
+                .consumers
+                .iter()
+                .map(|&c| reach.alap(c))
+                .max()
+                .unwrap_or(n.saturating_sub(1));
+            windows.push((start, end, t.size));
+        }
+        ActivationLoad { windows, esti_pm }
+    }
+
+    /// `mem_atvs_t` (eq. 5).
+    pub fn at(&self, t: usize) -> u64 {
+        self.windows
+            .iter()
+            .filter(|&&(s, e, _)| s <= t && t <= e)
+            .map(|&(_, _, sz)| sz)
+            .sum()
+    }
+
+    /// Precomputed `mem_atvs_t` for every timestep (diff-array sweep) —
+    /// O(n) build, O(1) query; the per-branch anchor search on GPT2-XL
+    /// makes millions of queries.
+    pub fn table(&self, n: usize) -> Vec<u64> {
+        let mut delta = vec![0i64; n + 1];
+        for &(s, e, sz) in &self.windows {
+            if s < n {
+                delta[s] += sz as i64;
+                delta[(e + 1).min(n)] -= sz as i64;
+            }
+        }
+        let mut out = Vec::with_capacity(n);
+        let mut cur = 0i64;
+        for d in delta.iter().take(n) {
+            cur += d;
+            out.push(cur as u64);
+        }
+        out
+    }
+}
+
+/// Run the paper's assignment strategy.
+///
+/// `boundaries` are memory-insensitive operators in precedence order (from
+/// [`crate::segments`]); a delayed branch is re-anchored after the first
+/// boundary whose estimated load fits.
+pub fn assign_weight_updates(
+    g: &Graph,
+    reach: &Reachability,
+    boundaries: &[OpId],
+    cfg: &WuCfg,
+) -> WuAssignment {
+    let branches = update_branches(g, reach);
+    let total = branches.len();
+    if total == 0 {
+        return WuAssignment {
+            control_edges: Vec::new(),
+            delayed: 0,
+            total: 0,
+        };
+    }
+    let load = ActivationLoad::compute(g, reach);
+    let alpha = cfg.alpha.unwrap_or_else(|| alpha_for(g));
+
+    // Average dynamic tensor size (denominator of the delay-radius test).
+    let (mut sum, mut cnt) = (0u64, 0u64);
+    for t in &g.tensors {
+        if !t.class.is_persistent() {
+            sum += t.size;
+            cnt += 1;
+        }
+    }
+    let avg = (sum / cnt.max(1)).max(1);
+
+    // Precompute the load table and the boundary list sorted by ASAP; the
+    // per-branch scans below are then O(log B + radius) instead of
+    // O(B · activations) — the difference between minutes and milliseconds
+    // on GPT2-XL (EXPERIMENTS.md §Perf).
+    let n = g.n_ops();
+    let load_tab = load.table(n);
+    let mut bsorted: Vec<(usize, OpId)> =
+        boundaries.iter().map(|&b| (reach.asap(b), b)).collect();
+    bsorted.sort_unstable();
+
+    let mut control_edges = Vec::new();
+    let mut delayed = 0usize;
+    for br in &branches {
+        let size_grad = g.tensors[br.grad].size;
+        let t = br.ready;
+        let mem_used_t = load_tab.get(t).copied().unwrap_or(0) + alpha * size_grad;
+        let ratio = size_grad as f64 / avg as f64;
+        let should_delay = ratio > cfg.delay_radius && mem_used_t > load.esti_pm;
+        let first_op = br.ops[0];
+        // Sink of the branch (the OptimStep op).
+        let sink = *br.ops.last().unwrap();
+
+        // Boundaries strictly after the ready time (binary search on ASAP).
+        let start = bsorted.partition_point(|&(a, _)| a <= t);
+        let later = &bsorted[start..];
+
+        // Opening anchor: delayed branches start after the first boundary
+        // whose estimated load fits (eq. 6 test), else the latest one.
+        if should_delay {
+            let anchor = later
+                .iter()
+                .find(|&&(a, b)| {
+                    !reach.precedes(first_op, b)
+                        && load_tab.get(a).copied().unwrap_or(0) + alpha * size_grad
+                            <= load.esti_pm
+                })
+                .or_else(|| later.iter().rev().find(|&&(_, b)| !reach.precedes(first_op, b)))
+                .map(|&(_, b)| b);
+            if let Some(b) = anchor {
+                delayed += 1;
+                control_edges.push((b, first_op));
+            }
+        }
+        // Closing anchor: every branch is contained before the next legal
+        // boundary after its (possibly delayed) start — this is what makes
+        // the backward candidate boundaries memory-insensitive again in
+        // the augmented graph, so Algorithm 1 can pair fwd/bwd segments.
+        let start_asap = if should_delay {
+            // After delaying, the branch starts after its opening anchor.
+            control_edges
+                .last()
+                .map(|&(b, _)| reach.asap(b))
+                .unwrap_or(t)
+        } else {
+            t
+        };
+        let close = bsorted
+            .iter()
+            .skip(bsorted.partition_point(|&(a, _)| a <= start_asap))
+            .find(|&&(_, b)| !reach.precedes(b, sink))
+            .map(|&(_, b)| b);
+        if let Some(c) = close {
+            control_edges.push((sink, c));
+        }
+    }
+    WuAssignment {
+        control_edges,
+        delayed,
+        total,
+    }
+}
+
+/// Materialise control edges as 1-byte control tensors. Edges that would
+/// create a cycle (checked against `reach`) are skipped defensively.
+pub fn apply_control_edges(g: &Graph, reach: &Reachability, edges: &[(OpId, OpId)]) -> Graph {
+    let mut out = g.clone();
+    for &(a, b) in edges {
+        if a == b || reach.precedes(b, a) {
+            continue; // would create a cycle
+        }
+        let tid = out.tensors.len();
+        out.tensors.push(crate::graph::Tensor {
+            id: tid,
+            name: format!("ctrl_{a}_{b}"),
+            size: 1,
+            producer: Some(a),
+            consumers: vec![b],
+            class: TensorClass::TempBuffer,
+            is_output: false,
+        });
+        out.ops[a].outputs.push(tid);
+        out.ops[b].inputs.push(tid);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::random::{random_training_graph, RandomGraphCfg};
+    use crate::graph::validate::validate;
+    use crate::models::{self, BuildCfg, ModelKind};
+    use crate::util::quick::forall;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn finds_branches_on_random_graphs() {
+        let mut rng = Pcg64::new(5);
+        let g = random_training_graph(&mut rng, &RandomGraphCfg::default());
+        let reach = Reachability::compute(&g);
+        let branches = update_branches(&g, &reach);
+        assert!(!branches.is_empty());
+        for br in &branches {
+            // Adam branches are 6 ops in the builder, 4 in random graphs.
+            assert!((1..=8).contains(&br.ops.len()));
+            assert_eq!(g.tensors[br.grad].class, TensorClass::Gradient);
+        }
+    }
+
+    #[test]
+    fn alpha_detects_optimizer() {
+        let mut rng = Pcg64::new(6);
+        let adam = random_training_graph(&mut rng, &RandomGraphCfg { adam: true, ..Default::default() });
+        let sgd = random_training_graph(&mut rng, &RandomGraphCfg { adam: false, ..Default::default() });
+        assert_eq!(alpha_for(&adam), 3);
+        assert_eq!(alpha_for(&sgd), 1);
+    }
+
+    #[test]
+    fn esti_pm_matches_eq4() {
+        let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
+        let reach = Reachability::compute(&g);
+        let load = ActivationLoad::compute(&g, &reach);
+        assert_eq!(load.esti_pm, g.activation_bytes());
+        // Load at any t is bounded by esti_pm.
+        for t in [0, g.n_ops() / 2, g.n_ops() - 1] {
+            assert!(load.at(t) <= load.esti_pm);
+        }
+    }
+
+    #[test]
+    fn control_edges_preserve_acyclicity() {
+        forall("control edges keep graphs valid", 30, |rng| {
+            let fwd_ops = rng.usize_in(3, 12);
+            let g = random_training_graph(rng, &RandomGraphCfg {
+                fwd_ops,
+                ..Default::default()
+            });
+            let reach = Reachability::compute(&g);
+            // Use a handful of pseudo-boundaries: memory-insensitive ops.
+            let boundaries: Vec<OpId> = (0..g.n_ops())
+                .filter(|&v| reach.is_memory_insensitive(v))
+                .collect();
+            let asg = assign_weight_updates(&g, &reach, &boundaries, &WuCfg::default());
+            let g2 = apply_control_edges(&g, &reach, &asg.control_edges);
+            let defects: Vec<_> = validate(&g2)
+                .into_iter()
+                // control tensors are 1 byte, not zero-size; all defects count.
+                .collect();
+            if defects.is_empty() {
+                Ok(())
+            } else {
+                Err(format!("{defects:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn delaying_respects_radius() {
+        let mut rng = Pcg64::new(9);
+        let g = random_training_graph(&mut rng, &RandomGraphCfg {
+            fwd_ops: 10,
+            max_size: 1 << 20,
+            ..Default::default()
+        });
+        let reach = Reachability::compute(&g);
+        let boundaries: Vec<OpId> = (0..g.n_ops())
+            .filter(|&v| reach.is_memory_insensitive(v))
+            .collect();
+        // With an enormous radius nothing is ever delayed.
+        let asg = assign_weight_updates(
+            &g,
+            &reach,
+            &boundaries,
+            &WuCfg {
+                delay_radius: 1e18,
+                alpha: None,
+            },
+        );
+        assert_eq!(asg.delayed, 0);
+    }
+}

@@ -1,0 +1,244 @@
+//! Graph division: memory-insensitive operators, independent segments and
+//! the subgraph tree (§IV-A, §IV-C).
+//!
+//! * A **memory-insensitive operator** has the same scheduling timestep in
+//!   every topological order — formally, it is comparable with every other
+//!   operator (`|pred*| + |succ*| = n − 1`). These ops are the graph's
+//!   natural cut points.
+//! * An **independent segment** is the set of operators strictly between
+//!   two consecutive memory-insensitive boundaries; its internal order is
+//!   the only scheduling freedom (eq. 1/2), so leaves can be optimised
+//!   independently and concatenated (eq. 3).
+//! * For layout, forward segments pair with their corresponding backward
+//!   segments into nested **windows** (independent subgraphs, §IV-B/C):
+//!   window `k` spans boundary `k` to boundary `m−k` in execution time.
+//!   Every tensor is assigned to the innermost window containing its
+//!   lifetime; tensors spanning the next-inner window are the "long-lived
+//!   activations" stacked at the bottom of each sub-layout (Fig 5).
+//!
+//! [`tree`] implements Algorithm 1: independent-subgraph generation plus
+//! `node_limit`-driven split-down into dependent subgraphs.
+
+pub mod tree;
+
+use crate::graph::{Graph, OpId, Reachability};
+
+/// Memory-insensitive operators in precedence (= ASAP) order.
+pub fn boundaries(g: &Graph, reach: &Reachability) -> Vec<OpId> {
+    let mut b: Vec<OpId> = (0..g.n_ops())
+        .filter(|&v| reach.is_memory_insensitive(v))
+        .collect();
+    b.sort_by_key(|&v| reach.asap(v));
+    b
+}
+
+/// Memory-insensitive operators of the fwd/loss/bwd core, *ignoring the
+/// weight-update branches* (§IV-A): update branches are mutually
+/// incomparable and would otherwise destroy every backward boundary —
+/// "we can find memory-insensitive operators in the backward pass that
+/// correspond to memory-insensitive operators in the forward pass". The
+/// weight-update scheduler then anchors each update branch between two of
+/// these candidate boundaries, restoring their insensitivity in the
+/// augmented graph.
+///
+/// Update ops are pure sinks (their outputs are only graph outputs), so
+/// comparability among core ops in the full graph equals comparability in
+/// the core subgraph — we just mask the counts.
+pub fn boundaries_core(g: &Graph, reach: &Reachability) -> Vec<OpId> {
+    use crate::util::BitSet;
+    let n = g.n_ops();
+    let mut core_mask = BitSet::new(n);
+    let mut n_core = 0usize;
+    for op in &g.ops {
+        if op.phase != crate::graph::Phase::Update {
+            core_mask.set(op.id);
+            n_core += 1;
+        }
+    }
+    if n_core == 0 {
+        return Vec::new();
+    }
+    let mut b: Vec<OpId> = (0..n)
+        .filter(|&v| {
+            core_mask.get(v)
+                && reach.above[v].count_and(&core_mask) + reach.below[v].count_and(&core_mask)
+                    == n_core - 1
+        })
+        .collect();
+    b.sort_by_key(|&v| reach.asap(v));
+    b
+}
+
+/// An independent segment: ops strictly between two boundaries.
+#[derive(Clone, Debug)]
+pub struct Segment {
+    /// Boundary op that opens the segment (`None` = graph start).
+    pub open: Option<OpId>,
+    /// Boundary op that closes the segment (`None` = graph end).
+    pub close: Option<OpId>,
+    /// The schedulable ops inside (excludes the boundaries).
+    pub ops: Vec<OpId>,
+}
+
+/// Partition all non-boundary ops into independent segments.
+///
+/// Segment membership of op `v`: the last boundary preceding `v`. Because
+/// boundaries are comparable with every op, this is well-defined; ops
+/// before the first boundary form segment 0 with `open = None`.
+pub fn segments(g: &Graph, reach: &Reachability, bounds: &[OpId]) -> Vec<Segment> {
+    let mut segs: Vec<Segment> = Vec::with_capacity(bounds.len() + 1);
+    for i in 0..=bounds.len() {
+        segs.push(Segment {
+            open: if i == 0 { None } else { Some(bounds[i - 1]) },
+            close: bounds.get(i).copied(),
+            ops: Vec::new(),
+        });
+    }
+    let is_boundary: std::collections::HashSet<OpId> = bounds.iter().copied().collect();
+    for v in 0..g.n_ops() {
+        if is_boundary.contains(&v) {
+            continue;
+        }
+        // Binary search over boundaries: the last one that precedes v.
+        // Boundaries are sorted by ASAP and mutually comparable, so
+        // "b precedes v" is monotone along the list.
+        let mut lo = 0usize; // segs index
+        let mut hi = bounds.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if reach.precedes(bounds[mid], v) {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        segs[lo].ops.push(v);
+    }
+    segs
+}
+
+/// A nested layout window (independent subgraph): boundary indices
+/// `[lo_b, hi_b]` into the boundary list; the window spans execution time
+/// from boundary `lo_b` to boundary `hi_b` and owns the forward segment
+/// after `lo_b` plus the backward segment before `hi_b`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Window {
+    pub k: usize,
+    /// Segment index of the forward part (into the `segments` vec).
+    pub fwd_seg: usize,
+    /// Segment index of the backward part.
+    pub bwd_seg: usize,
+}
+
+/// Build the nested window pairing: window k owns segments k and m−k.
+/// With `m+1` segments there are `ceil((m+1)/2)` windows; the innermost
+/// may own a single segment (when the count is odd).
+pub fn windows(n_segments: usize) -> Vec<Window> {
+    let mut out = Vec::new();
+    let mut lo = 0usize;
+    let mut hi = n_segments.saturating_sub(1);
+    let mut k = 0usize;
+    while lo <= hi && n_segments > 0 {
+        out.push(Window {
+            k,
+            fwd_seg: lo,
+            bwd_seg: hi,
+        });
+        if lo == hi {
+            break;
+        }
+        lo += 1;
+        hi -= 1;
+        k += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::random::{random_training_graph, RandomGraphCfg};
+    use crate::models::{self, BuildCfg, ModelKind};
+    use crate::util::quick::forall;
+
+    #[test]
+    fn chain_is_all_boundaries() {
+        use crate::graph::{Graph, OpKind, Phase, TensorClass};
+        let mut g = Graph::new("chain");
+        let mut prev = g.add_input_tensor("x", 1, TensorClass::Input);
+        for i in 0..6 {
+            let (_, t) = g.add_op(format!("op{i}"), OpKind::Other, Phase::Forward,
+                &[prev], &[("t", 1, TensorClass::Activation)]);
+            prev = t[0];
+        }
+        let r = Reachability::compute(&g);
+        let b = boundaries(&g, &r);
+        assert_eq!(b.len(), 6);
+        let segs = segments(&g, &r, &b);
+        assert!(segs.iter().all(|s| s.ops.is_empty()));
+    }
+
+    #[test]
+    fn segments_partition_ops() {
+        forall("segments partition non-boundary ops", 30, |rng| {
+            let fwd_ops = rng.usize_in(3, 15);
+            let g = random_training_graph(rng, &RandomGraphCfg {
+                fwd_ops,
+                ..Default::default()
+            });
+            let r = Reachability::compute(&g);
+            let b = boundaries(&g, &r);
+            let segs = segments(&g, &r, &b);
+            let total: usize = segs.iter().map(|s| s.ops.len()).sum();
+            if total + b.len() != g.n_ops() {
+                return Err(format!(
+                    "{} seg ops + {} boundaries != {} ops",
+                    total,
+                    b.len(),
+                    g.n_ops()
+                ));
+            }
+            // Each segment op must be after open and before close.
+            for s in &segs {
+                for &v in &s.ops {
+                    if let Some(o) = s.open {
+                        if !r.precedes(o, v) {
+                            return Err(format!("op {v} not after open {o}"));
+                        }
+                    }
+                    if let Some(c) = s.close {
+                        if !r.precedes(v, c) {
+                            return Err(format!("op {v} not before close {c}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn models_have_many_boundaries() {
+        let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
+        let r = Reachability::compute(&g);
+        let b = boundaries(&g, &r);
+        // The fwd trunk of AlexNet is a chain: many memory-insensitive ops.
+        assert!(b.len() > 5, "only {} boundaries", b.len());
+        let segs = segments(&g, &r, &b);
+        assert_eq!(
+            segs.iter().map(|s| s.ops.len()).sum::<usize>() + b.len(),
+            g.n_ops()
+        );
+    }
+
+    #[test]
+    fn window_pairing_nests() {
+        let w = windows(5);
+        assert_eq!(w.len(), 3);
+        assert_eq!((w[0].fwd_seg, w[0].bwd_seg), (0, 4));
+        assert_eq!((w[1].fwd_seg, w[1].bwd_seg), (1, 3));
+        assert_eq!((w[2].fwd_seg, w[2].bwd_seg), (2, 2));
+        assert_eq!(windows(1).len(), 1);
+        assert_eq!(windows(0).len(), 0);
+    }
+}

@@ -1,0 +1,231 @@
+//! Algorithm 1: `ConstructSubgraphTree`.
+//!
+//! The tree has three levels (Fig 10): the root (whole DNN graph),
+//! independent-subgraph (IG) nodes — our nested windows, formed from an
+//! independent segment in the forward pass and the corresponding segment in
+//! the backward pass — and dependent-subgraph (DG) nodes created by
+//! splitting any IG whose op count exceeds the user's `node_limit`.
+//!
+//! Leaves are what the leaf solvers (branch-and-bound ordering / DSA
+//! layout) actually receive; non-leaf nodes aggregate children per
+//! eqs. (3) and (9).
+
+use super::{boundaries, segments, windows, Segment, Window};
+use crate::graph::{Graph, OpId, Reachability};
+
+/// A node of the subgraph tree.
+#[derive(Clone, Debug)]
+pub enum NodeKind {
+    Root,
+    /// Independent subgraph = window (fwd segment + paired bwd segment).
+    Ig(Window),
+    /// Dependent subgraph: a `node_limit`-sized slice of one segment.
+    Dg { window: usize, part: usize },
+}
+
+/// Tree node: ops it owns (for leaves) and child indices.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub kind: NodeKind,
+    pub ops: Vec<OpId>,
+    pub children: Vec<usize>,
+}
+
+/// The subgraph tree plus the division metadata the planner consumes.
+#[derive(Clone, Debug)]
+pub struct SubgraphTree {
+    pub nodes: Vec<Node>,
+    /// Memory-insensitive boundary ops in precedence order.
+    pub boundaries: Vec<OpId>,
+    /// Independent segments (index space shared with `windows`).
+    pub segments: Vec<Segment>,
+    /// Window pairing of segments.
+    pub windows: Vec<Window>,
+    /// Ordering tasks: per segment, chunks of ≤ node_limit ops that the
+    /// leaf scheduler optimises independently (DG split of Algorithm 1).
+    pub order_tasks: Vec<OrderTask>,
+}
+
+/// One leaf ordering task: a slice of a segment.
+#[derive(Clone, Debug)]
+pub struct OrderTask {
+    pub segment: usize,
+    pub part: usize,
+    pub ops: Vec<OpId>,
+}
+
+/// `node_limit` configuration (the paper's user parameter).
+#[derive(Clone, Copy, Debug)]
+pub struct TreeCfg {
+    pub node_limit: usize,
+}
+
+impl Default for TreeCfg {
+    fn default() -> Self {
+        TreeCfg { node_limit: 64 }
+    }
+}
+
+/// Construct the subgraph tree (Algorithm 1).
+pub fn construct(g: &Graph, reach: &Reachability, cfg: &TreeCfg) -> SubgraphTree {
+    let bounds = boundaries(g, reach);
+    let segs = segments(g, reach, &bounds);
+    let wins = windows(segs.len());
+
+    let mut nodes = vec![Node {
+        kind: NodeKind::Root,
+        ops: (0..g.n_ops()).collect(),
+        children: Vec::new(),
+    }];
+    let mut order_tasks = Vec::new();
+
+    for w in &wins {
+        let mut ig_ops: Vec<OpId> = segs[w.fwd_seg].ops.clone();
+        if w.bwd_seg != w.fwd_seg {
+            ig_ops.extend_from_slice(&segs[w.bwd_seg].ops);
+        }
+        let ig_idx = nodes.len();
+        nodes.push(Node {
+            kind: NodeKind::Ig(*w),
+            ops: ig_ops.clone(),
+            children: Vec::new(),
+        });
+        nodes[0].children.push(ig_idx);
+
+        // Split-down: each owned segment contributes ordering chunks of at
+        // most node_limit ops (ASAP-ordered so chunks respect precedence
+        // as much as the division allows).
+        let mut seg_list = vec![w.fwd_seg];
+        if w.bwd_seg != w.fwd_seg {
+            seg_list.push(w.bwd_seg);
+        }
+        for seg_idx in seg_list {
+            let mut ops = segs[seg_idx].ops.clone();
+            ops.sort_by_key(|&v| (reach.asap(v), v));
+            let chunks: Vec<Vec<OpId>> = if ops.is_empty() {
+                Vec::new()
+            } else {
+                ops.chunks(cfg.node_limit).map(|c| c.to_vec()).collect()
+            };
+            let split = chunks.len() > 1;
+            for (part, chunk) in chunks.into_iter().enumerate() {
+                order_tasks.push(OrderTask {
+                    segment: seg_idx,
+                    part,
+                    ops: chunk.clone(),
+                });
+                if split {
+                    let dg_idx = nodes.len();
+                    nodes.push(Node {
+                        kind: NodeKind::Dg { window: w.k, part },
+                        ops: chunk,
+                        children: Vec::new(),
+                    });
+                    nodes[ig_idx].children.push(dg_idx);
+                }
+            }
+        }
+    }
+
+    SubgraphTree {
+        nodes,
+        boundaries: bounds,
+        segments: segs,
+        windows: wins,
+        order_tasks,
+    }
+}
+
+impl SubgraphTree {
+    /// Number of leaf nodes (IGs without children + DGs).
+    pub fn n_leaves(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.children.is_empty() && !matches!(n.kind, NodeKind::Root))
+            .count()
+    }
+
+    /// Depth of the tree (1 = root only).
+    pub fn depth(&self) -> usize {
+        if self.nodes.len() == 1 {
+            return 1;
+        }
+        if self
+            .nodes
+            .iter()
+            .any(|n| matches!(n.kind, NodeKind::Dg { .. }))
+        {
+            3
+        } else {
+            2
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::random::{random_training_graph, RandomGraphCfg};
+    use crate::util::quick::forall;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn tree_covers_all_ops() {
+        forall("tree order tasks + boundaries cover ops", 25, |rng| {
+            let fwd_ops = rng.usize_in(3, 20);
+            let g = random_training_graph(rng, &RandomGraphCfg {
+                fwd_ops,
+                ..Default::default()
+            });
+            let reach = Reachability::compute(&g);
+            let tree = construct(&g, &reach, &TreeCfg { node_limit: 8 });
+            let mut seen = vec![false; g.n_ops()];
+            for &b in &tree.boundaries {
+                seen[b] = true;
+            }
+            for t in &tree.order_tasks {
+                for &v in &t.ops {
+                    if seen[v] {
+                        return Err(format!("op {v} assigned twice"));
+                    }
+                    seen[v] = true;
+                }
+            }
+            if seen.iter().all(|&s| s) {
+                Ok(())
+            } else {
+                Err("some op unassigned".into())
+            }
+        });
+    }
+
+    #[test]
+    fn node_limit_caps_task_size() {
+        let mut rng = Pcg64::new(17);
+        let g = random_training_graph(&mut rng, &RandomGraphCfg {
+            fwd_ops: 30,
+            ..Default::default()
+        });
+        let reach = Reachability::compute(&g);
+        for limit in [4usize, 16, 64] {
+            let tree = construct(&g, &reach, &TreeCfg { node_limit: limit });
+            assert!(tree.order_tasks.iter().all(|t| t.ops.len() <= limit));
+        }
+    }
+
+    #[test]
+    fn three_level_structure_when_split() {
+        let mut rng = Pcg64::new(23);
+        let g = random_training_graph(&mut rng, &RandomGraphCfg {
+            fwd_ops: 25,
+            skip_p: 0.8, // big segments
+            ..Default::default()
+        });
+        let reach = Reachability::compute(&g);
+        let small = construct(&g, &reach, &TreeCfg { node_limit: 4 });
+        assert_eq!(small.depth(), 3, "tiny node_limit must force DG level");
+        let big = construct(&g, &reach, &TreeCfg { node_limit: 10_000 });
+        assert!(big.depth() <= 2);
+        assert!(small.n_leaves() >= big.n_leaves());
+    }
+}

@@ -1,0 +1,151 @@
+//! A small declarative CLI argument parser (clap is not vendorable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands. The `roam` binary and every bench/example use it so `--help`
+//! output stays consistent across the repo.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags, key-value options and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pos: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut it = raw.into_iter().peekable();
+        let mut out = Args::default();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.pos.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment, skipping argv[0].
+    pub fn from_env() -> Args {
+        // `cargo bench` passes `--bench` to harness=false targets; drop it.
+        let raw: Vec<String> = std::env::args()
+            .skip(1)
+            .filter(|a| a != "--bench")
+            .collect();
+        Args::parse(raw)
+    }
+
+    /// String option with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.opts.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// u64 option with default (panics with a clear message on bad input).
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        match self.opts.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// usize option with default.
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.u64(key, default as u64) as usize
+    }
+
+    /// f64 option with default.
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        match self.opts.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    /// Boolean flag (`--quiet`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Positional argument by index.
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.pos.get(i).map(|s| s.as_str())
+    }
+
+    /// All positionals.
+    pub fn positionals(&self) -> &[String] {
+        &self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse("--model bert --batch=32");
+        assert_eq!(a.get("model", "x"), "bert");
+        assert_eq!(a.u64("batch", 1), 32);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        // Note the parser's documented greediness: `--flag value` would
+        // bind `value` to the flag, so boolean flags go last or before
+        // another `--` option.
+        let a = parse("train file.hlo --verbose");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.positional(0), Some("train"));
+        assert_eq!(a.positional(1), Some("file.hlo"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get("missing", "d"), "d");
+        assert_eq!(a.u64("n", 7), 7);
+        assert_eq!(a.f64("r", 2.5), 2.5);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // A value starting with '-' but not '--' is still a value.
+        let a = parse("--delta -3");
+        assert_eq!(a.f64("delta", 0.0), -3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn bad_int_panics() {
+        parse("--n abc").u64("n", 0);
+    }
+}

@@ -1,0 +1,65 @@
+//! Human-readable formatting helpers for the CLI / bench reports.
+
+/// Format a byte count with binary units (`"1.50 GiB"`).
+pub fn human_bytes(b: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    if b < 1024 {
+        return format!("{b} B");
+    }
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2} {}", UNITS[u])
+}
+
+/// Format a duration in adaptive units (`"1.23 s"`, `"45.6 ms"`).
+pub fn human_duration(d: std::time::Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} µs", s * 1e6)
+    }
+}
+
+/// Percentage with one decimal (`"35.7%"`). Handles the 0/0 case as 0.
+pub fn pct(num: f64, den: f64) -> String {
+    if den == 0.0 {
+        "0.0%".to_string()
+    } else {
+        format!("{:.1}%", 100.0 * num / den)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn bytes() {
+        assert_eq!(human_bytes(0), "0 B");
+        assert_eq!(human_bytes(1023), "1023 B");
+        assert_eq!(human_bytes(1024), "1.00 KiB");
+        assert_eq!(human_bytes(1536), "1.50 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024 * 1024), "3.00 GiB");
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(human_duration(Duration::from_secs(2)), "2.00 s");
+        assert_eq!(human_duration(Duration::from_millis(12)), "12.00 ms");
+        assert_eq!(human_duration(Duration::from_micros(7)), "7.00 µs");
+    }
+
+    #[test]
+    fn pct_zero_den() {
+        assert_eq!(pct(1.0, 0.0), "0.0%");
+        assert_eq!(pct(357.0, 1000.0), "35.7%");
+    }
+}

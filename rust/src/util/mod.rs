@@ -1,0 +1,19 @@
+//! Utility substrate.
+//!
+//! The build is fully offline and the only vendored third-party crates are
+//! the `xla` closure + `anyhow`, so the little pieces a framework usually
+//! pulls from crates.io (CLI parsing, JSON, PRNG, property testing, a bench
+//! harness) are implemented here instead.
+
+pub mod bitset;
+pub mod cli;
+pub mod human;
+pub mod json;
+pub mod quick;
+pub mod rng;
+pub mod timer;
+
+pub use bitset::BitSet;
+pub use human::human_bytes;
+pub use rng::Pcg64;
+pub use timer::Stopwatch;

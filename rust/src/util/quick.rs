@@ -1,0 +1,101 @@
+//! Property-testing mini-framework (proptest is not vendorable offline).
+//!
+//! A property is a closure over a seeded [`Pcg64`]; the runner executes it
+//! for many derived seeds and, on failure, reports the failing seed so the
+//! case can be replayed deterministically:
+//!
+//! ```
+//! use roam::util::quick::forall;
+//! forall("addition commutes", 200, |rng| {
+//!     let a = rng.gen_range(1000) as i64;
+//!     let b = rng.gen_range(1000) as i64;
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+//!
+//! Set `ROAM_QUICK_SEED=<n>` to replay one specific case.
+
+use super::rng::Pcg64;
+
+/// Run `cases` random cases of `prop`. Panics (test failure) on the first
+/// counterexample, printing the replay seed and the property's message.
+pub fn forall<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Pcg64) -> Result<(), String>,
+{
+    if let Ok(seed) = std::env::var("ROAM_QUICK_SEED") {
+        let seed: u64 = seed.parse().expect("ROAM_QUICK_SEED must be an integer");
+        let mut rng = Pcg64::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed (replay seed {seed}): {msg}");
+        }
+        return;
+    }
+    for case in 0..cases {
+        // Seed derivation is pure so failures replay exactly.
+        let seed = 0x9e3779b97f4a7c15u64
+            .wrapping_mul(case + 1)
+            .wrapping_add(fxhash(name));
+        let mut rng = Pcg64::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}/{cases} \
+                 (replay with ROAM_QUICK_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Tiny FNV-style string hash used only to decorrelate property names.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Assert-like helper returning `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("sum nonneg", 50, |rng| {
+            let n = rng.gen_range(100);
+            if n < 100 {
+                Ok(())
+            } else {
+                Err(format!("{n}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with ROAM_QUICK_SEED=")]
+    fn failing_property_reports_seed() {
+        forall("always fails eventually", 50, |rng| {
+            if rng.gen_range(10) < 9 {
+                Ok(())
+            } else {
+                Err("hit the 10% case".to_string())
+            }
+        });
+    }
+
+    #[test]
+    fn names_decorrelate_seeds() {
+        assert_ne!(fxhash("a"), fxhash("b"));
+    }
+}

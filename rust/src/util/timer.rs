@@ -1,0 +1,111 @@
+//! Wall-clock measurement helpers shared by the planner (time limits),
+//! the bench harness and the trainer's step timing.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+#[derive(Clone, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Stopwatch {
+            start: Instant::now(),
+        }
+    }
+
+    /// Elapsed since start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed seconds as f64.
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Restart and return the elapsed lap time.
+    pub fn lap(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// A soft deadline used by the time-limited solvers (ILP / branch-and-bound).
+///
+/// `Deadline::unlimited()` never expires; `Deadline::after(d)` expires `d`
+/// from creation. Checking is cheap (one `Instant::now()`); the solvers poll
+/// it every few thousand nodes.
+#[derive(Clone, Copy, Debug)]
+pub struct Deadline {
+    expires: Option<Instant>,
+}
+
+impl Deadline {
+    /// A deadline that never fires.
+    pub fn unlimited() -> Self {
+        Deadline { expires: None }
+    }
+
+    /// Expires `d` from now.
+    pub fn after(d: Duration) -> Self {
+        Deadline {
+            expires: Some(Instant::now() + d),
+        }
+    }
+
+    /// Expires after `secs` seconds (convenience for CLI flags).
+    pub fn after_secs(secs: f64) -> Self {
+        Deadline::after(Duration::from_secs_f64(secs))
+    }
+
+    /// Has the deadline passed?
+    pub fn expired(&self) -> bool {
+        match self.expires {
+            None => false,
+            Some(t) => Instant::now() >= t,
+        }
+    }
+
+    /// Remaining time (None = unlimited).
+    pub fn remaining(&self) -> Option<Duration> {
+        self.expires
+            .map(|t| t.saturating_duration_since(Instant::now()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed();
+        let b = sw.elapsed();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn unlimited_never_expires() {
+        assert!(!Deadline::unlimited().expired());
+        assert!(Deadline::unlimited().remaining().is_none());
+    }
+
+    #[test]
+    fn after_zero_expires() {
+        let d = Deadline::after(Duration::from_secs(0));
+        assert!(d.expired());
+    }
+
+    #[test]
+    fn after_long_not_expired() {
+        let d = Deadline::after(Duration::from_secs(3600));
+        assert!(!d.expired());
+        assert!(d.remaining().unwrap() > Duration::from_secs(3500));
+    }
+}

@@ -1,0 +1,110 @@
+//! Property-based invariants over random training graphs: every planner
+//! must emit structurally valid plans, and the dominance relations between
+//! planners must hold.
+
+use roam::graph::random::{random_training_graph, RandomGraphCfg};
+use roam::graph::topo::is_topological;
+use roam::layout::sim::{conflicts, lower_bound};
+use roam::layout::Layout;
+use roam::planner::{heuristic::heuristic_plan, layout_items, pytorch, roam_plan, RoamCfg};
+use roam::util::quick::forall;
+
+#[test]
+fn every_planner_is_structurally_sound() {
+    forall("planner soundness", 25, |rng| {
+        let fwd_ops = rng.usize_in(2, 16);
+        let adam = rng.chance(0.5);
+        let g = random_training_graph(rng, &RandomGraphCfg {
+            fwd_ops,
+            adam,
+            ..Default::default()
+        });
+        for plan in [
+            pytorch(&g),
+            heuristic_plan(&g),
+            roam_plan(&g, &RoamCfg { parallel: false, ..Default::default() }),
+        ] {
+            if !is_topological(&g, &plan.order) {
+                return Err(format!("{}: bad order", plan.planner));
+            }
+            let items = layout_items(&g, &plan.schedule);
+            let layout = Layout { offsets: plan.offsets.clone() };
+            if !conflicts(&items, &layout).is_empty() {
+                return Err(format!("{}: layout conflict", plan.planner));
+            }
+            if plan.actual_peak < plan.theoretical_peak {
+                return Err(format!("{}: actual < theoretical", plan.planner));
+            }
+            if plan.actual_peak < lower_bound(&items) {
+                return Err(format!("{}: actual below LB", plan.planner));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn roam_dominates_pytorch_on_random_graphs() {
+    forall("roam ≤ pytorch", 20, |rng| {
+        let fwd_ops = rng.usize_in(2, 14);
+        let g = random_training_graph(rng, &RandomGraphCfg {
+            fwd_ops,
+            ..Default::default()
+        });
+        let r = roam_plan(&g, &RoamCfg { parallel: false, ..Default::default() });
+        let p = pytorch(&g);
+        // ROAM subsumes (program order + dynamic layout) as a complete
+        // incumbent, so its actual peak can never exceed PyTorch's.
+        if r.actual_peak > p.actual_peak {
+            return Err(format!("actual: roam {} > pytorch {}", r.actual_peak, p.actual_peak));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn delay_radius_extremes_are_safe() {
+    forall("delay radius extremes", 10, |rng| {
+        let fwd_ops = rng.usize_in(3, 10);
+        let g = random_training_graph(rng, &RandomGraphCfg {
+            fwd_ops,
+            adam: true,
+            ..Default::default()
+        });
+        for r in [0.0, 1e12] {
+            let plan = roam_plan(&g, &RoamCfg {
+                delay_radius: r,
+                parallel: false,
+                ..Default::default()
+            });
+            if !is_topological(&g, &plan.order) {
+                return Err(format!("r={r}: invalid order"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn node_limit_sweep_preserves_validity() {
+    forall("node limit sweep", 10, |rng| {
+        let fwd_ops = rng.usize_in(4, 12);
+        let g = random_training_graph(rng, &RandomGraphCfg {
+            fwd_ops,
+            ..Default::default()
+        });
+        let mut peaks = Vec::new();
+        for nl in [2usize, 8, 64] {
+            let plan = roam_plan(&g, &RoamCfg {
+                node_limit: nl,
+                parallel: false,
+                ..Default::default()
+            });
+            if !is_topological(&g, &plan.order) {
+                return Err(format!("node_limit={nl}: invalid order"));
+            }
+            peaks.push(plan.theoretical_peak);
+        }
+        Ok(())
+    });
+}
