@@ -4,10 +4,10 @@
 //!
 //! ```sh
 //! make artifacts            # ~100M-param preset
-//! cargo run --release --example train_e2e -- --steps 300
+//! cargo run --release --features pjrt --example train_e2e -- --steps 300
 //! # quick smoke:
 //! make artifacts-tiny
-//! cargo run --release --example train_e2e -- --artifacts artifacts-tiny --steps 50
+//! cargo run --release --features pjrt --example train_e2e -- --artifacts artifacts-tiny --steps 50
 //! ```
 
 use roam::benchkit::reduction_pct;
@@ -18,7 +18,7 @@ use roam::runtime::Runtime;
 use roam::util::cli::Args;
 use roam::util::human_bytes;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> roam::util::error::Result<()> {
     let args = Args::from_env();
     let dir = args.get("artifacts", "artifacts");
     let steps = args.usize("steps", 300);

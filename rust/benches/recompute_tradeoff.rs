@@ -1,0 +1,76 @@
+//! Memory-vs-recompute tradeoff curves: sweep a hard budget over the
+//! transformer workloads and report achieved total memory vs FLOP-proxy
+//! overhead — the "high-level techniques ride on a good order+layout"
+//! claim, quantified.
+//!
+//! `cargo bench --bench recompute_tradeoff [-- --models vit,bert]
+//!  [--fractions 1.0,0.8,0.6,0.4] [--strategy greedy|segment] [--batch 1]`
+
+use roam::benchkit::{mib, pct, Report};
+use roam::models::{self, BuildCfg, ModelKind};
+use roam::planner::RoamCfg;
+use roam::recompute::{tradeoff_sweep, RecomputeCfg, Strategy};
+use roam::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let model_names = args.get("models", "vit,bert,synthetic");
+    let fractions: Vec<f64> = args
+        .get("fractions", "1.0,0.8,0.6,0.4")
+        .split(',')
+        .map(|s| s.parse().expect("--fractions"))
+        .collect();
+    let strategy =
+        Strategy::from_name(&args.get("strategy", "greedy")).expect("--strategy greedy|segment");
+    let batch = args.usize("batch", 1);
+
+    let mut rep = Report::new(
+        "recompute_tradeoff",
+        "Budgeted rematerialization: memory vs recompute overhead",
+        &[
+            "model",
+            "budget_frac",
+            "budget_MiB",
+            "total_MiB",
+            "vs_baseline",
+            "met",
+            "rc_ops",
+            "rc_MiB",
+            "evicted",
+        ],
+    );
+
+    for name in model_names.split(',') {
+        let kind = ModelKind::from_name(name).unwrap_or_else(|| panic!("unknown model {name}"));
+        let g = models::build(
+            kind,
+            &BuildCfg {
+                batch,
+                ..Default::default()
+            },
+        );
+        let cfg = RecomputeCfg {
+            strategy,
+            roam: RoamCfg {
+                time_limit_secs: args.f64("time-limit", 600.0),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let sweep = tradeoff_sweep(&g, &fractions, &cfg);
+        for p in &sweep.points {
+            rep.row(&[
+                name.to_string(),
+                format!("{:.2}", p.fraction),
+                mib(p.budget),
+                mib(p.total),
+                pct(100.0 * p.total as f64 / sweep.baseline_total.max(1) as f64),
+                if p.met { "yes" } else { "NO" }.to_string(),
+                p.recompute_ops.to_string(),
+                mib(p.recompute_bytes),
+                p.evicted.to_string(),
+            ]);
+        }
+    }
+    rep.finish();
+}

@@ -10,11 +10,12 @@
 //!     -> (params', m', v', step', loss)
 //! ```
 
+use crate::bail;
 use crate::coordinator::data::Corpus;
 use crate::runtime::artifact::Artifacts;
 use crate::runtime::{LoadedModule, Runtime};
+use crate::util::error::{Context, Result};
 use crate::util::Stopwatch;
-use anyhow::{bail, Context, Result};
 
 /// Training-run configuration.
 #[derive(Clone, Debug)]

@@ -209,6 +209,50 @@ impl Graph {
         self.tensors[t].is_output = true;
     }
 
+    /// Replace every occurrence of `old` in `op`'s input list with `new`,
+    /// keeping both tensors' consumer lists count-consistent (the invariant
+    /// [`validate::validate`] checks). Returns the number of occurrences
+    /// replaced. This is the primitive the recompute rewriter uses to
+    /// retarget backward consumers from an evicted tensor to its clone.
+    pub fn replace_input(&mut self, op: OpId, old: TensorId, new: TensorId) -> usize {
+        if old == new {
+            return 0;
+        }
+        let mut replaced = 0usize;
+        for slot in self.ops[op].inputs.iter_mut() {
+            if *slot == old {
+                *slot = new;
+                replaced += 1;
+            }
+        }
+        if replaced > 0 {
+            let mut to_remove = replaced;
+            self.tensors[old].consumers.retain(|&c| {
+                if c == op && to_remove > 0 {
+                    to_remove -= 1;
+                    false
+                } else {
+                    true
+                }
+            });
+            for _ in 0..replaced {
+                self.tensors[new].consumers.push(op);
+            }
+        }
+        replaced
+    }
+
+    /// Add `t` as an extra (control) input of `op`, reusing an existing
+    /// tensor (no extra bytes). The caller is responsible for acyclicity —
+    /// the recompute rewriter proves it via a reachability check before
+    /// calling. (The weight-update scheduler's control edges use a
+    /// different encoding: fresh 1-byte tensors, see
+    /// [`crate::sched::weight_update::apply_control_edges`].)
+    pub fn add_control_input(&mut self, op: OpId, t: TensorId) {
+        self.ops[op].inputs.push(t);
+        self.tensors[t].consumers.push(op);
+    }
+
     /// Operator-level predecessor ids (dedup'd, order of first appearance).
     pub fn preds(&self, v: OpId) -> Vec<OpId> {
         let mut out = Vec::new();
@@ -341,6 +385,32 @@ mod tests {
         assert_eq!(g.persistent_bytes(), 100);
         assert_eq!(g.dynamic_bytes(), 10 + 20 + 20 + 4);
         assert_eq!(g.activation_bytes(), 40);
+    }
+
+    #[test]
+    fn replace_input_rewires_consumers() {
+        let mut g = tiny();
+        // Give op c a second tensor to switch to: a fresh input tensor.
+        let alt = g.add_input_tensor("alt", 20, TensorClass::Activation);
+        // c (op 2) consumes t2 (tensor 3); retarget it to alt.
+        let n = g.replace_input(2, 3, alt);
+        assert_eq!(n, 1);
+        assert!(g.tensors[3].consumers.is_empty());
+        assert_eq!(g.tensors[alt].consumers, vec![2]);
+        assert!(g.ops[2].inputs.contains(&alt));
+        assert!(validate::validate(&g).is_empty());
+        // No-op replacement returns 0.
+        assert_eq!(g.replace_input(2, 3, alt), 0);
+    }
+
+    #[test]
+    fn control_input_registers_consumer() {
+        let mut g = tiny();
+        // Feed op b (op 1) an extra control input from the weight tensor.
+        g.add_control_input(1, 0);
+        assert!(g.ops[1].inputs.contains(&0));
+        assert_eq!(g.tensors[0].consumers, vec![0, 1]);
+        assert!(validate::validate(&g).is_empty());
     }
 
     #[test]

@@ -26,6 +26,12 @@ pub enum Defect {
 }
 
 /// Validate; returns all defects found (empty = structurally sound).
+///
+/// Consumer consistency is checked by *multiplicity*, not mere membership:
+/// a tensor listed `k` times in an op's inputs must list that op `k` times
+/// in its consumers (and vice versa). Graph rewrites — control edges, the
+/// recompute rewriter's consumer retargeting — rely on this to catch
+/// half-applied edits that a containment check would let through.
 pub fn validate(g: &Graph) -> Vec<Defect> {
     let mut defects = Vec::new();
     for (i, t) in g.tensors.iter().enumerate() {
@@ -42,10 +48,19 @@ pub fn validate(g: &Graph) -> Vec<Defect> {
                 defects.push(Defect::InconsistentProducer { tensor: i, op: p });
             }
         }
+        let mut seen: Vec<usize> = Vec::new();
         for &c in &t.consumers {
             if c >= g.n_ops() {
                 defects.push(Defect::DanglingTensorRef { op: c, tensor: i });
-            } else if !g.ops[c].inputs.contains(&i) {
+                continue;
+            }
+            if seen.contains(&c) {
+                continue; // multiplicity already checked for this pair
+            }
+            seen.push(c);
+            let in_consumers = t.consumers.iter().filter(|&&x| x == c).count();
+            let in_inputs = g.ops[c].inputs.iter().filter(|&&x| x == i).count();
+            if in_consumers != in_inputs {
                 defects.push(Defect::InconsistentConsumer { tensor: i, op: c });
             }
         }
@@ -57,6 +72,19 @@ pub fn validate(g: &Graph) -> Vec<Defect> {
         for &t in op.inputs.iter().chain(op.outputs.iter()) {
             if t >= g.n_tensors() {
                 defects.push(Defect::DanglingTensorRef { op: i, tensor: t });
+            }
+        }
+        // Symmetric direction: an input the tensor doesn't know about at
+        // all (zero consumer entries) escapes the tensor-side sweep above.
+        for &t in &op.inputs {
+            if t < g.n_tensors() && !g.tensors[t].consumers.contains(&i) {
+                defects.push(Defect::InconsistentConsumer { tensor: t, op: i });
+            }
+        }
+        // An op claiming an output the tensor attributes elsewhere.
+        for &t in &op.outputs {
+            if t < g.n_tensors() && g.tensors[t].producer != Some(i) {
+                defects.push(Defect::InconsistentProducer { tensor: t, op: i });
             }
         }
     }

@@ -18,26 +18,43 @@
 //! branch-and-bound / ILP ([`ilp`]), and concatenate the sub-plans
 //! ([`planner`]).
 //!
+//! On top of the planner sits [`recompute`]: budgeted rematerialization
+//! that trades FLOPs for memory under a hard budget
+//! ([`recompute::roam_plan_budgeted`]) by evicting activations, cloning
+//! their producers into the backward pass, and re-running the full ROAM
+//! order+layout pipeline on the augmented graph — the paper's "reduce
+//! overheads from high-level techniques" claim, made end-to-end.
+//!
 //! The crate additionally ships the substrates a reproduction needs:
 //! model-graph builders for the paper's eight evaluation models
-//! ([`models`]), the PyTorch / LESCEA / LLFB / MODeL baselines, an HLO text
-//! parser so the planner can run on real JAX-lowered graphs ([`hlo`]), a
-//! PJRT runtime ([`runtime`]) and a training coordinator ([`coordinator`])
-//! that drive the end-to-end example.
+//! ([`models`]), the PyTorch / LESCEA / LLFB / MODeL baselines, and an HLO
+//! text parser so the planner can run on real JAX-lowered graphs
+//! ([`hlo`]). Behind the off-by-default `pjrt` feature (which needs the
+//! `xla` crate and its native toolchain — see `Cargo.toml`) live a PJRT
+//! runtime (`runtime`) and a training coordinator (`coordinator`) that
+//! drive the end-to-end example; the default build has **zero**
+//! third-party dependencies.
 //!
 //! ## Quickstart
 //!
 //! ```no_run
 //! use roam::models::{self, ModelKind, BuildCfg};
 //! use roam::planner::{roam_plan, RoamCfg};
+//! use roam::recompute::{roam_plan_budgeted, BudgetSpec, RecomputeCfg};
 //!
 //! let g = models::build(ModelKind::Bert, &BuildCfg { batch: 1, ..Default::default() });
 //! let plan = roam_plan(&g, &RoamCfg::default());
 //! println!("theoretical peak = {} actual peak = {} frag = {:.2}%",
 //!          plan.theoretical_peak, plan.actual_peak, plan.frag_pct());
+//!
+//! // Same model under a hard budget of 60% of the unbudgeted total:
+//! let b = roam_plan_budgeted(&g, BudgetSpec::Fraction(0.6), &RecomputeCfg::default());
+//! println!("budgeted total = {} (met: {}, +{} recompute ops)",
+//!          b.total(), b.met, b.recompute_ops);
 //! ```
 
 pub mod benchkit;
+#[cfg(feature = "pjrt")]
 pub mod coordinator;
 pub mod graph;
 pub mod hlo;
@@ -45,6 +62,8 @@ pub mod ilp;
 pub mod layout;
 pub mod models;
 pub mod planner;
+pub mod recompute;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sched;
 pub mod segments;

@@ -3,22 +3,21 @@
 //! ```text
 //! roam optimize  --model bert --batch 32 [--planner roam-ss|roam-ms|pytorch|heuristic|model-ms|model-ss]
 //!                [--node-limit 64] [--delay-radius 2.0] [--time-limit 60] [--out plan.json]
+//! roam recompute --model gpt2 --budget 0.6 [--budget-bytes N] [--strategy greedy|segment]
 //! roam plan-hlo  --hlo artifacts/train_step.hlo.txt [--out plan.json]
 //! roam train     [--artifacts artifacts] [--steps 200] [--log-every 10] [--seed 0]
-//! roam compare   --model vit --batch 1            # all planners side by side
+//! roam compare   --model vit --batch 1 [--budget 0.6]   # all planners side by side
 //! roam export-dot --model alexnet                 # graphviz to stdout
 //! roam info      --model gpt2-xl                  # graph statistics
 //! ```
 
-use anyhow::{anyhow, bail, Result};
 use roam::benchkit::{mib, reduction_pct};
-use roam::coordinator::{TrainCfg, Trainer};
 use roam::models::{self, BuildCfg, ModelKind, Optim};
 use roam::planner::model_baseline::{model_plan, ModelCfg, Streaming};
 use roam::planner::{heuristic::heuristic_plan, pytorch, roam_plan, ExecutionPlan, RoamCfg};
-use roam::runtime::artifact::Artifacts;
-use roam::runtime::Runtime;
+use roam::recompute::{roam_plan_budgeted, BudgetSpec, RecomputeCfg, Strategy};
 use roam::util::cli::Args;
+use roam::util::error::Result;
 use roam::util::human_bytes;
 
 fn main() {
@@ -26,6 +25,7 @@ fn main() {
     let cmd = args.positional(0).unwrap_or("help").to_string();
     let r = match cmd.as_str() {
         "optimize" => cmd_optimize(&args),
+        "recompute" => cmd_recompute(&args),
         "plan-hlo" => cmd_plan_hlo(&args),
         "train" => cmd_train(&args),
         "compare" => cmd_compare(&args),
@@ -35,7 +35,7 @@ fn main() {
             print_help();
             Ok(())
         }
-        other => Err(anyhow!("unknown command '{other}' (try `roam help`)")),
+        other => Err(roam::err!("unknown command '{other}' (try `roam help`)")),
     };
     if let Err(e) = r {
         eprintln!("error: {e:#}");
@@ -48,9 +48,14 @@ fn print_help() {
         "roam — memory-efficient DNN training via operator ordering + memory layout\n\n\
          commands:\n\
          \x20 optimize    plan a built-in model graph (--model, --batch, --planner)\n\
+         \x20 recompute   plan under a hard memory budget via rematerialization\n\
+         \x20             (--model, --budget FRACTION | --budget-bytes N,\n\
+         \x20              --strategy greedy|segment)\n\
          \x20 plan-hlo    plan a JAX-lowered HLO file (--hlo PATH)\n\
-         \x20 train       end-to-end training via PJRT (--artifacts DIR, --steps N)\n\
+         \x20 train       end-to-end training via PJRT (--artifacts DIR, --steps N;\n\
+         \x20             requires building with --features pjrt)\n\
          \x20 compare     run all planners on one model and tabulate\n\
+         \x20             (--budget F adds a budgeted-recompute row)\n\
          \x20 export-dot  graphviz dump of a model's training graph\n\
          \x20 info        graph statistics (ops, tensors, bytes, boundaries)"
     );
@@ -58,7 +63,7 @@ fn print_help() {
 
 fn build_graph(args: &Args) -> Result<roam::Graph> {
     let name = args.get("model", "alexnet");
-    let kind = ModelKind::from_name(&name).ok_or_else(|| anyhow!("unknown model '{name}'"))?;
+    let kind = ModelKind::from_name(&name).ok_or_else(|| roam::err!("unknown model '{name}'"))?;
     let cfg = BuildCfg {
         batch: args.usize("batch", 1),
         optim: if args.get("optim", "adam") == "sgd" {
@@ -105,7 +110,7 @@ fn run_planner(g: &roam::Graph, args: &Args) -> Result<ExecutionPlan> {
                 ..Default::default()
             },
         ),
-        other => bail!("unknown planner '{other}'"),
+        other => roam::bail!("unknown planner '{other}'"),
     })
 }
 
@@ -153,12 +158,77 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     maybe_write(args, &p)
 }
 
+/// Parse the budget flags: `--budget 0.6` (fraction of the unbudgeted
+/// ROAM total) or `--budget-bytes N` (absolute).
+fn budget_spec(args: &Args) -> Result<BudgetSpec> {
+    if let Some(b) = args.opt("budget-bytes") {
+        let bytes: u64 = b
+            .parse()
+            .map_err(|_| roam::err!("--budget-bytes expects an integer, got {b:?}"))?;
+        return Ok(BudgetSpec::Bytes(bytes));
+    }
+    let f = args.f64("budget", 0.6);
+    if !(f.is_finite() && f > 0.0) {
+        roam::bail!("--budget expects a positive fraction, got {f}");
+    }
+    Ok(BudgetSpec::Fraction(f))
+}
+
+fn recompute_cfg(args: &Args) -> Result<RecomputeCfg> {
+    let sname = args.get("strategy", "greedy");
+    let strategy = Strategy::from_name(&sname)
+        .ok_or_else(|| roam::err!("unknown strategy '{sname}' (greedy|segment)"))?;
+    Ok(RecomputeCfg {
+        strategy,
+        roam: RoamCfg {
+            node_limit: args.usize("node-limit", 64),
+            delay_radius: args.f64("delay-radius", 2.0),
+            time_limit_secs: args.f64("time-limit", 3600.0),
+            ..Default::default()
+        },
+        max_rounds: args.usize("max-rounds", 12),
+        ..Default::default()
+    })
+}
+
+fn cmd_recompute(args: &Args) -> Result<()> {
+    let g = build_graph(args)?;
+    let spec = budget_spec(args)?;
+    let cfg = recompute_cfg(args)?;
+    let r = roam_plan_budgeted(&g, spec, &cfg);
+    println!(
+        "budget {} ({})  baseline total {} ({})  strategy {}",
+        r.budget,
+        human_bytes(r.budget),
+        r.baseline_total,
+        human_bytes(r.baseline_total),
+        cfg.strategy.name(),
+    );
+    println!(
+        "  achieved total   : {:>12}  ({}, {:.1}% of baseline) — budget {}",
+        r.total(),
+        human_bytes(r.total()),
+        100.0 * r.total() as f64 / r.baseline_total.max(1) as f64,
+        if r.met { "MET" } else { "NOT met" }
+    );
+    println!(
+        "  recompute        : {} ops, {} extra bytes ({}), {} evicted tensors, {} rounds",
+        r.recompute_ops,
+        r.recompute_bytes,
+        human_bytes(r.recompute_bytes),
+        r.evicted,
+        r.rounds
+    );
+    print_plan(&r.graph, &r.plan);
+    maybe_write(args, &r.plan)
+}
+
 fn cmd_plan_hlo(args: &Args) -> Result<()> {
     let path = args
         .opt("hlo")
-        .ok_or_else(|| anyhow!("--hlo PATH required"))?;
+        .ok_or_else(|| roam::err!("--hlo PATH required"))?;
     let text = std::fs::read_to_string(path)?;
-    let g = roam::hlo::parse_hlo_text(&text).map_err(|e| anyhow!("{e}"))?;
+    let g = roam::hlo::parse_hlo_text(&text)?;
     println!("parsed {} → {} ops, {} tensors", path, g.n_ops(), g.n_tensors());
     let p = run_planner(&g, args)?;
     print_plan(&g, &p);
@@ -169,10 +239,10 @@ fn cmd_compare(args: &Args) -> Result<()> {
     let g = build_graph(args)?;
     let time_limit = args.f64("time-limit", 30.0);
     println!(
-        "{:<10} {:>12} {:>12} {:>8} {:>10}",
+        "{:<12} {:>12} {:>12} {:>8} {:>10}",
         "planner", "Tp (MiB)", "actual", "frag%", "time (s)"
     );
-    let plans: Vec<ExecutionPlan> = vec![
+    let mut plans: Vec<ExecutionPlan> = vec![
         pytorch(&g),
         heuristic_plan(&g),
         model_plan(&g, &ModelCfg {
@@ -185,10 +255,17 @@ fn cmd_compare(args: &Args) -> Result<()> {
             ..Default::default()
         }),
     ];
+    // Optional budgeted-recompute row: `compare --model vit --budget 0.6`.
+    if args.opt("budget").is_some() || args.opt("budget-bytes").is_some() {
+        let spec = budget_spec(args)?;
+        let mut cfg = recompute_cfg(args)?;
+        cfg.roam.time_limit_secs = time_limit;
+        plans.push(roam_plan_budgeted(&g, spec, &cfg).plan);
+    }
     let base = plans[0].actual_peak;
     for p in &plans {
         println!(
-            "{:<10} {:>12} {:>12} {:>8.2} {:>10.2}   (−{:.1}% vs pytorch)",
+            "{:<12} {:>12} {:>12} {:>8.2} {:>10.2}   (−{:.1}% vs pytorch)",
             p.planner,
             mib(p.theoretical_peak),
             mib(p.actual_peak),
@@ -228,7 +305,20 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &Args) -> Result<()> {
+    Err(roam::err!(
+        "the `train` command needs the PJRT runtime; rebuild with \
+         `--features pjrt` (requires the xla crate and its native toolchain)"
+    ))
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<()> {
+    use roam::coordinator::{TrainCfg, Trainer};
+    use roam::runtime::artifact::Artifacts;
+    use roam::runtime::Runtime;
+
     let dir = args.get("artifacts", "artifacts");
     let rt = Runtime::cpu()?;
     println!("PJRT platform: {}", rt.platform());

@@ -13,6 +13,14 @@
 //!   PyTorch baseline).
 //! * [`model_baseline`] — MODeL-style whole-graph exact optimization under
 //!   a wall-clock time limit, in single- and multi-streaming variants.
+//!
+//! When a plan must fit a *hard memory budget* that even the optimal
+//! order+layout cannot reach, the [`crate::recompute`] subsystem layers
+//! budgeted rematerialization on top: it evicts activations, rewrites the
+//! graph with recompute clones, and re-enters [`roam_plan`] on the
+//! augmented graph ([`crate::recompute::roam_plan_budgeted`]). Budgeted
+//! plans report their overhead in [`ExecutionPlan::stats`]
+//! (`recompute_ops`, `recompute_extra_bytes`, `budget_met`, ...).
 
 pub mod heuristic;
 pub mod model_baseline;

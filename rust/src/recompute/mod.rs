@@ -1,0 +1,44 @@
+//! Budgeted rematerialization (activation recomputation) on top of ROAM
+//! plans.
+//!
+//! The paper's position is that a good operator order + memory layout is
+//! the *substrate* that "reduces overheads from high-level techniques"
+//! such as recomputation. This module closes that loop: it trades FLOPs
+//! for memory under a **hard budget**, re-running the full ROAM pipeline
+//! on every augmented graph so the recompute working set is itself
+//! order/layout-optimised.
+//!
+//! Pipeline (§ the classic sublinear-memory formulation of Chen et al.
+//! 2016, and the budgeted checkpointing-as-optimization view of Shah et
+//! al. 2020):
+//!
+//! 1. **Select** ([`select`]) — rank eviction candidates, either
+//!    per-tensor greedy (max size / min recompute cost) or per-segment
+//!    checkpointing at ROAM's memory-insensitive boundaries (note: on pure
+//!    chains every op is a boundary and segments are empty, so the segment
+//!    strategy finds no candidates there — use greedy for chain graphs).
+//! 2. **Rewrite** ([`rewrite`]) — clone the chosen forward region into
+//!    recompute ops pinned into the backward pass, retarget backward
+//!    consumers, preserve every [`crate::graph::validate`] invariant.
+//! 3. **Re-plan** ([`budget`]) — run [`crate::planner::roam_plan`] on the
+//!    augmented graph; escalate the evicted prefix until
+//!    `actual_peak + persistent ≤ budget` or the strategy is exhausted.
+//! 4. **Sweep** ([`sweep`]) — share escalation rounds across a whole
+//!    budget axis to draw memory-vs-overhead tradeoff curves.
+//!
+//! Fidelity note: recomputation of stochastic ops (dropout) is treated as
+//! exact, as in a real system that replays the RNG state; this substrate
+//! only accounts bytes and precedence, never values.
+//!
+//! Entry points: [`roam_plan_budgeted`] and [`tradeoff_sweep`]; the CLI
+//! exposes them as `roam recompute` and `roam compare --budget`.
+
+pub mod budget;
+pub mod rewrite;
+pub mod select;
+pub mod sweep;
+
+pub use budget::{roam_plan_budgeted, BudgetSpec, BudgetedPlan, RecomputeCfg};
+pub use rewrite::{is_evictable, rewrite, RewriteResult};
+pub use select::{candidates, Candidate, Strategy};
+pub use sweep::{tradeoff_sweep, SweepPoint, SweepResult};

@@ -1,0 +1,344 @@
+//! Graph rewriter: clone forward ops into recompute ops scheduled in the
+//! backward pass, so the chosen activations can be freed at their last
+//! forward use and re-materialised just before their backward consumers.
+//!
+//! The rewrite is purely structural — it adds ops/tensors and retargets
+//! consumer edges — and the memory semantics follow automatically from the
+//! liveness rules in [`crate::graph::liveness`]:
+//!
+//! * an **evicted** tensor loses its backward consumers, so it now dies at
+//!   its last forward consumer (the saving);
+//! * its **clone**, produced by the cloned op, is born at recompute time
+//!   and dies at the original backward consumers (the working set);
+//! * **checkpoints** — region inputs produced outside the recompute region
+//!   — gain the clone ops as consumers, extending their lifetime into the
+//!   backward pass (the retention cost).
+//!
+//! All three effects are therefore priced exactly by the existing
+//! [`crate::sched::sim`] simulator and layout solvers; no special-casing
+//! anywhere downstream.
+//!
+//! Scheduling: every clone op is additionally given a *control input* from
+//! a loss-phase anchor op (when one precedes all rewired consumers), which
+//! pins recomputation into the backward region for any topological
+//! scheduler — the planner's peak-minimising search then places it as late
+//! as the backward consumers allow.
+
+use crate::graph::{Graph, OpId, Phase, Reachability, TensorClass, TensorId};
+use std::collections::HashMap;
+
+/// Outcome of a rewrite.
+#[derive(Clone, Debug)]
+pub struct RewriteResult {
+    /// The augmented graph (original ops keep their ids; clones appended).
+    pub graph: Graph,
+    /// Ids of the appended recompute (clone) ops.
+    pub recompute_ops: Vec<OpId>,
+    /// `(original, clone)` pairs for every evicted tensor.
+    pub remap: Vec<(TensorId, TensorId)>,
+    /// Σ bytes produced by the recompute ops — the FLOP-proxy overhead.
+    pub recompute_bytes: u64,
+}
+
+impl RewriteResult {
+    /// Number of tensors whose backward consumers were retargeted.
+    pub fn evicted(&self) -> usize {
+        self.remap.len()
+    }
+}
+
+/// Can `t` be evicted and recomputed? It must be a non-output forward
+/// activation with at least one backward consumer, and no loss/update
+/// consumers (those pin it across the fwd/bwd boundary anyway).
+pub fn is_evictable(g: &Graph, t: TensorId) -> bool {
+    let tt = &g.tensors[t];
+    if tt.class != TensorClass::Activation || tt.is_output {
+        return false;
+    }
+    let Some(p) = tt.producer else {
+        return false;
+    };
+    if g.ops[p].phase != Phase::Forward {
+        return false;
+    }
+    let mut has_bwd = false;
+    for &c in &tt.consumers {
+        match g.ops[c].phase {
+            Phase::Backward => has_bwd = true,
+            Phase::Forward => {}
+            Phase::Loss | Phase::Update => return false,
+        }
+    }
+    has_bwd
+}
+
+/// Rewrite `g` so every tensor in `evict` (silently filtered through
+/// [`is_evictable`]) is recomputed for its backward consumers.
+///
+/// The recompute *region* is the set of producers of the evicted tensors.
+/// Clone ops chain through the region: a clone input is the clone of the
+/// corresponding tensor when that tensor's producer is itself in the
+/// region, and the original tensor (a retained checkpoint) otherwise. The
+/// result preserves every [`crate::graph::validate`] invariant —
+/// acyclicity included — which the property tests sweep.
+///
+/// `reach` must be the reachability of `g` (used only for the control-
+/// anchor safety check).
+pub fn rewrite(g: &Graph, reach: &Reachability, evict: &[TensorId]) -> RewriteResult {
+    let evicted: Vec<TensorId> = {
+        let mut seen = vec![false; g.n_tensors()];
+        let mut out = Vec::new();
+        for &t in evict {
+            if t < g.n_tensors() && !seen[t] && is_evictable(g, t) {
+                seen[t] = true;
+                out.push(t);
+            }
+        }
+        out
+    };
+    if evicted.is_empty() {
+        return RewriteResult {
+            graph: g.clone(),
+            recompute_ops: Vec::new(),
+            remap: Vec::new(),
+            recompute_bytes: 0,
+        };
+    }
+
+    let mut in_region = vec![false; g.n_ops()];
+    for &t in &evicted {
+        in_region[g.tensors[t].producer.expect("evictable implies producer")] = true;
+    }
+
+    let mut out = g.clone();
+    let mut clone_of: HashMap<TensorId, TensorId> = HashMap::new();
+    let mut recompute_ops = Vec::new();
+    let mut recompute_bytes = 0u64;
+
+    // Clone region ops in a topological order of the original graph so a
+    // clone's clone-inputs already exist when it is created.
+    for &v in &crate::graph::topo::program_order(g) {
+        if !in_region[v] {
+            continue;
+        }
+        let inputs: Vec<TensorId> = g.ops[v]
+            .inputs
+            .iter()
+            .map(|&u| match g.tensors[u].producer {
+                Some(p) if in_region[p] => clone_of[&u],
+                _ => u, // checkpoint: retained original
+            })
+            .collect();
+        let specs: Vec<(String, u64, TensorClass)> = g.ops[v]
+            .outputs
+            .iter()
+            .map(|&t| {
+                (
+                    format!("rc::{}", g.tensors[t].name),
+                    g.tensors[t].size,
+                    g.tensors[t].class,
+                )
+            })
+            .collect();
+        let specs_ref: Vec<(&str, u64, TensorClass)> = specs
+            .iter()
+            .map(|(n, s, c)| (n.as_str(), *s, *c))
+            .collect();
+        let (cid, couts) = out.add_op(
+            format!("rc::{}", g.ops[v].name),
+            g.ops[v].kind,
+            Phase::Backward,
+            &inputs,
+            &specs_ref,
+        );
+        recompute_ops.push(cid);
+        for (&ot, &ct) in g.ops[v].outputs.iter().zip(couts.iter()) {
+            clone_of.insert(ot, ct);
+            recompute_bytes += g.tensors[ot].size;
+        }
+    }
+
+    // Retarget the backward consumers of each evicted tensor to its clone.
+    let mut remap = Vec::with_capacity(evicted.len());
+    for &t in &evicted {
+        let ct = clone_of[&t];
+        let mut consumers: Vec<OpId> = g.tensors[t]
+            .consumers
+            .iter()
+            .copied()
+            .filter(|&c| g.ops[c].phase == Phase::Backward)
+            .collect();
+        consumers.sort_unstable();
+        consumers.dedup();
+        for c in consumers {
+            out.replace_input(c, t, ct);
+        }
+        remap.push((t, ct));
+    }
+
+    // Control anchor: pin clones after a loss op that provably precedes
+    // every retargeted consumer. Acyclic by construction — the anchor
+    // strictly precedes all clone-output consumers, and clones have no
+    // other successors, so no path can lead back to the anchor.
+    if let Some(anchor_tensor) = find_anchor(g, reach, &remap) {
+        for &r in &recompute_ops {
+            out.add_control_input(r, anchor_tensor);
+        }
+    }
+
+    debug_assert!(
+        crate::graph::validate::validate(&out).is_empty(),
+        "recompute rewrite produced an invalid graph"
+    );
+    RewriteResult {
+        graph: out,
+        recompute_ops,
+        remap,
+        recompute_bytes,
+    }
+}
+
+/// An output tensor of a loss-phase op that precedes every retargeted
+/// backward consumer, if one exists.
+fn find_anchor(
+    g: &Graph,
+    reach: &Reachability,
+    remap: &[(TensorId, TensorId)],
+) -> Option<TensorId> {
+    let mut rewired: Vec<OpId> = remap
+        .iter()
+        .flat_map(|&(t, _)| {
+            g.tensors[t]
+                .consumers
+                .iter()
+                .copied()
+                .filter(|&c| g.ops[c].phase == Phase::Backward)
+        })
+        .collect();
+    rewired.sort_unstable();
+    rewired.dedup();
+    g.ops
+        .iter()
+        .find(|op| {
+            op.phase == Phase::Loss
+                && !op.outputs.is_empty()
+                && rewired.iter().all(|&c| reach.precedes(op.id, c))
+        })
+        .map(|op| op.outputs[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate::validate;
+    use crate::graph::{OpKind, Phase, TensorClass};
+    use crate::sched::sim::total_peak;
+    use crate::sched::Schedule;
+
+    /// fwd chain a→b→loss, backward consumes both activations.
+    fn training_chain() -> Graph {
+        let mut g = Graph::new("chain");
+        let x = g.add_input_tensor("x", 10, TensorClass::Input);
+        let (_, t0) = g.add_op(
+            "a",
+            OpKind::MatMul,
+            Phase::Forward,
+            &[x],
+            &[("act0", 100, TensorClass::Activation)],
+        );
+        let (_, t1) = g.add_op(
+            "b",
+            OpKind::MatMul,
+            Phase::Forward,
+            &[t0[0]],
+            &[("act1", 100, TensorClass::Activation)],
+        );
+        let (_, l) = g.add_op(
+            "loss",
+            OpKind::Loss,
+            Phase::Loss,
+            &[t1[0]],
+            &[("loss", 4, TensorClass::TempBuffer)],
+        );
+        g.mark_output(l[0]);
+        let (_, d1) = g.add_op(
+            "b.bwd",
+            OpKind::MatMul,
+            Phase::Backward,
+            &[t1[0], l[0]],
+            &[("dact0", 100, TensorClass::Gradient)],
+        );
+        let (_, d0) = g.add_op(
+            "a.bwd",
+            OpKind::MatMul,
+            Phase::Backward,
+            &[t0[0], d1[0]],
+            &[("dx", 10, TensorClass::Gradient)],
+        );
+        g.mark_output(d0[0]);
+        g
+    }
+
+    #[test]
+    fn evictability_rules() {
+        let g = training_chain();
+        // act0 (tensor 1) and act1 (tensor 2): both fwd activations with
+        // backward consumers... but act1 is ALSO consumed by the loss op.
+        assert!(is_evictable(&g, 1));
+        assert!(!is_evictable(&g, 2)); // loss consumer pins it
+        assert!(!is_evictable(&g, 0)); // graph input
+        assert!(!is_evictable(&g, 3)); // loss output (TempBuffer + output)
+    }
+
+    #[test]
+    fn rewrite_preserves_validity_and_frees_the_original() {
+        let g = training_chain();
+        let reach = Reachability::compute(&g);
+        let r = rewrite(&g, &reach, &[1]);
+        assert!(validate(&r.graph).is_empty());
+        assert_eq!(r.evicted(), 1);
+        assert_eq!(r.recompute_ops.len(), 1);
+        assert_eq!(r.recompute_bytes, 100);
+        // The original act0 no longer has backward consumers.
+        let (orig, clone) = r.remap[0];
+        assert!(r.graph.tensors[orig]
+            .consumers
+            .iter()
+            .all(|&c| r.graph.ops[c].phase != Phase::Backward));
+        // The clone feeds exactly the old backward consumer (op 4: a.bwd).
+        assert_eq!(r.graph.tensors[clone].consumers, vec![4]);
+        // The clone op is pinned after the loss via a control input.
+        let rc = r.recompute_ops[0];
+        assert!(r.graph.ops[rc].inputs.contains(&3), "missing loss anchor");
+    }
+
+    #[test]
+    fn rewrite_reduces_peak_on_the_chain() {
+        // Make act0's retention the bottleneck by padding the chain.
+        let g = training_chain();
+        let reach = Reachability::compute(&g);
+        let r = rewrite(&g, &reach, &[1]);
+        // Program order of the augmented graph is a valid schedule; the
+        // evicted tensor no longer spans the loss, so the peak drops.
+        let base = total_peak(&g, &Schedule::from_order(&crate::graph::topo::program_order(&g)));
+        let order = crate::graph::topo::program_order(&r.graph);
+        assert!(crate::graph::topo::is_topological(&r.graph, &order));
+        let after = total_peak(&r.graph, &Schedule::from_order(&order));
+        assert!(
+            after <= base,
+            "recompute made the chain worse: {after} > {base}"
+        );
+    }
+
+    #[test]
+    fn empty_or_ineligible_evictions_are_identity() {
+        let g = training_chain();
+        let reach = Reachability::compute(&g);
+        let r = rewrite(&g, &reach, &[]);
+        assert_eq!(r.graph.n_ops(), g.n_ops());
+        assert_eq!(r.evicted(), 0);
+        let r = rewrite(&g, &reach, &[2, 0, 3]); // all ineligible
+        assert_eq!(r.graph.n_ops(), g.n_ops());
+        assert_eq!(r.recompute_bytes, 0);
+    }
+}

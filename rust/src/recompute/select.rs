@@ -1,0 +1,221 @@
+//! Candidate selection: which activations to evict, in what order.
+//!
+//! Two strategies, mirroring the two classic formulations:
+//!
+//! * [`Strategy::Greedy`] — Chen et al. (2016)-style max-size /
+//!   min-recompute-cost: every evictable tensor is its own candidate,
+//!   ranked by whether it is live at the baseline peak, then by
+//!   bytes-saved per byte-recomputed.
+//! * [`Strategy::SegmentCheckpoint`] — checkpoint at the memory-insensitive
+//!   boundaries found by [`crate::segments`] and recompute *within* a
+//!   segment: each independent segment's forward activations form one
+//!   candidate unit, so the retained set degenerates to the boundary
+//!   outputs — exactly the sublinear-memory checkpointing shape, driven by
+//!   the same graph division ROAM plans with.
+//!
+//! Candidates are *units*: the budgeted driver evicts a growing prefix of
+//! the returned list, and the rewriter merges the union into one recompute
+//! region (so chained evictions recompute through clones, not through
+//! retained originals).
+
+use super::rewrite::is_evictable;
+use crate::graph::{Graph, Phase, Reachability, TensorId};
+
+/// Selection strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Per-tensor greedy (max size, min recompute cost).
+    Greedy,
+    /// Per-segment checkpointing at memory-insensitive boundaries.
+    SegmentCheckpoint,
+}
+
+impl Strategy {
+    /// Parse a CLI name.
+    pub fn from_name(s: &str) -> Option<Strategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "greedy" => Some(Strategy::Greedy),
+            "segment" | "segment-checkpoint" => Some(Strategy::SegmentCheckpoint),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::Greedy => "greedy",
+            Strategy::SegmentCheckpoint => "segment",
+        }
+    }
+}
+
+/// One eviction unit.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    /// Tensors this unit evicts.
+    pub tensors: Vec<TensorId>,
+    /// Estimated bytes saved (Σ evicted sizes — optimistic; the driver
+    /// re-measures with the real simulator every round).
+    pub saved: u64,
+    /// Estimated recompute cost: Σ bytes produced by the cloned ops.
+    pub cost: u64,
+    /// Does the unit free anything live at the baseline peak step?
+    pub at_peak: bool,
+}
+
+/// Enumerate candidates under `strategy`, best first. `live_at_peak` is a
+/// per-tensor mask from the baseline plan (see
+/// [`crate::sched::sim::live_at`]); pass all-false when unknown.
+pub fn candidates(
+    g: &Graph,
+    reach: &Reachability,
+    strategy: Strategy,
+    live_at_peak: &[bool],
+) -> Vec<Candidate> {
+    let live = |t: TensorId| live_at_peak.get(t).copied().unwrap_or(false);
+    let mut out = match strategy {
+        Strategy::Greedy => {
+            let mut v = Vec::new();
+            for t in 0..g.n_tensors() {
+                if !is_evictable(g, t) {
+                    continue;
+                }
+                let p = g.tensors[t].producer.expect("evictable implies producer");
+                let cost: u64 = g.ops[p].outputs.iter().map(|&o| g.tensors[o].size).sum();
+                v.push(Candidate {
+                    tensors: vec![t],
+                    saved: g.tensors[t].size,
+                    cost,
+                    at_peak: live(t),
+                });
+            }
+            v
+        }
+        Strategy::SegmentCheckpoint => {
+            let bounds = crate::segments::boundaries_core(g, reach);
+            let segs = crate::segments::segments(g, reach, &bounds);
+            let mut v = Vec::new();
+            for seg in &segs {
+                let mut tensors: Vec<TensorId> = Vec::new();
+                let mut cost = 0u64;
+                for &op in &seg.ops {
+                    if g.ops[op].phase != Phase::Forward {
+                        continue;
+                    }
+                    let before = tensors.len();
+                    for &t in &g.ops[op].outputs {
+                        if is_evictable(g, t) {
+                            tensors.push(t);
+                        }
+                    }
+                    if tensors.len() > before {
+                        // This op will be cloned: count all its outputs.
+                        cost += g.ops[op].outputs.iter().map(|&o| g.tensors[o].size).sum::<u64>();
+                    }
+                }
+                if tensors.is_empty() {
+                    continue;
+                }
+                let saved: u64 = tensors.iter().map(|&t| g.tensors[t].size).sum();
+                let at_peak = tensors.iter().any(|&t| live(t));
+                v.push(Candidate {
+                    tensors,
+                    saved,
+                    cost,
+                    at_peak,
+                });
+            }
+            v
+        }
+    };
+    // Rank: peak-relieving first, then saved/cost ratio (cross-multiplied
+    // to stay in integers), then raw saving, then id for determinism.
+    out.sort_by(|a, b| {
+        b.at_peak
+            .cmp(&a.at_peak)
+            .then_with(|| {
+                let lhs = a.saved as u128 * b.cost.max(1) as u128;
+                let rhs = b.saved as u128 * a.cost.max(1) as u128;
+                rhs.cmp(&lhs)
+            })
+            .then(b.saved.cmp(&a.saved))
+            .then(a.tensors[0].cmp(&b.tensors[0]))
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::random::{random_training_graph, RandomGraphCfg};
+    use crate::models::{self, BuildCfg, ModelKind};
+    use crate::util::quick::forall;
+
+    #[test]
+    fn both_strategies_find_candidates_on_models() {
+        let g = models::build(ModelKind::Vit, &BuildCfg::default());
+        let reach = Reachability::compute(&g);
+        let none = vec![false; g.n_tensors()];
+        for s in [Strategy::Greedy, Strategy::SegmentCheckpoint] {
+            let c = candidates(&g, &reach, s, &none);
+            assert!(!c.is_empty(), "{:?} found nothing", s);
+            for cand in &c {
+                assert!(cand.saved > 0);
+                assert!(cand.cost >= cand.saved);
+                for &t in &cand.tensors {
+                    assert!(is_evictable(&g, t));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn candidates_are_disjoint_units() {
+        forall("candidate units never overlap", 20, |rng| {
+            let fwd_ops = rng.usize_in(4, 15);
+            let g = random_training_graph(
+                rng,
+                &RandomGraphCfg {
+                    fwd_ops,
+                    ..Default::default()
+                },
+            );
+            let reach = Reachability::compute(&g);
+            let none = vec![false; g.n_tensors()];
+            for s in [Strategy::Greedy, Strategy::SegmentCheckpoint] {
+                let cands = candidates(&g, &reach, s, &none);
+                let mut seen = vec![false; g.n_tensors()];
+                for c in &cands {
+                    for &t in &c.tensors {
+                        if seen[t] {
+                            return Err(format!("tensor {t} in two {s:?} units"));
+                        }
+                        seen[t] = true;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn peak_relief_ranks_first() {
+        let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
+        let reach = Reachability::compute(&g);
+        let mut live = vec![false; g.n_tensors()];
+        // Mark one known-evictable tensor as live-at-peak; it must sort
+        // into the leading at_peak block.
+        let target = (0..g.n_tensors()).find(|&t| is_evictable(&g, t)).unwrap();
+        live[target] = true;
+        let c = candidates(&g, &reach, Strategy::Greedy, &live);
+        assert!(c[0].at_peak);
+        assert!(c[0].tensors == vec![target]);
+    }
+
+    #[test]
+    fn strategy_names_roundtrip() {
+        for s in [Strategy::Greedy, Strategy::SegmentCheckpoint] {
+            assert_eq!(Strategy::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Strategy::from_name("nope"), None);
+    }
+}

@@ -1,0 +1,172 @@
+//! Memory-vs-recompute tradeoff sweep.
+//!
+//! Runs **one** escalation sequence (shared across all budget points, so
+//! an N-point sweep costs barely more than its tightest point) and reads
+//! each budget's plan off the prefix of rounds needed to satisfy it. A
+//! tighter budget can only consume *more* rounds and therefore sees a
+//! minimum over a superset — which makes the reported totals monotonically
+//! non-increasing as the budget tightens, by construction. The property
+//! tests pin this down; `benches/recompute_tradeoff.rs` draws the curve.
+
+use super::budget::{escalate, RecomputeCfg, Round};
+use super::select::candidates;
+use crate::graph::{Graph, Reachability};
+use crate::planner::roam_plan;
+use crate::sched::sim::{live_at, profile};
+
+/// One point of the tradeoff curve.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// Budget as a fraction of the unbudgeted ROAM total.
+    pub fraction: f64,
+    /// Resolved budget in bytes.
+    pub budget: u64,
+    /// Achieved `actual_peak + persistent`.
+    pub total: u64,
+    /// Theoretical peak of the chosen plan (dynamic arena).
+    pub theoretical_peak: u64,
+    /// Budget satisfied?
+    pub met: bool,
+    /// Evicted tensors in the chosen plan.
+    pub evicted: usize,
+    /// Recompute ops added.
+    pub recompute_ops: usize,
+    /// FLOP-proxy overhead bytes.
+    pub recompute_bytes: u64,
+}
+
+/// Result of a sweep: the shared baseline plus one point per fraction.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    /// `actual_peak + persistent` of the recompute-free ROAM plan.
+    pub baseline_total: u64,
+    /// Points in the order the fractions were given.
+    pub points: Vec<SweepPoint>,
+}
+
+/// Sweep budgets `fraction × baseline_total` over `g`.
+///
+/// Fractions may be given in any order; rounds are shared, with the
+/// escalation sized by the tightest fraction.
+pub fn tradeoff_sweep(g: &Graph, fractions: &[f64], cfg: &RecomputeCfg) -> SweepResult {
+    let base = roam_plan(g, &cfg.roam);
+    let baseline_total = base.total_bytes();
+    let budget_of = |f: f64| (baseline_total as f64 * f).floor() as u64;
+
+    let tightest = fractions
+        .iter()
+        .copied()
+        .fold(f64::INFINITY, f64::min)
+        .max(0.0);
+    let needs_rounds = fractions.iter().any(|&f| budget_of(f) < baseline_total);
+
+    let rounds: Vec<Round> = if needs_rounds {
+        let reach = Reachability::compute(g);
+        let prof = profile(g, &base.schedule);
+        let mut live_mask = vec![false; g.n_tensors()];
+        for t in live_at(g, &base.schedule, prof.peak_step) {
+            live_mask[t] = true;
+        }
+        let cands = candidates(g, &reach, cfg.strategy, &live_mask);
+        let tight_budget = budget_of(tightest);
+        // Start from a single unit so loose budgets get low-overhead
+        // points; `cfg.max_rounds` caps the escalation as everywhere else.
+        escalate(g, &reach, &cands, cfg, 1, cfg.max_rounds, |best| {
+            best <= tight_budget
+        })
+    } else {
+        Vec::new()
+    };
+
+    let points = fractions
+        .iter()
+        .map(|&f| {
+            let budget = budget_of(f);
+            // Walk rounds until the running minimum satisfies this budget
+            // (or rounds run out); report that minimum.
+            let mut best: Option<&Round> = None;
+            let mut best_total = baseline_total;
+            for r in &rounds {
+                if best_total <= budget {
+                    break;
+                }
+                if r.total() < best_total {
+                    best_total = r.total();
+                    best = Some(r);
+                }
+            }
+            match best {
+                Some(r) => SweepPoint {
+                    fraction: f,
+                    budget,
+                    total: r.total(),
+                    theoretical_peak: r.plan.theoretical_peak,
+                    met: r.total() <= budget,
+                    evicted: r.rewrite.evicted(),
+                    recompute_ops: r.rewrite.recompute_ops.len(),
+                    recompute_bytes: r.rewrite.recompute_bytes,
+                },
+                None => SweepPoint {
+                    fraction: f,
+                    budget,
+                    total: baseline_total,
+                    theoretical_peak: base.theoretical_peak,
+                    met: baseline_total <= budget,
+                    evicted: 0,
+                    recompute_ops: 0,
+                    recompute_bytes: 0,
+                },
+            }
+        })
+        .collect();
+
+    SweepResult {
+        baseline_total,
+        points,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{self, BuildCfg, ModelKind};
+    use crate::planner::RoamCfg;
+    use crate::recompute::Strategy;
+
+    #[test]
+    fn sweep_is_monotone_and_anchored() {
+        let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
+        let cfg = RecomputeCfg {
+            strategy: Strategy::Greedy,
+            roam: RoamCfg {
+                parallel: false,
+                order_max_nodes: 5_000,
+                dsa_max_nodes: 5_000,
+                ..RoamCfg::default()
+            },
+            ..RecomputeCfg::default()
+        };
+        let r = tradeoff_sweep(&g, &[1.0, 0.8, 0.6], &cfg);
+        assert_eq!(r.points.len(), 3);
+        // fraction 1.0 is the baseline: no overhead, met.
+        assert!(r.points[0].met);
+        assert_eq!(r.points[0].recompute_ops, 0);
+        assert_eq!(r.points[0].total, r.baseline_total);
+        // Totals never increase as the budget tightens.
+        for w in r.points.windows(2) {
+            assert!(
+                w[1].total <= w[0].total,
+                "sweep not monotone: {} -> {}",
+                w[0].total,
+                w[1].total
+            );
+        }
+        // Overhead only ever appears together with a reduction.
+        for p in &r.points {
+            if p.recompute_ops > 0 {
+                assert!(p.total < r.baseline_total);
+                assert!(p.recompute_bytes > 0);
+            }
+        }
+    }
+}

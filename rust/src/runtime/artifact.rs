@@ -1,8 +1,9 @@
 //! Artifact directory: HLO text files + `meta.json` written by
 //! `python/compile/aot.py`.
 
+use crate::err;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
-use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Metadata of an AOT-compiled model bundle.
@@ -33,17 +34,17 @@ impl Artifacts {
         let meta_path = dir.join("meta.json");
         let text = std::fs::read_to_string(&meta_path)
             .with_context(|| format!("reading {}", meta_path.display()))?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| err!("meta.json: {e}"))?;
         let num = |k: &str| -> Result<u64> {
             j.get(k)
                 .and_then(|v| v.as_u64())
-                .ok_or_else(|| anyhow!("meta.json missing numeric field '{k}'"))
+                .ok_or_else(|| err!("meta.json missing numeric field '{k}'"))
         };
         let s = |k: &str| -> Result<String> {
             j.get(k)
                 .and_then(|v| v.as_str())
                 .map(|x| x.to_string())
-                .ok_or_else(|| anyhow!("meta.json missing string field '{k}'"))
+                .ok_or_else(|| err!("meta.json missing string field '{k}'"))
         };
         Ok(Artifacts {
             dir: dir.to_path_buf(),

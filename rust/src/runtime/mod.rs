@@ -10,7 +10,7 @@
 
 pub mod artifact;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use std::path::Path;
 
 /// A compiled computation ready to execute.
@@ -58,7 +58,7 @@ impl Runtime {
     pub fn parse_graph(&self, path: &Path) -> Result<crate::graph::Graph> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
-        crate::hlo::parse_hlo_text(&text).map_err(|e| anyhow::anyhow!("{e}"))
+        crate::hlo::parse_hlo_text(&text).map_err(crate::util::error::Error::from)
     }
 }
 

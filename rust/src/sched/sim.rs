@@ -71,6 +71,29 @@ pub fn theoretical_peak(g: &Graph, sched: &Schedule) -> u64 {
     profile(g, sched).peak
 }
 
+/// Peak *including* the persistent resident set — the quantity a memory
+/// budget constrains. Used by the budgeted recompute driver to compare
+/// schedules over augmented (recompute-rewritten) graphs cheaply, without
+/// solving a layout.
+pub fn total_peak(g: &Graph, sched: &Schedule) -> u64 {
+    let p = profile(g, sched);
+    p.peak + p.persistent
+}
+
+/// Ids of the dynamic tensors live at `step` under `sched`. The recompute
+/// candidate selectors use this (at the peak step) to rank evictions by
+/// whether they actually relieve the bottleneck.
+pub fn live_at(g: &Graph, sched: &Schedule, step: usize) -> Vec<crate::graph::TensorId> {
+    let horizon = sched.horizon().max(1);
+    let lt = lifetimes_with_horizon(g, &sched.ts, horizon - 1);
+    g.tensors
+        .iter()
+        .filter(|t| !t.class.is_persistent())
+        .filter(|t| lt[t.id].birth <= step && step <= lt[t.id].death)
+        .map(|t| t.id)
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,6 +159,19 @@ mod tests {
         assert_eq!(p.peak, 10);
         assert_eq!(p.persistent, 1000);
         assert_eq!(p.total_peak(), 1010);
+    }
+
+    #[test]
+    fn live_at_matches_profile() {
+        let g = fig2();
+        let s = Schedule::from_order(&[0, 1, 2, 3]);
+        let p = profile(&g, &s);
+        for step in 0..p.per_step.len() {
+            let live = live_at(&g, &s, step);
+            let sum: u64 = live.iter().map(|&t| g.tensors[t].size).sum();
+            assert_eq!(sum, p.per_step[step], "step {step}");
+        }
+        assert_eq!(total_peak(&g, &s), p.peak + p.persistent);
     }
 
     #[test]

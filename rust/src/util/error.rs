@@ -1,0 +1,127 @@
+//! Minimal error substrate (`anyhow` is not vendorable offline).
+//!
+//! Provides the small slice of `anyhow`'s API the repo actually uses — a
+//! string-backed [`Error`], a defaulted [`Result`] alias, the [`err!`] /
+//! [`bail!`] macros and a [`Context`] extension trait — so the CLI, the
+//! PJRT runtime and the coordinator carry zero third-party dependencies.
+//!
+//! [`err!`]: crate::err
+//! [`bail!`]: crate::bail
+
+use std::fmt;
+
+/// A string-backed error. Context is accumulated by prefixing, so a chain
+/// renders as `outermost: ...: root cause`.
+///
+/// Deliberately does **not** implement `std::error::Error`: that keeps the
+/// blanket `From<E: std::error::Error>` conversion (what makes `?` work on
+/// `io::Error`, parse errors, FFI errors, ...) coherent, exactly like
+/// `anyhow::Error`.
+pub struct Error(String);
+
+impl Error {
+    /// Build an error from a message.
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error(e.to_string())
+    }
+}
+
+/// `Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] with `format!` syntax.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from `format!` syntax.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Attach context to a `Result`'s error or an `Option`'s absence.
+pub trait Context<T> {
+    /// Prefix the error with `ctx` (eagerly evaluated).
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Prefix the error with `f()` (evaluated only on the error path).
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path/xyz")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let r: std::result::Result<(), String> = Err("root".to_string());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: root");
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = crate::err!("bad value {}", 3);
+        assert_eq!(format!("{e}"), "bad value 3");
+        fn f() -> Result<()> {
+            crate::bail!("nope: {}", "reason");
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope: reason");
+    }
+}

@@ -1,12 +1,14 @@
 //! Utility substrate.
 //!
-//! The build is fully offline and the only vendored third-party crates are
-//! the `xla` closure + `anyhow`, so the little pieces a framework usually
-//! pulls from crates.io (CLI parsing, JSON, PRNG, property testing, a bench
-//! harness) are implemented here instead.
+//! The build is fully offline and the default feature set carries **zero**
+//! third-party dependencies (the optional `pjrt` feature additionally needs
+//! the `xla` closure), so the little pieces a framework usually pulls from
+//! crates.io (CLI parsing, JSON, PRNG, property testing, a bench harness,
+//! error handling) are implemented here instead.
 
 pub mod bitset;
 pub mod cli;
+pub mod error;
 pub mod human;
 pub mod json;
 pub mod quick;

@@ -1,0 +1,288 @@
+//! Property + integration tests for the budgeted rematerialization
+//! subsystem: rewrite validity, budget compliance, sweep monotonicity, and
+//! the paper-scale GPT-2 acceptance scenario.
+
+use roam::graph::random::{random_training_graph, RandomGraphCfg};
+use roam::graph::topo::is_topological;
+use roam::graph::{validate::validate, Reachability};
+use roam::layout::sim::conflicts;
+use roam::layout::Layout;
+use roam::models::{self, BuildCfg, ModelKind, Optim};
+use roam::planner::{layout_items, RoamCfg};
+use roam::recompute::{
+    candidates, is_evictable, rewrite, roam_plan_budgeted, tradeoff_sweep, BudgetSpec,
+    RecomputeCfg, Strategy,
+};
+use roam::util::quick::forall;
+
+fn quick_roam() -> RoamCfg {
+    RoamCfg {
+        parallel: false,
+        order_max_nodes: 4_000,
+        dsa_max_nodes: 4_000,
+        ..RoamCfg::default()
+    }
+}
+
+fn quick_cfg(strategy: Strategy) -> RecomputeCfg {
+    RecomputeCfg {
+        strategy,
+        roam: quick_roam(),
+        ..RecomputeCfg::default()
+    }
+}
+
+#[test]
+fn rewritten_graphs_always_validate() {
+    forall("rewrite preserves graph validity", 25, |rng| {
+        let fwd_ops = rng.usize_in(4, 14);
+        let g = random_training_graph(
+            rng,
+            &RandomGraphCfg {
+                fwd_ops,
+                ..Default::default()
+            },
+        );
+        let reach = Reachability::compute(&g);
+        // Random eviction subset: every evictable tensor with p = 1/2,
+        // plus some deliberately ineligible ids the rewriter must filter.
+        let mut evict: Vec<usize> = (0..g.n_tensors())
+            .filter(|&t| is_evictable(&g, t) && rng.chance(0.5))
+            .collect();
+        evict.push(0);
+        let r = rewrite(&g, &reach, &evict);
+        let defects = validate(&r.graph);
+        if !defects.is_empty() {
+            return Err(format!("defects: {:?}", &defects[..defects.len().min(5)]));
+        }
+        // Evicted tensors must have lost every backward consumer.
+        for &(orig, clone) in &r.remap {
+            let bad = r.graph.tensors[orig]
+                .consumers
+                .iter()
+                .any(|&c| matches!(r.graph.ops[c].phase, roam::graph::Phase::Backward));
+            if bad {
+                return Err(format!("evicted tensor {orig} kept a backward consumer"));
+            }
+            if r.graph.tensors[clone].consumers.is_empty() {
+                return Err(format!("clone {clone} has no consumers"));
+            }
+        }
+        // The augmented graph still has a topological order (acyclic).
+        let order = roam::graph::topo::program_order(&r.graph);
+        if !is_topological(&r.graph, &order) {
+            return Err("augmented graph lost acyclicity".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn full_strategy_rewrites_validate_on_models() {
+    for kind in [ModelKind::Alexnet, ModelKind::Vit] {
+        let g = models::build(kind, &BuildCfg::default());
+        let reach = Reachability::compute(&g);
+        for strategy in [Strategy::Greedy, Strategy::SegmentCheckpoint] {
+            let none = vec![false; g.n_tensors()];
+            let cands = candidates(&g, &reach, strategy, &none);
+            let evict: Vec<usize> = cands.iter().flat_map(|c| c.tensors.clone()).collect();
+            let r = rewrite(&g, &reach, &evict);
+            assert!(
+                validate(&r.graph).is_empty(),
+                "{:?}/{:?}: invalid rewrite",
+                kind,
+                strategy
+            );
+            assert_eq!(r.evicted(), evict.len());
+        }
+    }
+}
+
+#[test]
+fn budgeted_plans_respect_budget_and_baseline() {
+    forall("budgeted plan bounds", 8, |rng| {
+        let fwd_ops = rng.usize_in(4, 10);
+        let g = random_training_graph(
+            rng,
+            &RandomGraphCfg {
+                fwd_ops,
+                ..Default::default()
+            },
+        );
+        let frac = 0.5 + 0.1 * rng.usize_in(0, 6) as f64; // 0.5 ..= 1.1
+        let cfg = quick_cfg(Strategy::Greedy);
+        let r = roam_plan_budgeted(&g, BudgetSpec::Fraction(frac), &cfg);
+        if r.total() > r.baseline_total {
+            return Err(format!(
+                "budgeted {} worse than baseline {}",
+                r.total(),
+                r.baseline_total
+            ));
+        }
+        if r.met && r.total() > r.budget {
+            return Err(format!("met but {} > budget {}", r.total(), r.budget));
+        }
+        if !r.met && r.rounds < cfg.max_rounds && !r.exhausted {
+            return Err("gave up before exhausting candidates".into());
+        }
+        // The plan must be executable on the graph it was made for.
+        if !is_topological(&r.graph, &r.plan.order) {
+            return Err("plan order not topological on augmented graph".into());
+        }
+        let items = layout_items(&r.graph, &r.plan.schedule);
+        let layout = Layout {
+            offsets: r.plan.offsets.clone(),
+        };
+        if !conflicts(&items, &layout).is_empty() {
+            return Err("budgeted layout has address conflicts".into());
+        }
+        if r.plan.actual_peak < r.plan.theoretical_peak {
+            return Err("actual < theoretical".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn achievable_budgets_are_met() {
+    // "Never exceed the budget when one is feasible": set the budget to
+    // exactly what full eviction achieves — the driver must reach it.
+    forall("feasible budgets are met", 6, |rng| {
+        let fwd_ops = rng.usize_in(4, 9);
+        let g = random_training_graph(
+            rng,
+            &RandomGraphCfg {
+                fwd_ops,
+                ..Default::default()
+            },
+        );
+        let cfg = quick_cfg(Strategy::Greedy);
+        let reach = Reachability::compute(&g);
+        let none = vec![false; g.n_tensors()];
+        let cands = candidates(&g, &reach, Strategy::Greedy, &none);
+        if cands.is_empty() {
+            return Ok(()); // nothing recomputable: vacuously fine
+        }
+        let evict: Vec<usize> = cands.iter().flat_map(|c| c.tensors.clone()).collect();
+        let full = rewrite(&g, &reach, &evict);
+        let full_total = roam::planner::roam_plan(&full.graph, &cfg.roam).total_bytes();
+        let r = roam_plan_budgeted(&g, BudgetSpec::Bytes(full_total), &cfg);
+        if !r.met {
+            return Err(format!(
+                "budget {} achievable by full eviction, driver got {}",
+                full_total,
+                r.total()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sweep_monotone_on_random_graphs() {
+    forall("tradeoff sweep monotone", 6, |rng| {
+        let fwd_ops = rng.usize_in(4, 10);
+        let g = random_training_graph(
+            rng,
+            &RandomGraphCfg {
+                fwd_ops,
+                ..Default::default()
+            },
+        );
+        let cfg = quick_cfg(Strategy::Greedy);
+        let fractions = [1.0, 0.85, 0.7, 0.55, 0.4];
+        let s = tradeoff_sweep(&g, &fractions, &cfg);
+        if s.points[0].total != s.baseline_total {
+            return Err("fraction 1.0 must anchor at the baseline".into());
+        }
+        for w in s.points.windows(2) {
+            if w[1].total > w[0].total {
+                return Err(format!(
+                    "peak increased as budget tightened: {} -> {}",
+                    w[0].total, w[1].total
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The acceptance scenario at test scale: GPT-2 (coarse granularity, SGD
+/// so the test fits tier-1 runtime) under a 0.6 budget. The full-fidelity
+/// Adam + FX-granularity variant is the `#[ignore]`d test below, matching
+/// the repo convention for GPT2-XL-scale runs.
+#[test]
+fn budgeted_gpt2_meets_60pct_budget() {
+    let g = models::build(
+        ModelKind::Gpt2Xl,
+        &BuildCfg {
+            batch: 1,
+            optim: Optim::Sgd,
+            fine_grained: false,
+            ..BuildCfg::default()
+        },
+    );
+    let cfg = RecomputeCfg {
+        strategy: Strategy::Greedy,
+        roam: RoamCfg {
+            order_max_nodes: 10_000,
+            dsa_max_nodes: 10_000,
+            time_limit_secs: 300.0,
+            ..RoamCfg::default()
+        },
+        max_rounds: 10,
+        ..RecomputeCfg::default()
+    };
+    let r = roam_plan_budgeted(&g, BudgetSpec::Fraction(0.6), &cfg);
+    assert!(
+        r.met,
+        "gpt2 0.6 budget not met: {} of {} baseline ({} budget)",
+        r.total(),
+        r.baseline_total,
+        r.budget
+    );
+    assert!(r.total() * 10 <= r.baseline_total * 6, "above 60% of baseline");
+    assert!(r.recompute_ops > 0);
+    assert!(r.recompute_bytes > 0);
+    // Overhead is reported in the plan stats (acceptance criterion).
+    let stat = |k: &str| {
+        r.plan
+            .stats
+            .iter()
+            .find(|(n, _)| n == k)
+            .map(|&(_, v)| v)
+            .unwrap_or_else(|| panic!("missing stat {k}"))
+    };
+    assert_eq!(stat("recompute_ops"), r.recompute_ops as f64);
+    assert!(stat("recompute_extra_bytes") > 0.0);
+    assert_eq!(stat("budget_met"), 1.0);
+    // And the plan is executable: topological on the augmented graph,
+    // conflict-free layout.
+    assert!(is_topological(&r.graph, &r.plan.order));
+    let items = layout_items(&r.graph, &r.plan.schedule);
+    assert!(conflicts(
+        &items,
+        &Layout {
+            offsets: r.plan.offsets.clone()
+        }
+    )
+    .is_empty());
+    assert!(validate(&r.graph).is_empty());
+}
+
+/// Full-fidelity acceptance run: `roam recompute --model gpt2 --budget
+/// 0.6` equivalent (Adam, FX granularity, seq 1024). Heavy — run with
+/// `cargo test -- --ignored`.
+#[test]
+#[ignore = "GPT2-XL at FX granularity is a >10k-op graph; run with --ignored"]
+fn budgeted_gpt2_full_fidelity() {
+    let g = models::build(ModelKind::Gpt2Xl, &BuildCfg::default());
+    let r = roam_plan_budgeted(
+        &g,
+        BudgetSpec::Fraction(0.6),
+        &RecomputeCfg::default(),
+    );
+    assert!(r.met, "gpt2-xl 0.6 budget not met: {}", r.total());
+    assert!(r.total() * 10 <= r.baseline_total * 6);
+    assert!(r.recompute_ops > 0);
+}
