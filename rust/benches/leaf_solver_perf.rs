@@ -1,0 +1,252 @@
+//! Leaf-solver performance: nodes/sec of the incremental search cores vs
+//! the retained pre-incremental references, plus end-to-end planner
+//! wall-clock per workload — the planning-speed trajectory behind the
+//! paper's 53.7x speedup claim (Fig 14).
+//!
+//! Writes `bench_results/leaf_solver_perf.json` (benchkit table) and the
+//! repo-root `BENCH_planner.json` trajectory file consumed by CI.
+//!
+//! `cargo bench --bench leaf_solver_perf [-- --small] [--max-nodes N]`
+
+use roam::benchkit::Report;
+use roam::graph::{Graph, Lifetime, Reachability};
+use roam::layout::dsa::{min_arena_layout, DsaCfg};
+use roam::layout::dsa_ref::min_arena_layout_ref;
+use roam::layout::Item;
+use roam::models::{self, BuildCfg, ModelKind};
+use roam::planner::roam::extract_subgraph;
+use roam::planner::{roam_plan, RoamCfg};
+use roam::sched::bnb::{min_peak_order, BnbCfg};
+use roam::sched::bnb_ref::min_peak_order_ref;
+use roam::segments::tree::{construct, TreeCfg};
+use roam::util::cli::Args;
+use roam::util::json::Json;
+use roam::util::{Pcg64, Stopwatch};
+
+#[derive(Clone, Copy, Default)]
+struct SolverStats {
+    nodes: u64,
+    secs: f64,
+}
+
+impl SolverStats {
+    fn nodes_per_sec(&self) -> f64 {
+        self.nodes as f64 / self.secs.max(1e-9)
+    }
+}
+
+/// Solve every non-trivial ordering leaf of `g` (as the planner extracts
+/// them at `node_limit`) with both solvers under the same node budget.
+fn bench_order_leaves(
+    g: &Graph,
+    node_limit: usize,
+    max_nodes: u64,
+) -> (SolverStats, SolverStats, usize) {
+    let reach = Reachability::compute(g);
+    let tree = construct(g, &reach, &TreeCfg { node_limit });
+    let cfg = BnbCfg {
+        max_nodes,
+        max_ops: node_limit.max(1),
+        ..Default::default()
+    };
+    let mut reference = SolverStats::default();
+    let mut incremental = SolverStats::default();
+    let mut leaves = 0usize;
+    for task in tree.order_tasks.iter().filter(|t| t.ops.len() > 1) {
+        let (sub, _) = extract_subgraph(g, &task.ops);
+        leaves += 1;
+        let sw = Stopwatch::start();
+        let r = min_peak_order_ref(&sub, &cfg);
+        reference.secs += sw.secs();
+        reference.nodes += r.nodes_explored;
+        let sw = Stopwatch::start();
+        let i = min_peak_order(&sub, &cfg);
+        incremental.secs += sw.secs();
+        incremental.nodes += i.nodes_explored;
+        assert!(
+            !(r.proved_optimal && i.proved_optimal) || r.peak == i.peak,
+            "solver divergence on a leaf: ref {} inc {}",
+            r.peak,
+            i.peak
+        );
+    }
+    (reference, incremental, leaves)
+}
+
+/// Deterministic synthetic DSA instances (the per-window item sets the
+/// planner feeds the layout search), solved by both cores.
+fn bench_dsa(rounds: usize, n_items: usize, workers: usize) -> (SolverStats, SolverStats) {
+    let mut rng = Pcg64::new(42);
+    let mut reference = SolverStats::default();
+    let mut incremental = SolverStats::default();
+    for _ in 0..rounds {
+        let items: Vec<Item> = (0..n_items)
+            .map(|id| {
+                let b = rng.usize_in(0, 12);
+                Item {
+                    id,
+                    life: Lifetime {
+                        birth: b,
+                        death: b + rng.usize_in(0, 6),
+                    },
+                    size: 1 + rng.gen_range(4096),
+                }
+            })
+            .collect();
+        let sw = Stopwatch::start();
+        let r = min_arena_layout_ref(&items, &DsaCfg::default());
+        reference.secs += sw.secs();
+        reference.nodes += r.nodes_explored;
+        let sw = Stopwatch::start();
+        let i = min_arena_layout(&items, &DsaCfg {
+            workers,
+            ..Default::default()
+        });
+        incremental.secs += sw.secs();
+        incremental.nodes += i.nodes_explored;
+        assert!(
+            r.cut_short || i.cut_short || r.arena == i.arena,
+            "dsa divergence: ref {} inc {}",
+            r.arena,
+            i.arena
+        );
+    }
+    (reference, incremental)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let small = args.flag("small");
+    let max_nodes = args.u64("max-nodes", 40_000);
+
+    let mut workloads: Vec<(String, Graph)> = vec![
+        (
+            "mobilenet/bs1".to_string(),
+            models::build(ModelKind::Mobilenet, &BuildCfg {
+                batch: 1,
+                ..Default::default()
+            }),
+        ),
+        (
+            "synthetic-transformer/d2".to_string(),
+            models::build(ModelKind::SyntheticTransformer, &BuildCfg {
+                batch: 1,
+                depth: 2,
+                ..Default::default()
+            }),
+        ),
+    ];
+    if !small {
+        for kind in [ModelKind::Vit, ModelKind::Bert] {
+            workloads.push((
+                format!("{}/bs1", kind.name()),
+                models::build(kind, &BuildCfg {
+                    batch: 1,
+                    ..Default::default()
+                }),
+            ));
+        }
+    }
+
+    // --- 1. ordering-leaf nodes/sec, incremental vs reference ------------
+    let mut rep = Report::new(
+        "leaf_solver_perf",
+        "Leaf-solver nodes/sec: incremental core vs pre-incremental reference",
+        &["workload", "leaves", "ref_knps", "inc_knps", "speedup"],
+    );
+    let mut order_rows = Vec::new();
+    for (label, g) in &workloads {
+        let (reference, incremental, leaves) = bench_order_leaves(g, 64, max_nodes);
+        let speedup = incremental.nodes_per_sec() / reference.nodes_per_sec().max(1e-9);
+        rep.row(&[
+            label.clone(),
+            leaves.to_string(),
+            format!("{:.1}", reference.nodes_per_sec() / 1e3),
+            format!("{:.1}", incremental.nodes_per_sec() / 1e3),
+            format!("{speedup:.2}x"),
+        ]);
+        order_rows.push(Json::obj(vec![
+            ("workload", Json::Str(label.clone())),
+            ("node_limit", Json::Num(64.0)),
+            ("leaves", Json::Num(leaves as f64)),
+            ("ref_nodes_per_sec", Json::Num(reference.nodes_per_sec())),
+            ("inc_nodes_per_sec", Json::Num(incremental.nodes_per_sec())),
+            ("speedup_x", Json::Num(speedup)),
+        ]));
+    }
+
+    // --- 2. DSA nodes/sec: core only (workers=1) and pooled orders -------
+    let mut dsa_rows = Vec::new();
+    for (label, workers, rounds, n_items) in
+        [("dsa/core", 1usize, 12usize, 16usize), ("dsa/pool", 3, 12, 16)]
+    {
+        let (reference, incremental) = bench_dsa(rounds, n_items, workers);
+        let speedup = incremental.nodes_per_sec() / reference.nodes_per_sec().max(1e-9);
+        rep.row(&[
+            label.to_string(),
+            rounds.to_string(),
+            format!("{:.1}", reference.nodes_per_sec() / 1e3),
+            format!("{:.1}", incremental.nodes_per_sec() / 1e3),
+            format!("{speedup:.2}x"),
+        ]);
+        dsa_rows.push(Json::obj(vec![
+            ("workload", Json::Str(label.to_string())),
+            ("workers", Json::Num(workers as f64)),
+            ("ref_nodes_per_sec", Json::Num(reference.nodes_per_sec())),
+            ("inc_nodes_per_sec", Json::Num(incremental.nodes_per_sec())),
+            ("speedup_x", Json::Num(speedup)),
+        ]));
+    }
+    rep.finish();
+
+    // --- 3. end-to-end planner wall-clock per workload --------------------
+    let mut rep = Report::new(
+        "planner_wall_clock",
+        "Planner wall-clock per workload (roam_plan)",
+        &["workload", "node_limit", "secs", "theo_peak_mib", "actual_peak_mib"],
+    );
+    let node_limits: &[usize] = if small { &[64] } else { &[64, 256] };
+    let mut planner_rows = Vec::new();
+    for (label, g) in &workloads {
+        for &node_limit in node_limits {
+            let plan = roam_plan(g, &RoamCfg {
+                node_limit,
+                ..Default::default()
+            });
+            rep.row(&[
+                label.clone(),
+                node_limit.to_string(),
+                format!("{:.3}", plan.planning_secs),
+                roam::benchkit::mib(plan.theoretical_peak),
+                roam::benchkit::mib(plan.actual_peak),
+            ]);
+            planner_rows.push(Json::obj(vec![
+                ("workload", Json::Str(label.clone())),
+                ("node_limit", Json::Num(node_limit as f64)),
+                ("planning_secs", Json::Num(plan.planning_secs)),
+                ("theoretical_peak", Json::Num(plan.theoretical_peak as f64)),
+                ("actual_peak", Json::Num(plan.actual_peak as f64)),
+            ]));
+        }
+    }
+    rep.finish();
+
+    // --- 4. repo-root trajectory file -------------------------------------
+    let out = Json::obj(vec![
+        ("bench", Json::Str("leaf_solver_perf".to_string())),
+        ("schema", Json::Str("planner-perf-v1".to_string())),
+        (
+            "generated_by",
+            Json::Str("cargo bench --bench leaf_solver_perf".to_string()),
+        ),
+        ("leaf_order_search", Json::Arr(order_rows)),
+        ("dsa_search", Json::Arr(dsa_rows)),
+        ("planner_wall_clock", Json::Arr(planner_rows)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .join("BENCH_planner.json");
+    std::fs::write(&path, format!("{}\n", out.pretty())).expect("write BENCH_planner.json");
+    println!("--- planner trajectory → {}", path.display());
+}

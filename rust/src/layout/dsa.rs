@@ -5,25 +5,60 @@
 //! peak over the items), so the search stops the moment an incumbent
 //! reaches it — on training leaves this happens almost always, which is
 //! exactly the paper's "<1% fragmentation across all tested scenarios"
-//! (Table I). The search explores, per item (in a fixed size-major order),
+//! (Table I). The search explores, per item (in a fixed placement order),
 //! the bottom-left-normalised candidate offsets (0 or the top of a
 //! time-overlapping placed item); several placement orders are tried.
 //! `proved_optimal` is only claimed when the arena equals the lower bound.
 //!
+//! ## Incremental search core
+//!
+//! * An **overlap-interval index** is built once per search: because items
+//!   are placed in a fixed order, the set of already-placed neighbours of
+//!   item `i` is exactly `fixed ∪ items[..i]`, so the time-overlap filter
+//!   the old code re-ran over the whole placed list at every node is
+//!   precomputed into a CSR list of overlapping predecessor indices.
+//! * Candidate generation fills **pooled per-depth scratch buffers**
+//!   ([`candidate_offsets_into`]) instead of allocating two fresh `Vec`s
+//!   per node; steady-state node expansion is allocation-free.
+//! * The three placement orders run as **pool tasks sharing one incumbent**
+//!   ([`crate::util::pool::Pool`]): a lock-free arena bound prunes all
+//!   searches and the first search to hit the lower bound stops the
+//!   others. Whenever the searches run to completion the winning *arena*
+//!   is deterministic (the minimum over orders); which equal-arena
+//!   *layout* wins can depend on thread timing (ties are broken toward
+//!   the lowest order index among the solutions actually offered), and
+//!   under a binding node budget even the arena can vary with timing.
+//!   `DsaCfg::workers = 1` recovers the exact sequential-deterministic
+//!   behaviour — the planner's per-window calls and the MODeL baseline
+//!   use that, since reproducible plans matter there (and the planner's
+//!   window fan-out already parallelises above).
+//!
+//! The pre-incremental solver is retained in [`super::dsa_ref`] as the
+//! differential oracle; both enumerate the same candidate set, and
+//! `tests/search_core_props.rs` asserts identical arenas.
+//!
 //! The same problem is formulated as a big-M ILP in
 //! [`crate::ilp::layout_ilp`]; the two solvers cross-validate in tests.
 
-use super::fit::{candidate_offsets, Placed};
+use super::fit::{candidate_offsets_into, Placed};
 use super::greedy_size::greedy_by_size_with;
 use super::sim::lower_bound;
 use super::{Item, Layout};
+use crate::util::pool::Pool;
 use crate::util::timer::Deadline;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// Branch-and-bound configuration.
 #[derive(Clone, Debug)]
 pub struct DsaCfg {
     pub deadline: Deadline,
     pub max_nodes: u64,
+    /// Worker threads for the placement-order fan-out (capped at the number
+    /// of orders). 1 runs the orders sequentially on the calling thread —
+    /// callers that already parallelise above (the planner's per-window
+    /// solve) should pass 1 to avoid nested oversubscription.
+    pub workers: usize,
 }
 
 impl Default for DsaCfg {
@@ -31,6 +66,7 @@ impl Default for DsaCfg {
         DsaCfg {
             deadline: Deadline::unlimited(),
             max_nodes: 2_000_000,
+            workers: 3,
         }
     }
 }
@@ -43,7 +79,38 @@ pub struct DsaResult {
     /// True iff the arena provably equals the max-live lower bound.
     pub proved_optimal: bool,
     pub nodes_explored: u64,
+    /// True when the node budget or deadline cut any placement-order search
+    /// short (the result is then the best incumbent, not exhaustive).
+    pub cut_short: bool,
 }
+
+/// The placement orders the search tries (shared with [`super::dsa_ref`]):
+/// size-major, lifetime-major, birth order.
+pub const PLACEMENT_ORDERS: [fn(&Item, &Item) -> std::cmp::Ordering; 3] = [
+    // size-major
+    |a, b| {
+        b.size
+            .cmp(&a.size)
+            .then(b.life.len().cmp(&a.life.len()))
+            .then(a.id.cmp(&b.id))
+    },
+    // lifetime-major
+    |a, b| {
+        b.life
+            .len()
+            .cmp(&a.life.len())
+            .then(b.size.cmp(&a.size))
+            .then(a.id.cmp(&b.id))
+    },
+    // birth order
+    |a, b| {
+        a.life
+            .birth
+            .cmp(&b.life.birth)
+            .then(b.size.cmp(&a.size))
+            .then(a.id.cmp(&b.id))
+    },
+];
 
 /// Find a small-arena layout for `items`.
 pub fn min_arena_layout(items: &[Item], cfg: &DsaCfg) -> DsaResult {
@@ -63,39 +130,34 @@ pub fn min_arena_layout_fixed(items: &[Item], fixed: &[Placed], cfg: &DsaCfg) ->
     let (mut best_layout, mut best_arena) = if a1 <= a2 { (l1, a1) } else { (l2, a2) };
     let mut nodes = 0u64;
 
+    let mut cut_short = false;
     if best_arena > lb && !items.is_empty() {
-        // Try a few placement orders; keep the best.
-        let orders: [fn(&Item, &Item) -> std::cmp::Ordering; 3] = [
-            // size-major
-            |a, b| b.size.cmp(&a.size).then(b.life.len().cmp(&a.life.len())).then(a.id.cmp(&b.id)),
-            // lifetime-major
-            |a, b| b.life.len().cmp(&a.life.len()).then(b.size.cmp(&a.size)).then(a.id.cmp(&b.id)),
-            // birth order
-            |a, b| a.life.birth.cmp(&b.life.birth).then(b.size.cmp(&a.size)).then(a.id.cmp(&b.id)),
-        ];
-        for cmp in orders {
-            let mut sorted: Vec<Item> = items.to_vec();
-            sorted.sort_by(cmp);
-            let mut s = OffsetSearch {
-                items: &sorted,
-                cfg,
-                lb,
-                best_arena,
-                best: None,
-                placed: fixed.to_vec(),
-                n_fixed: fixed.len(),
-                nodes: 0,
-                done: false,
-            };
-            s.dfs(0, 0);
-            nodes += s.nodes;
-            if let Some(l) = s.best {
-                best_arena = s.best_arena;
-                best_layout = l;
-            }
-            if best_arena == lb || cfg.deadline.expired() {
-                break;
-            }
+        let shared = SharedBest::new(best_arena);
+        let pool = Pool::new(cfg.workers.clamp(1, PLACEMENT_ORDERS.len()))
+            .with_deadline(cfg.deadline);
+        let per_order: Vec<(u64, bool)> = pool.run_or(
+            PLACEMENT_ORDERS.len(),
+            |oi| {
+                if shared.lb_hit() {
+                    // Another order already proved the lower bound: skip
+                    // the sort and overlap-index construction entirely.
+                    return (0, false);
+                }
+                let mut sorted: Vec<Item> = items.to_vec();
+                sorted.sort_by(PLACEMENT_ORDERS[oi]);
+                let mut s = OffsetSearch::new(&sorted, fixed, cfg, lb, &shared, oi);
+                s.dfs(0, 0);
+                (s.nodes, s.cut)
+            },
+            // Past the deadline: skip the search, keep the greedy
+            // incumbent. Not a cut if the bound was already proved.
+            |_| (0, !shared.lb_hit()),
+        );
+        nodes = per_order.iter().map(|&(n, _)| n).sum();
+        cut_short = per_order.iter().any(|&(_, c)| c);
+        if let Some((arena, layout)) = shared.into_best() {
+            best_arena = arena;
+            best_layout = layout;
         }
     }
     DsaResult {
@@ -103,6 +165,59 @@ pub fn min_arena_layout_fixed(items: &[Item], fixed: &[Placed], cfg: &DsaCfg) ->
         layout: best_layout,
         arena: best_arena,
         nodes_explored: nodes,
+        cut_short,
+    }
+}
+
+/// Incumbent shared by the placement-order searches: a lock-free pruning
+/// bound plus the best layout. Equal-arena offers tie-break to the lowest
+/// order index; note that global-bound pruning means an equal-arena
+/// solution found *after* the bound reached that arena is never offered,
+/// so the tie-break is best-effort, not a total determinism guarantee
+/// (see the module docs).
+struct SharedBest {
+    bound: AtomicU64,
+    lb_hit: AtomicBool,
+    sol: Mutex<Option<(u64, usize, Layout)>>,
+}
+
+impl SharedBest {
+    fn new(incumbent: u64) -> SharedBest {
+        SharedBest {
+            bound: AtomicU64::new(incumbent),
+            lb_hit: AtomicBool::new(false),
+            sol: Mutex::new(None),
+        }
+    }
+
+    #[inline]
+    fn bound(&self) -> u64 {
+        self.bound.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    fn lb_hit(&self) -> bool {
+        self.lb_hit.load(Ordering::Relaxed)
+    }
+
+    fn offer(&self, arena: u64, order_idx: usize, layout: Layout) {
+        let mut sol = self.sol.lock().unwrap();
+        let better = match &*sol {
+            Some((a, oi, _)) => arena < *a || (arena == *a && order_idx < *oi),
+            // No recorded solution yet: must beat the greedy incumbent.
+            None => arena < self.bound.load(Ordering::Relaxed),
+        };
+        if better {
+            self.bound.fetch_min(arena, Ordering::Relaxed);
+            *sol = Some((arena, order_idx, layout));
+        }
+    }
+
+    fn into_best(self) -> Option<(u64, Layout)> {
+        self.sol
+            .into_inner()
+            .unwrap()
+            .map(|(arena, _, layout)| (arena, layout))
     }
 }
 
@@ -110,63 +225,142 @@ struct OffsetSearch<'a> {
     items: &'a [Item],
     cfg: &'a DsaCfg,
     lb: u64,
-    best_arena: u64,
-    best: Option<Layout>,
-    placed: Vec<Placed>,
-    /// The first `n_fixed` entries of `placed` are immovable obstacles and
-    /// are excluded from the reported layout.
+    shared: &'a SharedBest,
+    order_idx: usize,
     n_fixed: usize,
+    /// Current offset per combined index (fixed obstacles, then items in
+    /// placement order). Slot `n_fixed + i` is valid while the search is
+    /// at depth > i.
+    off: Vec<u64>,
+    /// Size per combined index.
+    csize: Vec<u64>,
+    /// Overlap-interval index (CSR): for item `i`, the combined indices
+    /// `< n_fixed + i` whose lifetimes overlap it — exactly the placed
+    /// neighbours visible when `i` is placed.
+    ov_off: Vec<usize>,
+    ov: Vec<u32>,
+    /// Pooled per-depth scratch buffers.
+    over_scratch: Vec<Vec<(u64, u64)>>,
+    cand_scratch: Vec<Vec<u64>>,
     nodes: u64,
     done: bool,
+    /// Set only when the node budget or deadline fired (not on lb stops).
+    cut: bool,
 }
 
 impl<'a> OffsetSearch<'a> {
+    fn new(
+        items: &'a [Item],
+        fixed: &[Placed],
+        cfg: &'a DsaCfg,
+        lb: u64,
+        shared: &'a SharedBest,
+        order_idx: usize,
+    ) -> Self {
+        let n = items.len();
+        let nf = fixed.len();
+        assert!(nf + n <= u32::MAX as usize, "combined index must fit u32");
+        let mut off = vec![0u64; nf + n];
+        let mut csize = vec![0u64; nf + n];
+        for (j, p) in fixed.iter().enumerate() {
+            off[j] = p.offset;
+            csize[j] = p.item.size;
+        }
+        for (i, it) in items.iter().enumerate() {
+            csize[nf + i] = it.size;
+        }
+        let mut ov_off = Vec::with_capacity(n + 1);
+        let mut ov: Vec<u32> = Vec::new();
+        ov_off.push(0);
+        for (i, it) in items.iter().enumerate() {
+            for (j, p) in fixed.iter().enumerate() {
+                if p.item.life.overlaps(&it.life) {
+                    ov.push(j as u32);
+                }
+            }
+            for (j, other) in items.iter().enumerate().take(i) {
+                if other.life.overlaps(&it.life) {
+                    ov.push((nf + j) as u32);
+                }
+            }
+            ov_off.push(ov.len());
+        }
+        OffsetSearch {
+            items,
+            cfg,
+            lb,
+            shared,
+            order_idx,
+            n_fixed: nf,
+            off,
+            csize,
+            ov_off,
+            ov,
+            over_scratch: vec![Vec::new(); n],
+            cand_scratch: vec![Vec::new(); n],
+            nodes: 0,
+            done: false,
+            cut: false,
+        }
+    }
+
     fn dfs(&mut self, i: usize, arena: u64) {
         self.nodes += 1;
-        if self.done
-            || self.nodes > self.cfg.max_nodes
-            || (self.nodes & 0xFF == 0 && self.cfg.deadline.expired())
-        {
+        if self.nodes > self.cfg.max_nodes || self.cfg.deadline.poll(self.nodes) {
+            self.cut = true;
+            self.done = true;
+            return;
+        }
+        if self.done || self.shared.lb_hit() {
             self.done = true;
             return;
         }
         if i == self.items.len() {
-            if arena < self.best_arena {
-                self.best_arena = arena;
-                self.best = Some(Layout {
-                    offsets: self
-                        .placed
-                        .iter()
-                        .skip(self.n_fixed)
-                        .map(|p| (p.item.id, p.offset))
-                        .collect(),
-                });
-                if arena == self.lb {
-                    self.done = true; // provably optimal
-                }
+            let layout = Layout {
+                offsets: self
+                    .items
+                    .iter()
+                    .enumerate()
+                    .map(|(k, it)| (it.id, self.off[self.n_fixed + k]))
+                    .collect(),
+            };
+            self.shared.offer(arena, self.order_idx, layout);
+            if arena == self.lb {
+                // Provably optimal: stop every placement-order search.
+                self.shared.lb_hit.store(true, Ordering::Relaxed);
+                self.done = true;
             }
             return;
         }
         let it = self.items[i];
-        for off in candidate_offsets(&it, &self.placed, 0) {
-            let new_arena = arena.max(off + it.size);
-            if new_arena >= self.best_arena {
+        let mut over = std::mem::take(&mut self.over_scratch[i]);
+        let mut cands = std::mem::take(&mut self.cand_scratch[i]);
+        over.clear();
+        for &j in &self.ov[self.ov_off[i]..self.ov_off[i + 1]] {
+            let o = self.off[j as usize];
+            over.push((o, o + self.csize[j as usize]));
+        }
+        candidate_offsets_into(it.size, 0, &over, &mut cands);
+        for &c in &cands {
+            let new_arena = arena.max(c + it.size);
+            if new_arena >= self.shared.bound() {
                 break; // candidates ascend: all further ones are worse
             }
-            self.placed.push(Placed { item: it, offset: off });
+            self.off[self.n_fixed + i] = c;
             self.dfs(i + 1, new_arena);
-            self.placed.pop();
             if self.done {
-                return;
+                break;
             }
         }
+        self.over_scratch[i] = over;
+        self.cand_scratch[i] = cands;
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use super::super::sim::{conflicts, lower_bound};
+    use super::*;
     use crate::graph::Lifetime;
     use crate::util::quick::forall;
 
@@ -231,6 +425,36 @@ mod tests {
             let g2 = super::super::greedy_size::greedy_by_size(&items).arena_size(&items);
             if r.arena > g1.min(g2) {
                 return Err(format!("worse than greedy: {} vs {}", r.arena, g1.min(g2)));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sequential_and_parallel_orders_agree() {
+        forall("dsa workers=1 == workers=3", 30, |rng| {
+            let n = rng.usize_in(1, 14);
+            let items: Vec<Item> = (0..n)
+                .map(|id| {
+                    let b = rng.usize_in(0, 10);
+                    it(id, b, b + rng.usize_in(0, 5), 1 + rng.gen_range(128))
+                })
+                .collect();
+            let seq = min_arena_layout(&items, &DsaCfg {
+                workers: 1,
+                ..Default::default()
+            });
+            let par = min_arena_layout(&items, &DsaCfg {
+                workers: 3,
+                ..Default::default()
+            });
+            // Exhaustive runs must agree exactly; budget-cut runs (possible
+            // only on adversarial instances) are still valid layouts.
+            if !seq.cut_short && !par.cut_short && seq.arena != par.arena {
+                return Err(format!("seq {} != par {}", seq.arena, par.arena));
+            }
+            if !conflicts(&items, &par.layout).is_empty() {
+                return Err("parallel layout conflicts".into());
             }
             Ok(())
         });

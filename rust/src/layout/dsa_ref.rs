@@ -1,0 +1,157 @@
+//! Reference (pre-incremental) DSA layout solver.
+//!
+//! The original `layout::dsa` implementation, retained verbatim as the
+//! differential-testing oracle and bench baseline for the incremental core
+//! in [`super::dsa`]: it re-filters the whole placed list and allocates two
+//! fresh `Vec`s per search node ([`candidate_offsets`]), and runs the three
+//! placement orders sequentially. Both solvers enumerate the same
+//! bottom-left candidate set per order, so on instances each can exhaust
+//! they return the same minimal arena; `tests/search_core_props.rs`
+//! asserts that, and `benches/leaf_solver_perf.rs` measures the nodes/sec
+//! gap.
+
+use super::dsa::{DsaCfg, DsaResult};
+use super::fit::{candidate_offsets, Placed};
+use super::greedy_size::greedy_by_size_with;
+use super::sim::lower_bound;
+use super::{Item, Layout};
+
+/// Find a small-arena layout for `items` with the pre-incremental search.
+pub fn min_arena_layout_ref(items: &[Item], cfg: &DsaCfg) -> DsaResult {
+    min_arena_layout_fixed_ref(items, &[], cfg)
+}
+
+/// Like [`min_arena_layout_ref`] but with pre-placed `fixed` obstacles.
+pub fn min_arena_layout_fixed_ref(items: &[Item], fixed: &[Placed], cfg: &DsaCfg) -> DsaResult {
+    let lb = lower_bound(items);
+    let l1 = super::llfb::llfb_with(items, fixed);
+    let a1 = l1.arena_size(items);
+    let l2 = greedy_by_size_with(items, fixed);
+    let a2 = l2.arena_size(items);
+    let (mut best_layout, mut best_arena) = if a1 <= a2 { (l1, a1) } else { (l2, a2) };
+    let mut nodes = 0u64;
+    let mut cut_short = false;
+
+    if best_arena > lb && !items.is_empty() {
+        for cmp in super::dsa::PLACEMENT_ORDERS {
+            let mut sorted: Vec<Item> = items.to_vec();
+            sorted.sort_by(cmp);
+            let mut s = OffsetSearch {
+                items: &sorted,
+                cfg,
+                lb,
+                best_arena,
+                best: None,
+                placed: fixed.to_vec(),
+                n_fixed: fixed.len(),
+                nodes: 0,
+                done: false,
+                cut: false,
+            };
+            s.dfs(0, 0);
+            nodes += s.nodes;
+            cut_short |= s.cut;
+            if let Some(l) = s.best {
+                best_arena = s.best_arena;
+                best_layout = l;
+            }
+            if best_arena == lb || cfg.deadline.expired() {
+                break;
+            }
+        }
+    }
+    DsaResult {
+        proved_optimal: best_arena == lb,
+        layout: best_layout,
+        arena: best_arena,
+        nodes_explored: nodes,
+        cut_short,
+    }
+}
+
+struct OffsetSearch<'a> {
+    items: &'a [Item],
+    cfg: &'a DsaCfg,
+    lb: u64,
+    best_arena: u64,
+    best: Option<Layout>,
+    placed: Vec<Placed>,
+    /// The first `n_fixed` entries of `placed` are immovable obstacles and
+    /// are excluded from the reported layout.
+    n_fixed: usize,
+    nodes: u64,
+    done: bool,
+    /// Set only when the node budget or deadline fired (not on lb stops).
+    cut: bool,
+}
+
+impl<'a> OffsetSearch<'a> {
+    fn dfs(&mut self, i: usize, arena: u64) {
+        self.nodes += 1;
+        if self.nodes > self.cfg.max_nodes || self.cfg.deadline.poll(self.nodes) {
+            self.cut = true;
+            self.done = true;
+            return;
+        }
+        if self.done {
+            return;
+        }
+        if i == self.items.len() {
+            if arena < self.best_arena {
+                self.best_arena = arena;
+                self.best = Some(Layout {
+                    offsets: self
+                        .placed
+                        .iter()
+                        .skip(self.n_fixed)
+                        .map(|p| (p.item.id, p.offset))
+                        .collect(),
+                });
+                if arena == self.lb {
+                    self.done = true; // provably optimal
+                }
+            }
+            return;
+        }
+        let it = self.items[i];
+        for off in candidate_offsets(&it, &self.placed, 0) {
+            let new_arena = arena.max(off + it.size);
+            if new_arena >= self.best_arena {
+                break; // candidates ascend: all further ones are worse
+            }
+            self.placed.push(Placed { item: it, offset: off });
+            self.dfs(i + 1, new_arena);
+            self.placed.pop();
+            if self.done {
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Lifetime;
+
+    fn it(id: usize, birth: usize, death: usize, size: u64) -> Item {
+        Item {
+            id,
+            life: Lifetime { birth, death },
+            size,
+        }
+    }
+
+    #[test]
+    fn reference_reaches_fig3_optimum() {
+        const MB: u64 = 1 << 20;
+        let items = [
+            it(0, 0, 1, 16 * MB),
+            it(1, 0, 3, 12 * MB),
+            it(2, 2, 3, 20 * MB),
+        ];
+        let r = min_arena_layout_ref(&items, &DsaCfg::default());
+        assert_eq!(r.arena, 32 * MB);
+        assert!(r.proved_optimal);
+    }
+}

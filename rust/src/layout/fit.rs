@@ -47,17 +47,25 @@ pub fn candidate_offsets(it: &Item, placed: &[Placed], min_offset: u64) -> Vec<u
         .filter(|p| p.item.life.overlaps(&it.life))
         .map(|p| (p.offset, p.offset + p.item.size))
         .collect();
-    let mut cands: Vec<u64> = std::iter::once(min_offset)
-        .chain(over.iter().map(|&(_, hi)| hi.max(min_offset)))
-        .collect();
-    cands.sort_unstable();
-    cands.dedup();
-    // Keep only offsets where the item actually fits.
-    cands.retain(|&c| {
-        over.iter()
-            .all(|&(lo, hi)| c + it.size <= lo || c >= hi)
-    });
+    let mut cands = Vec::new();
+    candidate_offsets_into(it.size, min_offset, &over, &mut cands);
     cands
+}
+
+/// Allocation-free core of [`candidate_offsets`]: given the pre-gathered
+/// `(offset, offset + size)` intervals of the *time-overlapping* placed
+/// items, fill `out` with the feasible bottom-left candidates for an item
+/// of `size` bytes, deduplicated and ascending. The DSA search calls this
+/// with per-depth scratch buffers and an overlap-interval index, so its
+/// steady-state node expansion allocates nothing.
+pub fn candidate_offsets_into(size: u64, min_offset: u64, over: &[(u64, u64)], out: &mut Vec<u64>) {
+    out.clear();
+    out.push(min_offset);
+    out.extend(over.iter().map(|&(_, hi)| hi.max(min_offset)));
+    out.sort_unstable();
+    out.dedup();
+    // Keep only offsets where the item actually fits.
+    out.retain(|&c| over.iter().all(|&(lo, hi)| c + size <= lo || c >= hi));
 }
 
 #[cfg(test)]
@@ -108,5 +116,18 @@ mod tests {
         // A 35-unit tensor doesn't fit the gap: top placement only.
         let c = candidate_offsets(&it(3, 1, 2, 35), &placed, 0);
         assert_eq!(c, vec![50]);
+    }
+
+    #[test]
+    fn candidate_offsets_into_reuses_buffer() {
+        let over = vec![(0u64, 10u64), (40, 50)];
+        let mut out = vec![999, 999, 999, 999, 999]; // stale contents
+        candidate_offsets_into(20, 0, &over, &mut out);
+        assert_eq!(out, vec![10, 50]);
+        candidate_offsets_into(35, 0, &over, &mut out);
+        assert_eq!(out, vec![50]);
+        // No overlaps: the base offset alone.
+        candidate_offsets_into(7, 64, &[], &mut out);
+        assert_eq!(out, vec![64]);
     }
 }

@@ -24,6 +24,7 @@
 pub mod caching_alloc;
 pub mod concat;
 pub mod dsa;
+pub mod dsa_ref;
 pub mod fit;
 pub mod greedy_size;
 pub mod llfb;

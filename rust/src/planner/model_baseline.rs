@@ -196,9 +196,7 @@ impl<'a> GenSearch<'a> {
 
     fn dfs(&mut self) {
         self.nodes += 1;
-        if self.nodes > self.max_nodes
-            || (self.nodes & 0x3FF == 0 && self.deadline.expired())
-        {
+        if self.nodes > self.max_nodes || self.deadline.poll(self.nodes) {
             self.done = true;
             return;
         }
@@ -322,6 +320,10 @@ pub fn model_layout(items: &[Item], deadline: Deadline, max_nodes: u64) -> Layou
         &DsaCfg {
             deadline,
             max_nodes,
+            // Sequential placement orders: the baseline's plans must be
+            // reproducible run-to-run (the parallel fan-out can pick a
+            // different equal-arena layout depending on thread timing).
+            workers: 1,
         },
     );
     if r.arena < seed.arena_size(items) {

@@ -18,8 +18,29 @@
 //!    final repair pass resolves residual shared-tensor conflicts (Fig 9);
 //! 6. evaluation on the original graph.
 //!
-//! Leaves solve concurrently (`std::thread`), mirroring the paper's
-//! "optimization for leaf nodes takes place concurrently".
+//! ## Leaf fan-out architecture
+//!
+//! Leaves solve concurrently, mirroring the paper's "optimization for leaf
+//! nodes takes place concurrently". Both fan-outs — ordering leaves (one
+//! task per segment chunk) and layout windows (one task per window) — run
+//! on the shared work-stealing pool ([`crate::util::pool::Pool`]) with the
+//! planner's deadline attached: once the time budget expires, remaining
+//! leaves take a cheap fallback (the chunk's ASAP order; an LLFB greedy
+//! layout) instead of entering the exact solvers, so a blown budget
+//! degrades to heuristic quality rather than stalling. Work stealing
+//! matters because leaf costs are heavily skewed (one 64-op leaf can cost
+//! three orders of magnitude more than a 3-op one); the previous
+//! shared-counter `thread::scope` batches left workers idle behind the
+//! stragglers. The per-window DSA calls run their placement orders
+//! sequentially (`DsaCfg::workers = 1`) since the window fan-out above
+//! them already saturates the machine.
+//!
+//! The leaf solvers themselves are incremental-state searches
+//! ([`crate::sched::bnb`], [`crate::layout::dsa`]); their nodes/sec and
+//! the end-to-end planner wall-clock per workload are measured by
+//! `benches/leaf_solver_perf.rs`, which writes the repo-root
+//! `BENCH_planner.json` trajectory (before/after numbers vs the retained
+//! `*_ref` solvers live there, refreshed by CI's bench-smoke job).
 
 use super::{evaluate, ExecutionPlan};
 use crate::graph::{Graph, OpId, Reachability, TensorClass};
@@ -31,6 +52,7 @@ use crate::sched::bnb::{min_peak_order, BnbCfg};
 use crate::sched::weight_update::{apply_control_edges, assign_weight_updates, WuCfg};
 use crate::sched::Schedule;
 use crate::segments::tree::{construct, SubgraphTree, TreeCfg};
+use crate::util::pool::Pool;
 use crate::util::timer::Deadline;
 use crate::util::Stopwatch;
 use std::collections::HashMap;
@@ -316,9 +338,9 @@ struct LayoutOut {
 /// Solve all ordering tasks and assemble the global order per eq. (3).
 fn solve_ordering(g2: &Graph, tree: &SubgraphTree, cfg: &RoamCfg, deadline: Deadline) -> Vec<OpId> {
     let n_tasks = tree.order_tasks.len();
-    let mut local_orders: Vec<Vec<OpId>> = vec![Vec::new(); n_tasks];
 
-    let solve_one = |task_ops: &Vec<OpId>| -> Vec<OpId> {
+    let solve_one = |i: usize| -> Vec<OpId> {
+        let task_ops = &tree.order_tasks[i].ops;
         if task_ops.len() <= 1 {
             return task_ops.clone();
         }
@@ -328,43 +350,18 @@ fn solve_ordering(g2: &Graph, tree: &SubgraphTree, cfg: &RoamCfg, deadline: Dead
             &BnbCfg {
                 deadline,
                 max_nodes: cfg.order_max_nodes,
+                max_ops: cfg.node_limit.max(1),
             },
         );
         r.order.into_iter().map(|l| map[l]).collect()
     };
 
-    let workers = if cfg.parallel {
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-            .min(n_tasks.max(1))
-    } else {
-        1
-    };
-    if workers <= 1 {
-        for (i, t) in tree.order_tasks.iter().enumerate() {
-            local_orders[i] = solve_one(&t.ops);
-        }
-    } else {
-        let next = std::sync::atomic::AtomicUsize::new(0);
-        let results: Vec<std::sync::Mutex<Vec<OpId>>> =
-            (0..n_tasks).map(|_| std::sync::Mutex::new(Vec::new())).collect();
-        std::thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    if i >= n_tasks {
-                        break;
-                    }
-                    let solved = solve_one(&tree.order_tasks[i].ops);
-                    *results[i].lock().unwrap() = solved;
-                });
-            }
-        });
-        for (i, r) in results.into_iter().enumerate() {
-            local_orders[i] = r.into_inner().unwrap();
-        }
-    }
+    let workers = if cfg.parallel { Pool::default_workers() } else { 1 };
+    let local_orders: Vec<Vec<OpId>> = Pool::new(workers)
+        .with_deadline(deadline)
+        // Past the deadline, a leaf keeps its ASAP chunk order (valid but
+        // unoptimised) instead of paying the exact solver's incumbents.
+        .run_or(n_tasks, solve_one, |i| tree.order_tasks[i].ops.clone());
 
     // Assemble: per segment, its chunks in part order, then its closing
     // boundary.
@@ -484,10 +481,12 @@ fn solve_layout(
     // windows' non-spanning items are mutually time-disjoint). The node
     // budget is split across windows: on GPT2-XL (727 windows) a flat
     // per-window budget burned minutes for <0.1% arena gain
-    // (EXPERIMENTS.md §Perf).
+    // (EXPERIMENTS.md §Perf). `workers: 1` inside each DSA call: the
+    // window fan-out below already parallelises.
     let dsa_cfg = DsaCfg {
         deadline,
         max_nodes: (cfg.dsa_max_nodes / n_win.max(1) as u64).max(2_000),
+        workers: 1,
     };
     let solve_window = |k: usize| -> Vec<(usize, u64)> {
         if rest[k].is_empty() {
@@ -496,38 +495,18 @@ fn solve_layout(
         let r = min_arena_layout_fixed(&rest[k], &fixed, &dsa_cfg);
         r.layout.offsets
     };
-    let workers = if cfg.parallel {
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-            .min(n_win.max(1))
-    } else {
-        1
-    };
-    let mut win_offsets: Vec<Vec<(usize, u64)>> = vec![Vec::new(); n_win];
-    if workers <= 1 {
-        for (k, slot) in win_offsets.iter_mut().enumerate() {
-            *slot = solve_window(k);
-        }
-    } else {
-        let next = std::sync::atomic::AtomicUsize::new(0);
-        let results: Vec<std::sync::Mutex<Vec<(usize, u64)>>> =
-            (0..n_win).map(|_| std::sync::Mutex::new(Vec::new())).collect();
-        std::thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(|| loop {
-                    let k = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    if k >= n_win {
-                        break;
-                    }
-                    *results[k].lock().unwrap() = solve_window(k);
-                });
+    let workers = if cfg.parallel { Pool::default_workers() } else { 1 };
+    let win_offsets: Vec<Vec<(usize, u64)>> = Pool::new(workers)
+        .with_deadline(deadline)
+        // Past the deadline, windows fall back to the LLFB greedy around
+        // the fixed stacks instead of entering the search.
+        .run_or(n_win, solve_window, |k| {
+            if rest[k].is_empty() {
+                Vec::new()
+            } else {
+                crate::layout::llfb::llfb_with(&rest[k], &fixed).offsets
             }
         });
-        for (k, r) in results.into_iter().enumerate() {
-            win_offsets[k] = r.into_inner().unwrap();
-        }
-    }
     for w in win_offsets {
         for (id, off) in w {
             offsets.insert(id, off);
@@ -621,7 +600,9 @@ mod tests {
     #[test]
     fn node_limit_respected() {
         let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
-        for limit in [8usize, 32] {
+        // 256 exceeds the old 128-op hard cap of the leaf scheduler: the
+        // Zobrist-keyed incremental core must handle it.
+        for limit in [8usize, 32, 256] {
             let r = roam_plan(&g, &RoamCfg {
                 node_limit: limit,
                 ..Default::default()

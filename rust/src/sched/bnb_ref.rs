@@ -1,0 +1,279 @@
+//! Reference (pre-incremental) branch-and-bound ordering solver.
+//!
+//! This is the original `sched::bnb` implementation, retained verbatim as
+//! the differential-testing oracle and the bench baseline for the
+//! incremental core in [`super::bnb`]: it recomputes the ready set and
+//! every op's step effect from scratch at each node (O(n·deg²) per node)
+//! and memoises on a `u128` executed-set key, which caps it at 128 ops.
+//!
+//! The two solvers explore children in the same greedy order and prune
+//! identically, so on any graph both can exhaust they return the same
+//! optimal peak; `tests/search_core_props.rs` asserts exactly that, and
+//! `benches/leaf_solver_perf.rs` measures the nodes/sec gap.
+
+use super::bnb::{ordering_lower_bound, BnbCfg, BnbResult};
+use super::lescea::lescea_order;
+use super::sim::theoretical_peak;
+use super::Schedule;
+use crate::graph::{Graph, OpId};
+use std::collections::HashMap;
+
+/// Find a minimum-theoretical-peak single-stream order for `g` with the
+/// pre-incremental search. Graphs with more than 128 ops fall back to the
+/// heuristic incumbent (the `u128` executed-set key cannot represent them).
+pub fn min_peak_order_ref(g: &Graph, cfg: &BnbCfg) -> BnbResult {
+    let n = g.n_ops();
+    let mut best_order = lescea_order(g);
+    let mut best_peak = theoretical_peak(g, &Schedule::from_order(&best_order));
+    let po = crate::graph::topo::program_order(g);
+    let pp = theoretical_peak(g, &Schedule::from_order(&po));
+    if pp < best_peak {
+        best_peak = pp;
+        best_order = po;
+    }
+    if n == 0 || n > 128 {
+        return BnbResult {
+            order: best_order,
+            peak: best_peak,
+            proved_optimal: n == 0,
+            nodes_explored: 0,
+        };
+    }
+
+    let lb = ordering_lower_bound(g);
+    if best_peak <= lb {
+        return BnbResult {
+            order: best_order,
+            peak: best_peak,
+            proved_optimal: true,
+            nodes_explored: 0,
+        };
+    }
+
+    let mut s = Search::new(g, cfg.clone(), best_peak, best_order);
+    s.dfs();
+    BnbResult {
+        order: s.best_order,
+        peak: s.best_peak,
+        proved_optimal: !s.cut_short,
+        nodes_explored: s.nodes,
+    }
+}
+
+struct Search<'a> {
+    g: &'a Graph,
+    cfg: BnbCfg,
+    succs: Vec<Vec<OpId>>,
+    /// remaining[t]: outstanding consumer count of tensor t.
+    remaining: Vec<usize>,
+    indeg: Vec<usize>,
+    executed: u128,
+    live: u64,
+    prefix: Vec<OpId>,
+    prefix_peak: u64,
+    best_peak: u64,
+    best_order: Vec<OpId>,
+    /// executed-set → lowest prefix peak seen.
+    memo: HashMap<u128, u64>,
+    nodes: u64,
+    cut_short: bool,
+}
+
+impl<'a> Search<'a> {
+    fn new(g: &'a Graph, cfg: BnbCfg, best_peak: u64, best_order: Vec<OpId>) -> Self {
+        let (preds, succs) = g.adjacency();
+        let indeg = preds.iter().map(|p| p.len()).collect();
+        let remaining: Vec<usize> = g.tensors.iter().map(|t| t.consumers.len()).collect();
+        let live = g
+            .tensors
+            .iter()
+            .filter(|t| t.producer.is_none() && !t.class.is_persistent())
+            .map(|t| t.size)
+            .sum();
+        Search {
+            g,
+            cfg,
+            succs,
+            remaining,
+            indeg,
+            executed: 0,
+            live,
+            prefix: Vec::with_capacity(g.n_ops()),
+            prefix_peak: live,
+            best_peak,
+            best_order,
+            memo: HashMap::new(),
+            nodes: 0,
+            cut_short: false,
+        }
+    }
+
+    /// Memory at the timestep `v` executes, and the live delta after it —
+    /// recomputed from scratch, with the quadratic duplicate scans the
+    /// incremental core precomputes away.
+    fn step_effect(&self, v: OpId) -> (u64, i64) {
+        let g = self.g;
+        let mut outs = 0u64;
+        let mut keep = 0i64;
+        for &t in &g.ops[v].outputs {
+            let tt = &g.tensors[t];
+            if tt.class.is_persistent() {
+                continue;
+            }
+            outs += tt.size;
+            if !tt.consumers.is_empty() || tt.is_output {
+                keep += tt.size as i64;
+            }
+        }
+        let mut freed = 0i64;
+        for (i, &t) in g.ops[v].inputs.iter().enumerate() {
+            if g.ops[v].inputs[..i].contains(&t) {
+                continue;
+            }
+            let tt = &g.tensors[t];
+            if tt.class.is_persistent() || tt.is_output {
+                continue;
+            }
+            let uses = g.ops[v].inputs.iter().filter(|&&x| x == t).count();
+            if self.remaining[t] == uses {
+                freed += tt.size as i64;
+            }
+        }
+        (self.live + outs, keep - freed)
+    }
+
+    fn dfs(&mut self) {
+        self.nodes += 1;
+        if self.nodes > self.cfg.max_nodes || self.cfg.deadline.poll(self.nodes) {
+            self.cut_short = true;
+            return;
+        }
+        let n = self.g.n_ops();
+        if self.prefix.len() == n {
+            if self.prefix_peak < self.best_peak {
+                self.best_peak = self.prefix_peak;
+                self.best_order = self.prefix.clone();
+            }
+            return;
+        }
+        match self.memo.get(&self.executed) {
+            Some(&p) if p <= self.prefix_peak => return,
+            _ => {
+                self.memo.insert(self.executed, self.prefix_peak);
+            }
+        }
+
+        // Ready ops recomputed by a full scan, greedily ordered.
+        let mut ready: Vec<(u64, i64, OpId)> = (0..n)
+            .filter(|&v| self.executed & (1u128 << v) == 0 && self.indeg[v] == 0)
+            .map(|v| {
+                let (at, delta) = self.step_effect(v);
+                (at, delta, v)
+            })
+            .collect();
+        ready.sort_unstable();
+
+        for (at_mem, _delta, v) in ready {
+            let new_peak = self.prefix_peak.max(at_mem);
+            if new_peak >= self.best_peak {
+                break; // children sorted by at_mem: all later ones pruned too
+            }
+            self.apply(v);
+            let saved_peak = self.prefix_peak;
+            self.prefix_peak = new_peak;
+            self.dfs();
+            self.prefix_peak = saved_peak;
+            self.undo(v);
+            if self.cut_short {
+                return;
+            }
+        }
+    }
+
+    fn apply(&mut self, v: OpId) {
+        self.executed |= 1u128 << v;
+        self.prefix.push(v);
+        for &s in &self.succs[v] {
+            self.indeg[s] -= 1;
+        }
+        let g = self.g;
+        for &t in &g.ops[v].outputs {
+            let tt = &g.tensors[t];
+            if !tt.class.is_persistent() && (!tt.consumers.is_empty() || tt.is_output) {
+                self.live += tt.size;
+            }
+        }
+        for &t in &g.ops[v].inputs {
+            self.remaining[t] -= 1;
+        }
+        for (i, &t) in g.ops[v].inputs.iter().enumerate() {
+            if g.ops[v].inputs[..i].contains(&t) {
+                continue;
+            }
+            let tt = &g.tensors[t];
+            if tt.class.is_persistent() || tt.is_output {
+                continue;
+            }
+            if self.remaining[t] == 0 {
+                self.live -= tt.size;
+            }
+        }
+    }
+
+    fn undo(&mut self, v: OpId) {
+        let g = self.g;
+        for (i, &t) in g.ops[v].inputs.iter().enumerate() {
+            if g.ops[v].inputs[..i].contains(&t) {
+                continue;
+            }
+            let tt = &g.tensors[t];
+            if tt.class.is_persistent() || tt.is_output {
+                continue;
+            }
+            if self.remaining[t] == 0 {
+                self.live += tt.size;
+            }
+        }
+        for &t in &g.ops[v].inputs {
+            self.remaining[t] += 1;
+        }
+        for &t in &g.ops[v].outputs {
+            let tt = &g.tensors[t];
+            if !tt.class.is_persistent() && (!tt.consumers.is_empty() || tt.is_output) {
+                self.live -= tt.size;
+            }
+        }
+        for &s in &self.succs[v] {
+            self.indeg[s] += 1;
+        }
+        self.prefix.pop();
+        self.executed &= !(1u128 << v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::random::{random_training_graph, RandomGraphCfg};
+    use crate::graph::topo::is_topological;
+    use crate::util::quick::forall;
+
+    #[test]
+    fn reference_still_solves_small_graphs() {
+        forall("bnb_ref optimal ≤ baselines", 20, |rng| {
+            let g = random_training_graph(rng, &RandomGraphCfg {
+                fwd_ops: rng.usize_in(2, 7),
+                ..Default::default()
+            });
+            let r = min_peak_order_ref(&g, &BnbCfg::default());
+            if !is_topological(&g, &r.order) {
+                return Err("not topological".into());
+            }
+            let sim = theoretical_peak(&g, &Schedule::from_order(&r.order));
+            if sim != r.peak {
+                return Err(format!("peak mismatch: ref {} sim {}", r.peak, sim));
+            }
+            Ok(())
+        });
+    }
+}

@@ -7,69 +7,84 @@
 //! scenarios with diverse tensor sizes" (§V-B) — which our Fig-12 bench
 //! reproduces.
 
+use super::prep::SolverTables;
 use super::Schedule;
 use crate::graph::{Graph, OpId};
 
 /// Greedy least-memory-increase topological order.
+///
+/// Incremental scoring: each ready op's memory delta (newly allocated
+/// output bytes minus input bytes its execution frees) is cached, and only
+/// the ops whose *input tensors' remaining-consumer counts changed* — the
+/// still-ready consumers of the just-executed op's inputs — are rescored.
+/// The historical implementation recomputed every ready op's delta from
+/// scratch each step, an O(n²·deg²) inner loop on wide graphs; scores and
+/// tie-breaks here are identical (min over `(delta, op id)`), so the
+/// emitted order is byte-identical (asserted differentially in
+/// `tests/search_core_props.rs`).
 pub fn lescea_order(g: &Graph) -> Vec<OpId> {
+    lescea_order_with(g, &SolverTables::build(g))
+}
+
+/// [`lescea_order`] over pre-built solver tables — callers that already
+/// hold a [`SolverTables`] for `g` (the exact scheduler seeding its
+/// incumbent) avoid a second O(|E|) table construction.
+pub fn lescea_order_with(g: &Graph, tab: &SolverTables) -> Vec<OpId> {
     let (preds, succs) = g.adjacency();
     let n = g.n_ops();
     let mut indeg: Vec<usize> = preds.iter().map(|p| p.len()).collect();
     // Remaining consumer count per tensor: when it hits 0 the tensor frees.
-    let mut remaining: Vec<usize> = g.tensors.iter().map(|t| t.consumers.len()).collect();
-    let mut ready: Vec<OpId> = (0..n).filter(|&v| indeg[v] == 0).collect();
+    let mut remaining: Vec<u32> = tab.consumers0.clone();
+    let mut ready: Vec<OpId> = Vec::new();
+    let mut ready_pos: Vec<usize> = vec![usize::MAX; n];
+    let mut delta: Vec<i64> = vec![0; n]; // valid while the op is ready
+    for v in 0..n {
+        if indeg[v] == 0 {
+            ready_pos[v] = ready.len();
+            ready.push(v);
+            delta[v] = tab.mem_delta(v, &remaining);
+        }
+    }
     let mut order = Vec::with_capacity(n);
 
     while !ready.is_empty() {
-        // Score each ready op by its memory delta.
+        // Pick the cached minimum; tie-break by op id for determinism.
         let mut best_i = 0usize;
-        let mut best_delta = i64::MAX;
-        for (i, &v) in ready.iter().enumerate() {
-            let delta = mem_delta(g, v, &remaining);
-            // Tie-break by op id for determinism (matches definition order).
-            if delta < best_delta || (delta == best_delta && v < ready[best_i]) {
-                best_delta = delta;
+        for i in 1..ready.len() {
+            let (v, b) = (ready[i], ready[best_i]);
+            if delta[v] < delta[b] || (delta[v] == delta[b] && v < b) {
                 best_i = i;
             }
         }
         let v = ready.swap_remove(best_i);
+        if best_i < ready.len() {
+            ready_pos[ready[best_i]] = best_i;
+        }
+        ready_pos[v] = usize::MAX;
         order.push(v);
-        // Account consumption.
-        for &t in &g.ops[v].inputs {
-            remaining[t] -= 1;
+        // Account consumption; rescore the still-ready consumers of every
+        // tensor whose remaining count changed. An op sharing several of
+        // v's inputs is rescored at its last shared tensor, when all the
+        // decrements relevant to it have landed.
+        for di in tab.din(v) {
+            remaining[di.t] -= di.uses;
+            for &u in &g.tensors[di.t].consumers {
+                if ready_pos[u] != usize::MAX {
+                    delta[u] = tab.mem_delta(u, &remaining);
+                }
+            }
         }
         for &s in &succs[v] {
             indeg[s] -= 1;
             if indeg[s] == 0 {
+                ready_pos[s] = ready.len();
                 ready.push(s);
+                delta[s] = tab.mem_delta(s, &remaining);
             }
         }
     }
     assert_eq!(order.len(), n, "graph has a cycle");
     order
-}
-
-/// Memory delta of running `v` now: +outputs (non-persistent), −inputs
-/// whose last outstanding consumer is `v` (and which are not outputs).
-fn mem_delta(g: &Graph, v: OpId, remaining: &[usize]) -> i64 {
-    let mut d = 0i64;
-    for &t in &g.ops[v].outputs {
-        if !g.tensors[t].class.is_persistent() {
-            d += g.tensors[t].size as i64;
-        }
-    }
-    for &t in &g.ops[v].inputs {
-        let tt = &g.tensors[t];
-        if tt.class.is_persistent() || tt.is_output {
-            continue;
-        }
-        // How many times does v consume t? (usually once)
-        let uses = g.ops[v].inputs.iter().filter(|&&x| x == t).count();
-        if remaining[t] == uses {
-            d -= tt.size as i64;
-        }
-    }
-    d
 }
 
 /// Convenience: LESCEA as a [`Schedule`].

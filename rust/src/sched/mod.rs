@@ -14,7 +14,9 @@
 //! schedules are bijective assignments.
 
 pub mod bnb;
+pub mod bnb_ref;
 pub mod lescea;
+pub mod prep;
 pub mod sim;
 pub mod weight_update;
 

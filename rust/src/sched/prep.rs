@@ -1,0 +1,179 @@
+//! Precomputed per-graph tables for the ordering solvers' inner loops.
+//!
+//! Both the exact branch-and-bound scheduler ([`super::bnb`]) and the
+//! LESCEA greedy ([`super::lescea`]) repeatedly need, per operator:
+//!
+//! * the bytes its outputs allocate while it runs (`out_alloc`),
+//! * the subset that stays live afterwards (`out_keep`), and
+//! * its **distinct** dynamic inputs with per-op use multiplicities, to
+//!   decide which tensors its execution frees.
+//!
+//! The original solvers re-derived all of this at every search node with
+//! nested `inputs[..i].contains(&t)` duplicate scans — O(deg²) per op per
+//! node, the dominant cost on wide leaves. [`SolverTables::build`] computes
+//! it once per graph in O(|E|) into flat CSR arrays, turning every
+//! node-expansion into pointer-bump loops over precomputed entries.
+
+use crate::graph::{Graph, TensorId};
+
+/// One distinct dynamic (non-persistent, non-graph-output) input of an op.
+#[derive(Clone, Copy, Debug)]
+pub struct DistinctIn {
+    pub t: TensorId,
+    /// How many of the op's input slots reference `t` (usually 1).
+    pub uses: u32,
+    pub size: u64,
+}
+
+/// Flat per-op tables shared by the ordering solvers.
+#[derive(Clone, Debug)]
+pub struct SolverTables {
+    /// CSR offsets: op `v`'s distinct dynamic inputs are
+    /// `din[din_off[v]..din_off[v + 1]]`.
+    din_off: Vec<usize>,
+    din: Vec<DistinctIn>,
+    /// Sum of non-persistent output sizes — bytes allocated while `v` runs.
+    pub out_alloc: Vec<u64>,
+    /// Subset of `out_alloc` still live after `v` (outputs with consumers
+    /// or marked as graph outputs).
+    pub out_keep: Vec<u64>,
+    /// Initial outstanding consumer multiplicity per tensor (the solvers'
+    /// `remaining` counters start from this).
+    pub consumers0: Vec<u32>,
+}
+
+impl SolverTables {
+    /// Build the tables in one pass over the graph's edges.
+    pub fn build(g: &Graph) -> SolverTables {
+        let n = g.n_ops();
+        let mut din_off = Vec::with_capacity(n + 1);
+        let mut din: Vec<DistinctIn> = Vec::new();
+        let mut out_alloc = vec![0u64; n];
+        let mut out_keep = vec![0u64; n];
+        // mark[t] = index into `din` of t's entry *for the current op*;
+        // entries below the op's start offset are stale from earlier ops.
+        let mut mark = vec![usize::MAX; g.n_tensors()];
+        din_off.push(0);
+        for op in &g.ops {
+            let start = din.len();
+            for &t in &op.inputs {
+                let tt = &g.tensors[t];
+                if tt.class.is_persistent() || tt.is_output {
+                    continue; // never freed by consumption
+                }
+                if mark[t] != usize::MAX && mark[t] >= start {
+                    din[mark[t]].uses += 1;
+                } else {
+                    mark[t] = din.len();
+                    din.push(DistinctIn {
+                        t,
+                        uses: 1,
+                        size: tt.size,
+                    });
+                }
+            }
+            for &t in &op.outputs {
+                let tt = &g.tensors[t];
+                if tt.class.is_persistent() {
+                    continue;
+                }
+                out_alloc[op.id] += tt.size;
+                if !tt.consumers.is_empty() || tt.is_output {
+                    out_keep[op.id] += tt.size;
+                }
+            }
+            din_off.push(din.len());
+        }
+        let consumers0 = g.tensors.iter().map(|t| t.consumers.len() as u32).collect();
+        SolverTables {
+            din_off,
+            din,
+            out_alloc,
+            out_keep,
+            consumers0,
+        }
+    }
+
+    /// Distinct dynamic inputs of op `v`.
+    #[inline]
+    pub fn din(&self, v: usize) -> &[DistinctIn] {
+        &self.din[self.din_off[v]..self.din_off[v + 1]]
+    }
+
+    /// LESCEA score of running `v` given current `remaining` consumer
+    /// counts: newly allocated output bytes minus input bytes freed by
+    /// their last outstanding consumer.
+    #[inline]
+    pub fn mem_delta(&self, v: usize, remaining: &[u32]) -> i64 {
+        let mut d = self.out_alloc[v] as i64;
+        for di in self.din(v) {
+            if remaining[di.t] == di.uses {
+                d -= di.size as i64;
+            }
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, OpKind, Phase, TensorClass};
+
+    #[test]
+    fn distinct_inputs_and_use_counts() {
+        let mut g = Graph::new("t");
+        let w = g.add_input_tensor("w", 100, TensorClass::Weight);
+        let x = g.add_input_tensor("x", 10, TensorClass::Input);
+        // op consumes x twice and the persistent w once.
+        let (a, t) = g.add_op("a", OpKind::Other, Phase::Forward, &[x, x, w], &[
+            ("t", 20, TensorClass::Activation),
+            ("dead", 5, TensorClass::Activation),
+        ]);
+        g.add_op("b", OpKind::Other, Phase::Forward, &[t[0]], &[
+            ("u", 7, TensorClass::TempBuffer),
+        ]);
+        let tab = SolverTables::build(&g);
+        let din = tab.din(a);
+        assert_eq!(din.len(), 1, "w is persistent, x dedup'd");
+        assert_eq!(din[0].t, x);
+        assert_eq!(din[0].uses, 2);
+        assert_eq!(din[0].size, 10);
+        assert_eq!(tab.out_alloc[a], 25);
+        assert_eq!(tab.out_keep[a], 20, "dead output not kept");
+        assert_eq!(tab.consumers0[x], 2);
+        assert_eq!(tab.consumers0[t[0]], 1);
+    }
+
+    #[test]
+    fn graph_outputs_never_freed() {
+        let mut g = Graph::new("o");
+        let x = g.add_input_tensor("x", 8, TensorClass::Input);
+        let (_, t) = g.add_op("a", OpKind::Other, Phase::Forward, &[x], &[
+            ("t", 16, TensorClass::Activation),
+        ]);
+        g.mark_output(t[0]);
+        // A consumer of the pinned output: t must not appear in its din.
+        let (b, _) = g.add_op("b", OpKind::Other, Phase::Forward, &[t[0]], &[
+            ("u", 4, TensorClass::Activation),
+        ]);
+        let tab = SolverTables::build(&g);
+        assert!(tab.din(b).is_empty());
+    }
+
+    #[test]
+    fn mem_delta_matches_manual() {
+        let mut g = Graph::new("d");
+        let x = g.add_input_tensor("x", 10, TensorClass::Input);
+        let (a, t) = g.add_op("a", OpKind::Other, Phase::Forward, &[x], &[
+            ("t", 30, TensorClass::Activation),
+        ]);
+        g.add_op("b", OpKind::Other, Phase::Forward, &[t[0]], &[
+            ("u", 1, TensorClass::Activation),
+        ]);
+        let tab = SolverTables::build(&g);
+        let remaining: Vec<u32> = tab.consumers0.clone();
+        // Running a: +30 allocated, frees x (its only consumer).
+        assert_eq!(tab.mem_delta(a, &remaining), 30 - 10);
+    }
+}

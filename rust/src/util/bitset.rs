@@ -67,6 +67,29 @@ impl BitSet {
         changed
     }
 
+    /// Word-parallel three-operand union: `out = self | other`. Every word
+    /// of `out` is overwritten, so `out` needs no prior clear — this is the
+    /// allocation-free seeding step of the reachability propagation
+    /// ([`crate::graph::Reachability::compute`]).
+    pub fn union_with_into(&self, other: &BitSet, out: &mut BitSet) {
+        debug_assert_eq!(self.nbits, other.nbits);
+        debug_assert_eq!(self.nbits, out.nbits);
+        for ((o, a), b) in out
+            .words
+            .iter_mut()
+            .zip(self.words.iter())
+            .zip(other.words.iter())
+        {
+            *o = a | b;
+        }
+    }
+
+    /// Overwrite `self` with `other`'s bits (capacities must match).
+    pub fn copy_from(&mut self, other: &BitSet) {
+        debug_assert_eq!(self.nbits, other.nbits);
+        self.words.copy_from_slice(&other.words);
+    }
+
     /// `self &= other`.
     pub fn intersect_with(&mut self, other: &BitSet) {
         debug_assert_eq!(self.nbits, other.nbits);
@@ -167,6 +190,29 @@ mod tests {
         assert!(!a.intersects(&b));
         b.set(10);
         assert!(a.intersects(&b));
+    }
+
+    #[test]
+    fn union_with_into_overwrites_out() {
+        let mut a = BitSet::new(130);
+        let mut b = BitSet::new(130);
+        a.set(0);
+        a.set(129);
+        b.set(64);
+        let mut out = BitSet::new(130);
+        out.set(1); // stale bit: must be overwritten, not merged
+        a.union_with_into(&b, &mut out);
+        assert_eq!(out.iter().collect::<Vec<_>>(), vec![0, 64, 129]);
+    }
+
+    #[test]
+    fn copy_from_replaces_bits() {
+        let mut a = BitSet::new(70);
+        a.set(3);
+        let mut b = BitSet::new(70);
+        b.set(69);
+        a.copy_from(&b);
+        assert_eq!(a.iter().collect::<Vec<_>>(), vec![69]);
     }
 
     #[test]

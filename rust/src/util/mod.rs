@@ -11,11 +11,13 @@ pub mod cli;
 pub mod error;
 pub mod human;
 pub mod json;
+pub mod pool;
 pub mod quick;
 pub mod rng;
 pub mod timer;
 
 pub use bitset::BitSet;
 pub use human::human_bytes;
+pub use pool::Pool;
 pub use rng::Pcg64;
 pub use timer::Stopwatch;

@@ -1,0 +1,274 @@
+//! Shared deadline-aware worker pool for the planner's leaf fan-outs.
+//!
+//! The ROAM planner solves many independent leaf tasks (ordering leaves,
+//! per-window layouts, DSA placement orders). Before this module each call
+//! site spun up its own `std::thread::scope` batch with an atomic "next
+//! task" counter; that balances badly when task costs are skewed (one 64-op
+//! leaf can cost 1000x a 3-op leaf) and duplicates the deadline plumbing.
+//!
+//! [`Pool::run`] executes `n` indexed tasks on a scoped set of workers with
+//! **work stealing**: each worker owns a contiguous index range packed into
+//! one `AtomicU64` (`lo << 32 | hi`); it pops from the front of its own
+//! range and, when empty, steals the back half of the fullest victim. A
+//! stolen range is republished in the thief's own slot so it can be stolen
+//! again — ABA-free because a task index is executed exactly once, so no
+//! `(lo, hi)` pair ever recurs after being consumed.
+//!
+//! [`Pool::run_or`] adds the deadline policy both leaf solvers share: once
+//! the pool's [`Deadline`] expires, *remaining* tasks run a cheap fallback
+//! (identity leaf order, greedy layout) instead of the exact solver, so a
+//! blown time budget degrades to heuristic quality instead of stalling.
+//!
+//! Results are returned indexed by task id, so parallel runs are
+//! position-deterministic regardless of which worker executed what.
+
+use crate::util::timer::Deadline;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A scoped work-stealing pool. Cheap to construct per fan-out; threads are
+/// spawned inside [`Pool::run`] and joined before it returns.
+#[derive(Clone, Copy, Debug)]
+pub struct Pool {
+    workers: usize,
+    deadline: Deadline,
+}
+
+impl Pool {
+    /// Pool with a fixed worker count (clamped to ≥ 1). `workers == 1`
+    /// executes inline on the calling thread — no spawns.
+    pub fn new(workers: usize) -> Pool {
+        Pool {
+            workers: workers.max(1),
+            deadline: Deadline::unlimited(),
+        }
+    }
+
+    /// Attach a deadline consulted by [`Pool::run_or`].
+    pub fn with_deadline(mut self, deadline: Deadline) -> Pool {
+        self.deadline = deadline;
+        self
+    }
+
+    /// Hardware parallelism (1 when unknown).
+    pub fn default_workers() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+
+    /// Run tasks `0..n`, returning results indexed by task id.
+    pub fn run<T, F>(&self, n: usize, task: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        self.run_core(n, |i| task(i))
+    }
+
+    /// Like [`Pool::run`], but tasks picked up after the pool's deadline has
+    /// expired execute `fallback(i)` instead of `task(i)`. Tasks already
+    /// in flight are not interrupted (the exact solvers poll the same
+    /// deadline internally and cut themselves short).
+    pub fn run_or<T, F, G>(&self, n: usize, task: F, fallback: G) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+        G: Fn(usize) -> T + Sync,
+    {
+        let deadline = self.deadline;
+        self.run_core(n, move |i| {
+            if deadline.expired() {
+                fallback(i)
+            } else {
+                task(i)
+            }
+        })
+    }
+
+    fn run_core<T, F>(&self, n: usize, task: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = self.workers.min(n);
+        if workers <= 1 {
+            return (0..n).map(task).collect();
+        }
+        assert!(n <= u32::MAX as usize, "pool supports at most 2^32 tasks");
+        // Balanced contiguous ranges, one atomic deque per worker.
+        let queues: Vec<AtomicU64> = (0..workers)
+            .map(|k| AtomicU64::new(pack(k * n / workers, (k + 1) * n / workers)))
+            .collect();
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let task = &task;
+            let queues = &queues[..];
+            let handles: Vec<_> = (0..workers)
+                .map(|me| s.spawn(move || worker_loop(me, queues, task)))
+                .collect();
+            for h in handles {
+                for (i, r) in h.join().expect("pool worker panicked") {
+                    out[i] = Some(r);
+                }
+            }
+        });
+        out.into_iter()
+            .map(|r| r.expect("pool task not executed"))
+            .collect()
+    }
+}
+
+fn worker_loop<T, F: Fn(usize) -> T>(
+    me: usize,
+    queues: &[AtomicU64],
+    task: &F,
+) -> Vec<(usize, T)> {
+    let mut done = Vec::new();
+    loop {
+        if let Some(i) = pop_front(&queues[me]) {
+            done.push((i, task(i)));
+            continue;
+        }
+        match steal(queues, me) {
+            // Republish the stolen range in our own (empty) slot so other
+            // idle workers can re-steal from it.
+            Some((lo, hi)) => queues[me].store(pack(lo, hi), Ordering::Release),
+            None => break,
+        }
+    }
+    done
+}
+
+/// Pop the front index of a packed range; `None` when empty.
+fn pop_front(q: &AtomicU64) -> Option<usize> {
+    loop {
+        let raw = q.load(Ordering::Acquire);
+        let (lo, hi) = unpack(raw);
+        if lo >= hi {
+            return None;
+        }
+        if q.compare_exchange_weak(raw, pack(lo + 1, hi), Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            return Some(lo);
+        }
+    }
+}
+
+/// Steal the back half (rounded up) of the fullest victim queue.
+fn steal(queues: &[AtomicU64], me: usize) -> Option<(usize, usize)> {
+    loop {
+        let mut best: Option<(usize, u64, usize)> = None; // (victim, raw, len)
+        for (v, q) in queues.iter().enumerate() {
+            if v == me {
+                continue;
+            }
+            let raw = q.load(Ordering::Acquire);
+            let (lo, hi) = unpack(raw);
+            let len = hi.saturating_sub(lo);
+            let richer = match best {
+                Some((_, _, best_len)) => len > best_len,
+                None => len > 0,
+            };
+            if richer {
+                best = Some((v, raw, len));
+            }
+        }
+        let (victim, raw, _) = best?;
+        let (lo, hi) = unpack(raw);
+        let mid = lo + (hi - lo) / 2; // victim keeps [lo, mid), thief takes [mid, hi)
+        if queues[victim]
+            .compare_exchange(raw, pack(lo, mid), Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            return Some((mid, hi));
+        }
+        // Raced with the victim or another thief; rescan.
+    }
+}
+
+#[inline]
+fn pack(lo: usize, hi: usize) -> u64 {
+    ((lo as u64) << 32) | hi as u64
+}
+
+#[inline]
+fn unpack(raw: u64) -> (usize, usize) {
+    ((raw >> 32) as usize, (raw & 0xFFFF_FFFF) as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
+
+    #[test]
+    fn results_indexed_by_task() {
+        for workers in [1, 2, 4, 16] {
+            let out = Pool::new(workers).run(37, |i| i * i);
+            assert_eq!(out, (0..37).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn more_workers_than_tasks() {
+        let out = Pool::new(8).run(3, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_run() {
+        let out: Vec<usize> = Pool::new(4).run(0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn every_task_runs_exactly_once_under_contention() {
+        let counts: Vec<AtomicUsize> = (0..500).map(|_| AtomicUsize::new(0)).collect();
+        let out = Pool::new(8).run(500, |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(out.len(), 500);
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "task {i} ran more than once");
+        }
+    }
+
+    #[test]
+    fn stealing_balances_skewed_tasks() {
+        // One pathological task at index 0; the rest are trivial. With
+        // stealing, total wall-clock stays close to the slow task alone.
+        let out = Pool::new(4).run(64, |i| {
+            if i == 0 {
+                std::thread::sleep(Duration::from_millis(30));
+            }
+            i
+        });
+        assert_eq!(out.len(), 64);
+    }
+
+    #[test]
+    fn expired_deadline_takes_fallback() {
+        let pool = Pool::new(2).with_deadline(Deadline::after(Duration::from_secs(0)));
+        let out = pool.run_or(10, |_| "exact", |_| "fallback");
+        assert!(out.iter().all(|&s| s == "fallback"));
+    }
+
+    #[test]
+    fn unlimited_deadline_takes_exact_path() {
+        let out = Pool::new(2).run_or(10, |_| "exact", |_| "fallback");
+        assert!(out.iter().all(|&s| s == "exact"));
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for (lo, hi) in [(0usize, 0usize), (3, 17), (0, u32::MAX as usize)] {
+            assert_eq!(unpack(pack(lo, hi)), (lo, hi));
+        }
+    }
+}

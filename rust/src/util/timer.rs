@@ -63,6 +63,20 @@ impl Deadline {
         Deadline::after(Duration::from_secs_f64(secs))
     }
 
+    /// Node-count mask of [`Deadline::poll`]: the deadline is actually
+    /// checked once every 1024 nodes.
+    pub const POLL_MASK: u64 = 0x3FF;
+
+    /// Shared polling cadence for the search solvers (branch-and-bound
+    /// ordering, DSA layout, the MODeL baseline): returns true iff `nodes`
+    /// lands on the polling cadence **and** the deadline has passed.
+    /// Centralised here so every solver pays the same (amortised-free)
+    /// `Instant::now()` cost instead of each picking its own ad-hoc mask.
+    #[inline]
+    pub fn poll(&self, nodes: u64) -> bool {
+        nodes & Self::POLL_MASK == 0 && self.expired()
+    }
+
     /// Has the deadline passed?
     pub fn expired(&self) -> bool {
         match self.expires {
@@ -100,6 +114,18 @@ mod tests {
     fn after_zero_expires() {
         let d = Deadline::after(Duration::from_secs(0));
         assert!(d.expired());
+    }
+
+    #[test]
+    fn poll_respects_cadence_and_expiry() {
+        let gone = Deadline::after(Duration::from_secs(0));
+        assert!(gone.poll(0), "on-cadence + expired fires");
+        assert!(gone.poll(1024));
+        assert!(!gone.poll(1), "off-cadence never fires");
+        assert!(!gone.poll(1023));
+        let far = Deadline::after(Duration::from_secs(3600));
+        assert!(!far.poll(0), "on-cadence but not expired");
+        assert!(!Deadline::unlimited().poll(0));
     }
 
     #[test]

@@ -1,0 +1,292 @@
+//! Differential properties of the incremental search cores against their
+//! retained naive references:
+//!
+//! * the incremental branch-and-bound scheduler ([`roam::sched::bnb`]) vs
+//!   the pre-incremental [`roam::sched::bnb_ref`] — byte-identical peaks;
+//! * the incremental DSA layout search ([`roam::layout::dsa`]) vs
+//!   [`roam::layout::dsa_ref`] — byte-identical arenas;
+//! * the incrementally-rescored LESCEA greedy vs a from-scratch rescoring
+//!   reference — byte-identical orders;
+//! * the double-buffered reachability propagation vs a naive DFS closure —
+//!   identical predecessor/successor sets;
+//!
+//! on random training graphs and on leaves extracted from the transformer
+//! and mobile model builders, plus the `node_limit = 256` planner run the
+//! old 128-op-capped scheduler could not support.
+
+use roam::graph::random::{random_training_graph, RandomGraphCfg};
+use roam::graph::topo::is_topological;
+use roam::graph::{Graph, OpId, Reachability};
+use roam::layout::dsa::{min_arena_layout, DsaCfg};
+use roam::layout::dsa_ref::min_arena_layout_ref;
+use roam::layout::sim::conflicts;
+use roam::layout::{Item, Layout};
+use roam::models::{self, BuildCfg, ModelKind};
+use roam::planner::roam::extract_subgraph;
+use roam::planner::{layout_items, roam_plan, RoamCfg};
+use roam::sched::bnb::{min_peak_order, BnbCfg};
+use roam::sched::bnb_ref::min_peak_order_ref;
+use roam::sched::lescea::lescea_order;
+use roam::sched::sim::theoretical_peak;
+use roam::sched::Schedule;
+use roam::segments::tree::{construct, TreeCfg};
+use roam::util::quick::forall;
+
+// ---------------------------------------------------------------- ordering
+
+fn check_bnb_pair(g: &Graph, cfg: &BnbCfg) -> Result<(), String> {
+    let inc = min_peak_order(g, cfg);
+    let reference = min_peak_order_ref(g, cfg);
+    if !is_topological(g, &inc.order) {
+        return Err("incremental order not topological".into());
+    }
+    if !is_topological(g, &reference.order) {
+        return Err("reference order not topological".into());
+    }
+    let sim_inc = theoretical_peak(g, &Schedule::from_order(&inc.order));
+    if sim_inc != inc.peak {
+        return Err(format!("incremental peak {} != sim {}", inc.peak, sim_inc));
+    }
+    // Both solvers explore children in the same greedy order with the same
+    // pruning, so whenever both exhaust the space the optima must agree
+    // byte-for-byte.
+    if inc.proved_optimal && reference.proved_optimal && inc.peak != reference.peak {
+        return Err(format!(
+            "peaks diverge: incremental {} reference {}",
+            inc.peak, reference.peak
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn bnb_matches_reference_on_random_graphs() {
+    forall("bnb == bnb_ref", 40, |rng| {
+        let g = random_training_graph(rng, &RandomGraphCfg {
+            fwd_ops: rng.usize_in(2, 10),
+            adam: rng.chance(0.5),
+            ..Default::default()
+        });
+        check_bnb_pair(&g, &BnbCfg::default())
+    });
+}
+
+#[test]
+fn bnb_matches_reference_on_model_leaves() {
+    // Leaves exactly as the planner produces them, from a transformer and
+    // a mobile CNN builder (node_limit 24 keeps the reference affordable).
+    for kind in [ModelKind::SyntheticTransformer, ModelKind::Mobilenet] {
+        let g = models::build(kind, &BuildCfg {
+            batch: 1,
+            depth: 2,
+            ..Default::default()
+        });
+        let reach = Reachability::compute(&g);
+        let tree = construct(&g, &reach, &TreeCfg { node_limit: 24 });
+        let mut checked = 0;
+        for task in tree.order_tasks.iter().filter(|t| t.ops.len() > 2) {
+            let (sub, _) = extract_subgraph(&g, &task.ops);
+            // Same bounded budget for both solvers; the proved_optimal gate
+            // inside check_bnb_pair skips equality if a leaf is cut short.
+            let cfg = BnbCfg {
+                max_nodes: 200_000,
+                ..Default::default()
+            };
+            check_bnb_pair(&sub, &cfg)
+                .unwrap_or_else(|e| panic!("{} leaf: {e}", kind.name()));
+            checked += 1;
+        }
+        assert!(checked > 0, "{}: no non-trivial leaves", kind.name());
+    }
+}
+
+// ------------------------------------------------------------------ layout
+
+#[test]
+fn dsa_matches_reference_on_random_items() {
+    forall("dsa == dsa_ref", 60, |rng| {
+        let n = rng.usize_in(1, 14);
+        let items: Vec<Item> = (0..n)
+            .map(|id| Item {
+                id,
+                life: {
+                    let b = rng.usize_in(0, 10);
+                    roam::graph::Lifetime {
+                        birth: b,
+                        death: b + rng.usize_in(0, 5),
+                    }
+                },
+                size: 1 + rng.gen_range(256),
+            })
+            .collect();
+        let cfg = DsaCfg {
+            workers: if rng.chance(0.5) { 1 } else { 3 },
+            ..Default::default()
+        };
+        let inc = min_arena_layout(&items, &cfg);
+        let reference = min_arena_layout_ref(&items, &DsaCfg::default());
+        if !conflicts(&items, &inc.layout).is_empty() {
+            return Err("incremental layout conflicts".into());
+        }
+        if !conflicts(&items, &reference.layout).is_empty() {
+            return Err("reference layout conflicts".into());
+        }
+        // Identical candidate enumeration ⇒ identical arena whenever
+        // neither run was budget-cut.
+        if !inc.cut_short && !reference.cut_short && inc.arena != reference.arena {
+            return Err(format!(
+                "arenas diverge: incremental {} reference {}",
+                inc.arena, reference.arena
+            ));
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------------ lescea
+
+/// The historical O(n²·deg²) LESCEA: rescore every ready op from scratch
+/// each step. Kept here as the oracle for the incremental rescoring.
+fn lescea_order_naive(g: &Graph) -> Vec<OpId> {
+    let (preds, succs) = g.adjacency();
+    let n = g.n_ops();
+    let mut indeg: Vec<usize> = preds.iter().map(|p| p.len()).collect();
+    let mut remaining: Vec<usize> = g.tensors.iter().map(|t| t.consumers.len()).collect();
+    let mut ready: Vec<OpId> = (0..n).filter(|&v| indeg[v] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    while !ready.is_empty() {
+        let mut best_i = 0usize;
+        let mut best_delta = i64::MAX;
+        for (i, &v) in ready.iter().enumerate() {
+            let mut delta = 0i64;
+            for &t in &g.ops[v].outputs {
+                if !g.tensors[t].class.is_persistent() {
+                    delta += g.tensors[t].size as i64;
+                }
+            }
+            for &t in &g.ops[v].inputs {
+                let tt = &g.tensors[t];
+                if tt.class.is_persistent() || tt.is_output {
+                    continue;
+                }
+                let uses = g.ops[v].inputs.iter().filter(|&&x| x == t).count();
+                if remaining[t] == uses {
+                    delta -= tt.size as i64;
+                }
+            }
+            if delta < best_delta || (delta == best_delta && v < ready[best_i]) {
+                best_delta = delta;
+                best_i = i;
+            }
+        }
+        let v = ready.swap_remove(best_i);
+        order.push(v);
+        for &t in &g.ops[v].inputs {
+            remaining[t] -= 1;
+        }
+        for &s in &succs[v] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                ready.push(s);
+            }
+        }
+    }
+    order
+}
+
+#[test]
+fn lescea_incremental_rescoring_is_byte_identical() {
+    forall("lescea == naive lescea", 60, |rng| {
+        let g = random_training_graph(rng, &RandomGraphCfg {
+            fwd_ops: rng.usize_in(2, 18),
+            adam: rng.chance(0.5),
+            ..Default::default()
+        });
+        let fast = lescea_order(&g);
+        let naive = lescea_order_naive(&g);
+        if fast == naive {
+            Ok(())
+        } else {
+            Err(format!("orders diverge: fast {fast:?} naive {naive:?}"))
+        }
+    });
+}
+
+#[test]
+fn lescea_identical_on_model_builders() {
+    for kind in [ModelKind::SyntheticTransformer, ModelKind::Mobilenet] {
+        let g = models::build(kind, &BuildCfg {
+            batch: 1,
+            depth: 2,
+            ..Default::default()
+        });
+        assert_eq!(
+            lescea_order(&g),
+            lescea_order_naive(&g),
+            "{} order diverged",
+            kind.name()
+        );
+    }
+}
+
+// ------------------------------------------------------------ reachability
+
+#[test]
+fn reachability_matches_naive_dfs_closure() {
+    forall("reach == dfs closure", 25, |rng| {
+        let g = random_training_graph(rng, &RandomGraphCfg {
+            fwd_ops: rng.usize_in(2, 12),
+            ..Default::default()
+        });
+        let r = Reachability::compute(&g);
+        let (_, succs) = g.adjacency();
+        let n = g.n_ops();
+        for v in 0..n {
+            // DFS descendants of v.
+            let mut seen = vec![false; n];
+            let mut stack = vec![v];
+            while let Some(u) = stack.pop() {
+                for &s in &succs[u] {
+                    if !seen[s] {
+                        seen[s] = true;
+                        stack.push(s);
+                    }
+                }
+            }
+            for u in 0..n {
+                let expect = seen[u];
+                if r.below[v].get(u) != expect {
+                    return Err(format!("below[{v}] bit {u}: expected {expect}"));
+                }
+                if r.above[u].get(v) != expect {
+                    return Err(format!("above[{u}] bit {v}: expected {expect}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ----------------------------------------------------------- planner-level
+
+#[test]
+fn roam_plans_with_node_limit_256() {
+    // Acceptance backstop: leaves larger than the old 128-op cap must plan
+    // end-to-end with valid orders and conflict-free layouts.
+    let g = models::build(ModelKind::SyntheticTransformer, &BuildCfg {
+        batch: 1,
+        depth: 2,
+        ..Default::default()
+    });
+    let r = roam_plan(&g, &RoamCfg {
+        node_limit: 256,
+        ..Default::default()
+    });
+    assert!(is_topological(&g, &r.order));
+    let items = layout_items(&g, &r.schedule);
+    let c = conflicts(&items, &Layout {
+        offsets: r.offsets.clone(),
+    });
+    assert!(c.is_empty(), "{} layout conflicts", c.len());
+    assert!(r.actual_peak >= r.theoretical_peak);
+}
