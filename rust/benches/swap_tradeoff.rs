@@ -1,0 +1,129 @@
+//! Memory-vs-overhead tradeoff curves for the three eviction techniques
+//! (pure recompute, pure swap, hybrid): sweep a hard budget over the
+//! workloads and report, per technique, the achieved total memory plus
+//! both overhead kinds — the acceptance view that the hybrid driver
+//! matches or beats pure recompute's peak at the same budget while
+//! paying no more modeled overhead seconds.
+//!
+//! `cargo bench --bench swap_tradeoff [-- --models vit,bert]
+//!  [--fractions 1.0,0.8,0.6,0.4] [--batch 1] [--coarse]
+//!  [--pcie-gbps 16] [--compute-gbps 800]`
+//!
+//! `--coarse` builds coarse-granularity SGD graphs (the CI-scale GPT-2
+//! convention). Besides the `bench_results/` table this writes the
+//! repo-root `BENCH_swap.json` trajectory next to `BENCH_planner.json`
+//! (CI's bench-smoke job uploads both).
+
+use roam::benchkit::{mib, pct, Report};
+use roam::hybrid::{hybrid_tradeoff_sweep, HybridCfg, Technique};
+use roam::models::{self, BuildCfg, ModelKind, Optim};
+use roam::planner::RoamCfg;
+use roam::swap::CostModel;
+use roam::util::cli::Args;
+use roam::util::json::Json;
+
+fn main() {
+    let args = Args::from_env();
+    let model_names = args.get("models", "vit,bert,synthetic");
+    let fractions: Vec<f64> = args
+        .get("fractions", "1.0,0.8,0.6,0.4")
+        .split(',')
+        .map(|s| s.parse().expect("--fractions"))
+        .collect();
+    let batch = args.usize("batch", 1);
+    let coarse = args.flag("coarse");
+    let cost = CostModel::from_args(&args);
+
+    let mut rep = Report::new(
+        "swap_tradeoff",
+        "Recompute vs swap vs hybrid: memory vs modeled overhead",
+        &[
+            "model",
+            "technique",
+            "budget_frac",
+            "budget_MiB",
+            "total_MiB",
+            "vs_baseline",
+            "met",
+            "rc_ops",
+            "rc_ms",
+            "swapped",
+            "moved_MiB",
+            "exposed_ms",
+        ],
+    );
+    let mut traj_rows: Vec<Json> = Vec::new();
+
+    for name in model_names.split(',') {
+        let kind = ModelKind::from_name(name).unwrap_or_else(|| panic!("unknown model {name}"));
+        let g = models::build(
+            kind,
+            &BuildCfg {
+                batch,
+                optim: if coarse { Optim::Sgd } else { Optim::Adam },
+                fine_grained: !coarse,
+                ..Default::default()
+            },
+        );
+        for technique in [Technique::Recompute, Technique::Swap, Technique::Hybrid] {
+            let cfg = HybridCfg {
+                technique,
+                cost,
+                roam: RoamCfg {
+                    time_limit_secs: args.f64("time-limit", 600.0),
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let sweep = hybrid_tradeoff_sweep(&g, &fractions, &cfg);
+            for p in &sweep.points {
+                rep.row(&[
+                    name.to_string(),
+                    technique.name().to_string(),
+                    format!("{:.2}", p.fraction),
+                    mib(p.budget),
+                    mib(p.total),
+                    pct(100.0 * p.total as f64 / sweep.baseline_total.max(1) as f64),
+                    if p.met { "yes" } else { "NO" }.to_string(),
+                    p.recompute_ops.to_string(),
+                    format!("{:.3}", p.recompute_secs * 1e3),
+                    p.swapped.to_string(),
+                    mib(p.swap_moved_bytes),
+                    format!("{:.3}", p.swap_exposed_secs * 1e3),
+                ]);
+                traj_rows.push(Json::obj(vec![
+                    ("model", Json::Str(name.to_string())),
+                    ("technique", Json::Str(technique.name().to_string())),
+                    ("fraction", Json::Num(p.fraction)),
+                    ("budget", Json::Num(p.budget as f64)),
+                    ("total", Json::Num(p.total as f64)),
+                    ("baseline_total", Json::Num(sweep.baseline_total as f64)),
+                    ("met", Json::Num(if p.met { 1.0 } else { 0.0 })),
+                    ("recompute_ops", Json::Num(p.recompute_ops as f64)),
+                    ("recompute_secs", Json::Num(p.recompute_secs)),
+                    ("swapped", Json::Num(p.swapped as f64)),
+                    ("swap_moved_bytes", Json::Num(p.swap_moved_bytes as f64)),
+                    ("swap_exposed_secs", Json::Num(p.swap_exposed_secs)),
+                ]));
+            }
+        }
+    }
+    rep.finish();
+
+    // Repo-root trajectory file, sibling of BENCH_planner.json.
+    let out = Json::obj(vec![
+        ("bench", Json::Str("swap_tradeoff".to_string())),
+        ("schema", Json::Str("swap-tradeoff-v1".to_string())),
+        (
+            "generated_by",
+            Json::Str("cargo bench --bench swap_tradeoff".to_string()),
+        ),
+        ("points", Json::Arr(traj_rows)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .join("BENCH_swap.json");
+    std::fs::write(&path, format!("{}\n", out.pretty())).expect("write BENCH_swap.json");
+    println!("--- swap tradeoff trajectory → {}", path.display());
+}

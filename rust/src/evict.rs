@@ -1,0 +1,202 @@
+//! Shared eviction machinery for the high-level memory techniques.
+//!
+//! Both budgeted rematerialization ([`crate::recompute`]) and
+//! bandwidth-aware offloading ([`crate::swap`]) follow the same structural
+//! recipe: pick a forward activation with backward consumers, *evict* it
+//! (retarget its backward consumers to a replacement tensor produced
+//! inside the backward pass) and let the liveness rules price the saving —
+//! the original now dies at its last forward use. The two techniques only
+//! differ in how the replacement is produced (cloned forward ops vs a
+//! `SwapIn` fetch) and in what overhead that costs (FLOP-proxy bytes vs
+//! un-hidden transfer time).
+//!
+//! This module owns the pieces that recipe shares:
+//!
+//! * [`is_evictable`] — the eligibility gate;
+//! * [`filter_evictable`] — dedup + eligibility filtering of a requested
+//!   eviction set;
+//! * [`backward_consumers`] / [`retarget_backward`] — the consumer-edge
+//!   rewrite both rewriters perform;
+//! * [`find_anchor`] — the loss-phase control anchor that pins replacement
+//!   producers into the backward region for any topological scheduler.
+
+use crate::graph::{Graph, OpId, Phase, Reachability, TensorClass, TensorId};
+
+/// Can `t` be evicted (recomputed *or* swapped)? It must be a non-output
+/// forward activation with at least one backward consumer, and no
+/// loss/update consumers (those pin it across the fwd/bwd boundary
+/// anyway). Tensors introduced by earlier rewrites are excluded
+/// structurally: swap handles are temp buffers, and replacement tensors
+/// are produced by backward-phase ops.
+pub fn is_evictable(g: &Graph, t: TensorId) -> bool {
+    let tt = &g.tensors[t];
+    if tt.class != TensorClass::Activation || tt.is_output {
+        return false;
+    }
+    let Some(p) = tt.producer else {
+        return false;
+    };
+    if g.ops[p].phase != Phase::Forward {
+        return false;
+    }
+    let mut has_bwd = false;
+    for &c in &tt.consumers {
+        match g.ops[c].phase {
+            Phase::Backward => has_bwd = true,
+            Phase::Forward => {}
+            Phase::Loss | Phase::Update => return false,
+        }
+    }
+    has_bwd
+}
+
+/// Deduplicate `evict` (first occurrence wins) and drop everything
+/// [`is_evictable`] rejects, preserving order.
+pub fn filter_evictable(g: &Graph, evict: &[TensorId]) -> Vec<TensorId> {
+    let mut seen = vec![false; g.n_tensors()];
+    let mut out = Vec::new();
+    for &t in evict {
+        if t < g.n_tensors() && !seen[t] && is_evictable(g, t) {
+            seen[t] = true;
+            out.push(t);
+        }
+    }
+    out
+}
+
+/// The backward-phase consumers of `t` in `g`, sorted and dedup'd.
+pub fn backward_consumers(g: &Graph, t: TensorId) -> Vec<OpId> {
+    let mut consumers: Vec<OpId> = g.tensors[t]
+        .consumers
+        .iter()
+        .copied()
+        .filter(|&c| g.ops[c].phase == Phase::Backward)
+        .collect();
+    consumers.sort_unstable();
+    consumers.dedup();
+    consumers
+}
+
+/// Retarget every backward consumer `t` has in `g` from `t` to
+/// `replacement` inside `out` (an augmented copy of `g` in which both
+/// tensors exist). Returns the retargeted ops.
+pub fn retarget_backward(
+    out: &mut Graph,
+    g: &Graph,
+    t: TensorId,
+    replacement: TensorId,
+) -> Vec<OpId> {
+    let consumers = backward_consumers(g, t);
+    for &c in &consumers {
+        out.replace_input(c, t, replacement);
+    }
+    consumers
+}
+
+/// An output tensor of a loss-phase op that precedes every retargeted
+/// backward consumer, if one exists. Used as a control input for the
+/// replacement producers: acyclic by construction — the anchor strictly
+/// precedes all replacement-output consumers, and the replacement ops have
+/// no other successors, so no path can lead back to the anchor.
+pub fn find_anchor(
+    g: &Graph,
+    reach: &Reachability,
+    remap: &[(TensorId, TensorId)],
+) -> Option<TensorId> {
+    let mut rewired: Vec<OpId> = remap
+        .iter()
+        .flat_map(|&(t, _)| backward_consumers(g, t))
+        .collect();
+    rewired.sort_unstable();
+    rewired.dedup();
+    g.ops
+        .iter()
+        .find(|op| {
+            op.phase == Phase::Loss
+                && !op.outputs.is_empty()
+                && rewired.iter().all(|&c| reach.precedes(op.id, c))
+        })
+        .map(|op| op.outputs[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpKind, Phase, TensorClass};
+
+    /// fwd chain a→b→loss, backward consumes both activations.
+    fn training_chain() -> Graph {
+        let mut g = Graph::new("chain");
+        let x = g.add_input_tensor("x", 10, TensorClass::Input);
+        let (_, t0) = g.add_op(
+            "a",
+            OpKind::MatMul,
+            Phase::Forward,
+            &[x],
+            &[("act0", 100, TensorClass::Activation)],
+        );
+        let (_, t1) = g.add_op(
+            "b",
+            OpKind::MatMul,
+            Phase::Forward,
+            &[t0[0]],
+            &[("act1", 100, TensorClass::Activation)],
+        );
+        let (_, l) = g.add_op(
+            "loss",
+            OpKind::Loss,
+            Phase::Loss,
+            &[t1[0]],
+            &[("loss", 4, TensorClass::TempBuffer)],
+        );
+        g.mark_output(l[0]);
+        let (_, d1) = g.add_op(
+            "b.bwd",
+            OpKind::MatMul,
+            Phase::Backward,
+            &[t1[0], l[0]],
+            &[("dact0", 100, TensorClass::Gradient)],
+        );
+        let (_, d0) = g.add_op(
+            "a.bwd",
+            OpKind::MatMul,
+            Phase::Backward,
+            &[t0[0], d1[0]],
+            &[("dx", 10, TensorClass::Gradient)],
+        );
+        g.mark_output(d0[0]);
+        g
+    }
+
+    #[test]
+    fn evictability_rules() {
+        let g = training_chain();
+        assert!(is_evictable(&g, 1)); // act0: fwd activation, bwd consumer
+        assert!(!is_evictable(&g, 2)); // act1: loss consumer pins it
+        assert!(!is_evictable(&g, 0)); // graph input
+        assert!(!is_evictable(&g, 3)); // loss output (TempBuffer + output)
+    }
+
+    #[test]
+    fn filter_dedups_and_rejects() {
+        let g = training_chain();
+        assert_eq!(filter_evictable(&g, &[1, 1, 2, 0, 99]), vec![1]);
+        assert!(filter_evictable(&g, &[]).is_empty());
+    }
+
+    #[test]
+    fn backward_consumer_listing() {
+        let g = training_chain();
+        assert_eq!(backward_consumers(&g, 1), vec![4]); // act0 → a.bwd
+        assert_eq!(backward_consumers(&g, 0), Vec::<OpId>::new());
+    }
+
+    #[test]
+    fn anchor_is_the_loss_output() {
+        let g = training_chain();
+        let reach = Reachability::compute(&g);
+        // act0's backward consumer (a.bwd) is preceded by the loss op.
+        assert_eq!(find_anchor(&g, &reach, &[(1, 0)]), Some(3));
+        assert_eq!(find_anchor(&g, &reach, &[]), Some(3)); // vacuous
+    }
+}

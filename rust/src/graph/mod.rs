@@ -62,6 +62,12 @@ pub enum OpKind {
     GradAcc,
     OptimStep,
     Input,
+    /// Device→host eviction copy inserted by the [`crate::swap`] rewriter:
+    /// consumes the evicted tensor, emits a 1-byte host handle.
+    SwapOut,
+    /// Host→device fetch of a previously swapped tensor: consumes the
+    /// handle, re-materialises the tensor for its backward consumers.
+    SwapIn,
     Other,
 }
 

@@ -23,6 +23,11 @@ pub enum Defect {
     Cycle,
     /// A tensor has zero size (legal in HLO, but suspicious in builders).
     ZeroSize(usize),
+    /// A `SwapOut`/`SwapIn` op violates the swap structural contract:
+    /// `SwapOut` must consume ≥ 1 tensor and emit exactly one handle;
+    /// `SwapIn` must emit exactly one tensor and consume a handle produced
+    /// by a `SwapOut`.
+    MalformedSwap { op: usize },
 }
 
 /// Validate; returns all defects found (empty = structurally sound).
@@ -86,6 +91,27 @@ pub fn validate(g: &Graph) -> Vec<Defect> {
             if t < g.n_tensors() && g.tensors[t].producer != Some(i) {
                 defects.push(Defect::InconsistentProducer { tensor: t, op: i });
             }
+        }
+        // Swap structural contract (the swap/ rewriter's invariants).
+        match op.kind {
+            super::OpKind::SwapOut => {
+                if op.inputs.is_empty() || op.outputs.len() != 1 {
+                    defects.push(Defect::MalformedSwap { op: i });
+                }
+            }
+            super::OpKind::SwapIn => {
+                let has_handle = op.inputs.iter().any(|&t| {
+                    t < g.n_tensors()
+                        && g.tensors[t]
+                            .producer
+                            .map(|p| g.ops[p].kind == super::OpKind::SwapOut)
+                            .unwrap_or(false)
+                });
+                if op.outputs.len() != 1 || !has_handle {
+                    defects.push(Defect::MalformedSwap { op: i });
+                }
+            }
+            _ => {}
         }
     }
     // Cycle check: Kahn must visit everything.
@@ -152,6 +178,26 @@ mod tests {
         assert!(validate(&g)
             .iter()
             .any(|d| matches!(d, Defect::InconsistentConsumer { .. })));
+    }
+
+    #[test]
+    fn detects_malformed_swap() {
+        // A SwapIn whose input is not a SwapOut-produced handle.
+        let mut g = Graph::new("swap-bad");
+        let x = g.add_input_tensor("x", 4, TensorClass::Activation);
+        g.add_op("si", OpKind::SwapIn, Phase::Backward, &[x],
+            &[("t", 4, TensorClass::Activation)]);
+        assert!(validate(&g)
+            .iter()
+            .any(|d| matches!(d, Defect::MalformedSwap { .. })));
+        // A well-formed out/in pair validates cleanly.
+        let mut g = Graph::new("swap-ok");
+        let x = g.add_input_tensor("x", 4, TensorClass::Activation);
+        let (_, h) = g.add_op("so", OpKind::SwapOut, Phase::Forward, &[x],
+            &[("h", 1, TensorClass::TempBuffer)]);
+        g.add_op("si", OpKind::SwapIn, Phase::Backward, &[h[0]],
+            &[("t", 4, TensorClass::Activation)]);
+        assert!(validate(&g).is_empty());
     }
 
     #[test]

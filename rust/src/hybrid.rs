@@ -1,0 +1,841 @@
+//! Budgeted planning driver generalised over eviction *techniques*:
+//! recomputation ([`crate::recompute`]), bandwidth-aware swapping
+//! ([`crate::swap`]), or a per-tensor hybrid of both — the
+//! Capuchin/POFO-style "cheapest overhead first" policy on top of ROAM's
+//! order+layout substrate.
+//!
+//! Each escalation round evicts a growing prefix of the candidate-unit
+//! list; every unit in the prefix is realised by the technique the driver
+//! assigned it (recompute clones vs `SwapOut`/`SwapIn` pairs), the
+//! **original** graph is rewritten with the union, and the full ROAM
+//! pipeline re-plans the augmented graph — so the recompute working set
+//! and the swap hiding windows are themselves order/layout-optimised.
+//! The driver keeps the best (minimum-total) round seen and never
+//! returns a plan worse than the technique-free baseline.
+//!
+//! Overheads are priced on one scale — seconds — by the swap cost model
+//! ([`crate::swap::CostModel`]): recompute pays its cloned bytes over the
+//! compute throughput (the FLOP-proxy convention), swap pays the
+//! *un-hidden* part of its transfers, measured against the planned
+//! schedule. Both kinds are reported in [`ExecutionPlan::stats`].
+//!
+//! **Dominance.** With [`Technique::Hybrid`] the driver additionally
+//! replays the pure-recompute and pure-swap escalations (identical
+//! candidate rankings, prefix schedules and stop rules as the pure
+//! drivers) and picks the best round across all three — so on a
+//! deterministic planner configuration a hybrid plan is never worse than
+//! either pure technique at the same budget, by construction. That costs
+//! up to 3× the planning rounds; `tests/hybrid_props.rs` pins the
+//! property.
+//!
+//! [`crate::recompute::roam_plan_budgeted`] is the
+//! [`Technique::Recompute`] specialisation of this driver, kept as the
+//! stable recompute-only API.
+
+use crate::graph::{Graph, Reachability};
+use crate::planner::{roam_plan, ExecutionPlan, RoamCfg};
+use crate::recompute::rewrite::rewrite as rc_rewrite;
+use crate::recompute::select::{candidates, Candidate, Strategy};
+use crate::sched::sim::{live_at, profile};
+use crate::swap::cost::{plan_swap_overhead, transfer_aware_peak, CostModel, Timeline};
+use crate::swap::rewrite::rewrite as swap_rewrite;
+use crate::swap::select::unit_swap_cost;
+use crate::util::Stopwatch;
+
+/// How the memory budget is specified.
+#[derive(Clone, Copy, Debug)]
+pub enum BudgetSpec {
+    /// Absolute bytes for `actual_peak + persistent`.
+    Bytes(u64),
+    /// Fraction of the unbudgeted ROAM plan's total (e.g. `0.6`).
+    Fraction(f64),
+}
+
+impl BudgetSpec {
+    /// Resolve to bytes against the unbudgeted baseline total.
+    pub fn resolve(self, baseline_total: u64) -> u64 {
+        match self {
+            BudgetSpec::Bytes(b) => b,
+            BudgetSpec::Fraction(f) => (baseline_total as f64 * f).floor() as u64,
+        }
+    }
+}
+
+/// Which eviction technique the driver may use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Technique {
+    /// Recompute clones only (the classic rematerialization driver).
+    Recompute,
+    /// `SwapOut`/`SwapIn` pairs only.
+    Swap,
+    /// Per-unit cheapest-overhead choice, subsuming both pure drivers.
+    Hybrid,
+}
+
+impl Technique {
+    /// Parse a CLI name.
+    pub fn from_name(s: &str) -> Option<Technique> {
+        match s.to_ascii_lowercase().as_str() {
+            "recompute" | "rc" => Some(Technique::Recompute),
+            "swap" => Some(Technique::Swap),
+            "hybrid" => Some(Technique::Hybrid),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Technique::Recompute => "recompute",
+            Technique::Swap => "swap",
+            Technique::Hybrid => "hybrid",
+        }
+    }
+}
+
+/// Configuration of the hybrid driver.
+#[derive(Clone, Debug)]
+pub struct HybridCfg {
+    /// Technique policy.
+    pub technique: Technique,
+    /// Eviction-unit formation strategy (shared with the recompute
+    /// selector: per-tensor greedy or per-segment checkpoint units).
+    pub strategy: Strategy,
+    /// Bandwidth/compute model pricing both overhead kinds.
+    pub cost: CostModel,
+    /// ROAM planner configuration used for every (re-)planning round.
+    pub roam: RoamCfg,
+    /// Maximum select→rewrite→plan rounds per escalation.
+    pub max_rounds: usize,
+    /// Eviction-prefix growth factor between rounds.
+    pub growth: f64,
+}
+
+impl Default for HybridCfg {
+    fn default() -> Self {
+        HybridCfg {
+            technique: Technique::Hybrid,
+            strategy: Strategy::Greedy,
+            cost: CostModel::default(),
+            roam: RoamCfg::default(),
+            max_rounds: 12,
+            growth: 2.0,
+        }
+    }
+}
+
+/// An eviction unit with both techniques priced in seconds.
+#[derive(Clone, Debug)]
+pub struct PricedCandidate {
+    /// The underlying unit (tensors, bytes saved, recompute cost bytes).
+    pub unit: Candidate,
+    /// FLOP-proxy seconds to recompute the unit's cloned region.
+    pub recompute_secs: f64,
+    /// Modeled out+in transfer seconds of swapping the unit.
+    pub swap_transfer_secs: f64,
+    /// Estimated un-hidden transfer seconds under the baseline schedule.
+    pub swap_exposed_secs: f64,
+}
+
+impl PricedCandidate {
+    /// The technique a [`Technique::Hybrid`] driver assigns this unit.
+    pub fn cheaper(&self) -> Technique {
+        if self.swap_exposed_secs <= self.recompute_secs {
+            Technique::Swap
+        } else {
+            Technique::Recompute
+        }
+    }
+
+    /// Overhead seconds under the given (pure or hybrid) technique.
+    fn overhead_under(&self, technique: Technique) -> f64 {
+        match technique {
+            Technique::Recompute => self.recompute_secs,
+            Technique::Swap => self.swap_exposed_secs,
+            Technique::Hybrid => self.swap_exposed_secs.min(self.recompute_secs),
+        }
+    }
+}
+
+/// Price every unit of `units` against the baseline timeline.
+pub fn price_candidates(
+    g: &Graph,
+    tl: &Timeline,
+    m: &CostModel,
+    units: Vec<Candidate>,
+) -> Vec<PricedCandidate> {
+    units
+        .into_iter()
+        .map(|unit| {
+            let (transfer, exposed) = unit_swap_cost(g, tl, m, &unit.tensors);
+            PricedCandidate {
+                recompute_secs: m.recompute_secs(unit.cost),
+                swap_transfer_secs: transfer,
+                swap_exposed_secs: exposed,
+                unit,
+            }
+        })
+        .collect()
+}
+
+/// Re-rank `cands` for `technique`: peak-relieving units first, then
+/// bytes-saved per overhead-second of the technique. For
+/// [`Technique::Recompute`] the recompute selector's ranking is kept
+/// verbatim (byte-ratio based), preserving the historical driver.
+fn rank(cands: &mut [PricedCandidate], technique: Technique) {
+    if technique == Technique::Recompute {
+        return;
+    }
+    cands.sort_by(|a, b| {
+        b.unit
+            .at_peak
+            .cmp(&a.unit.at_peak)
+            .then_with(|| {
+                let sa = crate::swap::select::score(a.unit.saved, a.overhead_under(technique));
+                let sb = crate::swap::select::score(b.unit.saved, b.overhead_under(technique));
+                sb.partial_cmp(&sa).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .then(b.unit.saved.cmp(&a.unit.saved))
+            .then(a.unit.tensors[0].cmp(&b.unit.tensors[0]))
+    });
+}
+
+/// Smallest candidate prefix whose (optimistic) estimated saving covers
+/// `gap`; at least 1.
+pub(crate) fn prefix_for_gap(cands: &[PricedCandidate], gap: u64) -> usize {
+    let mut acc = 0u64;
+    for (i, c) in cands.iter().enumerate() {
+        acc = acc.saturating_add(c.unit.saved);
+        if acc >= gap {
+            return i + 1;
+        }
+    }
+    cands.len().max(1)
+}
+
+/// One escalation round (shared with the tradeoff sweep).
+pub(crate) struct HRound {
+    pub plan: ExecutionPlan,
+    pub graph: Graph,
+    pub rc_ops: usize,
+    pub rc_bytes: u64,
+    pub rc_evicted: usize,
+    pub swapped: usize,
+    pub swap_bytes: u64,
+    pub evicted: usize,
+    pub recompute_secs: f64,
+    pub swap_transfer_secs: f64,
+    pub swap_exposed_secs: f64,
+    /// Transfer-aware peak minus the plain theoretical peak: the bytes by
+    /// which in-flight out-DMAs (which keep their source resident) would
+    /// exceed the liveness model the layout was solved against.
+    pub transfer_excess_bytes: u64,
+}
+
+impl HRound {
+    pub(crate) fn total(&self) -> u64 {
+        self.plan.total_bytes()
+    }
+
+    pub(crate) fn overhead_secs(&self) -> f64 {
+        self.recompute_secs + self.swap_exposed_secs
+    }
+}
+
+/// Run escalation rounds under `technique` with the deterministic
+/// eviction-prefix schedule `start_k, ⌈start_k·growth⌉, …, n_candidates`,
+/// stopping as soon as `stop(best_total_so_far)` holds (`cfg.max_rounds`
+/// caps the escalation). `cands` must already be ranked for `technique`.
+pub(crate) fn escalate(
+    g: &Graph,
+    reach: &Reachability,
+    cands: &[PricedCandidate],
+    cfg: &HybridCfg,
+    technique: Technique,
+    start_k: usize,
+    stop: impl Fn(u64) -> bool,
+) -> Vec<HRound> {
+    let mut rounds: Vec<HRound> = Vec::new();
+    if cands.is_empty() {
+        return rounds;
+    }
+    let mut k = start_k.clamp(1, cands.len());
+    let mut best = u64::MAX;
+    loop {
+        let mut rc_set = Vec::new();
+        let mut sw_set = Vec::new();
+        for c in &cands[..k] {
+            let assigned = match technique {
+                Technique::Recompute => Technique::Recompute,
+                Technique::Swap => Technique::Swap,
+                Technique::Hybrid => c.cheaper(),
+            };
+            match assigned {
+                Technique::Swap => sw_set.extend_from_slice(&c.unit.tensors),
+                _ => rc_set.extend_from_slice(&c.unit.tensors),
+            }
+        }
+        // Recompute rewrite first (it clones regions of the original
+        // graph), then swap the remaining set on the augmented graph —
+        // a recompute clone that checkpoints a swapped tensor is thereby
+        // retargeted to the fetched copy, as a real system would.
+        let rw1 = rc_rewrite(g, reach, &rc_set);
+        let rc_ops = rw1.recompute_ops.len();
+        let rc_bytes = rw1.recompute_bytes;
+        let rc_evicted = rw1.evicted();
+        let (graph, pairs, swap_bytes) = if sw_set.is_empty() {
+            (rw1.graph, Vec::new(), 0u64)
+        } else if rc_ops == 0 {
+            let rw2 = swap_rewrite(g, reach, &sw_set);
+            (rw2.graph, rw2.pairs, rw2.swapped_bytes)
+        } else {
+            let reach1 = Reachability::compute(&rw1.graph);
+            let rw2 = swap_rewrite(&rw1.graph, &reach1, &sw_set);
+            (rw2.graph, rw2.pairs, rw2.swapped_bytes)
+        };
+        let plan = roam_plan(&graph, &cfg.roam);
+        let so = plan_swap_overhead(&graph, &plan.schedule, &cfg.cost, &pairs);
+        let transfer_excess_bytes = if pairs.is_empty() {
+            0
+        } else {
+            transfer_aware_peak(&graph, &plan.schedule, &cfg.cost, &pairs)
+                .saturating_sub(plan.theoretical_peak)
+        };
+        let round = HRound {
+            transfer_excess_bytes,
+            rc_ops,
+            rc_bytes,
+            rc_evicted,
+            swapped: pairs.len(),
+            swap_bytes,
+            evicted: rc_evicted + pairs.len(),
+            recompute_secs: cfg.cost.recompute_secs(rc_bytes),
+            swap_transfer_secs: so.transfer_secs,
+            swap_exposed_secs: so.exposed_secs,
+            plan,
+            graph,
+        };
+        best = best.min(round.total());
+        rounds.push(round);
+        if stop(best) || k == cands.len() || rounds.len() >= cfg.max_rounds {
+            break;
+        }
+        let grown = ((k as f64) * cfg.growth).ceil() as usize;
+        k = grown.max(k + 1).min(cands.len());
+    }
+    rounds
+}
+
+/// Price the eviction units against `base` and run one escalation per
+/// technique in `cfg`'s policy ([`Technique::Hybrid`] replays both pure
+/// techniques after its own mixed assignment), concatenating the rounds
+/// in policy order. `start_k_of` sizes the first eviction prefix per
+/// ranked candidate list; an escalation stops once its running best
+/// total fits `stop_budget`. Returns the rounds and whether every
+/// escalation reached full eviction while trying. Shared by
+/// [`roam_plan_hybrid`] and [`hybrid_tradeoff_sweep`] so the two can
+/// never drift.
+fn run_escalations(
+    g: &Graph,
+    base: &ExecutionPlan,
+    cfg: &HybridCfg,
+    start_k_of: impl Fn(&[PricedCandidate]) -> usize,
+    stop_budget: u64,
+) -> (Vec<HRound>, bool) {
+    let reach = Reachability::compute(g);
+    let prof = profile(g, &base.schedule);
+    let mut live_mask = vec![false; g.n_tensors()];
+    for t in live_at(g, &base.schedule, prof.peak_step) {
+        live_mask[t] = true;
+    }
+    let units = candidates(g, &reach, cfg.strategy, &live_mask);
+    let tl = Timeline::new(g, &base.schedule, &cfg.cost);
+    let priced = price_candidates(g, &tl, &cfg.cost, units);
+    let total_unit_tensors: usize = priced.iter().map(|c| c.unit.tensors.len()).sum();
+
+    let techniques: &[Technique] = match cfg.technique {
+        Technique::Hybrid => &[Technique::Hybrid, Technique::Recompute, Technique::Swap],
+        Technique::Recompute => &[Technique::Recompute],
+        Technique::Swap => &[Technique::Swap],
+    };
+    let mut all_rounds: Vec<HRound> = Vec::new();
+    let mut exhausted = true;
+    for &t in techniques {
+        let mut cs = priced.clone();
+        rank(&mut cs, t);
+        let start_k = start_k_of(&cs);
+        let rounds = escalate(g, &reach, &cs, cfg, t, start_k, |best| best <= stop_budget);
+        exhausted &= rounds
+            .last()
+            .map(|r| r.evicted == total_unit_tensors)
+            .unwrap_or(priced.is_empty());
+        all_rounds.extend(rounds);
+    }
+    (all_rounds, exhausted)
+}
+
+/// Overhead counters attached to a plan's stats.
+struct Counters {
+    rc_ops: usize,
+    rc_bytes: u64,
+    rc_evicted: usize,
+    rounds: usize,
+    swapped: usize,
+    swap_moved_bytes: u64,
+    recompute_secs: f64,
+    swap_transfer_secs: f64,
+    swap_exposed_secs: f64,
+    transfer_excess_bytes: u64,
+    budget: u64,
+    baseline_total: u64,
+    met: bool,
+}
+
+/// Annotate a plan's stats with both overhead kinds. Key names for the
+/// recompute counters match the historical `roam recompute` output.
+fn annotate(plan: &mut ExecutionPlan, c: &Counters) {
+    if c.rc_ops > 0 {
+        plan.planner = format!("{}+rc", plan.planner);
+    }
+    if c.swapped > 0 {
+        plan.planner = format!("{}+swap", plan.planner);
+    }
+    let stats: &[(&str, f64)] = &[
+        ("recompute_ops", c.rc_ops as f64),
+        ("recompute_extra_bytes", c.rc_bytes as f64),
+        ("recompute_evicted", c.rc_evicted as f64),
+        ("recompute_rounds", c.rounds as f64),
+        ("recompute_secs", c.recompute_secs),
+        ("swap_tensors", c.swapped as f64),
+        ("swap_moved_bytes", c.swap_moved_bytes as f64),
+        ("swap_transfer_secs", c.swap_transfer_secs),
+        ("swap_exposed_secs", c.swap_exposed_secs),
+        // DMA-residency diagnostic: bytes by which in-flight out-transfers
+        // would exceed the liveness peak the budget was judged against
+        // (0 when no swaps, or when every out-DMA drains before the peak).
+        (
+            "transfer_aware_excess_bytes",
+            c.transfer_excess_bytes as f64,
+        ),
+        ("overhead_secs", c.recompute_secs + c.swap_exposed_secs),
+        ("budget_bytes", c.budget as f64),
+        ("baseline_total_bytes", c.baseline_total as f64),
+        ("budget_met", if c.met { 1.0 } else { 0.0 }),
+    ];
+    for &(k, v) in stats {
+        plan.stats.push((k.to_string(), v));
+    }
+}
+
+/// Result of hybrid budgeted planning.
+#[derive(Clone, Debug)]
+pub struct HybridPlan {
+    /// The chosen plan; its `stats` carry both overhead kinds.
+    pub plan: ExecutionPlan,
+    /// The graph the plan executes — augmented with recompute/swap ops
+    /// when any eviction was applied, otherwise a clone of the input.
+    pub graph: Graph,
+    /// The technique policy that was requested.
+    pub technique: Technique,
+    /// Resolved budget in bytes.
+    pub budget: u64,
+    /// `actual_peak + persistent` of the technique-free ROAM baseline.
+    pub baseline_total: u64,
+    /// Did the chosen plan fit the budget?
+    pub met: bool,
+    /// Did every escalation reach full eviction while trying?
+    pub exhausted: bool,
+    /// Planning rounds executed across all escalations (0 = baseline fit).
+    pub rounds: usize,
+    /// Evicted-tensor count of the chosen plan (recomputed + swapped).
+    pub evicted: usize,
+    /// Recompute ops added to the chosen plan's graph.
+    pub recompute_ops: usize,
+    /// Tensors evicted via recomputation (the rest of `evicted` were
+    /// swapped).
+    pub recompute_evicted: usize,
+    /// FLOP-proxy overhead: bytes produced by the recompute ops.
+    pub recompute_bytes: u64,
+    /// Swap pairs inserted (one `SwapOut` + `SwapIn` each).
+    pub swapped: usize,
+    /// Bytes crossing the modeled link, out + in.
+    pub swap_moved_bytes: u64,
+    /// Recompute overhead in modeled seconds.
+    pub recompute_secs: f64,
+    /// Un-hidden transfer seconds under the chosen plan's schedule.
+    pub swap_exposed_secs: f64,
+    /// Total modeled transfer seconds (hidden + exposed).
+    pub swap_transfer_secs: f64,
+    /// DMA-residency diagnostic: bytes by which in-flight out-transfers
+    /// (which keep their source resident until completion, see
+    /// [`crate::swap::transfer_aware_peak`]) would exceed the liveness
+    /// peak that `met` was judged against. 0 when nothing was swapped or
+    /// every out-DMA drains before the peak; a large value flags a plan
+    /// whose budget compliance depends on frees the link hasn't finished.
+    pub transfer_aware_excess_bytes: u64,
+}
+
+impl HybridPlan {
+    /// `actual_peak + persistent` of the chosen plan.
+    pub fn total(&self) -> u64 {
+        self.plan.total_bytes()
+    }
+
+    /// Combined overhead in modeled seconds (recompute + exposed swap).
+    pub fn overhead_secs(&self) -> f64 {
+        self.recompute_secs + self.swap_exposed_secs
+    }
+}
+
+/// Plan `g` under a hard memory budget, trading recompute FLOPs and/or
+/// swap bandwidth for memory per `cfg.technique`. Always returns the
+/// best plan found; check [`HybridPlan::met`] for whether the budget was
+/// achieved.
+///
+/// `met` is judged on the laid-out arena (`actual_peak + persistent`)
+/// under the liveness model, in which a swapped tensor is freed at its
+/// `SwapOut` step. The cost model's stricter view — the source stays
+/// resident until its out-DMA completes — is reported alongside as
+/// [`HybridPlan::transfer_aware_excess_bytes`] (stat
+/// `transfer_aware_excess_bytes`): when non-zero, the plan needs that
+/// many bytes of headroom, or an order that issues its swap-outs
+/// earlier, for the budget to hold mid-transfer.
+pub fn roam_plan_hybrid(g: &Graph, spec: BudgetSpec, cfg: &HybridCfg) -> HybridPlan {
+    let sw = Stopwatch::start();
+    let mut base = roam_plan(g, &cfg.roam);
+    let baseline_total = base.total_bytes();
+    let budget = spec.resolve(baseline_total);
+
+    if baseline_total <= budget {
+        annotate(
+            &mut base,
+            &Counters {
+                rc_ops: 0,
+                rc_bytes: 0,
+                rc_evicted: 0,
+                rounds: 0,
+                swapped: 0,
+                swap_moved_bytes: 0,
+                recompute_secs: 0.0,
+                swap_transfer_secs: 0.0,
+                swap_exposed_secs: 0.0,
+                transfer_excess_bytes: 0,
+                budget,
+                baseline_total,
+                met: true,
+            },
+        );
+        base.planning_secs = sw.secs();
+        return HybridPlan {
+            plan: base,
+            graph: g.clone(),
+            technique: cfg.technique,
+            budget,
+            baseline_total,
+            met: true,
+            exhausted: false,
+            rounds: 0,
+            evicted: 0,
+            recompute_ops: 0,
+            recompute_evicted: 0,
+            recompute_bytes: 0,
+            swapped: 0,
+            swap_moved_bytes: 0,
+            recompute_secs: 0.0,
+            swap_exposed_secs: 0.0,
+            swap_transfer_secs: 0.0,
+            transfer_aware_excess_bytes: 0,
+        };
+    }
+
+    let gap = baseline_total - budget;
+    let (all_rounds, exhausted) =
+        run_escalations(g, &base, cfg, |cs| prefix_for_gap(cs, gap), budget);
+    let n_rounds = all_rounds.len();
+
+    // Choose the minimum-total round (ties: least overhead, then fewest
+    // evictions); fall back to the baseline if no round beat it.
+    let best_round = all_rounds.into_iter().min_by(|a, b| {
+        a.total()
+            .cmp(&b.total())
+            .then_with(|| {
+                a.overhead_secs()
+                    .partial_cmp(&b.overhead_secs())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .then(a.evicted.cmp(&b.evicted))
+    });
+    let (mut plan, graph, c) = match best_round {
+        Some(r) if r.total() < baseline_total => {
+            let c = Counters {
+                rc_ops: r.rc_ops,
+                rc_bytes: r.rc_bytes,
+                rc_evicted: r.rc_evicted,
+                rounds: n_rounds,
+                swapped: r.swapped,
+                swap_moved_bytes: 2 * r.swap_bytes,
+                recompute_secs: r.recompute_secs,
+                swap_transfer_secs: r.swap_transfer_secs,
+                swap_exposed_secs: r.swap_exposed_secs,
+                transfer_excess_bytes: r.transfer_excess_bytes,
+                budget,
+                baseline_total,
+                met: false,
+            };
+            (r.plan, r.graph, c)
+        }
+        _ => (
+            base,
+            g.clone(),
+            Counters {
+                rc_ops: 0,
+                rc_bytes: 0,
+                rc_evicted: 0,
+                rounds: n_rounds,
+                swapped: 0,
+                swap_moved_bytes: 0,
+                recompute_secs: 0.0,
+                swap_transfer_secs: 0.0,
+                swap_exposed_secs: 0.0,
+                transfer_excess_bytes: 0,
+                budget,
+                baseline_total,
+                met: false,
+            },
+        ),
+    };
+    let met = plan.total_bytes() <= budget;
+    let c = Counters { met, ..c };
+    annotate(&mut plan, &c);
+    plan.planning_secs = sw.secs();
+    HybridPlan {
+        plan,
+        graph,
+        technique: cfg.technique,
+        budget,
+        baseline_total,
+        met,
+        exhausted,
+        rounds: n_rounds,
+        evicted: c.rc_evicted + c.swapped,
+        recompute_ops: c.rc_ops,
+        recompute_evicted: c.rc_evicted,
+        recompute_bytes: c.rc_bytes,
+        swapped: c.swapped,
+        swap_moved_bytes: c.swap_moved_bytes,
+        recompute_secs: c.recompute_secs,
+        swap_exposed_secs: c.swap_exposed_secs,
+        swap_transfer_secs: c.swap_transfer_secs,
+        transfer_aware_excess_bytes: c.transfer_excess_bytes,
+    }
+}
+
+/// One point of a hybrid tradeoff curve.
+#[derive(Clone, Debug)]
+pub struct HybridSweepPoint {
+    /// Budget as a fraction of the unbudgeted ROAM total.
+    pub fraction: f64,
+    /// Resolved budget in bytes.
+    pub budget: u64,
+    /// Achieved `actual_peak + persistent`.
+    pub total: u64,
+    /// Theoretical peak of the chosen plan (dynamic arena).
+    pub theoretical_peak: u64,
+    /// Budget satisfied?
+    pub met: bool,
+    /// Evicted tensors in the chosen plan (recomputed + swapped).
+    pub evicted: usize,
+    /// Recompute ops added.
+    pub recompute_ops: usize,
+    /// FLOP-proxy overhead bytes.
+    pub recompute_bytes: u64,
+    /// Swap pairs inserted.
+    pub swapped: usize,
+    /// Bytes crossing the modeled link, out + in.
+    pub swap_moved_bytes: u64,
+    /// Recompute overhead in modeled seconds.
+    pub recompute_secs: f64,
+    /// Un-hidden transfer seconds.
+    pub swap_exposed_secs: f64,
+}
+
+/// Result of a hybrid sweep: the shared baseline plus one point per
+/// fraction.
+#[derive(Clone, Debug)]
+pub struct HybridSweepResult {
+    /// `actual_peak + persistent` of the technique-free ROAM plan.
+    pub baseline_total: u64,
+    /// Points in the order the fractions were given.
+    pub points: Vec<HybridSweepPoint>,
+}
+
+/// Sweep budgets `fraction × baseline_total` over `g` under
+/// `cfg.technique`, sharing escalation rounds across all budget points
+/// exactly as [`crate::recompute::tradeoff_sweep`] does — so reported
+/// totals are monotonically non-increasing as the budget tightens, by
+/// construction (a tighter budget walks a superset of the rounds).
+pub fn hybrid_tradeoff_sweep(g: &Graph, fractions: &[f64], cfg: &HybridCfg) -> HybridSweepResult {
+    let base = roam_plan(g, &cfg.roam);
+    let baseline_total = base.total_bytes();
+    let budget_of = |f: f64| (baseline_total as f64 * f).floor() as u64;
+
+    let tightest = fractions
+        .iter()
+        .copied()
+        .fold(f64::INFINITY, f64::min)
+        .max(0.0);
+    let needs_rounds = fractions.iter().any(|&f| budget_of(f) < baseline_total);
+
+    let rounds: Vec<HRound> = if needs_rounds {
+        // Start from a single unit so loose budgets get low-overhead
+        // points; `cfg.max_rounds` caps each escalation.
+        run_escalations(g, &base, cfg, |_| 1, budget_of(tightest)).0
+    } else {
+        Vec::new()
+    };
+
+    let points = fractions
+        .iter()
+        .map(|&f| {
+            let budget = budget_of(f);
+            // Walk rounds until the running minimum satisfies this budget
+            // (or rounds run out); report that minimum.
+            let mut best: Option<&HRound> = None;
+            let mut best_total = baseline_total;
+            for r in &rounds {
+                if best_total <= budget {
+                    break;
+                }
+                if r.total() < best_total {
+                    best_total = r.total();
+                    best = Some(r);
+                }
+            }
+            match best {
+                Some(r) => HybridSweepPoint {
+                    fraction: f,
+                    budget,
+                    total: r.total(),
+                    theoretical_peak: r.plan.theoretical_peak,
+                    met: r.total() <= budget,
+                    evicted: r.evicted,
+                    recompute_ops: r.rc_ops,
+                    recompute_bytes: r.rc_bytes,
+                    swapped: r.swapped,
+                    swap_moved_bytes: 2 * r.swap_bytes,
+                    recompute_secs: r.recompute_secs,
+                    swap_exposed_secs: r.swap_exposed_secs,
+                },
+                None => HybridSweepPoint {
+                    fraction: f,
+                    budget,
+                    total: baseline_total,
+                    theoretical_peak: base.theoretical_peak,
+                    met: baseline_total <= budget,
+                    evicted: 0,
+                    recompute_ops: 0,
+                    recompute_bytes: 0,
+                    swapped: 0,
+                    swap_moved_bytes: 0,
+                    recompute_secs: 0.0,
+                    swap_exposed_secs: 0.0,
+                },
+            }
+        })
+        .collect();
+
+    HybridSweepResult {
+        baseline_total,
+        points,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{self, BuildCfg, ModelKind};
+
+    fn quick_cfg(technique: Technique) -> HybridCfg {
+        HybridCfg {
+            technique,
+            roam: RoamCfg {
+                parallel: false,
+                order_max_nodes: 5_000,
+                dsa_max_nodes: 5_000,
+                ..RoamCfg::default()
+            },
+            ..HybridCfg::default()
+        }
+    }
+
+    #[test]
+    fn technique_names_roundtrip() {
+        for t in [Technique::Recompute, Technique::Swap, Technique::Hybrid] {
+            assert_eq!(Technique::from_name(t.name()), Some(t));
+        }
+        assert_eq!(Technique::from_name("rc"), Some(Technique::Recompute));
+        assert_eq!(Technique::from_name("nope"), None);
+    }
+
+    #[test]
+    fn budget_spec_resolution() {
+        assert_eq!(BudgetSpec::Bytes(123).resolve(1000), 123);
+        assert_eq!(BudgetSpec::Fraction(0.6).resolve(1000), 600);
+        assert_eq!(BudgetSpec::Fraction(1.5).resolve(1000), 1500);
+    }
+
+    #[test]
+    fn prefix_for_gap_is_minimal() {
+        let c = |saved: u64| PricedCandidate {
+            unit: Candidate {
+                tensors: vec![0],
+                saved,
+                cost: saved,
+                at_peak: false,
+            },
+            recompute_secs: 0.0,
+            swap_transfer_secs: 0.0,
+            swap_exposed_secs: 0.0,
+        };
+        let cands = vec![c(100), c(50), c(10)];
+        assert_eq!(prefix_for_gap(&cands, 1), 1);
+        assert_eq!(prefix_for_gap(&cands, 100), 1);
+        assert_eq!(prefix_for_gap(&cands, 101), 2);
+        assert_eq!(prefix_for_gap(&cands, 160), 3);
+        assert_eq!(prefix_for_gap(&cands, 10_000), 3);
+        assert_eq!(prefix_for_gap(&[], 5), 1);
+    }
+
+    #[test]
+    fn loose_budget_returns_baseline_for_every_technique() {
+        let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
+        for t in [Technique::Recompute, Technique::Swap, Technique::Hybrid] {
+            let r = roam_plan_hybrid(&g, BudgetSpec::Fraction(1.0), &quick_cfg(t));
+            assert!(r.met);
+            assert_eq!(r.rounds, 0);
+            assert_eq!(r.evicted, 0);
+            assert_eq!(r.graph.n_ops(), g.n_ops());
+            // Both overhead kinds are reported even for the baseline.
+            for key in ["recompute_ops", "swap_tensors", "overhead_secs"] {
+                assert!(
+                    r.plan.stats.iter().any(|(k, _)| k == key),
+                    "missing stat {key}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pure_swap_tightens_vit_without_recompute_ops() {
+        let g = models::build(ModelKind::Vit, &BuildCfg::default());
+        let r = roam_plan_hybrid(&g, BudgetSpec::Fraction(0.9), &quick_cfg(Technique::Swap));
+        assert!(r.total() <= r.baseline_total);
+        assert_eq!(r.recompute_ops, 0, "pure swap must not clone ops");
+        if r.met {
+            assert!(r.swapped > 0);
+            assert!(r.swap_moved_bytes > 0);
+            assert!(r.swap_transfer_secs > 0.0);
+        }
+        assert!(crate::graph::topo::is_topological(&r.graph, &r.plan.order));
+        assert!(crate::graph::validate::validate(&r.graph).is_empty());
+    }
+}

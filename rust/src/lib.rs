@@ -18,12 +18,20 @@
 //! branch-and-bound / ILP ([`ilp`]), and concatenate the sub-plans
 //! ([`planner`]).
 //!
-//! On top of the planner sits [`recompute`]: budgeted rematerialization
-//! that trades FLOPs for memory under a hard budget
-//! ([`recompute::roam_plan_budgeted`]) by evicting activations, cloning
-//! their producers into the backward pass, and re-running the full ROAM
-//! order+layout pipeline on the augmented graph — the paper's "reduce
-//! overheads from high-level techniques" claim, made end-to-end.
+//! On top of the planner sit the high-level memory techniques, all
+//! sharing one eviction substrate ([`evict`]) and one budgeted driver
+//! ([`hybrid`]):
+//!
+//! * [`recompute`] — budgeted rematerialization: evict activations,
+//!   clone their producers into the backward pass
+//!   ([`recompute::roam_plan_budgeted`]);
+//! * [`swap`] — bandwidth-aware CPU/NVMe offloading: `SwapOut`/`SwapIn`
+//!   pairs priced by a modeled PCIe link, with transfer time hidden
+//!   under the compute window the schedule provides;
+//! * [`hybrid::roam_plan_hybrid`] — per-tensor recompute-vs-swap by
+//!   cheapest overhead, re-running the full ROAM order+layout pipeline
+//!   on every augmented graph — the paper's "reduce overheads from
+//!   high-level techniques" claim, made end-to-end.
 //!
 //! The crate additionally ships the substrates a reproduction needs:
 //! model-graph builders for the paper's eight evaluation models
@@ -56,8 +64,10 @@
 pub mod benchkit;
 #[cfg(feature = "pjrt")]
 pub mod coordinator;
+pub mod evict;
 pub mod graph;
 pub mod hlo;
+pub mod hybrid;
 pub mod ilp;
 pub mod layout;
 pub mod models;
@@ -67,6 +77,7 @@ pub mod recompute;
 pub mod runtime;
 pub mod sched;
 pub mod segments;
+pub mod swap;
 pub mod util;
 
 pub use graph::Graph;

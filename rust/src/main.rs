@@ -4,6 +4,8 @@
 //! roam optimize  --model bert --batch 32 [--planner roam-ss|roam-ms|pytorch|heuristic|model-ms|model-ss]
 //!                [--node-limit 64] [--delay-radius 2.0] [--time-limit 60] [--out plan.json]
 //! roam recompute --model gpt2 --budget 0.6 [--budget-bytes N] [--strategy greedy|segment]
+//! roam swap      --model gpt2 --budget 0.6 [--technique swap|recompute|hybrid]
+//!                [--pcie-gbps 16] [--pcie-latency-us 10] [--compute-gbps 800]
 //! roam plan-hlo  --hlo artifacts/train_step.hlo.txt [--out plan.json]
 //! roam train     [--artifacts artifacts] [--steps 200] [--log-every 10] [--seed 0]
 //! roam compare   --model vit --batch 1 [--budget 0.6]   # all planners side by side
@@ -12,10 +14,12 @@
 //! ```
 
 use roam::benchkit::{mib, reduction_pct};
+use roam::hybrid::{roam_plan_hybrid, HybridCfg, Technique};
 use roam::models::{self, BuildCfg, ModelKind, Optim};
 use roam::planner::model_baseline::{model_plan, ModelCfg, Streaming};
 use roam::planner::{heuristic::heuristic_plan, pytorch, roam_plan, ExecutionPlan, RoamCfg};
 use roam::recompute::{roam_plan_budgeted, BudgetSpec, RecomputeCfg, Strategy};
+use roam::swap::CostModel;
 use roam::util::cli::Args;
 use roam::util::error::Result;
 use roam::util::human_bytes;
@@ -26,6 +30,7 @@ fn main() {
     let r = match cmd.as_str() {
         "optimize" => cmd_optimize(&args),
         "recompute" => cmd_recompute(&args),
+        "swap" => cmd_swap(&args),
         "plan-hlo" => cmd_plan_hlo(&args),
         "train" => cmd_train(&args),
         "compare" => cmd_compare(&args),
@@ -51,11 +56,15 @@ fn print_help() {
          \x20 recompute   plan under a hard memory budget via rematerialization\n\
          \x20             (--model, --budget FRACTION | --budget-bytes N,\n\
          \x20              --strategy greedy|segment)\n\
+         \x20 swap        plan under a hard memory budget via bandwidth-aware\n\
+         \x20             offloading (--budget F, --technique swap|recompute|hybrid,\n\
+         \x20              --pcie-gbps 16 --pcie-latency-us 10 --compute-gbps 800)\n\
          \x20 plan-hlo    plan a JAX-lowered HLO file (--hlo PATH)\n\
          \x20 train       end-to-end training via PJRT (--artifacts DIR, --steps N;\n\
          \x20             requires building with --features pjrt)\n\
          \x20 compare     run all planners on one model and tabulate\n\
-         \x20             (--budget F adds a budgeted-recompute row)\n\
+         \x20             (--budget F adds a budgeted row; --technique picks\n\
+         \x20              recompute|swap|hybrid for it)\n\
          \x20 export-dot  graphviz dump of a model's training graph\n\
          \x20 info        graph statistics (ops, tensors, bytes, boundaries)"
     );
@@ -180,12 +189,7 @@ fn recompute_cfg(args: &Args) -> Result<RecomputeCfg> {
         .ok_or_else(|| roam::err!("unknown strategy '{sname}' (greedy|segment)"))?;
     Ok(RecomputeCfg {
         strategy,
-        roam: RoamCfg {
-            node_limit: args.usize("node-limit", 64),
-            delay_radius: args.f64("delay-radius", 2.0),
-            time_limit_secs: args.f64("time-limit", 3600.0),
-            ..Default::default()
-        },
+        roam: roam_cfg(args),
         max_rounds: args.usize("max-rounds", 12),
         ..Default::default()
     })
@@ -216,6 +220,78 @@ fn cmd_recompute(args: &Args) -> Result<()> {
         r.recompute_ops,
         r.recompute_bytes,
         human_bytes(r.recompute_bytes),
+        r.evicted,
+        r.rounds
+    );
+    print_plan(&r.graph, &r.plan);
+    maybe_write(args, &r.plan)
+}
+
+/// Parse the ROAM planner flags shared by the budgeted drivers.
+fn roam_cfg(args: &Args) -> RoamCfg {
+    RoamCfg {
+        node_limit: args.usize("node-limit", 64),
+        delay_radius: args.f64("delay-radius", 2.0),
+        time_limit_secs: args.f64("time-limit", 3600.0),
+        ..RoamCfg::default()
+    }
+}
+
+fn hybrid_cfg(args: &Args, default_technique: Technique) -> Result<HybridCfg> {
+    let tname = args.get("technique", default_technique.name());
+    let technique = Technique::from_name(&tname)
+        .ok_or_else(|| roam::err!("unknown technique '{tname}' (recompute|swap|hybrid)"))?;
+    let sname = args.get("strategy", "greedy");
+    let strategy = Strategy::from_name(&sname)
+        .ok_or_else(|| roam::err!("unknown strategy '{sname}' (greedy|segment)"))?;
+    Ok(HybridCfg {
+        technique,
+        strategy,
+        cost: CostModel::from_args(args),
+        roam: roam_cfg(args),
+        max_rounds: args.usize("max-rounds", 12),
+        ..HybridCfg::default()
+    })
+}
+
+fn cmd_swap(args: &Args) -> Result<()> {
+    let g = build_graph(args)?;
+    let spec = budget_spec(args)?;
+    let cfg = hybrid_cfg(args, Technique::Swap)?;
+    let r = roam_plan_hybrid(&g, spec, &cfg);
+    println!(
+        "budget {} ({})  baseline total {} ({})  technique {}",
+        r.budget,
+        human_bytes(r.budget),
+        r.baseline_total,
+        human_bytes(r.baseline_total),
+        cfg.technique.name(),
+    );
+    println!(
+        "  achieved total   : {:>12}  ({}, {:.1}% of baseline) — budget {}",
+        r.total(),
+        human_bytes(r.total()),
+        100.0 * r.total() as f64 / r.baseline_total.max(1) as f64,
+        if r.met { "MET" } else { "NOT met" }
+    );
+    println!(
+        "  swap             : {} tensors, {} moved ({}), {:.3} ms transfer, {:.3} ms exposed",
+        r.swapped,
+        r.swap_moved_bytes,
+        human_bytes(r.swap_moved_bytes),
+        r.swap_transfer_secs * 1e3,
+        r.swap_exposed_secs * 1e3,
+    );
+    println!(
+        "  recompute        : {} ops, {} extra bytes ({}), {:.3} ms",
+        r.recompute_ops,
+        r.recompute_bytes,
+        human_bytes(r.recompute_bytes),
+        r.recompute_secs * 1e3,
+    );
+    println!(
+        "  overhead         : {:.3} ms modeled ({} evicted, {} rounds)",
+        r.overhead_secs() * 1e3,
         r.evicted,
         r.rounds
     );
@@ -255,12 +331,20 @@ fn cmd_compare(args: &Args) -> Result<()> {
             ..Default::default()
         }),
     ];
-    // Optional budgeted-recompute row: `compare --model vit --budget 0.6`.
+    // Optional budgeted row: `compare --model vit --budget 0.6
+    // [--technique recompute|swap|hybrid]`. Without --technique this is
+    // the historical budgeted-recompute row.
     if args.opt("budget").is_some() || args.opt("budget-bytes").is_some() {
         let spec = budget_spec(args)?;
-        let mut cfg = recompute_cfg(args)?;
-        cfg.roam.time_limit_secs = time_limit;
-        plans.push(roam_plan_budgeted(&g, spec, &cfg).plan);
+        if args.opt("technique").is_some() {
+            let mut cfg = hybrid_cfg(args, Technique::Hybrid)?;
+            cfg.roam.time_limit_secs = time_limit;
+            plans.push(roam_plan_hybrid(&g, spec, &cfg).plan);
+        } else {
+            let mut cfg = recompute_cfg(args)?;
+            cfg.roam.time_limit_secs = time_limit;
+            plans.push(roam_plan_budgeted(&g, spec, &cfg).plan);
+        }
     }
     let base = plans[0].actual_peak;
     for p in &plans {

@@ -1,0 +1,159 @@
+//! The shared plan-validity oracle ("planlint").
+//!
+//! Every integration suite used to re-implement the same ad-hoc
+//! assertions — order is topological, no tensor read before its producer,
+//! layout offsets respect DSA non-overlap, peaks are consistent. This
+//! module centralises them so the planner, recompute, swap and hybrid
+//! suites all validate plans against one oracle; a plan that passes
+//! [`lint_plan`] with no findings is structurally executable on its
+//! graph.
+//!
+//! Checks:
+//!
+//! 1. the order is a permutation of the graph's ops and a topological
+//!    order of it;
+//! 2. the timestep assignment covers every op and never schedules a
+//!    consumer before its producer (also catches multi-stream schedules
+//!    that cram a producer and consumer into one timestep — a read
+//!    before the value exists);
+//! 3. every dynamic tensor has a layout offset;
+//! 4. no two lifetime-overlapping dynamic tensors overlap in address
+//!    space (the DSA non-overlap invariant — by lifetime construction a
+//!    tensor's interval covers all its reads, so a conflict-free layout
+//!    also rules out any read-after-free aliasing);
+//! 5. `actual_peak ≥ theoretical_peak ≥` nothing below the max-live
+//!    lower bound of the placed items.
+
+use crate::graph::{topo, Graph};
+use crate::layout::sim::{conflicts, lower_bound};
+use crate::layout::Layout;
+use crate::planner::{layout_items, ExecutionPlan};
+
+/// Lint `p` against `g`; returns human-readable violations (empty =
+/// structurally executable).
+pub fn lint_plan(g: &Graph, p: &ExecutionPlan) -> Vec<String> {
+    let mut v = Vec::new();
+    if p.order.len() != g.n_ops() {
+        v.push(format!(
+            "order covers {} ops, graph has {}",
+            p.order.len(),
+            g.n_ops()
+        ));
+        return v; // everything downstream would misindex
+    }
+    if !topo::is_topological(g, &p.order) {
+        v.push("order is not a topological order of the graph".to_string());
+    }
+    if p.schedule.ts.len() != g.n_ops() {
+        v.push(format!(
+            "schedule covers {} ops, graph has {}",
+            p.schedule.ts.len(),
+            g.n_ops()
+        ));
+        return v;
+    }
+    for op in &g.ops {
+        for &t in &op.inputs {
+            if let Some(prod) = g.tensors[t].producer {
+                if p.schedule.ts[prod] >= p.schedule.ts[op.id] {
+                    v.push(format!(
+                        "tensor {t} read by op {} at step {} but produced by op {prod} at step {}",
+                        op.id, p.schedule.ts[op.id], p.schedule.ts[prod]
+                    ));
+                }
+            }
+        }
+    }
+    let items = layout_items(g, &p.schedule);
+    let layout = Layout {
+        offsets: p.offsets.clone(),
+    };
+    let placed: std::collections::HashSet<usize> =
+        layout.offsets.iter().map(|&(id, _)| id).collect();
+    for it in &items {
+        if !placed.contains(&it.id) {
+            v.push(format!("dynamic tensor {} has no layout offset", it.id));
+        }
+    }
+    let c = conflicts(&items, &layout);
+    if !c.is_empty() {
+        v.push(format!("{} layout address conflicts", c.len()));
+    }
+    if p.actual_peak < p.theoretical_peak {
+        v.push(format!(
+            "actual peak {} below theoretical peak {}",
+            p.actual_peak, p.theoretical_peak
+        ));
+    }
+    if p.actual_peak < lower_bound(&items) {
+        v.push(format!(
+            "actual peak {} below the max-live lower bound {}",
+            p.actual_peak,
+            lower_bound(&items)
+        ));
+    }
+    v
+}
+
+/// Panic with a readable report if the plan fails the lint.
+pub fn assert_plan_ok(g: &Graph, p: &ExecutionPlan) {
+    let v = lint_plan(g, p);
+    assert!(
+        v.is_empty(),
+        "plan '{}' on graph '{}' failed planlint:\n  - {}",
+        p.planner,
+        g.name,
+        v.join("\n  - ")
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{self, BuildCfg, ModelKind};
+    use crate::planner::pytorch;
+
+    #[test]
+    fn clean_plan_passes() {
+        let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
+        let p = pytorch(&g);
+        assert!(lint_plan(&g, &p).is_empty());
+        assert_plan_ok(&g, &p);
+    }
+
+    #[test]
+    fn corrupted_plans_are_caught() {
+        let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
+        let good = pytorch(&g);
+
+        // Reversed order: not topological, consumers before producers.
+        let mut bad = good.clone();
+        bad.order.reverse();
+        bad.schedule = crate::sched::Schedule::from_order(&bad.order);
+        assert!(!lint_plan(&g, &bad).is_empty());
+
+        // Missing offsets: unplaced dynamic tensors.
+        let mut bad = good.clone();
+        bad.offsets.clear();
+        assert!(lint_plan(&g, &bad)
+            .iter()
+            .any(|m| m.contains("no layout offset")));
+
+        // Everything at offset 0: address conflicts.
+        let mut bad = good.clone();
+        for o in bad.offsets.iter_mut() {
+            o.1 = 0;
+        }
+        assert!(lint_plan(&g, &bad)
+            .iter()
+            .any(|m| m.contains("address conflicts")));
+
+        // Claimed peak below the lower bound.
+        let mut bad = good;
+        bad.actual_peak = 0;
+        bad.theoretical_peak = 0;
+        assert!(lint_plan(&g, &bad)
+            .iter()
+            .any(|m| m.contains("lower bound")));
+    }
+}

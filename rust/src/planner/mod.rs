@@ -23,9 +23,11 @@
 //! (`recompute_ops`, `recompute_extra_bytes`, `budget_met`, ...).
 
 pub mod heuristic;
+pub mod lint;
 pub mod model_baseline;
 pub mod roam;
 
+pub use lint::{assert_plan_ok, lint_plan};
 pub use roam::{roam_plan, RoamCfg};
 
 use crate::graph::{Graph, OpId, TensorId};

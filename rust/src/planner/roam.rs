@@ -56,6 +56,7 @@ use crate::util::pool::Pool;
 use crate::util::timer::Deadline;
 use crate::util::Stopwatch;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// ROAM configuration (paper defaults).
 #[derive(Clone, Debug)]
@@ -129,7 +130,7 @@ pub fn roam_plan(g: &Graph, cfg: &RoamCfg) -> ExecutionPlan {
     });
 
     // 4: solve leaf ordering tasks (in parallel).
-    let order = solve_ordering(&g2, &tree, cfg, deadline);
+    let (order, order_leaf_fallbacks) = solve_ordering(&g2, &tree, cfg, deadline);
     debug_assert!(
         crate::graph::topo::is_topological(&g2, &order),
         "roam order must be topological"
@@ -181,6 +182,8 @@ pub fn roam_plan(g: &Graph, cfg: &RoamCfg) -> ExecutionPlan {
                 lay = LayoutOut {
                     layout: cand,
                     reassigned: lay.reassigned,
+                    window_fallbacks: lay.window_fallbacks,
+                    dsa_cut_short: lay.dsa_cut_short,
                 };
                 layout_fallback = 1.0;
             }
@@ -218,6 +221,8 @@ pub fn roam_plan(g: &Graph, cfg: &RoamCfg) -> ExecutionPlan {
                     lay = LayoutOut {
                         layout: cand_layout,
                         reassigned: lay.reassigned,
+                        window_fallbacks: lay.window_fallbacks,
+                        dsa_cut_short: lay.dsa_cut_short,
                     };
                     layout_fallback = 1.0;
                 }
@@ -237,6 +242,22 @@ pub fn roam_plan(g: &Graph, cfg: &RoamCfg) -> ExecutionPlan {
         ("layout_reassigned".to_string(), lay.reassigned as f64),
         ("order_fallback".to_string(), order_fallback),
         ("layout_fallback".to_string(), layout_fallback),
+        // Deadline-degradation counters: leaf tasks that took the pool's
+        // run_or fallback (ASAP order / LLFB layout) because the planning
+        // deadline had expired, and windows whose DSA search was cut
+        // short by its node budget or the deadline. Non-zero values mean
+        // the plan degraded to heuristic quality somewhere, silently —
+        // tests/deadline_props.rs pins that this is a degradation, never
+        // a panic or an invalid plan.
+        (
+            "order_leaf_fallbacks".to_string(),
+            order_leaf_fallbacks as f64,
+        ),
+        (
+            "layout_window_fallbacks".to_string(),
+            lay.window_fallbacks as f64,
+        ),
+        ("dsa_windows_cut_short".to_string(), lay.dsa_cut_short as f64),
     ];
     evaluate(g, name, sched, &lay.layout, sw.secs(), stats)
 }
@@ -333,10 +354,21 @@ fn leaf_class(g: &Graph, t: usize, in_set: &HashMap<OpId, usize>) -> TensorClass
 struct LayoutOut {
     layout: crate::layout::Layout,
     reassigned: usize,
+    /// Windows that took the pool's deadline fallback (LLFB greedy).
+    window_fallbacks: usize,
+    /// Windows whose DSA search was cut short by node budget or deadline.
+    dsa_cut_short: usize,
 }
 
 /// Solve all ordering tasks and assemble the global order per eq. (3).
-fn solve_ordering(g2: &Graph, tree: &SubgraphTree, cfg: &RoamCfg, deadline: Deadline) -> Vec<OpId> {
+/// Returns the order and the number of leaf tasks that took the
+/// deadline fallback (ASAP chunk order) instead of the exact solver.
+fn solve_ordering(
+    g2: &Graph,
+    tree: &SubgraphTree,
+    cfg: &RoamCfg,
+    deadline: Deadline,
+) -> (Vec<OpId>, usize) {
     let n_tasks = tree.order_tasks.len();
 
     let solve_one = |i: usize| -> Vec<OpId> {
@@ -357,11 +389,15 @@ fn solve_ordering(g2: &Graph, tree: &SubgraphTree, cfg: &RoamCfg, deadline: Dead
     };
 
     let workers = if cfg.parallel { Pool::default_workers() } else { 1 };
+    let fallbacks = AtomicUsize::new(0);
     let local_orders: Vec<Vec<OpId>> = Pool::new(workers)
         .with_deadline(deadline)
         // Past the deadline, a leaf keeps its ASAP chunk order (valid but
         // unoptimised) instead of paying the exact solver's incumbents.
-        .run_or(n_tasks, solve_one, |i| tree.order_tasks[i].ops.clone());
+        .run_or(n_tasks, solve_one, |i| {
+            fallbacks.fetch_add(1, Ordering::Relaxed);
+            tree.order_tasks[i].ops.clone()
+        });
 
     // Assemble: per segment, its chunks in part order, then its closing
     // boundary.
@@ -380,7 +416,7 @@ fn solve_ordering(g2: &Graph, tree: &SubgraphTree, cfg: &RoamCfg, deadline: Dead
             order.push(close);
         }
     }
-    order
+    (order, fallbacks.into_inner())
 }
 
 /// Solve the layout per §IV-B: window assignment, spanning stacks,
@@ -397,6 +433,8 @@ fn solve_layout(
         return LayoutOut {
             layout: crate::layout::Layout::default(),
             reassigned: 0,
+            window_fallbacks: 0,
+            dsa_cut_short: 0,
         };
     }
     let horizon = sched.horizon();
@@ -488,24 +526,29 @@ fn solve_layout(
         max_nodes: (cfg.dsa_max_nodes / n_win.max(1) as u64).max(2_000),
         workers: 1,
     };
+    let cut_short = AtomicUsize::new(0);
     let solve_window = |k: usize| -> Vec<(usize, u64)> {
         if rest[k].is_empty() {
             return Vec::new();
         }
         let r = min_arena_layout_fixed(&rest[k], &fixed, &dsa_cfg);
+        if r.cut_short {
+            cut_short.fetch_add(1, Ordering::Relaxed);
+        }
         r.layout.offsets
     };
     let workers = if cfg.parallel { Pool::default_workers() } else { 1 };
+    let window_fallbacks = AtomicUsize::new(0);
     let win_offsets: Vec<Vec<(usize, u64)>> = Pool::new(workers)
         .with_deadline(deadline)
         // Past the deadline, windows fall back to the LLFB greedy around
         // the fixed stacks instead of entering the search.
         .run_or(n_win, solve_window, |k| {
             if rest[k].is_empty() {
-                Vec::new()
-            } else {
-                crate::layout::llfb::llfb_with(&rest[k], &fixed).offsets
+                return Vec::new();
             }
+            window_fallbacks.fetch_add(1, Ordering::Relaxed);
+            crate::layout::llfb::llfb_with(&rest[k], &fixed).offsets
         });
     for w in win_offsets {
         for (id, off) in w {
@@ -518,6 +561,8 @@ fn solve_layout(
     LayoutOut {
         layout: rep.layout,
         reassigned: rep.reassigned,
+        window_fallbacks: window_fallbacks.into_inner(),
+        dsa_cut_short: cut_short.into_inner(),
     }
 }
 

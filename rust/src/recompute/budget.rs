@@ -2,22 +2,23 @@
 //! until the plan's total memory (`actual_peak + persistent`) fits a hard
 //! budget, or the strategy's eviction reach is exhausted.
 //!
-//! Each round evicts a growing prefix of the candidate list, rewrites the
-//! **original** graph with the union (so chained recomputation wires
-//! through clones), and re-runs the full ROAM order+layout pipeline on the
-//! augmented graph — the paper's thesis applied: the order/layout substrate
-//! is what keeps the high-level technique's overhead low. The driver keeps
-//! the best (minimum-total) round seen, so escalating never returns a
-//! worse plan than an earlier round or the recompute-free baseline.
+//! Since the swap subsystem landed, the escalation machinery lives in the
+//! technique-generic [`crate::hybrid`] driver; [`roam_plan_budgeted`] is
+//! its [`crate::hybrid::Technique::Recompute`] specialisation, kept as
+//! the stable recompute-only API (same candidate ranking, prefix
+//! schedule, stop rule and best-round selection as the historical
+//! driver). Use [`crate::hybrid::roam_plan_hybrid`] directly to mix
+//! recomputation with swapping per tensor.
 
-use super::rewrite::{rewrite, RewriteResult};
-use super::select::{candidates, Candidate, Strategy};
-use crate::graph::{Graph, Reachability};
-use crate::planner::{roam_plan, ExecutionPlan, RoamCfg};
-use crate::sched::sim::{live_at, profile};
-use crate::util::Stopwatch;
+use super::select::Strategy;
+use crate::graph::Graph;
+use crate::hybrid::{roam_plan_hybrid, HybridCfg, Technique};
+use crate::planner::{ExecutionPlan, RoamCfg};
+use crate::swap::cost::CostModel;
 
-/// Configuration of the budgeted driver.
+pub use crate::hybrid::BudgetSpec;
+
+/// Configuration of the budgeted recompute driver.
 #[derive(Clone, Debug)]
 pub struct RecomputeCfg {
     /// Candidate selection strategy.
@@ -41,13 +42,18 @@ impl Default for RecomputeCfg {
     }
 }
 
-/// How the budget is specified.
-#[derive(Clone, Copy, Debug)]
-pub enum BudgetSpec {
-    /// Absolute bytes for `actual_peak + persistent`.
-    Bytes(u64),
-    /// Fraction of the unbudgeted ROAM plan's total (e.g. `0.6`).
-    Fraction(f64),
+impl RecomputeCfg {
+    /// The hybrid-driver configuration this recompute config denotes.
+    pub(crate) fn to_hybrid(&self) -> HybridCfg {
+        HybridCfg {
+            technique: Technique::Recompute,
+            strategy: self.strategy,
+            cost: CostModel::default(),
+            roam: self.roam.clone(),
+            max_rounds: self.max_rounds,
+            growth: self.growth,
+        }
+    }
 }
 
 /// Result of budgeted planning.
@@ -83,198 +89,22 @@ impl BudgetedPlan {
     }
 }
 
-/// One escalation round (shared with the tradeoff sweep).
-pub(crate) struct Round {
-    pub plan: ExecutionPlan,
-    pub rewrite: RewriteResult,
-}
-
-impl Round {
-    pub(crate) fn total(&self) -> u64 {
-        self.plan.total_bytes()
-    }
-}
-
-/// Run escalation rounds with a deterministic eviction-prefix schedule
-/// `start_k, ⌈start_k·growth⌉, …, n_candidates`, stopping as soon as
-/// `stop(best_total_so_far)` holds. Returns the rounds in execution order.
-pub(crate) fn escalate(
-    g: &Graph,
-    reach: &Reachability,
-    cands: &[Candidate],
-    cfg: &RecomputeCfg,
-    start_k: usize,
-    max_rounds: usize,
-    stop: impl Fn(u64) -> bool,
-) -> Vec<Round> {
-    let mut rounds: Vec<Round> = Vec::new();
-    if cands.is_empty() {
-        return rounds;
-    }
-    let mut k = start_k.clamp(1, cands.len());
-    let mut best = u64::MAX;
-    loop {
-        let evict: Vec<usize> = cands[..k]
-            .iter()
-            .flat_map(|c| c.tensors.iter().copied())
-            .collect();
-        let rw = rewrite(g, reach, &evict);
-        let plan = roam_plan(&rw.graph, &cfg.roam);
-        best = best.min(plan.total_bytes());
-        rounds.push(Round { plan, rewrite: rw });
-        if stop(best) || k == cands.len() || rounds.len() >= max_rounds {
-            break;
-        }
-        let grown = ((k as f64) * cfg.growth).ceil() as usize;
-        k = grown.max(k + 1).min(cands.len());
-    }
-    rounds
-}
-
-/// Smallest candidate prefix whose (optimistic) estimated saving covers
-/// `gap`; at least 1.
-pub(crate) fn prefix_for_gap(cands: &[Candidate], gap: u64) -> usize {
-    let mut acc = 0u64;
-    for (i, c) in cands.iter().enumerate() {
-        acc = acc.saturating_add(c.saved);
-        if acc >= gap {
-            return i + 1;
-        }
-    }
-    cands.len().max(1)
-}
-
-/// Recompute-overhead counters attached to a budgeted plan's stats.
-struct Overhead {
-    rw_ops: usize,
-    rw_bytes: u64,
-    evicted: usize,
-    rounds: usize,
-    budget: u64,
-    baseline_total: u64,
-    met: bool,
-}
-
-/// Annotate a plan's stats with the recompute overhead counters the
-/// acceptance criteria ask for.
-fn annotate(plan: &mut ExecutionPlan, o: &Overhead) {
-    if o.rw_ops > 0 {
-        plan.planner = format!("{}+rc", plan.planner);
-    }
-    plan.stats
-        .push(("recompute_ops".to_string(), o.rw_ops as f64));
-    plan.stats
-        .push(("recompute_extra_bytes".to_string(), o.rw_bytes as f64));
-    plan.stats
-        .push(("recompute_evicted".to_string(), o.evicted as f64));
-    plan.stats
-        .push(("recompute_rounds".to_string(), o.rounds as f64));
-    plan.stats
-        .push(("budget_bytes".to_string(), o.budget as f64));
-    plan.stats
-        .push(("baseline_total_bytes".to_string(), o.baseline_total as f64));
-    plan.stats
-        .push(("budget_met".to_string(), if o.met { 1.0 } else { 0.0 }));
-}
-
 /// Plan `g` under a hard memory budget, trading recompute FLOPs for
 /// memory. Always returns the best plan found; check
 /// [`BudgetedPlan::met`] for whether the budget was achieved.
 pub fn roam_plan_budgeted(g: &Graph, spec: BudgetSpec, cfg: &RecomputeCfg) -> BudgetedPlan {
-    let sw = Stopwatch::start();
-    let mut base = roam_plan(g, &cfg.roam);
-    let baseline_total = base.total_bytes();
-    let budget = match spec {
-        BudgetSpec::Bytes(b) => b,
-        BudgetSpec::Fraction(f) => (baseline_total as f64 * f).floor() as u64,
-    };
-
-    if baseline_total <= budget {
-        annotate(
-            &mut base,
-            &Overhead {
-                rw_ops: 0,
-                rw_bytes: 0,
-                evicted: 0,
-                rounds: 0,
-                budget,
-                baseline_total,
-                met: true,
-            },
-        );
-        base.planning_secs = sw.secs();
-        return BudgetedPlan {
-            plan: base,
-            graph: g.clone(),
-            budget,
-            baseline_total,
-            met: true,
-            exhausted: false,
-            rounds: 0,
-            evicted: 0,
-            recompute_ops: 0,
-            recompute_bytes: 0,
-        };
-    }
-
-    let reach = Reachability::compute(g);
-    let prof = profile(g, &base.schedule);
-    let mut live_mask = vec![false; g.n_tensors()];
-    for t in live_at(g, &base.schedule, prof.peak_step) {
-        live_mask[t] = true;
-    }
-    let cands = candidates(g, &reach, cfg.strategy, &live_mask);
-
-    let gap = baseline_total - budget;
-    let start_k = prefix_for_gap(&cands, gap);
-    let rounds = escalate(g, &reach, &cands, cfg, start_k, cfg.max_rounds, |best| {
-        best <= budget
-    });
-    let n_rounds = rounds.len();
-    let exhausted = rounds
-        .last()
-        .map(|r| r.rewrite.evicted() == cands.iter().map(|c| c.tensors.len()).sum::<usize>())
-        .unwrap_or(cands.is_empty());
-
-    // Choose the minimum-total round; fall back to the baseline if no
-    // round beat it (recompute never helps on this graph).
-    let best_round = rounds
-        .into_iter()
-        .min_by_key(|r| (r.total(), r.rewrite.evicted()));
-    let (mut plan, graph, rw_ops, rw_bytes, evicted) = match best_round {
-        Some(r) if r.total() < baseline_total => {
-            let n_ops = r.rewrite.recompute_ops.len();
-            let bytes = r.rewrite.recompute_bytes;
-            let ev = r.rewrite.evicted();
-            (r.plan, r.rewrite.graph, n_ops, bytes, ev)
-        }
-        _ => (base, g.clone(), 0, 0, 0),
-    };
-    let met = plan.total_bytes() <= budget;
-    annotate(
-        &mut plan,
-        &Overhead {
-            rw_ops,
-            rw_bytes,
-            evicted,
-            rounds: n_rounds,
-            budget,
-            baseline_total,
-            met,
-        },
-    );
-    plan.planning_secs = sw.secs();
+    let h = roam_plan_hybrid(g, spec, &cfg.to_hybrid());
     BudgetedPlan {
-        plan,
-        graph,
-        budget,
-        baseline_total,
-        met,
-        exhausted,
-        rounds: n_rounds,
-        evicted,
-        recompute_ops: rw_ops,
-        recompute_bytes: rw_bytes,
+        plan: h.plan,
+        graph: h.graph,
+        budget: h.budget,
+        baseline_total: h.baseline_total,
+        met: h.met,
+        exhausted: h.exhausted,
+        rounds: h.rounds,
+        evicted: h.evicted,
+        recompute_ops: h.recompute_ops,
+        recompute_bytes: h.recompute_bytes,
     }
 }
 
@@ -329,26 +159,14 @@ mod tests {
         } else {
             assert!(r.exhausted || r.rounds >= quick_cfg().max_rounds);
         }
+        // A recompute-only driver never inserts swap ops.
+        assert!(!r
+            .graph
+            .ops
+            .iter()
+            .any(|o| matches!(o.kind, crate::graph::OpKind::SwapOut | crate::graph::OpKind::SwapIn)));
         // The plan must be valid on the returned (augmented) graph.
         assert!(crate::graph::topo::is_topological(&r.graph, &r.plan.order));
         assert!(crate::graph::validate::validate(&r.graph).is_empty());
-    }
-
-    #[test]
-    fn prefix_for_gap_is_minimal() {
-        use crate::recompute::select::Candidate;
-        let c = |saved: u64| Candidate {
-            tensors: vec![0],
-            saved,
-            cost: saved,
-            at_peak: false,
-        };
-        let cands = vec![c(100), c(50), c(10)];
-        assert_eq!(prefix_for_gap(&cands, 1), 1);
-        assert_eq!(prefix_for_gap(&cands, 100), 1);
-        assert_eq!(prefix_for_gap(&cands, 101), 2);
-        assert_eq!(prefix_for_gap(&cands, 160), 3);
-        assert_eq!(prefix_for_gap(&cands, 10_000), 3);
-        assert_eq!(prefix_for_gap(&[], 5), 1);
     }
 }

@@ -32,6 +32,14 @@
 //!
 //! Entry points: [`roam_plan_budgeted`] and [`tradeoff_sweep`]; the CLI
 //! exposes them as `roam recompute` and `roam compare --budget`.
+//!
+//! The eviction machinery (eligibility gate, backward-consumer
+//! retargeting, loss anchoring) is shared with the bandwidth-aware
+//! offloading sibling [`crate::swap`] via [`crate::evict`], and the
+//! budgeted escalation loop is the [`crate::hybrid::Technique::Recompute`]
+//! specialisation of the technique-generic [`crate::hybrid`] driver,
+//! which can also mix recomputation with swapping per tensor
+//! (cheapest-overhead-first).
 
 pub mod budget;
 pub mod rewrite;

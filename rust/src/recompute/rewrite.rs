@@ -24,8 +24,11 @@
 //! scheduler — the planner's peak-minimising search then places it as late
 //! as the backward consumers allow.
 
+use crate::evict::{filter_evictable, find_anchor, retarget_backward};
 use crate::graph::{Graph, OpId, Phase, Reachability, TensorClass, TensorId};
 use std::collections::HashMap;
+
+pub use crate::evict::is_evictable;
 
 /// Outcome of a rewrite.
 #[derive(Clone, Debug)]
@@ -47,31 +50,6 @@ impl RewriteResult {
     }
 }
 
-/// Can `t` be evicted and recomputed? It must be a non-output forward
-/// activation with at least one backward consumer, and no loss/update
-/// consumers (those pin it across the fwd/bwd boundary anyway).
-pub fn is_evictable(g: &Graph, t: TensorId) -> bool {
-    let tt = &g.tensors[t];
-    if tt.class != TensorClass::Activation || tt.is_output {
-        return false;
-    }
-    let Some(p) = tt.producer else {
-        return false;
-    };
-    if g.ops[p].phase != Phase::Forward {
-        return false;
-    }
-    let mut has_bwd = false;
-    for &c in &tt.consumers {
-        match g.ops[c].phase {
-            Phase::Backward => has_bwd = true,
-            Phase::Forward => {}
-            Phase::Loss | Phase::Update => return false,
-        }
-    }
-    has_bwd
-}
-
 /// Rewrite `g` so every tensor in `evict` (silently filtered through
 /// [`is_evictable`]) is recomputed for its backward consumers.
 ///
@@ -85,17 +63,7 @@ pub fn is_evictable(g: &Graph, t: TensorId) -> bool {
 /// `reach` must be the reachability of `g` (used only for the control-
 /// anchor safety check).
 pub fn rewrite(g: &Graph, reach: &Reachability, evict: &[TensorId]) -> RewriteResult {
-    let evicted: Vec<TensorId> = {
-        let mut seen = vec![false; g.n_tensors()];
-        let mut out = Vec::new();
-        for &t in evict {
-            if t < g.n_tensors() && !seen[t] && is_evictable(g, t) {
-                seen[t] = true;
-                out.push(t);
-            }
-        }
-        out
-    };
+    let evicted = filter_evictable(g, evict);
     if evicted.is_empty() {
         return RewriteResult {
             graph: g.clone(),
@@ -162,17 +130,7 @@ pub fn rewrite(g: &Graph, reach: &Reachability, evict: &[TensorId]) -> RewriteRe
     let mut remap = Vec::with_capacity(evicted.len());
     for &t in &evicted {
         let ct = clone_of[&t];
-        let mut consumers: Vec<OpId> = g.tensors[t]
-            .consumers
-            .iter()
-            .copied()
-            .filter(|&c| g.ops[c].phase == Phase::Backward)
-            .collect();
-        consumers.sort_unstable();
-        consumers.dedup();
-        for c in consumers {
-            out.replace_input(c, t, ct);
-        }
+        retarget_backward(&mut out, g, t, ct);
         remap.push((t, ct));
     }
 
@@ -196,35 +154,6 @@ pub fn rewrite(g: &Graph, reach: &Reachability, evict: &[TensorId]) -> RewriteRe
         remap,
         recompute_bytes,
     }
-}
-
-/// An output tensor of a loss-phase op that precedes every retargeted
-/// backward consumer, if one exists.
-fn find_anchor(
-    g: &Graph,
-    reach: &Reachability,
-    remap: &[(TensorId, TensorId)],
-) -> Option<TensorId> {
-    let mut rewired: Vec<OpId> = remap
-        .iter()
-        .flat_map(|&(t, _)| {
-            g.tensors[t]
-                .consumers
-                .iter()
-                .copied()
-                .filter(|&c| g.ops[c].phase == Phase::Backward)
-        })
-        .collect();
-    rewired.sort_unstable();
-    rewired.dedup();
-    g.ops
-        .iter()
-        .find(|op| {
-            op.phase == Phase::Loss
-                && !op.outputs.is_empty()
-                && rewired.iter().all(|&c| reach.precedes(op.id, c))
-        })
-        .map(|op| op.outputs[0])
 }
 
 #[cfg(test)]

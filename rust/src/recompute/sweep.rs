@@ -7,12 +7,15 @@
 //! minimum over a superset — which makes the reported totals monotonically
 //! non-increasing as the budget tightens, by construction. The property
 //! tests pin this down; `benches/recompute_tradeoff.rs` draws the curve.
+//!
+//! The shared-round machinery lives in
+//! [`crate::hybrid::hybrid_tradeoff_sweep`]; this is its
+//! [`crate::hybrid::Technique::Recompute`] specialisation (see
+//! `benches/swap_tradeoff.rs` for the technique-comparing sweep).
 
-use super::budget::{escalate, RecomputeCfg, Round};
-use super::select::candidates;
-use crate::graph::{Graph, Reachability};
-use crate::planner::roam_plan;
-use crate::sched::sim::{live_at, profile};
+use super::budget::RecomputeCfg;
+use crate::graph::Graph;
+use crate::hybrid::hybrid_tradeoff_sweep;
 
 /// One point of the tradeoff curve.
 #[derive(Clone, Debug)]
@@ -49,80 +52,23 @@ pub struct SweepResult {
 /// Fractions may be given in any order; rounds are shared, with the
 /// escalation sized by the tightest fraction.
 pub fn tradeoff_sweep(g: &Graph, fractions: &[f64], cfg: &RecomputeCfg) -> SweepResult {
-    let base = roam_plan(g, &cfg.roam);
-    let baseline_total = base.total_bytes();
-    let budget_of = |f: f64| (baseline_total as f64 * f).floor() as u64;
-
-    let tightest = fractions
-        .iter()
-        .copied()
-        .fold(f64::INFINITY, f64::min)
-        .max(0.0);
-    let needs_rounds = fractions.iter().any(|&f| budget_of(f) < baseline_total);
-
-    let rounds: Vec<Round> = if needs_rounds {
-        let reach = Reachability::compute(g);
-        let prof = profile(g, &base.schedule);
-        let mut live_mask = vec![false; g.n_tensors()];
-        for t in live_at(g, &base.schedule, prof.peak_step) {
-            live_mask[t] = true;
-        }
-        let cands = candidates(g, &reach, cfg.strategy, &live_mask);
-        let tight_budget = budget_of(tightest);
-        // Start from a single unit so loose budgets get low-overhead
-        // points; `cfg.max_rounds` caps the escalation as everywhere else.
-        escalate(g, &reach, &cands, cfg, 1, cfg.max_rounds, |best| {
-            best <= tight_budget
-        })
-    } else {
-        Vec::new()
-    };
-
-    let points = fractions
-        .iter()
-        .map(|&f| {
-            let budget = budget_of(f);
-            // Walk rounds until the running minimum satisfies this budget
-            // (or rounds run out); report that minimum.
-            let mut best: Option<&Round> = None;
-            let mut best_total = baseline_total;
-            for r in &rounds {
-                if best_total <= budget {
-                    break;
-                }
-                if r.total() < best_total {
-                    best_total = r.total();
-                    best = Some(r);
-                }
-            }
-            match best {
-                Some(r) => SweepPoint {
-                    fraction: f,
-                    budget,
-                    total: r.total(),
-                    theoretical_peak: r.plan.theoretical_peak,
-                    met: r.total() <= budget,
-                    evicted: r.rewrite.evicted(),
-                    recompute_ops: r.rewrite.recompute_ops.len(),
-                    recompute_bytes: r.rewrite.recompute_bytes,
-                },
-                None => SweepPoint {
-                    fraction: f,
-                    budget,
-                    total: baseline_total,
-                    theoretical_peak: base.theoretical_peak,
-                    met: baseline_total <= budget,
-                    evicted: 0,
-                    recompute_ops: 0,
-                    recompute_bytes: 0,
-                },
-            }
-        })
-        .collect();
-
+    let h = hybrid_tradeoff_sweep(g, fractions, &cfg.to_hybrid());
     SweepResult {
-        baseline_total,
-        points,
+        baseline_total: h.baseline_total,
+        points: h
+            .points
+            .into_iter()
+            .map(|p| SweepPoint {
+                fraction: p.fraction,
+                budget: p.budget,
+                total: p.total,
+                theoretical_peak: p.theoretical_peak,
+                met: p.met,
+                evicted: p.evicted,
+                recompute_ops: p.recompute_ops,
+                recompute_bytes: p.recompute_bytes,
+            })
+            .collect(),
     }
 }
 

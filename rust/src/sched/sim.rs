@@ -80,6 +80,45 @@ pub fn total_peak(g: &Graph, sched: &Schedule) -> u64 {
     p.peak + p.persistent
 }
 
+/// Theoretical peak with per-tensor *death extensions* — the
+/// transfer-aware simulation the [`crate::swap`] cost model drives: a
+/// swapped-out tensor stays resident on device until its DMA completes,
+/// so its death is pushed to the step at which the modeled transfer
+/// finishes rather than its last consumer. `extend` holds
+/// `(tensor, min_death_step)` pairs; other tensors keep their liveness
+/// deaths, and extensions are clamped to the horizon.
+pub fn peak_with_extended_deaths(
+    g: &Graph,
+    sched: &Schedule,
+    extend: &[(crate::graph::TensorId, usize)],
+) -> u64 {
+    let horizon = sched.horizon().max(1);
+    let lt = lifetimes_with_horizon(g, &sched.ts, horizon - 1);
+    let mut ext = vec![0usize; g.n_tensors()];
+    for &(t, d) in extend {
+        if t < ext.len() {
+            ext[t] = ext[t].max(d.min(horizon - 1));
+        }
+    }
+    let mut delta = vec![0i64; horizon + 1];
+    for t in &g.tensors {
+        if t.class.is_persistent() {
+            continue;
+        }
+        let l = lt[t.id];
+        let death = l.death.max(ext[t.id]);
+        delta[l.birth] += t.size as i64;
+        delta[death + 1] -= t.size as i64;
+    }
+    let mut cur = 0i64;
+    let mut peak = 0u64;
+    for d in delta.iter().take(horizon) {
+        cur += d;
+        peak = peak.max(cur.max(0) as u64);
+    }
+    peak
+}
+
 /// Ids of the dynamic tensors live at `step` under `sched`. The recompute
 /// candidate selectors use this (at the peak step) to rank evictions by
 /// whether they actually relieve the bottleneck.
@@ -172,6 +211,20 @@ mod tests {
             assert_eq!(sum, p.per_step[step], "step {step}");
         }
         assert_eq!(total_peak(&g, &s), p.peak + p.persistent);
+    }
+
+    #[test]
+    fn extended_deaths_never_lower_the_peak() {
+        let g = fig2();
+        let s = Schedule::from_order(&[0, 1, 2, 3]);
+        let base = theoretical_peak(&g, &s);
+        assert_eq!(peak_with_extended_deaths(&g, &s, &[]), base);
+        // Keeping tB (tensor 3) alive to the end can only raise the peak.
+        let ext = peak_with_extended_deaths(&g, &s, &[(3, 3)]);
+        assert!(ext >= base);
+        // Extensions past the horizon are clamped, not a panic.
+        let clamped = peak_with_extended_deaths(&g, &s, &[(3, 999)]);
+        assert_eq!(clamped, ext);
     }
 
     #[test]

@@ -1,0 +1,329 @@
+//! Bandwidth-aware cost model for host↔device offloading.
+//!
+//! The planner has no wall-clock notion — it orders ops and packs bytes —
+//! so swap costs are *modeled*: a PCIe-style link with fixed per-transfer
+//! latency plus bytes/bandwidth, and a compute-throughput proxy that
+//! converts both op "durations" and recompute bytes onto the same
+//! seconds scale (an op's modeled duration is the bytes it produces over
+//! the compute throughput — the same FLOP-proxy-by-bytes convention the
+//! recompute subsystem already uses for its overhead counter).
+//!
+//! Three questions this module answers:
+//!
+//! * **How long does a swap take?** [`CostModel::transfer_secs`] per
+//!   direction; a full out+in round trip is twice that.
+//! * **How much of it is hidden?** A [`Timeline`] built from a schedule
+//!   gives the modeled compute seconds between any two steps; transfers
+//!   overlap that window, and only the excess is *exposed* (un-hidden)
+//!   overhead — [`exposed_secs_for`] estimates it for a candidate tensor
+//!   from the idle gap between its last forward use and first backward
+//!   use, [`plan_swap_overhead`] measures it exactly on a planned
+//!   schedule with the inserted `SwapOut`/`SwapIn` ops.
+//! * **What does the transfer do to the peak?** [`transfer_aware_peak`]:
+//!   a swapped-out tensor stays resident until its DMA completes, so its
+//!   death extends to the step where the modeled transfer finishes
+//!   (via [`crate::sched::sim::peak_with_extended_deaths`]).
+
+use crate::graph::{Graph, Phase, TensorId};
+use crate::sched::sim::peak_with_extended_deaths;
+use crate::sched::Schedule;
+
+use super::rewrite::SwapPair;
+
+/// Modeled hardware for swap planning. Defaults approximate a PCIe 4.0
+/// x16 link (~16 GB/s effective) against an accelerator producing tensor
+/// bytes at ~800 GB/s — the ratios, not the absolutes, drive decisions.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Host↔device link bandwidth in bytes/second.
+    pub pcie_bytes_per_sec: f64,
+    /// Fixed per-transfer latency in seconds (DMA setup, pinning).
+    pub pcie_latency_secs: f64,
+    /// Compute throughput proxy: bytes of tensor material produced per
+    /// second; converts op durations and recompute bytes to seconds.
+    pub compute_bytes_per_sec: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            pcie_bytes_per_sec: 16e9,
+            pcie_latency_secs: 10e-6,
+            compute_bytes_per_sec: 800e9,
+        }
+    }
+}
+
+impl CostModel {
+    /// Parse the CLI bandwidth knobs (`--pcie-gbps`, `--pcie-latency-us`,
+    /// `--compute-gbps`), defaulting to [`CostModel::default`]. Shared by
+    /// the `roam swap` command, `compare --technique` and the tradeoff
+    /// benches so the flags can never drift in meaning.
+    pub fn from_args(args: &crate::util::cli::Args) -> CostModel {
+        let d = CostModel::default();
+        CostModel {
+            pcie_bytes_per_sec: args.f64("pcie-gbps", d.pcie_bytes_per_sec / 1e9) * 1e9,
+            pcie_latency_secs: args.f64("pcie-latency-us", d.pcie_latency_secs * 1e6) / 1e6,
+            compute_bytes_per_sec: args.f64("compute-gbps", d.compute_bytes_per_sec / 1e9) * 1e9,
+        }
+    }
+
+    /// Modeled seconds for one transfer direction of `bytes`.
+    pub fn transfer_secs(&self, bytes: u64) -> f64 {
+        self.pcie_latency_secs + bytes as f64 / self.pcie_bytes_per_sec
+    }
+
+    /// Full swap round trip (out + in) in seconds.
+    pub fn swap_secs(&self, bytes: u64) -> f64 {
+        2.0 * self.transfer_secs(bytes)
+    }
+
+    /// FLOP-proxy seconds to recompute `bytes` of tensor material.
+    pub fn recompute_secs(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.compute_bytes_per_sec
+    }
+
+    /// Modeled duration of one op: bytes it produces over the compute
+    /// throughput.
+    pub fn op_secs(&self, g: &Graph, op: crate::graph::OpId) -> f64 {
+        let bytes: u64 = g.ops[op].outputs.iter().map(|&t| g.tensors[t].size).sum();
+        self.recompute_secs(bytes)
+    }
+}
+
+/// Modeled compute time of a schedule, queryable by step: `cum[s]` is the
+/// seconds of compute before step `s` begins, so the overlap window
+/// strictly between two steps is a subtraction.
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    /// `cum[s]` = Σ step_secs[0..s]; length = horizon + 1.
+    cum: Vec<f64>,
+    /// Timestep per op (copied from the schedule).
+    ts: Vec<usize>,
+}
+
+impl Timeline {
+    /// Build the timeline of `sched` on `g` under `m`.
+    pub fn new(g: &Graph, sched: &Schedule, m: &CostModel) -> Timeline {
+        let horizon = sched.horizon().max(1);
+        let mut step_secs = vec![0.0f64; horizon];
+        for op in &g.ops {
+            step_secs[sched.ts[op.id]] += m.op_secs(g, op.id);
+        }
+        let mut cum = Vec::with_capacity(horizon + 1);
+        let mut acc = 0.0;
+        cum.push(0.0);
+        for s in &step_secs {
+            acc += s;
+            cum.push(acc);
+        }
+        Timeline {
+            cum,
+            ts: sched.ts.clone(),
+        }
+    }
+
+    /// Scheduled step of `op`.
+    pub fn step_of(&self, op: crate::graph::OpId) -> usize {
+        self.ts[op]
+    }
+
+    /// Last step index of the timeline.
+    pub fn last_step(&self) -> usize {
+        self.cum.len().saturating_sub(2)
+    }
+
+    /// Modeled compute seconds of the steps strictly between `a` and `b`
+    /// (0 when `b <= a + 1`). This is the window a transfer issued at the
+    /// end of step `a` can hide under before step `b` begins.
+    pub fn window_secs(&self, a: usize, b: usize) -> f64 {
+        if b <= a + 1 {
+            return 0.0;
+        }
+        (self.cum[b] - self.cum[a + 1]).max(0.0)
+    }
+
+    /// First step whose end lies at or after a transfer of `secs` issued
+    /// at the end of step `start` — i.e. the step through which the
+    /// transfer keeps its source resident. Clamped to the last step.
+    pub fn step_when_done(&self, start: usize, secs: f64) -> usize {
+        let target = self.cum[(start + 1).min(self.cum.len() - 1)] + secs;
+        // Smallest e with cum[e + 1] >= target.
+        let mut e = start;
+        while e + 2 < self.cum.len() && self.cum[e + 1] < target {
+            e += 1;
+        }
+        e.min(self.last_step())
+    }
+}
+
+/// The idle gap of `t` under the timeline's schedule: `(last forward-use
+/// step, first backward-use step)`, or `None` when `t` has no backward
+/// consumer. The compute between these steps is the natural hiding
+/// window for an out+in swap round trip.
+pub fn idle_window(g: &Graph, tl: &Timeline, t: TensorId) -> Option<(usize, usize)> {
+    let tt = &g.tensors[t];
+    let birth = tt.producer.map(|p| tl.step_of(p)).unwrap_or(0);
+    let mut last_fwd = birth;
+    let mut first_bwd = usize::MAX;
+    for &c in &tt.consumers {
+        let s = tl.step_of(c);
+        match g.ops[c].phase {
+            Phase::Backward => first_bwd = first_bwd.min(s),
+            _ => last_fwd = last_fwd.max(s),
+        }
+    }
+    if first_bwd == usize::MAX {
+        return None;
+    }
+    Some((last_fwd, first_bwd))
+}
+
+/// Estimated *exposed* (un-hidden) seconds of swapping `t` out and back
+/// in, from the baseline schedule: the out+in transfer time minus the
+/// compute window of the tensor's idle gap, floored at zero. Tensors
+/// whose gap fully hides the round trip cost (near) nothing.
+pub fn exposed_secs_for(g: &Graph, tl: &Timeline, m: &CostModel, t: TensorId) -> f64 {
+    let Some((last_fwd, first_bwd)) = idle_window(g, tl, t) else {
+        return m.swap_secs(g.tensors[t].size);
+    };
+    let window = tl.window_secs(last_fwd, first_bwd);
+    (m.swap_secs(g.tensors[t].size) - window).max(0.0)
+}
+
+/// Measured swap overhead of a *planned* schedule over an augmented
+/// graph with swap pairs inserted.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SwapOverhead {
+    /// Σ modeled out+in transfer seconds over all pairs.
+    pub transfer_secs: f64,
+    /// Σ un-hidden seconds: out transfers must complete before their
+    /// `SwapIn` runs, in transfers before the clone's first consumer;
+    /// time not covered by the compute scheduled in between is exposed.
+    pub exposed_secs: f64,
+}
+
+/// Measure the overhead of `pairs` on the planned `sched` of the
+/// augmented graph `g`.
+pub fn plan_swap_overhead(
+    g: &Graph,
+    sched: &Schedule,
+    m: &CostModel,
+    pairs: &[SwapPair],
+) -> SwapOverhead {
+    if pairs.is_empty() {
+        return SwapOverhead::default();
+    }
+    let tl = Timeline::new(g, sched, m);
+    let mut o = SwapOverhead::default();
+    for p in pairs {
+        let t = m.transfer_secs(g.tensors[p.original].size);
+        o.transfer_secs += 2.0 * t;
+        // Out: issued after SwapOut's step, must land before SwapIn runs.
+        let out_window = tl.window_secs(tl.step_of(p.out_op), tl.step_of(p.in_op));
+        o.exposed_secs += (t - out_window).max(0.0);
+        // In: issued at SwapIn's step, must land before the clone's first
+        // consumer runs.
+        let first_use = g.tensors[p.clone]
+            .consumers
+            .iter()
+            .map(|&c| tl.step_of(c))
+            .min()
+            .unwrap_or_else(|| tl.step_of(p.in_op));
+        let in_window = tl.window_secs(tl.step_of(p.in_op), first_use);
+        o.exposed_secs += (t - in_window).max(0.0);
+    }
+    o
+}
+
+/// Transfer-aware theoretical peak: each swapped original stays resident
+/// through the step at which its modeled out-transfer completes (the DMA
+/// source can't be freed mid-flight). Always ≥ the plain peak.
+pub fn transfer_aware_peak(
+    g: &Graph,
+    sched: &Schedule,
+    m: &CostModel,
+    pairs: &[SwapPair],
+) -> u64 {
+    let tl = Timeline::new(g, sched, m);
+    let extend: Vec<(TensorId, usize)> = pairs
+        .iter()
+        .map(|p| {
+            let t = m.transfer_secs(g.tensors[p.original].size);
+            (p.original, tl.step_when_done(tl.step_of(p.out_op), t))
+        })
+        .collect();
+    peak_with_extended_deaths(g, sched, &extend)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, OpKind, TensorClass};
+
+    fn m() -> CostModel {
+        CostModel {
+            pcie_bytes_per_sec: 100.0, // 100 B/s: easy numbers
+            pcie_latency_secs: 0.0,
+            compute_bytes_per_sec: 100.0,
+        }
+    }
+
+    /// fwd a→b, loss, bwd consumes act0.
+    fn chain() -> Graph {
+        let mut g = Graph::new("c");
+        let x = g.add_input_tensor("x", 10, TensorClass::Input);
+        let (_, t0) = g.add_op("a", OpKind::MatMul, Phase::Forward, &[x],
+            &[("act0", 100, TensorClass::Activation)]);
+        let (_, t1) = g.add_op("b", OpKind::MatMul, Phase::Forward, &[t0[0]],
+            &[("act1", 200, TensorClass::Activation)]);
+        let (_, l) = g.add_op("loss", OpKind::Loss, Phase::Loss, &[t1[0]],
+            &[("loss", 50, TensorClass::TempBuffer)]);
+        g.mark_output(l[0]);
+        let (_, d) = g.add_op("a.bwd", OpKind::MatMul, Phase::Backward,
+            &[t0[0], l[0]], &[("dx", 10, TensorClass::Gradient)]);
+        g.mark_output(d[0]);
+        g
+    }
+
+    #[test]
+    fn model_arithmetic() {
+        let m = m();
+        assert_eq!(m.transfer_secs(100), 1.0);
+        assert_eq!(m.swap_secs(100), 2.0);
+        assert_eq!(m.recompute_secs(50), 0.5);
+    }
+
+    #[test]
+    fn timeline_windows() {
+        let g = chain();
+        let s = Schedule::from_order(&[0, 1, 2, 3]);
+        let tl = Timeline::new(&g, &s, &m());
+        // Step durations: a=1.0 (100B), b=2.0, loss=0.5, bwd=0.1.
+        assert!((tl.window_secs(0, 3) - 2.5).abs() < 1e-9); // b + loss
+        assert_eq!(tl.window_secs(1, 2), 0.0); // adjacent
+        assert_eq!(tl.window_secs(2, 1), 0.0); // inverted
+        // A 2.0 s transfer issued after step 0 lands exactly on the
+        // step-1/step-2 boundary (resident through step 1); any longer
+        // and it spills into step 2.
+        assert_eq!(tl.step_when_done(0, 2.0), 1);
+        assert_eq!(tl.step_when_done(0, 2.1), 2);
+        // A huge transfer clamps to the last step.
+        assert_eq!(tl.step_when_done(0, 1e9), tl.last_step());
+    }
+
+    #[test]
+    fn idle_window_and_exposure() {
+        let g = chain();
+        let s = Schedule::from_order(&[0, 1, 2, 3]);
+        let tl = Timeline::new(&g, &s, &m());
+        // act0 (tensor 1): last fwd use at step 1 (b), first bwd at 3.
+        assert_eq!(idle_window(&g, &tl, 1), Some((1, 3)));
+        // Round trip costs 2.0 s; the window (loss, 0.5 s) hides part.
+        let e = exposed_secs_for(&g, &tl, &m(), 1);
+        assert!((e - 1.5).abs() < 1e-9, "exposed = {e}");
+        // act1 has no backward consumer: full cost.
+        assert_eq!(idle_window(&g, &tl, 2), None);
+        assert!((exposed_secs_for(&g, &tl, &m(), 2) - 4.0).abs() < 1e-9);
+    }
+}

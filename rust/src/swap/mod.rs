@@ -1,0 +1,50 @@
+//! Bandwidth-aware activation offloading (CPU/NVMe swap) on top of ROAM
+//! plans — the second high-level technique riding the order+layout
+//! substrate, sibling of [`crate::recompute`].
+//!
+//! The paper's position is that a memory-efficient execution plan
+//! *reduces the overheads of high-level techniques layered on top of it*.
+//! For swapping, the overhead is transfer time that compute fails to
+//! hide: a tensor evicted to host must come back before its backward
+//! consumer, and the only free lunch is the compute the schedule already
+//! performs in between. A good operator order therefore directly widens
+//! the hiding window — which this module measures rather than assumes.
+//!
+//! Pipeline (the SwapAdvisor / Capuchin-style formulation; see
+//! PAPERS.md):
+//!
+//! 1. **Cost** ([`cost`]) — a modeled PCIe link (bytes/sec + latency)
+//!    and a compute-throughput proxy give per-tensor swap-out/swap-in
+//!    latencies and, from the scheduled order, the overlap window between
+//!    a tensor's last forward use and first backward use. Un-hidden
+//!    ("exposed") transfer seconds are the technique's overhead currency.
+//! 2. **Select** ([`select`]) — rank candidates by bytes freed per second
+//!    of exposed transfer time, peak-relieving tensors first.
+//! 3. **Rewrite** ([`rewrite`]) — insert `SwapOut`/`SwapIn` pairs wired
+//!    through a 1-byte host handle, retarget backward consumers to the
+//!    fetched clone (shared eviction machinery: [`crate::evict`]), and
+//!    pin each fetch into the backward region with a loss-anchored
+//!    control edge.
+//! 4. **Re-plan** — [`crate::hybrid::roam_plan_hybrid`] with
+//!    [`crate::hybrid::Technique::Swap`] escalates evictions and re-runs
+//!    the full ROAM pipeline on each augmented graph; the hybrid
+//!    technique mixes swap with recomputation per tensor,
+//!    cheapest-overhead-first.
+//!
+//! Fidelity notes: host memory is modeled as unbounded; transfers are
+//! serialised per tensor but overlap compute freely (one DMA engine per
+//! direction, no contention modeling); and `SwapIn` re-materialises
+//! values exactly — this substrate only accounts bytes, seconds and
+//! precedence. The CLI exposes the pure-swap driver as `roam swap` and
+//! the technique comparison as `roam compare --budget F --technique T`.
+
+pub mod cost;
+pub mod rewrite;
+pub mod select;
+
+pub use cost::{
+    exposed_secs_for, idle_window, plan_swap_overhead, transfer_aware_peak, CostModel,
+    SwapOverhead, Timeline,
+};
+pub use rewrite::{rewrite, SwapPair, SwapRewriteResult, HANDLE_BYTES};
+pub use select::{swap_candidates, unit_swap_cost, SwapCandidate};

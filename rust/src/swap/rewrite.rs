@@ -1,0 +1,255 @@
+//! Graph rewriter: insert `SwapOut`/`SwapIn` op pairs so chosen
+//! activations are evicted to host after their last forward use and
+//! fetched back just before their backward consumers.
+//!
+//! Per evicted tensor `t` the rewrite adds
+//!
+//! ```text
+//! t ──▶ SwapOut ──handle(1 B)──▶ SwapIn ──clone(size of t)──▶ bwd consumers
+//! ```
+//!
+//! and retargets `t`'s backward consumers to the clone (the shared
+//! machinery in [`crate::evict`], identical to the recompute rewriter).
+//! The memory semantics follow from liveness alone:
+//!
+//! * the **original** loses its backward consumers, so it dies at
+//!   max(last forward use, `SwapOut`) — and a peak-minimising scheduler
+//!   places `SwapOut` right after the last forward use, since executing
+//!   it frees `size(t) − 1` bytes;
+//! * the **handle** (1 byte) spans the fwd/bwd boundary in the original's
+//!   stead — the device-side residue of a host copy;
+//! * the **clone** is born at `SwapIn` and dies at the original backward
+//!   consumers.
+//!
+//! Scheduling: each `SwapIn` gets a control input from a loss-phase
+//! anchor (when one precedes all rewired consumers, see
+//! [`crate::evict::find_anchor`]), pinning the fetch into the backward
+//! region for any topological scheduler; the dataflow edge to the clone
+//! already forces it before the first backward consumer. `SwapOut` is
+//! deliberately *not* anchored — the earlier it runs, the earlier the
+//! original can be freed.
+//!
+//! What the rewrite does **not** model is time: the bandwidth cost and
+//! the hidden/exposed split of each transfer are priced by
+//! [`super::cost`] against the planned schedule.
+
+use crate::evict::{filter_evictable, find_anchor, retarget_backward};
+use crate::graph::{Graph, OpId, OpKind, Phase, Reachability, TensorClass, TensorId};
+
+/// Device-side bytes of a swapped-out tensor's host handle. Non-zero so
+/// the handle partakes in liveness (and `validate`'s zero-size lint).
+pub const HANDLE_BYTES: u64 = 1;
+
+/// One inserted swap: original tensor, its host handle, the fetch clone,
+/// and the two ops.
+#[derive(Clone, Copy, Debug)]
+pub struct SwapPair {
+    /// The evicted tensor (loses its backward consumers).
+    pub original: TensorId,
+    /// 1-byte host handle produced by `out_op`, consumed by `in_op`.
+    pub handle: TensorId,
+    /// Re-materialised tensor the backward consumers now read.
+    pub clone: TensorId,
+    pub out_op: OpId,
+    pub in_op: OpId,
+}
+
+/// Outcome of a swap rewrite.
+#[derive(Clone, Debug)]
+pub struct SwapRewriteResult {
+    /// The augmented graph (original ops keep their ids; swap ops appended).
+    pub graph: Graph,
+    /// One entry per evicted tensor.
+    pub pairs: Vec<SwapPair>,
+    /// Σ bytes of the evicted tensors (one transfer direction).
+    pub swapped_bytes: u64,
+}
+
+impl SwapRewriteResult {
+    /// Number of tensors whose backward consumers were retargeted.
+    pub fn evicted(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// Total bytes crossing the link: out + in.
+    pub fn moved_bytes(&self) -> u64 {
+        2 * self.swapped_bytes
+    }
+}
+
+/// Rewrite `g` so every tensor in `evict` (silently filtered through
+/// [`crate::evict::is_evictable`]) is swapped out after its last forward
+/// use and swapped back in for its backward consumers. `reach` must be
+/// the reachability of `g` (used only for the control-anchor safety
+/// check). Preserves every [`crate::graph::validate`] invariant,
+/// acyclicity included.
+pub fn rewrite(g: &Graph, reach: &Reachability, evict: &[TensorId]) -> SwapRewriteResult {
+    let evicted = filter_evictable(g, evict);
+    if evicted.is_empty() {
+        return SwapRewriteResult {
+            graph: g.clone(),
+            pairs: Vec::new(),
+            swapped_bytes: 0,
+        };
+    }
+
+    let mut out = g.clone();
+    let mut pairs = Vec::with_capacity(evicted.len());
+    let mut swapped_bytes = 0u64;
+    for &t in &evicted {
+        let hname = format!("h::{}", g.tensors[t].name);
+        let (out_op, houts) = out.add_op(
+            format!("so::{}", g.tensors[t].name),
+            OpKind::SwapOut,
+            Phase::Forward,
+            &[t],
+            &[(hname.as_str(), HANDLE_BYTES, TensorClass::TempBuffer)],
+        );
+        let cname = format!("si::{}", g.tensors[t].name);
+        let (in_op, couts) = out.add_op(
+            format!("si::{}", g.tensors[t].name),
+            OpKind::SwapIn,
+            Phase::Backward,
+            &[houts[0]],
+            &[(cname.as_str(), g.tensors[t].size, g.tensors[t].class)],
+        );
+        retarget_backward(&mut out, g, t, couts[0]);
+        swapped_bytes += g.tensors[t].size;
+        pairs.push(SwapPair {
+            original: t,
+            handle: houts[0],
+            clone: couts[0],
+            out_op,
+            in_op,
+        });
+    }
+
+    // Control anchor: pin fetches after a loss op that provably precedes
+    // every retargeted consumer. Acyclic by construction — the anchor
+    // strictly precedes all clone consumers, and the swap ops have no
+    // other successors, so no path can lead back to the anchor.
+    let remap: Vec<(TensorId, TensorId)> = pairs.iter().map(|p| (p.original, p.clone)).collect();
+    if let Some(anchor_tensor) = find_anchor(g, reach, &remap) {
+        for p in &pairs {
+            out.add_control_input(p.in_op, anchor_tensor);
+        }
+    }
+
+    debug_assert!(
+        crate::graph::validate::validate(&out).is_empty(),
+        "swap rewrite produced an invalid graph"
+    );
+    SwapRewriteResult {
+        graph: out,
+        pairs,
+        swapped_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate::validate;
+    use crate::sched::sim::total_peak;
+    use crate::sched::Schedule;
+
+    /// fwd chain a→b→loss, backward consumes both activations.
+    fn training_chain() -> Graph {
+        let mut g = Graph::new("chain");
+        let x = g.add_input_tensor("x", 10, TensorClass::Input);
+        let (_, t0) = g.add_op(
+            "a",
+            OpKind::MatMul,
+            Phase::Forward,
+            &[x],
+            &[("act0", 100, TensorClass::Activation)],
+        );
+        let (_, t1) = g.add_op(
+            "b",
+            OpKind::MatMul,
+            Phase::Forward,
+            &[t0[0]],
+            &[("act1", 100, TensorClass::Activation)],
+        );
+        let (_, l) = g.add_op(
+            "loss",
+            OpKind::Loss,
+            Phase::Loss,
+            &[t1[0]],
+            &[("loss", 4, TensorClass::TempBuffer)],
+        );
+        g.mark_output(l[0]);
+        let (_, d1) = g.add_op(
+            "b.bwd",
+            OpKind::MatMul,
+            Phase::Backward,
+            &[t1[0], l[0]],
+            &[("dact0", 100, TensorClass::Gradient)],
+        );
+        let (_, d0) = g.add_op(
+            "a.bwd",
+            OpKind::MatMul,
+            Phase::Backward,
+            &[t0[0], d1[0]],
+            &[("dx", 10, TensorClass::Gradient)],
+        );
+        g.mark_output(d0[0]);
+        g
+    }
+
+    #[test]
+    fn rewrite_wires_out_handle_in_clone() {
+        let g = training_chain();
+        let reach = Reachability::compute(&g);
+        let r = rewrite(&g, &reach, &[1]);
+        assert!(validate(&r.graph).is_empty());
+        assert_eq!(r.evicted(), 1);
+        assert_eq!(r.swapped_bytes, 100);
+        assert_eq!(r.moved_bytes(), 200);
+        let p = r.pairs[0];
+        // Handle: 1-byte temp produced by SwapOut, consumed by SwapIn.
+        assert_eq!(r.graph.tensors[p.handle].size, HANDLE_BYTES);
+        assert_eq!(r.graph.tensors[p.handle].producer, Some(p.out_op));
+        assert_eq!(r.graph.tensors[p.handle].consumers, vec![p.in_op]);
+        assert_eq!(r.graph.ops[p.out_op].kind, OpKind::SwapOut);
+        assert_eq!(r.graph.ops[p.in_op].kind, OpKind::SwapIn);
+        // The original no longer has backward consumers; the clone feeds
+        // exactly the old backward consumer (op 4: a.bwd).
+        assert!(r.graph.tensors[p.original]
+            .consumers
+            .iter()
+            .all(|&c| r.graph.ops[c].phase != Phase::Backward));
+        assert_eq!(r.graph.tensors[p.clone].consumers, vec![4]);
+        // The fetch is pinned after the loss via a control input.
+        assert!(r.graph.ops[p.in_op].inputs.contains(&3), "missing anchor");
+        // SwapOut is free to run right after the last forward use.
+        assert!(!r.graph.ops[p.out_op].inputs.contains(&3));
+    }
+
+    #[test]
+    fn rewrite_reduces_peak_on_the_chain() {
+        let g = training_chain();
+        let reach = Reachability::compute(&g);
+        let r = rewrite(&g, &reach, &[1]);
+        let base = total_peak(
+            &g,
+            &Schedule::from_order(&crate::graph::topo::program_order(&g)),
+        );
+        let order = crate::graph::topo::program_order(&r.graph);
+        assert!(crate::graph::topo::is_topological(&r.graph, &order));
+        let after = total_peak(&r.graph, &Schedule::from_order(&order));
+        assert!(after <= base, "swap made the chain worse: {after} > {base}");
+    }
+
+    #[test]
+    fn empty_or_ineligible_evictions_are_identity() {
+        let g = training_chain();
+        let reach = Reachability::compute(&g);
+        let r = rewrite(&g, &reach, &[]);
+        assert_eq!(r.graph.n_ops(), g.n_ops());
+        assert_eq!(r.evicted(), 0);
+        let r = rewrite(&g, &reach, &[2, 0, 3]); // all ineligible
+        assert_eq!(r.graph.n_ops(), g.n_ops());
+        assert_eq!(r.swapped_bytes, 0);
+    }
+}

@@ -1,0 +1,145 @@
+//! Swap-candidate selection: which activations to offload, in what order.
+//!
+//! A good swap victim frees many bytes while its transfer hides under
+//! compute the schedule already performs between the tensor's last
+//! forward use and its first backward use. Candidates are therefore
+//! scored by **bytes freed per second of un-hidden transfer time** —
+//! a tensor whose round trip fully overlaps scores (near) infinitely
+//! well; a tensor on a tight fwd→bwd gap pays its transfer in exposed
+//! stall seconds. Peak-relieving tensors rank first regardless, exactly
+//! as in [`crate::recompute::select`].
+//!
+//! All driver paths (pure swap included) run through
+//! [`crate::hybrid`], which forms eviction *units* with the recompute
+//! selector, prices their swap side with [`unit_swap_cost`] and ranks
+//! them with the same [`score`] used here. [`swap_candidates`] is the
+//! standalone per-tensor view of that ranking — a tool/test surface
+//! that pins the comparator independently of the driver.
+
+use super::cost::{exposed_secs_for, CostModel, Timeline};
+use crate::evict::is_evictable;
+use crate::graph::{Graph, TensorId};
+
+/// One swap-eviction unit.
+#[derive(Clone, Debug)]
+pub struct SwapCandidate {
+    /// Tensors this unit evicts (per-tensor units hold exactly one).
+    pub tensors: Vec<TensorId>,
+    /// Bytes freed at the fwd/bwd boundary: Σ evicted sizes.
+    pub saved: u64,
+    /// Modeled out+in transfer seconds for the unit.
+    pub transfer_secs: f64,
+    /// Estimated un-hidden seconds under the baseline schedule.
+    pub exposed_secs: f64,
+    /// Does the unit free anything live at the baseline peak step?
+    pub at_peak: bool,
+}
+
+/// Transfer and exposed seconds of swapping every tensor in `tensors`
+/// (an eviction unit), under the baseline timeline.
+pub fn unit_swap_cost(
+    g: &Graph,
+    tl: &Timeline,
+    m: &CostModel,
+    tensors: &[TensorId],
+) -> (f64, f64) {
+    let mut transfer = 0.0;
+    let mut exposed = 0.0;
+    for &t in tensors {
+        transfer += m.swap_secs(g.tensors[t].size);
+        exposed += exposed_secs_for(g, tl, m, t);
+    }
+    (transfer, exposed)
+}
+
+/// Enumerate per-tensor swap candidates, best first. `live_at_peak` is a
+/// per-tensor mask from the baseline plan (see
+/// [`crate::sched::sim::live_at`]); pass all-false when unknown.
+pub fn swap_candidates(
+    g: &Graph,
+    tl: &Timeline,
+    m: &CostModel,
+    live_at_peak: &[bool],
+) -> Vec<SwapCandidate> {
+    let live = |t: TensorId| live_at_peak.get(t).copied().unwrap_or(false);
+    let mut out: Vec<SwapCandidate> = (0..g.n_tensors())
+        .filter(|&t| is_evictable(g, t))
+        .map(|t| {
+            let (transfer, exposed) = unit_swap_cost(g, tl, m, &[t]);
+            SwapCandidate {
+                tensors: vec![t],
+                saved: g.tensors[t].size,
+                transfer_secs: transfer,
+                exposed_secs: exposed,
+                at_peak: live(t),
+            }
+        })
+        .collect();
+    // Rank: peak-relieving first, then bytes-freed per exposed second
+    // (descending), then raw saving, then id for determinism.
+    out.sort_by(|a, b| {
+        b.at_peak
+            .cmp(&a.at_peak)
+            .then_with(|| {
+                let sa = score(a.saved, a.exposed_secs);
+                let sb = score(b.saved, b.exposed_secs);
+                sb.partial_cmp(&sa).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .then(b.saved.cmp(&a.saved))
+            .then(a.tensors[0].cmp(&b.tensors[0]))
+    });
+    out
+}
+
+/// Bytes freed per overhead second — the ranking currency shared with
+/// the hybrid driver ([`crate::hybrid`] calls this with the overhead of
+/// whichever technique it is ranking for). A small epsilon keeps fully
+/// hidden transfers finite; ties fall through to saved bytes.
+pub(crate) fn score(saved: u64, exposed_secs: f64) -> f64 {
+    saved as f64 / (exposed_secs + 1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{self, BuildCfg, ModelKind};
+    use crate::planner::{roam_plan, RoamCfg};
+
+    #[test]
+    fn candidates_on_a_model_are_ranked_and_evictable() {
+        let g = models::build(ModelKind::Vit, &BuildCfg::default());
+        let plan = roam_plan(
+            &g,
+            &RoamCfg {
+                parallel: false,
+                order_max_nodes: 4_000,
+                dsa_max_nodes: 4_000,
+                ..RoamCfg::default()
+            },
+        );
+        let m = CostModel::default();
+        let tl = Timeline::new(&g, &plan.schedule, &m);
+        let none = vec![false; g.n_tensors()];
+        let cands = swap_candidates(&g, &tl, &m, &none);
+        assert!(!cands.is_empty());
+        for c in &cands {
+            assert_eq!(c.tensors.len(), 1);
+            assert!(is_evictable(&g, c.tensors[0]));
+            assert!(c.saved > 0);
+            assert!(c.transfer_secs > 0.0);
+            assert!(c.exposed_secs >= 0.0);
+            assert!(c.exposed_secs <= c.transfer_secs + 1e-12);
+        }
+        // Ranking is by descending score within the at_peak blocks.
+        for w in cands.windows(2) {
+            if w[0].at_peak == w[1].at_peak {
+                assert!(
+                    score(w[0].saved, w[0].exposed_secs)
+                        >= score(w[1].saved, w[1].exposed_secs) - 1e-12
+                );
+            } else {
+                assert!(w[0].at_peak && !w[1].at_peak);
+            }
+        }
+    }
+}

@@ -1,0 +1,254 @@
+//! Property + integration tests for the hybrid recompute-vs-swap driver:
+//! at the same memory budget a hybrid plan is never worse than either
+//! pure technique (it replays both pure escalations and keeps the best
+//! round), budgets are respected, both overhead kinds are reported, and
+//! the shared-round sweep stays monotone — on random graphs plus the
+//! transformer/mobile workloads, with the CI-scale GPT-2 acceptance run
+//! and a full-fidelity GPT2-XL variant `#[ignore]`d per repo convention.
+
+use roam::graph::random::{random_training_graph, RandomGraphCfg};
+use roam::graph::validate::validate;
+use roam::hybrid::{hybrid_tradeoff_sweep, roam_plan_hybrid, BudgetSpec, HybridCfg, Technique};
+use roam::models::{self, BuildCfg, ModelKind, Optim};
+use roam::planner::{assert_plan_ok, lint_plan, RoamCfg};
+use roam::util::quick::forall;
+
+fn quick_cfg(technique: Technique) -> HybridCfg {
+    HybridCfg {
+        technique,
+        roam: RoamCfg {
+            parallel: false,
+            order_max_nodes: 4_000,
+            dsa_max_nodes: 4_000,
+            ..RoamCfg::default()
+        },
+        max_rounds: 6,
+        ..HybridCfg::default()
+    }
+}
+
+/// The acceptance property: at the same budget, hybrid never needs more
+/// memory than pure recompute or pure swap. Holds by construction — the
+/// hybrid driver replays both pure escalations (identical rankings,
+/// prefix schedules and stop rules) and selects the best round — and is
+/// pinned here on deterministic (sequential) planner configurations.
+#[test]
+fn hybrid_never_worse_than_pure_techniques_on_random_graphs() {
+    forall("hybrid ≤ min(pure-rc, pure-swap)", 6, |rng| {
+        let fwd_ops = rng.usize_in(4, 9);
+        let g = random_training_graph(
+            rng,
+            &RandomGraphCfg {
+                fwd_ops,
+                ..Default::default()
+            },
+        );
+        let frac = 0.5 + 0.15 * rng.usize_in(0, 3) as f64; // 0.5 ..= 0.95
+        let spec = BudgetSpec::Fraction(frac);
+        let h = roam_plan_hybrid(&g, spec, &quick_cfg(Technique::Hybrid));
+        let rc = roam_plan_hybrid(&g, spec, &quick_cfg(Technique::Recompute));
+        let sw = roam_plan_hybrid(&g, spec, &quick_cfg(Technique::Swap));
+        if h.total() > rc.total() {
+            return Err(format!(
+                "hybrid {} worse than pure recompute {}",
+                h.total(),
+                rc.total()
+            ));
+        }
+        if h.total() > sw.total() {
+            return Err(format!(
+                "hybrid {} worse than pure swap {}",
+                h.total(),
+                sw.total()
+            ));
+        }
+        // Whoever met the budget, hybrid met it too.
+        if (rc.met || sw.met) && !h.met {
+            return Err("a pure technique met the budget but hybrid did not".into());
+        }
+        let v = lint_plan(&h.graph, &h.plan);
+        if !v.is_empty() {
+            return Err(format!("hybrid plan failed planlint: {}", v.join("; ")));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hybrid_never_worse_on_transformer_and_mobile() {
+    for kind in [ModelKind::SyntheticTransformer, ModelKind::Mobilenet] {
+        let g = models::build(
+            kind,
+            &BuildCfg {
+                batch: 1,
+                depth: 2,
+                ..Default::default()
+            },
+        );
+        let spec = BudgetSpec::Fraction(0.7);
+        let h = roam_plan_hybrid(&g, spec, &quick_cfg(Technique::Hybrid));
+        let rc = roam_plan_hybrid(&g, spec, &quick_cfg(Technique::Recompute));
+        let sw = roam_plan_hybrid(&g, spec, &quick_cfg(Technique::Swap));
+        assert!(
+            h.total() <= rc.total(),
+            "{}: hybrid {} worse than pure recompute {}",
+            kind.name(),
+            h.total(),
+            rc.total()
+        );
+        assert!(
+            h.total() <= sw.total(),
+            "{}: hybrid {} worse than pure swap {}",
+            kind.name(),
+            h.total(),
+            sw.total()
+        );
+        assert_plan_ok(&h.graph, &h.plan);
+        assert!(validate(&h.graph).is_empty());
+    }
+}
+
+#[test]
+fn hybrid_budgeted_plans_respect_budget_and_baseline() {
+    forall("hybrid budgeted plan bounds", 6, |rng| {
+        let fwd_ops = rng.usize_in(4, 9);
+        let g = random_training_graph(
+            rng,
+            &RandomGraphCfg {
+                fwd_ops,
+                ..Default::default()
+            },
+        );
+        let frac = 0.5 + 0.1 * rng.usize_in(0, 6) as f64; // 0.5 ..= 1.1
+        let cfg = quick_cfg(Technique::Hybrid);
+        let r = roam_plan_hybrid(&g, BudgetSpec::Fraction(frac), &cfg);
+        if r.total() > r.baseline_total {
+            return Err(format!(
+                "budgeted {} worse than baseline {}",
+                r.total(),
+                r.baseline_total
+            ));
+        }
+        if r.met && r.total() > r.budget {
+            return Err(format!("met but {} > budget {}", r.total(), r.budget));
+        }
+        // Overhead accounting is consistent: counters only with evictions,
+        // and both kinds are always reported in the stats.
+        if r.evicted == 0 && (r.recompute_bytes > 0 || r.swap_moved_bytes > 0) {
+            return Err("overhead without evictions".into());
+        }
+        if r.evicted != r.recompute_evicted + r.swapped {
+            return Err("eviction counters inconsistent".into());
+        }
+        for key in [
+            "recompute_ops",
+            "recompute_secs",
+            "swap_tensors",
+            "swap_exposed_secs",
+            "transfer_aware_excess_bytes",
+            "overhead_secs",
+            "budget_met",
+        ] {
+            if !r.plan.stats.iter().any(|(k, _)| k == key) {
+                return Err(format!("missing stat {key}"));
+            }
+        }
+        let v = lint_plan(&r.graph, &r.plan);
+        if !v.is_empty() {
+            return Err(format!("plan failed planlint: {}", v.join("; ")));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hybrid_sweep_monotone_on_random_graphs() {
+    forall("hybrid tradeoff sweep monotone", 5, |rng| {
+        let fwd_ops = rng.usize_in(4, 9);
+        let g = random_training_graph(
+            rng,
+            &RandomGraphCfg {
+                fwd_ops,
+                ..Default::default()
+            },
+        );
+        let cfg = quick_cfg(Technique::Hybrid);
+        let fractions = [1.0, 0.8, 0.6, 0.45];
+        let s = hybrid_tradeoff_sweep(&g, &fractions, &cfg);
+        if s.points[0].total != s.baseline_total {
+            return Err("fraction 1.0 must anchor at the baseline".into());
+        }
+        for w in s.points.windows(2) {
+            if w[1].total > w[0].total {
+                return Err(format!(
+                    "peak increased as budget tightened: {} -> {}",
+                    w[0].total, w[1].total
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// CI-scale GPT-2 acceptance (coarse granularity + SGD, matching the
+/// recompute suite's convention): the hybrid driver meets a 0.6 budget
+/// and reports both overhead kinds.
+#[test]
+fn hybrid_gpt2_meets_60pct_budget() {
+    let g = models::build(
+        ModelKind::Gpt2Xl,
+        &BuildCfg {
+            batch: 1,
+            optim: Optim::Sgd,
+            fine_grained: false,
+            ..BuildCfg::default()
+        },
+    );
+    let cfg = HybridCfg {
+        technique: Technique::Hybrid,
+        roam: RoamCfg {
+            order_max_nodes: 10_000,
+            dsa_max_nodes: 10_000,
+            time_limit_secs: 600.0,
+            ..RoamCfg::default()
+        },
+        max_rounds: 6,
+        ..HybridCfg::default()
+    };
+    let r = roam_plan_hybrid(&g, BudgetSpec::Fraction(0.6), &cfg);
+    assert!(
+        r.met,
+        "gpt2 0.6 budget not met by hybrid: {} of {} baseline",
+        r.total(),
+        r.baseline_total
+    );
+    assert!(r.total() * 10 <= r.baseline_total * 6, "above 60% of baseline");
+    assert!(r.evicted > 0);
+    let stat = |k: &str| {
+        r.plan
+            .stats
+            .iter()
+            .find(|(n, _)| n == k)
+            .map(|&(_, v)| v)
+            .unwrap_or_else(|| panic!("missing stat {k}"))
+    };
+    assert_eq!(stat("budget_met"), 1.0);
+    assert!(stat("overhead_secs") >= 0.0);
+    assert!(
+        stat("recompute_ops") > 0.0 || stat("swap_tensors") > 0.0,
+        "met a sub-baseline budget without any eviction overhead"
+    );
+    assert_plan_ok(&r.graph, &r.plan);
+    assert!(validate(&r.graph).is_empty());
+}
+
+/// Full-fidelity acceptance run: GPT2-XL at FX granularity with Adam.
+/// Heavy — run with `cargo test -- --ignored`.
+#[test]
+#[ignore = "GPT2-XL at FX granularity is a >10k-op graph; run with --ignored"]
+fn hybrid_gpt2_full_fidelity() {
+    let g = models::build(ModelKind::Gpt2Xl, &BuildCfg::default());
+    let r = roam_plan_hybrid(&g, BudgetSpec::Fraction(0.6), &HybridCfg::default());
+    assert!(r.met, "gpt2-xl 0.6 budget not met: {}", r.total());
+    assert!(r.evicted > 0);
+}

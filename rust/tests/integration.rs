@@ -1,31 +1,15 @@
 //! Cross-module integration tests: full planning pipelines over real model
 //! graphs, the HLO round trip, and plan serialisation.
 
-use roam::graph::topo::is_topological;
-use roam::layout::sim::conflicts;
-use roam::layout::Layout;
 use roam::models::{self, BuildCfg, ModelKind, Optim};
 use roam::planner::model_baseline::{model_plan, ModelCfg, Streaming};
-use roam::planner::{heuristic::heuristic_plan, layout_items, pytorch, roam_plan, ExecutionPlan, RoamCfg};
+use roam::planner::{
+    assert_plan_ok, heuristic::heuristic_plan, pytorch, roam_plan, ExecutionPlan, RoamCfg,
+};
 
+/// All structural validity goes through the shared planlint oracle.
 fn check_plan(g: &roam::Graph, p: &roam::planner::ExecutionPlan) {
-    assert!(is_topological(g, &p.order), "{}: order invalid", p.planner);
-    assert!(
-        p.actual_peak >= p.theoretical_peak,
-        "{}: actual {} < theoretical {}",
-        p.planner,
-        p.actual_peak,
-        p.theoretical_peak
-    );
-    let items = layout_items(g, &p.schedule);
-    let layout = Layout {
-        offsets: p.offsets.clone(),
-    };
-    assert!(
-        conflicts(&items, &layout).is_empty(),
-        "{}: layout conflicts",
-        p.planner
-    );
+    assert_plan_ok(g, p);
 }
 
 #[test]

@@ -1,12 +1,11 @@
 //! Property-based invariants over random training graphs: every planner
-//! must emit structurally valid plans, and the dominance relations between
+//! must emit structurally valid plans (the shared planlint oracle,
+//! [`roam::planner::lint_plan`]), and the dominance relations between
 //! planners must hold.
 
 use roam::graph::random::{random_training_graph, RandomGraphCfg};
 use roam::graph::topo::is_topological;
-use roam::layout::sim::{conflicts, lower_bound};
-use roam::layout::Layout;
-use roam::planner::{heuristic::heuristic_plan, layout_items, pytorch, roam_plan, RoamCfg};
+use roam::planner::{heuristic::heuristic_plan, lint_plan, pytorch, roam_plan, RoamCfg};
 use roam::util::quick::forall;
 
 #[test]
@@ -24,19 +23,9 @@ fn every_planner_is_structurally_sound() {
             heuristic_plan(&g),
             roam_plan(&g, &RoamCfg { parallel: false, ..Default::default() }),
         ] {
-            if !is_topological(&g, &plan.order) {
-                return Err(format!("{}: bad order", plan.planner));
-            }
-            let items = layout_items(&g, &plan.schedule);
-            let layout = Layout { offsets: plan.offsets.clone() };
-            if !conflicts(&items, &layout).is_empty() {
-                return Err(format!("{}: layout conflict", plan.planner));
-            }
-            if plan.actual_peak < plan.theoretical_peak {
-                return Err(format!("{}: actual < theoretical", plan.planner));
-            }
-            if plan.actual_peak < lower_bound(&items) {
-                return Err(format!("{}: actual below LB", plan.planner));
+            let v = lint_plan(&g, &plan);
+            if !v.is_empty() {
+                return Err(format!("{}: {}", plan.planner, v.join("; ")));
             }
         }
         Ok(())

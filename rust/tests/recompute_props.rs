@@ -5,10 +5,8 @@
 use roam::graph::random::{random_training_graph, RandomGraphCfg};
 use roam::graph::topo::is_topological;
 use roam::graph::{validate::validate, Reachability};
-use roam::layout::sim::conflicts;
-use roam::layout::Layout;
 use roam::models::{self, BuildCfg, ModelKind, Optim};
-use roam::planner::{layout_items, RoamCfg};
+use roam::planner::{assert_plan_ok, lint_plan, RoamCfg};
 use roam::recompute::{
     candidates, is_evictable, rewrite, roam_plan_budgeted, tradeoff_sweep, BudgetSpec,
     RecomputeCfg, Strategy,
@@ -125,19 +123,11 @@ fn budgeted_plans_respect_budget_and_baseline() {
         if !r.met && r.rounds < cfg.max_rounds && !r.exhausted {
             return Err("gave up before exhausting candidates".into());
         }
-        // The plan must be executable on the graph it was made for.
-        if !is_topological(&r.graph, &r.plan.order) {
-            return Err("plan order not topological on augmented graph".into());
-        }
-        let items = layout_items(&r.graph, &r.plan.schedule);
-        let layout = Layout {
-            offsets: r.plan.offsets.clone(),
-        };
-        if !conflicts(&items, &layout).is_empty() {
-            return Err("budgeted layout has address conflicts".into());
-        }
-        if r.plan.actual_peak < r.plan.theoretical_peak {
-            return Err("actual < theoretical".into());
+        // The plan must be executable on the graph it was made for —
+        // the shared planlint oracle checks all structural invariants.
+        let v = lint_plan(&r.graph, &r.plan);
+        if !v.is_empty() {
+            return Err(format!("budgeted plan failed planlint: {}", v.join("; ")));
         }
         Ok(())
     });
@@ -256,17 +246,8 @@ fn budgeted_gpt2_meets_60pct_budget() {
     assert_eq!(stat("recompute_ops"), r.recompute_ops as f64);
     assert!(stat("recompute_extra_bytes") > 0.0);
     assert_eq!(stat("budget_met"), 1.0);
-    // And the plan is executable: topological on the augmented graph,
-    // conflict-free layout.
-    assert!(is_topological(&r.graph, &r.plan.order));
-    let items = layout_items(&r.graph, &r.plan.schedule);
-    assert!(conflicts(
-        &items,
-        &Layout {
-            offsets: r.plan.offsets.clone()
-        }
-    )
-    .is_empty());
+    // And the plan is executable on the augmented graph (shared oracle).
+    assert_plan_ok(&r.graph, &r.plan);
     assert!(validate(&r.graph).is_empty());
 }
 
