@@ -231,14 +231,9 @@ fn main() {
     }
     rep.finish();
 
-    // --- 4. repo-root trajectory file -------------------------------------
-    let out = Json::obj(vec![
-        ("bench", Json::Str("leaf_solver_perf".to_string())),
-        ("schema", Json::Str("planner-perf-v1".to_string())),
-        (
-            "generated_by",
-            Json::Str("cargo bench --bench leaf_solver_perf".to_string()),
-        ),
+    // --- 4. repo-root trajectory file (append, never clobber) -------------
+    let run = Json::obj(vec![
+        ("small", Json::Bool(small)),
         ("leaf_order_search", Json::Arr(order_rows)),
         ("dsa_search", Json::Arr(dsa_rows)),
         ("planner_wall_clock", Json::Arr(planner_rows)),
@@ -247,6 +242,12 @@ fn main() {
         .parent()
         .expect("crate dir has a parent")
         .join("BENCH_planner.json");
-    std::fs::write(&path, format!("{}\n", out.pretty())).expect("write BENCH_planner.json");
-    println!("--- planner trajectory → {}", path.display());
+    roam::benchkit::append_trajectory(
+        &path,
+        "leaf_solver_perf",
+        "planner-perf-v2",
+        "cargo bench --bench leaf_solver_perf",
+        run,
+    );
+    println!("--- planner trajectory appended → {}", path.display());
 }

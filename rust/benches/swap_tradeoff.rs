@@ -110,20 +110,23 @@ fn main() {
     }
     rep.finish();
 
-    // Repo-root trajectory file, sibling of BENCH_planner.json.
-    let out = Json::obj(vec![
-        ("bench", Json::Str("swap_tradeoff".to_string())),
-        ("schema", Json::Str("swap-tradeoff-v1".to_string())),
-        (
-            "generated_by",
-            Json::Str("cargo bench --bench swap_tradeoff".to_string()),
-        ),
+    // Repo-root trajectory file, sibling of BENCH_planner.json
+    // (appended, never clobbered — the committed placeholder is dropped).
+    let run = Json::obj(vec![
+        ("models", Json::Str(model_names.clone())),
+        ("coarse", Json::Bool(coarse)),
         ("points", Json::Arr(traj_rows)),
     ]);
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()
         .expect("crate dir has a parent")
         .join("BENCH_swap.json");
-    std::fs::write(&path, format!("{}\n", out.pretty())).expect("write BENCH_swap.json");
-    println!("--- swap tradeoff trajectory → {}", path.display());
+    roam::benchkit::append_trajectory(
+        &path,
+        "swap_tradeoff",
+        "swap-tradeoff-v2",
+        "cargo bench --bench swap_tradeoff",
+        run,
+    );
+    println!("--- swap tradeoff trajectory appended → {}", path.display());
 }

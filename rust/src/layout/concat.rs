@@ -108,9 +108,13 @@ pub fn repair_conflicts(all_items: &[Item], mut offsets: HashMap<usize, u64>) ->
         }
     }
 
-    let layout = Layout {
-        offsets: offsets.into_iter().collect(),
-    };
+    // Sort by item id: HashMap iteration order is nondeterministic per
+    // instance, and downstream consumers (plan JSON dumps, the serve
+    // layer's byte-identical cached artifacts) rely on a planner whose
+    // output is bitwise reproducible run-to-run.
+    let mut out: Vec<(usize, u64)> = offsets.into_iter().collect();
+    out.sort_unstable();
+    let layout = Layout { offsets: out };
     let arena = layout.arena_size(all_items);
     Concatenated {
         layout,

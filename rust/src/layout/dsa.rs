@@ -121,6 +121,22 @@ pub fn min_arena_layout(items: &[Item], cfg: &DsaCfg) -> DsaResult {
 /// must be avoided (their extents do **not** count toward the minimised
 /// arena — the planner accounts for activation stacks separately).
 pub fn min_arena_layout_fixed(items: &[Item], fixed: &[Placed], cfg: &DsaCfg) -> DsaResult {
+    min_arena_layout_seeded(items, fixed, cfg, None)
+}
+
+/// [`min_arena_layout_fixed`] with an optional **warm-start incumbent**:
+/// a layout for (a rescaled variant of) the same items, adopted as the
+/// initial search bound when it covers every item, conflicts with
+/// nothing (items or fixed obstacles) and beats both greedy incumbents.
+/// The planner's warm-started re-planning path ([`crate::serve`]) feeds
+/// this with a repack of the cached layout; invalid or non-improving
+/// seeds are silently ignored.
+pub fn min_arena_layout_seeded(
+    items: &[Item],
+    fixed: &[Placed],
+    cfg: &DsaCfg,
+    seed: Option<&Layout>,
+) -> DsaResult {
     let lb = lower_bound(items);
     // Incumbents from the two greedy heuristics (fixed-aware).
     let l1 = super::llfb::llfb_with(items, fixed);
@@ -128,6 +144,14 @@ pub fn min_arena_layout_fixed(items: &[Item], fixed: &[Placed], cfg: &DsaCfg) ->
     let l2 = greedy_by_size_with(items, fixed);
     let a2 = l2.arena_size(items);
     let (mut best_layout, mut best_arena) = if a1 <= a2 { (l1, a1) } else { (l2, a2) };
+    if let Some(s) = seed {
+        if let Some((arena, restricted)) = seed_incumbent(items, fixed, s) {
+            if arena < best_arena {
+                best_arena = arena;
+                best_layout = restricted;
+            }
+        }
+    }
     let mut nodes = 0u64;
 
     let mut cut_short = false;
@@ -167,6 +191,45 @@ pub fn min_arena_layout_fixed(items: &[Item], fixed: &[Placed], cfg: &DsaCfg) ->
         nodes_explored: nodes,
         cut_short,
     }
+}
+
+/// Validate a seed layout against `items` + `fixed`: every item placed,
+/// no address overlap among lifetime-overlapping items or against the
+/// fixed obstacles. Returns the seed's arena over `items` and the layout
+/// restricted to exactly those items, or `None` when invalid. O(n²) —
+/// seeds arrive per planner window, where n is small.
+fn seed_incumbent(items: &[Item], fixed: &[Placed], seed: &Layout) -> Option<(u64, Layout)> {
+    let by_id: std::collections::HashMap<usize, u64> = seed.offsets.iter().copied().collect();
+    let mut placed: Vec<Placed> = Vec::with_capacity(items.len());
+    for it in items {
+        let off = *by_id.get(&it.id)?;
+        placed.push(Placed {
+            item: *it,
+            offset: off,
+        });
+    }
+    let disjoint = |a: &Placed, b: &Placed| {
+        !a.item.life.overlaps(&b.item.life)
+            || a.offset + a.item.size <= b.offset
+            || b.offset + b.item.size <= a.offset
+    };
+    for (i, a) in placed.iter().enumerate() {
+        for b in &placed[i + 1..] {
+            if !disjoint(a, b) {
+                return None;
+            }
+        }
+        for f in fixed {
+            if !disjoint(a, f) {
+                return None;
+            }
+        }
+    }
+    let arena = placed.iter().map(|p| p.offset + p.item.size).max().unwrap_or(0);
+    let layout = Layout {
+        offsets: placed.iter().map(|p| (p.item.id, p.offset)).collect(),
+    };
+    Some((arena, layout))
 }
 
 /// Incumbent shared by the placement-order searches: a lock-free pruning
@@ -458,6 +521,40 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn seed_incumbent_adopted_and_garbage_ignored() {
+        // The interleaved case where the greedies fragment: a cached
+        // optimal layout replayed as seed reaches the lower bound even
+        // with a search budget too small to rediscover it.
+        let items = [
+            it(0, 0, 6, 40),
+            it(1, 0, 3, 60),
+            it(2, 2, 8, 60),
+            it(3, 5, 9, 60),
+        ];
+        let optimal = min_arena_layout(&items, &DsaCfg::default());
+        assert_eq!(optimal.arena, lower_bound(&items));
+        let starved = DsaCfg {
+            max_nodes: 1,
+            ..Default::default()
+        };
+        let warm = min_arena_layout_seeded(&items, &[], &starved, Some(&optimal.layout));
+        assert_eq!(warm.arena, optimal.arena, "seed incumbent not adopted");
+        assert!(conflicts(&items, &warm.layout).is_empty());
+        // A conflicting seed (everything at 0) is ignored, never trusted.
+        let junk = Layout {
+            offsets: items.iter().map(|i| (i.id, 0)).collect(),
+        };
+        let r = min_arena_layout_seeded(&items, &[], &starved, Some(&junk));
+        assert!(conflicts(&items, &r.layout).is_empty());
+        // An incomplete seed (missing items) is ignored too.
+        let partial = Layout {
+            offsets: vec![(0, 0)],
+        };
+        let r = min_arena_layout_seeded(&items, &[], &starved, Some(&partial));
+        assert!(conflicts(&items, &r.layout).is_empty());
     }
 
     #[test]

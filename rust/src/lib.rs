@@ -33,6 +33,13 @@
 //!   on every augmented graph — the paper's "reduce overheads from
 //!   high-level techniques" claim, made end-to-end.
 //!
+//! Around the planner sits a **serving layer** ([`serve`]): a
+//! content-addressed plan cache keyed by an isomorphism-invariant graph
+//! fingerprint, a batched async-style planning service with single-flight
+//! dedupe and per-request deadlines, and warm-started re-planning that
+//! replays cached plans as search incumbents (`roam serve` /
+//! `roam batch` on the CLI).
+//!
 //! The crate additionally ships the substrates a reproduction needs:
 //! model-graph builders for the paper's eight evaluation models
 //! ([`models`]), the PyTorch / LESCEA / LLFB / MODeL baselines, and an HLO
@@ -77,6 +84,7 @@ pub mod recompute;
 pub mod runtime;
 pub mod sched;
 pub mod segments;
+pub mod serve;
 pub mod swap;
 pub mod util;
 

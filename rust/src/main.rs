@@ -9,6 +9,9 @@
 //! roam plan-hlo  --hlo artifacts/train_step.hlo.txt [--out plan.json]
 //! roam train     [--artifacts artifacts] [--steps 200] [--log-every 10] [--seed 0]
 //! roam compare   --model vit --batch 1 [--budget 0.6]   # all planners side by side
+//! roam serve     [--cache-capacity 256] [--cache-dir DIR] [--workers N]
+//!                [--deadline-secs F] [--no-warm]   # JSONL batches on stdin
+//! roam batch DIR [same flags]                     # serve request files from a dir
 //! roam export-dot --model alexnet                 # graphviz to stdout
 //! roam info      --model gpt2-xl                  # graph statistics
 //! ```
@@ -34,6 +37,8 @@ fn main() {
         "plan-hlo" => cmd_plan_hlo(&args),
         "train" => cmd_train(&args),
         "compare" => cmd_compare(&args),
+        "serve" => cmd_serve(&args),
+        "batch" => cmd_batch(&args),
         "export-dot" => cmd_export_dot(&args),
         "info" => cmd_info(&args),
         "help" | "--help" => {
@@ -65,6 +70,15 @@ fn print_help() {
          \x20 compare     run all planners on one model and tabulate\n\
          \x20             (--budget F adds a budgeted row; --technique picks\n\
          \x20              recompute|swap|hybrid for it)\n\
+         \x20 serve       planning service: JSONL requests on stdin, one\n\
+         \x20             response line each; a blank line flushes a batch\n\
+         \x20             (single-flight dedupe + cache within/across batches).\n\
+         \x20             Request: {{\"model\":\"bert\",\"batch\":32,\"budget\":0.6,\n\
+         \x20             \"technique\":\"hybrid\",\"deadline_secs\":5}}\n\
+         \x20             Flags: --cache-capacity N --cache-dir DIR --workers N\n\
+         \x20             --deadline-secs F --no-warm\n\
+         \x20 batch       serve every *.json/*.jsonl request file in a\n\
+         \x20             directory as one batch (same flags as serve)\n\
          \x20 export-dot  graphviz dump of a model's training graph\n\
          \x20 info        graph statistics (ops, tensors, bytes, boundaries)"
     );
@@ -358,6 +372,133 @@ fn cmd_compare(args: &Args) -> Result<()> {
             reduction_pct(base, p.actual_peak),
         );
     }
+    Ok(())
+}
+
+/// Build the serving stack from the shared CLI flags.
+fn make_service(args: &Args) -> roam::serve::PlanService {
+    use roam::serve::{CacheCfg, PlanCache, PlanService, ServeCfg};
+    let cache = PlanCache::new(CacheCfg {
+        capacity: args.usize("cache-capacity", 256),
+        shards: args.usize("cache-shards", 8),
+        dir: args.opt("cache-dir").map(std::path::PathBuf::from),
+    });
+    PlanService::new(cache, ServeCfg {
+        roam: roam_cfg(args),
+        workers: args.usize("workers", 0),
+        warm_start: !args.bool_flag("no-warm"),
+        default_deadline_secs: args.f64("deadline-secs", 0.0),
+    })
+}
+
+/// Serve one batch of already-parsed requests, printing a JSONL response
+/// per request (ids offset by `base_id`).
+fn serve_and_print(
+    svc: &roam::serve::PlanService,
+    reqs: Vec<roam::serve::PlanRequest>,
+    base_id: usize,
+) {
+    if reqs.is_empty() {
+        return;
+    }
+    let responses = svc.serve_batch(&reqs);
+    for (i, r) in responses.iter().enumerate() {
+        println!("{}", roam::serve::response_to_json(base_id + i, r));
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use roam::util::json::Json;
+    use std::io::BufRead as _;
+    let svc = make_service(args);
+    let stdin = std::io::stdin();
+    let mut batch: Vec<roam::serve::PlanRequest> = Vec::new();
+    let mut served = 0usize;
+    let mut rejected = 0usize;
+    for line in stdin.lock().lines() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            // Blank line = batch boundary.
+            let reqs = std::mem::take(&mut batch);
+            let n = reqs.len();
+            serve_and_print(&svc, reqs, served);
+            served += n;
+            continue;
+        }
+        // A malformed line must not kill the stream (or the batch
+        // buffered so far): answer it with an error object and move on.
+        let parsed = Json::parse(trimmed)
+            .map_err(|e| e.to_string())
+            .and_then(|j| roam::serve::request_from_json(&j));
+        match parsed {
+            Ok(req) => batch.push(req),
+            Err(e) => {
+                rejected += 1;
+                println!(
+                    "{}",
+                    Json::obj(vec![("error", Json::Str(format!("bad request line: {e}")))])
+                );
+            }
+        }
+    }
+    let n = batch.len();
+    serve_and_print(&svc, std::mem::take(&mut batch), served);
+    served += n;
+    println!("{}", roam::serve::summary_json(&svc));
+    eprintln!("served {served} request(s), rejected {rejected}");
+    Ok(())
+}
+
+fn cmd_batch(args: &Args) -> Result<()> {
+    let dir = args
+        .positional(1)
+        .map(|s| s.to_string())
+        .or_else(|| args.opt("dir").map(|s| s.to_string()))
+        // `roam batch --no-warm DIR`: the greedy parser binds DIR as the
+        // flag's value; make_service still disables warm-start, and the
+        // swallowed token is recovered here as the directory.
+        .or_else(|| args.opt("no-warm").map(|s| s.to_string()))
+        .ok_or_else(|| roam::err!("usage: roam batch DIR (or --dir DIR)"))?;
+    let mut paths: Vec<std::path::PathBuf> = std::fs::read_dir(&dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            matches!(
+                p.extension().and_then(|x| x.to_str()),
+                Some("json") | Some("jsonl")
+            )
+        })
+        .collect();
+    paths.sort();
+    let mut reqs = Vec::new();
+    for p in &paths {
+        let text = std::fs::read_to_string(p)?;
+        // A file is either one JSON document (object, or array of
+        // request objects — pretty-printing welcome) or JSONL.
+        let docs: Vec<roam::util::json::Json> = match roam::util::json::Json::parse(text.trim()) {
+            Ok(roam::util::json::Json::Arr(v)) => v,
+            Ok(j) => vec![j],
+            Err(_) => text
+                .lines()
+                .filter(|l| !l.trim().is_empty())
+                .map(|l| {
+                    roam::util::json::Json::parse(l)
+                        .map_err(|e| roam::err!("{}: bad request: {e}", p.display()))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+        for j in &docs {
+            reqs.push(roam::serve::request_from_json(j).map_err(|e| roam::err!("{e}"))?);
+        }
+    }
+    if reqs.is_empty() {
+        roam::bail!("no *.json/*.jsonl request files found in {dir}");
+    }
+    let svc = make_service(args);
+    let n = reqs.len();
+    serve_and_print(&svc, reqs, 0);
+    println!("{}", roam::serve::summary_json(&svc));
+    eprintln!("served {n} request(s) from {} file(s)", paths.len());
     Ok(())
 }
 

@@ -28,7 +28,7 @@ pub mod model_baseline;
 pub mod roam;
 
 pub use lint::{assert_plan_ok, lint_plan};
-pub use roam::{roam_plan, RoamCfg};
+pub use roam::{roam_plan, roam_plan_seeded, RoamCfg, WarmSeed};
 
 use crate::graph::{Graph, OpId, TensorId};
 use crate::layout::sim::conflicts;
@@ -64,6 +64,14 @@ impl ExecutionPlan {
     /// Fragmentation percentage (§V-B definition).
     pub fn frag_pct(&self) -> f64 {
         frag_pct(self.actual_peak, self.theoretical_peak)
+    }
+
+    /// Named stat lookup (`None` when the planner didn't record it).
+    pub fn stat(&self, name: &str) -> Option<f64> {
+        self.stats
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|&(_, v)| v)
     }
 
     /// Total device memory the plan needs.

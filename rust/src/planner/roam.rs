@@ -23,10 +23,12 @@
 //! Leaves solve concurrently, mirroring the paper's "optimization for leaf
 //! nodes takes place concurrently". Both fan-outs — ordering leaves (one
 //! task per segment chunk) and layout windows (one task per window) — run
-//! on the shared work-stealing pool ([`crate::util::pool::Pool`]) with the
-//! planner's deadline attached: once the time budget expires, remaining
-//! leaves take a cheap fallback (the chunk's ASAP order; an LLFB greedy
-//! layout) instead of entering the exact solvers, so a blown budget
+//! on **one shared** work-stealing pool ([`crate::util::pool::Pool`])
+//! constructed once per `roam_plan` call with the planner's deadline
+//! attached (the stats record the pool id each fan-out observed, so tests
+//! can assert the wiring stays shared): once the time budget expires,
+//! remaining leaves take a cheap fallback (the chunk's ASAP order; an LLFB
+//! greedy layout) instead of entering the exact solvers, so a blown budget
 //! degrades to heuristic quality rather than stalling. Work stealing
 //! matters because leaf costs are heavily skewed (one 64-op leaf can cost
 //! three orders of magnitude more than a 3-op one); the previous
@@ -34,6 +36,20 @@
 //! stragglers. The per-window DSA calls run their placement orders
 //! sequentially (`DsaCfg::workers = 1`) since the window fan-out above
 //! them already saturates the machine.
+//!
+//! ## Warm-started re-planning
+//!
+//! [`roam_plan_seeded`] accepts a [`WarmSeed`] — the order and layout of a
+//! previously planned (possibly rescaled) variant of the same graph, as
+//! the plan-cache layer ([`crate::serve`]) recovers them. The seed order
+//! is replayed as the initial incumbent of every leaf branch-and-bound
+//! (its restriction to a chunk is still topological), the cached offsets
+//! repack each window into a DSA incumbent, and the seed additionally
+//! competes as a complete plan in the final dominance pass — so a warm
+//! re-plan prunes from a real bound instead of cold-starting, and a
+//! re-plan of an *unchanged* graph can never return a worse plan than the
+//! one it was seeded with. Invalid seeds (wrong op count, non-topological,
+//! stale ids) are detected up front and ignored.
 //!
 //! The leaf solvers themselves are incremental-state searches
 //! ([`crate::sched::bnb`], [`crate::layout::dsa`]); their nodes/sec and
@@ -45,10 +61,10 @@
 use super::{evaluate, ExecutionPlan};
 use crate::graph::{Graph, OpId, Reachability, TensorClass};
 use crate::layout::concat::repair_conflicts;
-use crate::layout::dsa::{min_arena_layout_fixed, DsaCfg};
-use crate::layout::fit::Placed;
-use crate::layout::Item;
-use crate::sched::bnb::{min_peak_order, BnbCfg};
+use crate::layout::dsa::{min_arena_layout_seeded, DsaCfg};
+use crate::layout::fit::{lowest_fit, Placed};
+use crate::layout::{Item, Layout};
+use crate::sched::bnb::{min_peak_order_seeded, BnbCfg};
 use crate::sched::weight_update::{apply_control_edges, assign_weight_updates, WuCfg};
 use crate::sched::Schedule;
 use crate::segments::tree::{construct, SubgraphTree, TreeCfg};
@@ -56,7 +72,7 @@ use crate::util::pool::Pool;
 use crate::util::timer::Deadline;
 use crate::util::Stopwatch;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 /// ROAM configuration (paper defaults).
 #[derive(Clone, Debug)]
@@ -94,10 +110,49 @@ impl Default for RoamCfg {
     }
 }
 
+/// A warm-start seed recovered from a previously planned (possibly
+/// rescaled) variant of the same graph — see the module docs. Both parts
+/// are expressed in **this** graph's op/tensor ids; the plan-cache layer
+/// translates cached canonical coordinates before constructing one.
+#[derive(Clone, Debug, Default)]
+pub struct WarmSeed {
+    /// Complete operator order to replay as the leaf solvers' initial
+    /// incumbent. Ignored (with the offsets) unless it is a topological
+    /// permutation of the graph's ops.
+    pub order: Vec<OpId>,
+    /// Cached byte offset per tensor id, used as a packing priority for
+    /// the per-window DSA incumbents (sizes may have changed, so offsets
+    /// are re-derived, not trusted). Entries for unknown tensors are
+    /// ignored.
+    pub offsets: Vec<(usize, u64)>,
+}
+
 /// Run the full ROAM pipeline on `g`.
 pub fn roam_plan(g: &Graph, cfg: &RoamCfg) -> ExecutionPlan {
+    roam_plan_seeded(g, cfg, None)
+}
+
+/// [`roam_plan`] warm-started from a cached plan (see the module docs and
+/// [`WarmSeed`]). With `seed = None` this *is* `roam_plan`.
+pub fn roam_plan_seeded(g: &Graph, cfg: &RoamCfg, seed: Option<&WarmSeed>) -> ExecutionPlan {
     let sw = Stopwatch::start();
     let deadline = Deadline::after_secs(cfg.time_limit_secs);
+
+    // Validate the seed once against the original graph; an invalid order
+    // invalidates the whole seed (its offsets describe another graph).
+    let seed_order: Option<&[OpId]> = seed
+        .map(|s| s.order.as_slice())
+        .filter(|o| o.len() == g.n_ops() && crate::graph::topo::is_topological(g, o));
+    let seed_offsets: Option<HashMap<usize, u64>> = match (seed, seed_order) {
+        (Some(s), Some(_)) => Some(
+            s.offsets
+                .iter()
+                .copied()
+                .filter(|&(t, _)| t < g.n_tensors())
+                .collect(),
+        ),
+        _ => None,
+    };
 
     // 1–2: reachability, candidate boundaries (update branches masked out,
     // §IV-A), weight-update assignment.
@@ -129,8 +184,15 @@ pub fn roam_plan(g: &Graph, cfg: &RoamCfg) -> ExecutionPlan {
         node_limit: cfg.node_limit,
     });
 
+    // One shared pool serves both leaf fan-outs (ordering + layout) —
+    // the ROADMAP's named lever; the per-fan-out `Pool::new` is gone and
+    // the stats below record the id each fan-out observed.
+    let pool = Pool::new(if cfg.parallel { Pool::default_workers() } else { 1 })
+        .with_deadline(deadline);
+
     // 4: solve leaf ordering tasks (in parallel).
-    let (order, order_leaf_fallbacks) = solve_ordering(&g2, &tree, cfg, deadline);
+    let (order, order_leaf_fallbacks, order_nodes, order_pool_id) =
+        solve_ordering(&g2, &tree, cfg, &pool, deadline, seed_order);
     debug_assert!(
         crate::graph::topo::is_topological(&g2, &order),
         "roam order must be topological"
@@ -142,14 +204,19 @@ pub fn roam_plan(g: &Graph, cfg: &RoamCfg) -> ExecutionPlan {
     // incumbent, so never return worse than it.
     let mut order_fallback = 0.0f64;
     {
-        // Candidates: LESCEA and the raw program order — evaluated on the
-        // ORIGINAL graph (the WU control edges in g2 are constraints we
-        // imposed, not obligations a competitor order has to respect).
-        let mut best = crate::sched::sim::theoretical_peak(g, &sched);
-        for cand in [
+        // Candidates: LESCEA, the raw program order, and the warm seed —
+        // evaluated on the ORIGINAL graph (the WU control edges in g2 are
+        // constraints we imposed, not obligations a competitor order has
+        // to respect).
+        let mut cands = vec![
             crate::sched::lescea::lescea_order(g),
             crate::graph::topo::program_order(g),
-        ] {
+        ];
+        if let Some(so) = seed_order {
+            cands.push(so.to_vec());
+        }
+        let mut best = crate::sched::sim::theoretical_peak(g, &sched);
+        for cand in cands {
             let cand_sched = Schedule::from_order(&cand);
             let tp = crate::sched::sim::theoretical_peak(g, &cand_sched);
             if tp < best {
@@ -164,7 +231,7 @@ pub fn roam_plan(g: &Graph, cfg: &RoamCfg) -> ExecutionPlan {
     // fallback fired, the chosen order ignores g2's control edges, so
     // lifetimes must come from the original graph.
     let lg: &Graph = if order_fallback > 0.0 { g } else { &g2 };
-    let mut lay = solve_layout(lg, &tree, &sched, cfg, deadline);
+    let mut lay = solve_layout(lg, &tree, &sched, cfg, &pool, deadline, seed_offsets.as_ref());
     let mut layout_fallback = 0.0f64;
     {
         let items = super::layout_items(lg, &sched);
@@ -179,12 +246,7 @@ pub fn roam_plan(g: &Graph, cfg: &RoamCfg) -> ExecutionPlan {
             let arena = cand.arena_size(&items);
             if arena < best {
                 best = arena;
-                lay = LayoutOut {
-                    layout: cand,
-                    reassigned: lay.reassigned,
-                    window_fallbacks: lay.window_fallbacks,
-                    dsa_cut_short: lay.dsa_cut_short,
-                };
+                lay.layout = cand;
                 layout_fallback = 1.0;
             }
         }
@@ -200,10 +262,13 @@ pub fn roam_plan(g: &Graph, cfg: &RoamCfg) -> ExecutionPlan {
             lay.layout.arena_size(&cur_items),
             crate::sched::sim::theoretical_peak(g, &sched),
         );
-        let candidates = [
+        let mut candidates = vec![
             crate::graph::topo::program_order(g),
             crate::sched::lescea::lescea_order(g),
         ];
+        if let Some(so) = seed_order {
+            candidates.push(so.to_vec());
+        }
         for cand in candidates {
             let cand_sched = Schedule::from_order(&cand);
             let items = super::layout_items(g, &cand_sched);
@@ -218,13 +283,32 @@ pub fn roam_plan(g: &Graph, cfg: &RoamCfg) -> ExecutionPlan {
                 if key < cur_key {
                     cur_key = key;
                     sched = cand_sched.clone();
-                    lay = LayoutOut {
-                        layout: cand_layout,
-                        reassigned: lay.reassigned,
-                        window_fallbacks: lay.window_fallbacks,
-                        dsa_cut_short: lay.dsa_cut_short,
-                    };
+                    lay.layout = cand_layout;
                     layout_fallback = 1.0;
+                }
+            }
+        }
+        // Exact warm-seed replay: when the cached offsets are still valid
+        // for this graph (same sizes — a re-plan of an unchanged graph),
+        // the seed competes as a complete plan, so the warm run can never
+        // return a worse plan than the one it was seeded with.
+        if let (Some(so), Some(prio)) = (seed_order, seed_offsets.as_ref()) {
+            let cand_sched = Schedule::from_order(so);
+            let items = super::layout_items(g, &cand_sched);
+            if items.iter().all(|it| prio.contains_key(&it.id)) {
+                let cand_layout = Layout {
+                    offsets: items.iter().map(|it| (it.id, prio[&it.id])).collect(),
+                };
+                if crate::layout::sim::conflicts(&items, &cand_layout).is_empty() {
+                    let key = (
+                        cand_layout.arena_size(&items),
+                        crate::sched::sim::theoretical_peak(g, &cand_sched),
+                    );
+                    if key < cur_key {
+                        sched = cand_sched;
+                        lay.layout = cand_layout;
+                        layout_fallback = 1.0;
+                    }
                 }
             }
         }
@@ -258,6 +342,20 @@ pub fn roam_plan(g: &Graph, cfg: &RoamCfg) -> ExecutionPlan {
             lay.window_fallbacks as f64,
         ),
         ("dsa_windows_cut_short".to_string(), lay.dsa_cut_short as f64),
+        // Total branch-and-bound nodes expanded across all ordering
+        // leaves. Warm-started runs prune from the seed's bound, so on a
+        // re-planned graph this drops below the cold-start count — the
+        // serve bench (`BENCH_serve.json`) tracks exactly this number.
+        ("order_nodes_explored".to_string(), order_nodes as f64),
+        // Was a (valid) warm seed applied?
+        (
+            "warm_seeded".to_string(),
+            if seed_order.is_some() { 1.0 } else { 0.0 },
+        ),
+        // Pool identity observed by each fan-out: equal values pin the
+        // one-shared-pool-per-call invariant (ROADMAP lever).
+        ("order_pool_id".to_string(), order_pool_id as f64),
+        ("layout_pool_id".to_string(), lay.pool_id as f64),
     ];
     evaluate(g, name, sched, &lay.layout, sw.secs(), stats)
 }
@@ -358,18 +456,24 @@ struct LayoutOut {
     window_fallbacks: usize,
     /// Windows whose DSA search was cut short by node budget or deadline.
     dsa_cut_short: usize,
+    /// Identity of the pool this fan-out ran on (see the stats).
+    pool_id: u64,
 }
 
 /// Solve all ordering tasks and assemble the global order per eq. (3).
-/// Returns the order and the number of leaf tasks that took the
-/// deadline fallback (ASAP chunk order) instead of the exact solver.
+/// Returns the order, the number of leaf tasks that took the deadline
+/// fallback (ASAP chunk order) instead of the exact solver, the total
+/// branch-and-bound nodes expanded, and the id of the pool used.
 fn solve_ordering(
     g2: &Graph,
     tree: &SubgraphTree,
     cfg: &RoamCfg,
+    pool: &Pool,
     deadline: Deadline,
-) -> (Vec<OpId>, usize) {
+    seed_order: Option<&[OpId]>,
+) -> (Vec<OpId>, usize, u64, u64) {
     let n_tasks = tree.order_tasks.len();
+    let nodes = AtomicU64::new(0);
 
     let solve_one = |i: usize| -> Vec<OpId> {
         let task_ops = &tree.order_tasks[i].ops;
@@ -377,21 +481,33 @@ fn solve_ordering(
             return task_ops.clone();
         }
         let (sub, map) = extract_subgraph(g2, task_ops);
-        let r = min_peak_order(
+        // Project the global warm seed onto this leaf: the restriction of
+        // a topological order to a chunk, expressed in local ids. The
+        // seeded solver re-validates it against the subgraph (g2's extra
+        // control edges can constrain a chunk more than g did).
+        let local_seed: Option<Vec<OpId>> = seed_order.map(|so| {
+            let pos: HashMap<OpId, usize> = task_ops
+                .iter()
+                .enumerate()
+                .map(|(l, &v)| (v, l))
+                .collect();
+            so.iter().filter_map(|v| pos.get(v).copied()).collect()
+        });
+        let r = min_peak_order_seeded(
             &sub,
             &BnbCfg {
                 deadline,
                 max_nodes: cfg.order_max_nodes,
                 max_ops: cfg.node_limit.max(1),
             },
+            local_seed.as_deref(),
         );
+        nodes.fetch_add(r.nodes_explored, Ordering::Relaxed);
         r.order.into_iter().map(|l| map[l]).collect()
     };
 
-    let workers = if cfg.parallel { Pool::default_workers() } else { 1 };
     let fallbacks = AtomicUsize::new(0);
-    let local_orders: Vec<Vec<OpId>> = Pool::new(workers)
-        .with_deadline(deadline)
+    let local_orders: Vec<Vec<OpId>> = pool
         // Past the deadline, a leaf keeps its ASAP chunk order (valid but
         // unoptimised) instead of paying the exact solver's incumbents.
         .run_or(n_tasks, solve_one, |i| {
@@ -416,7 +532,36 @@ fn solve_ordering(
             order.push(close);
         }
     }
-    (order, fallbacks.into_inner())
+    (order, fallbacks.into_inner(), nodes.into_inner(), pool.id())
+}
+
+/// Warm incumbent for one window: repack `rest` in ascending cached-offset
+/// order (items the cache doesn't know go last), lowest-fit around the
+/// fixed stacks. Valid by construction — it transfers the cached packing's
+/// stacking decisions to a window whose tensor sizes may have changed —
+/// and the DSA search adopts it only when it beats the greedy incumbents.
+fn seeded_window_layout(
+    rest: &[Item],
+    fixed: &[Placed],
+    prio: &HashMap<usize, u64>,
+) -> Option<Layout> {
+    if !rest.iter().any(|it| prio.contains_key(&it.id)) {
+        return None;
+    }
+    let mut order: Vec<usize> = (0..rest.len()).collect();
+    order.sort_by_key(|&i| (prio.get(&rest[i].id).copied().unwrap_or(u64::MAX), rest[i].id));
+    let mut placed: Vec<Placed> = fixed.to_vec();
+    let mut offsets = Vec::with_capacity(rest.len());
+    for i in order {
+        let it = rest[i];
+        let off = lowest_fit(&it, &placed, 0);
+        placed.push(Placed {
+            item: it,
+            offset: off,
+        });
+        offsets.push((it.id, off));
+    }
+    Some(Layout { offsets })
 }
 
 /// Solve the layout per §IV-B: window assignment, spanning stacks,
@@ -426,7 +571,9 @@ fn solve_layout(
     tree: &SubgraphTree,
     sched: &Schedule,
     cfg: &RoamCfg,
+    pool: &Pool,
     deadline: Deadline,
+    seed_prio: Option<&HashMap<usize, u64>>,
 ) -> LayoutOut {
     let items = super::layout_items(g2, sched);
     if items.is_empty() {
@@ -435,6 +582,7 @@ fn solve_layout(
             reassigned: 0,
             window_fallbacks: 0,
             dsa_cut_short: 0,
+            pool_id: pool.id(),
         };
     }
     let horizon = sched.horizon();
@@ -531,16 +679,17 @@ fn solve_layout(
         if rest[k].is_empty() {
             return Vec::new();
         }
-        let r = min_arena_layout_fixed(&rest[k], &fixed, &dsa_cfg);
+        // Warm incumbent from the cached layout's packing order, when the
+        // caller supplied one (see `seeded_window_layout`).
+        let seeded = seed_prio.and_then(|prio| seeded_window_layout(&rest[k], &fixed, prio));
+        let r = min_arena_layout_seeded(&rest[k], &fixed, &dsa_cfg, seeded.as_ref());
         if r.cut_short {
             cut_short.fetch_add(1, Ordering::Relaxed);
         }
         r.layout.offsets
     };
-    let workers = if cfg.parallel { Pool::default_workers() } else { 1 };
     let window_fallbacks = AtomicUsize::new(0);
-    let win_offsets: Vec<Vec<(usize, u64)>> = Pool::new(workers)
-        .with_deadline(deadline)
+    let win_offsets: Vec<Vec<(usize, u64)>> = pool
         // Past the deadline, windows fall back to the LLFB greedy around
         // the fixed stacks instead of entering the search.
         .run_or(n_win, solve_window, |k| {
@@ -563,6 +712,7 @@ fn solve_layout(
         reassigned: rep.reassigned,
         window_fallbacks: window_fallbacks.into_inner(),
         dsa_cut_short: cut_short.into_inner(),
+        pool_id: pool.id(),
     }
 }
 
@@ -654,6 +804,59 @@ mod tests {
             });
             assert!(crate::graph::topo::is_topological(&g, &r.order));
         }
+    }
+
+    #[test]
+    fn both_fanouts_observe_the_same_pool() {
+        let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
+        let r = roam_plan(&g, &RoamCfg::default());
+        let stat = |k: &str| r.stat(k).unwrap_or_else(|| panic!("missing stat {k}"));
+        assert_eq!(
+            stat("order_pool_id"),
+            stat("layout_pool_id"),
+            "ordering and layout fan-outs must share one pool per roam_plan call"
+        );
+        assert!(stat("order_pool_id") > 0.0);
+        // The node counter the serve bench tracks is always reported.
+        assert!(stat("order_nodes_explored") >= 0.0);
+        assert_eq!(stat("warm_seeded"), 0.0);
+    }
+
+    #[test]
+    fn warm_replay_of_same_graph_never_worse_and_invalid_seed_ignored() {
+        let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
+        let cfg = RoamCfg {
+            parallel: false,
+            ..Default::default()
+        };
+        let cold = roam_plan(&g, &cfg);
+        let seed = WarmSeed {
+            order: cold.order.clone(),
+            offsets: cold.offsets.clone(),
+        };
+        let warm = roam_plan_seeded(&g, &cfg, Some(&seed));
+        crate::planner::lint::assert_plan_ok(&g, &warm);
+        assert!(
+            warm.actual_peak <= cold.actual_peak,
+            "warm replay {} worse than cold {}",
+            warm.actual_peak,
+            cold.actual_peak
+        );
+        assert!(warm.theoretical_peak <= cold.theoretical_peak);
+        assert!(warm
+            .stats
+            .iter()
+            .any(|(k, v)| k == "warm_seeded" && *v == 1.0));
+
+        // A seed from a different graph (wrong op count / stale ids) is
+        // detected and ignored, never trusted.
+        let junk = WarmSeed {
+            order: vec![0; 3],
+            offsets: vec![(usize::MAX - 1, 0)],
+        };
+        let r = roam_plan_seeded(&g, &cfg, Some(&junk));
+        crate::planner::lint::assert_plan_ok(&g, &r);
+        assert!(r.stats.iter().any(|(k, v)| k == "warm_seeded" && *v == 0.0));
     }
 
     #[test]

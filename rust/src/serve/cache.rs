@@ -1,0 +1,414 @@
+//! Sharded in-memory LRU plan cache with optional disk persistence.
+//!
+//! Keys are the content-addressed fingerprints of [`super::canon`];
+//! values are [`CachedPlan`]s stored in **canonical coordinates** (op and
+//! tensor ranks, not ids), so one cached artifact serves every graph
+//! isomorphic to the one that produced it. A secondary shape index maps
+//! shape keys (sizes masked) to the most recent full key, powering the
+//! warm-start near-miss lookup.
+//!
+//! Concurrency: shard-level mutexes (the planner fan-out hits the cache
+//! from pool workers), lock-free hit/miss/evict/insert counters. LRU is
+//! stamp-based: a global monotone counter stamps every touch and
+//! eviction removes the shard's minimum stamp — O(shard size) per
+//! eviction, which is irrelevant at plan-cache capacities (plans are
+//! ~KBs; capacities are hundreds).
+//!
+//! Disk persistence (optional `dir`): every insert also writes
+//! `<dir>/<key as hex>.json` through [`crate::util::json`]; a miss
+//! consults the directory before giving up, so a service restart — or a
+//! sibling process sharing the directory — reuses earlier work. Disk
+//! errors are deliberately non-fatal: the cache degrades to memory-only.
+
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// A plan artifact in canonical coordinates (see [`super::canon`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CachedPlan {
+    /// Full fingerprint (graph ⊕ config) this plan answers.
+    pub key: u128,
+    /// Shape fingerprint (sizes masked) for warm-start matching.
+    pub shape: u128,
+    /// Op/tensor counts of the source graph (translation sanity check).
+    pub n_ops: usize,
+    pub n_tensors: usize,
+    /// Execution order as canonical op ranks.
+    pub order: Vec<u32>,
+    /// `(canonical tensor rank, byte offset)` per dynamic tensor.
+    pub offsets: Vec<(u32, u64)>,
+    /// Planner label of the producing run ("roam-ss", ...).
+    pub planner: String,
+}
+
+fn hex128(k: u128) -> String {
+    format!("{k:032x}")
+}
+
+fn parse_hex128(s: &str) -> Option<u128> {
+    u128::from_str_radix(s, 16).ok()
+}
+
+impl CachedPlan {
+    /// Serialise for disk persistence. Keys are hex strings (`f64` JSON
+    /// numbers cannot carry 128 bits).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str("roam-cached-plan-v1".to_string())),
+            ("key", Json::Str(hex128(self.key))),
+            ("shape", Json::Str(hex128(self.shape))),
+            ("n_ops", Json::Num(self.n_ops as f64)),
+            ("n_tensors", Json::Num(self.n_tensors as f64)),
+            (
+                "order",
+                Json::Arr(self.order.iter().map(|&r| Json::Num(r as f64)).collect()),
+            ),
+            (
+                "offsets",
+                Json::Arr(
+                    self.offsets
+                        .iter()
+                        .map(|&(r, o)| Json::Arr(vec![Json::Num(r as f64), Json::Num(o as f64)]))
+                        .collect(),
+                ),
+            ),
+            ("planner", Json::Str(self.planner.clone())),
+        ])
+    }
+
+    /// Parse a persisted plan; `None` on any structural mismatch.
+    pub fn from_json(j: &Json) -> Option<CachedPlan> {
+        Some(CachedPlan {
+            key: parse_hex128(j.get("key")?.as_str()?)?,
+            shape: parse_hex128(j.get("shape")?.as_str()?)?,
+            n_ops: j.get("n_ops")?.as_u64()? as usize,
+            n_tensors: j.get("n_tensors")?.as_u64()? as usize,
+            order: j
+                .get("order")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_u64().map(|x| x as u32))
+                .collect::<Option<Vec<_>>>()?,
+            offsets: j
+                .get("offsets")?
+                .as_arr()?
+                .iter()
+                .map(|p| Some((p.at(0)?.as_u64()? as u32, p.at(1)?.as_u64()?)))
+                .collect::<Option<Vec<_>>>()?,
+            planner: j.get("planner")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// Cache configuration.
+#[derive(Clone, Debug)]
+pub struct CacheCfg {
+    /// Maximum resident plans across all shards. Also bounds the disk
+    /// store: LRU eviction deletes the evicted key's file.
+    pub capacity: usize,
+    /// Shard count (clamped to ≥ 1).
+    pub shards: usize,
+    /// Optional persistence directory (survives restarts; capped at
+    /// `capacity` entries, see above).
+    pub dir: Option<PathBuf>,
+}
+
+impl Default for CacheCfg {
+    fn default() -> Self {
+        CacheCfg {
+            capacity: 256,
+            shards: 8,
+            dir: None,
+        }
+    }
+}
+
+/// Lock-free cache counters (surfaced in the service stats).
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub shape_hits: AtomicU64,
+    pub disk_hits: AtomicU64,
+    pub inserted: AtomicU64,
+    pub evicted: AtomicU64,
+}
+
+impl CacheStats {
+    /// Counter snapshot as `(name, value)` pairs.
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("hits", self.hits.load(Ordering::Relaxed)),
+            ("misses", self.misses.load(Ordering::Relaxed)),
+            ("shape_hits", self.shape_hits.load(Ordering::Relaxed)),
+            ("disk_hits", self.disk_hits.load(Ordering::Relaxed)),
+            ("inserted", self.inserted.load(Ordering::Relaxed)),
+            ("evicted", self.evicted.load(Ordering::Relaxed)),
+        ]
+    }
+}
+
+struct Entry {
+    plan: CachedPlan,
+    stamp: u64,
+}
+
+/// The sharded LRU plan cache.
+pub struct PlanCache {
+    cfg: CacheCfg,
+    shards: Vec<Mutex<HashMap<u128, Entry>>>,
+    /// shape key → most recent full key carrying that shape.
+    shape_index: Mutex<HashMap<u128, u128>>,
+    clock: AtomicU64,
+    stats: CacheStats,
+}
+
+impl PlanCache {
+    pub fn new(cfg: CacheCfg) -> PlanCache {
+        let shards = cfg.shards.max(1);
+        if let Some(dir) = &cfg.dir {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        PlanCache {
+            shards: (0..shards).map(|_| Mutex::new(HashMap::new())).collect(),
+            shape_index: Mutex::new(HashMap::new()),
+            clock: AtomicU64::new(1),
+            cfg,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    /// Resident plan count (sums shard sizes; advisory under concurrency).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    fn shard_of(&self, key: u128) -> &Mutex<HashMap<u128, Entry>> {
+        &self.shards[(key as u64 ^ (key >> 64) as u64) as usize % self.shards.len()]
+    }
+
+    #[inline]
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn disk_path(&self, key: u128) -> Option<PathBuf> {
+        self.cfg
+            .dir
+            .as_ref()
+            .map(|d| d.join(format!("{}.json", hex128(key))))
+    }
+
+    /// Memory lookup bumping the LRU stamp; does not touch counters.
+    fn peek(&self, key: u128) -> Option<CachedPlan> {
+        let mut shard = self.shard_of(key).lock().unwrap();
+        let stamp = self.tick();
+        shard.get_mut(&key).map(|e| {
+            e.stamp = stamp;
+            e.plan.clone()
+        })
+    }
+
+    /// Disk lookup; inserts into memory on success (no re-write).
+    fn load_from_disk(&self, key: u128) -> Option<CachedPlan> {
+        let path = self.disk_path(key)?;
+        let text = std::fs::read_to_string(path).ok()?;
+        let plan = CachedPlan::from_json(&Json::parse(&text).ok()?)?;
+        if plan.key != key {
+            return None; // renamed / corrupted file
+        }
+        self.insert_mem(plan.clone());
+        Some(plan)
+    }
+
+    /// Full-key lookup: memory, then disk. Counts a hit/disk-hit/miss.
+    pub fn get(&self, key: u128) -> Option<CachedPlan> {
+        if let Some(p) = self.peek(key) {
+            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(p);
+        }
+        if let Some(p) = self.load_from_disk(key) {
+            self.stats.disk_hits.fetch_add(1, Ordering::Relaxed);
+            return Some(p);
+        }
+        self.stats.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Shape near-miss lookup: the most recent plan sharing `shape`
+    /// (same architecture and config, different tensor sizes). Counts a
+    /// shape hit; stale index entries (evicted plans) are pruned.
+    pub fn get_by_shape(&self, shape: u128) -> Option<CachedPlan> {
+        let key = *self.shape_index.lock().unwrap().get(&shape)?;
+        let found = self.peek(key).or_else(|| self.load_from_disk(key));
+        match found {
+            Some(p) => {
+                self.stats.shape_hits.fetch_add(1, Ordering::Relaxed);
+                Some(p)
+            }
+            None => {
+                let mut idx = self.shape_index.lock().unwrap();
+                if idx.get(&shape) == Some(&key) {
+                    idx.remove(&shape);
+                }
+                None
+            }
+        }
+    }
+
+    fn insert_mem(&self, plan: CachedPlan) {
+        let key = plan.key;
+        let shape = plan.shape;
+        let per_shard_cap = (self.cfg.capacity / self.shards.len()).max(1);
+        {
+            let mut shard = self.shard_of(key).lock().unwrap();
+            let stamp = self.tick();
+            if !shard.contains_key(&key) && shard.len() >= per_shard_cap {
+                // Evict the least recently touched entry of this shard.
+                let victim = shard
+                    .iter()
+                    .min_by_key(|(_, e)| e.stamp)
+                    .map(|(&k, _)| k);
+                if let Some(victim) = victim {
+                    shard.remove(&victim);
+                    // Capacity bounds the disk store too: an append-only
+                    // directory would grow without bound under diverse
+                    // traffic.
+                    if let Some(path) = self.disk_path(victim) {
+                        let _ = std::fs::remove_file(path);
+                    }
+                    self.stats.evicted.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            shard.insert(key, Entry { plan, stamp });
+        }
+        let mut idx = self.shape_index.lock().unwrap();
+        idx.insert(shape, key);
+        // Keep the shape index bounded: eviction removes only the shard
+        // entry, so periodically sweep index entries whose key is no
+        // longer memory-resident. (With disk persistence such shapes lose
+        // their warm candidate until re-planned — a cache-quality nit,
+        // not a correctness one; the alternative is unbounded growth in a
+        // long-lived service.) Lock order is safe: no caller holds a
+        // shard lock while taking the index lock.
+        if idx.len() > self.cfg.capacity.saturating_mul(2).max(16) {
+            let resident: std::collections::HashSet<u128> = self
+                .shards
+                .iter()
+                .flat_map(|s| s.lock().unwrap().keys().copied().collect::<Vec<_>>())
+                .collect();
+            idx.retain(|_, k| resident.contains(k));
+        }
+    }
+
+    /// Insert (or refresh) a plan; persists to disk when configured.
+    pub fn put(&self, plan: CachedPlan) {
+        self.stats.inserted.fetch_add(1, Ordering::Relaxed);
+        if let Some(path) = self.disk_path(plan.key) {
+            let _ = std::fs::write(&path, format!("{}\n", plan.to_json().pretty()));
+        }
+        self.insert_mem(plan);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(key: u128, shape: u128) -> CachedPlan {
+        CachedPlan {
+            key,
+            shape,
+            n_ops: 3,
+            n_tensors: 4,
+            order: vec![2, 0, 1],
+            offsets: vec![(0, 0), (1, 64), (3, 128)],
+            planner: "roam-ss".to_string(),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = plan(u128::MAX - 5, 42);
+        let back = CachedPlan::from_json(&Json::parse(&p.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn hit_miss_and_shape_lookup() {
+        let c = PlanCache::new(CacheCfg::default());
+        assert!(c.get(1).is_none());
+        c.put(plan(1, 100));
+        assert_eq!(c.get(1).unwrap().key, 1);
+        assert_eq!(c.get_by_shape(100).unwrap().key, 1);
+        assert!(c.get_by_shape(999).is_none());
+        let s: std::collections::HashMap<_, _> = c.stats().snapshot().into_iter().collect();
+        assert_eq!(s["hits"], 1);
+        assert_eq!(s["misses"], 1);
+        assert_eq!(s["shape_hits"], 1);
+        assert_eq!(s["inserted"], 1);
+    }
+
+    #[test]
+    fn lru_eviction_counts_and_caps() {
+        let c = PlanCache::new(CacheCfg {
+            capacity: 2,
+            shards: 1,
+            dir: None,
+        });
+        c.put(plan(1, 100));
+        c.put(plan(2, 200));
+        assert!(c.get(1).is_some()); // touch 1 so 2 is the LRU victim
+        c.put(plan(3, 300));
+        assert!(c.len() <= 2);
+        assert!(c.get(2).is_none(), "LRU victim should be 2");
+        assert!(c.get(1).is_some());
+        assert!(c.get(3).is_some());
+        let s: std::collections::HashMap<_, _> = c.stats().snapshot().into_iter().collect();
+        assert_eq!(s["evicted"], 1);
+        // The evicted plan's shape index entry is pruned on lookup.
+        assert!(c.get_by_shape(200).is_none());
+        assert!(c.get_by_shape(200).is_none());
+    }
+
+    #[test]
+    fn disk_persistence_survives_restart() {
+        let dir = std::env::temp_dir().join(format!("roam_cache_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let c = PlanCache::new(CacheCfg {
+                capacity: 8,
+                shards: 2,
+                dir: Some(dir.clone()),
+            });
+            c.put(plan(7, 77));
+        }
+        let c2 = PlanCache::new(CacheCfg {
+            capacity: 8,
+            shards: 2,
+            dir: Some(dir.clone()),
+        });
+        assert!(c2.is_empty());
+        let got = c2.get(7).expect("disk hit");
+        assert_eq!(got, plan(7, 77));
+        let s: std::collections::HashMap<_, _> = c2.stats().snapshot().into_iter().collect();
+        assert_eq!(s["disk_hits"], 1);
+        // Now resident: second lookup is a memory hit.
+        assert!(c2.get(7).is_some());
+        let s: std::collections::HashMap<_, _> = c2.stats().snapshot().into_iter().collect();
+        assert_eq!(s["hits"], 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

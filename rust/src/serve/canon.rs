@@ -1,0 +1,448 @@
+//! Content-addressed graph fingerprinting: an isomorphism-invariant key
+//! for the plan cache, plus the canonical op/tensor coordinates plans are
+//! stored and replayed in.
+//!
+//! ## Fingerprint
+//!
+//! Iterative Weisfeiler–Lehman-style refinement over operator labels:
+//! every op starts from a label hashing its structural identity
+//! ([`crate::graph::OpKind`], phase, the multisets of its input/output
+//! tensors' classes and byte sizes, output flags), then absorbs the
+//! sorted label multisets of its predecessors and successors for a fixed
+//! number of rounds. The graph key folds the *sorted* final labels (plus
+//! a tensor-population fold), so it is invariant under any permutation of
+//! op/tensor ids — two isomorphic graphs collide by construction, and WL
+//! refinement makes accidental collisions of non-isomorphic training
+//! graphs vanishingly unlikely (they would additionally have to collide
+//! in the 128-bit fold).
+//!
+//! Two keys are derived per graph:
+//!
+//! * the **full key** includes tensor byte sizes — the cache-hit
+//!   identity;
+//! * the **shape key** excludes them — two *rescaled* variants of one
+//!   model (same architecture, different batch) share it, which is what
+//!   the warm-start path matches on ("same fingerprint modulo tensor
+//!   sizes").
+//!
+//! The serving layer folds the canonicalized planner configuration
+//! ([`cfg_key`]) into both before using them as cache keys.
+//!
+//! ## Canonical coordinates
+//!
+//! [`Canon`] also fixes a canonical rank per op and tensor (sorting by
+//! the WL labels), so cached plans can be stored id-free and translated
+//! onto any isomorphic — or shape-isomorphic — graph. Label ties make
+//! the rank assignment within a tie group arbitrary; consumers of a
+//! translation therefore always *verify* the result (topological order,
+//! conflict-free layout) and fall back to cold planning when a tie
+//! resolved differently. In practice training graphs' sizes and depths
+//! disambiguate almost every op.
+
+use crate::graph::{Graph, OpId, OpKind, Phase, TensorClass, TensorId};
+use crate::hybrid::{BudgetSpec, Technique};
+use crate::planner::RoamCfg;
+
+/// WL refinement rounds. Three rounds absorb a radius-3 neighbourhood —
+/// enough to separate ops by their distance to the loss / graph ends on
+/// the depths the planner handles, while keeping canonization O(r·E).
+const WL_ROUNDS: usize = 3;
+
+/// The two cache keys of a graph (before the config is folded in).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Fingerprint {
+    /// Isomorphism-invariant key including tensor sizes.
+    pub key: u128,
+    /// Same, with sizes masked out — equal across rescaled variants.
+    pub shape: u128,
+}
+
+/// Canonical view of a graph: its fingerprint plus the rank permutations
+/// used to store/replay plans id-free.
+#[derive(Clone, Debug)]
+pub struct Canon {
+    pub fingerprint: Fingerprint,
+    /// `op_rank[op] = canonical position` (a permutation of `0..n_ops`).
+    pub op_rank: Vec<u32>,
+    /// Inverse of `op_rank`.
+    pub op_by_rank: Vec<OpId>,
+    /// `tensor_rank[t] = canonical position` (a permutation).
+    pub tensor_rank: Vec<u32>,
+    /// Inverse of `tensor_rank`.
+    pub tensor_by_rank: Vec<TensorId>,
+}
+
+// ---------------------------------------------------------------------
+// Hashing substrate: splitmix64 finalizer, order-dependent chaining and
+// order-independent (sorted) folds.
+
+#[inline]
+fn smix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+#[inline]
+fn mix2(a: u64, b: u64) -> u64 {
+    smix(a ^ smix(b).rotate_left(31))
+}
+
+/// Fold a scratch buffer as a *multiset*: sort, then chain. Clears `buf`.
+fn fold_sorted(buf: &mut Vec<u64>, seed: u64) -> u64 {
+    buf.sort_unstable();
+    let mut h = smix(seed ^ buf.len() as u64);
+    for &x in buf.iter() {
+        h = mix2(h, x);
+    }
+    buf.clear();
+    h
+}
+
+fn kind_tag(k: OpKind) -> u64 {
+    match k {
+        OpKind::Conv => 1,
+        OpKind::MatMul => 2,
+        OpKind::BatchNorm => 3,
+        OpKind::LayerNorm => 4,
+        OpKind::Activation => 5,
+        OpKind::Softmax => 6,
+        OpKind::Pool => 7,
+        OpKind::Elementwise => 8,
+        OpKind::Reshape => 9,
+        OpKind::Reduce => 10,
+        OpKind::Embed => 11,
+        OpKind::Loss => 12,
+        OpKind::GradAcc => 13,
+        OpKind::OptimStep => 14,
+        OpKind::Input => 15,
+        OpKind::SwapOut => 16,
+        OpKind::SwapIn => 17,
+        OpKind::Other => 18,
+    }
+}
+
+fn phase_tag(p: Phase) -> u64 {
+    match p {
+        Phase::Forward => 1,
+        Phase::Loss => 2,
+        Phase::Backward => 3,
+        Phase::Update => 4,
+    }
+}
+
+fn class_tag(c: TensorClass) -> u64 {
+    match c {
+        TensorClass::Activation => 1,
+        TensorClass::Gradient => 2,
+        TensorClass::TempBuffer => 3,
+        TensorClass::Weight => 4,
+        TensorClass::OptState => 5,
+        TensorClass::Input => 6,
+    }
+}
+
+/// Structural hash of one tensor as seen from an op's label: class,
+/// output flag, whether it is a graph input, and (for the full variant)
+/// its byte size.
+#[inline]
+fn tensor_facet(g: &Graph, t: TensorId, with_sizes: bool) -> u64 {
+    let tt = &g.tensors[t];
+    let mut h = mix2(class_tag(tt.class), tt.is_output as u64 + 2 * tt.producer.is_none() as u64);
+    if with_sizes {
+        h = mix2(h, tt.size);
+    }
+    h
+}
+
+/// One WL run (full or shape variant): returns the per-op final labels.
+fn wl_labels(g: &Graph, preds: &[Vec<OpId>], succs: &[Vec<OpId>], with_sizes: bool) -> Vec<u64> {
+    let n = g.n_ops();
+    let mut scratch: Vec<u64> = Vec::new();
+    let mut labels: Vec<u64> = (0..n)
+        .map(|v| {
+            let op = &g.ops[v];
+            let mut h = mix2(kind_tag(op.kind), phase_tag(op.phase));
+            for &t in &op.inputs {
+                scratch.push(tensor_facet(g, t, with_sizes));
+            }
+            h = mix2(h, fold_sorted(&mut scratch, 0x1a2b));
+            for &t in &op.outputs {
+                scratch.push(tensor_facet(g, t, with_sizes));
+            }
+            mix2(h, fold_sorted(&mut scratch, 0x3c4d))
+        })
+        .collect();
+    let mut next = vec![0u64; n];
+    for round in 0..WL_ROUNDS {
+        for v in 0..n {
+            for &p in &preds[v] {
+                scratch.push(labels[p]);
+            }
+            let hp = fold_sorted(&mut scratch, 0x5e6f ^ round as u64);
+            for &s in &succs[v] {
+                scratch.push(labels[s]);
+            }
+            let hs = fold_sorted(&mut scratch, 0x7a8b ^ round as u64);
+            next[v] = mix2(labels[v], mix2(hp, hs));
+        }
+        std::mem::swap(&mut labels, &mut next);
+    }
+    labels
+}
+
+/// Fold per-op labels + a tensor-population fold into one 128-bit key,
+/// order-independently (sorted), with two independent lanes.
+fn fold_key(g: &Graph, labels: &[u64], with_sizes: bool) -> u128 {
+    let mut sorted = labels.to_vec();
+    sorted.sort_unstable();
+    // Tensors not visible through any op label (no producer, no
+    // consumer) still count toward identity.
+    let mut tpop: Vec<u64> = (0..g.n_tensors())
+        .map(|t| tensor_facet(g, t, with_sizes))
+        .collect();
+    tpop.sort_unstable();
+    let mut lanes = [0u64; 2];
+    for (lane, item) in lanes.iter_mut().enumerate() {
+        let mut h = smix(0xfeed_0000 ^ lane as u64);
+        h = mix2(h, g.n_ops() as u64);
+        h = mix2(h, g.n_tensors() as u64);
+        for &x in &sorted {
+            h = mix2(h, x ^ (lane as u64).rotate_left(17));
+        }
+        for &x in &tpop {
+            h = mix2(h, x.wrapping_add(lane as u64));
+        }
+        *item = h;
+    }
+    ((lanes[0] as u128) << 64) | lanes[1] as u128
+}
+
+/// Canonize `g`: fingerprint + canonical rank permutations.
+pub fn canonize(g: &Graph) -> Canon {
+    let (preds, succs) = g.adjacency();
+    let full = wl_labels(g, &preds, &succs, true);
+    let shape = wl_labels(g, &preds, &succs, false);
+    let fingerprint = Fingerprint {
+        key: fold_key(g, &full, true),
+        shape: fold_key(g, &shape, false),
+    };
+
+    // Op ranks: sort by (shape label, output bytes, input bytes).
+    // Leading with the shape label keeps ranks aligned across rescaled
+    // variants; *raw byte sizes* (not the full-label hash, whose order
+    // is arbitrary under rescaling) break ties within a shape group —
+    // uniform batch scaling is order-preserving on sizes, so e.g. two
+    // width-varying mobile blocks that are shape-tied still pair up
+    // correctly between batch sizes. Residual ties resolve by original
+    // id — arbitrary but verified by every consumer of a translation.
+    let n = g.n_ops();
+    let bytes_of = |ts: &[TensorId]| -> u64 { ts.iter().map(|&t| g.tensors[t].size).sum() };
+    let mut by_rank: Vec<OpId> = (0..n).collect();
+    by_rank.sort_by_key(|&v| {
+        (
+            shape[v],
+            bytes_of(&g.ops[v].outputs),
+            bytes_of(&g.ops[v].inputs),
+            v,
+        )
+    });
+    let mut op_rank = vec![0u32; n];
+    for (r, &v) in by_rank.iter().enumerate() {
+        op_rank[v] = r as u32;
+    }
+
+    // Tensor ranks, derived from op ranks: a produced tensor is
+    // `(producer rank, output slot)` — unique; a graph input is keyed by
+    // the multiset of its (consumer rank, input slot) uses plus its
+    // class, which separates weights from minibatch inputs feeding the
+    // same op.
+    let nt = g.n_tensors();
+    let mut scratch: Vec<u64> = Vec::new();
+    let mut tkey: Vec<(u64, u64, u64, usize)> = Vec::with_capacity(nt);
+    for t in 0..nt {
+        let tt = &g.tensors[t];
+        match tt.producer {
+            Some(p) => {
+                let slot = g.ops[p].outputs.iter().position(|&o| o == t).unwrap_or(0);
+                tkey.push((0, op_rank[p] as u64, slot as u64, t));
+            }
+            None => {
+                for &c in &tt.consumers {
+                    for (slot, &inp) in g.ops[c].inputs.iter().enumerate() {
+                        if inp == t {
+                            scratch.push(((op_rank[c] as u64) << 16) ^ slot as u64);
+                        }
+                    }
+                }
+                let uses = fold_sorted(&mut scratch, 0x9c0f);
+                tkey.push((1, mix2(class_tag(tt.class), uses), 0, t));
+            }
+        }
+    }
+    tkey.sort_unstable();
+    let mut tensor_rank = vec![0u32; nt];
+    let mut tensor_by_rank = vec![0usize; nt];
+    for (r, &(_, _, _, t)) in tkey.iter().enumerate() {
+        tensor_rank[t] = r as u32;
+        tensor_by_rank[r] = t;
+    }
+
+    Canon {
+        fingerprint,
+        op_rank,
+        op_by_rank: by_rank,
+        tensor_rank,
+        tensor_by_rank,
+    }
+}
+
+/// Canonical 64-bit key of the planner configuration that determines a
+/// plan's identity: the ROAM search knobs plus the budget/technique of a
+/// budgeted request. Wall-clock knobs (`time_limit_secs`) and execution
+/// knobs (`parallel`) are deliberately excluded — they control *how long*
+/// and *on how many threads* the planner runs, not which plan the request
+/// asks for (a deadline that actually bites degrades the plan and is
+/// reported in its stats, not in its cache identity).
+pub fn cfg_key(roam: &RoamCfg, budget: Option<BudgetSpec>, technique: Technique) -> u64 {
+    let mut h = smix(0xc0ff_ee00);
+    h = mix2(h, roam.node_limit as u64);
+    h = mix2(h, roam.delay_radius.to_bits());
+    h = mix2(h, roam.multi_stream as u64 | (roam.enable_wu_scheduler as u64) << 1);
+    h = mix2(h, roam.order_max_nodes);
+    h = mix2(h, roam.dsa_max_nodes);
+    match budget {
+        None => h = mix2(h, 0),
+        Some(BudgetSpec::Bytes(b)) => {
+            h = mix2(h, 1);
+            h = mix2(h, b);
+        }
+        Some(BudgetSpec::Fraction(f)) => {
+            h = mix2(h, 2);
+            h = mix2(h, f.to_bits());
+        }
+    }
+    let ttag = match technique {
+        Technique::Recompute => 1u64,
+        Technique::Swap => 2,
+        Technique::Hybrid => 3,
+    };
+    // The technique only matters for budgeted requests.
+    mix2(h, if budget.is_some() { ttag } else { 0 })
+}
+
+/// Fold a config key into a graph fingerprint to form the cache keys.
+pub fn with_cfg(fp: Fingerprint, cfg: u64) -> Fingerprint {
+    let f = |k: u128| -> u128 {
+        let lo = mix2(k as u64, cfg);
+        let hi = mix2((k >> 64) as u64, cfg.rotate_left(23));
+        ((hi as u128) << 64) | lo as u128
+    };
+    Fingerprint {
+        key: f(fp.key),
+        shape: f(fp.shape),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{self, BuildCfg, ModelKind};
+
+    #[test]
+    fn deterministic_and_sensitive() {
+        let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
+        let a = canonize(&g);
+        let b = canonize(&g);
+        assert_eq!(a.fingerprint, b.fingerprint);
+        assert_eq!(a.op_rank, b.op_rank);
+        // A different model must not collide.
+        let h = models::build(ModelKind::Mobilenet, &BuildCfg::default());
+        assert_ne!(canonize(&h).fingerprint.key, a.fingerprint.key);
+        assert_ne!(canonize(&h).fingerprint.shape, a.fingerprint.shape);
+    }
+
+    #[test]
+    fn ranks_are_permutations() {
+        let g = models::build(ModelKind::Mobilenet, &BuildCfg::default());
+        let c = canonize(&g);
+        let mut seen = vec![false; g.n_ops()];
+        for &r in &c.op_rank {
+            assert!(!seen[r as usize]);
+            seen[r as usize] = true;
+        }
+        for (v, &r) in c.op_rank.iter().enumerate() {
+            assert_eq!(c.op_by_rank[r as usize], v);
+        }
+        let mut seen = vec![false; g.n_tensors()];
+        for &r in &c.tensor_rank {
+            assert!(!seen[r as usize]);
+            seen[r as usize] = true;
+        }
+        for (t, &r) in c.tensor_rank.iter().enumerate() {
+            assert_eq!(c.tensor_by_rank[r as usize], t);
+        }
+    }
+
+    #[test]
+    fn rescaled_variants_share_shape_not_key() {
+        let g1 = models::build(ModelKind::SyntheticTransformer, &BuildCfg {
+            batch: 1,
+            depth: 2,
+            ..Default::default()
+        });
+        let g2 = models::build(ModelKind::SyntheticTransformer, &BuildCfg {
+            batch: 2,
+            depth: 2,
+            ..Default::default()
+        });
+        let c1 = canonize(&g1);
+        let c2 = canonize(&g2);
+        assert_eq!(c1.fingerprint.shape, c2.fingerprint.shape);
+        assert_ne!(c1.fingerprint.key, c2.fingerprint.key);
+        // A deeper variant differs in shape too.
+        let g3 = models::build(ModelKind::SyntheticTransformer, &BuildCfg {
+            batch: 1,
+            depth: 3,
+            ..Default::default()
+        });
+        assert_ne!(canonize(&g3).fingerprint.shape, c1.fingerprint.shape);
+    }
+
+    #[test]
+    fn cfg_key_separates_requests() {
+        let r = RoamCfg::default();
+        let base = cfg_key(&r, None, Technique::Hybrid);
+        // Wall-clock / thread knobs don't change identity.
+        let r2 = RoamCfg {
+            time_limit_secs: 1.0,
+            parallel: false,
+            ..RoamCfg::default()
+        };
+        assert_eq!(cfg_key(&r2, None, Technique::Hybrid), base);
+        // Search knobs do.
+        let r3 = RoamCfg {
+            node_limit: 32,
+            ..RoamCfg::default()
+        };
+        assert_ne!(cfg_key(&r3, None, Technique::Hybrid), base);
+        // Budget and technique do (for budgeted requests only).
+        assert_ne!(
+            cfg_key(&r, Some(BudgetSpec::Fraction(0.6)), Technique::Hybrid),
+            base
+        );
+        assert_ne!(
+            cfg_key(&r, Some(BudgetSpec::Fraction(0.6)), Technique::Swap),
+            cfg_key(&r, Some(BudgetSpec::Fraction(0.6)), Technique::Hybrid)
+        );
+        // Technique is ignored without a budget.
+        assert_eq!(cfg_key(&r, None, Technique::Swap), base);
+        // Folding into a fingerprint changes both keys.
+        let fp = Fingerprint { key: 7, shape: 9 };
+        let folded = with_cfg(fp, base);
+        assert_ne!(folded.key, fp.key);
+        assert_ne!(folded.shape, fp.shape);
+        assert_ne!(with_cfg(fp, base ^ 1).key, folded.key);
+    }
+}

@@ -1,0 +1,45 @@
+//! The planning **service** layer: content-addressed plan caching,
+//! batched single-flight serving and warm-started re-planning.
+//!
+//! ROAM's value proposition is that a good execution plan is cheap to
+//! *reuse* but expensive to *find* (the paper's headline is a 53.7×
+//! search speedup). Production planning traffic is dominated by repeats
+//! and near-repeats — the same model graph planned again, or a rescaled
+//! variant (same architecture, different batch). This subsystem makes
+//! the planner servable against exactly that workload shape:
+//!
+//! * [`canon`] — an isomorphism-invariant 128-bit graph fingerprint
+//!   (iterative Weisfeiler–Lehman refinement over `OpKind`/size/degree
+//!   labels, folded with the canonicalized planner config, budget and
+//!   technique) plus canonical op/tensor coordinates, so cached plans
+//!   are id-free and permuted node numberings collide onto one entry;
+//! * [`cache`] — a sharded in-memory LRU of plan artifacts with
+//!   hit/miss/evict/insert counters and optional disk persistence
+//!   through `util/json`;
+//! * [`service`] — batch execution: identical fingerprints in a batch
+//!   are answered by one planning job (single-flight dedupe), distinct
+//!   ones fan out over the shared worker pool with per-request deadlines
+//!   that degrade to the heuristic planner instead of stalling;
+//! * [`warm`] — the loop back into the search cores: on a shape
+//!   near-miss (same fingerprint modulo tensor sizes) the cached
+//!   operator order replays as the branch-and-bound incumbent and the
+//!   cached layout seeds the DSA incumbents
+//!   ([`crate::planner::roam_plan_seeded`]), so re-planning a rescaled
+//!   model prunes from a real bound instead of cold-starting.
+//!
+//! The CLI exposes this as `roam serve` (JSONL over stdin/stdout, blank
+//! line = batch boundary) and `roam batch <dir>`;
+//! `benches/serve_throughput.rs` measures cold vs warm vs cache-hit
+//! latency and writes the `BENCH_serve.json` trajectory.
+
+pub mod cache;
+pub mod canon;
+pub mod service;
+pub mod warm;
+
+pub use cache::{CacheCfg, CachedPlan, PlanCache};
+pub use canon::{canonize, cfg_key, with_cfg, Canon, Fingerprint};
+pub use service::{
+    request_from_json, response_to_json, summary_json, Outcome, PlanRequest, PlanResponse,
+    PlanService, ServeCfg,
+};

@@ -1,0 +1,509 @@
+//! The batched planning service: single-flight dedupe, cache-hit replay,
+//! warm-started re-planning and per-request deadlines over one shared
+//! worker pool.
+//!
+//! A batch of [`PlanRequest`]s is served as follows:
+//!
+//! 1. every request graph is canonized ([`super::canon`]) and its config
+//!    folded in — identical fingerprints within the batch are **deduped**
+//!    (single-flight: one planning job answers all of them);
+//! 2. distinct fingerprints fan out over a [`crate::util::pool::Pool`];
+//!    each job first consults the [`super::cache::PlanCache`] (hit ⇒
+//!    verified replay, no planning), then — for plain requests — the
+//!    cache's *shape* index (near-miss ⇒ warm-started re-plan via
+//!    [`crate::planner::roam_plan_seeded`]), then cold-plans;
+//! 3. each job carries a **deadline**: a request whose deadline already
+//!    passed when its job starts degrades to the heuristic planner
+//!    (reported as [`Outcome::Degraded`]); otherwise the remaining time
+//!    becomes the planner's `time_limit_secs`, so partial expiry degrades
+//!    *inside* the planner and rides the existing fallback stats
+//!    (`order_leaf_fallbacks`, `layout_window_fallbacks`,
+//!    `dsa_windows_cut_short`);
+//! 4. fresh lint-clean plans are inserted into the cache (canonical
+//!    coordinates, optional disk persistence).
+//!
+//! Budgeted requests (`budget` + technique) run the hybrid driver and are
+//! cached/deduped like plain ones; warm-start seeding currently applies
+//! to plain requests only (the hybrid driver re-plans internally many
+//! times — seeding its rounds is a recorded follow-on in the ROADMAP).
+
+use super::cache::PlanCache;
+use super::canon::{canonize, cfg_key, with_cfg};
+use super::warm;
+use crate::graph::Graph;
+use crate::hybrid::{roam_plan_hybrid, BudgetSpec, HybridCfg, Technique};
+use crate::planner::heuristic::heuristic_plan;
+use crate::planner::{lint_plan, roam_plan_seeded, ExecutionPlan, RoamCfg};
+use crate::util::json::Json;
+use crate::util::pool::Pool;
+use crate::util::timer::Deadline;
+use crate::util::Stopwatch;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServeCfg {
+    /// Planner configuration shared by all requests (folded into the
+    /// cache key; per-request budget/technique fold in on top).
+    pub roam: RoamCfg,
+    /// Worker threads for the batch fan-out (0 ⇒ hardware parallelism).
+    pub workers: usize,
+    /// Attempt warm-started re-planning on shape near-misses.
+    pub warm_start: bool,
+    /// Default per-request deadline in seconds (0 ⇒ unlimited).
+    pub default_deadline_secs: f64,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg {
+            roam: RoamCfg::default(),
+            workers: 0,
+            warm_start: true,
+            default_deadline_secs: 0.0,
+        }
+    }
+}
+
+/// One planning request.
+#[derive(Clone, Debug)]
+pub struct PlanRequest {
+    pub graph: Graph,
+    /// Hard memory budget; `None` ⇒ plain (unbudgeted) planning.
+    pub budget: Option<BudgetSpec>,
+    /// Technique for budgeted requests (ignored otherwise).
+    pub technique: Technique,
+    /// Per-request deadline override in seconds (0 ⇒ unlimited). This
+    /// bounds planning *effort*, not response latency: `serve_batch`
+    /// returns when the whole batch finishes, and fingerprint-identical
+    /// requests dedupe into one job planned under the group's most
+    /// generous deadline (quality-first — a single-flight answer must
+    /// satisfy its least constrained member).
+    pub deadline_secs: Option<f64>,
+}
+
+impl PlanRequest {
+    /// A plain request for `graph` with service defaults.
+    pub fn plain(graph: Graph) -> PlanRequest {
+        PlanRequest {
+            graph,
+            budget: None,
+            technique: Technique::Hybrid,
+            deadline_secs: None,
+        }
+    }
+}
+
+/// How a response was produced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Planned from scratch.
+    Cold,
+    /// Verified replay of a cached plan — no planning ran.
+    CacheHit,
+    /// Warm-started re-plan seeded from a shape near-miss.
+    Warm,
+    /// Answered by another identical request in the same batch.
+    Dedup,
+    /// Deadline expired before planning started: heuristic fallback.
+    Degraded,
+}
+
+impl Outcome {
+    pub fn name(self) -> &'static str {
+        match self {
+            Outcome::Cold => "cold",
+            Outcome::CacheHit => "cache_hit",
+            Outcome::Warm => "warm",
+            Outcome::Dedup => "dedup",
+            Outcome::Degraded => "degraded",
+        }
+    }
+}
+
+/// One planning response.
+#[derive(Clone, Debug)]
+pub struct PlanResponse {
+    /// Full (config-folded) fingerprint of the request.
+    pub key: u128,
+    pub outcome: Outcome,
+    pub plan: ExecutionPlan,
+    /// Did the plan pass [`crate::planner::lint_plan`]?
+    pub lint_ok: bool,
+    /// Wall-clock seconds this request's job spent (0 for dedupes).
+    pub secs: f64,
+}
+
+/// Lock-free service counters.
+#[derive(Debug, Default)]
+pub struct ServiceStats {
+    pub requests: AtomicU64,
+    pub cold: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub warm_starts: AtomicU64,
+    pub dedupe_hits: AtomicU64,
+    pub degraded: AtomicU64,
+    pub translate_failures: AtomicU64,
+}
+
+impl ServiceStats {
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("requests", self.requests.load(Ordering::Relaxed)),
+            ("cold", self.cold.load(Ordering::Relaxed)),
+            ("cache_hits", self.cache_hits.load(Ordering::Relaxed)),
+            ("warm_starts", self.warm_starts.load(Ordering::Relaxed)),
+            ("dedupe_hits", self.dedupe_hits.load(Ordering::Relaxed)),
+            ("degraded", self.degraded.load(Ordering::Relaxed)),
+            (
+                "translate_failures",
+                self.translate_failures.load(Ordering::Relaxed),
+            ),
+        ]
+    }
+}
+
+/// The planning service: a cache plus the batch execution policy.
+pub struct PlanService {
+    cache: PlanCache,
+    cfg: ServeCfg,
+    stats: ServiceStats,
+}
+
+impl PlanService {
+    pub fn new(cache: PlanCache, cfg: ServeCfg) -> PlanService {
+        PlanService {
+            cache,
+            cfg,
+            stats: ServiceStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> &ServiceStats {
+        &self.stats
+    }
+
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    /// Serve a batch; responses are positionally aligned with `reqs`.
+    pub fn serve_batch(&self, reqs: &[PlanRequest]) -> Vec<PlanResponse> {
+        self.stats
+            .requests
+            .fetch_add(reqs.len() as u64, Ordering::Relaxed);
+
+        // Canonize + fingerprint every request.
+        let canons: Vec<_> = reqs.iter().map(|r| canonize(&r.graph)).collect();
+        let fps: Vec<_> = reqs
+            .iter()
+            .zip(&canons)
+            .map(|(r, c)| {
+                with_cfg(
+                    c.fingerprint,
+                    cfg_key(&self.cfg.roam, r.budget, r.technique),
+                )
+            })
+            .collect();
+
+        // Single-flight: group identical full keys; one job per group.
+        let mut groups: HashMap<u128, Vec<usize>> = HashMap::new();
+        let mut job_of_key: Vec<u128> = Vec::new();
+        for (i, fp) in fps.iter().enumerate() {
+            groups.entry(fp.key).or_insert_with(|| {
+                job_of_key.push(fp.key);
+                Vec::new()
+            });
+            groups.get_mut(&fp.key).unwrap().push(i);
+        }
+        let dedupes: u64 = groups.values().map(|v| (v.len() - 1) as u64).sum();
+        self.stats.dedupe_hits.fetch_add(dedupes, Ordering::Relaxed);
+
+        // Per-job deadline: the most generous member wins (a deduped
+        // response must satisfy every member; the strictest member can
+        // still receive a degraded-quality plan, never a late panic).
+        // "Unlimited" (0, explicit or via the default) IS the most
+        // generous value, so one unlimited member unbounds the job.
+        let job_deadlines: Vec<Deadline> = job_of_key
+            .iter()
+            .map(|k| {
+                let mut secs = 0.0f64;
+                let mut unlimited = false;
+                for &i in &groups[k] {
+                    let s = reqs[i]
+                        .deadline_secs
+                        .unwrap_or(self.cfg.default_deadline_secs);
+                    if s <= 0.0 {
+                        unlimited = true;
+                    } else {
+                        secs = secs.max(s);
+                    }
+                }
+                if unlimited || secs <= 0.0 {
+                    Deadline::unlimited()
+                } else {
+                    Deadline::after_secs(secs)
+                }
+            })
+            .collect();
+
+        // Fan the distinct jobs out. When the batch fan-out itself runs
+        // wide, each job's planner runs its leaf fan-outs sequentially —
+        // otherwise every job would spawn another full-width pool and a
+        // batch of b jobs would thrash cores × b threads.
+        let n_jobs = job_of_key.len();
+        let workers = if self.cfg.workers == 0 {
+            Pool::default_workers()
+        } else {
+            self.cfg.workers
+        };
+        let inner_parallel = workers.min(n_jobs) <= 1;
+        let run_job = |j: usize| -> PlanResponse {
+            let key = job_of_key[j];
+            let rep = groups[&key][0];
+            self.run_one(
+                &reqs[rep],
+                &canons[rep],
+                fps[rep],
+                job_deadlines[j],
+                inner_parallel,
+            )
+        };
+        let job_results: Vec<PlanResponse> =
+            Pool::new(workers.min(n_jobs.max(1))).run(n_jobs, run_job);
+        let by_key: HashMap<u128, &PlanResponse> =
+            job_of_key.iter().copied().zip(job_results.iter()).collect();
+
+        // Assemble positionally; non-representative members are dedupes.
+        let mut first_seen: HashMap<u128, usize> = HashMap::new();
+        reqs.iter()
+            .enumerate()
+            .map(|(i, _)| {
+                let key = fps[i].key;
+                let r = by_key[&key];
+                let rep = *first_seen.entry(key).or_insert(i);
+                let mut resp = (*r).clone();
+                if i != rep {
+                    resp.outcome = Outcome::Dedup;
+                    resp.secs = 0.0;
+                }
+                resp
+            })
+            .collect()
+    }
+
+    /// Execute one distinct planning job. `inner_parallel = false` caps
+    /// the planner's own fan-out at one worker (the batch fan-out above
+    /// already saturates the machine).
+    fn run_one(
+        &self,
+        req: &PlanRequest,
+        canon: &super::canon::Canon,
+        fp: super::canon::Fingerprint,
+        deadline: Deadline,
+        inner_parallel: bool,
+    ) -> PlanResponse {
+        let sw = Stopwatch::start();
+        let g = &req.graph;
+
+        // Deadline already blown: degrade to the heuristic immediately.
+        if deadline.expired() {
+            self.stats.degraded.fetch_add(1, Ordering::Relaxed);
+            let plan = heuristic_plan(g);
+            let lint_ok = lint_plan(g, &plan).is_empty();
+            return PlanResponse {
+                key: fp.key,
+                outcome: Outcome::Degraded,
+                plan,
+                lint_ok,
+                secs: sw.secs(),
+            };
+        }
+
+        // Cache hit ⇒ verified replay.
+        if let Some(cp) = self.cache.get(fp.key) {
+            match warm::replay_plan(g, canon, &cp) {
+                Some(plan) => {
+                    self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    let lint_ok = lint_plan(g, &plan).is_empty();
+                    return PlanResponse {
+                        key: fp.key,
+                        outcome: Outcome::CacheHit,
+                        plan,
+                        lint_ok,
+                        secs: sw.secs(),
+                    };
+                }
+                None => {
+                    // Rank ties resolved differently: fall through to a
+                    // fresh plan (which refreshes the cached artifact).
+                    self.stats
+                        .translate_failures
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+
+        // Cap the planner's own time limit by the remaining deadline and
+        // its thread fan-out by the batch fan-out (see `serve_batch`).
+        let mut roam = self.cfg.roam.clone();
+        roam.parallel &= inner_parallel;
+        if let Some(rem) = deadline.remaining() {
+            roam.time_limit_secs = roam.time_limit_secs.min(rem.as_secs_f64().max(1e-3));
+        }
+
+        // Plan: budgeted ⇒ hybrid driver; plain ⇒ (possibly warm-started)
+        // ROAM pipeline.
+        let (plan, outcome) = match req.budget {
+            Some(spec) => {
+                let hplan = roam_plan_hybrid(g, spec, &HybridCfg {
+                    technique: req.technique,
+                    roam,
+                    ..HybridCfg::default()
+                });
+                // A budgeted plan executes the driver's (possibly
+                // augmented) graph, so it is linted against THAT graph.
+                // The cache stores only plans addressing the *request*
+                // graph, so eviction-carrying plans are served fresh each
+                // time (batch dedupe still applies); eviction-free ones
+                // cache normally.
+                let lint_ok = lint_plan(&hplan.graph, &hplan.plan).is_empty();
+                let plan = hplan.plan;
+                // Deadline-truncation guard: see the plain path below.
+                if lint_ok && hplan.graph.n_ops() == g.n_ops() && !deadline.expired() {
+                    self.cache.put(warm::to_cached(g, canon, &plan, fp));
+                }
+                self.stats.cold.fetch_add(1, Ordering::Relaxed);
+                return PlanResponse {
+                    key: fp.key,
+                    outcome: Outcome::Cold,
+                    lint_ok,
+                    plan,
+                    secs: sw.secs(),
+                };
+            }
+            None => {
+                let seed = if self.cfg.warm_start {
+                    self.cache
+                        .get_by_shape(fp.shape)
+                        .and_then(|cp| warm::seed_from(g, canon, &cp))
+                } else {
+                    None
+                };
+                let warmed = seed.is_some();
+                let plan = roam_plan_seeded(g, &roam, seed.as_ref());
+                if warmed {
+                    self.stats.warm_starts.fetch_add(1, Ordering::Relaxed);
+                    (plan, Outcome::Warm)
+                } else {
+                    self.stats.cold.fetch_add(1, Ordering::Relaxed);
+                    (plan, Outcome::Cold)
+                }
+            }
+        };
+
+        let lint_ok = lint_plan(g, &plan).is_empty();
+        // Cache only plans whose search was provably NOT truncated by the
+        // request deadline: every deadline-driven cut (pool `run_or`
+        // fallbacks, BnB/DSA mid-search polls) requires the deadline to
+        // have expired, so "still unexpired at completion" certifies a
+        // full-quality plan. Caching a truncated plan under the
+        // deadline-free key would poison every later unconstrained
+        // request for this graph (the fully-expired path above never
+        // caches for the same reason). Node-budget truncation still
+        // caches — those budgets are part of the cache key.
+        if lint_ok && !deadline.expired() {
+            self.cache.put(warm::to_cached(g, canon, &plan, fp));
+        }
+        PlanResponse {
+            key: fp.key,
+            outcome,
+            plan,
+            lint_ok,
+            secs: sw.secs(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// JSONL request/response encoding (the `roam serve` wire protocol).
+
+/// Parse one JSONL request object. Model-based: `{"model": "bert",
+/// "batch": 32, "depth": 12, "seq_len": 128, "coarse": false, "sgd":
+/// false, "budget": 0.6, "budget_bytes": N, "technique": "hybrid",
+/// "deadline_secs": 5.0}` — only `model` is required.
+pub fn request_from_json(j: &Json) -> Result<PlanRequest, String> {
+    use crate::models::{self, BuildCfg, ModelKind, Optim};
+    let name = j
+        .get("model")
+        .and_then(|m| m.as_str())
+        .ok_or_else(|| "request needs a \"model\" field".to_string())?;
+    let kind = ModelKind::from_name(name).ok_or_else(|| format!("unknown model '{name}'"))?;
+    let num = |k: &str| j.get(k).and_then(|v| v.as_f64());
+    let graph = models::build(kind, &BuildCfg {
+        batch: num("batch").unwrap_or(1.0) as usize,
+        optim: if j.get("sgd").and_then(|v| v.as_bool()).unwrap_or(false) {
+            Optim::Sgd
+        } else {
+            Optim::Adam
+        },
+        seq_len: num("seq_len").map(|v| v as usize),
+        depth: num("depth").unwrap_or(12.0) as usize,
+        fine_grained: !j.get("coarse").and_then(|v| v.as_bool()).unwrap_or(false),
+    });
+    let budget = if let Some(b) = num("budget_bytes") {
+        Some(BudgetSpec::Bytes(b as u64))
+    } else {
+        num("budget").map(BudgetSpec::Fraction)
+    };
+    let technique = match j.get("technique").and_then(|v| v.as_str()) {
+        Some(t) => Technique::from_name(t).ok_or_else(|| format!("unknown technique '{t}'"))?,
+        None => Technique::Hybrid,
+    };
+    Ok(PlanRequest {
+        graph,
+        budget,
+        technique,
+        deadline_secs: num("deadline_secs"),
+    })
+}
+
+/// Encode one response as a JSONL object.
+pub fn response_to_json(id: usize, r: &PlanResponse) -> Json {
+    let stat = |k: &str| r.plan.stat(k).unwrap_or(0.0);
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("key", Json::Str(format!("{:032x}", r.key))),
+        ("outcome", Json::Str(r.outcome.name().to_string())),
+        ("planner", Json::Str(r.plan.planner.clone())),
+        ("theoretical_peak", Json::Num(r.plan.theoretical_peak as f64)),
+        ("actual_peak", Json::Num(r.plan.actual_peak as f64)),
+        ("persistent", Json::Num(r.plan.persistent as f64)),
+        ("total_bytes", Json::Num(r.plan.total_bytes() as f64)),
+        ("lint_ok", Json::Bool(r.lint_ok)),
+        ("secs", Json::Num(r.secs)),
+        ("bnb_nodes", Json::Num(stat("order_nodes_explored"))),
+        ("warm_seeded", Json::Num(stat("warm_seeded"))),
+    ])
+}
+
+/// The end-of-stream summary object (`{"summary": {...}}`).
+pub fn summary_json(svc: &PlanService) -> Json {
+    let counters = |pairs: Vec<(&'static str, u64)>| {
+        Json::Obj(
+            pairs
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), Json::Num(v as f64)))
+                .collect(),
+        )
+    };
+    Json::obj(vec![(
+        "summary",
+        Json::obj(vec![
+            ("service", counters(svc.stats().snapshot())),
+            ("cache", counters(svc.cache().stats().snapshot())),
+            ("cache_len", Json::Num(svc.cache().len() as f64)),
+        ]),
+    )])
+}

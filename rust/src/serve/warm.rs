@@ -1,0 +1,154 @@
+//! Translation between cached canonical plan coordinates and a live
+//! graph, and construction of warm-start seeds.
+//!
+//! Everything here is **verify-then-use**: canonical ranks are arbitrary
+//! within WL-label tie groups (see [`super::canon`]), so a translated
+//! order is only trusted after it checks out as a topological permutation
+//! of the target graph, and a translated layout only after it covers all
+//! items conflict-free. A failed verification degrades to a cache miss /
+//! cold plan — never to a wrong answer. Successful cache-hit replays are
+//! re-evaluated ([`crate::planner::evaluate`]) on the target graph, so
+//! the served metrics are honest for *this* graph, not copied from the
+//! cached one.
+
+use super::cache::CachedPlan;
+use super::canon::{Canon, Fingerprint};
+use crate::graph::Graph;
+use crate::layout::sim::conflicts;
+use crate::layout::Layout;
+use crate::planner::{evaluate, layout_items, ExecutionPlan, WarmSeed};
+use crate::sched::Schedule;
+
+/// Store `plan` (planned on `g`, canonized as `canon`) in canonical
+/// coordinates under the (config-folded) fingerprint `fp`.
+pub fn to_cached(g: &Graph, canon: &Canon, plan: &ExecutionPlan, fp: Fingerprint) -> CachedPlan {
+    CachedPlan {
+        key: fp.key,
+        shape: fp.shape,
+        n_ops: g.n_ops(),
+        n_tensors: g.n_tensors(),
+        order: plan.order.iter().map(|&v| canon.op_rank[v]).collect(),
+        offsets: plan
+            .offsets
+            .iter()
+            .map(|&(t, o)| (canon.tensor_rank[t], o))
+            .collect(),
+        planner: plan.planner.clone(),
+    }
+}
+
+/// Translate the cached order into `g`'s op ids; `None` unless the result
+/// is a topological permutation of `g`.
+fn translate_order(g: &Graph, canon: &Canon, cp: &CachedPlan) -> Option<Vec<usize>> {
+    if cp.n_ops != g.n_ops() || cp.order.len() != g.n_ops() {
+        return None;
+    }
+    let order: Vec<usize> = cp
+        .order
+        .iter()
+        .map(|&r| canon.op_by_rank.get(r as usize).copied())
+        .collect::<Option<Vec<_>>>()?;
+    if !crate::graph::topo::is_topological(g, &order) {
+        return None;
+    }
+    Some(order)
+}
+
+/// Translate the cached offsets into `g`'s tensor ids (entries whose rank
+/// doesn't resolve are dropped — fine for priority use; exact replay
+/// additionally checks coverage).
+fn translate_offsets(g: &Graph, canon: &Canon, cp: &CachedPlan) -> Vec<(usize, u64)> {
+    if cp.n_tensors != g.n_tensors() {
+        return Vec::new();
+    }
+    cp.offsets
+        .iter()
+        .filter_map(|&(r, o)| canon.tensor_by_rank.get(r as usize).map(|&t| (t, o)))
+        .collect()
+}
+
+/// Replay a cached plan onto `g` as a complete, verified
+/// [`ExecutionPlan`] — the cache-**hit** path. Returns `None` when the
+/// translation fails verification (rank ties resolved differently, or
+/// the layout doesn't transfer), in which case the caller re-plans.
+pub fn replay_plan(g: &Graph, canon: &Canon, cp: &CachedPlan) -> Option<ExecutionPlan> {
+    let order = translate_order(g, canon, cp)?;
+    let sched = Schedule::from_order(&order);
+    let offsets = translate_offsets(g, canon, cp);
+    let layout = Layout {
+        offsets: offsets.clone(),
+    };
+    let items = layout_items(g, &sched);
+    let placed: std::collections::HashSet<usize> = offsets.iter().map(|&(t, _)| t).collect();
+    if !items.iter().all(|it| placed.contains(&it.id)) {
+        return None;
+    }
+    if !conflicts(&items, &layout).is_empty() {
+        return None;
+    }
+    // Re-evaluate on the target graph: peaks/fragmentation are recomputed
+    // here, never copied from the cached run.
+    let stats = vec![("served_from_cache".to_string(), 1.0)];
+    Some(evaluate(g, &cp.planner, sched, &layout, 0.0, stats))
+}
+
+/// Build a warm-start seed for `g` from a **shape** near-miss (same
+/// architecture and config, different tensor sizes). The order must
+/// translate to a topological permutation; the offsets ride along as
+/// packing priorities. `None` ⇒ cold-start.
+pub fn seed_from(g: &Graph, canon: &Canon, cp: &CachedPlan) -> Option<WarmSeed> {
+    let order = translate_order(g, canon, cp)?;
+    Some(WarmSeed {
+        order,
+        offsets: translate_offsets(g, canon, cp),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{self, BuildCfg, ModelKind};
+    use crate::planner::{roam_plan, RoamCfg};
+    use crate::serve::canon::canonize;
+
+    fn quick() -> RoamCfg {
+        RoamCfg {
+            parallel: false,
+            order_max_nodes: 4_000,
+            dsa_max_nodes: 4_000,
+            ..RoamCfg::default()
+        }
+    }
+
+    #[test]
+    fn roundtrip_replay_on_same_graph() {
+        let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
+        let canon = canonize(&g);
+        let plan = roam_plan(&g, &quick());
+        let cp = to_cached(&g, &canon, &plan, canon.fingerprint);
+        let replayed = replay_plan(&g, &canon, &cp).expect("self-replay must verify");
+        assert_eq!(replayed.order, plan.order);
+        assert_eq!(replayed.actual_peak, plan.actual_peak);
+        assert_eq!(replayed.theoretical_peak, plan.theoretical_peak);
+        crate::planner::lint::assert_plan_ok(&g, &replayed);
+        // And the seed view of the same artifact validates too.
+        let seed = seed_from(&g, &canon, &cp).expect("seed");
+        assert_eq!(seed.order, plan.order);
+        assert_eq!(seed.offsets.len(), plan.offsets.len());
+    }
+
+    #[test]
+    fn mismatched_artifacts_are_rejected() {
+        let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
+        let canon = canonize(&g);
+        let plan = roam_plan(&g, &quick());
+        let mut cp = to_cached(&g, &canon, &plan, canon.fingerprint);
+        cp.n_ops += 1;
+        assert!(replay_plan(&g, &canon, &cp).is_none());
+        let other = models::build(ModelKind::Mobilenet, &BuildCfg::default());
+        let ocanon = canonize(&other);
+        let cp = to_cached(&g, &canon, &plan, canon.fingerprint);
+        // A different graph's canon must not accept this artifact.
+        assert!(replay_plan(&other, &ocanon, &cp).is_none());
+    }
+}

@@ -143,6 +143,22 @@ impl Timeline {
         (self.cum[b] - self.cum[a + 1]).max(0.0)
     }
 
+    /// Absolute modeled time at which step `s` *begins* (clamped).
+    pub fn start_of_step(&self, s: usize) -> f64 {
+        self.cum[s.min(self.cum.len() - 1)]
+    }
+
+    /// Absolute modeled time at which step `s` *ends* (clamped) — the
+    /// earliest instant a transfer issued "after step `s`" can start.
+    pub fn end_of_step(&self, s: usize) -> f64 {
+        self.cum[(s + 1).min(self.cum.len() - 1)]
+    }
+
+    /// End of the whole timeline.
+    pub fn total_secs(&self) -> f64 {
+        *self.cum.last().unwrap_or(&0.0)
+    }
+
     /// First step whose end lies at or after a transfer of `secs` issued
     /// at the end of step `start` — i.e. the step through which the
     /// transfer keeps its source resident. Clamped to the last step.
@@ -182,7 +198,9 @@ pub fn idle_window(g: &Graph, tl: &Timeline, t: TensorId) -> Option<(usize, usiz
 /// Estimated *exposed* (un-hidden) seconds of swapping `t` out and back
 /// in, from the baseline schedule: the out+in transfer time minus the
 /// compute window of the tensor's idle gap, floored at zero. Tensors
-/// whose gap fully hides the round trip cost (near) nothing.
+/// whose gap fully hides the round trip cost (near) nothing — **in
+/// isolation**; when several tensors contend for the link, use
+/// [`exposed_secs_serialized`], which this is the single-tensor case of.
 pub fn exposed_secs_for(g: &Graph, tl: &Timeline, m: &CostModel, t: TensorId) -> f64 {
     let Some((last_fwd, first_bwd)) = idle_window(g, tl, t) else {
         return m.swap_secs(g.tensors[t].size);
@@ -191,20 +209,104 @@ pub fn exposed_secs_for(g: &Graph, tl: &Timeline, m: &CostModel, t: TensorId) ->
     (m.swap_secs(g.tensors[t].size) - window).max(0.0)
 }
 
+/// One DMA demand on the modeled link: it can start at `release`, takes
+/// `secs` of link time, and every second it finishes past `deadline` is
+/// exposed (un-hidden) stall.
+#[derive(Clone, Copy, Debug)]
+struct DmaJob {
+    release: f64,
+    deadline: f64,
+    secs: f64,
+}
+
+/// Serialize `jobs` on one link (earliest-release first, ties by
+/// deadline, then shortest-first — the full key makes the result a pure
+/// function of the job *multiset*, independent of input order) and
+/// return the total exposed seconds: the link processes one transfer at
+/// a time, so a job issued while the link is busy starts late and eats
+/// into — or overruns — its hiding window. With a single job this
+/// reduces exactly to the isolated `(secs − window).max(0)` formula.
+fn serialize_link(mut jobs: Vec<DmaJob>) -> f64 {
+    let key = |j: &DmaJob| (j.release, j.deadline, j.secs);
+    jobs.sort_by(|a, b| {
+        key(a)
+            .partial_cmp(&key(b))
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut link_free = 0.0f64;
+    let mut exposed = 0.0f64;
+    for j in &jobs {
+        let start = link_free.max(j.release);
+        let done = start + j.secs;
+        link_free = done;
+        exposed += (done - j.deadline).max(0.0);
+    }
+    exposed
+}
+
+/// The link-contention-priced sibling of [`exposed_secs_for`]: estimated
+/// exposed seconds of swapping **all** of `tensors`, with their out+in
+/// round trips *serialized* on the one modeled link. Two tensors whose
+/// idle windows each hide a single round trip do **not** both ride for
+/// free — the second transfer waits for the first, and whatever spills
+/// past its window is exposed. This is what stops many-tensor swaps from
+/// looking free (the ROADMAP's contention lever); per-tensor it equals
+/// [`exposed_secs_for`] exactly.
+pub fn exposed_secs_serialized(
+    g: &Graph,
+    tl: &Timeline,
+    m: &CostModel,
+    tensors: &[TensorId],
+) -> f64 {
+    let jobs = tensors
+        .iter()
+        .map(|&t| {
+            let secs = m.swap_secs(g.tensors[t].size);
+            match idle_window(g, tl, t) {
+                Some((last_fwd, first_bwd)) => {
+                    let release = tl.end_of_step(last_fwd);
+                    // Floor the deadline at the release so a degenerate
+                    // (adjacent-step) window prices as zero, matching the
+                    // isolated formula.
+                    let deadline = tl.start_of_step(first_bwd).max(release);
+                    DmaJob {
+                        release,
+                        deadline,
+                        secs,
+                    }
+                }
+                // No backward consumer: nothing hides the round trip.
+                // Park it at the end of the timeline so it pays its full
+                // cost without displacing windowed transfers.
+                None => DmaJob {
+                    release: tl.total_secs(),
+                    deadline: tl.total_secs(),
+                    secs,
+                },
+            }
+        })
+        .collect();
+    serialize_link(jobs)
+}
+
 /// Measured swap overhead of a *planned* schedule over an augmented
 /// graph with swap pairs inserted.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SwapOverhead {
     /// Σ modeled out+in transfer seconds over all pairs.
     pub transfer_secs: f64,
-    /// Σ un-hidden seconds: out transfers must complete before their
-    /// `SwapIn` runs, in transfers before the clone's first consumer;
-    /// time not covered by the compute scheduled in between is exposed.
+    /// Un-hidden seconds with all transfers *serialized* on the one
+    /// modeled link: out transfers must complete before their `SwapIn`
+    /// runs, in transfers before the clone's first consumer; time not
+    /// covered by the compute scheduled in between — or spent queueing
+    /// behind other transfers — is exposed.
     pub exposed_secs: f64,
 }
 
 /// Measure the overhead of `pairs` on the planned `sched` of the
-/// augmented graph `g`.
+/// augmented graph `g`. Each pair contributes two link jobs (the out and
+/// the in transfer); all jobs contend for the single modeled link, so
+/// many-tensor plans pay queueing on top of their individual exposure.
 pub fn plan_swap_overhead(
     g: &Graph,
     sched: &Schedule,
@@ -216,12 +318,17 @@ pub fn plan_swap_overhead(
     }
     let tl = Timeline::new(g, sched, m);
     let mut o = SwapOverhead::default();
+    let mut jobs = Vec::with_capacity(2 * pairs.len());
     for p in pairs {
         let t = m.transfer_secs(g.tensors[p.original].size);
         o.transfer_secs += 2.0 * t;
         // Out: issued after SwapOut's step, must land before SwapIn runs.
-        let out_window = tl.window_secs(tl.step_of(p.out_op), tl.step_of(p.in_op));
-        o.exposed_secs += (t - out_window).max(0.0);
+        let out_release = tl.end_of_step(tl.step_of(p.out_op));
+        jobs.push(DmaJob {
+            release: out_release,
+            deadline: tl.start_of_step(tl.step_of(p.in_op)).max(out_release),
+            secs: t,
+        });
         // In: issued at SwapIn's step, must land before the clone's first
         // consumer runs.
         let first_use = g.tensors[p.clone]
@@ -230,9 +337,14 @@ pub fn plan_swap_overhead(
             .map(|&c| tl.step_of(c))
             .min()
             .unwrap_or_else(|| tl.step_of(p.in_op));
-        let in_window = tl.window_secs(tl.step_of(p.in_op), first_use);
-        o.exposed_secs += (t - in_window).max(0.0);
+        let in_release = tl.end_of_step(tl.step_of(p.in_op));
+        jobs.push(DmaJob {
+            release: in_release,
+            deadline: tl.start_of_step(first_use).max(in_release),
+            secs: t,
+        });
     }
+    o.exposed_secs = serialize_link(jobs);
     o
 }
 
@@ -310,6 +422,31 @@ mod tests {
         assert_eq!(tl.step_when_done(0, 2.1), 2);
         // A huge transfer clamps to the last step.
         assert_eq!(tl.step_when_done(0, 1e9), tl.last_step());
+    }
+
+    #[test]
+    fn serialized_link_prices_contention() {
+        let g = chain();
+        let s = Schedule::from_order(&[0, 1, 2, 3]);
+        let tl = Timeline::new(&g, &s, &m());
+        // Singleton: serialized == isolated, for both tensor shapes.
+        for t in [1usize, 2] {
+            let a = exposed_secs_for(&g, &tl, &m(), t);
+            let b = exposed_secs_serialized(&g, &tl, &m(), &[t]);
+            assert!((a - b).abs() < 1e-9, "tensor {t}: {a} vs {b}");
+        }
+        // Two copies of act0's demand cannot both hide under act0's
+        // window: serialized exposure strictly exceeds the isolated sum.
+        let both = exposed_secs_serialized(&g, &tl, &m(), &[1, 1]);
+        let lone = exposed_secs_for(&g, &tl, &m(), 1);
+        assert!(
+            both > 2.0 * lone + 1e-9,
+            "no contention priced: {both} vs 2×{lone}"
+        );
+        // Order of the tensor list must not matter.
+        let ab = exposed_secs_serialized(&g, &tl, &m(), &[1, 2]);
+        let ba = exposed_secs_serialized(&g, &tl, &m(), &[2, 1]);
+        assert!((ab - ba).abs() < 1e-9);
     }
 
     #[test]

@@ -31,20 +31,23 @@
 //!    technique mixes swap with recomputation per tensor,
 //!    cheapest-overhead-first.
 //!
-//! Fidelity notes: host memory is modeled as unbounded; transfers are
-//! serialised per tensor but overlap compute freely (one DMA engine per
-//! direction, no contention modeling); and `SwapIn` re-materialises
-//! values exactly — this substrate only accounts bytes, seconds and
-//! precedence. The CLI exposes the pure-swap driver as `roam swap` and
-//! the technique comparison as `roam compare --budget F --technique T`.
+//! Fidelity notes: host memory is modeled as unbounded; transfers overlap
+//! compute freely but **contend with each other** — all DMAs are
+//! serialised on the one modeled link
+//! ([`cost::exposed_secs_serialized`]), so a queue of individually
+//! well-hidden transfers still pays exposed queueing time; and `SwapIn`
+//! re-materialises values exactly — this substrate only accounts bytes,
+//! seconds and precedence. The CLI exposes the pure-swap driver as
+//! `roam swap` and the technique comparison as
+//! `roam compare --budget F --technique T`.
 
 pub mod cost;
 pub mod rewrite;
 pub mod select;
 
 pub use cost::{
-    exposed_secs_for, idle_window, plan_swap_overhead, transfer_aware_peak, CostModel,
-    SwapOverhead, Timeline,
+    exposed_secs_for, exposed_secs_serialized, idle_window, plan_swap_overhead,
+    transfer_aware_peak, CostModel, SwapOverhead, Timeline,
 };
 pub use rewrite::{rewrite, SwapPair, SwapRewriteResult, HANDLE_BYTES};
 pub use select::{swap_candidates, unit_swap_cost, SwapCandidate};

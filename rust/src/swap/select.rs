@@ -16,7 +16,7 @@
 //! standalone per-tensor view of that ranking — a tool/test surface
 //! that pins the comparator independently of the driver.
 
-use super::cost::{exposed_secs_for, CostModel, Timeline};
+use super::cost::{exposed_secs_serialized, CostModel, Timeline};
 use crate::evict::is_evictable;
 use crate::graph::{Graph, TensorId};
 
@@ -36,20 +36,21 @@ pub struct SwapCandidate {
 }
 
 /// Transfer and exposed seconds of swapping every tensor in `tensors`
-/// (an eviction unit), under the baseline timeline.
+/// (an eviction unit), under the baseline timeline. Exposure prices link
+/// *contention*: the unit's round trips are serialized on the one modeled
+/// link ([`exposed_secs_serialized`]), so a unit of many individually
+/// well-hidden tensors no longer looks free.
 pub fn unit_swap_cost(
     g: &Graph,
     tl: &Timeline,
     m: &CostModel,
     tensors: &[TensorId],
 ) -> (f64, f64) {
-    let mut transfer = 0.0;
-    let mut exposed = 0.0;
-    for &t in tensors {
-        transfer += m.swap_secs(g.tensors[t].size);
-        exposed += exposed_secs_for(g, tl, m, t);
-    }
-    (transfer, exposed)
+    let transfer = tensors
+        .iter()
+        .map(|&t| m.swap_secs(g.tensors[t].size))
+        .sum();
+    (transfer, exposed_secs_serialized(g, tl, m, tensors))
 }
 
 /// Enumerate per-tensor swap candidates, best first. `live_at_peak` is a

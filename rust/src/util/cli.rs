@@ -90,6 +90,16 @@ impl Args {
         self.flags.iter().any(|f| f == key)
     }
 
+    /// Boolean flag tolerant of the parser's documented greediness: a
+    /// value-less flag followed by a positional (`--no-warm DIR`) parses
+    /// as a key=value pair, so "the key was given at all" — bare or with
+    /// a swallowed value — counts as set. Callers that also take
+    /// positionals should prefer this over [`Args::flag`] (and may
+    /// recover the swallowed token via [`Args::opt`]).
+    pub fn bool_flag(&self, key: &str) -> bool {
+        self.flag(key) || self.opts.contains_key(key)
+    }
+
     /// Positional argument by index.
     pub fn positional(&self, i: usize) -> Option<&str> {
         self.pos.get(i).map(|s| s.as_str())
@@ -126,6 +136,19 @@ mod tests {
         assert!(!a.flag("quiet"));
         assert_eq!(a.positional(0), Some("train"));
         assert_eq!(a.positional(1), Some("file.hlo"));
+    }
+
+    #[test]
+    fn bool_flag_tolerates_greedy_binding() {
+        // `--no-warm reqs` binds "reqs" as the flag's value…
+        let a = parse("batch --no-warm reqs");
+        assert!(!a.flag("no-warm"));
+        assert!(a.bool_flag("no-warm")); // …but the key was clearly given
+        assert_eq!(a.opt("no-warm"), Some("reqs")); // and is recoverable
+        let b = parse("batch reqs --no-warm");
+        assert!(b.flag("no-warm"));
+        assert!(b.bool_flag("no-warm"));
+        assert!(!parse("batch reqs").bool_flag("no-warm"));
     }
 
     #[test]

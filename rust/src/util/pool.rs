@@ -25,12 +25,20 @@
 use crate::util::timer::Deadline;
 use std::sync::atomic::{AtomicU64, Ordering};
 
+/// Monotonic source of [`Pool`] identity tokens (see [`Pool::id`]).
+static NEXT_POOL_ID: AtomicU64 = AtomicU64::new(1);
+
 /// A scoped work-stealing pool. Cheap to construct per fan-out; threads are
 /// spawned inside [`Pool::run`] and joined before it returns.
 #[derive(Clone, Copy, Debug)]
 pub struct Pool {
     workers: usize,
     deadline: Deadline,
+    /// Identity token, assigned at construction and preserved by
+    /// `Copy`/[`Pool::with_deadline`]. Call sites that are supposed to
+    /// share one pool (the planner's ordering and layout fan-outs) record
+    /// the ids they observed so tests can assert the wiring stayed shared.
+    id: u64,
 }
 
 impl Pool {
@@ -40,6 +48,7 @@ impl Pool {
         Pool {
             workers: workers.max(1),
             deadline: Deadline::unlimited(),
+            id: NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed),
         }
     }
 
@@ -47,6 +56,12 @@ impl Pool {
     pub fn with_deadline(mut self, deadline: Deadline) -> Pool {
         self.deadline = deadline;
         self
+    }
+
+    /// Identity token of this pool (stable across copies; distinct across
+    /// [`Pool::new`] calls).
+    pub fn id(&self) -> u64 {
+        self.id
     }
 
     /// Hardware parallelism (1 when unknown).
@@ -263,6 +278,17 @@ mod tests {
     fn unlimited_deadline_takes_exact_path() {
         let out = Pool::new(2).run_or(10, |_| "exact", |_| "fallback");
         assert!(out.iter().all(|&s| s == "exact"));
+    }
+
+    #[test]
+    fn ids_distinct_and_copy_stable() {
+        let a = Pool::new(2);
+        let b = Pool::new(2);
+        assert_ne!(a.id(), b.id());
+        let a2 = a.with_deadline(Deadline::unlimited());
+        assert_eq!(a.id(), a2.id());
+        let a3 = a; // Copy
+        assert_eq!(a.id(), a3.id());
     }
 
     #[test]

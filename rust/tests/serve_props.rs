@@ -1,0 +1,309 @@
+//! Property + integration tests for the serving layer (`serve/`): cache
+//! determinism (same graph twice ⇒ byte-identical cached artifact and a
+//! recorded hit), fingerprint invariance under node-id permutation,
+//! batch single-flight dedupe, deadline degradation, and warm-started
+//! re-planning validity (lint-clean, never above the cold plan's peak)
+//! on the transformer and mobile workloads.
+
+use roam::graph::random::{random_training_graph, RandomGraphCfg};
+use roam::graph::{Graph, OpId, TensorClass};
+use roam::models::{self, BuildCfg, ModelKind};
+use roam::planner::{assert_plan_ok, roam_plan, RoamCfg};
+use roam::serve::{canonize, CacheCfg, Outcome, PlanCache, PlanRequest, PlanService, ServeCfg};
+use roam::util::quick::forall;
+use roam::util::Pcg64;
+use std::collections::HashMap;
+
+/// Deterministic planner configuration (sequential, default budgets).
+fn det_roam() -> RoamCfg {
+    RoamCfg {
+        parallel: false,
+        ..RoamCfg::default()
+    }
+}
+
+/// Faster deterministic configuration for the random-graph properties.
+fn quick_roam() -> RoamCfg {
+    RoamCfg {
+        parallel: false,
+        order_max_nodes: 4_000,
+        dsa_max_nodes: 4_000,
+        ..RoamCfg::default()
+    }
+}
+
+fn service(roam: RoamCfg) -> PlanService {
+    PlanService::new(PlanCache::new(CacheCfg::default()), ServeCfg {
+        roam,
+        workers: 1,
+        ..Default::default()
+    })
+}
+
+fn stat(plan: &roam::planner::ExecutionPlan, key: &str) -> f64 {
+    plan.stat(key).unwrap_or(0.0)
+}
+
+/// Rebuild `g` with ops inserted in a random topological order and
+/// tensors renumbered/renamed accordingly — an isomorphic graph with
+/// permuted node ids (names deliberately changed: they must not enter
+/// the fingerprint).
+fn permuted_copy(g: &Graph, rng: &mut Pcg64) -> Graph {
+    let (preds, succs) = g.adjacency();
+    let n = g.n_ops();
+    let mut indeg: Vec<usize> = preds.iter().map(|p| p.len()).collect();
+    let mut ready: Vec<OpId> = (0..n).filter(|&v| indeg[v] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    while !ready.is_empty() {
+        let i = rng.usize_in(0, ready.len());
+        let v = ready.swap_remove(i);
+        order.push(v);
+        for &s in &succs[v] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                ready.push(s);
+            }
+        }
+    }
+    assert_eq!(order.len(), n, "input graph must be acyclic");
+
+    let mut out = Graph::new("permuted");
+    let mut tmap: HashMap<usize, usize> = HashMap::new();
+    for &v in &order {
+        for &t in &g.ops[v].inputs {
+            if !tmap.contains_key(&t) {
+                // First sight of a graph input (producers map earlier).
+                let nt =
+                    out.add_input_tensor(format!("p_in{t}"), g.tensors[t].size, g.tensors[t].class);
+                tmap.insert(t, nt);
+            }
+        }
+        let inputs: Vec<usize> = g.ops[v].inputs.iter().map(|&t| tmap[&t]).collect();
+        let specs: Vec<(String, u64, TensorClass)> = g.ops[v]
+            .outputs
+            .iter()
+            .map(|&t| (format!("p_t{t}"), g.tensors[t].size, g.tensors[t].class))
+            .collect();
+        let specs_ref: Vec<(&str, u64, TensorClass)> = specs
+            .iter()
+            .map(|(nm, s, c)| (nm.as_str(), *s, *c))
+            .collect();
+        let (_, outs) = out.add_op(
+            format!("p_op{v}"),
+            g.ops[v].kind,
+            g.ops[v].phase,
+            &inputs,
+            &specs_ref,
+        );
+        for (&gt, &lt) in g.ops[v].outputs.iter().zip(outs.iter()) {
+            tmap.insert(gt, lt);
+        }
+    }
+    // Dangling graph inputs nobody consumes still count toward identity.
+    for t in 0..g.n_tensors() {
+        if !tmap.contains_key(&t) {
+            assert!(g.tensors[t].producer.is_none());
+            let nt =
+                out.add_input_tensor(format!("p_in{t}"), g.tensors[t].size, g.tensors[t].class);
+            tmap.insert(t, nt);
+        }
+    }
+    for t in 0..g.n_tensors() {
+        if g.tensors[t].is_output {
+            out.mark_output(tmap[&t]);
+        }
+    }
+    out
+}
+
+#[test]
+fn fingerprint_invariant_under_node_permutation() {
+    forall("isomorphic graphs collide on the fingerprint", 20, |rng| {
+        let fwd_ops = rng.usize_in(3, 12);
+        let g = random_training_graph(rng, &RandomGraphCfg {
+            fwd_ops,
+            ..Default::default()
+        });
+        let p = permuted_copy(&g, rng);
+        let cg = canonize(&g);
+        let cp = canonize(&p);
+        if cg.fingerprint.key != cp.fingerprint.key {
+            return Err("full keys differ across an id permutation".into());
+        }
+        if cg.fingerprint.shape != cp.fingerprint.shape {
+            return Err("shape keys differ across an id permutation".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn same_graph_twice_yields_byte_identical_cached_plan_and_a_hit() {
+    let mut rng = Pcg64::new(2024);
+    let g = random_training_graph(&mut rng, &RandomGraphCfg {
+        fwd_ops: 8,
+        ..Default::default()
+    });
+
+    // (a) determinism: two fresh services cache byte-identical artifacts.
+    let svc1 = service(quick_roam());
+    let svc2 = service(quick_roam());
+    let r1 = svc1.serve_batch(&[PlanRequest::plain(g.clone())]);
+    let r2 = svc2.serve_batch(&[PlanRequest::plain(g.clone())]);
+    assert_eq!(r1[0].key, r2[0].key);
+    assert!(r1[0].lint_ok && r2[0].lint_ok);
+    let cached1 = svc1.cache().get(r1[0].key).expect("cached after serve");
+    let cached2 = svc2.cache().get(r2[0].key).expect("cached after serve");
+    assert_eq!(
+        cached1.to_json().to_string(),
+        cached2.to_json().to_string(),
+        "cached plan artifacts must be byte-identical across identical runs"
+    );
+
+    // (b) the second serve of the same graph is answered from the cache.
+    let hits_before = svc1
+        .cache()
+        .stats()
+        .hits
+        .load(std::sync::atomic::Ordering::Relaxed);
+    let r3 = svc1.serve_batch(&[PlanRequest::plain(g.clone())]);
+    assert_eq!(r3[0].outcome, Outcome::CacheHit);
+    assert!(r3[0].lint_ok);
+    assert_plan_ok(&g, &r3[0].plan);
+    let hits_after = svc1
+        .cache()
+        .stats()
+        .hits
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(hits_after > hits_before, "no cache hit recorded");
+    // Identical plan content as the cold run.
+    assert_eq!(r3[0].plan.order, r1[0].plan.order);
+    assert_eq!(r3[0].plan.actual_peak, r1[0].plan.actual_peak);
+}
+
+#[test]
+fn batch_dedupes_identical_requests_single_flight() {
+    let mut rng = Pcg64::new(7);
+    let g = random_training_graph(&mut rng, &RandomGraphCfg {
+        fwd_ops: 6,
+        ..Default::default()
+    });
+    let h = random_training_graph(&mut rng, &RandomGraphCfg {
+        fwd_ops: 7,
+        ..Default::default()
+    });
+    let svc = service(quick_roam());
+    let reqs = vec![
+        PlanRequest::plain(g.clone()),
+        PlanRequest::plain(g.clone()),
+        PlanRequest::plain(g.clone()),
+        PlanRequest::plain(h.clone()),
+    ];
+    let rs = svc.serve_batch(&reqs);
+    assert_eq!(rs.len(), 4);
+    assert_eq!(rs[0].outcome, Outcome::Cold);
+    assert_eq!(rs[1].outcome, Outcome::Dedup);
+    assert_eq!(rs[2].outcome, Outcome::Dedup);
+    assert_eq!(rs[3].outcome, Outcome::Cold);
+    // Deduped members receive the representative's plan verbatim.
+    assert_eq!(rs[0].plan.order, rs[1].plan.order);
+    assert_eq!(rs[0].key, rs[2].key);
+    assert_ne!(rs[0].key, rs[3].key);
+    for (r, graph) in rs.iter().zip([&g, &g, &g, &h]) {
+        assert!(r.lint_ok);
+        assert_plan_ok(graph, &r.plan);
+    }
+    let s: HashMap<_, _> = svc.stats().snapshot().into_iter().collect();
+    assert_eq!(s["requests"], 4);
+    assert_eq!(s["dedupe_hits"], 2);
+    assert_eq!(s["cold"], 2);
+}
+
+#[test]
+fn expired_deadline_degrades_to_heuristic_not_a_stall() {
+    let mut rng = Pcg64::new(11);
+    let g = random_training_graph(&mut rng, &RandomGraphCfg {
+        fwd_ops: 8,
+        ..Default::default()
+    });
+    let svc = service(quick_roam());
+    let mut req = PlanRequest::plain(g.clone());
+    req.deadline_secs = Some(1e-9);
+    let rs = svc.serve_batch(&[req]);
+    assert_eq!(rs[0].outcome, Outcome::Degraded);
+    assert!(rs[0].lint_ok, "degraded plans must still be valid");
+    assert_plan_ok(&g, &rs[0].plan);
+    let s: HashMap<_, _> = svc.stats().snapshot().into_iter().collect();
+    assert_eq!(s["degraded"], 1);
+}
+
+/// Warm-start acceptance on the transformer and mobile workloads: plan a
+/// base model, then serve a *rescaled* variant (same architecture,
+/// doubled batch). The re-plan must be warm-seeded from the shape
+/// near-miss, pass the plan lint on its graph, never exceed the
+/// cold-start plan's peak, and never explore more BnB nodes than cold.
+#[test]
+fn warm_started_replans_are_valid_and_never_worse() {
+    let cases: Vec<(&str, Graph, Graph)> = vec![
+        (
+            "synthetic-transformer",
+            models::build(ModelKind::SyntheticTransformer, &BuildCfg {
+                batch: 1,
+                depth: 2,
+                ..Default::default()
+            }),
+            models::build(ModelKind::SyntheticTransformer, &BuildCfg {
+                batch: 2,
+                depth: 2,
+                ..Default::default()
+            }),
+        ),
+        (
+            "mobilenet",
+            models::build(ModelKind::Mobilenet, &BuildCfg {
+                batch: 1,
+                ..Default::default()
+            }),
+            models::build(ModelKind::Mobilenet, &BuildCfg {
+                batch: 2,
+                ..Default::default()
+            }),
+        ),
+    ];
+    for (name, base, rescaled) in cases {
+        // The rescaled variant is a shape near-miss, not an exact hit.
+        let cb = canonize(&base).fingerprint;
+        let cr = canonize(&rescaled).fingerprint;
+        assert_eq!(cb.shape, cr.shape, "{name}: shape keys must match");
+        assert_ne!(cb.key, cr.key, "{name}: full keys must differ");
+
+        let svc = service(det_roam());
+        let r0 = svc.serve_batch(&[PlanRequest::plain(base.clone())]);
+        assert_eq!(r0[0].outcome, Outcome::Cold, "{name}");
+        assert!(r0[0].lint_ok, "{name}");
+
+        let cold = roam_plan(&rescaled, &det_roam());
+        let r1 = svc.serve_batch(&[PlanRequest::plain(rescaled.clone())]);
+        assert_eq!(
+            r1[0].outcome,
+            Outcome::Warm,
+            "{name}: rescaled request must warm-start from the shape index"
+        );
+        let warm = &r1[0].plan;
+        assert_eq!(stat(warm, "warm_seeded"), 1.0, "{name}");
+        assert!(r1[0].lint_ok, "{name}");
+        assert_plan_ok(&rescaled, warm);
+        assert!(
+            warm.actual_peak <= cold.actual_peak,
+            "{name}: warm peak {} exceeds cold peak {}",
+            warm.actual_peak,
+            cold.actual_peak
+        );
+        assert!(
+            stat(warm, "order_nodes_explored") <= stat(&cold, "order_nodes_explored"),
+            "{name}: warm explored more bnb nodes than cold"
+        );
+        let s: HashMap<_, _> = svc.stats().snapshot().into_iter().collect();
+        assert!(s["warm_starts"] >= 1, "{name}");
+    }
+}

@@ -33,6 +33,69 @@ fn quick_cfg(technique: Technique) -> HybridCfg {
     }
 }
 
+/// Link contention is priced: two tensors whose idle windows each hide a
+/// full swap round trip in isolation are NOT both free — their DMAs share
+/// one link, so the serialized unit cost must expose the queueing time
+/// the isolated per-tensor sum hides.
+#[test]
+fn two_tensor_link_contention_is_priced() {
+    use roam::graph::{Graph, OpKind, TensorClass};
+    use roam::swap::{exposed_secs_for, exposed_secs_serialized, unit_swap_cost, Timeline};
+
+    // Two independent 100 B activations produced early (a, b), a compute
+    // bridge (c -> big) whose window hides ONE 2 s round trip but not
+    // two, and a backward op reading both. Cost model: 100 B/s both for
+    // link and compute, zero latency — 1 B = 10 ms everywhere.
+    let mut g = Graph::new("contend");
+    let x = g.add_input_tensor("x", 10, TensorClass::Input);
+    let (_, t0) = g.add_op("a", OpKind::MatMul, roam::graph::Phase::Forward, &[x],
+        &[("act0", 100, TensorClass::Activation)]);
+    let (_, t1) = g.add_op("b", OpKind::MatMul, roam::graph::Phase::Forward, &[x],
+        &[("act1", 100, TensorClass::Activation)]);
+    let (_, t2) = g.add_op("c", OpKind::MatMul, roam::graph::Phase::Forward, &[x],
+        &[("act2", 10, TensorClass::Activation)]);
+    let (_, t3) = g.add_op("big", OpKind::MatMul, roam::graph::Phase::Forward, &[t2[0]],
+        &[("act3", 250, TensorClass::Activation)]);
+    let (_, l) = g.add_op("loss", OpKind::Loss, roam::graph::Phase::Loss, &[t3[0]],
+        &[("loss", 1, TensorClass::TempBuffer)]);
+    g.mark_output(l[0]);
+    let (_, d) = g.add_op("bwd", OpKind::MatMul, roam::graph::Phase::Backward,
+        &[t0[0], t1[0], l[0]], &[("dx", 10, TensorClass::Gradient)]);
+    g.mark_output(d[0]);
+
+    let m = roam::swap::CostModel {
+        pcie_bytes_per_sec: 100.0, // a 100 B tensor = 1 s per direction
+        pcie_latency_secs: 0.0,
+        compute_bytes_per_sec: 100.0,
+    };
+    let sched = roam::sched::Schedule::from_order(&[0, 1, 2, 3, 4, 5]);
+    let tl = Timeline::new(&g, &sched, &m);
+    let (a0, a1) = (t0[0], t1[0]);
+
+    // In isolation both are fully hidden: each 2 s round trip fits the
+    // ~2.6–3.6 s of compute between its last forward use and `bwd`.
+    let e0 = exposed_secs_for(&g, &tl, &m, a0);
+    let e1 = exposed_secs_for(&g, &tl, &m, a1);
+    assert!(e0 < 1e-9, "act0 alone should be fully hidden, got {e0}");
+    assert!(e1 < 1e-9, "act1 alone should be fully hidden, got {e1}");
+    // Together the 4 s of link demand exceed the shared window: the
+    // serialized unit exposure must strictly exceed the isolated sum (0).
+    let serialized = exposed_secs_serialized(&g, &tl, &m, &[a0, a1]);
+    assert!(
+        serialized > e0 + e1 + 1e-9,
+        "contention not priced: serialized {serialized} vs isolated {}",
+        e0 + e1
+    );
+    // Order of the unit's tensor list must not matter.
+    let flipped = exposed_secs_serialized(&g, &tl, &m, &[a1, a0]);
+    assert!((serialized - flipped).abs() < 1e-9);
+    // unit_swap_cost reports the same contention-aware exposure.
+    let (transfer, exposed) = unit_swap_cost(&g, &tl, &m, &[a0, a1]);
+    assert!((exposed - serialized).abs() < 1e-9);
+    assert!((transfer - 4.0).abs() < 1e-9);
+    assert!(exposed <= transfer + 1e-9);
+}
+
 #[test]
 fn swap_rewrites_always_validate() {
     forall("swap rewrite preserves graph validity", 25, |rng| {
