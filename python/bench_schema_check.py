@@ -1,0 +1,152 @@
+#!/usr/bin/env python3
+"""Validate the repo-root BENCH_*.json trajectory files.
+
+The trajectory contract (benchkit::append_trajectory) is
+
+    {"bench": ..., "schema": ..., "generated_by": ..., "runs": [run, ...]}
+
+plus an optional "note" field that marks the committed *placeholder*
+shape (no toolchain in the authoring container), which must carry an
+empty "runs" array. Each bench has a pinned schema string and a pinned
+per-run key set; this script fails fast on any drift — a renamed field,
+a clobbered placeholder, a bench silently writing the old single-run
+shape — instead of letting CI upload malformed trajectories.
+
+Usage:
+    bench_schema_check.py [--allow-placeholder] FILE...
+
+Without --allow-placeholder every file must hold at least one run (the
+post-bench CI step); with it, placeholder files (note + empty runs) pass
+(the committed-state check).
+"""
+
+import json
+import os
+import sys
+
+EXPECTED = {
+    "BENCH_planner.json": {
+        "bench": "leaf_solver_perf",
+        "schema": "planner-perf-v2",
+        "run_keys": ["small", "leaf_order_search", "dsa_search", "planner_wall_clock"],
+        "points": None,
+    },
+    "BENCH_swap.json": {
+        "bench": "swap_tradeoff",
+        "schema": "swap-tradeoff-v3",
+        "run_keys": ["models", "coarse", "order_lambda", "points"],
+        "points": (
+            "points",
+            [
+                "model",
+                "technique",
+                "fraction",
+                "budget",
+                "total",
+                "baseline_total",
+                "met",
+                "recompute_ops",
+                "recompute_secs",
+                "swapped",
+                "swap_moved_bytes",
+                "swap_exposed_secs",
+                "exposed_secs_before_slide",
+                "exposed_secs_after_slide",
+            ],
+        ),
+    },
+    "BENCH_serve.json": {
+        "bench": "serve_throughput",
+        "schema": "serve-throughput-v1",
+        "run_keys": [
+            "cold_secs",
+            "hit_secs",
+            "warm_secs",
+            "dedupe_ratio",
+            "cache_hits",
+            "warm_outcome",
+            "cold_bnb_nodes",
+            "warm_bnb_nodes",
+        ],
+        "points": None,
+    },
+}
+
+
+def check_file(path, allow_placeholder):
+    errors = []
+    name = os.path.basename(path)
+    exp = EXPECTED.get(name)
+    if exp is None:
+        return [f"{name}: unknown trajectory file (extend EXPECTED)"]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{name}: unreadable/unparseable: {e}"]
+
+    for key in ("bench", "schema", "generated_by", "runs"):
+        if key not in doc:
+            errors.append(f"{name}: missing top-level key {key!r}")
+    if errors:
+        return errors
+    if doc["bench"] != exp["bench"]:
+        errors.append(f"{name}: bench {doc['bench']!r} != {exp['bench']!r}")
+    if doc["schema"] != exp["schema"]:
+        errors.append(f"{name}: schema {doc['schema']!r} != {exp['schema']!r}")
+    runs = doc["runs"]
+    if not isinstance(runs, list):
+        return errors + [f"{name}: 'runs' is not a list"]
+
+    if "note" in doc:
+        # Placeholder shape: tolerated only when explicitly allowed and
+        # only with zero runs (a populated file must have dropped the
+        # note via append_trajectory).
+        if runs:
+            errors.append(f"{name}: placeholder note present with {len(runs)} run(s)")
+        elif not allow_placeholder:
+            errors.append(f"{name}: still the committed placeholder (no runs)")
+        return errors
+    if not runs:
+        errors.append(f"{name}: no runs recorded")
+        return errors
+
+    for i, run in enumerate(runs):
+        if not isinstance(run, dict):
+            errors.append(f"{name}: run {i} is not an object")
+            continue
+        for key in exp["run_keys"]:
+            if key not in run:
+                errors.append(f"{name}: run {i} missing key {key!r}")
+        if exp["points"] is not None:
+            list_key, point_keys = exp["points"]
+            points = run.get(list_key, [])
+            if not isinstance(points, list) or not points:
+                errors.append(f"{name}: run {i} has no {list_key!r}")
+                continue
+            for j, p in enumerate(points):
+                missing = [k for k in point_keys if k not in p]
+                if missing:
+                    errors.append(f"{name}: run {i} point {j} missing {missing}")
+    return errors
+
+
+def main(argv):
+    allow_placeholder = "--allow-placeholder" in argv
+    files = [a for a in argv if not a.startswith("--")]
+    if not files:
+        print(__doc__)
+        return 2
+    all_errors = []
+    for path in files:
+        all_errors += check_file(path, allow_placeholder)
+    for e in all_errors:
+        print(f"SCHEMA ERROR: {e}")
+    if all_errors:
+        return 1
+    print(f"bench schemas ok: {', '.join(os.path.basename(f) for f in files)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

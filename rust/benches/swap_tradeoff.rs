@@ -7,7 +7,12 @@
 //!
 //! `cargo bench --bench swap_tradeoff [-- --models vit,bert]
 //!  [--fractions 1.0,0.8,0.6,0.4] [--batch 1] [--coarse]
-//!  [--pcie-gbps 16] [--compute-gbps 800]`
+//!  [--pcie-gbps 16] [--compute-gbps 800] [--swap-lambda 0]`
+//!
+//! Every point also reports the slide post-pass accounting
+//! (`exposed_secs_before_slide` / `exposed_secs_after_slide`, after ≤
+//! before by construction) — CI's bench gate asserts the pass strictly
+//! reduced exposure somewhere on the gpt2-coarse sweep.
 //!
 //! `--coarse` builds coarse-granularity SGD graphs (the CI-scale GPT-2
 //! convention). Besides the `bench_results/` table this writes the
@@ -33,6 +38,7 @@ fn main() {
     let batch = args.usize("batch", 1);
     let coarse = args.flag("coarse");
     let cost = CostModel::from_args(&args);
+    let swap_lambda = args.f64("swap-lambda", 0.0);
 
     let mut rep = Report::new(
         "swap_tradeoff",
@@ -50,6 +56,7 @@ fn main() {
             "swapped",
             "moved_MiB",
             "exposed_ms",
+            "slide_cut_ms",
         ],
     );
     let mut traj_rows: Vec<Json> = Vec::new();
@@ -69,6 +76,7 @@ fn main() {
             let cfg = HybridCfg {
                 technique,
                 cost,
+                order_lambda: swap_lambda,
                 roam: RoamCfg {
                     time_limit_secs: args.f64("time-limit", 600.0),
                     ..Default::default()
@@ -90,6 +98,10 @@ fn main() {
                     p.swapped.to_string(),
                     mib(p.swap_moved_bytes),
                     format!("{:.3}", p.swap_exposed_secs * 1e3),
+                    format!(
+                        "{:.3}",
+                        (p.exposed_secs_before_slide - p.exposed_secs_after_slide) * 1e3
+                    ),
                 ]);
                 traj_rows.push(Json::obj(vec![
                     ("model", Json::Str(name.to_string())),
@@ -104,6 +116,14 @@ fn main() {
                     ("swapped", Json::Num(p.swapped as f64)),
                     ("swap_moved_bytes", Json::Num(p.swap_moved_bytes as f64)),
                     ("swap_exposed_secs", Json::Num(p.swap_exposed_secs)),
+                    (
+                        "exposed_secs_before_slide",
+                        Json::Num(p.exposed_secs_before_slide),
+                    ),
+                    (
+                        "exposed_secs_after_slide",
+                        Json::Num(p.exposed_secs_after_slide),
+                    ),
                 ]));
             }
         }
@@ -115,6 +135,7 @@ fn main() {
     let run = Json::obj(vec![
         ("models", Json::Str(model_names.clone())),
         ("coarse", Json::Bool(coarse)),
+        ("order_lambda", Json::Num(swap_lambda)),
         ("points", Json::Arr(traj_rows)),
     ]);
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
@@ -124,7 +145,7 @@ fn main() {
     roam::benchkit::append_trajectory(
         &path,
         "swap_tradeoff",
-        "swap-tradeoff-v2",
+        "swap-tradeoff-v3",
         "cargo bench --bench swap_tradeoff",
         run,
     );

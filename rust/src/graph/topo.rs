@@ -40,6 +40,35 @@ pub fn program_order(g: &Graph) -> Vec<OpId> {
     order
 }
 
+/// Kahn's algorithm keyed by an arbitrary per-op priority: among ready
+/// operators always pick the smallest `(pri[v], v)`. [`program_order`]
+/// is the identity-priority case (kept separate as the allocation-free
+/// hot path); the hybrid driver's warm-seed carry uses this to complete
+/// a previous round's relative order onto an augmented graph.
+pub fn priority_order(g: &Graph, pri: &[u64]) -> Vec<OpId> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let (preds, succs) = g.adjacency();
+    let n = g.n_ops();
+    let mut indeg: Vec<usize> = preds.iter().map(|p| p.len()).collect();
+    let mut ready: BinaryHeap<Reverse<(u64, OpId)>> = (0..n)
+        .filter(|&v| indeg[v] == 0)
+        .map(|v| Reverse((pri[v], v)))
+        .collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(Reverse((_, v))) = ready.pop() {
+        order.push(v);
+        for &s in &succs[v] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                ready.push(Reverse((pri[s], s)));
+            }
+        }
+    }
+    assert_eq!(order.len(), n, "graph has a cycle");
+    order
+}
+
 /// TensorFlow baseline: FIFO queue of ready operators ordered by the time
 /// they became ready (ties broken by op id at initialisation).
 pub fn ready_queue_order(g: &Graph) -> Vec<OpId> {
@@ -114,6 +143,18 @@ mod tests {
         let g = diamond();
         let o = ready_queue_order(&g);
         assert!(is_topological(&g, &o));
+    }
+
+    #[test]
+    fn priority_order_respects_keys_within_dependences() {
+        let g = diamond();
+        // Identity priorities reproduce program order.
+        let id_pri: Vec<u64> = (0..g.n_ops() as u64).collect();
+        assert_eq!(priority_order(&g, &id_pri), program_order(&g));
+        // Preferring c (op 2) over b (op 1) flips only that free choice.
+        let o = priority_order(&g, &[0, 5, 1, 0]);
+        assert!(is_topological(&g, &o));
+        assert_eq!(o, vec![0, 2, 1, 3]);
     }
 
     #[test]

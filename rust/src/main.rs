@@ -6,6 +6,7 @@
 //! roam recompute --model gpt2 --budget 0.6 [--budget-bytes N] [--strategy greedy|segment]
 //! roam swap      --model gpt2 --budget 0.6 [--technique swap|recompute|hybrid]
 //!                [--pcie-gbps 16] [--pcie-latency-us 10] [--compute-gbps 800]
+//!                [--swap-lambda BYTES_PER_SEC] [--no-slide]
 //! roam plan-hlo  --hlo artifacts/train_step.hlo.txt [--out plan.json]
 //! roam train     [--artifacts artifacts] [--steps 200] [--log-every 10] [--seed 0]
 //! roam compare   --model vit --batch 1 [--budget 0.6]   # all planners side by side
@@ -63,7 +64,9 @@ fn print_help() {
          \x20              --strategy greedy|segment)\n\
          \x20 swap        plan under a hard memory budget via bandwidth-aware\n\
          \x20             offloading (--budget F, --technique swap|recompute|hybrid,\n\
-         \x20              --pcie-gbps 16 --pcie-latency-us 10 --compute-gbps 800)\n\
+         \x20              --pcie-gbps 16 --pcie-latency-us 10 --compute-gbps 800,\n\
+         \x20              --swap-lambda λ orders for peak + λ·exposed-seconds,\n\
+         \x20              --no-slide disables the SwapOut/SwapIn slide pass)\n\
          \x20 plan-hlo    plan a JAX-lowered HLO file (--hlo PATH)\n\
          \x20 train       end-to-end training via PJRT (--artifacts DIR, --steps N;\n\
          \x20             requires building with --features pjrt)\n\
@@ -264,6 +267,9 @@ fn hybrid_cfg(args: &Args, default_technique: Technique) -> Result<HybridCfg> {
         cost: CostModel::from_args(args),
         roam: roam_cfg(args),
         max_rounds: args.usize("max-rounds", 12),
+        // Overlap-aware ordering: λ bytes per exposed second (0 = off).
+        order_lambda: args.f64("swap-lambda", 0.0),
+        slide: !args.bool_flag("no-slide"),
         ..HybridCfg::default()
     })
 }
@@ -408,7 +414,6 @@ fn serve_and_print(
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use roam::util::json::Json;
     use std::io::BufRead as _;
     let svc = make_service(args);
     let stdin = std::io::stdin();
@@ -427,18 +432,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             continue;
         }
         // A malformed line must not kill the stream (or the batch
-        // buffered so far): answer it with an error object and move on.
-        let parsed = Json::parse(trimmed)
-            .map_err(|e| e.to_string())
-            .and_then(|j| roam::serve::request_from_json(&j));
-        match parsed {
+        // buffered so far): answer it with an error object and move on
+        // (the parse + error shape are unit-tested in serve::service).
+        match roam::serve::request_from_line(trimmed) {
             Ok(req) => batch.push(req),
             Err(e) => {
                 rejected += 1;
-                println!(
-                    "{}",
-                    Json::obj(vec![("error", Json::Str(format!("bad request line: {e}")))])
-                );
+                println!("{}", roam::serve::error_json(&e));
             }
         }
     }

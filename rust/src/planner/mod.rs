@@ -28,7 +28,9 @@ pub mod model_baseline;
 pub mod roam;
 
 pub use lint::{assert_plan_ok, lint_plan};
-pub use roam::{roam_plan, roam_plan_seeded, RoamCfg, WarmSeed};
+pub use roam::{
+    roam_plan, roam_plan_full, roam_plan_seeded, OrderObjectiveCfg, RoamCfg, WarmSeed,
+};
 
 use crate::graph::{Graph, OpId, TensorId};
 use crate::layout::sim::conflicts;

@@ -64,7 +64,7 @@ use crate::layout::concat::repair_conflicts;
 use crate::layout::dsa::{min_arena_layout_seeded, DsaCfg};
 use crate::layout::fit::{lowest_fit, Placed};
 use crate::layout::{Item, Layout};
-use crate::sched::bnb::{min_peak_order_seeded, BnbCfg};
+use crate::sched::bnb::{min_peak_order_objective, BnbCfg, OrderObjective};
 use crate::sched::weight_update::{apply_control_edges, assign_weight_updates, WuCfg};
 use crate::sched::Schedule;
 use crate::segments::tree::{construct, SubgraphTree, TreeCfg};
@@ -127,14 +127,45 @@ pub struct WarmSeed {
     pub offsets: Vec<(usize, u64)>,
 }
 
+/// Overlap-aware ordering configuration: make exposed transfer seconds a
+/// first-class term of the leaf ordering objective. The leaf solvers then
+/// minimise `peak + λ · exposed-penalty-seconds`, deliberately stretching
+/// producer→consumer gaps around `SwapOut`/`SwapIn` ops (recognised
+/// structurally in each leaf subgraph — see
+/// [`crate::sched::bnb::OrderObjective`]). The trade happens **inside**
+/// leaves; the planner's global incumbent and dominance passes still
+/// guard the peak, so a plan ordered under λ > 0 never loses to the
+/// heuristic baselines on memory.
+#[derive(Clone, Copy, Debug)]
+pub struct OrderObjectiveCfg {
+    /// λ in bytes per exposed second (≤ 0 disables the objective).
+    pub lambda_bytes_per_sec: f64,
+    /// Compute-throughput proxy pricing op durations (bytes/second).
+    pub compute_bytes_per_sec: f64,
+}
+
 /// Run the full ROAM pipeline on `g`.
 pub fn roam_plan(g: &Graph, cfg: &RoamCfg) -> ExecutionPlan {
-    roam_plan_seeded(g, cfg, None)
+    roam_plan_full(g, cfg, None, None)
 }
 
 /// [`roam_plan`] warm-started from a cached plan (see the module docs and
 /// [`WarmSeed`]). With `seed = None` this *is* `roam_plan`.
 pub fn roam_plan_seeded(g: &Graph, cfg: &RoamCfg, seed: Option<&WarmSeed>) -> ExecutionPlan {
+    roam_plan_full(g, cfg, seed, None)
+}
+
+/// The most general planner entry point: optional warm seed plus an
+/// optional overlap-aware ordering objective ([`OrderObjectiveCfg`] —
+/// the hybrid driver passes one per escalation round so the order
+/// stretches the current victim set's hiding windows). Both `None` makes
+/// this *exactly* [`roam_plan`].
+pub fn roam_plan_full(
+    g: &Graph,
+    cfg: &RoamCfg,
+    seed: Option<&WarmSeed>,
+    obj: Option<&OrderObjectiveCfg>,
+) -> ExecutionPlan {
     let sw = Stopwatch::start();
     let deadline = Deadline::after_secs(cfg.time_limit_secs);
 
@@ -192,7 +223,7 @@ pub fn roam_plan_seeded(g: &Graph, cfg: &RoamCfg, seed: Option<&WarmSeed>) -> Ex
 
     // 4: solve leaf ordering tasks (in parallel).
     let (order, order_leaf_fallbacks, order_nodes, order_pool_id) =
-        solve_ordering(&g2, &tree, cfg, &pool, deadline, seed_order);
+        solve_ordering(&g2, &tree, cfg, &pool, deadline, seed_order, obj);
     debug_assert!(
         crate::graph::topo::is_topological(&g2, &order),
         "roam order must be topological"
@@ -356,6 +387,12 @@ pub fn roam_plan_seeded(g: &Graph, cfg: &RoamCfg, seed: Option<&WarmSeed>) -> Ex
         // one-shared-pool-per-call invariant (ROADMAP lever).
         ("order_pool_id".to_string(), order_pool_id as f64),
         ("layout_pool_id".to_string(), lay.pool_id as f64),
+        // λ of the overlap-aware ordering objective (0 when absent): the
+        // leaf solvers minimised peak + λ·exposed-penalty-seconds.
+        (
+            "order_lambda".to_string(),
+            obj.map(|o| o.lambda_bytes_per_sec).unwrap_or(0.0),
+        ),
     ];
     evaluate(g, name, sched, &lay.layout, sw.secs(), stats)
 }
@@ -471,6 +508,7 @@ fn solve_ordering(
     pool: &Pool,
     deadline: Deadline,
     seed_order: Option<&[OpId]>,
+    obj: Option<&OrderObjectiveCfg>,
 ) -> (Vec<OpId>, usize, u64, u64) {
     let n_tasks = tree.order_tasks.len();
     let nodes = AtomicU64::new(0);
@@ -493,7 +531,13 @@ fn solve_ordering(
                 .collect();
             so.iter().filter_map(|v| pos.get(v).copied()).collect()
         });
-        let r = min_peak_order_seeded(
+        // Overlap-aware ordering: a leaf containing swap ops solves the
+        // scalarised objective (the builder is a no-op on swap-free
+        // leaves, which is the common case).
+        let leaf_obj = obj.and_then(|o| {
+            OrderObjective::build(&sub, o.lambda_bytes_per_sec, o.compute_bytes_per_sec)
+        });
+        let r = min_peak_order_objective(
             &sub,
             &BnbCfg {
                 deadline,
@@ -501,6 +545,7 @@ fn solve_ordering(
                 max_ops: cfg.node_limit.max(1),
             },
             local_seed.as_deref(),
+            leaf_obj.as_ref(),
         );
         nodes.fetch_add(r.nodes_explored, Ordering::Relaxed);
         r.order.into_iter().map(|l| map[l]).collect()

@@ -52,6 +52,9 @@ impl RecomputeCfg {
             roam: self.roam.clone(),
             max_rounds: self.max_rounds,
             growth: self.growth,
+            // Swap-only knobs: inert for a recompute-only escalation
+            // (no swap events to order for, no pairs to slide).
+            ..HybridCfg::default()
         }
     }
 }

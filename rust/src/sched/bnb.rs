@@ -40,7 +40,7 @@
 //! solvers cross-validate each other in the test suite.
 
 use super::lescea::lescea_order_with;
-use super::prep::SolverTables;
+use super::prep::{ObjectiveTables, SolverTables};
 use super::sim::theoretical_peak;
 use super::Schedule;
 use crate::graph::{Graph, OpId};
@@ -88,6 +88,129 @@ impl Default for BnbCfg {
 /// `node_limit` ops, which they pass as `max_ops`).
 pub fn min_peak_order(g: &Graph, cfg: &BnbCfg) -> BnbResult {
     min_peak_order_seeded(g, cfg, None)
+}
+
+/// The overlap-aware ordering objective: minimise
+/// `peak + λ · exposed-penalty-seconds` instead of peak alone.
+///
+/// The penalty is the prefix-additive proxy of exposed transfer time
+/// built by [`ObjectiveTables`]: compute scheduled *before* a `SwapOut`
+/// (its DMA's hiding window starts at its own step) plus compute
+/// scheduled *after* a `SwapIn` (the out-transfer's deadline) is hiding
+/// capacity the order forgoes, in seconds. λ (bytes per exposed second)
+/// scalarises the two units; with λ = 0 — or on a leaf with no swap ops
+/// — the objective is absent and the search is **bit-identical** to
+/// [`min_peak_order_seeded`] (the differential tests pin this).
+#[derive(Clone, Debug)]
+pub struct OrderObjective {
+    /// Scalarisation weight λ in bytes per exposed second.
+    pub lambda_bytes_per_sec: f64,
+    /// Per-op durations and swap-event weights.
+    pub tab: ObjectiveTables,
+}
+
+impl OrderObjective {
+    /// Build the objective for `g`, or `None` when it would be inert
+    /// (λ ≤ 0, degenerate throughput, or no swap ops in the graph) — the
+    /// `None` path keeps the peak-only solver byte-identical.
+    pub fn build(
+        g: &Graph,
+        lambda_bytes_per_sec: f64,
+        compute_bytes_per_sec: f64,
+    ) -> Option<OrderObjective> {
+        // NaN-safe enablement gate (a NaN λ or throughput disables).
+        let enabled = lambda_bytes_per_sec > 0.0 && compute_bytes_per_sec > 0.0;
+        if !enabled {
+            return None;
+        }
+        let tab = ObjectiveTables::build(g, compute_bytes_per_sec);
+        if tab.events == 0 {
+            return None;
+        }
+        Some(OrderObjective {
+            lambda_bytes_per_sec,
+            tab,
+        })
+    }
+
+    /// Penalty seconds of a complete order (incumbent pricing, tests).
+    pub fn penalty_of(&self, order: &[OpId]) -> f64 {
+        let mut elapsed = 0.0f64;
+        let mut pen = 0.0f64;
+        for &v in order {
+            pen += self.tab.contribution(v, elapsed);
+            elapsed += self.tab.op_secs[v];
+        }
+        pen
+    }
+
+    /// Scalarised objective value of a (peak, penalty) pair.
+    pub fn score(&self, peak: u64, penalty_secs: f64) -> f64 {
+        peak as f64 + self.lambda_bytes_per_sec * penalty_secs
+    }
+}
+
+/// [`min_peak_order_seeded`] under an optional [`OrderObjective`]: with
+/// `Some`, the search minimises the scalarised `peak + λ·penalty` (both
+/// terms maintained incrementally across apply/undo; `proved_optimal`
+/// then certifies objective-optimality) and the reported `peak` is the
+/// winning order's true peak. With `None` this *is*
+/// [`min_peak_order_seeded`].
+pub fn min_peak_order_objective(
+    g: &Graph,
+    cfg: &BnbCfg,
+    seed: Option<&[OpId]>,
+    obj: Option<&OrderObjective>,
+) -> BnbResult {
+    let Some(obj) = obj else {
+        return min_peak_order_seeded(g, cfg, seed);
+    };
+    let n = g.n_ops();
+    let tab = SolverTables::build(g);
+    // Incumbents: LESCEA, program order and the (validated) seed, scored
+    // under the scalarised objective.
+    let mut cands = vec![
+        lescea_order_with(g, &tab),
+        crate::graph::topo::program_order(g),
+    ];
+    if let Some(s) = seed {
+        if s.len() == n && crate::graph::topo::is_topological(g, s) {
+            cands.push(s.to_vec());
+        }
+    }
+    let mut best_order = Vec::new();
+    let mut best_peak = u64::MAX;
+    let mut best_score = f64::INFINITY;
+    for cand in cands {
+        let pk = theoretical_peak(g, &Schedule::from_order(&cand));
+        let sc = obj.score(pk, obj.penalty_of(&cand));
+        if sc < best_score {
+            best_score = sc;
+            best_peak = pk;
+            best_order = cand;
+        }
+    }
+    if n == 0 || n > cfg.max_ops {
+        return BnbResult {
+            order: best_order,
+            peak: best_peak,
+            proved_optimal: n == 0,
+            nodes_explored: 0,
+        };
+    }
+    // No peak-lower-bound shortcut here: a peak-optimal incumbent need
+    // not be objective-optimal once λ > 0.
+    let mut s = Search::new(g, &tab, cfg, best_peak, best_order);
+    s.obj = Some(obj);
+    s.best_obj = best_score;
+    s.scratch_obj = vec![Vec::new(); n + 1];
+    s.dfs_obj(0);
+    BnbResult {
+        order: s.best_order,
+        peak: s.best_peak,
+        proved_optimal: !s.cut_short,
+        nodes_explored: s.nodes,
+    }
 }
 
 /// [`min_peak_order`] with an optional **warm-start incumbent**: a cached
@@ -202,6 +325,22 @@ struct Search<'a> {
     scratch: Vec<Vec<(u64, i64, OpId)>>,
     nodes: u64,
     cut_short: bool,
+    // --- overlap-aware objective state (inert unless `obj` is set) ----
+    /// The scalarised objective, when ordering for `peak + λ·penalty`.
+    obj: Option<&'a OrderObjective>,
+    /// Modeled compute seconds of the current prefix.
+    elapsed: f64,
+    /// Accumulated penalty seconds of the current prefix.
+    penalty: f64,
+    /// Best scalarised objective value seen (incumbent bound).
+    best_obj: f64,
+    /// Executed-set memo for the objective search: lowest
+    /// (prefix peak, prefix penalty) pair seen — pruning requires
+    /// dominance on **both** components.
+    memo_obj: HashMap<u128, (u64, f64)>,
+    /// Per-depth candidate buffers for the objective search:
+    /// (scalarised bound, step memory, delta, op).
+    scratch_obj: Vec<Vec<(f64, u64, i64, OpId)>>,
 }
 
 impl<'a> Search<'a> {
@@ -254,6 +393,12 @@ impl<'a> Search<'a> {
             scratch: vec![Vec::new(); n + 1],
             nodes: 0,
             cut_short: false,
+            obj: None,
+            elapsed: 0.0,
+            penalty: 0.0,
+            best_obj: f64::INFINITY,
+            memo_obj: HashMap::new(),
+            scratch_obj: Vec::new(),
         }
     }
 
@@ -322,6 +467,85 @@ impl<'a> Search<'a> {
             }
         }
         self.scratch[depth] = cand;
+    }
+
+    /// The objective-aware sibling of [`Search::dfs`]: identical
+    /// apply/undo machinery, but bounded and memoised on the scalarised
+    /// `peak + λ·penalty`. The penalty is prefix-additive and
+    /// non-decreasing (every contribution is ≥ 0), so — like the prefix
+    /// peak — the running score is a valid lower bound for every
+    /// completion and sorted-children pruning stays exact.
+    fn dfs_obj(&mut self, depth: usize) {
+        let obj = self.obj.expect("dfs_obj requires an objective");
+        self.nodes += 1;
+        if self.nodes > self.cfg.max_nodes || self.cfg.deadline.poll(self.nodes) {
+            self.cut_short = true;
+            return;
+        }
+        if depth == self.indeg.len() {
+            let sc = obj.score(self.prefix_peak, self.penalty);
+            if sc < self.best_obj {
+                self.best_obj = sc;
+                self.best_peak = self.prefix_peak;
+                self.best_order = self.prefix.clone();
+            }
+            return;
+        }
+        // Pair-dominance memo: a revisit of this executed set is pruned
+        // only when an earlier visit was at least as good on BOTH
+        // components (a higher-peak/lower-penalty state is incomparable —
+        // its completions can still win under the scalarisation). The
+        // stored entry is always an *achieved* state; on an incomparable
+        // revisit the better-scoring one is kept.
+        match self.memo_obj.get(&self.zkey) {
+            Some(&(p, q)) if p <= self.prefix_peak && q <= self.penalty + 1e-12 => return,
+            Some(&(p, q)) => {
+                if obj.score(self.prefix_peak, self.penalty) < obj.score(p, q) {
+                    self.memo_obj
+                        .insert(self.zkey, (self.prefix_peak, self.penalty));
+                }
+            }
+            None => {
+                self.memo_obj
+                    .insert(self.zkey, (self.prefix_peak, self.penalty));
+            }
+        }
+
+        let mut cand = std::mem::take(&mut self.scratch_obj[depth]);
+        cand.clear();
+        for &v in &self.ready {
+            let (at, delta) = self.step_effect(v);
+            let bound = obj.score(
+                self.prefix_peak.max(at),
+                self.penalty + obj.tab.contribution(v, self.elapsed),
+            );
+            cand.push((bound, at, delta, v));
+        }
+        // Finite arithmetic only (no NaN): partial_cmp is total here.
+        cand.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+
+        for &(bound, at_mem, _delta, v) in &cand {
+            if bound >= self.best_obj {
+                // Children sorted by bound: every later child is ≥ too.
+                break;
+            }
+            // Snapshot the float state instead of arithmetic undo so the
+            // restore is exact (no accumulated rounding across siblings).
+            let saved = (self.prefix_peak, self.elapsed, self.penalty);
+            self.penalty += obj.tab.contribution(v, self.elapsed);
+            self.elapsed += obj.tab.op_secs[v];
+            self.apply(v);
+            self.prefix_peak = saved.0.max(at_mem);
+            self.dfs_obj(depth + 1);
+            self.undo(v);
+            self.prefix_peak = saved.0;
+            self.elapsed = saved.1;
+            self.penalty = saved.2;
+            if self.cut_short {
+                break;
+            }
+        }
+        self.scratch_obj[depth] = cand;
     }
 
     #[inline]
@@ -555,6 +779,75 @@ mod tests {
             assert_eq!(ignored.peak, cold.peak);
         }
         assert!(improved > 0, "no seed produced a search improvement");
+    }
+
+    /// A small leaf with one swap pair and genuine scheduling slack.
+    fn swap_leaf() -> Graph {
+        let mut g = Graph::new("sl");
+        let x = g.add_input_tensor("x", 10, TensorClass::Input);
+        let (_, t) = g.add_op("a", OpKind::MatMul, Phase::Forward, &[x], &[
+            ("t", 100, TensorClass::Activation),
+            ("u", 40, TensorClass::Activation),
+        ]);
+        let (_, h) = g.add_op("so", OpKind::SwapOut, Phase::Forward, &[t[0]], &[
+            ("h", 1, TensorClass::TempBuffer),
+        ]);
+        let (_, v) = g.add_op("b", OpKind::MatMul, Phase::Forward, &[t[1]], &[
+            ("v", 40, TensorClass::Activation),
+        ]);
+        let (_, w) = g.add_op("c", OpKind::MatMul, Phase::Forward, &[v[0]], &[
+            ("w", 40, TensorClass::Activation),
+        ]);
+        let (_, cl) = g.add_op("si", OpKind::SwapIn, Phase::Backward, &[h[0]], &[
+            ("cl", 100, TensorClass::Activation),
+        ]);
+        let (_, d) = g.add_op("e", OpKind::MatMul, Phase::Backward, &[cl[0], w[0]], &[
+            ("out", 10, TensorClass::Gradient),
+        ]);
+        g.mark_output(d[0]);
+        g
+    }
+
+    #[test]
+    fn objective_is_inert_when_disabled_or_swap_free() {
+        let g = swap_leaf();
+        // λ = 0 and degenerate throughput both disable the objective.
+        assert!(OrderObjective::build(&g, 0.0, 800e9).is_none());
+        assert!(OrderObjective::build(&g, 1e9, 0.0).is_none());
+        // A swap-free training graph has no events to stretch for.
+        let mut rng = crate::util::Pcg64::new(5);
+        let plain = random_training_graph(&mut rng, &RandomGraphCfg {
+            fwd_ops: 6,
+            ..Default::default()
+        });
+        assert!(OrderObjective::build(&plain, 1e9, 800e9).is_none());
+        // A `None` objective delegates to the seeded solver bit-for-bit.
+        let a = min_peak_order(&g, &BnbCfg::default());
+        let b = min_peak_order_objective(&g, &BnbCfg::default(), None, None);
+        assert_eq!(a.order, b.order);
+        assert_eq!(a.peak, b.peak);
+        assert_eq!(a.nodes_explored, b.nodes_explored);
+    }
+
+    #[test]
+    fn objective_search_never_scores_worse_than_the_peak_solver() {
+        let g = swap_leaf();
+        let cfg = BnbCfg::default();
+        let r0 = min_peak_order(&g, &cfg);
+        let obj = OrderObjective::build(&g, 50.0, 100.0).expect("swap events present");
+        let ro = min_peak_order_objective(&g, &cfg, None, Some(&obj));
+        assert!(is_topological(&g, &ro.order));
+        assert_eq!(
+            ro.peak,
+            theoretical_peak(&g, &Schedule::from_order(&ro.order)),
+            "reported peak must be the winning order's true peak"
+        );
+        assert!(ro.proved_optimal);
+        // Scalarised optimality subsumes the peak-only order as a
+        // candidate: the objective search can never score worse than it.
+        let s0 = obj.score(r0.peak, obj.penalty_of(&r0.order));
+        let so = obj.score(ro.peak, obj.penalty_of(&ro.order));
+        assert!(so <= s0 + 1e-9, "objective {so} worse than peak-only {s0}");
     }
 
     #[test]

@@ -14,7 +14,7 @@
 //! it once per graph in O(|E|) into flat CSR arrays, turning every
 //! node-expansion into pointer-bump loops over precomputed entries.
 
-use crate::graph::{Graph, TensorId};
+use crate::graph::{Graph, OpKind, TensorId};
 
 /// One distinct dynamic (non-persistent, non-graph-output) input of an op.
 #[derive(Clone, Copy, Debug)]
@@ -115,6 +115,82 @@ impl SolverTables {
     }
 }
 
+/// Per-op tables for the overlap-aware ordering objective — the
+/// `peak + λ·exposed-seconds` scalarisation of
+/// [`super::bnb::OrderObjective`].
+///
+/// Swap victims want their producer→consumer gaps *stretched*: a
+/// `SwapOut` issues a DMA whose hiding window runs from the end of its
+/// own step, so every second of leaf compute scheduled **before** it is
+/// hiding capacity forgone (a *release* event); a `SwapIn`'s step is the
+/// deadline of the preceding out-transfer, so every second of leaf
+/// compute scheduled **after** it is likewise forgone (a *deadline*
+/// event). Both contributions are prefix-additive in the scheduled
+/// order, which is what lets the branch-and-bound maintain the penalty
+/// incrementally across apply/undo exactly like live memory.
+#[derive(Clone, Debug)]
+pub struct ObjectiveTables {
+    /// Modeled duration of each op in seconds: the bytes it produces over
+    /// the compute throughput (the same FLOP-proxy convention as
+    /// [`crate::swap::CostModel::op_secs`]).
+    pub op_secs: Vec<f64>,
+    /// Per-op release weight (> 0 exactly for `SwapOut` ops).
+    pub release_w: Vec<f64>,
+    /// Per-op deadline weight (> 0 exactly for `SwapIn` ops).
+    pub deadline_w: Vec<f64>,
+    /// Σ `op_secs` — the leaf's total modeled compute.
+    pub total_secs: f64,
+    /// Number of swap events (release + deadline ops) present.
+    pub events: usize,
+}
+
+impl ObjectiveTables {
+    /// Build the tables for `g` under a compute throughput of
+    /// `compute_bytes_per_sec`. Swap events are recognised structurally
+    /// from the op kinds, so the same build works on planner leaf
+    /// subgraphs (extraction preserves kinds) with no id translation.
+    pub fn build(g: &Graph, compute_bytes_per_sec: f64) -> ObjectiveTables {
+        let n = g.n_ops();
+        let mut op_secs = vec![0.0f64; n];
+        let mut release_w = vec![0.0f64; n];
+        let mut deadline_w = vec![0.0f64; n];
+        let mut total = 0.0f64;
+        let mut events = 0usize;
+        for op in &g.ops {
+            let bytes: u64 = op.outputs.iter().map(|&t| g.tensors[t].size).sum();
+            let secs = bytes as f64 / compute_bytes_per_sec;
+            op_secs[op.id] = secs;
+            total += secs;
+            match op.kind {
+                OpKind::SwapOut => {
+                    release_w[op.id] = 1.0;
+                    events += 1;
+                }
+                OpKind::SwapIn => {
+                    deadline_w[op.id] = 1.0;
+                    events += 1;
+                }
+                _ => {}
+            }
+        }
+        ObjectiveTables {
+            op_secs,
+            release_w,
+            deadline_w,
+            total_secs: total,
+            events,
+        }
+    }
+
+    /// Penalty seconds op `v` contributes when executed after `elapsed`
+    /// seconds of leaf compute: forgone hiding window, in seconds.
+    #[inline]
+    pub fn contribution(&self, v: usize, elapsed: f64) -> f64 {
+        self.release_w[v] * (elapsed + self.op_secs[v])
+            + self.deadline_w[v] * (self.total_secs - elapsed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,5 +251,35 @@ mod tests {
         let remaining: Vec<u32> = tab.consumers0.clone();
         // Running a: +30 allocated, frees x (its only consumer).
         assert_eq!(tab.mem_delta(a, &remaining), 30 - 10);
+    }
+
+    #[test]
+    fn objective_tables_find_swap_events() {
+        let mut g = Graph::new("obj");
+        let x = g.add_input_tensor("x", 10, TensorClass::Input);
+        let (a, t) = g.add_op("a", OpKind::MatMul, Phase::Forward, &[x], &[
+            ("t", 100, TensorClass::Activation),
+        ]);
+        let (so, h) = g.add_op("so", OpKind::SwapOut, Phase::Forward, &[t[0]], &[
+            ("h", 1, TensorClass::TempBuffer),
+        ]);
+        let (si, c) = g.add_op("si", OpKind::SwapIn, Phase::Backward, &[h[0]], &[
+            ("c", 100, TensorClass::Activation),
+        ]);
+        let (b, _) = g.add_op("b", OpKind::MatMul, Phase::Backward, &[c[0]], &[
+            ("d", 10, TensorClass::Gradient),
+        ]);
+        let tab = ObjectiveTables::build(&g, 100.0);
+        assert_eq!(tab.events, 2);
+        assert!((tab.op_secs[a] - 1.0).abs() < 1e-12);
+        assert!((tab.op_secs[so] - 0.01).abs() < 1e-12);
+        assert!((tab.total_secs - (1.0 + 0.01 + 1.0 + 0.1)).abs() < 1e-12);
+        assert_eq!(tab.release_w[so], 1.0);
+        assert_eq!(tab.deadline_w[si], 1.0);
+        assert_eq!(tab.release_w[b], 0.0);
+        // A release op late in the prefix forgoes more window than an
+        // early one; a deadline op is the reverse.
+        assert!(tab.contribution(so, 2.0) > tab.contribution(so, 0.0));
+        assert!(tab.contribution(si, 0.0) > tab.contribution(si, 2.0));
     }
 }

@@ -40,6 +40,6 @@ pub mod warm;
 pub use cache::{CacheCfg, CachedPlan, PlanCache};
 pub use canon::{canonize, cfg_key, with_cfg, Canon, Fingerprint};
 pub use service::{
-    request_from_json, response_to_json, summary_json, Outcome, PlanRequest, PlanResponse,
-    PlanService, ServeCfg,
+    error_json, request_from_json, request_from_line, response_to_json, summary_json, Outcome,
+    PlanRequest, PlanResponse, PlanService, ServeCfg,
 };

@@ -469,6 +469,25 @@ pub fn request_from_json(j: &Json) -> Result<PlanRequest, String> {
     })
 }
 
+/// Parse one raw JSONL wire line into a request — the `roam serve` stdin
+/// path. Malformed JSON and bad request bodies both surface as
+/// `Err(message)`; the caller answers with [`error_json`] and keeps the
+/// stream (and the batch buffered so far) alive.
+pub fn request_from_line(line: &str) -> Result<PlanRequest, String> {
+    let j = Json::parse(line.trim()).map_err(|e| e.to_string())?;
+    request_from_json(&j)
+}
+
+/// The error object `roam serve` emits for a rejected line. Kept next to
+/// the parser so the wire shape (`{"error": "bad request line: ..."}`)
+/// is pinned by unit tests rather than living inline in the binary.
+pub fn error_json(msg: &str) -> Json {
+    Json::obj(vec![(
+        "error",
+        Json::Str(format!("bad request line: {msg}")),
+    )])
+}
+
 /// Encode one response as a JSONL object.
 pub fn response_to_json(id: usize, r: &PlanResponse) -> Json {
     let stat = |k: &str| r.plan.stat(k).unwrap_or(0.0);
@@ -506,4 +525,47 @@ pub fn summary_json(svc: &PlanService) -> Json {
             ("cache_len", Json::Num(svc.cache().len() as f64)),
         ]),
     )])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn malformed_lines_error_without_panicking() {
+        // Broken JSON, valid JSON of the wrong shape, unknown model,
+        // unknown technique: each is an Err(message), never a panic.
+        for (line, needle) in [
+            ("{not json", "" /* parser message wording is its own */),
+            ("[1, 2, 3]", "model"),
+            ("{\"batch\": 2}", "model"),
+            ("{\"model\": \"no-such-net\"}", "unknown model"),
+            (
+                "{\"model\": \"mobilenet\", \"technique\": \"teleport\"}",
+                "unknown technique",
+            ),
+        ] {
+            let e = request_from_line(line).expect_err(line);
+            assert!(
+                e.contains(needle),
+                "error for {line:?} lacks {needle:?}: {e}"
+            );
+        }
+        assert!(request_from_line("  {\"model\": \"mobilenet\"}  ").is_ok());
+    }
+
+    #[test]
+    fn error_objects_round_trip_with_escaping() {
+        // The offending fragment may contain quotes/backslashes; the
+        // emitted object must still parse back with the message intact.
+        let msg = "unexpected token '\"' in \\ line";
+        let j = error_json(msg);
+        let text = format!("{j}");
+        let back = Json::parse(&text).expect("error object must be valid JSON");
+        let got = back.get("error").and_then(|e| e.as_str()).unwrap();
+        assert_eq!(got, format!("bad request line: {msg}"));
+        // And a real parse failure produces a renderable object too.
+        let e = request_from_line("{oops").unwrap_err();
+        assert!(Json::parse(&format!("{}", error_json(&e))).is_ok());
+    }
 }

@@ -25,7 +25,12 @@
 //!    fetched clone (shared eviction machinery: [`crate::evict`]), and
 //!    pin each fetch into the backward region with a loss-anchored
 //!    control edge.
-//! 4. **Re-plan** — [`crate::hybrid::roam_plan_hybrid`] with
+//! 4. **Slide** ([`slide`]) — a post-pass on the planned schedule that
+//!    moves each `SwapOut` as early and each `SwapIn` as late as the
+//!    dependences allow, widening the out-transfer's hiding window;
+//!    candidates are re-priced with the serialized link model and adopted
+//!    only when exposed seconds strictly drop and memory doesn't grow.
+//! 5. **Re-plan** — [`crate::hybrid::roam_plan_hybrid`] with
 //!    [`crate::hybrid::Technique::Swap`] escalates evictions and re-runs
 //!    the full ROAM pipeline on each augmented graph; the hybrid
 //!    technique mixes swap with recomputation per tensor,
@@ -44,6 +49,7 @@
 pub mod cost;
 pub mod rewrite;
 pub mod select;
+pub mod slide;
 
 pub use cost::{
     exposed_secs_for, exposed_secs_serialized, idle_window, plan_swap_overhead,
@@ -51,3 +57,4 @@ pub use cost::{
 };
 pub use rewrite::{rewrite, SwapPair, SwapRewriteResult, HANDLE_BYTES};
 pub use select::{swap_candidates, unit_swap_cost, SwapCandidate};
+pub use slide::{slide_swaps, SlideOutcome};

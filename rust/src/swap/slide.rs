@@ -1,0 +1,383 @@
+//! Slack-sliding post-pass for planned swap schedules: move each
+//! `SwapOut` as early as its dependences allow and each `SwapIn` as late
+//! as its *deadline* allows (the fetch must still hide under the compute
+//! left before its first consumer), so the out-transfer's hiding window
+//! — which runs from the end of the `SwapOut` step to the start of the
+//! `SwapIn` step — is as wide as the schedule permits.
+//!
+//! The peak-minimising leaf solvers place swap ops wherever memory likes
+//! them, which for a `SwapOut` is often right at its victim's last
+//! forward use (executing it is what retires the victim's last consumer
+//! slot) and for a `SwapIn` right before its first backward consumer
+//! (executing it allocates the clone). Both placements are *memory*-tight
+//! but *bandwidth*-loose: the DMA issued at the `SwapOut` then has almost
+//! no forward compute left to hide under. Sliding the ops within their
+//! schedule slack is free in the liveness model — the victim still dies
+//! at its last forward use, the clone is still born before its first
+//! consumer — and every step crossed is hiding window gained.
+//!
+//! The pass is honest about contention and memory:
+//!
+//! * candidate orders are re-priced with the serialized link model
+//!   ([`super::cost::plan_swap_overhead`]), so a slide that merely
+//!   reshuffles queueing never counts as a win;
+//! * the plan's layout is rebuilt for the slid schedule (original
+//!   offsets, residual conflicts repaired via
+//!   [`crate::layout::concat::repair_conflicts`]) and the result is
+//!   adopted only when total exposed seconds **strictly drop** and total
+//!   memory does not grow — otherwise the original plan is returned
+//!   untouched, which is what makes `exposed_secs_after_slide ≤
+//!   exposed_secs_before_slide` hold by construction (the CI bench gate
+//!   and `tests/slide_props.rs` pin it).
+
+use super::cost::{plan_swap_overhead, CostModel};
+use super::rewrite::SwapPair;
+use crate::graph::{Graph, OpId};
+use crate::layout::concat::repair_conflicts;
+use crate::planner::ExecutionPlan;
+use crate::sched::Schedule;
+use std::collections::HashMap;
+
+/// Outcome of [`slide_swaps`].
+#[derive(Clone, Debug)]
+pub struct SlideOutcome {
+    /// The adopted plan: the slid + repaired one when `applied`, the
+    /// caller's plan verbatim otherwise.
+    pub plan: ExecutionPlan,
+    /// Serialized exposed seconds of the input plan.
+    pub exposed_before: f64,
+    /// Serialized exposed seconds of the adopted plan (= `exposed_before`
+    /// when the slide was rejected).
+    pub exposed_after: f64,
+    /// Σ modeled out+in transfer seconds over all pairs — schedule-
+    /// independent, carried so callers don't re-price the plan.
+    pub transfer_secs: f64,
+    /// `SwapOut` ops moved earlier / `SwapIn` ops moved later.
+    pub moved_out: usize,
+    pub moved_in: usize,
+    /// Was a slid schedule adopted?
+    pub applied: bool,
+}
+
+/// Position index of `order` (`pos[op] = index`), maintained by
+/// [`move_op`] so the slide helpers never re-scan the order.
+fn index_of(order: &[OpId]) -> Vec<usize> {
+    let mut pos = vec![usize::MAX; order.len()];
+    for (i, &v) in order.iter().enumerate() {
+        pos[v] = i;
+    }
+    pos
+}
+
+/// Move the op at `from` to `to`, updating `pos` for the shifted range.
+fn move_op(order: &mut Vec<OpId>, pos: &mut [usize], from: usize, to: usize) {
+    let op = order.remove(from);
+    order.insert(to, op);
+    let (lo, hi) = if from < to { (from, to) } else { (to, from) };
+    for (i, &v) in order.iter().enumerate().take(hi + 1).skip(lo) {
+        pos[v] = i;
+    }
+}
+
+/// Move every pair's `SwapOut` to the earliest dependence-respecting
+/// slot: directly after its last input producer. Its only successor (the
+/// handle's `SwapIn`) lies far later, so the move cannot break an edge.
+fn slide_outs_earliest(g: &Graph, order: &mut Vec<OpId>, pairs: &[SwapPair]) -> usize {
+    let mut pos = index_of(order);
+    let mut moved = 0usize;
+    for p in pairs {
+        let cur = pos[p.out_op];
+        let earliest = g.ops[p.out_op]
+            .inputs
+            .iter()
+            .filter_map(|&t| g.tensors[t].producer)
+            .map(|pr| pos[pr] + 1)
+            .max()
+            .unwrap_or(0);
+        if earliest < cur {
+            move_op(order, &mut pos, cur, earliest);
+            moved += 1;
+        }
+    }
+    moved
+}
+
+/// Move every pair's `SwapIn` later within its slack, **deadline-
+/// respecting**: the fetch must still complete before its first
+/// retargeted consumer, so the op only slides back until the modeled
+/// compute left between it and that consumer just covers the fetch's
+/// transfer time. Every step crossed is handed to the preceding
+/// out-transfer, whose deadline is the `SwapIn`'s step — slack moves
+/// from an over-hidden fetch window to an exposed eviction window.
+/// Dependences cannot break: the `SwapIn`'s own inputs (handle, loss
+/// anchor) only fall further behind it.
+fn slide_ins_later(g: &Graph, order: &mut Vec<OpId>, pairs: &[SwapPair], m: &CostModel) -> usize {
+    let mut pos = index_of(order);
+    let mut moved = 0usize;
+    // Latest-first, so earlier fetches measure their windows against the
+    // already-settled later ones.
+    let mut by_pos: Vec<&SwapPair> = pairs.iter().collect();
+    by_pos.sort_by_key(|p| std::cmp::Reverse(pos[p.in_op]));
+    for p in by_pos {
+        let cur = pos[p.in_op];
+        let lim = g.ops[p.in_op]
+            .outputs
+            .iter()
+            .flat_map(|&t| g.tensors[t].consumers.iter().copied())
+            .map(|c| pos[c])
+            .min();
+        let Some(lim) = lim else { continue };
+        if lim <= cur + 1 {
+            continue; // already directly before its first consumer
+        }
+        let need = m.transfer_secs(g.tensors[p.original].size);
+        // Largest landing index `t` whose window to the consumer still
+        // fits the fetch, floored at the current slot. Landing at `t`
+        // leaves exactly the ops now at (t, lim) between the fetch and
+        // its first consumer, so the walk accumulates their durations
+        // from the consumer backwards until the fetch is covered.
+        let mut t = lim - 1;
+        let mut win = 0.0f64;
+        while t > cur && win < need {
+            win += m.op_secs(g, order[t]);
+            t -= 1;
+        }
+        if t > cur {
+            move_op(order, &mut pos, cur, t);
+            moved += 1;
+        }
+    }
+    moved
+}
+
+/// The unbounded sibling of [`slide_ins_later`]: every `SwapIn` directly
+/// before its first consumer. In the saturated-link regime — transfers
+/// far slower than the compute that could hide them — the fetch is
+/// exposed wherever it sits (its deadline, the consumer's step, never
+/// moves), while each step crossed still pushes the preceding
+/// out-transfer's deadline later; the re-pricing decides which regime a
+/// given plan is in.
+fn slide_ins_latest(g: &Graph, order: &mut Vec<OpId>, pairs: &[SwapPair]) -> usize {
+    let mut pos = index_of(order);
+    let mut moved = 0usize;
+    for p in pairs {
+        let cur = pos[p.in_op];
+        let lim = g.ops[p.in_op]
+            .outputs
+            .iter()
+            .flat_map(|&t| g.tensors[t].consumers.iter().copied())
+            .map(|c| pos[c])
+            .min();
+        let Some(lim) = lim else { continue };
+        if lim > cur + 1 {
+            move_op(order, &mut pos, cur, lim - 1);
+            moved += 1;
+        }
+    }
+    moved
+}
+
+/// Slide `pairs`' swap ops within the schedule slack of `plan` (a plan
+/// for the augmented graph `g`) and re-price with the serialized link
+/// model. Returns the better of the original and the slid plan — never a
+/// plan with more exposed seconds or more total memory. See the module
+/// docs for the acceptance rule.
+pub fn slide_swaps(
+    g: &Graph,
+    plan: &ExecutionPlan,
+    m: &CostModel,
+    pairs: &[SwapPair],
+) -> SlideOutcome {
+    let before = plan_swap_overhead(g, &plan.schedule, m, pairs);
+    let unapplied = |exposed: f64| SlideOutcome {
+        plan: plan.clone(),
+        exposed_before: exposed,
+        exposed_after: exposed,
+        transfer_secs: before.transfer_secs,
+        moved_out: 0,
+        moved_in: 0,
+        applied: false,
+    };
+    if pairs.is_empty() {
+        return unapplied(0.0);
+    }
+
+    // Three candidate orders: outs-earliest alone, plus the two in-slide
+    // flavours on top of it — deadline-respecting (keep each fetch
+    // hidden) and full-latest (concede the fetch, maximise the out
+    // windows). Sliding a `SwapIn` later widens the out-window (its step
+    // is the out deadline) but narrows its own fetch window, so the
+    // variants are re-priced rather than assumed.
+    let mut order_a = plan.order.clone();
+    let moved_out = slide_outs_earliest(g, &mut order_a, pairs);
+    let mut order_b = order_a.clone();
+    let moved_in_b = slide_ins_later(g, &mut order_b, pairs, m);
+    let mut order_c = order_a.clone();
+    let moved_in_c = slide_ins_latest(g, &mut order_c, pairs);
+
+    let mut best: Option<(Vec<OpId>, f64, usize, usize)> = None;
+    for (ord, mo, mi) in [
+        (order_a, moved_out, 0),
+        (order_b, moved_out, moved_in_b),
+        (order_c, moved_out, moved_in_c),
+    ] {
+        if mo + mi == 0 {
+            continue;
+        }
+        debug_assert!(
+            crate::graph::topo::is_topological(g, &ord),
+            "slide broke a dependence"
+        );
+        let oh = plan_swap_overhead(g, &Schedule::from_order(&ord), m, pairs);
+        let beats_base = oh.exposed_secs < before.exposed_secs;
+        let beats_best = best
+            .as_ref()
+            .map(|&(_, e, _, _)| oh.exposed_secs < e)
+            .unwrap_or(true);
+        if beats_base && beats_best {
+            best = Some((ord, oh.exposed_secs, mo, mi));
+        }
+    }
+    let Some((ord, exposed_after, moved_out, moved_in)) = best else {
+        return unapplied(before.exposed_secs);
+    };
+
+    // Rebuild the layout for the slid schedule: keep the plan's offsets
+    // and repair residual conflicts (op moves only change overlap
+    // relations involving the slid ops' tensors — chiefly the 1-byte
+    // handles, whose lifetimes grew).
+    let sched = Schedule::from_order(&ord);
+    let items = crate::planner::layout_items(g, &sched);
+    let offsets: HashMap<usize, u64> = plan.offsets.iter().copied().collect();
+    let rep = repair_conflicts(&items, offsets);
+    let out = crate::planner::evaluate(
+        g,
+        &plan.planner,
+        sched,
+        &rep.layout,
+        plan.planning_secs,
+        plan.stats.clone(),
+    );
+    // Exposure gains must not be paid for in arena bytes: budget
+    // compliance is judged on totals, so a slide that grows the total is
+    // rejected wholesale.
+    if out.total_bytes() > plan.total_bytes() {
+        return unapplied(before.exposed_secs);
+    }
+    SlideOutcome {
+        plan: out,
+        exposed_before: before.exposed_secs,
+        exposed_after,
+        transfer_secs: before.transfer_secs,
+        moved_out,
+        moved_in,
+        applied: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpKind, Phase, Reachability, TensorClass};
+    use crate::planner::{evaluate, layout_items, lint};
+    use crate::swap::rewrite::rewrite;
+
+    fn m() -> CostModel {
+        CostModel {
+            pcie_bytes_per_sec: 100.0,
+            pcie_latency_secs: 0.0,
+            compute_bytes_per_sec: 100.0,
+        }
+    }
+
+    /// fwd chain with two compute ops between the victim's producer and
+    /// its last forward use — real slack for the out-slide.
+    fn slack_chain() -> Graph {
+        let mut g = Graph::new("slack");
+        let x = g.add_input_tensor("x", 10, TensorClass::Input);
+        let (_, act) = g.add_op("a", OpKind::MatMul, Phase::Forward, &[x], &[
+            ("act", 100, TensorClass::Activation),
+        ]);
+        let (_, u1) = g.add_op("b", OpKind::MatMul, Phase::Forward, &[act[0]], &[
+            ("u1", 50, TensorClass::Activation),
+        ]);
+        let (_, u2) = g.add_op("c", OpKind::MatMul, Phase::Forward, &[u1[0]], &[
+            ("u2", 50, TensorClass::Activation),
+        ]);
+        let (_, l) = g.add_op("loss", OpKind::Loss, Phase::Loss, &[u2[0]], &[
+            ("l", 4, TensorClass::TempBuffer),
+        ]);
+        g.mark_output(l[0]);
+        let (_, d) = g.add_op("a.bwd", OpKind::MatMul, Phase::Backward, &[act[0], l[0]], &[
+            ("dx", 10, TensorClass::Gradient),
+        ]);
+        g.mark_output(d[0]);
+        g
+    }
+
+    /// Augment `slack_chain` with one swap pair and plan it in program
+    /// order (which parks the `SwapOut` right before the `SwapIn`, the
+    /// worst case the slide exists to fix).
+    fn planned() -> (Graph, Vec<SwapPair>, ExecutionPlan) {
+        let g = slack_chain();
+        let reach = Reachability::compute(&g);
+        let r = rewrite(&g, &reach, &[1]);
+        assert_eq!(r.pairs.len(), 1);
+        let order = crate::graph::topo::program_order(&r.graph);
+        let sched = Schedule::from_order(&order);
+        let items = layout_items(&r.graph, &sched);
+        let layout = crate::layout::llfb::llfb(&items);
+        let plan = evaluate(&r.graph, "test", sched, &layout, 0.0, Vec::new());
+        (r.graph, r.pairs, plan)
+    }
+
+    #[test]
+    fn empty_pairs_are_identity() {
+        let (g, _, plan) = planned();
+        let s = slide_swaps(&g, &plan, &m(), &[]);
+        assert!(!s.applied);
+        assert_eq!(s.exposed_before, 0.0);
+        assert_eq!(s.plan.order, plan.order);
+    }
+
+    #[test]
+    fn slide_widens_the_window_and_strictly_cuts_exposure() {
+        let (g, pairs, plan) = planned();
+        let s = slide_swaps(&g, &plan, &m(), &pairs);
+        assert!(s.applied, "program order leaves slack: slide must fire");
+        assert!(s.moved_out >= 1);
+        assert!(
+            s.exposed_after < s.exposed_before,
+            "exposure not reduced: {} !< {}",
+            s.exposed_after,
+            s.exposed_before
+        );
+        // The SwapOut now sits directly after its victim's producer.
+        let p = pairs[0];
+        let prod = g.tensors[p.original].producer.unwrap();
+        let pos_prod = s.plan.order.iter().position(|&v| v == prod).unwrap();
+        let pos_out = s.plan.order.iter().position(|&v| v == p.out_op).unwrap();
+        assert_eq!(pos_out, pos_prod + 1);
+        // The slid plan is a valid plan for the augmented graph and no
+        // more expensive in memory.
+        lint::assert_plan_ok(&g, &s.plan);
+        assert!(s.plan.total_bytes() <= plan.total_bytes());
+        // Re-pricing the adopted plan reproduces the reported number.
+        let oh = plan_swap_overhead(&g, &s.plan.schedule, &m(), &pairs);
+        assert!((oh.exposed_secs - s.exposed_after).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slide_never_reports_an_increase() {
+        // Already-optimal placement: slide finds nothing and returns the
+        // plan untouched with before == after.
+        let (g, pairs, plan) = planned();
+        let once = slide_swaps(&g, &plan, &m(), &pairs);
+        let again = slide_swaps(&g, &once.plan, &m(), &pairs);
+        assert!(again.exposed_after <= again.exposed_before + 1e-12);
+        assert!(again.exposed_after <= once.exposed_after + 1e-12);
+        if !again.applied {
+            assert_eq!(again.plan.order, once.plan.order);
+        }
+    }
+}

@@ -100,6 +100,53 @@ fn bnb_matches_reference_on_model_leaves() {
     }
 }
 
+/// The λ = 0 acceptance gate of the overlap-aware ordering objective:
+/// with the objective absent (λ = 0 builds no objective at all) the
+/// solver must be **byte-identical** to the plain seeded path — same
+/// order, same peak, same node count — including on swap-augmented
+/// graphs, and both must still agree with the pre-incremental reference.
+#[test]
+fn lambda_zero_is_byte_identical_to_the_peak_solver() {
+    use roam::sched::bnb::{min_peak_order_objective, OrderObjective};
+
+    forall("λ=0 == peak-only bnb (swap-augmented)", 20, |rng| {
+        let g = random_training_graph(rng, &RandomGraphCfg {
+            fwd_ops: rng.usize_in(2, 8),
+            ..Default::default()
+        });
+        // Augment with up to two swap pairs so the graphs actually carry
+        // SwapOut/SwapIn events the objective COULD act on.
+        let victims: Vec<usize> = (0..g.n_tensors())
+            .filter(|&t| roam::evict::is_evictable(&g, t))
+            .take(2)
+            .collect();
+        let reach = Reachability::compute(&g);
+        let aug = roam::swap::rewrite(&g, &reach, &victims).graph;
+        // λ = 0 never builds an objective, even with events present.
+        if OrderObjective::build(&aug, 0.0, 800e9).is_some() {
+            return Err("λ=0 built an objective".into());
+        }
+        let cfg = BnbCfg::default();
+        let plain = min_peak_order(&aug, &cfg);
+        let zero = min_peak_order_objective(&aug, &cfg, None, None);
+        if plain.order != zero.order
+            || plain.peak != zero.peak
+            || plain.nodes_explored != zero.nodes_explored
+        {
+            return Err(format!(
+                "λ=0 diverged: peak {} vs {}, nodes {} vs {}",
+                zero.peak, plain.peak, zero.nodes_explored, plain.nodes_explored
+            ));
+        }
+        // And the augmented graph still differential-checks vs the
+        // reference solver (it is swap-augmented but ≤ 128 ops here).
+        if aug.n_ops() <= 24 {
+            check_bnb_pair(&aug, &cfg)?;
+        }
+        Ok(())
+    });
+}
+
 // ------------------------------------------------------------------ layout
 
 #[test]

@@ -1,0 +1,274 @@
+//! Property suite for the overlap-aware swap machinery: the
+//! [`roam::swap::slide`] post-pass and the `peak + λ·exposed-seconds`
+//! leaf ordering objective.
+//!
+//! Pinned invariants, on random training graphs plus the transformer and
+//! mobilenet workloads:
+//!
+//! * slid plans stay [`roam::planner::lint::assert_plan_ok`]-clean and
+//!   cost no more total memory than the input plan;
+//! * exposed transfer seconds are monotone non-increasing across the
+//!   pass (`after ≤ before`, by the pass's acceptance rule) and the
+//!   adopted plan re-prices to exactly the reported `after`;
+//! * every `SwapIn` still precedes all of its retargeted consumers;
+//! * the hybrid driver's slide stats obey the same monotonicity
+//!   end-to-end, and ordering under λ > 0 still yields valid plans that
+//!   never lose to the λ = 0 ordering on the scalarised objective.
+
+use roam::evict::is_evictable;
+use roam::graph::random::{random_training_graph, RandomGraphCfg};
+use roam::graph::{Graph, Reachability};
+use roam::hybrid::{roam_plan_hybrid, BudgetSpec, HybridCfg, Technique};
+use roam::models::{self, BuildCfg, ModelKind};
+use roam::planner::{lint, roam_plan, RoamCfg};
+use roam::swap::rewrite::SwapPair;
+use roam::swap::slide::slide_swaps;
+use roam::swap::{plan_swap_overhead, rewrite, CostModel};
+use roam::util::quick::forall;
+
+fn quick_roam() -> RoamCfg {
+    RoamCfg {
+        parallel: false,
+        order_max_nodes: 4_000,
+        dsa_max_nodes: 4_000,
+        ..RoamCfg::default()
+    }
+}
+
+fn quick_cfg(technique: Technique) -> HybridCfg {
+    HybridCfg {
+        technique,
+        roam: quick_roam(),
+        ..HybridCfg::default()
+    }
+}
+
+/// Swap the first `max_victims` evictable tensors of `g`, plan the
+/// augmented graph, slide, and check every slide invariant. Returns
+/// `None` when the graph has no evictable tensor.
+fn check_slide_on(g: &Graph, max_victims: usize, m: &CostModel) -> Result<Option<f64>, String> {
+    let victims: Vec<usize> = (0..g.n_tensors())
+        .filter(|&t| is_evictable(g, t))
+        .take(max_victims)
+        .collect();
+    if victims.is_empty() {
+        return Ok(None);
+    }
+    let reach = Reachability::compute(g);
+    let rw = rewrite(g, &reach, &victims);
+    let plan = roam_plan(&rw.graph, &quick_roam());
+    let s = slide_swaps(&rw.graph, &plan, m, &rw.pairs);
+
+    // Lint-clean and no more expensive in memory.
+    let defects = lint::lint_plan(&rw.graph, &s.plan);
+    if !defects.is_empty() {
+        return Err(format!("slid plan fails lint: {defects:?}"));
+    }
+    if s.plan.total_bytes() > plan.total_bytes() {
+        return Err(format!(
+            "slide grew memory: {} > {}",
+            s.plan.total_bytes(),
+            plan.total_bytes()
+        ));
+    }
+    // Exposure monotone non-increasing, and the adopted plan re-prices
+    // to exactly what the pass reported.
+    if s.exposed_after > s.exposed_before + 1e-12 {
+        return Err(format!(
+            "exposure grew: {} > {}",
+            s.exposed_after, s.exposed_before
+        ));
+    }
+    let repriced = plan_swap_overhead(&rw.graph, &s.plan.schedule, m, &rw.pairs);
+    if (repriced.exposed_secs - s.exposed_after).abs() > 1e-9 {
+        return Err(format!(
+            "reported after {} != repriced {}",
+            s.exposed_after, repriced.exposed_secs
+        ));
+    }
+    // SwapIn still precedes every retargeted consumer; SwapOut still
+    // follows its victim's producer.
+    check_pair_precedence(&rw.graph, &s.plan.order, &rw.pairs)?;
+    Ok(Some(s.exposed_before - s.exposed_after))
+}
+
+fn check_pair_precedence(g: &Graph, order: &[usize], pairs: &[SwapPair]) -> Result<(), String> {
+    let mut pos = vec![0usize; g.n_ops()];
+    for (i, &v) in order.iter().enumerate() {
+        pos[v] = i;
+    }
+    for p in pairs {
+        for &t in &g.ops[p.in_op].outputs {
+            for &c in &g.tensors[t].consumers {
+                if pos[p.in_op] >= pos[c] {
+                    return Err(format!(
+                        "SwapIn {} not before its consumer {}",
+                        p.in_op, c
+                    ));
+                }
+            }
+        }
+        if let Some(prod) = g.tensors[p.original].producer {
+            if pos[p.out_op] <= pos[prod] {
+                return Err(format!("SwapOut {} not after producer {}", p.out_op, prod));
+            }
+        }
+        if pos[p.out_op] >= pos[p.in_op] {
+            return Err(format!(
+                "SwapOut {} not before SwapIn {}",
+                p.out_op, p.in_op
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn slide_invariants_on_random_graphs() {
+    let m = CostModel::default();
+    forall("slide keeps plans valid and exposure monotone", 12, |rng| {
+        let fwd_ops = rng.usize_in(4, 10);
+        let g = random_training_graph(rng, &RandomGraphCfg {
+            fwd_ops,
+            ..Default::default()
+        });
+        check_slide_on(&g, 3, &m).map(|_| ())
+    });
+}
+
+#[test]
+fn slide_invariants_on_transformer_and_mobilenet() {
+    let m = CostModel::default();
+    let mut any_cut = false;
+    for kind in [ModelKind::SyntheticTransformer, ModelKind::Mobilenet] {
+        let g = models::build(kind, &BuildCfg {
+            depth: 2,
+            ..Default::default()
+        });
+        let cut = check_slide_on(&g, 4, &m)
+            .unwrap_or_else(|e| panic!("{kind:?}: {e}"))
+            .expect("model workloads have evictable activations");
+        any_cut |= cut > 1e-12;
+    }
+    // The pass must actually fire somewhere on the real workloads — a
+    // vacuous no-op everywhere would make the monotonicity trivial.
+    assert!(any_cut, "slide never reduced exposure on any model workload");
+}
+
+#[test]
+fn hybrid_slide_stats_are_monotone_end_to_end() {
+    for kind in [ModelKind::SyntheticTransformer, ModelKind::Mobilenet] {
+        let g = models::build(kind, &BuildCfg {
+            depth: 2,
+            ..Default::default()
+        });
+        let r = roam_plan_hybrid(&g, BudgetSpec::Fraction(0.8), &quick_cfg(Technique::Swap));
+        let stat = |k: &str| {
+            r.plan
+                .stat(k)
+                .unwrap_or_else(|| panic!("{kind:?}: missing stat {k}"))
+        };
+        assert!(
+            stat("exposed_secs_after_slide") <= stat("exposed_secs_before_slide") + 1e-12,
+            "{kind:?}: slide stats not monotone"
+        );
+        assert!((stat("swap_exposed_secs") - r.swap_exposed_secs).abs() < 1e-9);
+        assert!(r.exposed_secs_after_slide <= r.exposed_secs_before_slide + 1e-12);
+        lint::assert_plan_ok(&r.graph, &r.plan);
+    }
+}
+
+#[test]
+fn disabled_slide_reports_before_equals_after_and_stays_valid() {
+    // (Cross-run exposure comparison is NOT a sound property here: the
+    // warm-seed chain makes later rounds depend on the slid orders, so
+    // the two drivers legitimately explore different plans. The
+    // per-round guarantee — slide adopted only on strict improvement —
+    // is pinned at the slide_swaps level by `check_slide_on`.)
+    let without = roam_plan_hybrid(
+        &models::build(ModelKind::SyntheticTransformer, &BuildCfg {
+            depth: 2,
+            ..Default::default()
+        }),
+        BudgetSpec::Fraction(0.8),
+        &HybridCfg {
+            slide: false,
+            ..quick_cfg(Technique::Swap)
+        },
+    );
+    assert_eq!(
+        without.exposed_secs_before_slide, without.exposed_secs_after_slide,
+        "disabled slide must report before == after"
+    );
+    lint::assert_plan_ok(&without.graph, &without.plan);
+}
+
+#[test]
+fn lambda_ordering_stays_valid_and_never_loses_on_the_objective() {
+    use roam::sched::bnb::{min_peak_order, min_peak_order_objective, BnbCfg, OrderObjective};
+    use roam::sched::sim::theoretical_peak;
+    use roam::sched::Schedule;
+
+    let m = CostModel::default();
+    forall("λ-ordering validity + scalarised dominance", 10, |rng| {
+        let fwd_ops = rng.usize_in(3, 7);
+        let g = random_training_graph(rng, &RandomGraphCfg {
+            fwd_ops,
+            ..Default::default()
+        });
+        let victims: Vec<usize> = (0..g.n_tensors())
+            .filter(|&t| is_evictable(&g, t))
+            .take(2)
+            .collect();
+        if victims.is_empty() {
+            return Ok(());
+        }
+        let reach = Reachability::compute(&g);
+        let rw = rewrite(&g, &reach, &victims);
+        if rw.graph.n_ops() > 24 {
+            return Ok(()); // keep the exact searches tiny
+        }
+        let cfg = BnbCfg {
+            max_nodes: 200_000,
+            ..BnbCfg::default()
+        };
+        let r0 = min_peak_order(&rw.graph, &cfg);
+        let obj = OrderObjective::build(&rw.graph, 1e6, m.compute_bytes_per_sec)
+            .expect("augmented graph has swap events");
+        let ro = min_peak_order_objective(&rw.graph, &cfg, None, Some(&obj));
+        if !roam::graph::topo::is_topological(&rw.graph, &ro.order) {
+            return Err("λ order not topological".into());
+        }
+        let sim = theoretical_peak(&rw.graph, &Schedule::from_order(&ro.order));
+        if sim != ro.peak {
+            return Err(format!("λ peak {} != sim {}", ro.peak, sim));
+        }
+        if ro.proved_optimal && r0.proved_optimal {
+            let s0 = obj.score(r0.peak, obj.penalty_of(&r0.order));
+            let so = obj.score(ro.peak, obj.penalty_of(&ro.order));
+            if so > s0 + 1e-6 {
+                return Err(format!("λ search lost on its own objective: {so} > {s0}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lambda_hybrid_plans_stay_valid() {
+    let g = models::build(ModelKind::SyntheticTransformer, &BuildCfg {
+        depth: 2,
+        ..Default::default()
+    });
+    let r = roam_plan_hybrid(&g, BudgetSpec::Fraction(0.8), &HybridCfg {
+        order_lambda: 1e9,
+        ..quick_cfg(Technique::Swap)
+    });
+    lint::assert_plan_ok(&r.graph, &r.plan);
+    assert!(r.total() <= r.baseline_total);
+    assert!(r.exposed_secs_after_slide <= r.exposed_secs_before_slide + 1e-12);
+    // The λ knob is reported on the chosen plan when a round was chosen.
+    if r.rounds > 0 && r.swapped > 0 {
+        assert_eq!(r.plan.stat("order_lambda"), Some(1e9));
+    }
+}
