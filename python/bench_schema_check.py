@@ -27,8 +27,14 @@ import sys
 EXPECTED = {
     "BENCH_planner.json": {
         "bench": "leaf_solver_perf",
-        "schema": "planner-perf-v2",
-        "run_keys": ["small", "leaf_order_search", "dsa_search", "planner_wall_clock"],
+        "schema": "planner-perf-v3",
+        "run_keys": [
+            "small",
+            "leaf_order_search",
+            "dsa_search",
+            "planner_wall_clock",
+            "obs_overhead",
+        ],
         "points": None,
     },
     "BENCH_swap.json": {

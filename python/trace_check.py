@@ -1,0 +1,121 @@
+#!/usr/bin/env python3
+"""Validate Chrome trace-event files written by `roam --trace-out`.
+
+The exporter contract (obs::span::chrome_trace) is
+
+    {"traceEvents": [event, ...], "displayTimeUnit": "ms"}
+
+where every event carries "name", "ph", "ts", "pid", "tid"; "ph" is one
+of "B" (span enter), "E" (span exit), "i" (instant, which additionally
+carries its scope "s"); and per (pid, tid) the B/E events are balanced
+and properly nested — an "E" always closes the most recently opened
+span of the same name. This script fails fast on any drift — a renamed
+field, an unbalanced span, an exporter emitting non-monotonic chaos —
+instead of letting CI upload traces Perfetto cannot load.
+
+Usage:
+    trace_check.py [--require-span NAME]... FILE...
+
+Each --require-span NAME asserts at least one "B" event with that name
+exists in every file (CI pins the planner's segment/leaf-solve spans).
+"""
+
+import json
+import os
+import sys
+
+REQUIRED_EVENT_KEYS = ("name", "ph", "ts", "pid", "tid")
+PHASES = ("B", "E", "i")
+
+
+def check_file(path, require_spans):
+    errors = []
+    name = os.path.basename(path)
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{name}: unreadable/unparseable: {e}"]
+
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return [f"{name}: missing top-level 'traceEvents'"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        return [f"{name}: 'traceEvents' is not a list"]
+    if not events:
+        errors.append(f"{name}: empty trace (recorder enabled but nothing spanned?)")
+
+    stacks = {}  # (pid, tid) -> [span name, ...]
+    seen_begin = set()
+    for i, e in enumerate(events):
+        if not isinstance(e, dict):
+            errors.append(f"{name}: event {i} is not an object")
+            continue
+        missing = [k for k in REQUIRED_EVENT_KEYS if k not in e]
+        if missing:
+            errors.append(f"{name}: event {i} missing {missing}")
+            continue
+        ph = e["ph"]
+        if ph not in PHASES:
+            errors.append(f"{name}: event {i} has unknown phase {ph!r}")
+            continue
+        if not isinstance(e["ts"], (int, float)) or e["ts"] < 0:
+            errors.append(f"{name}: event {i} has bad ts {e['ts']!r}")
+        key = (e["pid"], e["tid"])
+        stack = stacks.setdefault(key, [])
+        if ph == "B":
+            stack.append(e["name"])
+            seen_begin.add(e["name"])
+        elif ph == "E":
+            if not stack:
+                errors.append(f"{name}: event {i} 'E' {e['name']!r} with no open span on {key}")
+            elif stack[-1] != e["name"]:
+                errors.append(
+                    f"{name}: event {i} 'E' {e['name']!r} closes {stack[-1]!r} on {key}"
+                )
+            else:
+                stack.pop()
+        elif "s" not in e:
+            errors.append(f"{name}: event {i} instant missing scope 's'")
+    for key, stack in stacks.items():
+        if stack:
+            errors.append(f"{name}: unbalanced spans {stack} left open on {key}")
+    for want in require_spans:
+        if want not in seen_begin:
+            errors.append(f"{name}: required span {want!r} never opened")
+    return errors
+
+
+def main(argv):
+    require_spans = []
+    files = []
+    i = 0
+    while i < len(argv):
+        if argv[i] == "--require-span":
+            if i + 1 >= len(argv):
+                print("TRACE ERROR: --require-span needs a NAME")
+                return 2
+            require_spans.append(argv[i + 1])
+            i += 2
+            continue
+        if argv[i].startswith("--"):
+            print(f"TRACE ERROR: unknown flag {argv[i]!r}")
+            return 2
+        files.append(argv[i])
+        i += 1
+    if not files:
+        print(__doc__)
+        return 2
+    all_errors = []
+    for path in files:
+        all_errors += check_file(path, require_spans)
+    for e in all_errors:
+        print(f"TRACE ERROR: {e}")
+    if all_errors:
+        return 1
+    print(f"traces ok: {', '.join(os.path.basename(f) for f in files)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

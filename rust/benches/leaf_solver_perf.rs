@@ -231,12 +231,70 @@ fn main() {
     }
     rep.finish();
 
-    // --- 4. repo-root trajectory file (append, never clobber) -------------
+    // --- 4. observability overhead: spans-on vs spans-off planning --------
+    // The recorder's disabled path is one relaxed atomic load; with it
+    // enabled the planner buffers a handful of events per segment/leaf.
+    // Guard the whole-planner cost of both modes on the small workloads:
+    // best-of-3 wall-clock with spans on must stay within 5% of spans
+    // off (plus a 50ms absolute floor so microsecond jitter on tiny
+    // graphs cannot trip the gate).
+    let mut rep = Report::new(
+        "obs_overhead",
+        "Planner wall-clock: spans off vs spans on (recorder overhead)",
+        &["workload", "off_secs", "on_secs", "overhead_pct"],
+    );
+    let best_of = |runs: usize, f: &dyn Fn()| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..runs {
+            let sw = Stopwatch::start();
+            f();
+            best = best.min(sw.secs());
+        }
+        best
+    };
+    let mut obs_rows = Vec::new();
+    for (label, g) in workloads.iter().take(2) {
+        let cfg = RoamCfg::default();
+        roam::obs::span::set_enabled(false);
+        let off_secs = best_of(3, &|| {
+            let _ = roam_plan(g, &cfg);
+        });
+        roam::obs::span::set_enabled(true);
+        let on_secs = best_of(3, &|| {
+            let _ = roam_plan(g, &cfg);
+        });
+        roam::obs::span::set_enabled(false);
+        let events = roam::obs::span::drain().len();
+        let overhead_pct = (on_secs / off_secs.max(1e-9) - 1.0) * 100.0;
+        rep.row(&[
+            label.clone(),
+            format!("{off_secs:.3}"),
+            format!("{on_secs:.3}"),
+            format!("{overhead_pct:+.2}%"),
+        ]);
+        assert!(events > 0, "enabled recorder captured no events on {label}");
+        assert!(
+            on_secs <= off_secs * 1.05 + 0.05,
+            "span recorder overhead gate: {label} off {off_secs:.3}s on {on_secs:.3}s \
+             ({overhead_pct:+.2}%) exceeds 5% + 50ms"
+        );
+        obs_rows.push(Json::obj(vec![
+            ("workload", Json::Str(label.clone())),
+            ("off_secs", Json::Num(off_secs)),
+            ("on_secs", Json::Num(on_secs)),
+            ("overhead_pct", Json::Num(overhead_pct)),
+            ("events", Json::Num(events as f64)),
+        ]));
+    }
+    rep.finish();
+
+    // --- 5. repo-root trajectory file (append, never clobber) -------------
     let run = Json::obj(vec![
         ("small", Json::Bool(small)),
         ("leaf_order_search", Json::Arr(order_rows)),
         ("dsa_search", Json::Arr(dsa_rows)),
         ("planner_wall_clock", Json::Arr(planner_rows)),
+        ("obs_overhead", Json::Arr(obs_rows)),
     ]);
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()
@@ -245,7 +303,7 @@ fn main() {
     roam::benchkit::append_trajectory(
         &path,
         "leaf_solver_perf",
-        "planner-perf-v2",
+        "planner-perf-v3",
         "cargo bench --bench leaf_solver_perf",
         run,
     );

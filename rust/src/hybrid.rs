@@ -359,6 +359,18 @@ pub(crate) fn escalate(
     let mut k = start_k.clamp(1, cands.len());
     let mut best = u64::MAX;
     loop {
+        let mut round_span = crate::obs::span("hybrid_round");
+        round_span
+            .arg("round", rounds.len() as f64)
+            .arg("k", k as f64)
+            .arg_str(
+                "technique",
+                match technique {
+                    Technique::Recompute => "recompute",
+                    Technique::Swap => "swap",
+                    Technique::Hybrid => "hybrid",
+                },
+            );
         let mut rc_set = Vec::new();
         let mut sw_set = Vec::new();
         for c in &cands[..k] {
@@ -430,6 +442,12 @@ pub(crate) fn escalate(
             plan,
             graph,
         };
+        round_span
+            .arg("rc_ops", rc_ops as f64)
+            .arg("swapped", round.swapped as f64)
+            .arg("exposed_after_slide", round.exposed_after_slide)
+            .arg("total_bytes", round.total() as f64);
+        drop(round_span);
         best = best.min(round.total());
         rounds.push(round);
         if stop(best) || k == cands.len() || rounds.len() >= cfg.max_rounds {

@@ -137,6 +137,9 @@ pub fn min_arena_layout_seeded(
     cfg: &DsaCfg,
     seed: Option<&Layout>,
 ) -> DsaResult {
+    let mut sp = crate::obs::span("dsa_search");
+    sp.arg("items", items.len() as f64)
+        .arg("fixed", fixed.len() as f64);
     let lb = lower_bound(items);
     // Incumbents from the two greedy heuristics (fixed-aware).
     let l1 = super::llfb::llfb_with(items, fixed);
@@ -184,6 +187,10 @@ pub fn min_arena_layout_seeded(
             best_layout = layout;
         }
     }
+    sp.arg("nodes_explored", nodes as f64)
+        .arg("arena", best_arena as f64)
+        .arg("proved_optimal", if best_arena == lb { 1.0 } else { 0.0 })
+        .arg("cut_short", if cut_short { 1.0 } else { 0.0 });
     DsaResult {
         proved_optimal: best_arena == lb,
         layout: best_layout,

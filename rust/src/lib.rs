@@ -78,6 +78,7 @@ pub mod hybrid;
 pub mod ilp;
 pub mod layout;
 pub mod models;
+pub mod obs;
 pub mod planner;
 pub mod recompute;
 #[cfg(feature = "pjrt")]

@@ -15,7 +15,14 @@
 //! roam batch DIR [same flags]                     # serve request files from a dir
 //! roam export-dot --model alexnet                 # graphviz to stdout
 //! roam info      --model gpt2-xl                  # graph statistics
+//! roam inspect   --model bert [--width 60] [--top 12] [--out timeline.json]
 //! ```
+//!
+//! `plan` is an alias of `optimize`. Observability flags shared by every
+//! command: `--trace-out PATH` (Chrome trace JSON, loadable in Perfetto),
+//! `--metrics` (enable the metrics registry; serve prints a summary per
+//! batch, other commands print the text exposition), `--log-level
+//! error|warn|info|debug|off` (also via `ROAM_LOG`; stderr only).
 
 use roam::benchkit::{mib, reduction_pct};
 use roam::hybrid::{roam_plan_hybrid, HybridCfg, Technique};
@@ -30,9 +37,20 @@ use roam::util::human_bytes;
 
 fn main() {
     let args = Args::from_env();
+    // Observability setup first: log level (flag beats ROAM_LOG), then
+    // the opt-in recorder/registry — both stay a few-ns no-op when off.
+    roam::obs::log::init(args.opt("log-level"));
+    let metrics = args.bool_flag("metrics");
+    if metrics {
+        roam::obs::metrics::set_enabled(true);
+    }
+    let trace_out = args.opt("trace-out").map(|s| s.to_string());
+    if trace_out.is_some() {
+        roam::obs::span::set_enabled(true);
+    }
     let cmd = args.positional(0).unwrap_or("help").to_string();
     let r = match cmd.as_str() {
-        "optimize" => cmd_optimize(&args),
+        "optimize" | "plan" => cmd_optimize(&args),
         "recompute" => cmd_recompute(&args),
         "swap" => cmd_swap(&args),
         "plan-hlo" => cmd_plan_hlo(&args),
@@ -40,6 +58,7 @@ fn main() {
         "compare" => cmd_compare(&args),
         "serve" => cmd_serve(&args),
         "batch" => cmd_batch(&args),
+        "inspect" => cmd_inspect(&args),
         "export-dot" => cmd_export_dot(&args),
         "info" => cmd_info(&args),
         "help" | "--help" => {
@@ -48,8 +67,19 @@ fn main() {
         }
         other => Err(roam::err!("unknown command '{other}' (try `roam help`)")),
     };
+    if let Some(path) = &trace_out {
+        match roam::obs::span::write_chrome_trace(path) {
+            Ok(()) => roam::log_info!("wrote Chrome trace to {path} (open in Perfetto)"),
+            Err(e) => roam::log_error!("failed to write trace {path}: {e}"),
+        }
+    }
+    // Text exposition for the one-shot commands; serve/batch own stdout
+    // (JSONL) and report through their per-batch summary objects instead.
+    if metrics && !matches!(cmd.as_str(), "serve" | "batch") {
+        print!("{}", roam::obs::metrics::exposition());
+    }
     if let Err(e) = r {
-        eprintln!("error: {e:#}");
+        roam::log_error!("{e:#}");
         std::process::exit(1);
     }
 }
@@ -82,8 +112,18 @@ fn print_help() {
          \x20             --deadline-secs F --no-warm\n\
          \x20 batch       serve every *.json/*.jsonl request file in a\n\
          \x20             directory as one batch (same flags as serve)\n\
+         \x20 inspect     memory timeline of a plan: ASCII sparkline, peak\n\
+         \x20             step, per-tensor peak attribution (--model,\n\
+         \x20             --planner, --width N, --top N, --out timeline.json)\n\
          \x20 export-dot  graphviz dump of a model's training graph\n\
-         \x20 info        graph statistics (ops, tensors, bytes, boundaries)"
+         \x20 info        graph statistics (ops, tensors, bytes, boundaries)\n\n\
+         observability (any command):\n\
+         \x20 --trace-out PATH   write a Chrome trace (load in Perfetto) of\n\
+         \x20                    planner/serve spans recorded during the run\n\
+         \x20 --metrics          enable the metrics registry; serve emits a\n\
+         \x20                    summary per batch, others print the text\n\
+         \x20                    exposition on exit\n\
+         \x20 --log-level L      error|warn|info|debug|off (or ROAM_LOG env)"
     );
 }
 
@@ -398,11 +438,14 @@ fn make_service(args: &Args) -> roam::serve::PlanService {
 }
 
 /// Serve one batch of already-parsed requests, printing a JSONL response
-/// per request (ids offset by `base_id`).
+/// per request (ids offset by `base_id`). With `--metrics`, each batch is
+/// followed by a summary object so cache and degradation counters are
+/// visible per flush, not just at end of stream.
 fn serve_and_print(
     svc: &roam::serve::PlanService,
     reqs: Vec<roam::serve::PlanRequest>,
     base_id: usize,
+    metrics: bool,
 ) {
     if reqs.is_empty() {
         return;
@@ -411,11 +454,15 @@ fn serve_and_print(
     for (i, r) in responses.iter().enumerate() {
         println!("{}", roam::serve::response_to_json(base_id + i, r));
     }
+    if metrics {
+        println!("{}", roam::serve::summary_json(svc));
+    }
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
     use std::io::BufRead as _;
     let svc = make_service(args);
+    let metrics = args.bool_flag("metrics");
     let stdin = std::io::stdin();
     let mut batch: Vec<roam::serve::PlanRequest> = Vec::new();
     let mut served = 0usize;
@@ -427,7 +474,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // Blank line = batch boundary.
             let reqs = std::mem::take(&mut batch);
             let n = reqs.len();
-            serve_and_print(&svc, reqs, served);
+            serve_and_print(&svc, reqs, served, metrics);
             served += n;
             continue;
         }
@@ -443,10 +490,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     let n = batch.len();
-    serve_and_print(&svc, std::mem::take(&mut batch), served);
+    serve_and_print(&svc, std::mem::take(&mut batch), served, metrics);
     served += n;
     println!("{}", roam::serve::summary_json(&svc));
-    eprintln!("served {served} request(s), rejected {rejected}");
+    roam::log_info!("served {served} request(s), rejected {rejected}");
     Ok(())
 }
 
@@ -496,9 +543,25 @@ fn cmd_batch(args: &Args) -> Result<()> {
     }
     let svc = make_service(args);
     let n = reqs.len();
-    serve_and_print(&svc, reqs, 0);
+    serve_and_print(&svc, reqs, 0, args.bool_flag("metrics"));
     println!("{}", roam::serve::summary_json(&svc));
-    eprintln!("served {n} request(s) from {} file(s)", paths.len());
+    roam::log_info!("served {n} request(s) from {} file(s)", paths.len());
+    Ok(())
+}
+
+/// `roam inspect`: plan a model, then render where its memory peak comes
+/// from — bytes-live sparkline over the schedule, the argmax step, and the
+/// tensors live at the peak ranked by size (with evictability, so the
+/// reader can tell how much of the peak recompute/swap could reclaim).
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let g = build_graph(args)?;
+    let p = run_planner(&g, args)?;
+    let tl = roam::obs::timeline::Timeline::compute(&g, &p.schedule);
+    print!("{}", tl.render(args.usize("width", 60), args.usize("top", 12)));
+    if let Some(path) = args.opt("out") {
+        std::fs::write(path, tl.to_json().pretty() + "\n")?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 

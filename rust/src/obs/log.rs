@@ -1,0 +1,155 @@
+//! Leveled diagnostics on **stderr only** — stdout belongs to the data
+//! protocols (`roam serve`'s JSONL stream, `--out -` plan dumps), so
+//! diagnostics must never print there.
+//!
+//! Level resolution: `--log-level LEVEL` on the CLI beats the `ROAM_LOG`
+//! environment variable beats the default (`info`). Use through the
+//! [`crate::log_error!`] / [`crate::log_warn!`] / [`crate::log_info!`] /
+//! [`crate::log_debug!`] macros, which skip formatting entirely when the
+//! level is filtered out.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Severity, ordered: a configured level admits itself and everything
+/// more severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    /// Parse a level name (case-insensitive). `off` suppresses everything.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// Current max admitted level as a u8 (254 = `off`).
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// `off` sentinel: below Error, admits nothing.
+const OFF: u8 = 254;
+
+/// Set the max admitted level.
+pub fn set_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Suppress all logging (used by tests pinning byte-exact stderr).
+pub fn set_off() {
+    MAX_LEVEL.store(OFF, Ordering::Relaxed);
+}
+
+/// Initialise from the environment (`ROAM_LOG=debug`), then optionally
+/// override from a CLI flag value. Unknown names are ignored except
+/// `off`, which suppresses everything.
+pub fn init(cli_level: Option<&str>) {
+    let pick = |s: &str| {
+        if s.eq_ignore_ascii_case("off") {
+            MAX_LEVEL.store(OFF, Ordering::Relaxed);
+            true
+        } else if let Some(l) = Level::parse(s) {
+            set_level(l);
+            true
+        } else {
+            false
+        }
+    };
+    if let Ok(env) = std::env::var("ROAM_LOG") {
+        pick(&env);
+    }
+    if let Some(s) = cli_level {
+        if !pick(s) {
+            eprintln!("[warn] roam: unknown --log-level {s:?} (want error|warn|info|debug|off)");
+        }
+    }
+}
+
+/// Would a message at `level` currently be emitted?
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit a pre-formatted message (macro back end).
+pub fn emit(level: Level, msg: std::fmt::Arguments<'_>) {
+    eprintln!("[{}] roam: {}", level.tag(), msg);
+}
+
+/// Log an error (always stderr).
+#[macro_export]
+macro_rules! log_error {
+    ($($t:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Error) {
+            $crate::obs::log::emit($crate::obs::log::Level::Error, format_args!($($t)*));
+        }
+    };
+}
+
+/// Log a warning.
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Warn) {
+            $crate::obs::log::emit($crate::obs::log::Level::Warn, format_args!($($t)*));
+        }
+    };
+}
+
+/// Log an informational message.
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Info) {
+            $crate::obs::log::emit($crate::obs::log::Level::Info, format_args!($($t)*));
+        }
+    };
+}
+
+/// Log a debug message.
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Debug) {
+            $crate::obs::log::emit($crate::obs::log::Level::Debug, format_args!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse() {
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("nope"), None);
+    }
+
+    #[test]
+    fn ordering_admits_more_severe() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+}

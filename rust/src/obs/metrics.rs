@@ -1,0 +1,237 @@
+//! Zero-dependency metrics registry: named counters, gauges and
+//! log2-bucketed histograms.
+//!
+//! The registry is global and **off by default** (one relaxed atomic load
+//! on the disabled path), enabled by `--metrics` on the CLI or by tests.
+//! Producers publish at natural summary points — `planner::evaluate`
+//! mirrors `ExecutionPlan::stats` (minus its volatile wall-clock /
+//! pool-id keys, so snapshots of identical runs are identical),
+//! `serve::ServiceStats` / `serve::CacheStats` mirror their atomic
+//! counters on snapshot — rather than replacing those structs, which stay
+//! the API-compatible derived views.
+//!
+//! Two export formats:
+//! * [`snapshot_json`] — a stable (BTreeMap-ordered) JSON object,
+//! * [`exposition`] — a Prometheus-style `name value` text form.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static REGISTRY: Mutex<BTreeMap<String, Metric>> = Mutex::new(BTreeMap::new());
+
+/// Histogram bucket count: value `v` lands in bucket `⌈log2(v)⌉ + 1`
+/// (bucket 0 holds `v ≤ 1`), clamped to the last bucket. 64 buckets cover
+/// every u64 byte count and any sane seconds value.
+pub const HIST_BUCKETS: usize = 64;
+
+#[derive(Clone, Debug)]
+enum Metric {
+    Counter(u64),
+    Gauge(f64),
+    Hist {
+        buckets: Box<[u64; HIST_BUCKETS]>,
+        count: u64,
+        sum: f64,
+    },
+}
+
+/// Is the registry currently recording?
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the registry on/off (off = every publish is a no-op).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Clear every registered metric.
+pub fn reset() {
+    REGISTRY.lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+/// Bucket index for a histogram observation.
+fn bucket_of(v: f64) -> usize {
+    if v.is_nan() || v <= 1.0 {
+        return 0;
+    }
+    let b = v.log2().ceil() as usize + 1;
+    b.min(HIST_BUCKETS - 1)
+}
+
+/// Add `delta` to the counter `name` (creates it at zero).
+pub fn counter_add(name: &str, delta: u64) {
+    if !enabled() {
+        return;
+    }
+    let mut reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    match reg
+        .entry(name.to_string())
+        .or_insert_with(|| Metric::Counter(0))
+    {
+        Metric::Counter(c) => *c += delta,
+        _ => panic!("metric {name:?} is not a counter"),
+    }
+}
+
+/// Set the counter `name` to an absolute value — used when mirroring an
+/// external atomic counter (service/cache stats) whose true total already
+/// includes earlier increments.
+pub fn counter_set(name: &str, value: u64) {
+    if !enabled() {
+        return;
+    }
+    let mut reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    match reg
+        .entry(name.to_string())
+        .or_insert_with(|| Metric::Counter(0))
+    {
+        Metric::Counter(c) => *c = value,
+        _ => panic!("metric {name:?} is not a counter"),
+    }
+}
+
+/// Set the gauge `name`.
+pub fn gauge_set(name: &str, value: f64) {
+    if !enabled() {
+        return;
+    }
+    let mut reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    reg.insert(name.to_string(), Metric::Gauge(value));
+}
+
+/// Record one observation into the log2-bucketed histogram `name`.
+pub fn observe(name: &str, value: f64) {
+    if !enabled() {
+        return;
+    }
+    let mut reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    match reg.entry(name.to_string()).or_insert_with(|| Metric::Hist {
+        buckets: Box::new([0; HIST_BUCKETS]),
+        count: 0,
+        sum: 0.0,
+    }) {
+        Metric::Hist {
+            buckets,
+            count,
+            sum,
+        } => {
+            buckets[bucket_of(value)] += 1;
+            *count += 1;
+            *sum += value;
+        }
+        _ => panic!("metric {name:?} is not a histogram"),
+    }
+}
+
+/// Stable JSON snapshot of every metric. Counters/gauges are bare
+/// numbers; histograms are `{count, sum, buckets: {"le_2^k": n, ...}}`
+/// with zero buckets elided.
+pub fn snapshot_json() -> Json {
+    let reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    let mut out = BTreeMap::new();
+    for (name, m) in reg.iter() {
+        let v = match m {
+            Metric::Counter(c) => Json::Num(*c as f64),
+            Metric::Gauge(g) => Json::Num(*g),
+            Metric::Hist {
+                buckets,
+                count,
+                sum,
+            } => {
+                let mut bs = BTreeMap::new();
+                for (i, &n) in buckets.iter().enumerate() {
+                    if n > 0 {
+                        // i=0 → values ≤ 1; i=k → values ≤ 2^(k-1).
+                        let label = if i == 0 {
+                            "le_1".to_string()
+                        } else {
+                            format!("le_2^{:02}", i - 1)
+                        };
+                        bs.insert(label, Json::Num(n as f64));
+                    }
+                }
+                Json::obj(vec![
+                    ("count", Json::Num(*count as f64)),
+                    ("sum", Json::Num(*sum)),
+                    ("buckets", Json::Obj(bs)),
+                ])
+            }
+        };
+        out.insert(name.clone(), v);
+    }
+    Json::Obj(out)
+}
+
+/// Prometheus-style text exposition: one `name value` line per
+/// counter/gauge, `name_count` / `name_sum` / `name_bucket{le="2^k"}`
+/// lines per histogram, sorted by name.
+pub fn exposition() -> String {
+    let reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    let mut out = String::new();
+    for (name, m) in reg.iter() {
+        match m {
+            Metric::Counter(c) => out.push_str(&format!("{name} {c}\n")),
+            Metric::Gauge(g) => out.push_str(&format!("{name} {g}\n")),
+            Metric::Hist {
+                buckets,
+                count,
+                sum,
+            } => {
+                for (i, &n) in buckets.iter().enumerate() {
+                    if n > 0 {
+                        let le = if i == 0 {
+                            "1".to_string()
+                        } else {
+                            format!("2^{}", i - 1)
+                        };
+                        out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {n}\n"));
+                    }
+                }
+                out.push_str(&format!("{name}_count {count}\n"));
+                out.push_str(&format!("{name}_sum {sum}\n"));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Global-registry tests mutate shared state; integration-grade
+    // determinism properties live in tests/obs_props.rs. Here we only pin
+    // the pure pieces plus the disabled no-op path.
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(-3.0), 0);
+        assert_eq!(bucket_of(1.0), 0);
+        assert_eq!(bucket_of(1.5), 2); // ceil(log2 1.5)=1 → bucket 2
+        assert_eq!(bucket_of(2.0), 2);
+        assert_eq!(bucket_of(3.0), 3);
+        assert_eq!(bucket_of(4.0), 3);
+        assert_eq!(bucket_of(1.0e300), HIST_BUCKETS - 1);
+        assert_eq!(bucket_of(f64::NAN), 0);
+    }
+
+    #[test]
+    fn disabled_publishes_are_noops() {
+        // Default state is disabled; nothing below may register.
+        counter_add("obs_test_never_counter", 3);
+        counter_set("obs_test_never_counter2", 9);
+        gauge_set("obs_test_never_gauge", 1.5);
+        observe("obs_test_never_hist", 2.0);
+        let snap = snapshot_json();
+        assert!(snap.get("obs_test_never_counter").is_none());
+        assert!(snap.get("obs_test_never_counter2").is_none());
+        assert!(snap.get("obs_test_never_gauge").is_none());
+        assert!(snap.get("obs_test_never_hist").is_none());
+    }
+}

@@ -1,0 +1,30 @@
+//! Observability substrate: tracing spans, a metrics registry, leveled
+//! logging and per-plan memory-timeline profiling — all zero-dependency.
+//!
+//! ROAM's value proposition is a *measured* one (peak-memory reductions,
+//! exposed-transfer seconds, search speedups), so the planner, the hybrid
+//! driver and the serving layer need a window better than a flat
+//! `Vec<(String, f64)>` and stray `eprintln!`s. This module provides:
+//!
+//! * [`span`] — a thread-safe, allocation-light hierarchical span recorder
+//!   (guard-based enter/exit, monotonic clock, per-thread buffers merged on
+//!   drain) with a Chrome trace-event JSON exporter. The resulting
+//!   `trace.json` loads directly in Perfetto / `chrome://tracing`. The
+//!   recorder is **off by default** and the disabled path is a few-ns
+//!   atomic load, so pinned byte-identical plan outputs stay byte-identical.
+//! * [`metrics`] — a registry of named counters, gauges and log-bucketed
+//!   histograms with a stable JSON snapshot and a text exposition format.
+//!   `ExecutionPlan::stats`, the pool fallback counters and the plan-cache
+//!   hit/miss counters feed it (stats stays a derived view for API compat).
+//! * [`timeline`] — bytes-live-per-timestep profile of a plan with argmax
+//!   timestep and per-tensor attribution of the peak, rendered by
+//!   `roam inspect` as an ASCII sparkline and exportable as JSON.
+//! * [`log`] — leveled stderr-only diagnostics (`ROAM_LOG` env /
+//!   `--log-level` flag) so serve's JSONL stdout protocol is never polluted.
+
+pub mod log;
+pub mod metrics;
+pub mod span;
+pub mod timeline;
+
+pub use span::{instant, span, SpanGuard};

@@ -1,0 +1,355 @@
+//! Hierarchical span recorder + Chrome trace-event exporter.
+//!
+//! Design constraints (see the module doc on [`crate::obs`]):
+//!
+//! * **Disabled must be ~free.** Every public entry point checks one
+//!   relaxed `AtomicBool` first and returns an inert guard; no clock read,
+//!   no allocation, no lock. The pinned λ=0-style planner outputs are
+//!   byte-identical with the recorder compiled in but off.
+//! * **Thread-safe without a hot lock.** Events buffer in a
+//!   `thread_local!` `Vec` and merge into the global sink when the thread
+//!   exits (TLS destructor) or when the buffer fills. [`crate::util::Pool`]
+//!   runs workers on `std::thread::scope`, which joins them before `run`
+//!   returns — so by the time a caller [`drain`]s, every worker's buffer
+//!   has already flushed. The draining thread flushes its own buffer
+//!   explicitly.
+//! * **Deterministic ordering.** Each event carries a global sequence
+//!   number; [`drain`] sorts by it, so two events with the same µs
+//!   timestamp never flip between runs of the exporter.
+//!
+//! The exporter emits the Chrome trace-event JSON array format
+//! (`{"traceEvents": [...]}` with `ph: "B"/"E"/"i"` records), loadable in
+//! Perfetto or `chrome://tracing`.
+
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Flush a thread-local buffer into the sink once it reaches this length
+/// (bounds per-thread memory during long solves).
+const FLUSH_AT: usize = 8192;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Vec<Event>> = Mutex::new(Vec::new());
+static NEXT_SEQ: AtomicU64 = AtomicU64::new(0);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static T0: OnceLock<Instant> = OnceLock::new();
+
+/// Chrome trace-event phase of an [`Event`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Span enter (`ph: "B"`).
+    Begin,
+    /// Span exit (`ph: "E"`).
+    End,
+    /// Point event (`ph: "i"`).
+    Instant,
+}
+
+/// A span argument value (number or string).
+#[derive(Clone, Debug)]
+pub enum ArgVal {
+    Num(f64),
+    Str(String),
+}
+
+impl ArgVal {
+    fn to_json(&self) -> Json {
+        match self {
+            ArgVal::Num(n) => Json::Num(*n),
+            ArgVal::Str(s) => Json::Str(s.clone()),
+        }
+    }
+}
+
+/// One recorded trace event.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub phase: Phase,
+    pub name: &'static str,
+    /// Microseconds since the recorder's first use (monotonic clock).
+    pub ts_us: u64,
+    /// Logical thread id (1 = first thread to record, then arrival order).
+    pub tid: u64,
+    /// Global sequence number — total order across threads.
+    pub seq: u64,
+    pub args: Vec<(&'static str, ArgVal)>,
+}
+
+struct ThreadBuf {
+    tid: u64,
+    events: Vec<Event>,
+}
+
+impl ThreadBuf {
+    fn flush(&mut self) {
+        if self.events.is_empty() {
+            return;
+        }
+        let mut sink = SINK.lock().unwrap_or_else(|e| e.into_inner());
+        sink.append(&mut self.events);
+    }
+}
+
+impl Drop for ThreadBuf {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static BUF: RefCell<ThreadBuf> = RefCell::new(ThreadBuf {
+        tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+        events: Vec::new(),
+    });
+}
+
+/// Is the recorder currently on? One relaxed load — the cost every
+/// instrumentation site pays when tracing is off.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the recorder on/off. Turning it on pins the monotonic epoch on
+/// first use; turning it off leaves already-buffered events intact.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Drop all recorded events (sink + current thread's buffer) and return
+/// the recorder to its pristine state. Tests use this between cases.
+pub fn reset() {
+    BUF.with(|b| b.borrow_mut().events.clear());
+    SINK.lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+fn now_us() -> u64 {
+    let t0 = T0.get_or_init(Instant::now);
+    t0.elapsed().as_micros() as u64
+}
+
+fn record(phase: Phase, name: &'static str, args: Vec<(&'static str, ArgVal)>) {
+    let ts_us = now_us();
+    let seq = NEXT_SEQ.fetch_add(1, Ordering::Relaxed);
+    BUF.with(|b| {
+        let mut b = b.borrow_mut();
+        let tid = b.tid;
+        b.events.push(Event {
+            phase,
+            name,
+            ts_us,
+            tid,
+            seq,
+            args,
+        });
+        if b.events.len() >= FLUSH_AT {
+            b.flush();
+        }
+    });
+}
+
+/// RAII span guard: records `Begin` on creation (when enabled) and `End`
+/// on drop. Arguments attached via [`SpanGuard::arg`] / [`SpanGuard::arg_str`]
+/// ride on the `End` event, so values computed *during* the span (node
+/// counts, fallback flags) can be attached after the fact — Perfetto
+/// merges B/E args onto the one slice.
+pub struct SpanGuard {
+    name: &'static str,
+    active: bool,
+    args: Vec<(&'static str, ArgVal)>,
+}
+
+impl SpanGuard {
+    /// Attach a numeric argument (no-op when the span is inert).
+    pub fn arg(&mut self, key: &'static str, val: f64) -> &mut Self {
+        if self.active {
+            self.args.push((key, ArgVal::Num(val)));
+        }
+        self
+    }
+
+    /// Attach a string argument (no-op when the span is inert).
+    pub fn arg_str(&mut self, key: &'static str, val: &str) -> &mut Self {
+        if self.active {
+            self.args.push((key, ArgVal::Str(val.to_string())));
+        }
+        self
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.active {
+            record(Phase::End, self.name, std::mem::take(&mut self.args));
+        }
+    }
+}
+
+/// Enter a span. Returns an inert guard (no clock read, no allocation)
+/// when the recorder is disabled.
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard {
+            name,
+            active: false,
+            args: Vec::new(),
+        };
+    }
+    record(Phase::Begin, name, Vec::new());
+    SpanGuard {
+        name,
+        active: true,
+        args: Vec::new(),
+    }
+}
+
+/// Record a point event with arguments (incumbent improvements, deadline
+/// fallbacks, slide adopt/reject decisions).
+#[inline]
+pub fn instant(name: &'static str, args: Vec<(&'static str, ArgVal)>) {
+    if !enabled() {
+        return;
+    }
+    record(Phase::Instant, name, args);
+}
+
+/// Convenience: a numeric-args point event.
+#[inline]
+pub fn instant_num(name: &'static str, args: &[(&'static str, f64)]) {
+    if !enabled() {
+        return;
+    }
+    let args = args.iter().map(|&(k, v)| (k, ArgVal::Num(v))).collect();
+    record(Phase::Instant, name, args);
+}
+
+/// Merge every thread's flushed events (plus the calling thread's live
+/// buffer) and return them ordered by global sequence number. Callers
+/// must only drain after parallel work has joined — [`crate::util::Pool`]
+/// guarantees that by construction.
+pub fn drain() -> Vec<Event> {
+    BUF.with(|b| b.borrow_mut().flush());
+    let mut events = {
+        let mut sink = SINK.lock().unwrap_or_else(|e| e.into_inner());
+        std::mem::take(&mut *sink)
+    };
+    events.sort_by_key(|e| e.seq);
+    events
+}
+
+/// Render events as a Chrome trace-event JSON document.
+pub fn chrome_trace(events: &[Event]) -> Json {
+    let trace_events: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            let mut pairs = vec![
+                ("name", Json::Str(e.name.to_string())),
+                (
+                    "ph",
+                    Json::Str(
+                        match e.phase {
+                            Phase::Begin => "B",
+                            Phase::End => "E",
+                            Phase::Instant => "i",
+                        }
+                        .to_string(),
+                    ),
+                ),
+                ("ts", Json::Num(e.ts_us as f64)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(e.tid as f64)),
+            ];
+            if e.phase == Phase::Instant {
+                // Thread-scoped instant; renders as an arrow in Perfetto.
+                pairs.push(("s", Json::Str("t".to_string())));
+            }
+            if !e.args.is_empty() {
+                let args = e
+                    .args
+                    .iter()
+                    .map(|(k, v)| (k.to_string(), v.to_json()))
+                    .collect();
+                pairs.push(("args", Json::Obj(args)));
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(trace_events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+/// Drain the recorder and write a Chrome trace JSON file to `path`.
+pub fn write_chrome_trace(path: &str) -> std::io::Result<()> {
+    let doc = chrome_trace(&drain());
+    std::fs::write(path, doc.pretty() + "\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The recorder is global process state, so in-crate unit tests keep to
+    // behaviours that are robust under `cargo test`'s default parallelism;
+    // the cross-thread nesting and byte-identity properties live in
+    // `tests/obs_props.rs`, which serialises access explicitly.
+
+    #[test]
+    fn disabled_span_records_nothing_and_is_inert() {
+        // Default state is disabled: guards are inert and args are no-ops.
+        let mut g = span("never");
+        g.arg("n", 1.0).arg_str("s", "x");
+        assert!(!g.active);
+        assert!(g.args.is_empty());
+        drop(g);
+        instant_num("never_i", &[("v", 2.0)]);
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let events = vec![
+            Event {
+                phase: Phase::Begin,
+                name: "a",
+                ts_us: 1,
+                tid: 1,
+                seq: 0,
+                args: vec![],
+            },
+            Event {
+                phase: Phase::Instant,
+                name: "tick",
+                ts_us: 2,
+                tid: 1,
+                seq: 1,
+                args: vec![("k", ArgVal::Num(3.0))],
+            },
+            Event {
+                phase: Phase::End,
+                name: "a",
+                ts_us: 5,
+                tid: 1,
+                seq: 2,
+                args: vec![("label", ArgVal::Str("x".into()))],
+            },
+        ];
+        let doc = chrome_trace(&events);
+        let te = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(te.len(), 3);
+        assert_eq!(te[0].get("ph").unwrap().as_str(), Some("B"));
+        assert_eq!(te[1].get("ph").unwrap().as_str(), Some("i"));
+        assert_eq!(te[1].get("s").unwrap().as_str(), Some("t"));
+        assert_eq!(te[2].get("ph").unwrap().as_str(), Some("E"));
+        assert_eq!(
+            te[2].get("args").unwrap().get("label").unwrap().as_str(),
+            Some("x")
+        );
+        // The document round-trips through our own parser.
+        assert_eq!(Json::parse(&doc.pretty()).unwrap(), doc);
+    }
+}

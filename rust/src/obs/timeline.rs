@@ -1,0 +1,290 @@
+//! Per-plan memory-timeline profiling: where did the peak come from?
+//!
+//! Wraps the ground-truth simulator ([`crate::sched::sim`]) into an
+//! operator-facing report: bytes live at every timestep, the argmax
+//! timestep, and a per-tensor attribution of the peak — which tensors
+//! hold bytes at the peak step, who produced them, and whether the
+//! eviction substrate ([`crate::evict::is_evictable`]) could target them
+//! (i.e. whether a recompute/swap rewrite would actually dent the peak).
+//!
+//! By the simulator's own pinned invariant (`live_at_matches_profile`),
+//! the attribution **sums exactly** to the simulated peak bytes —
+//! `tests/obs_props.rs` re-pins that end-to-end. Rendered as an ASCII
+//! sparkline by `roam inspect`, exported as JSON with `--out`.
+
+use crate::evict::is_evictable;
+use crate::graph::{Graph, OpId, TensorId};
+use crate::sched::sim::{live_at, profile};
+use crate::sched::Schedule;
+use crate::util::human_bytes;
+use crate::util::json::Json;
+
+/// One tensor holding bytes at the peak timestep.
+#[derive(Clone, Debug)]
+pub struct PeakHolder {
+    pub tensor: TensorId,
+    pub name: String,
+    pub bytes: u64,
+    /// Producing op (`None` for graph inputs).
+    pub producer: Option<OpId>,
+    pub producer_name: String,
+    /// Could the eviction substrate free this tensor (recompute or swap
+    /// rewrite candidate)? `false` marks structural residents the peak
+    /// cannot shed without reordering.
+    pub evictable: bool,
+}
+
+/// Memory timeline of a schedule on a graph.
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    /// Live dynamic bytes at every timestep.
+    pub per_step: Vec<u64>,
+    /// max(per_step) — the theoretical peak.
+    pub peak: u64,
+    /// First timestep attaining the peak.
+    pub peak_step: usize,
+    /// Constant resident set (weights + optimizer state).
+    pub persistent: u64,
+    /// Peak attribution: every dynamic tensor live at `peak_step`,
+    /// largest first. Sizes sum exactly to `peak`.
+    pub holders: Vec<PeakHolder>,
+}
+
+impl Timeline {
+    /// Profile `sched` on `g` and attribute the peak.
+    pub fn compute(g: &Graph, sched: &Schedule) -> Timeline {
+        let prof = profile(g, sched);
+        let mut holders: Vec<PeakHolder> = live_at(g, sched, prof.peak_step)
+            .into_iter()
+            .map(|tid| {
+                let t = &g.tensors[tid];
+                let producer_name = t
+                    .producer
+                    .map(|op| g.ops[op].name.clone())
+                    .unwrap_or_default();
+                PeakHolder {
+                    tensor: tid,
+                    name: t.name.clone(),
+                    bytes: t.size,
+                    producer: t.producer,
+                    producer_name,
+                    evictable: is_evictable(g, tid),
+                }
+            })
+            .collect();
+        holders.sort_by(|a, b| b.bytes.cmp(&a.bytes).then(a.tensor.cmp(&b.tensor)));
+        Timeline {
+            per_step: prof.per_step,
+            peak: prof.peak,
+            peak_step: prof.peak_step,
+            persistent: prof.persistent,
+            holders,
+        }
+    }
+
+    /// Sum of the attributed holder bytes. Equals [`Timeline::peak`] by
+    /// the simulator's liveness invariant (re-pinned in tests).
+    pub fn attributed_bytes(&self) -> u64 {
+        self.holders.iter().map(|h| h.bytes).sum()
+    }
+
+    /// Bytes an eviction-substrate rewrite could shed at the peak.
+    pub fn evictable_bytes(&self) -> u64 {
+        self.holders
+            .iter()
+            .filter(|h| h.evictable)
+            .map(|h| h.bytes)
+            .sum()
+    }
+
+    /// ASCII sparkline of the timeline, `width` columns wide (each column
+    /// shows the max over its chunk of timesteps, on a 10-glyph ramp).
+    pub fn sparkline(&self, width: usize) -> String {
+        sparkline(&self.per_step, width)
+    }
+
+    /// JSON export (stable key order via the JSON substrate).
+    pub fn to_json(&self) -> Json {
+        let holders = self
+            .holders
+            .iter()
+            .map(|h| {
+                Json::obj(vec![
+                    ("tensor", Json::Num(h.tensor as f64)),
+                    ("name", Json::Str(h.name.clone())),
+                    ("bytes", Json::Num(h.bytes as f64)),
+                    (
+                        "producer",
+                        match h.producer {
+                            Some(op) => Json::Num(op as f64),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("producer_name", Json::Str(h.producer_name.clone())),
+                    ("evictable", Json::Bool(h.evictable)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            (
+                "per_step",
+                Json::Arr(self.per_step.iter().map(|&b| Json::Num(b as f64)).collect()),
+            ),
+            ("peak", Json::Num(self.peak as f64)),
+            ("peak_step", Json::Num(self.peak_step as f64)),
+            ("persistent", Json::Num(self.persistent as f64)),
+            ("attributed_bytes", Json::Num(self.attributed_bytes() as f64)),
+            ("evictable_bytes", Json::Num(self.evictable_bytes() as f64)),
+            ("holders", Json::Arr(holders)),
+        ])
+    }
+
+    /// Human report for `roam inspect`: sparkline + peak attribution
+    /// table (top `top_k` holders).
+    pub fn render(&self, width: usize, top_k: usize) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "memory timeline: {} steps, peak {} at step {} (persistent {})\n",
+            self.per_step.len(),
+            human_bytes(self.peak),
+            self.peak_step,
+            human_bytes(self.persistent),
+        ));
+        out.push_str(&format!("  [{}]\n", self.sparkline(width)));
+        out.push_str(&format!(
+            "peak attribution ({} tensors, {} evictable by recompute/swap):\n",
+            self.holders.len(),
+            human_bytes(self.evictable_bytes()),
+        ));
+        for h in self.holders.iter().take(top_k) {
+            let producer = if h.producer_name.is_empty() {
+                "<input>"
+            } else {
+                &h.producer_name
+            };
+            out.push_str(&format!(
+                "  {:>10}  {}  (from {}{})\n",
+                human_bytes(h.bytes),
+                h.name,
+                producer,
+                if h.evictable { ", evictable" } else { "" },
+            ));
+        }
+        if self.holders.len() > top_k {
+            let rest: u64 = self.holders.iter().skip(top_k).map(|h| h.bytes).sum();
+            out.push_str(&format!(
+                "  {:>10}  … {} more tensors\n",
+                human_bytes(rest),
+                self.holders.len() - top_k,
+            ));
+        }
+        out
+    }
+}
+
+/// Glyph ramp for sparklines, lightest to densest.
+const RAMP: &[u8] = b" .:-=+*#%@";
+
+/// Downsample `per_step` to `width` columns (max over each chunk) and
+/// map onto the glyph ramp, scaled so the peak hits the densest glyph.
+pub fn sparkline(per_step: &[u64], width: usize) -> String {
+    if per_step.is_empty() || width == 0 {
+        return String::new();
+    }
+    let peak = per_step.iter().copied().max().unwrap_or(0);
+    let cols = width.min(per_step.len());
+    let mut out = String::with_capacity(cols);
+    for c in 0..cols {
+        // Chunk [lo, hi) of the timeline feeding column c.
+        let lo = c * per_step.len() / cols;
+        let hi = ((c + 1) * per_step.len() / cols).max(lo + 1);
+        let m = per_step[lo..hi].iter().copied().max().unwrap_or(0);
+        let idx = if peak == 0 {
+            0
+        } else {
+            // Nonzero values never map to the blank glyph.
+            (((m as u128) * (RAMP.len() as u128 - 1)).div_ceil(peak as u128)) as usize
+        };
+        out.push(RAMP[idx.min(RAMP.len() - 1)] as char);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpKind, Phase, TensorClass};
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new("tl");
+        let x = g.add_input_tensor("x", 8, TensorClass::Input);
+        let (_, a) = g.add_op(
+            "a",
+            OpKind::Other,
+            Phase::Forward,
+            &[x],
+            &[("ta", 100, TensorClass::Activation)],
+        );
+        let (_, b) = g.add_op(
+            "b",
+            OpKind::Other,
+            Phase::Forward,
+            &[a[0]],
+            &[("tb", 40, TensorClass::Activation)],
+        );
+        g.mark_output(b[0]);
+        g
+    }
+
+    #[test]
+    fn attribution_sums_to_peak() {
+        let g = tiny();
+        let s = Schedule::from_order(&[0, 1]);
+        let tl = Timeline::compute(&g, &s);
+        assert_eq!(tl.attributed_bytes(), tl.peak);
+        assert_eq!(tl.per_step[tl.peak_step], tl.peak);
+        // Largest holder first.
+        assert!(tl.holders.windows(2).all(|w| w[0].bytes >= w[1].bytes));
+    }
+
+    #[test]
+    fn json_roundtrips_and_is_consistent() {
+        let g = tiny();
+        let s = Schedule::from_order(&[0, 1]);
+        let tl = Timeline::compute(&g, &s);
+        let j = tl.to_json();
+        assert_eq!(Json::parse(&j.pretty()).unwrap(), j);
+        assert_eq!(j.get("peak").unwrap().as_u64(), Some(tl.peak));
+        assert_eq!(
+            j.get("attributed_bytes").unwrap().as_u64(),
+            Some(tl.peak)
+        );
+        assert_eq!(
+            j.get("holders").unwrap().as_arr().unwrap().len(),
+            tl.holders.len()
+        );
+    }
+
+    #[test]
+    fn sparkline_shape() {
+        assert_eq!(sparkline(&[], 10), "");
+        assert_eq!(sparkline(&[0, 0], 2), "  ");
+        let s = sparkline(&[1, 2, 4, 8], 4);
+        assert_eq!(s.len(), 4);
+        // Peak maps to the densest glyph; nonzero never blank.
+        assert_eq!(s.as_bytes()[3], b'@');
+        assert!(!s.contains(' '));
+        // Wider than the data: clamps to one column per step.
+        assert_eq!(sparkline(&[5], 80).len(), 1);
+    }
+
+    #[test]
+    fn render_mentions_peak_and_holders() {
+        let g = tiny();
+        let s = Schedule::from_order(&[0, 1]);
+        let tl = Timeline::compute(&g, &s);
+        let r = tl.render(40, 10);
+        assert!(r.contains("peak"));
+        assert!(r.contains("ta"));
+    }
+}

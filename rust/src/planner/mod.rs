@@ -126,6 +126,30 @@ impl ExecutionPlan {
         ])
     }
 
+    /// Mirror this plan's headline numbers and counters into the
+    /// [`crate::obs::metrics`] registry (no-op while metrics are
+    /// disabled). `stats` stays the API-compatible derived view; the
+    /// registry adds cross-plan aggregation. Volatile keys — wall-clock
+    /// `planning_secs` and the `*_pool_id` run markers — are excluded so
+    /// snapshots of identical runs are identical.
+    pub fn publish_metrics(&self) {
+        use crate::obs::metrics;
+        if !metrics::enabled() {
+            return;
+        }
+        metrics::counter_add("plans_evaluated_total", 1);
+        metrics::gauge_set("plan_theoretical_peak_bytes", self.theoretical_peak as f64);
+        metrics::gauge_set("plan_actual_peak_bytes", self.actual_peak as f64);
+        metrics::gauge_set("plan_persistent_bytes", self.persistent as f64);
+        metrics::observe("plan_actual_peak_bytes_hist", self.actual_peak as f64);
+        for (k, v) in &self.stats {
+            if k.ends_with("_pool_id") {
+                continue;
+            }
+            metrics::gauge_set(&format!("plan_stat_{k}"), *v);
+        }
+    }
+
     /// Parse a plan back from JSON.
     pub fn from_json(j: &Json) -> Option<ExecutionPlan> {
         let order: Vec<OpId> = j
@@ -196,7 +220,7 @@ pub fn evaluate(
         "{planner}: layout has address conflicts"
     );
     let prof = profile(g, &sched);
-    ExecutionPlan {
+    let plan = ExecutionPlan {
         planner: planner.to_string(),
         order: sched.to_order(),
         schedule: sched,
@@ -206,7 +230,9 @@ pub fn evaluate(
         persistent: prof.persistent,
         planning_secs,
         stats,
-    }
+    };
+    plan.publish_metrics();
+    plan
 }
 
 /// PyTorch baseline: program-definition order + dynamic caching allocator.

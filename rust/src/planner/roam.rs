@@ -168,6 +168,10 @@ pub fn roam_plan_full(
 ) -> ExecutionPlan {
     let sw = Stopwatch::start();
     let deadline = Deadline::after_secs(cfg.time_limit_secs);
+    let mut plan_span = crate::obs::span("roam_plan");
+    plan_span
+        .arg("n_ops", g.n_ops() as f64)
+        .arg("n_tensors", g.n_tensors() as f64);
 
     // Validate the seed once against the original graph; an invalid order
     // invalidates the whole seed (its offsets describe another graph).
@@ -222,8 +226,14 @@ pub fn roam_plan_full(
         .with_deadline(deadline);
 
     // 4: solve leaf ordering tasks (in parallel).
-    let (order, order_leaf_fallbacks, order_nodes, order_pool_id) =
-        solve_ordering(&g2, &tree, cfg, &pool, deadline, seed_order, obj);
+    let (order, order_leaf_fallbacks, order_nodes, order_pool_id) = {
+        let mut sp = crate::obs::span("solve_ordering");
+        let out = solve_ordering(&g2, &tree, cfg, &pool, deadline, seed_order, obj);
+        sp.arg("leaf_tasks", tree.order_tasks.len() as f64)
+            .arg("nodes_explored", out.2 as f64)
+            .arg("deadline_fallbacks", out.1 as f64);
+        out
+    };
     debug_assert!(
         crate::graph::topo::is_topological(&g2, &order),
         "roam order must be topological"
@@ -262,7 +272,14 @@ pub fn roam_plan_full(
     // fallback fired, the chosen order ignores g2's control edges, so
     // lifetimes must come from the original graph.
     let lg: &Graph = if order_fallback > 0.0 { g } else { &g2 };
-    let mut lay = solve_layout(lg, &tree, &sched, cfg, &pool, deadline, seed_offsets.as_ref());
+    let mut lay = {
+        let mut sp = crate::obs::span("solve_layout");
+        let out = solve_layout(lg, &tree, &sched, cfg, &pool, deadline, seed_offsets.as_ref());
+        sp.arg("windows", tree.windows.len() as f64)
+            .arg("deadline_fallbacks", out.window_fallbacks as f64)
+            .arg("dsa_cut_short", out.dsa_cut_short as f64);
+        out
+    };
     let mut layout_fallback = 0.0f64;
     {
         let items = super::layout_items(lg, &sched);
@@ -394,6 +411,10 @@ pub fn roam_plan_full(
             obj.map(|o| o.lambda_bytes_per_sec).unwrap_or(0.0),
         ),
     ];
+    plan_span
+        .arg("order_nodes_explored", order_nodes as f64)
+        .arg("order_leaf_fallbacks", order_leaf_fallbacks as f64)
+        .arg_str("planner", name);
     evaluate(g, name, sched, &lay.layout, sw.secs(), stats)
 }
 
@@ -518,6 +539,15 @@ fn solve_ordering(
         if task_ops.len() <= 1 {
             return task_ops.clone();
         }
+        // Nested segment → leaf-solve spans: each chunk belongs to exactly
+        // one segment, so the pair renders as a per-segment slice holding
+        // the exact-solver slice in Perfetto (tested by tests/obs_props.rs).
+        let mut seg_span = crate::obs::span("segment");
+        seg_span
+            .arg("segment", tree.order_tasks[i].segment as f64)
+            .arg("part", tree.order_tasks[i].part as f64);
+        let mut leaf_span = crate::obs::span("leaf_solve");
+        leaf_span.arg("task", i as f64).arg("ops", task_ops.len() as f64);
         let (sub, map) = extract_subgraph(g2, task_ops);
         // Project the global warm seed onto this leaf: the restriction of
         // a topological order to a chunk, expressed in local ids. The
@@ -548,6 +578,7 @@ fn solve_ordering(
             leaf_obj.as_ref(),
         );
         nodes.fetch_add(r.nodes_explored, Ordering::Relaxed);
+        leaf_span.arg("order_nodes_explored", r.nodes_explored as f64);
         r.order.into_iter().map(|l| map[l]).collect()
     };
 
@@ -557,6 +588,10 @@ fn solve_ordering(
         // unoptimised) instead of paying the exact solver's incumbents.
         .run_or(n_tasks, solve_one, |i| {
             fallbacks.fetch_add(1, Ordering::Relaxed);
+            crate::obs::span::instant_num(
+                "order_leaf_deadline_fallback",
+                &[("task", i as f64), ("ops", tree.order_tasks[i].ops.len() as f64)],
+            );
             tree.order_tasks[i].ops.clone()
         });
 
@@ -724,6 +759,8 @@ fn solve_layout(
         if rest[k].is_empty() {
             return Vec::new();
         }
+        let mut sp = crate::obs::span("dsa_window");
+        sp.arg("window", k as f64).arg("items", rest[k].len() as f64);
         // Warm incumbent from the cached layout's packing order, when the
         // caller supplied one (see `seeded_window_layout`).
         let seeded = seed_prio.and_then(|prio| seeded_window_layout(&rest[k], &fixed, prio));
@@ -731,6 +768,8 @@ fn solve_layout(
         if r.cut_short {
             cut_short.fetch_add(1, Ordering::Relaxed);
         }
+        sp.arg("nodes_explored", r.nodes_explored as f64)
+            .arg("cut_short", if r.cut_short { 1.0 } else { 0.0 });
         r.layout.offsets
     };
     let window_fallbacks = AtomicUsize::new(0);
@@ -742,6 +781,10 @@ fn solve_layout(
                 return Vec::new();
             }
             window_fallbacks.fetch_add(1, Ordering::Relaxed);
+            crate::obs::span::instant_num(
+                "layout_window_deadline_fallback",
+                &[("window", k as f64), ("items", rest[k].len() as f64)],
+            );
             crate::layout::llfb::llfb_with(&rest[k], &fixed).offsets
         });
     for w in win_offsets {

@@ -428,6 +428,13 @@ impl<'a> Search<'a> {
             if self.prefix_peak < self.best_peak {
                 self.best_peak = self.prefix_peak;
                 self.best_order = self.prefix.clone();
+                crate::obs::span::instant_num(
+                    "bnb_incumbent",
+                    &[
+                        ("peak", self.best_peak as f64),
+                        ("nodes", self.nodes as f64),
+                    ],
+                );
             }
             return;
         }
@@ -488,6 +495,14 @@ impl<'a> Search<'a> {
                 self.best_obj = sc;
                 self.best_peak = self.prefix_peak;
                 self.best_order = self.prefix.clone();
+                crate::obs::span::instant_num(
+                    "bnb_incumbent",
+                    &[
+                        ("peak", self.best_peak as f64),
+                        ("score", sc),
+                        ("nodes", self.nodes as f64),
+                    ],
+                );
             }
             return;
         }

@@ -188,8 +188,28 @@ impl PlanService {
         &self.cache
     }
 
+    /// Mirror the service + cache counters into the
+    /// [`crate::obs::metrics`] registry (no-op while metrics are
+    /// disabled). The atomic counter structs stay the source of truth;
+    /// the registry view adds the exposition/snapshot formats.
+    pub fn publish_metrics(&self) {
+        use crate::obs::metrics;
+        if !metrics::enabled() {
+            return;
+        }
+        for (k, v) in self.stats.snapshot() {
+            metrics::counter_set(&format!("serve_{k}_total"), v);
+        }
+        for (k, v) in self.cache.stats().snapshot() {
+            metrics::counter_set(&format!("plan_cache_{k}_total"), v);
+        }
+        metrics::gauge_set("plan_cache_len", self.cache.len() as f64);
+    }
+
     /// Serve a batch; responses are positionally aligned with `reqs`.
     pub fn serve_batch(&self, reqs: &[PlanRequest]) -> Vec<PlanResponse> {
+        let mut batch_span = crate::obs::span("serve_batch");
+        batch_span.arg("requests", reqs.len() as f64);
         self.stats
             .requests
             .fetch_add(reqs.len() as u64, Ordering::Relaxed);
@@ -219,6 +239,9 @@ impl PlanService {
         }
         let dedupes: u64 = groups.values().map(|v| (v.len() - 1) as u64).sum();
         self.stats.dedupe_hits.fetch_add(dedupes, Ordering::Relaxed);
+        batch_span
+            .arg("jobs", job_of_key.len() as f64)
+            .arg("dedupe_hits", dedupes as f64);
 
         // Per-job deadline: the most generous member wins (a deduped
         // response must satisfy every member; the strictest member can
@@ -277,7 +300,8 @@ impl PlanService {
 
         // Assemble positionally; non-representative members are dedupes.
         let mut first_seen: HashMap<u128, usize> = HashMap::new();
-        reqs.iter()
+        let out: Vec<PlanResponse> = reqs
+            .iter()
             .enumerate()
             .map(|(i, _)| {
                 let key = fps[i].key;
@@ -290,7 +314,9 @@ impl PlanService {
                 }
                 resp
             })
-            .collect()
+            .collect();
+        self.publish_metrics();
+        out
     }
 
     /// Execute one distinct planning job. `inner_parallel = false` caps
@@ -306,12 +332,31 @@ impl PlanService {
     ) -> PlanResponse {
         let sw = Stopwatch::start();
         let g = &req.graph;
+        let mut sp = crate::obs::span("serve_request");
+        sp.arg("n_ops", g.n_ops() as f64)
+            .arg("budgeted", if req.budget.is_some() { 1.0 } else { 0.0 });
 
         // Deadline already blown: degrade to the heuristic immediately.
+        // This used to surface only via `Outcome::Degraded` in the
+        // response body — operators had to parse every response to see
+        // it. Now each degradation also emits a warn log and a metrics
+        // counter (plus the `degraded` field of every batch summary).
         if deadline.expired() {
             self.stats.degraded.fetch_add(1, Ordering::Relaxed);
+            crate::obs::metrics::counter_add("serve_degradation_events_total", 1);
+            crate::log_warn!(
+                "request degraded to heuristic plan: deadline expired before planning \
+                 started ({} ops{})",
+                g.n_ops(),
+                if req.budget.is_some() { ", budgeted" } else { "" },
+            );
+            crate::obs::span::instant_num(
+                "serve_degraded",
+                &[("n_ops", g.n_ops() as f64)],
+            );
             let plan = heuristic_plan(g);
             let lint_ok = lint_plan(g, &plan).is_empty();
+            sp.arg_str("outcome", Outcome::Degraded.name());
             return PlanResponse {
                 key: fp.key,
                 outcome: Outcome::Degraded,
@@ -327,6 +372,7 @@ impl PlanService {
                 Some(plan) => {
                     self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
                     let lint_ok = lint_plan(g, &plan).is_empty();
+                    sp.arg_str("outcome", Outcome::CacheHit.name());
                     return PlanResponse {
                         key: fp.key,
                         outcome: Outcome::CacheHit,
@@ -375,6 +421,7 @@ impl PlanService {
                     self.cache.put(warm::to_cached(g, canon, &plan, fp));
                 }
                 self.stats.cold.fetch_add(1, Ordering::Relaxed);
+                sp.arg_str("outcome", Outcome::Cold.name());
                 return PlanResponse {
                     key: fp.key,
                     outcome: Outcome::Cold,
@@ -416,6 +463,7 @@ impl PlanService {
         if lint_ok && !deadline.expired() {
             self.cache.put(warm::to_cached(g, canon, &plan, fp));
         }
+        sp.arg_str("outcome", outcome.name());
         PlanResponse {
             key: fp.key,
             outcome,

@@ -239,6 +239,13 @@ pub fn slide_swaps(
         }
     }
     let Some((ord, exposed_after, moved_out, moved_in)) = best else {
+        crate::obs::span::instant_num(
+            "slide_reject",
+            &[
+                ("reason_no_exposure_cut", 1.0),
+                ("exposed_secs", before.exposed_secs),
+            ],
+        );
         return unapplied(before.exposed_secs);
     };
 
@@ -262,8 +269,26 @@ pub fn slide_swaps(
     // compliance is judged on totals, so a slide that grows the total is
     // rejected wholesale.
     if out.total_bytes() > plan.total_bytes() {
+        crate::obs::span::instant_num(
+            "slide_reject",
+            &[
+                ("reason_memory_growth", 1.0),
+                ("exposed_secs", before.exposed_secs),
+                ("grown_bytes", (out.total_bytes() - plan.total_bytes()) as f64),
+            ],
+        );
         return unapplied(before.exposed_secs);
     }
+    crate::obs::span::instant_num(
+        "slide_adopt",
+        &[
+            ("exposed_before", before.exposed_secs),
+            ("exposed_after", exposed_after),
+            ("exposure_cut", before.exposed_secs - exposed_after),
+            ("moved_out", moved_out as f64),
+            ("moved_in", moved_in as f64),
+        ],
+    );
     SlideOutcome {
         plan: out,
         exposed_before: before.exposed_secs,
