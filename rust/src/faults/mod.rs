@@ -1,0 +1,30 @@
+//! Deterministic fault injection: compiled-in failpoints, armed by spec.
+//!
+//! A paper reproduction becomes a production system the day its fallback
+//! paths are *exercised*, not merely present. ROAM's stack is full of
+//! anytime fallbacks — ASAP leaf orders and LLFB layouts past a deadline,
+//! heuristic plans past a serve deadline, memory-only caching past a disk
+//! error — but until this module nothing ever forced them. `faults/`
+//! makes failure a first-class, reproducible input:
+//!
+//! * [`spec`] — the `ROAM_FAULTS` / `--faults` grammar
+//!   (`name=panic|err|delay_ms:N` clauses with `prob:P@seed` modifiers);
+//! * [`registry`] — the armed rule table behind [`maybe_fail`], the
+//!   [`FAILPOINTS`] enumeration, and the arm/disarm lifecycle.
+//!
+//! Call sites are fixed (à la `fail-rs` with compiled-in points): each
+//! names itself with a `&'static str` and maps `Err(Injected)` onto its
+//! local degraded path, while `panic` actions are absorbed by the
+//! `catch_unwind` isolation in [`crate::util::pool`] and
+//! [`crate::serve::service`]. Disarmed — the default — every failpoint
+//! costs one relaxed atomic load, mirroring the [`crate::obs`]
+//! discipline, so faults-off plan output is byte-identical to a build
+//! without the subsystem (pinned by `tests/fault_props.rs`).
+
+pub mod registry;
+pub mod spec;
+
+pub use registry::{
+    arm, arm_str, armed, disarm, init, injected_total, maybe_fail, snapshot, Injected, FAILPOINTS,
+};
+pub use spec::{FaultAction, FaultRule, FaultSpec};

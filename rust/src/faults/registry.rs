@@ -1,0 +1,220 @@
+//! The armed failpoint registry behind [`maybe_fail`].
+//!
+//! Disarmed (the default, and the production steady state) a failpoint
+//! costs **one relaxed atomic load** — the same discipline as the
+//! [`crate::obs`] recorder, so the faults-off planner output is
+//! byte-identical to a build without the subsystem. Arming installs the
+//! parsed rules behind a mutex consulted only on the armed path.
+//!
+//! Failpoints are compiled in at fixed sites (à la `fail-rs`) and named
+//! in [`FAILPOINTS`], which doubles as the chaos harness's enumeration
+//! and as `arm`'s typo guard.
+
+use super::spec::{FaultAction, FaultSpec};
+use crate::util::rng::Pcg64;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Every failpoint compiled into the crate, with the degraded path each
+/// one exercises:
+///
+/// | failpoint          | site                                  | degraded path                |
+/// |--------------------|---------------------------------------|------------------------------|
+/// | `leaf_solve`       | `planner::roam` ordering leaf         | ASAP chunk order             |
+/// | `layout_window`    | `planner::roam` DSA window            | LLFB greedy layout           |
+/// | `hybrid_round`     | `hybrid` escalation round             | stop with best-so-far rounds |
+/// | `serve_plan`       | `serve::service` planning attempt     | retry → heuristic → error    |
+/// | `cache_disk_read`  | `serve::cache` disk lookup            | counted miss                 |
+/// | `cache_disk_write` | `serve::cache` disk persist           | memory-only insert           |
+pub const FAILPOINTS: &[&str] = &[
+    "leaf_solve",
+    "layout_window",
+    "hybrid_round",
+    "serve_plan",
+    "cache_disk_read",
+    "cache_disk_write",
+];
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static RULES: Mutex<Vec<RuleState>> = Mutex::new(Vec::new());
+/// Total injections fired since process start (armed or not armed —
+/// monotone across `arm`/`disarm` cycles, unlike the per-rule counters).
+static INJECTED_TOTAL: AtomicU64 = AtomicU64::new(0);
+
+struct RuleState {
+    name: String,
+    action: FaultAction,
+    prob: f64,
+    rng: Pcg64,
+    hits: u64,
+    fired: u64,
+}
+
+/// The error an `err`-action failpoint returns; call sites map it onto
+/// their local degraded path (it deliberately does not convert into
+/// [`crate::util::error::Error`] implicitly — surviving an injection must
+/// be a visible decision at the site).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Injected {
+    pub name: &'static str,
+}
+
+impl fmt::Display for Injected {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "injected fault at failpoint '{}'", self.name)
+    }
+}
+
+/// Is any fault spec currently armed? (One relaxed load.)
+#[inline(always)]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Arm `spec`. Every rule name must be a registered [`FAILPOINTS`] entry
+/// — a typo'd spec is an operator error worth failing loudly on, not a
+/// silently inert chaos run. Replaces any previously armed spec.
+pub fn arm(spec: &FaultSpec) -> Result<(), String> {
+    for r in &spec.rules {
+        if !FAILPOINTS.contains(&r.name.as_str()) {
+            return Err(format!(
+                "unknown failpoint '{}' (registered: {})",
+                r.name,
+                FAILPOINTS.join(", ")
+            ));
+        }
+    }
+    let mut rules = RULES.lock().unwrap_or_else(|e| e.into_inner());
+    *rules = spec
+        .rules
+        .iter()
+        .map(|r| RuleState {
+            name: r.name.clone(),
+            action: r.action,
+            prob: r.prob,
+            rng: Pcg64::new(r.seed ^ 0x9e37_79b9_7f4a_7c15),
+            hits: 0,
+            fired: 0,
+        })
+        .collect();
+    drop(rules);
+    ARMED.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Parse and arm a spec string (convenience for CLI/env/tests).
+pub fn arm_str(spec: &str) -> Result<(), String> {
+    arm(&FaultSpec::parse(spec)?)
+}
+
+/// Disarm every failpoint and drop the rules (back to the one-load path).
+pub fn disarm() {
+    ARMED.store(false, Ordering::Relaxed);
+    RULES.lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+/// Initialise from the environment and CLI: `--faults SPEC` beats
+/// `ROAM_FAULTS`. Returns whether a spec was armed.
+pub fn init(cli_spec: Option<&str>) -> Result<bool, String> {
+    let env = std::env::var("ROAM_FAULTS").ok();
+    let spec = match (cli_spec, env.as_deref()) {
+        (Some(s), _) => s.to_string(),
+        (None, Some(s)) if !s.trim().is_empty() => s.to_string(),
+        _ => return Ok(false),
+    };
+    arm_str(&spec).map_err(|e| format!("bad fault spec {spec:?}: {e}"))?;
+    Ok(true)
+}
+
+/// Per-rule `(name, hits, fired)` counters of the armed spec.
+pub fn snapshot() -> Vec<(String, u64, u64)> {
+    RULES
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .iter()
+        .map(|r| (r.name.clone(), r.hits, r.fired))
+        .collect()
+}
+
+/// Total injections fired since process start (all specs, all cycles).
+pub fn injected_total() -> u64 {
+    INJECTED_TOTAL.load(Ordering::Relaxed)
+}
+
+/// The failpoint primitive. Disarmed: one relaxed load, `Ok(())`.
+/// Armed with a matching rule that fires: `panic` panics **after**
+/// releasing the registry lock (the isolation layers above catch it),
+/// `delay_ms` sleeps then returns `Ok`, `err` returns `Err(Injected)`
+/// for the site's degraded path.
+pub fn maybe_fail(name: &'static str) -> Result<(), Injected> {
+    if !armed() {
+        return Ok(());
+    }
+    let action = {
+        let mut rules = RULES.lock().unwrap_or_else(|e| e.into_inner());
+        let Some(rs) = rules.iter_mut().find(|r| r.name == name) else {
+            return Ok(());
+        };
+        rs.hits += 1;
+        let fire = rs.prob >= 1.0 || rs.rng.chance(rs.prob);
+        if !fire {
+            return Ok(());
+        }
+        rs.fired += 1;
+        rs.action
+    };
+    INJECTED_TOTAL.fetch_add(1, Ordering::Relaxed);
+    crate::obs::metrics::counter_add("faults_injected_total", 1);
+    crate::obs::metrics::counter_add(&format!("faults_injected_{name}_total"), 1);
+    if crate::obs::span::enabled() {
+        crate::obs::span::instant(
+            "fault_injected",
+            vec![("failpoint", crate::obs::span::ArgVal::Str(name.to_string()))],
+        );
+    }
+    match action {
+        FaultAction::Panic => panic!("injected fault at failpoint '{name}'"),
+        FaultAction::DelayMs(ms) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            Ok(())
+        }
+        FaultAction::Err => Err(Injected { name }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global; integration-grade properties (and
+    // anything arming concurrently with planner runs) live in
+    // tests/fault_props.rs behind that file's own lock. Here we pin only
+    // cheap invariants that tolerate interleaving with other unit tests,
+    // on failpoint names no other test arms.
+
+    #[test]
+    fn arm_rejects_unknown_failpoint() {
+        let e = arm_str("no_such_point=panic").unwrap_err();
+        assert!(e.contains("unknown failpoint"), "{e}");
+        assert!(e.contains("leaf_solve"), "message lists the registry: {e}");
+    }
+
+    #[test]
+    fn failpoints_are_distinct_and_nonempty() {
+        let mut names = FAILPOINTS.to_vec();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), FAILPOINTS.len());
+        assert!(!FAILPOINTS.is_empty());
+    }
+
+    #[test]
+    fn injected_display_names_the_failpoint() {
+        let i = Injected { name: "leaf_solve" };
+        assert_eq!(
+            format!("{i}"),
+            "injected fault at failpoint 'leaf_solve'"
+        );
+    }
+}

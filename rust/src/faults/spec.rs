@@ -1,0 +1,223 @@
+//! The `ROAM_FAULTS` / `--faults` specification grammar.
+//!
+//! A spec is a `;`-separated list of clauses. A clause containing `=`
+//! starts a new **rule** binding a failpoint name to an action; a clause
+//! without `=` **modifies** the most recent rule:
+//!
+//! ```text
+//! spec     := clause (';' clause)*
+//! clause   := rule | modifier
+//! rule     := NAME '=' action
+//! action   := 'panic' | 'err' | 'delay_ms:' N
+//! modifier := 'prob:' P ['@' SEED]      # fire with probability P (default 1.0)
+//! ```
+//!
+//! Examples (all valid):
+//!
+//! ```text
+//! leaf_solve=panic
+//! leaf_solve=panic;prob:0.3@7
+//! cache_disk_write=err;serve_plan=delay_ms:50;prob:0.5@11
+//! ```
+//!
+//! Probabilistic rules draw from a private [`crate::util::rng::Pcg64`]
+//! seeded by `SEED`, so a given spec fires at a reproducible subsequence
+//! of hits (exactly reproducible under sequential planning; under a
+//! parallel pool the *set* of decisions is seed-stable but their
+//! assignment to tasks follows arrival order).
+
+use std::fmt;
+
+/// What an armed failpoint does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// `panic!` in place — exercises the `catch_unwind` isolation layers.
+    Panic,
+    /// Return an injected error for the call site's degraded path.
+    Err,
+    /// Sleep for the given milliseconds, then proceed normally —
+    /// exercises deadline degradation without failing anything.
+    DelayMs(u64),
+}
+
+impl fmt::Display for FaultAction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultAction::Panic => write!(f, "panic"),
+            FaultAction::Err => write!(f, "err"),
+            FaultAction::DelayMs(ms) => write!(f, "delay_ms:{ms}"),
+        }
+    }
+}
+
+/// One parsed rule: a failpoint name, an action and a firing probability.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultRule {
+    pub name: String,
+    pub action: FaultAction,
+    /// Firing probability in `[0, 1]` (1.0 = every hit).
+    pub prob: f64,
+    /// Seed for the rule's private RNG (only consulted when `prob < 1`).
+    pub seed: u64,
+}
+
+/// A full parsed spec (one or more rules over distinct failpoints).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultSpec {
+    /// Parse a spec string; `Err` carries an operator-readable message.
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        let mut rules: Vec<FaultRule> = Vec::new();
+        for clause in s.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            if let Some((name, action)) = clause.split_once('=') {
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(format!("empty failpoint name in clause '{clause}'"));
+                }
+                if rules.iter().any(|r| r.name == name) {
+                    return Err(format!("duplicate rule for failpoint '{name}'"));
+                }
+                rules.push(FaultRule {
+                    name: name.to_string(),
+                    action: parse_action(action.trim())?,
+                    prob: 1.0,
+                    seed: 0,
+                });
+            } else if let Some(rest) = clause.strip_prefix("prob:") {
+                let rule = rules.last_mut().ok_or_else(|| {
+                    format!("modifier '{clause}' must follow a NAME=ACTION rule")
+                })?;
+                let (p_str, seed) = match rest.split_once('@') {
+                    Some((p, s)) => (
+                        p,
+                        s.trim()
+                            .parse::<u64>()
+                            .map_err(|_| format!("bad seed in '{clause}' (want an integer)"))?,
+                    ),
+                    None => (rest, 0u64),
+                };
+                let p: f64 = p_str
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("bad probability in '{clause}' (want a number)"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("probability {p} in '{clause}' is outside [0, 1]"));
+                }
+                rule.prob = p;
+                rule.seed = seed;
+            } else {
+                return Err(format!(
+                    "unrecognised clause '{clause}' \
+                     (want NAME=panic|err|delay_ms:N or prob:P@SEED)"
+                ));
+            }
+        }
+        if rules.is_empty() {
+            return Err("empty fault spec".to_string());
+        }
+        Ok(FaultSpec { rules })
+    }
+}
+
+impl fmt::Display for FaultSpec {
+    /// Canonical re-rendering; `parse(format!("{spec}"))` round-trips.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, r) in self.rules.iter().enumerate() {
+            if i > 0 {
+                write!(f, ";")?;
+            }
+            write!(f, "{}={}", r.name, r.action)?;
+            if r.prob < 1.0 {
+                write!(f, ";prob:{}@{}", r.prob, r.seed)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_action(s: &str) -> Result<FaultAction, String> {
+    match s {
+        "panic" => Ok(FaultAction::Panic),
+        "err" => Ok(FaultAction::Err),
+        _ => match s.strip_prefix("delay_ms:") {
+            Some(n) => n
+                .trim()
+                .parse::<u64>()
+                .map(FaultAction::DelayMs)
+                .map_err(|_| format!("bad delay in 'delay_ms:{n}' (want milliseconds)")),
+            None => Err(format!(
+                "unknown action '{s}' (want panic|err|delay_ms:N)"
+            )),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_single_rule() {
+        let s = FaultSpec::parse("leaf_solve=panic").unwrap();
+        assert_eq!(s.rules.len(), 1);
+        assert_eq!(s.rules[0].name, "leaf_solve");
+        assert_eq!(s.rules[0].action, FaultAction::Panic);
+        assert_eq!(s.rules[0].prob, 1.0);
+    }
+
+    #[test]
+    fn parses_issue_example() {
+        // The leaf_solve half of the spec the chaos-smoke CI job uses.
+        let s = FaultSpec::parse("leaf_solve=panic;prob:0.3@7").unwrap();
+        assert_eq!(s.rules.len(), 1);
+        assert_eq!(s.rules[0].prob, 0.3);
+        assert_eq!(s.rules[0].seed, 7);
+    }
+
+    #[test]
+    fn parses_multi_rule_with_delay() {
+        let s =
+            FaultSpec::parse("cache_disk_write=err; serve_plan=delay_ms:50 ;prob:0.5@11").unwrap();
+        assert_eq!(s.rules.len(), 2);
+        assert_eq!(s.rules[0].action, FaultAction::Err);
+        assert_eq!(s.rules[0].prob, 1.0);
+        assert_eq!(s.rules[1].action, FaultAction::DelayMs(50));
+        assert_eq!(s.rules[1].prob, 0.5);
+        assert_eq!(s.rules[1].seed, 11);
+    }
+
+    #[test]
+    fn display_round_trips() {
+        for raw in [
+            "leaf_solve=panic",
+            "leaf_solve=panic;prob:0.3@7",
+            "a=err;b=delay_ms:9;prob:0.25@3;c=panic",
+        ] {
+            let s = FaultSpec::parse(raw).unwrap();
+            let again = FaultSpec::parse(&format!("{s}")).unwrap();
+            assert_eq!(s, again, "round-trip failed for {raw:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            ";;",
+            "prob:0.5",                  // modifier before any rule
+            "leaf_solve=teleport",       // unknown action
+            "leaf_solve=delay_ms:abc",   // bad delay
+            "=panic",                    // empty name
+            "a=panic;prob:1.5",          // probability out of range
+            "a=panic;prob:x@1",          // bad probability
+            "a=panic;prob:0.5@x",        // bad seed
+            "a=panic;a=err",             // duplicate rule
+            "just_a_name",               // clause with neither = nor prob:
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+}

@@ -359,6 +359,17 @@ pub(crate) fn escalate(
     let mut k = start_k.clamp(1, cands.len());
     let mut best = u64::MAX;
     loop {
+        // `hybrid_round` failpoint: an injected `err` stops escalating
+        // and keeps the rounds finished so far — the driver's normal
+        // anytime behaviour when a round budget runs out. An injected
+        // panic unwinds to the serve ladder's isolation.
+        if crate::faults::maybe_fail("hybrid_round").is_err() {
+            crate::log_warn!(
+                "hybrid escalation stopped by injected fault after {} round(s)",
+                rounds.len()
+            );
+            break;
+        }
         let mut round_span = crate::obs::span("hybrid_round");
         round_span
             .arg("round", rounds.len() as f64)

@@ -72,6 +72,7 @@ pub mod benchkit;
 #[cfg(feature = "pjrt")]
 pub mod coordinator;
 pub mod evict;
+pub mod faults;
 pub mod graph;
 pub mod hlo;
 pub mod hybrid;

@@ -11,7 +11,8 @@
 //! roam train     [--artifacts artifacts] [--steps 200] [--log-every 10] [--seed 0]
 //! roam compare   --model vit --batch 1 [--budget 0.6]   # all planners side by side
 //! roam serve     [--cache-capacity 256] [--cache-dir DIR] [--workers N]
-//!                [--deadline-secs F] [--no-warm]   # JSONL batches on stdin
+//!                [--deadline-secs F] [--no-warm] [--max-inflight N]
+//!                # JSONL batches on stdin
 //! roam batch DIR [same flags]                     # serve request files from a dir
 //! roam export-dot --model alexnet                 # graphviz to stdout
 //! roam info      --model gpt2-xl                  # graph statistics
@@ -22,7 +23,10 @@
 //! command: `--trace-out PATH` (Chrome trace JSON, loadable in Perfetto),
 //! `--metrics` (enable the metrics registry; serve prints a summary per
 //! batch, other commands print the text exposition), `--log-level
-//! error|warn|info|debug|off` (also via `ROAM_LOG`; stderr only).
+//! error|warn|info|debug|off` (also via `ROAM_LOG`; stderr only), and
+//! `--faults SPEC` (arm deterministic fault injection, e.g.
+//! `leaf_solve=panic;prob:0.3@7`; also via `ROAM_FAULTS` — see
+//! `roam::faults`).
 
 use roam::benchkit::{mib, reduction_pct};
 use roam::hybrid::{roam_plan_hybrid, HybridCfg, Technique};
@@ -47,6 +51,21 @@ fn main() {
     let trace_out = args.opt("trace-out").map(|s| s.to_string());
     if trace_out.is_some() {
         roam::obs::span::set_enabled(true);
+    }
+    // Deterministic fault injection (--faults beats ROAM_FAULTS), armed
+    // before dispatch so every command sees the same failpoints. A bad
+    // spec is a usage error — exiting beats silently running fault-free
+    // when the operator believes faults are armed.
+    match roam::faults::init(args.opt("faults")) {
+        Ok(false) => {}
+        Ok(true) => roam::log_warn!(
+            "fault injection armed: {} rule(s) active (see `roam::faults`)",
+            roam::faults::snapshot().len()
+        ),
+        Err(e) => {
+            roam::log_error!("bad fault spec: {e}");
+            std::process::exit(2);
+        }
     }
     let cmd = args.positional(0).unwrap_or("help").to_string();
     let r = match cmd.as_str() {
@@ -109,7 +128,9 @@ fn print_help() {
          \x20             Request: {{\"model\":\"bert\",\"batch\":32,\"budget\":0.6,\n\
          \x20             \"technique\":\"hybrid\",\"deadline_secs\":5}}\n\
          \x20             Flags: --cache-capacity N --cache-dir DIR --workers N\n\
-         \x20             --deadline-secs F --no-warm\n\
+         \x20             --deadline-secs F --no-warm --max-inflight N\n\
+         \x20             (admission control: at most N distinct planning\n\
+         \x20              jobs per batch, the rest answer with an error)\n\
          \x20 batch       serve every *.json/*.jsonl request file in a\n\
          \x20             directory as one batch (same flags as serve)\n\
          \x20 inspect     memory timeline of a plan: ASCII sparkline, peak\n\
@@ -123,7 +144,11 @@ fn print_help() {
          \x20 --metrics          enable the metrics registry; serve emits a\n\
          \x20                    summary per batch, others print the text\n\
          \x20                    exposition on exit\n\
-         \x20 --log-level L      error|warn|info|debug|off (or ROAM_LOG env)"
+         \x20 --log-level L      error|warn|info|debug|off (or ROAM_LOG env)\n\
+         \x20 --faults SPEC      arm deterministic fault injection (or\n\
+         \x20                    ROAM_FAULTS env); SPEC is ;-separated\n\
+         \x20                    name=panic|err|delay_ms:N rules, each\n\
+         \x20                    optionally followed by prob:P@SEED"
     );
 }
 
@@ -424,16 +449,32 @@ fn cmd_compare(args: &Args) -> Result<()> {
 /// Build the serving stack from the shared CLI flags.
 fn make_service(args: &Args) -> roam::serve::PlanService {
     use roam::serve::{CacheCfg, PlanCache, PlanService, ServeCfg};
+    let dir = args.opt("cache-dir").map(std::path::PathBuf::from);
+    let persistent = dir.is_some();
     let cache = PlanCache::new(CacheCfg {
         capacity: args.usize("cache-capacity", 256),
         shards: args.usize("cache-shards", 8),
-        dir: args.opt("cache-dir").map(std::path::PathBuf::from),
+        dir,
     });
+    // Startup scrub of a persistent cache dir: a crash mid-commit can
+    // leave *.json.tmp litter or torn entries behind; verify everything
+    // now so no later request ever loads a corrupt plan.
+    if persistent {
+        let rep = cache.recover();
+        roam::log_info!(
+            "cache recovery: {} scanned, {} ok, {} quarantined, {} tmp removed",
+            rep.scanned,
+            rep.ok,
+            rep.quarantined,
+            rep.tmp_removed
+        );
+    }
     PlanService::new(cache, ServeCfg {
         roam: roam_cfg(args),
         workers: args.usize("workers", 0),
         warm_start: !args.bool_flag("no-warm"),
         default_deadline_secs: args.f64("deadline-secs", 0.0),
+        max_inflight: args.usize("max-inflight", 0),
     })
 }
 

@@ -78,6 +78,20 @@ pub fn counter_add(name: &str, delta: u64) {
     }
 }
 
+/// Read back the counter `name` (None while disabled, for non-counters
+/// and for names never touched). Tests and the fault chaos harness use
+/// this to assert that degraded paths were actually counted.
+pub fn counter_get(name: &str) -> Option<u64> {
+    if !enabled() {
+        return None;
+    }
+    let reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    match reg.get(name) {
+        Some(Metric::Counter(c)) => Some(*c),
+        _ => None,
+    }
+}
+
 /// Set the counter `name` to an absolute value — used when mirroring an
 /// external atomic counter (service/cache stats) whose true total already
 /// includes earlier increments.

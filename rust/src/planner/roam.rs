@@ -533,10 +533,23 @@ fn solve_ordering(
 ) -> (Vec<OpId>, usize, u64, u64) {
     let n_tasks = tree.order_tasks.len();
     let nodes = AtomicU64::new(0);
+    let fallbacks = AtomicUsize::new(0);
 
     let solve_one = |i: usize| -> Vec<OpId> {
         let task_ops = &tree.order_tasks[i].ops;
         if task_ops.len() <= 1 {
+            return task_ops.clone();
+        }
+        // `leaf_solve` failpoint: an injected `err` takes the same
+        // degraded path as a deadline fallback (ASAP chunk order) and is
+        // counted with the real fallbacks; an injected panic unwinds into
+        // the pool's isolation and lands in the `run_or` fallback below.
+        if crate::faults::maybe_fail("leaf_solve").is_err() {
+            fallbacks.fetch_add(1, Ordering::Relaxed);
+            crate::obs::span::instant_num(
+                "order_leaf_deadline_fallback",
+                &[("task", i as f64), ("ops", task_ops.len() as f64)],
+            );
             return task_ops.clone();
         }
         // Nested segment → leaf-solve spans: each chunk belongs to exactly
@@ -582,7 +595,6 @@ fn solve_ordering(
         r.order.into_iter().map(|l| map[l]).collect()
     };
 
-    let fallbacks = AtomicUsize::new(0);
     let local_orders: Vec<Vec<OpId>> = pool
         // Past the deadline, a leaf keeps its ASAP chunk order (valid but
         // unoptimised) instead of paying the exact solver's incumbents.
@@ -755,9 +767,22 @@ fn solve_layout(
         workers: 1,
     };
     let cut_short = AtomicUsize::new(0);
+    let window_fallbacks = AtomicUsize::new(0);
     let solve_window = |k: usize| -> Vec<(usize, u64)> {
         if rest[k].is_empty() {
             return Vec::new();
+        }
+        // `layout_window` failpoint: an injected `err` takes the same
+        // degraded path as a deadline fallback (LLFB greedy around the
+        // fixed stacks); an injected panic unwinds into the pool's
+        // isolation and lands in the `run_or` fallback below.
+        if crate::faults::maybe_fail("layout_window").is_err() {
+            window_fallbacks.fetch_add(1, Ordering::Relaxed);
+            crate::obs::span::instant_num(
+                "layout_window_deadline_fallback",
+                &[("window", k as f64), ("items", rest[k].len() as f64)],
+            );
+            return crate::layout::llfb::llfb_with(&rest[k], &fixed).offsets;
         }
         let mut sp = crate::obs::span("dsa_window");
         sp.arg("window", k as f64).arg("items", rest[k].len() as f64);
@@ -772,7 +797,6 @@ fn solve_layout(
             .arg("cut_short", if r.cut_short { 1.0 } else { 0.0 });
         r.layout.offsets
     };
-    let window_fallbacks = AtomicUsize::new(0);
     let win_offsets: Vec<Vec<(usize, u64)>> = pool
         // Past the deadline, windows fall back to the LLFB greedy around
         // the fixed stacks instead of entering the search.

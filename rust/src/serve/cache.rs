@@ -19,10 +19,24 @@
 //! consults the directory before giving up, so a service restart — or a
 //! sibling process sharing the directory — reuses earlier work. Disk
 //! errors are deliberately non-fatal: the cache degrades to memory-only.
+//!
+//! **Crash safety.** Each entry is committed atomically — written to
+//! `<key>.json.tmp`, fsync'd, then renamed over the final name — and
+//! carries a first line `fnv1a64=<16 hex>` checksumming the JSON payload
+//! that follows. A load that finds a torn, truncated, corrupted or
+//! misnamed entry **quarantines** the file to `<dir>/quarantine/`
+//! (counted in [`CacheStats::quarantined`], warned, never served) and
+//! reports a miss; an unreadable file (I/O error other than
+//! not-found) is a *counted* miss ([`CacheStats::disk_read_errors`]),
+//! distinguishable from a cold one. [`PlanCache::recover`] scrubs the
+//! whole directory at startup: stale `.json.tmp` files from interrupted
+//! writes are removed and every committed entry is verified the same
+//! way. All shard locks recover from mutex poisoning (a panicking pool
+//! worker must not wedge the cache for every later request).
 
 use crate::util::json::Json;
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -50,6 +64,68 @@ fn hex128(k: u128) -> String {
 
 fn parse_hex128(s: &str) -> Option<u128> {
     u128::from_str_radix(s, 16).ok()
+}
+
+/// FNV-1a 64-bit hash — the integrity checksum of persisted entries.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// On-disk encoding: `fnv1a64=<16 hex>` header line, then the pretty
+/// JSON payload the checksum covers.
+fn encode_entry(plan: &CachedPlan) -> String {
+    let payload = format!("{}\n", plan.to_json().pretty());
+    format!("fnv1a64={:016x}\n{payload}", fnv1a64(payload.as_bytes()))
+}
+
+/// Parse + verify one persisted entry. `Err(reason)` on any corruption:
+/// missing/garbled header, checksum mismatch (covers truncation at every
+/// byte offset — see `tests/fault_props.rs`), unparseable payload, or a
+/// payload whose key differs from `expect_key` (renamed file).
+fn decode_entry(text: &str, expect_key: Option<u128>) -> Result<CachedPlan, String> {
+    let Some((header, payload)) = text.split_once('\n') else {
+        return Err("missing checksum header".to_string());
+    };
+    let Some(hex) = header.strip_prefix("fnv1a64=") else {
+        return Err("missing fnv1a64 checksum header".to_string());
+    };
+    let want = u64::from_str_radix(hex.trim(), 16)
+        .map_err(|_| "unparseable checksum header".to_string())?;
+    let got = fnv1a64(payload.as_bytes());
+    if want != got {
+        return Err(format!(
+            "checksum mismatch (header {want:016x}, payload {got:016x})"
+        ));
+    }
+    let j = Json::parse(payload).map_err(|e| format!("bad JSON payload: {e}"))?;
+    let plan =
+        CachedPlan::from_json(&j).ok_or_else(|| "payload is not a cached plan".to_string())?;
+    if let Some(k) = expect_key {
+        if plan.key != k {
+            return Err(format!(
+                "key mismatch: file named {:032x} holds {:032x}",
+                k, plan.key
+            ));
+        }
+    }
+    Ok(plan)
+}
+
+/// Crash-safe file commit: write everything to `tmp`, fsync, rename over
+/// `dest`. A crash at any point leaves either the previous committed
+/// entry or the new one — never a torn file under the final name.
+fn write_atomic(tmp: &Path, dest: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    use std::io::Write as _;
+    let mut f = std::fs::File::create(tmp)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(tmp, dest)
 }
 
 impl CachedPlan {
@@ -135,6 +211,14 @@ pub struct CacheStats {
     pub disk_hits: AtomicU64,
     pub inserted: AtomicU64,
     pub evicted: AtomicU64,
+    /// Disk reads that failed with a real I/O error (not not-found):
+    /// bit-rot visible to operators instead of masquerading as cold
+    /// misses.
+    pub disk_read_errors: AtomicU64,
+    /// Disk persists that failed (entry stayed memory-only).
+    pub disk_write_errors: AtomicU64,
+    /// Corrupt/truncated/misnamed entries moved to `<dir>/quarantine/`.
+    pub quarantined: AtomicU64,
 }
 
 impl CacheStats {
@@ -147,8 +231,30 @@ impl CacheStats {
             ("disk_hits", self.disk_hits.load(Ordering::Relaxed)),
             ("inserted", self.inserted.load(Ordering::Relaxed)),
             ("evicted", self.evicted.load(Ordering::Relaxed)),
+            (
+                "disk_read_errors",
+                self.disk_read_errors.load(Ordering::Relaxed),
+            ),
+            (
+                "disk_write_errors",
+                self.disk_write_errors.load(Ordering::Relaxed),
+            ),
+            ("quarantined", self.quarantined.load(Ordering::Relaxed)),
         ]
     }
+}
+
+/// What [`PlanCache::recover`] found and did during its startup scrub.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoverReport {
+    /// Committed `*.json` entries examined.
+    pub scanned: usize,
+    /// Entries that verified clean (checksum + payload + key).
+    pub ok: usize,
+    /// Entries quarantined (corrupt, truncated, misnamed).
+    pub quarantined: usize,
+    /// Stale `*.json.tmp` files from interrupted writes, removed.
+    pub tmp_removed: usize,
 }
 
 struct Entry {
@@ -187,7 +293,10 @@ impl PlanCache {
 
     /// Resident plan count (sums shard sizes; advisory under concurrency).
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap_or_else(|e| e.into_inner()).len())
+            .sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -213,7 +322,7 @@ impl PlanCache {
 
     /// Memory lookup bumping the LRU stamp; does not touch counters.
     fn peek(&self, key: u128) -> Option<CachedPlan> {
-        let mut shard = self.shard_of(key).lock().unwrap();
+        let mut shard = self.shard_of(key).lock().unwrap_or_else(|e| e.into_inner());
         let stamp = self.tick();
         shard.get_mut(&key).map(|e| {
             e.stamp = stamp;
@@ -221,16 +330,72 @@ impl PlanCache {
         })
     }
 
-    /// Disk lookup; inserts into memory on success (no re-write).
+    /// Record a real disk read error (anything but not-found): counted
+    /// and warned so bit-rot is distinguishable from a cold miss.
+    fn note_read_error(&self, path: &Path, why: &str) {
+        self.stats.disk_read_errors.fetch_add(1, Ordering::Relaxed);
+        crate::obs::metrics::counter_add("cache_disk_read_errors_total", 1);
+        crate::log_warn!(
+            "plan cache disk read failed for {}: {why} (serving as a miss)",
+            path.display()
+        );
+    }
+
+    /// Move a corrupt committed entry to `<dir>/quarantine/` (removing it
+    /// if even the move fails) — counted, warned, never served.
+    fn quarantine(&self, path: &Path, reason: &str) {
+        self.stats.quarantined.fetch_add(1, Ordering::Relaxed);
+        crate::obs::metrics::counter_add("cache_quarantined_total", 1);
+        let moved = self.cfg.dir.as_ref().and_then(|d| {
+            let qdir = d.join("quarantine");
+            std::fs::create_dir_all(&qdir).ok()?;
+            let dest = qdir.join(path.file_name()?);
+            std::fs::rename(path, &dest).ok()?;
+            Some(dest)
+        });
+        match moved {
+            Some(dest) => crate::log_warn!(
+                "quarantined corrupt plan-cache entry {} -> {}: {reason}",
+                path.display(),
+                dest.display()
+            ),
+            None => {
+                let _ = std::fs::remove_file(path);
+                crate::log_warn!(
+                    "removed corrupt plan-cache entry {} (quarantine move failed): {reason}",
+                    path.display()
+                );
+            }
+        }
+    }
+
+    /// Disk lookup; inserts into memory on success (no re-write). A
+    /// not-found is a plain cold miss; a read error is a counted miss;
+    /// a torn/corrupt entry is quarantined and a miss.
     fn load_from_disk(&self, key: u128) -> Option<CachedPlan> {
         let path = self.disk_path(key)?;
-        let text = std::fs::read_to_string(path).ok()?;
-        let plan = CachedPlan::from_json(&Json::parse(&text).ok()?)?;
-        if plan.key != key {
-            return None; // renamed / corrupted file
+        if crate::faults::maybe_fail("cache_disk_read").is_err() {
+            self.note_read_error(&path, "injected fault");
+            return None;
         }
-        self.insert_mem(plan.clone());
-        Some(plan)
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return None,
+            Err(e) => {
+                self.note_read_error(&path, &e.to_string());
+                return None;
+            }
+        };
+        match decode_entry(&text, Some(key)) {
+            Ok(plan) => {
+                self.insert_mem(plan.clone());
+                Some(plan)
+            }
+            Err(reason) => {
+                self.quarantine(&path, &reason);
+                None
+            }
+        }
     }
 
     /// Full-key lookup: memory, then disk. Counts a hit/disk-hit/miss.
@@ -251,7 +416,11 @@ impl PlanCache {
     /// (same architecture and config, different tensor sizes). Counts a
     /// shape hit; stale index entries (evicted plans) are pruned.
     pub fn get_by_shape(&self, shape: u128) -> Option<CachedPlan> {
-        let key = *self.shape_index.lock().unwrap().get(&shape)?;
+        let key = *self
+            .shape_index
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(&shape)?;
         let found = self.peek(key).or_else(|| self.load_from_disk(key));
         match found {
             Some(p) => {
@@ -259,7 +428,7 @@ impl PlanCache {
                 Some(p)
             }
             None => {
-                let mut idx = self.shape_index.lock().unwrap();
+                let mut idx = self.shape_index.lock().unwrap_or_else(|e| e.into_inner());
                 if idx.get(&shape) == Some(&key) {
                     idx.remove(&shape);
                 }
@@ -273,7 +442,7 @@ impl PlanCache {
         let shape = plan.shape;
         let per_shard_cap = (self.cfg.capacity / self.shards.len()).max(1);
         {
-            let mut shard = self.shard_of(key).lock().unwrap();
+            let mut shard = self.shard_of(key).lock().unwrap_or_else(|e| e.into_inner());
             let stamp = self.tick();
             if !shard.contains_key(&key) && shard.len() >= per_shard_cap {
                 // Evict the least recently touched entry of this shard.
@@ -294,7 +463,7 @@ impl PlanCache {
             }
             shard.insert(key, Entry { plan, stamp });
         }
-        let mut idx = self.shape_index.lock().unwrap();
+        let mut idx = self.shape_index.lock().unwrap_or_else(|e| e.into_inner());
         idx.insert(shape, key);
         // Keep the shape index bounded: eviction removes only the shard
         // entry, so periodically sweep index entries whose key is no
@@ -307,7 +476,13 @@ impl PlanCache {
             let resident: std::collections::HashSet<u128> = self
                 .shards
                 .iter()
-                .flat_map(|s| s.lock().unwrap().keys().copied().collect::<Vec<_>>())
+                .flat_map(|s| {
+                    s.lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .keys()
+                        .copied()
+                        .collect::<Vec<_>>()
+                })
                 .collect();
             idx.retain(|_, k| resident.contains(k));
         }
@@ -317,9 +492,86 @@ impl PlanCache {
     pub fn put(&self, plan: CachedPlan) {
         self.stats.inserted.fetch_add(1, Ordering::Relaxed);
         if let Some(path) = self.disk_path(plan.key) {
-            let _ = std::fs::write(&path, format!("{}\n", plan.to_json().pretty()));
+            self.persist(&path, &plan);
         }
         self.insert_mem(plan);
+    }
+
+    /// Crash-safe persist (tmp + fsync + rename). Failure is non-fatal:
+    /// counted, warned, and the entry stays memory-only.
+    fn persist(&self, path: &Path, plan: &CachedPlan) {
+        let tmp = path.with_extension("json.tmp");
+        let res: Result<(), String> = if crate::faults::maybe_fail("cache_disk_write").is_err() {
+            Err("injected fault".to_string())
+        } else {
+            write_atomic(&tmp, path, encode_entry(plan).as_bytes()).map_err(|e| e.to_string())
+        };
+        if let Err(why) = res {
+            self.stats.disk_write_errors.fetch_add(1, Ordering::Relaxed);
+            crate::obs::metrics::counter_add("cache_disk_write_errors_total", 1);
+            crate::log_warn!(
+                "plan cache disk write failed for {}: {why} (entry stays memory-only)",
+                path.display()
+            );
+            let _ = std::fs::remove_file(&tmp);
+        }
+    }
+
+    /// Startup scrub of the persistence directory: remove stale
+    /// `*.json.tmp` files (interrupted writes — the committed entry, if
+    /// any, is intact by construction) and verify every committed entry,
+    /// quarantining the ones that fail. Idempotent; a no-op without a
+    /// configured directory.
+    pub fn recover(&self) -> RecoverReport {
+        let mut rep = RecoverReport::default();
+        let Some(dir) = self.cfg.dir.clone() else {
+            return rep;
+        };
+        let entries = match std::fs::read_dir(&dir) {
+            Ok(e) => e,
+            Err(_) => return rep,
+        };
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if !path.is_file() {
+                continue; // the quarantine/ subdirectory
+            }
+            let Some(name) = path.file_name().and_then(|n| n.to_str()).map(String::from) else {
+                continue;
+            };
+            if name.ends_with(".json.tmp") {
+                let _ = std::fs::remove_file(&path);
+                rep.tmp_removed += 1;
+                continue;
+            }
+            let Some(stem) = name.strip_suffix(".json") else {
+                continue;
+            };
+            rep.scanned += 1;
+            let verdict = match (parse_hex128(stem), std::fs::read_to_string(&path)) {
+                (None, _) => Err("file name is not a cache key".to_string()),
+                (_, Err(e)) => Err(format!("unreadable: {e}")),
+                (Some(key), Ok(text)) => decode_entry(&text, Some(key)).map(|_| ()),
+            };
+            match verdict {
+                Ok(()) => rep.ok += 1,
+                Err(reason) => {
+                    self.quarantine(&path, &reason);
+                    rep.quarantined += 1;
+                }
+            }
+        }
+        if rep.quarantined > 0 || rep.tmp_removed > 0 {
+            crate::log_warn!(
+                "plan cache recovery: {} scanned, {} ok, {} quarantined, {} interrupted \
+                 write(s) removed",
+                rep.scanned,
+                rep.ok,
+                rep.quarantined,
+                rep.tmp_removed
+            );
+        }
+        rep
     }
 }
 
@@ -381,6 +633,111 @@ mod tests {
         // The evicted plan's shape index entry is pruned on lookup.
         assert!(c.get_by_shape(200).is_none());
         assert!(c.get_by_shape(200).is_none());
+    }
+
+    fn tdir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("roam_cache_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn disk_entries_are_checksummed_and_committed_atomically() {
+        let dir = tdir("atomic");
+        let c = PlanCache::new(CacheCfg {
+            capacity: 8,
+            shards: 1,
+            dir: Some(dir.clone()),
+        });
+        c.put(plan(9, 99));
+        let path = dir.join(format!("{}.json", hex128(9)));
+        let text = std::fs::read_to_string(&path).expect("committed entry");
+        assert!(text.starts_with("fnv1a64="), "checksum header first: {text}");
+        assert_eq!(decode_entry(&text, Some(9)).unwrap(), plan(9, 99));
+        assert!(
+            !dir.join(format!("{}.json.tmp", hex128(9))).exists(),
+            "tmp file must be renamed away"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_entry_is_quarantined_not_served() {
+        let dir = tdir("quarantine");
+        {
+            let c = PlanCache::new(CacheCfg {
+                capacity: 8,
+                shards: 1,
+                dir: Some(dir.clone()),
+            });
+            c.put(plan(5, 55));
+        }
+        let path = dir.join(format!("{}.json", hex128(5)));
+        // Flip the payload out from under its checksum.
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("garbage");
+        std::fs::write(&path, &text).unwrap();
+
+        let c2 = PlanCache::new(CacheCfg {
+            capacity: 8,
+            shards: 1,
+            dir: Some(dir.clone()),
+        });
+        assert!(c2.get(5).is_none(), "corrupt entry must never be served");
+        assert!(!path.exists(), "corrupt entry must leave the cache dir");
+        assert!(
+            dir.join("quarantine").join(format!("{}.json", hex128(5))).exists(),
+            "corrupt entry must land in quarantine/"
+        );
+        let s: std::collections::HashMap<_, _> = c2.stats().snapshot().into_iter().collect();
+        assert_eq!(s["quarantined"], 1);
+        assert_eq!(s["misses"], 1);
+        // A later lookup is a plain miss (the file is gone), still no panic.
+        assert!(c2.get(5).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recover_scrubs_tmp_and_corrupt_entries() {
+        let dir = tdir("recover");
+        {
+            let c = PlanCache::new(CacheCfg {
+                capacity: 8,
+                shards: 2,
+                dir: Some(dir.clone()),
+            });
+            c.put(plan(1, 10));
+            c.put(plan(2, 20));
+        }
+        // Truncate one committed entry mid-payload and fake an
+        // interrupted write.
+        let bad = dir.join(format!("{}.json", hex128(2)));
+        let text = std::fs::read_to_string(&bad).unwrap();
+        std::fs::write(&bad, &text.as_bytes()[..text.len() / 2]).unwrap();
+        std::fs::write(dir.join(format!("{}.json.tmp", hex128(3))), "partial").unwrap();
+
+        let c2 = PlanCache::new(CacheCfg {
+            capacity: 8,
+            shards: 2,
+            dir: Some(dir.clone()),
+        });
+        let rep = c2.recover();
+        assert_eq!(rep, RecoverReport {
+            scanned: 2,
+            ok: 1,
+            quarantined: 1,
+            tmp_removed: 1,
+        });
+        assert_eq!(c2.get(1).unwrap(), plan(1, 10), "good entry survives the scrub");
+        assert!(c2.get(2).is_none());
+        // Idempotent: a second scrub finds a clean directory.
+        assert_eq!(c2.recover(), RecoverReport {
+            scanned: 1,
+            ok: 1,
+            quarantined: 0,
+            tmp_removed: 0,
+        });
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -37,7 +37,7 @@ pub mod canon;
 pub mod service;
 pub mod warm;
 
-pub use cache::{CacheCfg, CachedPlan, PlanCache};
+pub use cache::{CacheCfg, CachedPlan, PlanCache, RecoverReport};
 pub use canon::{canonize, cfg_key, with_cfg, Canon, Fingerprint};
 pub use service::{
     error_json, request_from_json, request_from_line, response_to_json, summary_json, Outcome,

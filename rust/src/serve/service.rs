@@ -26,6 +26,29 @@
 //! cached/deduped like plain ones; warm-start seeding currently applies
 //! to plain requests only (the hybrid driver re-plans internally many
 //! times — seeding its rounds is a recorded follow-on in the ROADMAP).
+//!
+//! ## Degradation ladder
+//!
+//! A planning job that *fails* — a worker panic that escaped the pool's
+//! own isolation, or an injected [`crate::faults`] error at the
+//! `serve_plan` failpoint — walks a bounded ladder instead of killing
+//! the batch:
+//!
+//! | rung | action                              | outcome            |
+//! |------|-------------------------------------|--------------------|
+//! | 1    | exact plan (hybrid / warm / cold)   | `Cold`/`Warm`      |
+//! | 2    | one retry, **halved** remaining deadline | `Retried`     |
+//! | 3    | heuristic rescue plan               | `Degraded`         |
+//! | 4    | well-formed error response          | `Failed`           |
+//!
+//! Every rung is counted (`serve_retries_total`,
+//! `serve_degradation_events_total`, `serve_failures_total`) and the
+//! service answers every request — it never propagates a panic to the
+//! batch caller. Batches are additionally subject to **admission
+//! control**: at most [`ServeCfg::max_inflight`] distinct planning jobs
+//! are admitted per batch (0 ⇒ unlimited); jobs past the cap answer
+//! immediately with `Outcome::Rejected` + an error message rather than
+//! queueing into a pile-up.
 
 use super::cache::PlanCache;
 use super::canon::{canonize, cfg_key, with_cfg};
@@ -34,11 +57,13 @@ use crate::graph::Graph;
 use crate::hybrid::{roam_plan_hybrid, BudgetSpec, HybridCfg, Technique};
 use crate::planner::heuristic::heuristic_plan;
 use crate::planner::{lint_plan, roam_plan_seeded, ExecutionPlan, RoamCfg};
+use crate::sched::Schedule;
 use crate::util::json::Json;
 use crate::util::pool::Pool;
 use crate::util::timer::Deadline;
 use crate::util::Stopwatch;
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Service configuration.
@@ -53,6 +78,11 @@ pub struct ServeCfg {
     pub warm_start: bool,
     /// Default per-request deadline in seconds (0 ⇒ unlimited).
     pub default_deadline_secs: f64,
+    /// Admission control: at most this many **distinct** planning jobs
+    /// are admitted per batch (0 ⇒ unlimited). Jobs past the cap answer
+    /// immediately with [`Outcome::Rejected`] and an error message —
+    /// first-come, first-admitted in request order.
+    pub max_inflight: usize,
 }
 
 impl Default for ServeCfg {
@@ -62,6 +92,7 @@ impl Default for ServeCfg {
             workers: 0,
             warm_start: true,
             default_deadline_secs: 0.0,
+            max_inflight: 0,
         }
     }
 }
@@ -106,8 +137,17 @@ pub enum Outcome {
     Warm,
     /// Answered by another identical request in the same batch.
     Dedup,
-    /// Deadline expired before planning started: heuristic fallback.
+    /// Deadline expired before planning started, or the exact plan and
+    /// its retry both failed: heuristic fallback.
     Degraded,
+    /// First planning attempt failed (panic or injected error); the
+    /// bounded retry under a halved deadline succeeded.
+    Retried,
+    /// Every ladder rung failed — the response carries an error message
+    /// and an empty plan.
+    Failed,
+    /// Refused by admission control (`--max-inflight`) without planning.
+    Rejected,
 }
 
 impl Outcome {
@@ -118,6 +158,9 @@ impl Outcome {
             Outcome::Warm => "warm",
             Outcome::Dedup => "dedup",
             Outcome::Degraded => "degraded",
+            Outcome::Retried => "retried",
+            Outcome::Failed => "failed",
+            Outcome::Rejected => "rejected",
         }
     }
 }
@@ -133,6 +176,46 @@ pub struct PlanResponse {
     pub lint_ok: bool,
     /// Wall-clock seconds this request's job spent (0 for dedupes).
     pub secs: f64,
+    /// Why the request was not planned (`Failed` / `Rejected` only —
+    /// `plan` is then an empty placeholder and must not be executed).
+    pub error: Option<String>,
+}
+
+/// The empty placeholder plan carried by `Failed` / `Rejected`
+/// responses: structurally valid, zero ops, never executable work.
+fn empty_plan() -> ExecutionPlan {
+    ExecutionPlan {
+        planner: "none".to_string(),
+        order: Vec::new(),
+        schedule: Schedule::from_order(&[]),
+        offsets: Vec::new(),
+        theoretical_peak: 0,
+        actual_peak: 0,
+        persistent: 0,
+        planning_secs: 0.0,
+        stats: Vec::new(),
+    }
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+/// The result of one exact-planning attempt (ladder rungs 1–2).
+struct Attempt {
+    plan: ExecutionPlan,
+    outcome: Outcome,
+    lint_ok: bool,
+    /// Lint-clean AND addressing the request graph — eligible for the
+    /// cache provided the request deadline never expired.
+    cacheable: bool,
 }
 
 /// Lock-free service counters.
@@ -144,6 +227,9 @@ pub struct ServiceStats {
     pub warm_starts: AtomicU64,
     pub dedupe_hits: AtomicU64,
     pub degraded: AtomicU64,
+    pub retried: AtomicU64,
+    pub failed: AtomicU64,
+    pub rejected: AtomicU64,
     pub translate_failures: AtomicU64,
 }
 
@@ -156,6 +242,9 @@ impl ServiceStats {
             ("warm_starts", self.warm_starts.load(Ordering::Relaxed)),
             ("dedupe_hits", self.dedupe_hits.load(Ordering::Relaxed)),
             ("degraded", self.degraded.load(Ordering::Relaxed)),
+            ("retried", self.retried.load(Ordering::Relaxed)),
+            ("failed", self.failed.load(Ordering::Relaxed)),
+            ("rejected", self.rejected.load(Ordering::Relaxed)),
             (
                 "translate_failures",
                 self.translate_failures.load(Ordering::Relaxed),
@@ -271,11 +360,39 @@ impl PlanService {
             })
             .collect();
 
-        // Fan the distinct jobs out. When the batch fan-out itself runs
+        // Admission control: at most `max_inflight` distinct jobs are
+        // planned per batch (0 ⇒ unlimited); jobs past the cap answer
+        // immediately with a well-formed error response instead of
+        // queueing — first-come, first-admitted in request order. Cache
+        // hits are not exempt: the cap bounds work *admitted*, and
+        // whether a job would hit the cache is unknown until it runs.
+        let n_jobs = job_of_key.len();
+        let admit = if self.cfg.max_inflight == 0 {
+            n_jobs
+        } else {
+            self.cfg.max_inflight.min(n_jobs)
+        };
+        if admit < n_jobs {
+            let members: u64 = job_of_key[admit..]
+                .iter()
+                .map(|k| groups[k].len() as u64)
+                .sum();
+            self.stats.rejected.fetch_add(members, Ordering::Relaxed);
+            batch_span.arg("rejected_jobs", (n_jobs - admit) as f64);
+            crate::log_warn!(
+                "admission control: rejecting {} of {} distinct jobs ({} requests) — \
+                 batch exceeds max-inflight {}",
+                n_jobs - admit,
+                n_jobs,
+                members,
+                self.cfg.max_inflight,
+            );
+        }
+
+        // Fan the admitted jobs out. When the batch fan-out itself runs
         // wide, each job's planner runs its leaf fan-outs sequentially —
         // otherwise every job would spawn another full-width pool and a
         // batch of b jobs would thrash cores × b threads.
-        let n_jobs = job_of_key.len();
         let workers = if self.cfg.workers == 0 {
             Pool::default_workers()
         } else {
@@ -284,6 +401,20 @@ impl PlanService {
         let inner_parallel = workers.min(n_jobs) <= 1;
         let run_job = |j: usize| -> PlanResponse {
             let key = job_of_key[j];
+            if j >= admit {
+                return PlanResponse {
+                    key,
+                    outcome: Outcome::Rejected,
+                    plan: empty_plan(),
+                    lint_ok: false,
+                    secs: 0.0,
+                    error: Some(format!(
+                        "rejected by admission control: batch holds {n_jobs} distinct \
+                         planning jobs, max-inflight is {}",
+                        self.cfg.max_inflight,
+                    )),
+                };
+            }
             let rep = groups[&key][0];
             self.run_one(
                 &reqs[rep],
@@ -308,7 +439,10 @@ impl PlanService {
                 let r = by_key[&key];
                 let rep = *first_seen.entry(key).or_insert(i);
                 let mut resp = (*r).clone();
-                if i != rep {
+                // Error responses (failed / rejected) keep their outcome
+                // on every member — an error must never masquerade as a
+                // successful dedupe.
+                if i != rep && resp.error.is_none() {
                     resp.outcome = Outcome::Dedup;
                     resp.secs = 0.0;
                 }
@@ -363,11 +497,23 @@ impl PlanService {
                 plan,
                 lint_ok,
                 secs: sw.secs(),
+                error: None,
             };
         }
 
-        // Cache hit ⇒ verified replay.
-        if let Some(cp) = self.cache.get(fp.key) {
+        // Cache hit ⇒ verified replay. A panic out of the cache layer
+        // (e.g. an injected `cache_disk_read=panic`) degrades to a miss
+        // — the ladder below still answers the request.
+        let cached = catch_unwind(AssertUnwindSafe(|| self.cache.get(fp.key))).unwrap_or_else(
+            |payload| {
+                crate::log_warn!(
+                    "plan cache lookup panicked ({}); treating as a miss",
+                    panic_message(&*payload)
+                );
+                None
+            },
+        );
+        if let Some(cp) = cached {
             match warm::replay_plan(g, canon, &cp) {
                 Some(plan) => {
                     self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
@@ -379,6 +525,7 @@ impl PlanService {
                         plan,
                         lint_ok,
                         secs: sw.secs(),
+                        error: None,
                     };
                 }
                 None => {
@@ -391,66 +538,151 @@ impl PlanService {
             }
         }
 
-        // Cap the planner's own time limit by the remaining deadline and
-        // its thread fan-out by the batch fan-out (see `serve_batch`).
-        let mut roam = self.cfg.roam.clone();
-        roam.parallel &= inner_parallel;
-        if let Some(rem) = deadline.remaining() {
-            roam.time_limit_secs = roam.time_limit_secs.min(rem.as_secs_f64().max(1e-3));
-        }
-
-        // Plan: budgeted ⇒ hybrid driver; plain ⇒ (possibly warm-started)
-        // ROAM pipeline.
-        let (plan, outcome) = match req.budget {
-            Some(spec) => {
-                let hplan = roam_plan_hybrid(g, spec, &HybridCfg {
-                    technique: req.technique,
-                    roam,
-                    ..HybridCfg::default()
-                });
-                // A budgeted plan executes the driver's (possibly
-                // augmented) graph, so it is linted against THAT graph.
-                // The cache stores only plans addressing the *request*
-                // graph, so eviction-carrying plans are served fresh each
-                // time (batch dedupe still applies); eviction-free ones
-                // cache normally.
-                let lint_ok = lint_plan(&hplan.graph, &hplan.plan).is_empty();
-                let plan = hplan.plan;
-                // Deadline-truncation guard: see the plain path below.
-                if lint_ok && hplan.graph.n_ops() == g.n_ops() && !deadline.expired() {
-                    self.cache.put(warm::to_cached(g, canon, &plan, fp));
+        // One exact-planning attempt (ladder rungs 1–2), panic-isolated.
+        // The `serve_plan` failpoint and the planner both run inside the
+        // `catch_unwind` so injected panics and real planner panics walk
+        // the same ladder. The attempt's deadline caps the planner's own
+        // time limit and its thread fan-out follows the batch fan-out
+        // (see `serve_batch`).
+        let attempt = |attempt_deadline: Deadline| -> Result<Attempt, String> {
+            let caught = catch_unwind(AssertUnwindSafe(|| -> Result<Attempt, String> {
+                crate::faults::maybe_fail("serve_plan").map_err(|e| e.to_string())?;
+                let mut roam = self.cfg.roam.clone();
+                roam.parallel &= inner_parallel;
+                if let Some(rem) = attempt_deadline.remaining() {
+                    roam.time_limit_secs = roam.time_limit_secs.min(rem.as_secs_f64().max(1e-3));
                 }
-                self.stats.cold.fetch_add(1, Ordering::Relaxed);
-                sp.arg_str("outcome", Outcome::Cold.name());
-                return PlanResponse {
-                    key: fp.key,
-                    outcome: Outcome::Cold,
-                    lint_ok,
-                    plan,
-                    secs: sw.secs(),
-                };
+                Ok(match req.budget {
+                    Some(spec) => {
+                        let hplan = roam_plan_hybrid(g, spec, &HybridCfg {
+                            technique: req.technique,
+                            roam,
+                            ..HybridCfg::default()
+                        });
+                        // A budgeted plan executes the driver's (possibly
+                        // augmented) graph, so it is linted against THAT
+                        // graph. The cache stores only plans addressing
+                        // the *request* graph, so eviction-carrying plans
+                        // are served fresh each time (batch dedupe still
+                        // applies); eviction-free ones cache normally.
+                        let lint_ok = lint_plan(&hplan.graph, &hplan.plan).is_empty();
+                        let cacheable = lint_ok && hplan.graph.n_ops() == g.n_ops();
+                        Attempt {
+                            plan: hplan.plan,
+                            outcome: Outcome::Cold,
+                            lint_ok,
+                            cacheable,
+                        }
+                    }
+                    None => {
+                        let seed = if self.cfg.warm_start {
+                            self.cache
+                                .get_by_shape(fp.shape)
+                                .and_then(|cp| warm::seed_from(g, canon, &cp))
+                        } else {
+                            None
+                        };
+                        let warmed = seed.is_some();
+                        let plan = roam_plan_seeded(g, &roam, seed.as_ref());
+                        let lint_ok = lint_plan(g, &plan).is_empty();
+                        Attempt {
+                            plan,
+                            outcome: if warmed { Outcome::Warm } else { Outcome::Cold },
+                            lint_ok,
+                            cacheable: lint_ok,
+                        }
+                    }
+                })
+            }));
+            match caught {
+                Ok(r) => r,
+                Err(payload) => Err(format!("planning panicked: {}", panic_message(&*payload))),
             }
-            None => {
-                let seed = if self.cfg.warm_start {
-                    self.cache
-                        .get_by_shape(fp.shape)
-                        .and_then(|cp| warm::seed_from(g, canon, &cp))
-                } else {
-                    None
-                };
-                let warmed = seed.is_some();
-                let plan = roam_plan_seeded(g, &roam, seed.as_ref());
-                if warmed {
+        };
+
+        // Walk the ladder: exact → retried (halved deadline) →
+        // heuristic rescue → error response.
+        let (att, outcome) = match attempt(deadline) {
+            Ok(att) => {
+                if att.outcome == Outcome::Warm {
                     self.stats.warm_starts.fetch_add(1, Ordering::Relaxed);
-                    (plan, Outcome::Warm)
                 } else {
                     self.stats.cold.fetch_add(1, Ordering::Relaxed);
-                    (plan, Outcome::Cold)
+                }
+                let outcome = att.outcome;
+                (att, outcome)
+            }
+            Err(first) => {
+                crate::obs::metrics::counter_add("serve_retries_total", 1);
+                crate::log_warn!(
+                    "planning attempt failed ({first}); retrying once with halved deadline"
+                );
+                crate::obs::span::instant_num("serve_retry", &[("n_ops", g.n_ops() as f64)]);
+                let retry_deadline = match deadline.remaining() {
+                    Some(rem) => Deadline::after_secs((rem.as_secs_f64() / 2.0).max(1e-3)),
+                    None => Deadline::unlimited(),
+                };
+                match attempt(retry_deadline) {
+                    Ok(att) => {
+                        self.stats.retried.fetch_add(1, Ordering::Relaxed);
+                        (att, Outcome::Retried)
+                    }
+                    Err(second) => {
+                        // Rung 3: heuristic rescue. Also panic-isolated —
+                        // if even the heuristic dies, rung 4 answers.
+                        let rescue = catch_unwind(AssertUnwindSafe(|| {
+                            let plan = heuristic_plan(g);
+                            let lint_ok = lint_plan(g, &plan).is_empty();
+                            (plan, lint_ok)
+                        }));
+                        match rescue {
+                            Ok((plan, lint_ok)) => {
+                                self.stats.degraded.fetch_add(1, Ordering::Relaxed);
+                                crate::obs::metrics::counter_add(
+                                    "serve_degradation_events_total",
+                                    1,
+                                );
+                                crate::log_warn!(
+                                    "request degraded to heuristic plan: exact planning \
+                                     failed twice ({first}; retry: {second})"
+                                );
+                                crate::obs::span::instant_num(
+                                    "serve_degraded",
+                                    &[("n_ops", g.n_ops() as f64)],
+                                );
+                                (
+                                    Attempt {
+                                        plan,
+                                        outcome: Outcome::Degraded,
+                                        lint_ok,
+                                        cacheable: false,
+                                    },
+                                    Outcome::Degraded,
+                                )
+                            }
+                            Err(_) => {
+                                self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                                crate::obs::metrics::counter_add("serve_failures_total", 1);
+                                crate::log_error!(
+                                    "request failed every ladder rung ({first}; retry: \
+                                     {second}; heuristic rescue panicked)"
+                                );
+                                sp.arg_str("outcome", Outcome::Failed.name());
+                                return PlanResponse {
+                                    key: fp.key,
+                                    outcome: Outcome::Failed,
+                                    plan: empty_plan(),
+                                    lint_ok: false,
+                                    secs: sw.secs(),
+                                    error: Some(format!("{first}; retry: {second}")),
+                                };
+                            }
+                        }
+                    }
                 }
             }
         };
 
-        let lint_ok = lint_plan(g, &plan).is_empty();
         // Cache only plans whose search was provably NOT truncated by the
         // request deadline: every deadline-driven cut (pool `run_or`
         // fallbacks, BnB/DSA mid-search polls) requires the deadline to
@@ -459,17 +691,28 @@ impl PlanService {
         // deadline-free key would poison every later unconstrained
         // request for this graph (the fully-expired path above never
         // caches for the same reason). Node-budget truncation still
-        // caches — those budgets are part of the cache key.
-        if lint_ok && !deadline.expired() {
-            self.cache.put(warm::to_cached(g, canon, &plan, fp));
+        // caches — those budgets are part of the cache key. Heuristic
+        // rescues never cache (`cacheable: false` above).
+        if att.cacheable && !deadline.expired() {
+            // Same isolation as the lookup: a panicking insert (e.g. an
+            // injected `cache_disk_write=panic`) costs the cache entry,
+            // never the response.
+            if catch_unwind(AssertUnwindSafe(|| {
+                self.cache.put(warm::to_cached(g, canon, &att.plan, fp));
+            }))
+            .is_err()
+            {
+                crate::log_warn!("plan cache insert panicked; entry dropped");
+            }
         }
         sp.arg_str("outcome", outcome.name());
         PlanResponse {
             key: fp.key,
             outcome,
-            plan,
-            lint_ok,
+            plan: att.plan,
+            lint_ok: att.lint_ok,
             secs: sw.secs(),
+            error: None,
         }
     }
 }
@@ -536,8 +779,19 @@ pub fn error_json(msg: &str) -> Json {
     )])
 }
 
-/// Encode one response as a JSONL object.
+/// Encode one response as a JSONL object. Failed/rejected responses
+/// carry no plan: they encode as the short error shape
+/// `{"id", "key", "outcome", "error"}` so consumers can branch on the
+/// presence of `error` alone.
 pub fn response_to_json(id: usize, r: &PlanResponse) -> Json {
+    if let Some(err) = &r.error {
+        return Json::obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("key", Json::Str(format!("{:032x}", r.key))),
+            ("outcome", Json::Str(r.outcome.name().to_string())),
+            ("error", Json::Str(err.clone())),
+        ]);
+    }
     let stat = |k: &str| r.plan.stat(k).unwrap_or(0.0);
     Json::obj(vec![
         ("id", Json::Num(id as f64)),
@@ -615,5 +869,89 @@ mod tests {
         // And a real parse failure produces a renderable object too.
         let e = request_from_line("{oops").unwrap_err();
         assert!(Json::parse(&format!("{}", error_json(&e))).is_ok());
+    }
+
+    use crate::graph::random::{random_training_graph, RandomGraphCfg};
+    use crate::serve::CacheCfg;
+    use crate::util::Pcg64;
+
+    fn quick_service(max_inflight: usize) -> PlanService {
+        PlanService::new(PlanCache::new(CacheCfg::default()), ServeCfg {
+            roam: RoamCfg {
+                parallel: false,
+                order_max_nodes: 2_000,
+                dsa_max_nodes: 2_000,
+                ..RoamCfg::default()
+            },
+            workers: 1,
+            max_inflight,
+            ..Default::default()
+        })
+    }
+
+    fn graph_of(seed: u64, fwd_ops: usize) -> crate::graph::Graph {
+        let mut rng = Pcg64::new(seed);
+        random_training_graph(&mut rng, &RandomGraphCfg {
+            fwd_ops,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn admission_control_rejects_jobs_past_the_cap() {
+        let svc = quick_service(1);
+        // Three distinct graphs + one dedupe of the third: one distinct
+        // job admitted, two rejected — and the dedupe member of a
+        // rejected job stays `Rejected`, never masquerades as `Dedup`.
+        let g3 = graph_of(3, 6);
+        let reqs = vec![
+            PlanRequest::plain(graph_of(1, 4)),
+            PlanRequest::plain(graph_of(2, 5)),
+            PlanRequest::plain(g3.clone()),
+            PlanRequest::plain(g3),
+        ];
+        let rs = svc.serve_batch(&reqs);
+        assert_eq!(rs.len(), 4);
+        assert!(rs[0].error.is_none(), "first job must be admitted");
+        assert_ne!(rs[0].outcome, Outcome::Rejected);
+        for r in &rs[1..] {
+            assert_eq!(r.outcome, Outcome::Rejected);
+            let msg = r.error.as_deref().expect("rejected responses carry an error");
+            assert!(msg.contains("admission control"), "{msg}");
+            assert!(r.plan.order.is_empty() && !r.lint_ok);
+        }
+        assert_eq!(svc.stats().rejected.load(Ordering::Relaxed), 3);
+
+        // The wire encoding of a rejection is the short error shape.
+        let j = response_to_json(1, &rs[1]);
+        let back = Json::parse(&format!("{j}")).expect("rejection must encode as valid JSON");
+        assert_eq!(
+            back.get("outcome").and_then(|v| v.as_str()),
+            Some("rejected")
+        );
+        assert!(back.get("error").and_then(|v| v.as_str()).is_some());
+        assert!(back.get("planner").is_none(), "error shape carries no plan fields");
+    }
+
+    #[test]
+    fn injected_serve_plan_error_walks_the_ladder_to_degraded() {
+        // With `serve_plan=err` firing on every call, the exact attempt
+        // and its halved-deadline retry both fail; the heuristic rescue
+        // answers with a lint-clean `Degraded` plan and the process
+        // (and batch) survive.
+        crate::faults::arm_str("serve_plan=err").expect("valid spec");
+        let svc = quick_service(0);
+        let rs = svc.serve_batch(&[PlanRequest::plain(graph_of(7, 6))]);
+        crate::faults::disarm();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].outcome, Outcome::Degraded);
+        assert!(rs[0].error.is_none());
+        assert!(rs[0].lint_ok, "heuristic rescue plan must lint clean");
+        assert_eq!(svc.stats().degraded.load(Ordering::Relaxed), 1);
+        assert_eq!(svc.stats().failed.load(Ordering::Relaxed), 0);
+        // The rescue plan is NOT cached — a later fault-free request for
+        // the same graph plans cold (full quality), not via cache hit.
+        let rs2 = svc.serve_batch(&[PlanRequest::plain(graph_of(7, 6))]);
+        assert_eq!(rs2[0].outcome, Outcome::Cold);
     }
 }

@@ -4,13 +4,15 @@
 //! subcommands. The `roam` binary and every bench/example use it so `--help`
 //! output stays consistent across the repo.
 //!
-//! Three option names are reserved as *global* observability switches,
-//! honoured by the `roam` binary before command dispatch and therefore
-//! available to every subcommand: `--trace-out PATH` (enables the
+//! Four option names are reserved as *global* switches, honoured by the
+//! `roam` binary before command dispatch and therefore available to
+//! every subcommand: `--trace-out PATH` (enables the
 //! [`crate::obs::span`] recorder and writes a Chrome trace on exit),
-//! `--metrics` (enables the [`crate::obs::metrics`] registry), and
+//! `--metrics` (enables the [`crate::obs::metrics`] registry),
 //! `--log-level LEVEL` (overrides the `ROAM_LOG` environment variable
-//! for [`crate::obs::log`]). Commands should not reuse these names.
+//! for [`crate::obs::log`]), and `--faults SPEC` (arms deterministic
+//! fault injection, overriding the `ROAM_FAULTS` environment variable —
+//! see [`crate::faults`]). Commands should not reuse these names.
 
 use std::collections::BTreeMap;
 

@@ -19,14 +19,39 @@
 //! (identity leaf order, greedy layout) instead of the exact solver, so a
 //! blown time budget degrades to heuristic quality instead of stalling.
 //!
+//! **Panic isolation:** `run_or` additionally catches a panicking task
+//! (`catch_unwind` on both the inline and the threaded path), counts it
+//! ([`Pool::worker_panics_total`], the `pool_worker_panics_total` metric,
+//! a `pool_worker_panic` span instant) and degrades that one task to its
+//! fallback — a single poisoned leaf costs one heuristic chunk, not the
+//! process. `run` (no fallback to degrade to) re-raises the first task
+//! panic on the calling thread after all workers join, so callers with
+//! their own `catch_unwind` (the serve ladder) can absorb it.
+//!
 //! Results are returned indexed by task id, so parallel runs are
 //! position-deterministic regardless of which worker executed what.
 
 use crate::util::timer::Deadline;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Monotonic source of [`Pool`] identity tokens (see [`Pool::id`]).
 static NEXT_POOL_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Worker-task panics caught (and degraded) by [`Pool::run_or`] since
+/// process start. Test-observable independent of the metrics registry.
+static WORKER_PANICS: AtomicU64 = AtomicU64::new(0);
+
+/// Record one caught worker panic: process counter, metrics counter,
+/// span instant, warn log. Kept out of line so the happy path stays
+/// branch-only.
+#[cold]
+fn note_worker_panic(task: usize) {
+    WORKER_PANICS.fetch_add(1, Ordering::Relaxed);
+    crate::obs::metrics::counter_add("pool_worker_panics_total", 1);
+    crate::obs::span::instant_num("pool_worker_panic", &[("task", task as f64)]);
+    crate::log_warn!("pool task {task} panicked; degraded to its fallback");
+}
 
 /// A scoped work-stealing pool. Cheap to construct per fan-out; threads are
 /// spawned inside [`Pool::run`] and joined before it returns.
@@ -64,11 +89,22 @@ impl Pool {
         self.id
     }
 
-    /// Hardware parallelism (1 when unknown).
+    /// Worker count for "use the machine": the `ROAM_WORKERS` env
+    /// override when set and sane, else detected hardware parallelism,
+    /// else 4 — detection failing (containers with restricted cgroups)
+    /// used to collapse the pool to a single worker, silently serialising
+    /// every fan-out on exactly the deployments that need the override.
     pub fn default_workers() -> usize {
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
+        workers_from(
+            std::env::var("ROAM_WORKERS").ok().as_deref(),
+            std::thread::available_parallelism().ok().map(|n| n.get()),
+        )
+    }
+
+    /// Worker-task panics caught and degraded by [`Pool::run_or`] since
+    /// process start (all pools).
+    pub fn worker_panics_total() -> u64 {
+        WORKER_PANICS.load(Ordering::Relaxed)
     }
 
     /// Run tasks `0..n`, returning results indexed by task id.
@@ -81,9 +117,12 @@ impl Pool {
     }
 
     /// Like [`Pool::run`], but tasks picked up after the pool's deadline has
-    /// expired execute `fallback(i)` instead of `task(i)`. Tasks already
-    /// in flight are not interrupted (the exact solvers poll the same
-    /// deadline internally and cut themselves short).
+    /// expired execute `fallback(i)` instead of `task(i)`, and a task that
+    /// **panics** is caught, counted (see the module doc) and likewise
+    /// degraded to `fallback(i)`. Tasks already in flight at expiry are
+    /// not interrupted (the exact solvers poll the same deadline
+    /// internally and cut themselves short). The fallback itself is not
+    /// guarded: it is the cheap, panic-free path by contract.
     pub fn run_or<T, F, G>(&self, n: usize, task: F, fallback: G) -> Vec<T>
     where
         T: Send,
@@ -93,9 +132,14 @@ impl Pool {
         let deadline = self.deadline;
         self.run_core(n, move |i| {
             if deadline.expired() {
-                fallback(i)
-            } else {
-                task(i)
+                return fallback(i);
+            }
+            match catch_unwind(AssertUnwindSafe(|| task(i))) {
+                Ok(v) => v,
+                Err(_) => {
+                    note_worker_panic(i);
+                    fallback(i)
+                }
             }
         })
     }
@@ -118,6 +162,11 @@ impl Pool {
             .map(|k| AtomicU64::new(pack(k * n / workers, (k + 1) * n / workers)))
             .collect();
         let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        // A panicking worker must not abort the process from inside the
+        // scope join: collect the first payload, let every other worker
+        // finish, then re-raise it on the calling thread — where `run`'s
+        // caller (or the serve ladder's `catch_unwind`) decides.
+        let mut first_panic: Option<Box<dyn std::any::Any + Send>> = None;
         std::thread::scope(|s| {
             let task = &task;
             let queues = &queues[..];
@@ -125,15 +174,38 @@ impl Pool {
                 .map(|me| s.spawn(move || worker_loop(me, queues, task)))
                 .collect();
             for h in handles {
-                for (i, r) in h.join().expect("pool worker panicked") {
-                    out[i] = Some(r);
+                match h.join() {
+                    Ok(pairs) => {
+                        for (i, r) in pairs {
+                            out[i] = Some(r);
+                        }
+                    }
+                    Err(payload) => {
+                        if first_panic.is_none() {
+                            first_panic = Some(payload);
+                        }
+                    }
                 }
             }
         });
+        if let Some(payload) = first_panic {
+            resume_unwind(payload);
+        }
         out.into_iter()
             .map(|r| r.expect("pool task not executed"))
             .collect()
     }
+}
+
+/// Pure policy behind [`Pool::default_workers`] (unit-testable without
+/// mutating the process environment).
+fn workers_from(env: Option<&str>, detected: Option<usize>) -> usize {
+    if let Some(n) = env.and_then(|s| s.trim().parse::<usize>().ok()) {
+        if n >= 1 {
+            return n;
+        }
+    }
+    detected.unwrap_or(4)
 }
 
 fn worker_loop<T, F: Fn(usize) -> T>(
@@ -296,5 +368,65 @@ mod tests {
         for (lo, hi) in [(0usize, 0usize), (3, 17), (0, u32::MAX as usize)] {
             assert_eq!(unpack(pack(lo, hi)), (lo, hi));
         }
+    }
+
+    #[test]
+    fn panicking_task_degrades_to_fallback_in_run_or() {
+        // Covers the inline (workers == 1) and the threaded path; only
+        // the poisoned tasks degrade, the rest keep their exact result.
+        for workers in [1usize, 4] {
+            let before = Pool::worker_panics_total();
+            let out = Pool::new(workers).run_or(
+                12,
+                |i| {
+                    if i % 5 == 3 {
+                        panic!("boom {i}");
+                    }
+                    i
+                },
+                |i| 1000 + i,
+            );
+            for (i, &v) in out.iter().enumerate() {
+                if i % 5 == 3 {
+                    assert_eq!(v, 1000 + i, "task {i} must take the fallback");
+                } else {
+                    assert_eq!(v, i, "task {i} must keep the exact result");
+                }
+            }
+            assert!(
+                Pool::worker_panics_total() >= before + 2,
+                "caught panics must be counted (workers={workers})"
+            );
+        }
+    }
+
+    #[test]
+    fn run_reraises_task_panic_on_caller() {
+        // `run` has no fallback: the panic surfaces on the calling thread
+        // (catchable there) instead of aborting via a failed join.
+        for workers in [1usize, 4] {
+            let r = std::panic::catch_unwind(|| {
+                Pool::new(workers).run(8, |i| {
+                    if i == 5 {
+                        panic!("task five");
+                    }
+                    i
+                })
+            });
+            assert!(r.is_err(), "panic must propagate (workers={workers})");
+        }
+        // And the pool stays usable afterwards.
+        assert_eq!(Pool::new(4).run(3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn worker_count_policy() {
+        assert_eq!(workers_from(Some("6"), Some(32)), 6, "env wins");
+        assert_eq!(workers_from(Some(" 2 "), None), 2, "env tolerates spaces");
+        assert_eq!(workers_from(Some("0"), Some(8)), 8, "0 is not a pool");
+        assert_eq!(workers_from(Some("nope"), Some(8)), 8, "junk ignored");
+        assert_eq!(workers_from(None, Some(16)), 16, "detection passes through");
+        assert_eq!(workers_from(None, None), 4, "blind fallback is 4, not 1");
+        assert_eq!(workers_from(Some("bad"), None), 4);
     }
 }

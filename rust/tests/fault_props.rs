@@ -1,0 +1,329 @@
+//! Chaos + property tests for the fault-injection subsystem (`faults/`)
+//! and the resilience paths it exercises: deterministic fault decisions
+//! under a pinned seed, panic-isolated pools, the serve degradation
+//! ladder, crash-safe cache entries under truncation at every byte
+//! offset, and the two invariants the subsystem must never break —
+//! faults-off plan output is byte-identical (and near-free), and under
+//! faults at every registered failpoint each response is either a
+//! lint-clean plan or a well-formed error object while the process
+//! survives.
+//!
+//! The fault registry is process-global, so every test here serializes
+//! on one mutex and disarms (via an RAII guard) before returning.
+
+use roam::faults::{self, FAILPOINTS};
+use roam::graph::random::{random_training_graph, RandomGraphCfg};
+use roam::hybrid::BudgetSpec;
+use roam::planner::{lint_plan, roam_plan, ExecutionPlan, RoamCfg};
+use roam::serve::{
+    response_to_json, CacheCfg, Outcome, PlanCache, PlanRequest, PlanService, ServeCfg,
+};
+use roam::util::json::Json;
+use roam::util::Pcg64;
+use std::sync::Mutex;
+
+/// Serializes access to the process-global fault registry across the
+/// (normally parallel) test harness threads.
+static FAULTS_LOCK: Mutex<()> = Mutex::new(());
+
+fn guard() -> std::sync::MutexGuard<'static, ()> {
+    FAULTS_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Arms a spec for the guard's lifetime; disarms on drop even when the
+/// test body panics, so no armed registry leaks into the next test.
+struct Armed;
+
+impl Armed {
+    fn new(spec: &str) -> Armed {
+        faults::arm_str(spec).expect("valid fault spec");
+        Armed
+    }
+}
+
+impl Drop for Armed {
+    fn drop(&mut self) {
+        faults::disarm();
+    }
+}
+
+/// Deterministic, CI-sized planner configuration.
+fn quick_roam() -> RoamCfg {
+    RoamCfg {
+        parallel: false,
+        order_max_nodes: 2_000,
+        dsa_max_nodes: 2_000,
+        ..RoamCfg::default()
+    }
+}
+
+fn graph_of(seed: u64, fwd_ops: usize) -> roam::Graph {
+    let mut rng = Pcg64::new(seed);
+    random_training_graph(&mut rng, &RandomGraphCfg {
+        fwd_ops,
+        ..Default::default()
+    })
+}
+
+/// Plan serialisation with the volatile run markers normalised away
+/// (same discipline as `tests/obs_props.rs`): wall-clock
+/// `planning_secs` and the `*_pool_id` stats change between runs by
+/// construction; everything else must not.
+fn normalized_json(mut p: ExecutionPlan) -> String {
+    p.planning_secs = 0.0;
+    p.stats.retain(|(k, _)| !k.ends_with("_pool_id"));
+    p.to_json().to_string()
+}
+
+fn tdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("roam_faults_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Property: fault decisions are a pure function of (spec, seed, call
+/// sequence) — two arm cycles of the same spec replay the identical
+/// fire/pass sequence, and a probabilistic rule actually mixes both.
+#[test]
+fn fault_decisions_replay_deterministically() {
+    let _g = guard();
+    let run = || -> Vec<bool> {
+        let _armed = Armed::new("leaf_solve=err;prob:0.5@42;layout_window=err;prob:0.25@7");
+        (0..200)
+            .map(|i: u32| {
+                let name = if i % 2 == 0 { "leaf_solve" } else { "layout_window" };
+                faults::maybe_fail(name).is_err()
+            })
+            .collect()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same spec + seed must replay the same decisions");
+    assert!(
+        a.iter().any(|&x| x) && a.iter().any(|&x| !x),
+        "prob:0.5 over 100 trials must both fire and pass"
+    );
+    // Disarmed, every registered failpoint passes.
+    for &name in FAILPOINTS {
+        assert!(faults::maybe_fail(name).is_ok());
+    }
+}
+
+/// Injected leaf panics are absorbed by the pool's isolation: with every
+/// `leaf_solve` call panicking, the planner still returns a lint-clean
+/// plan (each leaf keeps its ASAP chunk order) and the worker-panic
+/// counter ticks.
+#[test]
+fn injected_leaf_panics_degrade_to_fallback_plan() {
+    let _g = guard();
+    let before = roam::util::pool::worker_panics_total();
+    let g = graph_of(31, 8);
+    let _armed = Armed::new("leaf_solve=panic");
+    let p = roam_plan(&g, &quick_roam());
+    assert!(
+        lint_plan(&g, &p).is_empty(),
+        "fallback plan must lint clean"
+    );
+    assert!(
+        roam::util::pool::worker_panics_total() > before,
+        "absorbed panics must be counted"
+    );
+}
+
+/// Byte-identity: with faults disarmed, plan output is identical to a
+/// run that never armed the registry — an arm/disarm cycle leaves no
+/// residue in the planner's behaviour.
+#[test]
+fn faults_off_plan_output_is_byte_identical() {
+    let _g = guard();
+    faults::disarm();
+    let g = graph_of(77, 7);
+    let never_armed = roam_plan(&g, &quick_roam());
+    {
+        let _armed = Armed::new("leaf_solve=panic;prob:0.3@7");
+        // Arm + plan once so the cycle actually exercises armed state.
+        let _ = roam_plan(&g, &quick_roam());
+    }
+    let after_cycle = roam_plan(&g, &quick_roam());
+    assert_eq!(
+        normalized_json(never_armed),
+        normalized_json(after_cycle),
+        "disarmed planning must be byte-identical to never-armed planning"
+    );
+}
+
+/// Overhead gate (obs-style): disarmed failpoints cost one relaxed
+/// atomic load, so planning after an arm/disarm cycle must run at the
+/// never-armed speed (≤1.05× + 50ms slack against timer noise).
+#[test]
+fn disarmed_failpoints_are_near_free() {
+    let _g = guard();
+    faults::disarm();
+    let g = graph_of(99, 10);
+    let cfg = quick_roam();
+    let time_once = || {
+        let t = std::time::Instant::now();
+        let _ = roam_plan(&g, &cfg);
+        t.elapsed().as_secs_f64()
+    };
+    let _ = time_once(); // warm caches/allocator
+    let base = (0..3).map(|_| time_once()).fold(f64::MAX, f64::min);
+    {
+        let _armed = Armed::new("leaf_solve=err;prob:0.5@1");
+        let _ = roam_plan(&g, &cfg);
+    }
+    let after = (0..3).map(|_| time_once()).fold(f64::MAX, f64::min);
+    assert!(
+        after <= base * 1.05 + 0.05,
+        "disarmed failpoints too expensive: {after:.4}s vs baseline {base:.4}s"
+    );
+}
+
+/// Crash-safety property: truncating a committed cache entry at EVERY
+/// byte offset never panics, never serves a wrong plan (only the intact
+/// full file loads), and each torn read quarantines the file.
+#[test]
+fn cache_entry_truncated_at_every_offset_is_never_served() {
+    let _g = guard();
+
+    // Produce one committed entry by serving a graph through a
+    // dir-backed cache.
+    let seed_dir = tdir("truncate_seed");
+    let svc = PlanService::new(
+        PlanCache::new(CacheCfg {
+            capacity: 8,
+            shards: 1,
+            dir: Some(seed_dir.clone()),
+        }),
+        ServeCfg {
+            roam: quick_roam(),
+            workers: 1,
+            ..Default::default()
+        },
+    );
+    let rs = svc.serve_batch(&[PlanRequest::plain(graph_of(5, 5))]);
+    assert!(rs[0].lint_ok && rs[0].error.is_none());
+    let key = rs[0].key;
+    let file = format!("{key:032x}.json");
+    let full = std::fs::read(seed_dir.join(&file)).expect("committed cache entry");
+    assert!(full.len() > 64, "entry suspiciously small: {}", full.len());
+
+    let probe_dir = tdir("truncate_probe");
+    std::fs::create_dir_all(&probe_dir).unwrap();
+    let path = probe_dir.join(&file);
+    for len in 0..=full.len() {
+        std::fs::write(&path, &full[..len]).unwrap();
+        let cache = PlanCache::new(CacheCfg {
+            capacity: 4,
+            shards: 1,
+            dir: Some(probe_dir.clone()),
+        });
+        let got = cache.get(key);
+        let quarantined = cache
+            .stats()
+            .snapshot()
+            .into_iter()
+            .find(|(k, _)| *k == "quarantined")
+            .map(|(_, v)| v)
+            .unwrap_or(0);
+        if len == full.len() {
+            assert!(got.is_some(), "the intact entry must load");
+            assert_eq!(quarantined, 0);
+        } else {
+            assert!(
+                got.is_none(),
+                "prefix {len}/{} must never be served",
+                full.len()
+            );
+            assert_eq!(quarantined, 1, "torn read at {len} must quarantine");
+            assert!(!path.exists(), "torn file at {len} must leave the dir");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&seed_dir);
+    let _ = std::fs::remove_dir_all(&probe_dir);
+}
+
+/// The chaos invariant: with faults armed at EVERY registered failpoint
+/// (both `err` and `panic` actions, 50% probability), random request
+/// batches through the full serve stack always yield, per response,
+/// either a lint-clean plan or a well-formed error object — and the
+/// process survives to assert it.
+#[test]
+fn chaos_every_failpoint_keeps_serve_answering() {
+    let _g = guard();
+    // Silence the default panic hook for the injected-panic rounds; the
+    // payloads still surface through catch_unwind and the ladder.
+    let prev_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let mut rng = Pcg64::new(0xC0FFEE);
+    let before_injected = faults::injected_total();
+
+    for (fi, &name) in FAILPOINTS.iter().enumerate() {
+        for action in ["err", "panic"] {
+            let spec = format!("{name}={action};prob:0.5@{}", 1000 + fi as u64);
+            let _armed = Armed::new(&spec);
+            let dir = tdir(&format!("chaos_{name}_{action}"));
+
+            // A batch with plain requests, one duplicate (dedupe path)
+            // and one budgeted request (hybrid_round coverage).
+            let mut reqs: Vec<PlanRequest> = (0..3)
+                .map(|_| {
+                    let fwd = rng.usize_in(3, 7);
+                    PlanRequest::plain(graph_of(rng.next_u64(), fwd))
+                })
+                .collect();
+            let mut budgeted = PlanRequest::plain(graph_of(rng.next_u64(), 5));
+            budgeted.budget = Some(BudgetSpec::Fraction(0.7));
+            reqs.push(budgeted);
+            reqs.push(reqs[0].clone());
+
+            // Two rounds over the same cache dir: round 1 populates it
+            // (exercising `cache_disk_write`), round 2 starts cold in
+            // memory and reads it back (exercising `cache_disk_read`).
+            for round in 0..2 {
+                let svc = PlanService::new(
+                    PlanCache::new(CacheCfg {
+                        capacity: 32,
+                        shards: 2,
+                        dir: Some(dir.clone()),
+                    }),
+                    ServeCfg {
+                        roam: quick_roam(),
+                        workers: 2,
+                        ..Default::default()
+                    },
+                );
+                let rs = svc.serve_batch(&reqs);
+                assert_eq!(rs.len(), reqs.len());
+                for (i, r) in rs.iter().enumerate() {
+                    if r.error.is_some() {
+                        assert!(
+                            matches!(r.outcome, Outcome::Failed | Outcome::Rejected),
+                            "{spec} round {round}: error response with outcome {:?}",
+                            r.outcome
+                        );
+                        let wire = response_to_json(i, r).to_string();
+                        let back = Json::parse(&wire).expect("error response must be JSON");
+                        assert!(
+                            back.get("error").and_then(|v| v.as_str()).is_some(),
+                            "{spec} round {round}: malformed error object {wire}"
+                        );
+                    } else {
+                        assert!(
+                            r.lint_ok,
+                            "{spec} round {round}: response {i} ({}) is neither \
+                             lint-clean nor an error",
+                            r.outcome.name()
+                        );
+                    }
+                }
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+    std::panic::set_hook(prev_hook);
+    assert!(
+        faults::injected_total() > before_injected,
+        "chaos run never injected a fault — the harness is a no-op"
+    );
+}
