@@ -39,7 +39,7 @@ EXPECTED = {
     },
     "BENCH_swap.json": {
         "bench": "swap_tradeoff",
-        "schema": "swap-tradeoff-v3",
+        "schema": "swap-tradeoff-v4",
         "run_keys": ["models", "coarse", "order_lambda", "points"],
         "points": (
             "points",
@@ -58,6 +58,9 @@ EXPECTED = {
                 "swap_exposed_secs",
                 "exposed_secs_before_slide",
                 "exposed_secs_after_slide",
+                "compressed",
+                "compress_saved_bytes",
+                "compress_secs",
             ],
         ),
     },

@@ -1,9 +1,12 @@
-//! Memory-vs-overhead tradeoff curves for the three eviction techniques
-//! (pure recompute, pure swap, hybrid): sweep a hard budget over the
-//! workloads and report, per technique, the achieved total memory plus
-//! both overhead kinds — the acceptance view that the hybrid driver
-//! matches or beats pure recompute's peak at the same budget while
-//! paying no more modeled overhead seconds.
+//! Memory-vs-overhead tradeoff curves for the four eviction techniques
+//! (pure recompute, pure swap, pure compress, hybrid): sweep a hard
+//! budget over the workloads and report, per technique, the achieved
+//! total memory plus every overhead kind — the acceptance view that the
+//! hybrid driver matches or beats each pure technique's peak at the
+//! same budget while paying no more modeled overhead seconds. The
+//! compress and hybrid sweeps run with the default lossless codec table
+//! ([`roam::compress::CompressModel::lossless`]) so the compress curves
+//! exist at all (the codec table is empty, i.e. disabled, by default).
 //!
 //! `cargo bench --bench swap_tradeoff [-- --models vit,bert]
 //!  [--fractions 1.0,0.8,0.6,0.4] [--batch 1] [--coarse]
@@ -20,6 +23,7 @@
 //! (CI's bench-smoke job uploads both).
 
 use roam::benchkit::{mib, pct, Report};
+use roam::compress::CompressModel;
 use roam::hybrid::{hybrid_tradeoff_sweep, HybridCfg, Technique};
 use roam::models::{self, BuildCfg, ModelKind, Optim};
 use roam::planner::RoamCfg;
@@ -42,7 +46,7 @@ fn main() {
 
     let mut rep = Report::new(
         "swap_tradeoff",
-        "Recompute vs swap vs hybrid: memory vs modeled overhead",
+        "Recompute vs swap vs compress vs hybrid: memory vs modeled overhead",
         &[
             "model",
             "technique",
@@ -57,6 +61,9 @@ fn main() {
             "moved_MiB",
             "exposed_ms",
             "slide_cut_ms",
+            "compressed",
+            "cp_saved_MiB",
+            "cp_ms",
         ],
     );
     let mut traj_rows: Vec<Json> = Vec::new();
@@ -72,10 +79,19 @@ fn main() {
                 ..Default::default()
             },
         );
-        for technique in [Technique::Recompute, Technique::Swap, Technique::Hybrid] {
+        for technique in [
+            Technique::Recompute,
+            Technique::Swap,
+            Technique::Compress,
+            Technique::Hybrid,
+        ] {
             let cfg = HybridCfg {
                 technique,
                 cost,
+                // Pure recompute/swap never consult the codec table;
+                // compress and hybrid need an enabled one to have a
+                // compress curve at all.
+                compress: CompressModel::lossless(),
                 order_lambda: swap_lambda,
                 roam: RoamCfg {
                     time_limit_secs: args.f64("time-limit", 600.0),
@@ -102,6 +118,9 @@ fn main() {
                         "{:.3}",
                         (p.exposed_secs_before_slide - p.exposed_secs_after_slide) * 1e3
                     ),
+                    p.compressed.to_string(),
+                    mib(p.compress_saved_bytes),
+                    format!("{:.3}", p.compress_secs * 1e3),
                 ]);
                 traj_rows.push(Json::obj(vec![
                     ("model", Json::Str(name.to_string())),
@@ -124,6 +143,12 @@ fn main() {
                         "exposed_secs_after_slide",
                         Json::Num(p.exposed_secs_after_slide),
                     ),
+                    ("compressed", Json::Num(p.compressed as f64)),
+                    (
+                        "compress_saved_bytes",
+                        Json::Num(p.compress_saved_bytes as f64),
+                    ),
+                    ("compress_secs", Json::Num(p.compress_secs)),
                 ]));
             }
         }
@@ -145,7 +170,7 @@ fn main() {
     roam::benchkit::append_trajectory(
         &path,
         "swap_tradeoff",
-        "swap-tradeoff-v3",
+        "swap-tradeoff-v4",
         "cargo bench --bench swap_tradeoff",
         run,
     );

@@ -1,0 +1,283 @@
+//! Codec cost model for in-place tensor compression.
+//!
+//! Unlike swap, compression never leaves the device: the overhead is
+//! pure compute — the seconds a codec kernel spends shrinking the tensor
+//! after its last forward use plus the seconds spent inflating it before
+//! its first backward consumer. There is no link to contend for and no
+//! hiding window to exploit (the codec occupies the same compute the
+//! schedule would otherwise run), so the technique's overhead currency
+//! is simply `compress_secs + decompress_secs` per tensor.
+//!
+//! Codecs are *pluggable*: a [`CompressModel`] holds a per-[`TensorClass`]
+//! table of `(ratio, throughputs)` entries, so a workload-specific codec
+//! (spike compression, fp8 casting with a known ratio, …) is just a
+//! parameter point. The **default table is empty** — compression is
+//! opt-in, and with no codecs every pricing query returns "impossible"
+//! (infinite seconds, zero savings), which keeps the hybrid driver's
+//! behaviour byte-identical to the two-technique one.
+
+use crate::graph::TensorClass;
+
+/// One codec's parameters for a tensor class.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Codec {
+    /// Compressed size as a fraction of the original, in `(0, 1)`.
+    pub ratio: f64,
+    /// Compression throughput in bytes/second (device-side kernel,
+    /// measured in *input* bytes).
+    pub compress_bytes_per_sec: f64,
+    /// Decompression throughput in bytes/second (in *output* bytes).
+    pub decompress_bytes_per_sec: f64,
+}
+
+impl Codec {
+    /// The default lossless byte-level codec: a conservative 2× shrink at
+    /// memcpy-class throughputs (an LZ4/nvCOMP-style kernel; decompression
+    /// is typically ~2× faster than compression).
+    pub fn lossless() -> Codec {
+        Codec {
+            ratio: 0.5,
+            compress_bytes_per_sec: 100e9,
+            decompress_bytes_per_sec: 200e9,
+        }
+    }
+}
+
+/// Pluggable per-class codec table. `Default` is the *empty* table
+/// (compression disabled); [`CompressModel::lossless`] enables the
+/// default byte-level codec for activations — the only class the
+/// eviction machinery ever offers ([`crate::evict::is_evictable`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CompressModel {
+    /// `(class, codec)` entries; a class absent from the table cannot be
+    /// compressed. First entry for a class wins.
+    pub table: Vec<(TensorClass, Codec)>,
+}
+
+impl CompressModel {
+    /// The default enabled model: the lossless byte-level codec on
+    /// activations.
+    pub fn lossless() -> CompressModel {
+        CompressModel {
+            table: vec![(TensorClass::Activation, Codec::lossless())],
+        }
+    }
+
+    /// Is any codec installed? With `false`, every query below reports
+    /// "impossible" and the hybrid driver never assigns
+    /// [`crate::hybrid::Technique::Compress`].
+    pub fn enabled(&self) -> bool {
+        !self.table.is_empty()
+    }
+
+    /// The codec installed for `class`, if any.
+    pub fn codec_for(&self, class: TensorClass) -> Option<&Codec> {
+        self.table.iter().find(|(c, _)| *c == class).map(|(_, k)| k)
+    }
+
+    /// Compressed size of a `size`-byte tensor of `class`: `⌈ratio·size⌉`,
+    /// floored at 1 byte so the representation partakes in liveness.
+    /// `None` when no codec covers the class or the codec would not
+    /// actually shrink the tensor.
+    pub fn compressed_bytes(&self, class: TensorClass, size: u64) -> Option<u64> {
+        let k = self.codec_for(class)?;
+        let packed = ((k.ratio * size as f64).ceil() as u64).max(1);
+        (packed < size).then_some(packed)
+    }
+
+    /// Bytes freed across the fwd/bwd boundary by compressing the tensor
+    /// (0 when it cannot be compressed).
+    pub fn saved_bytes(&self, class: TensorClass, size: u64) -> u64 {
+        self.compressed_bytes(class, size)
+            .map(|p| size - p)
+            .unwrap_or(0)
+    }
+
+    /// Modeled seconds to compress a `size`-byte tensor of `class`
+    /// (infinite when no codec applies — the pricing convention that
+    /// makes an absent codec unpickable, never an error).
+    pub fn compress_secs(&self, class: TensorClass, size: u64) -> f64 {
+        match self.codec_for(class) {
+            Some(k) => size as f64 / k.compress_bytes_per_sec,
+            None => f64::INFINITY,
+        }
+    }
+
+    /// Modeled seconds to decompress back to `size` bytes.
+    pub fn decompress_secs(&self, class: TensorClass, size: u64) -> f64 {
+        match self.codec_for(class) {
+            Some(k) => size as f64 / k.decompress_bytes_per_sec,
+            None => f64::INFINITY,
+        }
+    }
+
+    /// Full round-trip codec seconds (compress + decompress) — the
+    /// technique's overhead for one tensor.
+    pub fn codec_secs(&self, class: TensorClass, size: u64) -> f64 {
+        self.compress_secs(class, size) + self.decompress_secs(class, size)
+    }
+
+    /// Parse the CLI codec knobs. Shared by `roam compress`,
+    /// `compare --technique compress` and the tradeoff bench so the
+    /// flags can never drift in meaning:
+    ///
+    /// * `--codec-table SPEC` — explicit table, comma-separated
+    ///   `class:ratio:compress_gbps:decompress_gbps` entries (class ∈
+    ///   activation|gradient|tempbuffer|weight|optstate|input);
+    /// * `--codec-ratio R`, `--compress-gbps C`, `--decompress-gbps D` —
+    ///   shorthand installing an activation-only codec with the given
+    ///   parameters (unspecified ones default to [`Codec::lossless`]).
+    ///
+    /// With none of the flags present the table is **empty** (disabled).
+    pub fn from_args(args: &crate::util::cli::Args) -> Result<CompressModel, String> {
+        if let Some(spec) = args.opt("codec-table") {
+            return parse_codec_table(spec);
+        }
+        let ratio = args.opt("codec-ratio");
+        let cg = args.opt("compress-gbps");
+        let dg = args.opt("decompress-gbps");
+        if ratio.is_none() && cg.is_none() && dg.is_none() {
+            return Ok(CompressModel::default());
+        }
+        let d = Codec::lossless();
+        let codec = Codec {
+            ratio: args.f64("codec-ratio", d.ratio),
+            compress_bytes_per_sec: args.f64("compress-gbps", d.compress_bytes_per_sec / 1e9)
+                * 1e9,
+            decompress_bytes_per_sec: args
+                .f64("decompress-gbps", d.decompress_bytes_per_sec / 1e9)
+                * 1e9,
+        };
+        if !(codec.ratio > 0.0 && codec.ratio < 1.0) {
+            return Err(format!(
+                "--codec-ratio {} is outside (0, 1)",
+                codec.ratio
+            ));
+        }
+        Ok(CompressModel {
+            table: vec![(TensorClass::Activation, codec)],
+        })
+    }
+}
+
+/// Parse an explicit `--codec-table` spec:
+/// `class:ratio:compress_gbps:decompress_gbps[,...]`.
+pub fn parse_codec_table(spec: &str) -> Result<CompressModel, String> {
+    let mut table = Vec::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let parts: Vec<&str> = entry.split(':').collect();
+        if parts.len() != 4 {
+            return Err(format!(
+                "codec-table entry '{entry}' wants class:ratio:compress_gbps:decompress_gbps"
+            ));
+        }
+        let class = class_from_name(parts[0])
+            .ok_or_else(|| format!("unknown tensor class '{}' in '{entry}'", parts[0]))?;
+        let num = |s: &str, what: &str| -> Result<f64, String> {
+            s.trim()
+                .parse::<f64>()
+                .map_err(|_| format!("bad {what} '{s}' in '{entry}'"))
+        };
+        let ratio = num(parts[1], "ratio")?;
+        if !(ratio > 0.0 && ratio < 1.0) {
+            return Err(format!("ratio {ratio} in '{entry}' is outside (0, 1)"));
+        }
+        let cg = num(parts[2], "compress_gbps")?;
+        let dg = num(parts[3], "decompress_gbps")?;
+        if cg <= 0.0 || dg <= 0.0 {
+            return Err(format!("throughputs in '{entry}' must be positive"));
+        }
+        if table.iter().any(|(c, _)| *c == class) {
+            return Err(format!("duplicate codec-table entry for '{}'", parts[0]));
+        }
+        table.push((
+            class,
+            Codec {
+                ratio,
+                compress_bytes_per_sec: cg * 1e9,
+                decompress_bytes_per_sec: dg * 1e9,
+            },
+        ));
+    }
+    if table.is_empty() {
+        return Err("empty codec-table spec".to_string());
+    }
+    Ok(CompressModel { table })
+}
+
+fn class_from_name(s: &str) -> Option<TensorClass> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "activation" | "act" => Some(TensorClass::Activation),
+        "gradient" | "grad" => Some(TensorClass::Gradient),
+        "tempbuffer" | "temp" => Some(TensorClass::TempBuffer),
+        "weight" => Some(TensorClass::Weight),
+        "optstate" => Some(TensorClass::OptState),
+        "input" => Some(TensorClass::Input),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::Args;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn default_table_is_disabled_and_unpickable() {
+        let m = CompressModel::default();
+        assert!(!m.enabled());
+        assert_eq!(m.compressed_bytes(TensorClass::Activation, 1000), None);
+        assert_eq!(m.saved_bytes(TensorClass::Activation, 1000), 0);
+        assert!(m.codec_secs(TensorClass::Activation, 1000).is_infinite());
+    }
+
+    #[test]
+    fn lossless_arithmetic() {
+        let m = CompressModel::lossless();
+        assert!(m.enabled());
+        assert_eq!(m.compressed_bytes(TensorClass::Activation, 1000), Some(500));
+        assert_eq!(m.saved_bytes(TensorClass::Activation, 1000), 500);
+        // 1000 B at 100 GB/s compress + 200 GB/s decompress.
+        let secs = m.codec_secs(TensorClass::Activation, 1000);
+        assert!((secs - (1000.0 / 100e9 + 1000.0 / 200e9)).abs() < 1e-18);
+        // Classes without a codec stay impossible.
+        assert_eq!(m.compressed_bytes(TensorClass::Gradient, 1000), None);
+        // Tiny tensors floor at 1 byte and never "save" negative bytes.
+        assert_eq!(m.compressed_bytes(TensorClass::Activation, 2), Some(1));
+        assert_eq!(m.compressed_bytes(TensorClass::Activation, 1), None);
+    }
+
+    #[test]
+    fn from_args_shapes() {
+        // No flags: disabled.
+        assert!(!CompressModel::from_args(&parse("")).unwrap().enabled());
+        // Shorthand ratio flag: activation-only codec at that ratio.
+        let m = CompressModel::from_args(&parse("--codec-ratio 0.25")).unwrap();
+        assert_eq!(m.compressed_bytes(TensorClass::Activation, 1000), Some(250));
+        // Explicit table with two classes.
+        let m = CompressModel::from_args(&parse(
+            "--codec-table activation:0.5:100:200,gradient:0.25:50:100",
+        ))
+        .unwrap();
+        assert_eq!(m.table.len(), 2);
+        assert_eq!(m.compressed_bytes(TensorClass::Gradient, 1000), Some(250));
+        // Bad specs are operator-readable errors, not panics.
+        for bad in [
+            "--codec-ratio 1.5",
+            "--codec-table activation:0.5:100",
+            "--codec-table widget:0.5:100:200",
+            "--codec-table activation:2.0:100:200",
+            "--codec-table activation:0.5:0:200",
+            "--codec-table activation:0.5:100:200,activation:0.25:50:100",
+        ] {
+            assert!(
+                CompressModel::from_args(&parse(bad)).is_err(),
+                "accepted {bad:?}"
+            );
+        }
+    }
+}

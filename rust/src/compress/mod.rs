@@ -1,0 +1,50 @@
+//! In-place tensor compression on top of ROAM plans — the third
+//! high-level technique riding the order+layout substrate, sibling of
+//! [`crate::recompute`] and [`crate::swap`].
+//!
+//! The paper's abstract names offloading, recomputation *and
+//! compression* as the techniques whose overheads a memory-efficient
+//! execution plan should reduce. Compression sits between the other two
+//! poles: it neither re-executes ops (recompute) nor pays PCIe transfer
+//! (swap) — it shrinks a resident tensor to `ratio·size` bytes with a
+//! device-side codec kernel, keeping the packed representation on
+//! device across the fwd/bwd boundary and inflating it back before the
+//! backward consumers. The saving per tensor is smaller than swap's
+//! (`(1 − ratio)·size` vs all-but-a-handle), but the overhead is pure
+//! compute seconds with no link to contend for.
+//!
+//! Pipeline, mirroring [`crate::swap`]:
+//!
+//! 1. **Cost** ([`cost`]) — a pluggable per-class codec table
+//!    ([`CompressModel`]): compression ratio plus compress/decompress
+//!    throughputs. The default table is *empty* (disabled); the default
+//!    *enabled* codec is a conservative lossless byte-level one, and
+//!    workload-specific codecs are just parameter points.
+//! 2. **Select** ([`select`]) — rank candidates by bytes freed per
+//!    codec second, peak-relieving tensors first.
+//! 3. **Rewrite** ([`rewrite`]) — insert `Compress`/`Decompress` pairs
+//!    wired through the packed tensor, retarget backward consumers to
+//!    the inflated clone (shared eviction machinery: [`crate::evict`]),
+//!    and pin each inflate into the backward region with a
+//!    loss-anchored control edge.
+//! 4. **Re-plan** — [`crate::hybrid::roam_plan_hybrid`] with
+//!    [`crate::hybrid::Technique::Compress`] escalates evictions and
+//!    re-runs the full ROAM pipeline on each augmented graph; the
+//!    hybrid technique mixes compression with recomputation and swap
+//!    per tensor, cheapest-overhead-first.
+//!
+//! Fidelity notes: codecs are modeled by `(ratio, throughput)` only —
+//! this substrate accounts bytes, seconds and precedence, not codec
+//! internals — and the default table models *lossless* codecs, so
+//! `Decompress` re-materialises values exactly. Lossy codecs with error
+//! budgets are a recorded follow-on. The CLI exposes the pure-compress
+//! driver as `roam compress` and the technique comparison as
+//! `roam compare --budget F --technique compress`.
+
+pub mod cost;
+pub mod rewrite;
+pub mod select;
+
+pub use cost::{parse_codec_table, Codec, CompressModel};
+pub use rewrite::{rewrite, CompressPair, CompressRewriteResult};
+pub use select::{compress_candidates, unit_compress_cost, CompressCandidate};

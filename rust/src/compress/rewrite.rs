@@ -1,0 +1,280 @@
+//! Graph rewriter: insert `Compress`/`Decompress` op pairs so chosen
+//! activations are shrunk in place after their last forward use and
+//! inflated back just before their backward consumers.
+//!
+//! Per evicted tensor `t` the rewrite adds
+//!
+//! ```text
+//! t ──▶ Compress ──packed(ratio·size)──▶ Decompress ──clone(size of t)──▶ bwd consumers
+//! ```
+//!
+//! and retargets `t`'s backward consumers to the clone (the shared
+//! machinery in [`crate::evict`], identical to the recompute and swap
+//! rewriters). The memory semantics follow from liveness alone:
+//!
+//! * the **original** loses its backward consumers, so it dies at
+//!   max(last forward use, `Compress`) — a peak-minimising scheduler
+//!   places `Compress` right after the last forward use, since executing
+//!   it frees `size(t) − packed` bytes;
+//! * the **packed** representation spans the fwd/bwd boundary in the
+//!   original's stead — unlike swap's 1-byte host handle it keeps
+//!   `ratio·size` bytes resident on device, which is exactly what makes
+//!   compression cheaper in seconds but weaker in bytes than offloading.
+//!   It is a `TempBuffer`, so later escalation rounds never re-evict it;
+//! * the **clone** is born at `Decompress` and dies at the original
+//!   backward consumers.
+//!
+//! Scheduling: each `Decompress` gets a control input from a loss-phase
+//! anchor (when one precedes all rewired consumers, see
+//! [`crate::evict::find_anchor`]), pinning the inflate into the backward
+//! region for any topological scheduler. `Compress` is deliberately
+//! *not* anchored — the earlier it runs, the earlier the original frees.
+//!
+//! Time is not modeled here: codec seconds are priced by
+//! [`super::cost::CompressModel`] against the tensors chosen.
+
+use crate::evict::{filter_evictable, find_anchor, retarget_backward};
+use crate::graph::{Graph, OpId, Reachability, TensorClass, TensorId};
+use crate::graph::{OpKind, Phase};
+
+use super::cost::CompressModel;
+
+/// One inserted compression: original tensor, its packed representation,
+/// the inflated clone, and the two ops.
+#[derive(Clone, Copy, Debug)]
+pub struct CompressPair {
+    /// The evicted tensor (loses its backward consumers).
+    pub original: TensorId,
+    /// Compressed representation produced by `compress_op`, consumed by
+    /// `decompress_op`; `ratio·size` bytes, resident across the boundary.
+    pub packed: TensorId,
+    /// Re-materialised tensor the backward consumers now read.
+    pub clone: TensorId,
+    pub compress_op: OpId,
+    pub decompress_op: OpId,
+}
+
+/// Outcome of a compress rewrite.
+#[derive(Clone, Debug)]
+pub struct CompressRewriteResult {
+    /// The augmented graph (original ops keep their ids; codec ops
+    /// appended).
+    pub graph: Graph,
+    /// One entry per evicted tensor.
+    pub pairs: Vec<CompressPair>,
+    /// Σ bytes freed across the boundary (original − packed sizes).
+    pub saved_bytes: u64,
+}
+
+impl CompressRewriteResult {
+    /// Number of tensors whose backward consumers were retargeted.
+    pub fn evicted(&self) -> usize {
+        self.pairs.len()
+    }
+}
+
+/// Rewrite `g` so every tensor in `evict` (silently filtered through
+/// [`crate::evict::is_evictable`] *and* the model's codec coverage —
+/// tensors no codec shrinks are dropped) is compressed after its last
+/// forward use and decompressed for its backward consumers. `reach` must
+/// be the reachability of `g` (used only for the control-anchor safety
+/// check). Preserves every [`crate::graph::validate`] invariant,
+/// acyclicity included. With a disabled model this is the identity.
+pub fn rewrite(
+    g: &Graph,
+    reach: &Reachability,
+    m: &CompressModel,
+    evict: &[TensorId],
+) -> CompressRewriteResult {
+    let evicted: Vec<TensorId> = filter_evictable(g, evict)
+        .into_iter()
+        .filter(|&t| m.compressed_bytes(g.tensors[t].class, g.tensors[t].size).is_some())
+        .collect();
+    if evicted.is_empty() {
+        return CompressRewriteResult {
+            graph: g.clone(),
+            pairs: Vec::new(),
+            saved_bytes: 0,
+        };
+    }
+
+    let mut out = g.clone();
+    let mut pairs = Vec::with_capacity(evicted.len());
+    let mut saved_bytes = 0u64;
+    for &t in &evicted {
+        let size = g.tensors[t].size;
+        let packed_size = m
+            .compressed_bytes(g.tensors[t].class, size)
+            .expect("filtered to codec-covered tensors");
+        let pname = format!("z::{}", g.tensors[t].name);
+        let (compress_op, pouts) = out.add_op(
+            format!("cp::{}", g.tensors[t].name),
+            OpKind::Compress,
+            Phase::Forward,
+            &[t],
+            &[(pname.as_str(), packed_size, TensorClass::TempBuffer)],
+        );
+        let cname = format!("dc::{}", g.tensors[t].name);
+        let (decompress_op, couts) = out.add_op(
+            format!("dc::{}", g.tensors[t].name),
+            OpKind::Decompress,
+            Phase::Backward,
+            &[pouts[0]],
+            &[(cname.as_str(), size, g.tensors[t].class)],
+        );
+        retarget_backward(&mut out, g, t, couts[0]);
+        saved_bytes += size - packed_size;
+        pairs.push(CompressPair {
+            original: t,
+            packed: pouts[0],
+            clone: couts[0],
+            compress_op,
+            decompress_op,
+        });
+    }
+
+    // Control anchor: pin inflates after a loss op that provably precedes
+    // every retargeted consumer. Acyclic by construction — the anchor
+    // strictly precedes all clone consumers, and the codec ops have no
+    // other successors, so no path can lead back to the anchor.
+    let remap: Vec<(TensorId, TensorId)> = pairs.iter().map(|p| (p.original, p.clone)).collect();
+    if let Some(anchor_tensor) = find_anchor(g, reach, &remap) {
+        for p in &pairs {
+            out.add_control_input(p.decompress_op, anchor_tensor);
+        }
+    }
+
+    debug_assert!(
+        crate::graph::validate::validate(&out).is_empty(),
+        "compress rewrite produced an invalid graph"
+    );
+    CompressRewriteResult {
+        graph: out,
+        pairs,
+        saved_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate::validate;
+    use crate::sched::sim::total_peak;
+    use crate::sched::Schedule;
+
+    /// fwd chain a→b→loss, backward consumes both activations.
+    fn training_chain() -> Graph {
+        let mut g = Graph::new("chain");
+        let x = g.add_input_tensor("x", 10, TensorClass::Input);
+        let (_, t0) = g.add_op(
+            "a",
+            OpKind::MatMul,
+            Phase::Forward,
+            &[x],
+            &[("act0", 100, TensorClass::Activation)],
+        );
+        let (_, t1) = g.add_op(
+            "b",
+            OpKind::MatMul,
+            Phase::Forward,
+            &[t0[0]],
+            &[("act1", 100, TensorClass::Activation)],
+        );
+        let (_, l) = g.add_op(
+            "loss",
+            OpKind::Loss,
+            Phase::Loss,
+            &[t1[0]],
+            &[("loss", 4, TensorClass::TempBuffer)],
+        );
+        g.mark_output(l[0]);
+        let (_, d1) = g.add_op(
+            "b.bwd",
+            OpKind::MatMul,
+            Phase::Backward,
+            &[t1[0], l[0]],
+            &[("dact0", 100, TensorClass::Gradient)],
+        );
+        let (_, d0) = g.add_op(
+            "a.bwd",
+            OpKind::MatMul,
+            Phase::Backward,
+            &[t0[0], d1[0]],
+            &[("dx", 10, TensorClass::Gradient)],
+        );
+        g.mark_output(d0[0]);
+        g
+    }
+
+    #[test]
+    fn rewrite_wires_compress_packed_decompress_clone() {
+        let g = training_chain();
+        let reach = Reachability::compute(&g);
+        let m = CompressModel::lossless();
+        let r = rewrite(&g, &reach, &m, &[1]);
+        assert!(validate(&r.graph).is_empty());
+        assert_eq!(r.evicted(), 1);
+        assert_eq!(r.saved_bytes, 50); // 100 B at ratio 0.5
+        let p = r.pairs[0];
+        // Packed: half-size temp produced by Compress, consumed by
+        // Decompress.
+        assert_eq!(r.graph.tensors[p.packed].size, 50);
+        assert_eq!(r.graph.tensors[p.packed].class, TensorClass::TempBuffer);
+        assert_eq!(r.graph.tensors[p.packed].producer, Some(p.compress_op));
+        assert_eq!(r.graph.tensors[p.packed].consumers, vec![p.decompress_op]);
+        assert_eq!(r.graph.ops[p.compress_op].kind, OpKind::Compress);
+        assert_eq!(r.graph.ops[p.decompress_op].kind, OpKind::Decompress);
+        // The original no longer has backward consumers; the clone feeds
+        // exactly the old backward consumer (op 4: a.bwd) at full size.
+        assert!(r.graph.tensors[p.original]
+            .consumers
+            .iter()
+            .all(|&c| r.graph.ops[c].phase != Phase::Backward));
+        assert_eq!(r.graph.tensors[p.clone].consumers, vec![4]);
+        assert_eq!(r.graph.tensors[p.clone].size, 100);
+        // The inflate is pinned after the loss via a control input.
+        assert!(
+            r.graph.ops[p.decompress_op].inputs.contains(&3),
+            "missing anchor"
+        );
+        // Compress is free to run right after the last forward use.
+        assert!(!r.graph.ops[p.compress_op].inputs.contains(&3));
+    }
+
+    #[test]
+    fn rewrite_reduces_peak_on_the_chain() {
+        let g = training_chain();
+        let reach = Reachability::compute(&g);
+        let m = CompressModel::lossless();
+        let r = rewrite(&g, &reach, &m, &[1]);
+        let base = total_peak(
+            &g,
+            &Schedule::from_order(&crate::graph::topo::program_order(&g)),
+        );
+        let order = crate::graph::topo::program_order(&r.graph);
+        assert!(crate::graph::topo::is_topological(&r.graph, &order));
+        let after = total_peak(&r.graph, &Schedule::from_order(&order));
+        assert!(
+            after <= base,
+            "compress made the chain worse: {after} > {base}"
+        );
+    }
+
+    #[test]
+    fn empty_disabled_or_ineligible_evictions_are_identity() {
+        let g = training_chain();
+        let reach = Reachability::compute(&g);
+        let m = CompressModel::lossless();
+        let r = rewrite(&g, &reach, &m, &[]);
+        assert_eq!(r.graph.n_ops(), g.n_ops());
+        assert_eq!(r.evicted(), 0);
+        let r = rewrite(&g, &reach, &m, &[2, 0, 3]); // all ineligible
+        assert_eq!(r.graph.n_ops(), g.n_ops());
+        assert_eq!(r.saved_bytes, 0);
+        // A disabled model never rewrites, even for eligible tensors.
+        let off = CompressModel::default();
+        let r = rewrite(&g, &reach, &off, &[1]);
+        assert_eq!(r.graph.n_ops(), g.n_ops());
+        assert_eq!(r.evicted(), 0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Compress-candidate selection: which activations to shrink, in what
+//! order.
+//!
+//! A good compression victim frees many bytes (large tensor × good
+//! ratio) for few codec seconds — unlike swap there is no hiding window,
+//! the overhead is paid in full, so the ranking currency is simply
+//! **bytes freed per codec second** (the same
+//! [`crate::swap::select`]-style score the hybrid driver uses for every
+//! technique). Peak-relieving tensors rank first regardless, exactly as
+//! in [`crate::recompute::select`].
+//!
+//! All driver paths (pure compress included) run through
+//! [`crate::hybrid`], which forms eviction *units* with the recompute
+//! selector and prices their compress side with [`unit_compress_cost`].
+//! [`compress_candidates`] is the standalone per-tensor view of that
+//! ranking — a tool/test surface that pins the comparator independently
+//! of the driver.
+
+use super::cost::CompressModel;
+use crate::evict::is_evictable;
+use crate::graph::{Graph, TensorId};
+
+/// One compress-eviction unit.
+#[derive(Clone, Debug)]
+pub struct CompressCandidate {
+    /// Tensors this unit evicts (per-tensor units hold exactly one).
+    pub tensors: Vec<TensorId>,
+    /// Bytes freed at the fwd/bwd boundary: Σ (size − packed size).
+    pub saved: u64,
+    /// Modeled compress + decompress seconds for the unit.
+    pub codec_secs: f64,
+    /// Does the unit free anything live at the baseline peak step?
+    pub at_peak: bool,
+}
+
+/// Saved bytes and codec seconds of compressing every tensor in
+/// `tensors` (an eviction unit). Tensors no codec covers contribute
+/// nothing saved and infinite seconds — an uncoverable unit prices as
+/// unpickable rather than erroring, matching the swap/recompute pricing
+/// conventions.
+pub fn unit_compress_cost(g: &Graph, m: &CompressModel, tensors: &[TensorId]) -> (u64, f64) {
+    let mut saved = 0u64;
+    let mut secs = 0f64;
+    for &t in tensors {
+        let tt = &g.tensors[t];
+        saved += m.saved_bytes(tt.class, tt.size);
+        secs += m.codec_secs(tt.class, tt.size);
+    }
+    (saved, secs)
+}
+
+/// Enumerate per-tensor compress candidates, best first, skipping
+/// tensors no codec shrinks. `live_at_peak` is a per-tensor mask from
+/// the baseline plan (see [`crate::sched::sim::live_at`]); pass
+/// all-false when unknown. With a disabled model this is empty.
+pub fn compress_candidates(
+    g: &Graph,
+    m: &CompressModel,
+    live_at_peak: &[bool],
+) -> Vec<CompressCandidate> {
+    let live = |t: TensorId| live_at_peak.get(t).copied().unwrap_or(false);
+    let mut out: Vec<CompressCandidate> = (0..g.n_tensors())
+        .filter(|&t| {
+            is_evictable(g, t)
+                && m.compressed_bytes(g.tensors[t].class, g.tensors[t].size)
+                    .is_some()
+        })
+        .map(|t| {
+            let (saved, secs) = unit_compress_cost(g, m, &[t]);
+            CompressCandidate {
+                tensors: vec![t],
+                saved,
+                codec_secs: secs,
+                at_peak: live(t),
+            }
+        })
+        .collect();
+    // Rank: peak-relieving first, then bytes-freed per codec second
+    // (descending), then raw saving, then id for determinism.
+    out.sort_by(|a, b| {
+        b.at_peak
+            .cmp(&a.at_peak)
+            .then_with(|| {
+                let sa = crate::swap::select::score(a.saved, a.codec_secs);
+                let sb = crate::swap::select::score(b.saved, b.codec_secs);
+                sb.partial_cmp(&sa).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .then(b.saved.cmp(&a.saved))
+            .then(a.tensors[0].cmp(&b.tensors[0]))
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{self, BuildCfg, ModelKind};
+
+    #[test]
+    fn candidates_on_a_model_are_ranked_and_evictable() {
+        let g = models::build(ModelKind::Vit, &BuildCfg::default());
+        let m = CompressModel::lossless();
+        let none = vec![false; g.n_tensors()];
+        let cands = compress_candidates(&g, &m, &none);
+        assert!(!cands.is_empty());
+        for c in &cands {
+            assert_eq!(c.tensors.len(), 1);
+            assert!(is_evictable(&g, c.tensors[0]));
+            assert!(c.saved > 0);
+            assert!(c.codec_secs > 0.0 && c.codec_secs.is_finite());
+        }
+        // Ranking is by descending score within the at_peak blocks.
+        for w in cands.windows(2) {
+            if w[0].at_peak == w[1].at_peak {
+                assert!(
+                    crate::swap::select::score(w[0].saved, w[0].codec_secs)
+                        >= crate::swap::select::score(w[1].saved, w[1].codec_secs) - 1e-12
+                );
+            } else {
+                assert!(w[0].at_peak && !w[1].at_peak);
+            }
+        }
+        // A disabled model offers nothing.
+        assert!(compress_candidates(&g, &CompressModel::default(), &none).is_empty());
+    }
+}

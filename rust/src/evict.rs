@@ -1,14 +1,15 @@
 //! Shared eviction machinery for the high-level memory techniques.
 //!
-//! Both budgeted rematerialization ([`crate::recompute`]) and
-//! bandwidth-aware offloading ([`crate::swap`]) follow the same structural
-//! recipe: pick a forward activation with backward consumers, *evict* it
-//! (retarget its backward consumers to a replacement tensor produced
-//! inside the backward pass) and let the liveness rules price the saving —
-//! the original now dies at its last forward use. The two techniques only
-//! differ in how the replacement is produced (cloned forward ops vs a
-//! `SwapIn` fetch) and in what overhead that costs (FLOP-proxy bytes vs
-//! un-hidden transfer time).
+//! Budgeted rematerialization ([`crate::recompute`]), bandwidth-aware
+//! offloading ([`crate::swap`]) and in-place compression
+//! ([`crate::compress`]) all follow the same structural recipe: pick a
+//! forward activation with backward consumers, *evict* it (retarget its
+//! backward consumers to a replacement tensor produced inside the
+//! backward pass) and let the liveness rules price the saving — the
+//! original now dies at its last forward use. The techniques only differ
+//! in how the replacement is produced (cloned forward ops, a `SwapIn`
+//! fetch, or a `Decompress`) and in what overhead that costs (FLOP-proxy
+//! bytes, un-hidden transfer time, or codec seconds).
 //!
 //! This module owns the pieces that recipe shares:
 //!

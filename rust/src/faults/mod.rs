@@ -8,9 +8,11 @@
 //! makes failure a first-class, reproducible input:
 //!
 //! * [`spec`] — the `ROAM_FAULTS` / `--faults` grammar
-//!   (`name=panic|err|delay_ms:N` clauses with `prob:P@seed` modifiers);
-//! * [`registry`] — the armed rule table behind [`maybe_fail`], the
-//!   [`FAILPOINTS`] enumeration, and the arm/disarm lifecycle.
+//!   (`name=panic|err|delay_ms:N|corrupt` clauses with `prob:P@seed`
+//!   modifiers);
+//! * [`registry`] — the armed rule table behind [`maybe_fail`] and
+//!   [`maybe_corrupt`], the [`FAILPOINTS`] enumeration, and the
+//!   arm/disarm lifecycle.
 //!
 //! Call sites are fixed (à la `fail-rs` with compiled-in points): each
 //! names itself with a `&'static str` and maps `Err(Injected)` onto its
@@ -25,6 +27,7 @@ pub mod registry;
 pub mod spec;
 
 pub use registry::{
-    arm, arm_str, armed, disarm, init, injected_total, maybe_fail, snapshot, Injected, FAILPOINTS,
+    arm, arm_str, armed, disarm, init, injected_total, maybe_corrupt, maybe_fail, snapshot,
+    Injected, FAILPOINTS,
 };
 pub use spec::{FaultAction, FaultRule, FaultSpec};

@@ -27,6 +27,11 @@ use std::sync::Mutex;
 /// | `serve_plan`       | `serve::service` planning attempt     | retry → heuristic → error    |
 /// | `cache_disk_read`  | `serve::cache` disk lookup            | counted miss                 |
 /// | `cache_disk_write` | `serve::cache` disk persist           | memory-only insert           |
+///
+/// `cache_disk_write` is additionally **corrupt-aware**: a `corrupt`
+/// rule there flips one seeded byte of the entry payload via
+/// [`maybe_corrupt`] instead of failing the write, exercising the
+/// checksum → quarantine path rather than the error path.
 pub const FAILPOINTS: &[&str] = &[
     "leaf_solve",
     "layout_window",
@@ -156,6 +161,13 @@ pub fn maybe_fail(name: &'static str) -> Result<(), Injected> {
         let Some(rs) = rules.iter_mut().find(|r| r.name == name) else {
             return Ok(());
         };
+        if rs.action == FaultAction::Corrupt {
+            // Corrupt rules damage payloads, not calls: they fire only at
+            // corrupt-aware sites via `maybe_corrupt`. Here (before the
+            // hit is even counted) they are inert, so a `corrupt` rule on
+            // a payload-free failpoint never perturbs anything.
+            return Ok(());
+        }
         rs.hits += 1;
         let fire = rs.prob >= 1.0 || rs.rng.chance(rs.prob);
         if !fire {
@@ -180,7 +192,48 @@ pub fn maybe_fail(name: &'static str) -> Result<(), Injected> {
             Ok(())
         }
         FaultAction::Err => Err(Injected { name }),
+        // Unreachable: Corrupt rules bail out above, before firing.
+        FaultAction::Corrupt => Ok(()),
     }
+}
+
+/// The corrupt-aware failpoint primitive: if a `corrupt` rule is armed
+/// on `name` and fires, flip one seeded byte of `bytes` in place and
+/// return `true`. Disarmed (or with no matching `corrupt` rule, or an
+/// empty payload): one relaxed load / no-op, `false`. Non-`corrupt`
+/// rules on the same failpoint are handled by [`maybe_fail`], not here
+/// — a site that is both failable and corruptible calls both.
+pub fn maybe_corrupt(name: &'static str, bytes: &mut [u8]) -> bool {
+    if !armed() || bytes.is_empty() {
+        return false;
+    }
+    let offset = {
+        let mut rules = RULES.lock().unwrap_or_else(|e| e.into_inner());
+        let Some(rs) = rules
+            .iter_mut()
+            .find(|r| r.name == name && r.action == FaultAction::Corrupt)
+        else {
+            return false;
+        };
+        rs.hits += 1;
+        let fire = rs.prob >= 1.0 || rs.rng.chance(rs.prob);
+        if !fire {
+            return false;
+        }
+        rs.fired += 1;
+        rs.rng.gen_range(bytes.len() as u64) as usize
+    };
+    bytes[offset] ^= 0xff;
+    INJECTED_TOTAL.fetch_add(1, Ordering::Relaxed);
+    crate::obs::metrics::counter_add("faults_injected_total", 1);
+    crate::obs::metrics::counter_add(&format!("faults_injected_{name}_total"), 1);
+    if crate::obs::span::enabled() {
+        crate::obs::span::instant(
+            "fault_corrupted",
+            vec![("failpoint", crate::obs::span::ArgVal::Str(name.to_string()))],
+        );
+    }
+    true
 }
 
 #[cfg(test)]

@@ -8,7 +8,7 @@
 //! spec     := clause (';' clause)*
 //! clause   := rule | modifier
 //! rule     := NAME '=' action
-//! action   := 'panic' | 'err' | 'delay_ms:' N
+//! action   := 'panic' | 'err' | 'delay_ms:' N | 'corrupt'
 //! modifier := 'prob:' P ['@' SEED]      # fire with probability P (default 1.0)
 //! ```
 //!
@@ -38,6 +38,12 @@ pub enum FaultAction {
     /// Sleep for the given milliseconds, then proceed normally —
     /// exercises deadline degradation without failing anything.
     DelayMs(u64),
+    /// Flip one seeded byte of the payload at a corrupt-aware site
+    /// ([`crate::faults::maybe_corrupt`]) — silent data corruption, not a
+    /// failed call; exercises checksum/quarantine layers. At plain
+    /// [`crate::faults::maybe_fail`] sites (no payload to damage) a
+    /// `corrupt` rule is inert.
+    Corrupt,
 }
 
 impl fmt::Display for FaultAction {
@@ -46,6 +52,7 @@ impl fmt::Display for FaultAction {
             FaultAction::Panic => write!(f, "panic"),
             FaultAction::Err => write!(f, "err"),
             FaultAction::DelayMs(ms) => write!(f, "delay_ms:{ms}"),
+            FaultAction::Corrupt => write!(f, "corrupt"),
         }
     }
 }
@@ -142,6 +149,7 @@ fn parse_action(s: &str) -> Result<FaultAction, String> {
     match s {
         "panic" => Ok(FaultAction::Panic),
         "err" => Ok(FaultAction::Err),
+        "corrupt" => Ok(FaultAction::Corrupt),
         _ => match s.strip_prefix("delay_ms:") {
             Some(n) => n
                 .trim()
@@ -149,7 +157,7 @@ fn parse_action(s: &str) -> Result<FaultAction, String> {
                 .map(FaultAction::DelayMs)
                 .map_err(|_| format!("bad delay in 'delay_ms:{n}' (want milliseconds)")),
             None => Err(format!(
-                "unknown action '{s}' (want panic|err|delay_ms:N)"
+                "unknown action '{s}' (want panic|err|delay_ms:N|corrupt)"
             )),
         },
     }
@@ -190,11 +198,20 @@ mod tests {
     }
 
     #[test]
+    fn parses_corrupt_action() {
+        let s = FaultSpec::parse("cache_disk_write=corrupt;prob:0.5@3").unwrap();
+        assert_eq!(s.rules[0].action, FaultAction::Corrupt);
+        assert_eq!(s.rules[0].prob, 0.5);
+        assert_eq!(s.rules[0].seed, 3);
+    }
+
+    #[test]
     fn display_round_trips() {
         for raw in [
             "leaf_solve=panic",
             "leaf_solve=panic;prob:0.3@7",
             "a=err;b=delay_ms:9;prob:0.25@3;c=panic",
+            "cache_disk_write=corrupt;prob:0.5@3",
         ] {
             let s = FaultSpec::parse(raw).unwrap();
             let again = FaultSpec::parse(&format!("{s}")).unwrap();

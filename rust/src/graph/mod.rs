@@ -68,6 +68,13 @@ pub enum OpKind {
     /// Host→device fetch of a previously swapped tensor: consumes the
     /// handle, re-materialises the tensor for its backward consumers.
     SwapIn,
+    /// In-place shrink inserted by the [`crate::compress`] rewriter:
+    /// consumes the evicted tensor, emits the compressed representation
+    /// (codec-ratio × original bytes) that stays resident on device.
+    Compress,
+    /// Inverse of `Compress`: consumes the compressed representation and
+    /// re-materialises the full tensor for its backward consumers.
+    Decompress,
     Other,
 }
 

@@ -28,6 +28,11 @@ pub enum Defect {
     /// `SwapIn` must emit exactly one tensor and consume a handle produced
     /// by a `SwapOut`.
     MalformedSwap { op: usize },
+    /// A `Compress`/`Decompress` op violates the compression structural
+    /// contract: `Compress` must consume ≥ 1 tensor and emit exactly one
+    /// compressed representation; `Decompress` must emit exactly one
+    /// tensor and consume a representation produced by a `Compress`.
+    MalformedCompress { op: usize },
 }
 
 /// Validate; returns all defects found (empty = structurally sound).
@@ -109,6 +114,25 @@ pub fn validate(g: &Graph) -> Vec<Defect> {
                 });
                 if op.outputs.len() != 1 || !has_handle {
                     defects.push(Defect::MalformedSwap { op: i });
+                }
+            }
+            // Compression structural contract (the compress/ rewriter's
+            // invariants, mirroring the swap pair).
+            super::OpKind::Compress => {
+                if op.inputs.is_empty() || op.outputs.len() != 1 {
+                    defects.push(Defect::MalformedCompress { op: i });
+                }
+            }
+            super::OpKind::Decompress => {
+                let has_handle = op.inputs.iter().any(|&t| {
+                    t < g.n_tensors()
+                        && g.tensors[t]
+                            .producer
+                            .map(|p| g.ops[p].kind == super::OpKind::Compress)
+                            .unwrap_or(false)
+                });
+                if op.outputs.len() != 1 || !has_handle {
+                    defects.push(Defect::MalformedCompress { op: i });
                 }
             }
             _ => {}
@@ -196,6 +220,26 @@ mod tests {
         let (_, h) = g.add_op("so", OpKind::SwapOut, Phase::Forward, &[x],
             &[("h", 1, TensorClass::TempBuffer)]);
         g.add_op("si", OpKind::SwapIn, Phase::Backward, &[h[0]],
+            &[("t", 4, TensorClass::Activation)]);
+        assert!(validate(&g).is_empty());
+    }
+
+    #[test]
+    fn detects_malformed_compress() {
+        // A Decompress whose input is not a Compress-produced tensor.
+        let mut g = Graph::new("compress-bad");
+        let x = g.add_input_tensor("x", 4, TensorClass::Activation);
+        g.add_op("dc", OpKind::Decompress, Phase::Backward, &[x],
+            &[("t", 4, TensorClass::Activation)]);
+        assert!(validate(&g)
+            .iter()
+            .any(|d| matches!(d, Defect::MalformedCompress { .. })));
+        // A well-formed compress/decompress pair validates cleanly.
+        let mut g = Graph::new("compress-ok");
+        let x = g.add_input_tensor("x", 4, TensorClass::Activation);
+        let (_, h) = g.add_op("cp", OpKind::Compress, Phase::Forward, &[x],
+            &[("h", 2, TensorClass::TempBuffer)]);
+        g.add_op("dc", OpKind::Decompress, Phase::Backward, &[h[0]],
             &[("t", 4, TensorClass::Activation)]);
         assert!(validate(&g).is_empty());
     }

@@ -1,32 +1,41 @@
 //! Budgeted planning driver generalised over eviction *techniques*:
 //! recomputation ([`crate::recompute`]), bandwidth-aware swapping
-//! ([`crate::swap`]), or a per-tensor hybrid of both — the
-//! Capuchin/POFO-style "cheapest overhead first" policy on top of ROAM's
-//! order+layout substrate.
+//! ([`crate::swap`]), in-place compression ([`crate::compress`]), or a
+//! per-tensor hybrid of all three — the Capuchin/POFO-style "cheapest
+//! overhead first" policy on top of ROAM's order+layout substrate.
 //!
 //! Each escalation round evicts a growing prefix of the candidate-unit
 //! list; every unit in the prefix is realised by the technique the driver
-//! assigned it (recompute clones vs `SwapOut`/`SwapIn` pairs), the
-//! **original** graph is rewritten with the union, and the full ROAM
-//! pipeline re-plans the augmented graph — so the recompute working set
-//! and the swap hiding windows are themselves order/layout-optimised.
-//! The driver keeps the best (minimum-total) round seen and never
-//! returns a plan worse than the technique-free baseline.
+//! assigned it (recompute clones, `SwapOut`/`SwapIn` pairs, or
+//! `Compress`/`Decompress` pairs), the **original** graph is rewritten
+//! with the union, and the full ROAM pipeline re-plans the augmented
+//! graph — so the recompute working set, the swap hiding windows and the
+//! codec residues are themselves order/layout-optimised. The driver
+//! keeps the best (minimum-total) round seen and never returns a plan
+//! worse than the technique-free baseline.
 //!
 //! Overheads are priced on one scale — seconds — by the swap cost model
-//! ([`crate::swap::CostModel`]): recompute pays its cloned bytes over the
-//! compute throughput (the FLOP-proxy convention), swap pays the
-//! *un-hidden* part of its transfers, measured against the planned
-//! schedule. Both kinds are reported in [`ExecutionPlan::stats`].
+//! ([`crate::swap::CostModel`]) and the codec table
+//! ([`crate::compress::CompressModel`]): recompute pays its cloned bytes
+//! over the compute throughput (the FLOP-proxy convention), swap pays
+//! the *un-hidden* part of its transfers, measured against the planned
+//! schedule, and compression pays its full compress+decompress kernel
+//! seconds. All kinds are reported in [`ExecutionPlan::stats`].
 //!
 //! **Dominance.** With [`Technique::Hybrid`] the driver additionally
-//! replays the pure-recompute and pure-swap escalations (identical
-//! candidate rankings, prefix schedules and stop rules as the pure
-//! drivers) and picks the best round across all three — so on a
-//! deterministic planner configuration a hybrid plan is never worse than
-//! either pure technique at the same budget, by construction. That costs
-//! up to 3× the planning rounds; `tests/hybrid_props.rs` pins the
-//! property.
+//! replays every enabled pure escalation (identical candidate rankings,
+//! prefix schedules and stop rules as the pure drivers) and picks the
+//! best round across all of them — so on a deterministic planner
+//! configuration a hybrid plan is never worse than any pure technique at
+//! the same budget, by construction. That costs up to one extra set of
+//! planning rounds per technique; `tests/hybrid_props.rs` and
+//! `tests/compress_props.rs` pin the property.
+//!
+//! **Compression is opt-in.** The default [`HybridCfg::compress`] table
+//! is empty, which prices every compress decision at infinity: the
+//! hybrid assignment never picks it, the pure-compress replay is
+//! skipped, and plan output is byte-identical to the historical
+//! two-technique driver.
 //!
 //! **Overlap-aware rounds.** Each round's re-plan can order the
 //! augmented graph under the scalarised `peak + λ·exposed-seconds`
@@ -45,6 +54,9 @@
 //! [`Technique::Recompute`] specialisation of this driver, kept as the
 //! stable recompute-only API.
 
+use crate::compress::cost::CompressModel;
+use crate::compress::rewrite::rewrite as compress_rewrite;
+use crate::compress::select::unit_compress_cost;
 use crate::graph::{Graph, OpId, Reachability};
 use crate::planner::{
     roam_plan, roam_plan_full, ExecutionPlan, OrderObjectiveCfg, RoamCfg, WarmSeed,
@@ -84,7 +96,10 @@ pub enum Technique {
     Recompute,
     /// `SwapOut`/`SwapIn` pairs only.
     Swap,
-    /// Per-unit cheapest-overhead choice, subsuming both pure drivers.
+    /// `Compress`/`Decompress` pairs only (needs an enabled
+    /// [`HybridCfg::compress`] codec table).
+    Compress,
+    /// Per-unit cheapest-overhead choice, subsuming every pure driver.
     Hybrid,
 }
 
@@ -94,6 +109,7 @@ impl Technique {
         match s.to_ascii_lowercase().as_str() {
             "recompute" | "rc" => Some(Technique::Recompute),
             "swap" => Some(Technique::Swap),
+            "compress" | "cp" => Some(Technique::Compress),
             "hybrid" => Some(Technique::Hybrid),
             _ => None,
         }
@@ -103,6 +119,7 @@ impl Technique {
         match self {
             Technique::Recompute => "recompute",
             Technique::Swap => "swap",
+            Technique::Compress => "compress",
             Technique::Hybrid => "hybrid",
         }
     }
@@ -116,8 +133,14 @@ pub struct HybridCfg {
     /// Eviction-unit formation strategy (shared with the recompute
     /// selector: per-tensor greedy or per-segment checkpoint units).
     pub strategy: Strategy,
-    /// Bandwidth/compute model pricing both overhead kinds.
+    /// Bandwidth/compute model pricing the recompute and swap overheads.
     pub cost: CostModel,
+    /// Per-class codec table pricing the compress technique. The default
+    /// table is **empty** (compression disabled): every compress decision
+    /// prices at infinity, the pure-compress replay is skipped, and plan
+    /// output is byte-identical to the two-technique driver. The CLI
+    /// enables it with `--codec-table` / `--codec-ratio`.
+    pub compress: CompressModel,
     /// ROAM planner configuration used for every (re-)planning round.
     pub roam: RoamCfg,
     /// Maximum select→rewrite→plan rounds per escalation.
@@ -144,6 +167,7 @@ impl Default for HybridCfg {
             technique: Technique::Hybrid,
             strategy: Strategy::Greedy,
             cost: CostModel::default(),
+            compress: CompressModel::default(),
             roam: RoamCfg::default(),
             max_rounds: 12,
             growth: 2.0,
@@ -153,7 +177,7 @@ impl Default for HybridCfg {
     }
 }
 
-/// An eviction unit with both techniques priced in seconds.
+/// An eviction unit with every technique priced in seconds.
 #[derive(Clone, Debug)]
 pub struct PricedCandidate {
     /// The underlying unit (tensors, bytes saved, recompute cost bytes).
@@ -164,15 +188,31 @@ pub struct PricedCandidate {
     pub swap_transfer_secs: f64,
     /// Estimated un-hidden transfer seconds under the baseline schedule.
     pub swap_exposed_secs: f64,
+    /// Compress + decompress kernel seconds under the codec table
+    /// (infinite when no codec covers the unit — i.e. table disabled).
+    pub compress_secs: f64,
+    /// Bytes compressing the unit actually frees: Σ (size − packed).
+    /// Smaller than `unit.saved` because the packed representation stays
+    /// resident on device.
+    pub compress_saved: u64,
 }
 
 impl PricedCandidate {
-    /// The technique a [`Technique::Hybrid`] driver assigns this unit.
+    /// The technique a [`Technique::Hybrid`] driver assigns this unit:
+    /// swap vs recompute by the historical exposed-vs-FLOP comparison,
+    /// with compress taking over only on a *strictly* lower overhead —
+    /// so a disabled codec table (infinite `compress_secs`) reproduces
+    /// the two-technique assignment exactly.
     pub fn cheaper(&self) -> Technique {
-        if self.swap_exposed_secs <= self.recompute_secs {
+        let two_way = if self.swap_exposed_secs <= self.recompute_secs {
             Technique::Swap
         } else {
             Technique::Recompute
+        };
+        if self.compress_secs < self.swap_exposed_secs.min(self.recompute_secs) {
+            Technique::Compress
+        } else {
+            two_way
         }
     }
 
@@ -181,26 +221,45 @@ impl PricedCandidate {
         match technique {
             Technique::Recompute => self.recompute_secs,
             Technique::Swap => self.swap_exposed_secs,
-            Technique::Hybrid => self.swap_exposed_secs.min(self.recompute_secs),
+            Technique::Compress => self.compress_secs,
+            Technique::Hybrid => self
+                .swap_exposed_secs
+                .min(self.recompute_secs)
+                .min(self.compress_secs),
+        }
+    }
+
+    /// Bytes the unit frees under the given technique: compression only
+    /// frees the ratio residue, everything else frees the full saving.
+    fn saved_under(&self, technique: Technique) -> u64 {
+        match technique {
+            Technique::Compress => self.compress_saved,
+            Technique::Hybrid if self.cheaper() == Technique::Compress => self.compress_saved,
+            _ => self.unit.saved,
         }
     }
 }
 
-/// Price every unit of `units` against the baseline timeline.
+/// Price every unit of `units` against the baseline timeline and codec
+/// table.
 pub fn price_candidates(
     g: &Graph,
     tl: &Timeline,
     m: &CostModel,
+    cm: &CompressModel,
     units: Vec<Candidate>,
 ) -> Vec<PricedCandidate> {
     units
         .into_iter()
         .map(|unit| {
             let (transfer, exposed) = unit_swap_cost(g, tl, m, &unit.tensors);
+            let (compress_saved, compress_secs) = unit_compress_cost(g, cm, &unit.tensors);
             PricedCandidate {
                 recompute_secs: m.recompute_secs(unit.cost),
                 swap_transfer_secs: transfer,
                 swap_exposed_secs: exposed,
+                compress_secs,
+                compress_saved,
                 unit,
             }
         })
@@ -220,8 +279,10 @@ fn rank(cands: &mut [PricedCandidate], technique: Technique) {
             .at_peak
             .cmp(&a.unit.at_peak)
             .then_with(|| {
-                let sa = crate::swap::select::score(a.unit.saved, a.overhead_under(technique));
-                let sb = crate::swap::select::score(b.unit.saved, b.overhead_under(technique));
+                let sa =
+                    crate::swap::select::score(a.saved_under(technique), a.overhead_under(technique));
+                let sb =
+                    crate::swap::select::score(b.saved_under(technique), b.overhead_under(technique));
                 sb.partial_cmp(&sa).unwrap_or(std::cmp::Ordering::Equal)
             })
             .then(b.unit.saved.cmp(&a.unit.saved))
@@ -251,6 +312,9 @@ pub(crate) struct HRound {
     pub rc_evicted: usize,
     pub swapped: usize,
     pub swap_bytes: u64,
+    pub compressed: usize,
+    pub compress_saved_bytes: u64,
+    pub compress_secs: f64,
     pub evicted: usize,
     pub recompute_secs: f64,
     pub swap_transfer_secs: f64,
@@ -272,7 +336,7 @@ impl HRound {
     }
 
     pub(crate) fn overhead_secs(&self) -> f64 {
-        self.recompute_secs + self.swap_exposed_secs
+        self.recompute_secs + self.swap_exposed_secs + self.compress_secs
     }
 }
 
@@ -374,31 +438,30 @@ pub(crate) fn escalate(
         round_span
             .arg("round", rounds.len() as f64)
             .arg("k", k as f64)
-            .arg_str(
-                "technique",
-                match technique {
-                    Technique::Recompute => "recompute",
-                    Technique::Swap => "swap",
-                    Technique::Hybrid => "hybrid",
-                },
-            );
+            .arg_str("technique", technique.name());
         let mut rc_set = Vec::new();
         let mut sw_set = Vec::new();
+        let mut cp_set = Vec::new();
         for c in &cands[..k] {
             let assigned = match technique {
                 Technique::Recompute => Technique::Recompute,
                 Technique::Swap => Technique::Swap,
+                Technique::Compress => Technique::Compress,
                 Technique::Hybrid => c.cheaper(),
             };
             match assigned {
                 Technique::Swap => sw_set.extend_from_slice(&c.unit.tensors),
+                Technique::Compress => cp_set.extend_from_slice(&c.unit.tensors),
                 _ => rc_set.extend_from_slice(&c.unit.tensors),
             }
         }
         // Recompute rewrite first (it clones regions of the original
         // graph), then swap the remaining set on the augmented graph —
         // a recompute clone that checkpoints a swapped tensor is thereby
-        // retargeted to the fetched copy, as a real system would.
+        // retargeted to the fetched copy, as a real system would — and
+        // compress last (the three victim sets are disjoint, so staging
+        // order only decides which rewriter pays the reachability
+        // recompute).
         let rw1 = rc_rewrite(g, reach, &rc_set);
         let rc_ops = rw1.recompute_ops.len();
         let rc_bytes = rw1.recompute_bytes;
@@ -413,6 +476,25 @@ pub(crate) fn escalate(
             let rw2 = swap_rewrite(&rw1.graph, &reach1, &sw_set);
             (rw2.graph, rw2.pairs, rw2.swapped_bytes)
         };
+        let (graph, cpairs, compress_saved_bytes) = if cp_set.is_empty() {
+            (graph, Vec::new(), 0u64)
+        } else if rc_ops == 0 && pairs.is_empty() {
+            let rw3 = compress_rewrite(g, reach, &cfg.compress, &cp_set);
+            (rw3.graph, rw3.pairs, rw3.saved_bytes)
+        } else {
+            let reach2 = Reachability::compute(&graph);
+            let rw3 = compress_rewrite(&graph, &reach2, &cfg.compress, &cp_set);
+            (rw3.graph, rw3.pairs, rw3.saved_bytes)
+        };
+        // Codec overhead is schedule-independent: full kernel seconds on
+        // the originals' (size, class), summed over the inserted pairs.
+        let compress_secs: f64 = cpairs
+            .iter()
+            .map(|p| {
+                let t = &graph.tensors[p.original];
+                cfg.compress.codec_secs(t.class, t.size)
+            })
+            .sum();
         let seed = prev
             .as_ref()
             .map(|(o, off)| carry_seed(o, off, g.n_ops(), g.n_tensors(), &graph));
@@ -444,7 +526,10 @@ pub(crate) fn escalate(
             rc_evicted,
             swapped: pairs.len(),
             swap_bytes,
-            evicted: rc_evicted + pairs.len(),
+            compressed: cpairs.len(),
+            compress_saved_bytes,
+            compress_secs,
+            evicted: rc_evicted + pairs.len() + cpairs.len(),
             recompute_secs: cfg.cost.recompute_secs(rc_bytes),
             swap_transfer_secs,
             swap_exposed_secs: exposed_after_slide,
@@ -456,6 +541,7 @@ pub(crate) fn escalate(
         round_span
             .arg("rc_ops", rc_ops as f64)
             .arg("swapped", round.swapped as f64)
+            .arg("compressed", round.compressed as f64)
             .arg("exposed_after_slide", round.exposed_after_slide)
             .arg("total_bytes", round.total() as f64);
         drop(round_span);
@@ -471,8 +557,9 @@ pub(crate) fn escalate(
 }
 
 /// Price the eviction units against `base` and run one escalation per
-/// technique in `cfg`'s policy ([`Technique::Hybrid`] replays both pure
-/// techniques after its own mixed assignment), concatenating the rounds
+/// technique in `cfg`'s policy ([`Technique::Hybrid`] replays every
+/// enabled pure technique after its own mixed assignment — compress only
+/// when the codec table is), concatenating the rounds
 /// in policy order. `start_k_of` sizes the first eviction prefix per
 /// ranked candidate list; an escalation stops once its running best
 /// total fits `stop_budget`. Returns the rounds and whether every
@@ -494,13 +581,25 @@ fn run_escalations(
     }
     let units = candidates(g, &reach, cfg.strategy, &live_mask);
     let tl = Timeline::new(g, &base.schedule, &cfg.cost);
-    let priced = price_candidates(g, &tl, &cfg.cost, units);
+    let priced = price_candidates(g, &tl, &cfg.cost, &cfg.compress, units);
     let total_unit_tensors: usize = priced.iter().map(|c| c.unit.tensors.len()).sum();
 
+    // The pure-compress replay only exists when the codec table does:
+    // with the (default) disabled table the technique lists — and hence
+    // the round sequence — are exactly the historical two-technique
+    // ones.
     let techniques: &[Technique] = match cfg.technique {
+        Technique::Hybrid if cfg.compress.enabled() => &[
+            Technique::Hybrid,
+            Technique::Recompute,
+            Technique::Swap,
+            Technique::Compress,
+        ],
         Technique::Hybrid => &[Technique::Hybrid, Technique::Recompute, Technique::Swap],
         Technique::Recompute => &[Technique::Recompute],
         Technique::Swap => &[Technique::Swap],
+        Technique::Compress if cfg.compress.enabled() => &[Technique::Compress],
+        Technique::Compress => &[],
     };
     let mut all_rounds: Vec<HRound> = Vec::new();
     let mut exhausted = true;
@@ -526,6 +625,13 @@ struct Counters {
     rounds: usize,
     swapped: usize,
     swap_moved_bytes: u64,
+    compressed: usize,
+    compress_saved_bytes: u64,
+    compress_secs: f64,
+    /// Is the codec table enabled? Gates the compress stat keys so a
+    /// disabled-compress run's plan output stays byte-identical to the
+    /// historical two-technique driver's.
+    compress_enabled: bool,
     recompute_secs: f64,
     swap_transfer_secs: f64,
     swap_exposed_secs: f64,
@@ -537,7 +643,7 @@ struct Counters {
     met: bool,
 }
 
-/// Annotate a plan's stats with both overhead kinds. Key names for the
+/// Annotate a plan's stats with every overhead kind. Key names for the
 /// recompute counters match the historical `roam recompute` output.
 fn annotate(plan: &mut ExecutionPlan, c: &Counters) {
     if c.rc_ops > 0 {
@@ -545,6 +651,9 @@ fn annotate(plan: &mut ExecutionPlan, c: &Counters) {
     }
     if c.swapped > 0 {
         plan.planner = format!("{}+swap", plan.planner);
+    }
+    if c.compressed > 0 {
+        plan.planner = format!("{}+cp", plan.planner);
     }
     let stats: &[(&str, f64)] = &[
         ("recompute_ops", c.rc_ops as f64),
@@ -569,13 +678,29 @@ fn annotate(plan: &mut ExecutionPlan, c: &Counters) {
             "transfer_aware_excess_bytes",
             c.transfer_excess_bytes as f64,
         ),
-        ("overhead_secs", c.recompute_secs + c.swap_exposed_secs),
+        (
+            "overhead_secs",
+            c.recompute_secs + c.swap_exposed_secs + c.compress_secs,
+        ),
         ("budget_bytes", c.budget as f64),
         ("baseline_total_bytes", c.baseline_total as f64),
         ("budget_met", if c.met { 1.0 } else { 0.0 }),
     ];
     for &(k, v) in stats {
         plan.stats.push((k.to_string(), v));
+    }
+    // Compress counters only exist when the technique can: an empty
+    // codec table must leave plan output byte-identical to the
+    // pre-compress driver (pinned by `tests/compress_props.rs`).
+    if c.compress_enabled {
+        let cstats: &[(&str, f64)] = &[
+            ("compress_tensors", c.compressed as f64),
+            ("compress_saved_bytes", c.compress_saved_bytes as f64),
+            ("compress_secs", c.compress_secs),
+        ];
+        for &(k, v) in cstats {
+            plan.stats.push((k.to_string(), v));
+        }
     }
 }
 
@@ -599,7 +724,8 @@ pub struct HybridPlan {
     pub exhausted: bool,
     /// Planning rounds executed across all escalations (0 = baseline fit).
     pub rounds: usize,
-    /// Evicted-tensor count of the chosen plan (recomputed + swapped).
+    /// Evicted-tensor count of the chosen plan (recomputed + swapped +
+    /// compressed).
     pub evicted: usize,
     /// Recompute ops added to the chosen plan's graph.
     pub recompute_ops: usize,
@@ -612,6 +738,13 @@ pub struct HybridPlan {
     pub swapped: usize,
     /// Bytes crossing the modeled link, out + in.
     pub swap_moved_bytes: u64,
+    /// `Compress`/`Decompress` pairs inserted.
+    pub compressed: usize,
+    /// Bytes freed across the fwd/bwd boundary by compression
+    /// (Σ original − packed).
+    pub compress_saved_bytes: u64,
+    /// Compress + decompress kernel overhead in modeled seconds.
+    pub compress_secs: f64,
     /// Recompute overhead in modeled seconds.
     pub recompute_secs: f64,
     /// Un-hidden transfer seconds under the chosen plan's schedule.
@@ -639,9 +772,10 @@ impl HybridPlan {
         self.plan.total_bytes()
     }
 
-    /// Combined overhead in modeled seconds (recompute + exposed swap).
+    /// Combined overhead in modeled seconds (recompute + exposed swap +
+    /// codec).
     pub fn overhead_secs(&self) -> f64 {
-        self.recompute_secs + self.swap_exposed_secs
+        self.recompute_secs + self.swap_exposed_secs + self.compress_secs
     }
 }
 
@@ -674,6 +808,10 @@ pub fn roam_plan_hybrid(g: &Graph, spec: BudgetSpec, cfg: &HybridCfg) -> HybridP
                 rounds: 0,
                 swapped: 0,
                 swap_moved_bytes: 0,
+                compressed: 0,
+                compress_saved_bytes: 0,
+                compress_secs: 0.0,
+                compress_enabled: cfg.compress.enabled(),
                 recompute_secs: 0.0,
                 swap_transfer_secs: 0.0,
                 swap_exposed_secs: 0.0,
@@ -701,6 +839,9 @@ pub fn roam_plan_hybrid(g: &Graph, spec: BudgetSpec, cfg: &HybridCfg) -> HybridP
             recompute_bytes: 0,
             swapped: 0,
             swap_moved_bytes: 0,
+            compressed: 0,
+            compress_saved_bytes: 0,
+            compress_secs: 0.0,
             recompute_secs: 0.0,
             swap_exposed_secs: 0.0,
             exposed_secs_before_slide: 0.0,
@@ -736,6 +877,10 @@ pub fn roam_plan_hybrid(g: &Graph, spec: BudgetSpec, cfg: &HybridCfg) -> HybridP
                 rounds: n_rounds,
                 swapped: r.swapped,
                 swap_moved_bytes: 2 * r.swap_bytes,
+                compressed: r.compressed,
+                compress_saved_bytes: r.compress_saved_bytes,
+                compress_secs: r.compress_secs,
+                compress_enabled: cfg.compress.enabled(),
                 recompute_secs: r.recompute_secs,
                 swap_transfer_secs: r.swap_transfer_secs,
                 swap_exposed_secs: r.swap_exposed_secs,
@@ -758,6 +903,10 @@ pub fn roam_plan_hybrid(g: &Graph, spec: BudgetSpec, cfg: &HybridCfg) -> HybridP
                 rounds: n_rounds,
                 swapped: 0,
                 swap_moved_bytes: 0,
+                compressed: 0,
+                compress_saved_bytes: 0,
+                compress_secs: 0.0,
+                compress_enabled: cfg.compress.enabled(),
                 recompute_secs: 0.0,
                 swap_transfer_secs: 0.0,
                 swap_exposed_secs: 0.0,
@@ -783,12 +932,15 @@ pub fn roam_plan_hybrid(g: &Graph, spec: BudgetSpec, cfg: &HybridCfg) -> HybridP
         met,
         exhausted,
         rounds: n_rounds,
-        evicted: c.rc_evicted + c.swapped,
+        evicted: c.rc_evicted + c.swapped + c.compressed,
         recompute_ops: c.rc_ops,
         recompute_evicted: c.rc_evicted,
         recompute_bytes: c.rc_bytes,
         swapped: c.swapped,
         swap_moved_bytes: c.swap_moved_bytes,
+        compressed: c.compressed,
+        compress_saved_bytes: c.compress_saved_bytes,
+        compress_secs: c.compress_secs,
         recompute_secs: c.recompute_secs,
         swap_exposed_secs: c.swap_exposed_secs,
         exposed_secs_before_slide: c.exposed_before_slide,
@@ -821,6 +973,12 @@ pub struct HybridSweepPoint {
     pub swapped: usize,
     /// Bytes crossing the modeled link, out + in.
     pub swap_moved_bytes: u64,
+    /// `Compress`/`Decompress` pairs inserted.
+    pub compressed: usize,
+    /// Bytes freed across the boundary by compression.
+    pub compress_saved_bytes: u64,
+    /// Codec kernel overhead in modeled seconds.
+    pub compress_secs: f64,
     /// Recompute overhead in modeled seconds.
     pub recompute_secs: f64,
     /// Un-hidden transfer seconds.
@@ -895,6 +1053,9 @@ pub fn hybrid_tradeoff_sweep(g: &Graph, fractions: &[f64], cfg: &HybridCfg) -> H
                     recompute_bytes: r.rc_bytes,
                     swapped: r.swapped,
                     swap_moved_bytes: 2 * r.swap_bytes,
+                    compressed: r.compressed,
+                    compress_saved_bytes: r.compress_saved_bytes,
+                    compress_secs: r.compress_secs,
                     recompute_secs: r.recompute_secs,
                     swap_exposed_secs: r.swap_exposed_secs,
                     exposed_secs_before_slide: r.exposed_before_slide,
@@ -911,6 +1072,9 @@ pub fn hybrid_tradeoff_sweep(g: &Graph, fractions: &[f64], cfg: &HybridCfg) -> H
                     recompute_bytes: 0,
                     swapped: 0,
                     swap_moved_bytes: 0,
+                    compressed: 0,
+                    compress_saved_bytes: 0,
+                    compress_secs: 0.0,
                     recompute_secs: 0.0,
                     swap_exposed_secs: 0.0,
                     exposed_secs_before_slide: 0.0,
@@ -946,11 +1110,42 @@ mod tests {
 
     #[test]
     fn technique_names_roundtrip() {
-        for t in [Technique::Recompute, Technique::Swap, Technique::Hybrid] {
+        for t in [
+            Technique::Recompute,
+            Technique::Swap,
+            Technique::Compress,
+            Technique::Hybrid,
+        ] {
             assert_eq!(Technique::from_name(t.name()), Some(t));
         }
         assert_eq!(Technique::from_name("rc"), Some(Technique::Recompute));
+        assert_eq!(Technique::from_name("cp"), Some(Technique::Compress));
         assert_eq!(Technique::from_name("nope"), None);
+    }
+
+    #[test]
+    fn cheaper_is_three_way_and_degrades_to_two_way_when_disabled() {
+        let c = |rc: f64, sw: f64, cp: f64| PricedCandidate {
+            unit: Candidate {
+                tensors: vec![0],
+                saved: 100,
+                cost: 100,
+                at_peak: false,
+            },
+            recompute_secs: rc,
+            swap_transfer_secs: sw,
+            swap_exposed_secs: sw,
+            compress_secs: cp,
+            compress_saved: 50,
+        };
+        // Disabled codec (infinite secs): historical two-way choice.
+        assert_eq!(c(1.0, 2.0, f64::INFINITY).cheaper(), Technique::Recompute);
+        assert_eq!(c(2.0, 1.0, f64::INFINITY).cheaper(), Technique::Swap);
+        assert_eq!(c(1.0, 1.0, f64::INFINITY).cheaper(), Technique::Swap); // tie → swap
+        // Enabled codec wins only on strictly lower overhead.
+        assert_eq!(c(1.0, 2.0, 0.5).cheaper(), Technique::Compress);
+        assert_eq!(c(1.0, 2.0, 1.0).cheaper(), Technique::Recompute); // tie → not compress
+        assert_eq!(c(2.0, 1.0, 3.0).cheaper(), Technique::Swap);
     }
 
     #[test]
@@ -972,6 +1167,8 @@ mod tests {
             recompute_secs: 0.0,
             swap_transfer_secs: 0.0,
             swap_exposed_secs: 0.0,
+            compress_secs: f64::INFINITY,
+            compress_saved: 0,
         };
         let cands = vec![c(100), c(50), c(10)];
         assert_eq!(prefix_for_gap(&cands, 1), 1);
@@ -985,7 +1182,12 @@ mod tests {
     #[test]
     fn loose_budget_returns_baseline_for_every_technique() {
         let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
-        for t in [Technique::Recompute, Technique::Swap, Technique::Hybrid] {
+        for t in [
+            Technique::Recompute,
+            Technique::Swap,
+            Technique::Compress,
+            Technique::Hybrid,
+        ] {
             let r = roam_plan_hybrid(&g, BudgetSpec::Fraction(1.0), &quick_cfg(t));
             assert!(r.met);
             assert_eq!(r.rounds, 0);
@@ -1024,6 +1226,43 @@ mod tests {
         assert!((r.swap_exposed_secs - r.exposed_secs_after_slide).abs() < 1e-9);
         assert!(crate::graph::topo::is_topological(&r.graph, &r.plan.order));
         assert!(crate::graph::validate::validate(&r.graph).is_empty());
+    }
+
+    #[test]
+    fn pure_compress_tightens_vit_without_rc_or_swap_ops() {
+        let g = models::build(ModelKind::Vit, &BuildCfg::default());
+        let mut cfg = quick_cfg(Technique::Compress);
+        cfg.compress = CompressModel::lossless();
+        let r = roam_plan_hybrid(&g, BudgetSpec::Fraction(0.9), &cfg);
+        assert!(r.total() <= r.baseline_total);
+        assert_eq!(r.recompute_ops, 0, "pure compress must not clone ops");
+        assert_eq!(r.swapped, 0, "pure compress must not insert swaps");
+        if r.met {
+            assert!(r.compressed > 0);
+            assert!(r.compress_saved_bytes > 0);
+            assert!(r.compress_secs > 0.0 && r.compress_secs.is_finite());
+            assert!(r.plan.planner.ends_with("+cp"));
+        }
+        assert!(crate::graph::topo::is_topological(&r.graph, &r.plan.order));
+        assert!(crate::graph::validate::validate(&r.graph).is_empty());
+    }
+
+    #[test]
+    fn pure_compress_with_disabled_table_runs_no_rounds() {
+        let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
+        let r = roam_plan_hybrid(
+            &g,
+            BudgetSpec::Fraction(0.5),
+            &quick_cfg(Technique::Compress),
+        );
+        // No codec table → nothing to escalate with; the driver falls
+        // back to the baseline and reports the budget honestly unmet.
+        assert_eq!(r.rounds, 0);
+        assert_eq!(r.compressed, 0);
+        assert!(!r.met);
+        assert_eq!(r.graph.n_ops(), g.n_ops());
+        // And no compress stat keys leak into the disabled-path output.
+        assert!(!r.plan.stats.iter().any(|(k, _)| k.starts_with("compress_")));
     }
 
     #[test]

@@ -28,10 +28,14 @@
 //! * [`swap`] — bandwidth-aware CPU/NVMe offloading: `SwapOut`/`SwapIn`
 //!   pairs priced by a modeled PCIe link, with transfer time hidden
 //!   under the compute window the schedule provides;
-//! * [`hybrid::roam_plan_hybrid`] — per-tensor recompute-vs-swap by
-//!   cheapest overhead, re-running the full ROAM order+layout pipeline
-//!   on every augmented graph — the paper's "reduce overheads from
-//!   high-level techniques" claim, made end-to-end.
+//! * [`compress`] — in-place tensor compression: `Compress`/`Decompress`
+//!   pairs shrinking resident activations with a pluggable per-class
+//!   codec table, priced in pure codec seconds (no link, no re-execution);
+//! * [`hybrid::roam_plan_hybrid`] — per-tensor technique assignment by
+//!   cheapest overhead across all three, re-running the full ROAM
+//!   order+layout pipeline on every augmented graph — the paper's
+//!   "reduce overheads from high-level techniques" claim, made
+//!   end-to-end.
 //!
 //! Around the planner sits a **serving layer** ([`serve`]): a
 //! content-addressed plan cache keyed by an isomorphism-invariant graph
@@ -69,6 +73,7 @@
 //! ```
 
 pub mod benchkit;
+pub mod compress;
 #[cfg(feature = "pjrt")]
 pub mod coordinator;
 pub mod evict;

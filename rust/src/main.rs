@@ -4,9 +4,11 @@
 //! roam optimize  --model bert --batch 32 [--planner roam-ss|roam-ms|pytorch|heuristic|model-ms|model-ss]
 //!                [--node-limit 64] [--delay-radius 2.0] [--time-limit 60] [--out plan.json]
 //! roam recompute --model gpt2 --budget 0.6 [--budget-bytes N] [--strategy greedy|segment]
-//! roam swap      --model gpt2 --budget 0.6 [--technique swap|recompute|hybrid]
+//! roam swap      --model gpt2 --budget 0.6 [--technique swap|recompute|compress|hybrid]
 //!                [--pcie-gbps 16] [--pcie-latency-us 10] [--compute-gbps 800]
 //!                [--swap-lambda BYTES_PER_SEC] [--no-slide]
+//! roam compress  --model gpt2 --budget 0.6 [--codec-table CLASS:RATIO:CGBPS:DGBPS,...]
+//!                [--codec-ratio 0.5] [--compress-gbps 100] [--decompress-gbps 200]
 //! roam plan-hlo  --hlo artifacts/train_step.hlo.txt [--out plan.json]
 //! roam train     [--artifacts artifacts] [--steps 200] [--log-every 10] [--seed 0]
 //! roam compare   --model vit --batch 1 [--budget 0.6]   # all planners side by side
@@ -29,6 +31,7 @@
 //! `roam::faults`).
 
 use roam::benchkit::{mib, reduction_pct};
+use roam::compress::CompressModel;
 use roam::hybrid::{roam_plan_hybrid, HybridCfg, Technique};
 use roam::models::{self, BuildCfg, ModelKind, Optim};
 use roam::planner::model_baseline::{model_plan, ModelCfg, Streaming};
@@ -72,6 +75,7 @@ fn main() {
         "optimize" | "plan" => cmd_optimize(&args),
         "recompute" => cmd_recompute(&args),
         "swap" => cmd_swap(&args),
+        "compress" => cmd_compress(&args),
         "plan-hlo" => cmd_plan_hlo(&args),
         "train" => cmd_train(&args),
         "compare" => cmd_compare(&args),
@@ -112,16 +116,23 @@ fn print_help() {
          \x20             (--model, --budget FRACTION | --budget-bytes N,\n\
          \x20              --strategy greedy|segment)\n\
          \x20 swap        plan under a hard memory budget via bandwidth-aware\n\
-         \x20             offloading (--budget F, --technique swap|recompute|hybrid,\n\
+         \x20             offloading (--budget F, --technique\n\
+         \x20              swap|recompute|compress|hybrid,\n\
          \x20              --pcie-gbps 16 --pcie-latency-us 10 --compute-gbps 800,\n\
          \x20              --swap-lambda λ orders for peak + λ·exposed-seconds,\n\
          \x20              --no-slide disables the SwapOut/SwapIn slide pass)\n\
+         \x20 compress    plan under a hard memory budget via in-place tensor\n\
+         \x20             compression (--budget F; codec table via\n\
+         \x20              --codec-table CLASS:RATIO:CGBPS:DGBPS[,...] or\n\
+         \x20              --codec-ratio 0.5 --compress-gbps 100\n\
+         \x20              --decompress-gbps 200; defaults to the lossless\n\
+         \x20              activation codec when no codec flag is given)\n\
          \x20 plan-hlo    plan a JAX-lowered HLO file (--hlo PATH)\n\
          \x20 train       end-to-end training via PJRT (--artifacts DIR, --steps N;\n\
          \x20             requires building with --features pjrt)\n\
          \x20 compare     run all planners on one model and tabulate\n\
          \x20             (--budget F adds a budgeted row; --technique picks\n\
-         \x20              recompute|swap|hybrid for it)\n\
+         \x20              recompute|swap|compress|hybrid for it)\n\
          \x20 serve       planning service: JSONL requests on stdin, one\n\
          \x20             response line each; a blank line flushes a batch\n\
          \x20             (single-flight dedupe + cache within/across batches).\n\
@@ -321,15 +332,27 @@ fn roam_cfg(args: &Args) -> RoamCfg {
 
 fn hybrid_cfg(args: &Args, default_technique: Technique) -> Result<HybridCfg> {
     let tname = args.get("technique", default_technique.name());
-    let technique = Technique::from_name(&tname)
-        .ok_or_else(|| roam::err!("unknown technique '{tname}' (recompute|swap|hybrid)"))?;
+    let technique = Technique::from_name(&tname).ok_or_else(|| {
+        roam::err!("unknown technique '{tname}' (recompute|swap|compress|hybrid)")
+    })?;
     let sname = args.get("strategy", "greedy");
     let strategy = Strategy::from_name(&sname)
         .ok_or_else(|| roam::err!("unknown strategy '{sname}' (greedy|segment)"))?;
+    // Codec table from --codec-table / --codec-ratio / --compress-gbps /
+    // --decompress-gbps; disabled (empty) when none of them is given.
+    // A compress-capable technique with no codec flags gets the default
+    // lossless activation codec — `roam compress` with no flags must
+    // actually compress, and `--technique compress` on `roam swap` /
+    // `roam compare` likewise.
+    let mut compress = CompressModel::from_args(args).map_err(|e| roam::err!("{e}"))?;
+    if !compress.enabled() && technique == Technique::Compress {
+        compress = CompressModel::lossless();
+    }
     Ok(HybridCfg {
         technique,
         strategy,
         cost: CostModel::from_args(args),
+        compress,
         roam: roam_cfg(args),
         max_rounds: args.usize("max-rounds", 12),
         // Overlap-aware ordering: λ bytes per exposed second (0 = off).
@@ -374,6 +397,75 @@ fn cmd_swap(args: &Args) -> Result<()> {
         human_bytes(r.recompute_bytes),
         r.recompute_secs * 1e3,
     );
+    if r.compressed > 0 {
+        println!(
+            "  compress         : {} tensors, {} freed ({}), {:.3} ms codec",
+            r.compressed,
+            r.compress_saved_bytes,
+            human_bytes(r.compress_saved_bytes),
+            r.compress_secs * 1e3,
+        );
+    }
+    println!(
+        "  overhead         : {:.3} ms modeled ({} evicted, {} rounds)",
+        r.overhead_secs() * 1e3,
+        r.evicted,
+        r.rounds
+    );
+    print_plan(&r.graph, &r.plan);
+    maybe_write(args, &r.plan)
+}
+
+/// `roam compress`: the pure-compression specialisation of the hybrid
+/// driver. With no codec flags, `hybrid_cfg` substitutes the default
+/// lossless activation codec so the command works out of the box;
+/// `--technique` still allows comparing against the other techniques
+/// under identical flags.
+fn cmd_compress(args: &Args) -> Result<()> {
+    let g = build_graph(args)?;
+    let spec = budget_spec(args)?;
+    let cfg = hybrid_cfg(args, Technique::Compress)?;
+    let r = roam_plan_hybrid(&g, spec, &cfg);
+    println!(
+        "budget {} ({})  baseline total {} ({})  technique {}",
+        r.budget,
+        human_bytes(r.budget),
+        r.baseline_total,
+        human_bytes(r.baseline_total),
+        cfg.technique.name(),
+    );
+    println!(
+        "  achieved total   : {:>12}  ({}, {:.1}% of baseline) — budget {}",
+        r.total(),
+        human_bytes(r.total()),
+        100.0 * r.total() as f64 / r.baseline_total.max(1) as f64,
+        if r.met { "MET" } else { "NOT met" }
+    );
+    println!(
+        "  compress         : {} tensors, {} freed ({}), {:.3} ms codec",
+        r.compressed,
+        r.compress_saved_bytes,
+        human_bytes(r.compress_saved_bytes),
+        r.compress_secs * 1e3,
+    );
+    if r.swapped > 0 {
+        println!(
+            "  swap             : {} tensors, {} moved ({}), {:.3} ms exposed",
+            r.swapped,
+            r.swap_moved_bytes,
+            human_bytes(r.swap_moved_bytes),
+            r.swap_exposed_secs * 1e3,
+        );
+    }
+    if r.recompute_ops > 0 {
+        println!(
+            "  recompute        : {} ops, {} extra bytes ({}), {:.3} ms",
+            r.recompute_ops,
+            r.recompute_bytes,
+            human_bytes(r.recompute_bytes),
+            r.recompute_secs * 1e3,
+        );
+    }
     println!(
         "  overhead         : {:.3} ms modeled ({} evicted, {} rounds)",
         r.overhead_secs() * 1e3,

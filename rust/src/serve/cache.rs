@@ -19,6 +19,10 @@
 //! consults the directory before giving up, so a service restart — or a
 //! sibling process sharing the directory — reuses earlier work. Disk
 //! errors are deliberately non-fatal: the cache degrades to memory-only.
+//! Sibling processes additionally coordinate cold-key planning through
+//! [`PlanCache::lock_key`] — a per-key advisory lockfile with
+//! stale-takeover — so two `roam serve` instances sharing a `--cache-dir`
+//! plan each cold key once, not twice.
 //!
 //! **Crash safety.** Each entry is committed atomically — written to
 //! `<key>.json.tmp`, fsync'd, then renamed over the final name — and
@@ -257,6 +261,34 @@ pub struct RecoverReport {
     pub tmp_removed: usize,
 }
 
+/// RAII guard for a held per-key planning lock: the create-exclusive
+/// sentinel `<dir>/<key as hex>.lock`, removed on drop (including the
+/// unwind path — a panicking planner must not wedge the key forever;
+/// crashed *processes* are covered by stale-mtime takeover instead).
+#[derive(Debug)]
+pub struct PlanLock {
+    path: PathBuf,
+}
+
+impl Drop for PlanLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Outcome of [`PlanCache::lock_key`].
+#[derive(Debug)]
+pub enum KeyLock {
+    /// This process won the planning right for the key: plan, `put`, then
+    /// drop the guard.
+    Acquired(PlanLock),
+    /// Another process planned the key while we waited — serve its plan.
+    Ready(CachedPlan),
+    /// Nothing to coordinate (no persistence directory, or lock file
+    /// creation failed with a real I/O error): plan without dedupe.
+    Uncontended,
+}
+
 struct Entry {
     plan: CachedPlan,
     stamp: u64,
@@ -398,6 +430,72 @@ impl PlanCache {
         }
     }
 
+    /// Cross-process single-flight for a cold key, built on a per-key
+    /// advisory lockfile in the shared persistence directory.
+    ///
+    /// The winner creates `<dir>/<key>.lock` with `create_new` (atomic on
+    /// every platform the cache supports) and gets
+    /// [`KeyLock::Acquired`]; it plans, [`PlanCache::put`]s, and drops
+    /// the guard. A loser polls: each round it first re-reads the disk
+    /// store — if the winner has committed, it returns
+    /// [`KeyLock::Ready`] with that plan and never plans at all. A lock
+    /// whose mtime is older than `stale_after` belongs to a crashed
+    /// process and is taken over (removed, then re-raced — `create_new`
+    /// arbitrates when several takers collide); a holder still alive past
+    /// `max_wait` is treated the same, trading a duplicate plan for a
+    /// bounded wait. Without a persistence directory there is no shared
+    /// medium and no duplication to prevent: [`KeyLock::Uncontended`].
+    pub fn lock_key(
+        &self,
+        key: u128,
+        max_wait: std::time::Duration,
+        stale_after: std::time::Duration,
+    ) -> KeyLock {
+        let Some(dir) = self.cfg.dir.as_ref() else {
+            return KeyLock::Uncontended;
+        };
+        let path = dir.join(format!("{}.lock", hex128(key)));
+        let deadline = std::time::Instant::now() + max_wait;
+        loop {
+            match std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(&path)
+            {
+                Ok(_) => {
+                    // Double-check under the lock: a sibling may have
+                    // committed the key between our cache miss and this
+                    // acquire (its guard drop races our create_new).
+                    let guard = PlanLock { path };
+                    if let Some(p) = self.load_from_disk(key) {
+                        self.stats.disk_hits.fetch_add(1, Ordering::Relaxed);
+                        return KeyLock::Ready(p);
+                    }
+                    return KeyLock::Acquired(guard);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    if let Some(p) = self.load_from_disk(key) {
+                        self.stats.disk_hits.fetch_add(1, Ordering::Relaxed);
+                        return KeyLock::Ready(p);
+                    }
+                    // A lock we cannot stat vanished under us — that
+                    // counts as stale and the retry will re-race it.
+                    let stale = std::fs::metadata(&path)
+                        .and_then(|m| m.modified())
+                        .ok()
+                        .and_then(|t| t.elapsed().ok())
+                        .is_none_or(|age| age > stale_after);
+                    if stale || std::time::Instant::now() >= deadline {
+                        let _ = std::fs::remove_file(&path);
+                        continue;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                Err(_) => return KeyLock::Uncontended,
+            }
+        }
+    }
+
     /// Full-key lookup: memory, then disk. Counts a hit/disk-hit/miss.
     pub fn get(&self, key: u128) -> Option<CachedPlan> {
         if let Some(p) = self.peek(key) {
@@ -504,7 +602,12 @@ impl PlanCache {
         let res: Result<(), String> = if crate::faults::maybe_fail("cache_disk_write").is_err() {
             Err("injected fault".to_string())
         } else {
-            write_atomic(&tmp, path, encode_entry(plan).as_bytes()).map_err(|e| e.to_string())
+            // A `corrupt` rule flips one byte of the encoded entry before
+            // it hits disk — the checksum header catches it on read and
+            // routes the entry to quarantine (pinned by fault_props).
+            let mut bytes = encode_entry(plan).into_bytes();
+            crate::faults::maybe_corrupt("cache_disk_write", &mut bytes);
+            write_atomic(&tmp, path, &bytes).map_err(|e| e.to_string())
         };
         if let Err(why) = res {
             self.stats.disk_write_errors.fetch_add(1, Ordering::Relaxed);

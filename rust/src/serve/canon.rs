@@ -327,6 +327,7 @@ pub fn cfg_key(roam: &RoamCfg, budget: Option<BudgetSpec>, technique: Technique)
         Technique::Recompute => 1u64,
         Technique::Swap => 2,
         Technique::Hybrid => 3,
+        Technique::Compress => 4,
     };
     // The technique only matters for budgeted requests.
     mix2(h, if budget.is_some() { ttag } else { 0 })

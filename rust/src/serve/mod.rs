@@ -15,7 +15,8 @@
 //!   are id-free and permuted node numberings collide onto one entry;
 //! * [`cache`] — a sharded in-memory LRU of plan artifacts with
 //!   hit/miss/evict/insert counters and optional disk persistence
-//!   through `util/json`;
+//!   through `util/json`, plus per-key advisory lockfiles that extend
+//!   single-flight across processes sharing the directory;
 //! * [`service`] — batch execution: identical fingerprints in a batch
 //!   are answered by one planning job (single-flight dedupe), distinct
 //!   ones fan out over the shared worker pool with per-request deadlines
@@ -37,7 +38,7 @@ pub mod canon;
 pub mod service;
 pub mod warm;
 
-pub use cache::{CacheCfg, CachedPlan, PlanCache, RecoverReport};
+pub use cache::{CacheCfg, CachedPlan, KeyLock, PlanCache, PlanLock, RecoverReport};
 pub use canon::{canonize, cfg_key, with_cfg, Canon, Fingerprint};
 pub use service::{
     error_json, request_from_json, request_from_line, response_to_json, summary_json, Outcome,

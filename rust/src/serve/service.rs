@@ -22,6 +22,12 @@
 //! 4. fresh lint-clean plans are inserted into the cache (canonical
 //!    coordinates, optional disk persistence).
 //!
+//! Single-flight extends **across processes** when a persistence
+//! directory is shared: before cold-planning, a job takes the per-key
+//! advisory lockfile ([`PlanCache::lock_key`]); a sibling `roam serve`
+//! already planning the same key makes this one wait (bounded) and serve
+//! the sibling's committed plan instead of planning it twice.
+//!
 //! Budgeted requests (`budget` + technique) run the hybrid driver and are
 //! cached/deduped like plain ones; warm-start seeding currently applies
 //! to plain requests only (the hybrid driver re-plans internally many
@@ -50,7 +56,7 @@
 //! immediately with `Outcome::Rejected` + an error message rather than
 //! queueing into a pile-up.
 
-use super::cache::PlanCache;
+use super::cache::{KeyLock, PlanCache};
 use super::canon::{canonize, cfg_key, with_cfg};
 use super::warm;
 use crate::graph::Graph;
@@ -207,6 +213,15 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
         "non-string panic payload"
     }
 }
+
+/// Bound on waiting for a sibling process's per-key planning lock
+/// (additionally capped at half the remaining request deadline). Past
+/// it the lock is taken over: a duplicate plan beats an unbounded wait.
+const LOCK_MAX_WAIT: std::time::Duration = std::time::Duration::from_secs(10);
+
+/// A per-key lock file whose mtime is older than this belongs to a
+/// crashed process and is taken over immediately.
+const LOCK_STALE_AFTER: std::time::Duration = std::time::Duration::from_secs(60);
 
 /// The result of one exact-planning attempt (ladder rungs 1–2).
 struct Attempt {
@@ -538,6 +553,56 @@ impl PlanService {
             }
         }
 
+        // Cross-process single-flight: with a shared persistence
+        // directory, take the per-key advisory lock before planning
+        // cold. A sibling process already planning this key means we
+        // wait (bounded by half the remaining deadline) and serve its
+        // committed plan instead of planning it a second time. The lock
+        // guard, if any, is held until this function returns — i.e.
+        // across the `put` below. Panic-isolated like the cache lookup
+        // (the lock path reads the disk store, which has failpoints).
+        let lock_wait = match deadline.remaining() {
+            Some(rem) => LOCK_MAX_WAIT.min(rem / 2),
+            None => LOCK_MAX_WAIT,
+        };
+        let lock = catch_unwind(AssertUnwindSafe(|| {
+            self.cache.lock_key(fp.key, lock_wait, LOCK_STALE_AFTER)
+        }))
+        .unwrap_or_else(|payload| {
+            crate::log_warn!(
+                "plan-key lock acquisition panicked ({}); planning without dedupe",
+                panic_message(&*payload)
+            );
+            KeyLock::Uncontended
+        });
+        let _key_lock = match lock {
+            KeyLock::Ready(cp) => {
+                match warm::replay_plan(g, canon, &cp) {
+                    Some(plan) => {
+                        self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+                        let lint_ok = lint_plan(g, &plan).is_empty();
+                        sp.arg_str("outcome", Outcome::CacheHit.name());
+                        return PlanResponse {
+                            key: fp.key,
+                            outcome: Outcome::CacheHit,
+                            plan,
+                            lint_ok,
+                            secs: sw.secs(),
+                            error: None,
+                        };
+                    }
+                    None => {
+                        self.stats
+                            .translate_failures
+                            .fetch_add(1, Ordering::Relaxed);
+                        None
+                    }
+                }
+            }
+            KeyLock::Acquired(guard) => Some(guard),
+            KeyLock::Uncontended => None,
+        };
+
         // One exact-planning attempt (ladder rungs 1–2), panic-isolated.
         // The `serve_plan` failpoint and the planner both run inside the
         // `catch_unwind` so injected panics and real planner panics walk
@@ -819,14 +884,36 @@ pub fn summary_json(svc: &PlanService) -> Json {
                 .collect(),
         )
     };
-    Json::obj(vec![(
-        "summary",
-        Json::obj(vec![
-            ("service", counters(svc.stats().snapshot())),
-            ("cache", counters(svc.cache().stats().snapshot())),
-            ("cache_len", Json::Num(svc.cache().len() as f64)),
-        ]),
-    )])
+    let mut fields = vec![
+        ("service", counters(svc.stats().snapshot())),
+        ("cache", counters(svc.cache().stats().snapshot())),
+        ("cache_len", Json::Num(svc.cache().len() as f64)),
+    ];
+    // With faults armed, surface the per-failpoint hit/fired counters:
+    // chaos harnesses gate on these deterministic counts (e.g. "did
+    // serve_plan actually fire?") instead of on downstream effects that
+    // a probabilistic spec only probably produces. Faults-off summaries
+    // stay byte-identical to the pre-faults shape.
+    if crate::faults::armed() {
+        fields.push((
+            "faults",
+            Json::Obj(
+                crate::faults::snapshot()
+                    .into_iter()
+                    .map(|(name, hits, fired)| {
+                        (
+                            name,
+                            Json::obj(vec![
+                                ("hits", Json::Num(hits as f64)),
+                                ("fired", Json::Num(fired as f64)),
+                            ]),
+                        )
+                    })
+                    .collect(),
+            ),
+        ));
+    }
+    Json::obj(vec![("summary", Json::obj(fields))])
 }
 
 #[cfg(test)]

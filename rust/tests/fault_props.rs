@@ -2,7 +2,9 @@
 //! and the resilience paths it exercises: deterministic fault decisions
 //! under a pinned seed, panic-isolated pools, the serve degradation
 //! ladder, crash-safe cache entries under truncation at every byte
-//! offset, and the two invariants the subsystem must never break —
+//! offset and under injected bit-flips (`corrupt` rules flip one seeded
+//! payload byte before the write commits), and the two invariants the
+//! subsystem must never break —
 //! faults-off plan output is byte-identical (and near-free), and under
 //! faults at every registered failpoint each response is either a
 //! lint-clean plan or a well-formed error object while the process
@@ -241,6 +243,140 @@ fn cache_entry_truncated_at_every_offset_is_never_served() {
     }
     let _ = std::fs::remove_dir_all(&seed_dir);
     let _ = std::fs::remove_dir_all(&probe_dir);
+}
+
+/// `maybe_corrupt` flips exactly one byte (XOR 0xff), at an offset that
+/// replays deterministically under a pinned seed; it is a no-op when
+/// disarmed or on an empty payload.
+#[test]
+fn maybe_corrupt_flips_one_seeded_byte() {
+    let _g = guard();
+    let base: Vec<u8> = (0..64u8).collect();
+    let flipped_offset = || -> usize {
+        let _armed = Armed::new("cache_disk_write=corrupt");
+        let mut bytes = base.clone();
+        assert!(faults::maybe_corrupt("cache_disk_write", &mut bytes));
+        let diffs: Vec<usize> = (0..base.len()).filter(|&i| bytes[i] != base[i]).collect();
+        assert_eq!(diffs.len(), 1, "exactly one byte must flip: {diffs:?}");
+        assert_eq!(bytes[diffs[0]], base[diffs[0]] ^ 0xff);
+        diffs[0]
+    };
+    assert_eq!(
+        flipped_offset(),
+        flipped_offset(),
+        "same spec + seed must flip the same offset"
+    );
+    {
+        let _armed = Armed::new("cache_disk_write=corrupt");
+        let mut empty: [u8; 0] = [];
+        assert!(!faults::maybe_corrupt("cache_disk_write", &mut empty));
+    }
+    faults::disarm();
+    let mut bytes = base.clone();
+    assert!(!faults::maybe_corrupt("cache_disk_write", &mut bytes));
+    assert_eq!(bytes, base, "disarmed maybe_corrupt must not touch the payload");
+}
+
+/// A `corrupt` rule is inert at plain (payload-free) failpoints:
+/// `maybe_fail` passes without counting a hit, so arming
+/// `leaf_solve=corrupt` perturbs nothing.
+#[test]
+fn corrupt_rules_are_inert_at_plain_failpoints() {
+    let _g = guard();
+    let _armed = Armed::new("leaf_solve=corrupt");
+    for _ in 0..5 {
+        assert!(faults::maybe_fail("leaf_solve").is_ok());
+    }
+    let snap = faults::snapshot();
+    let (hits, fired) = snap
+        .iter()
+        .find(|(n, ..)| n == "leaf_solve")
+        .map(|&(_, h, f)| (h, f))
+        .expect("armed rule must appear in the snapshot");
+    assert_eq!((hits, fired), (0, 0), "inert rule must not count");
+}
+
+/// Bit-flip coverage: with `cache_disk_write=corrupt` armed, every
+/// committed cache entry reaches disk with one byte flipped. The
+/// fnv1a64 checksum catches every such entry on read — each one is
+/// quarantined and none is ever served.
+#[test]
+fn corrupted_cache_entries_are_quarantined_never_served() {
+    let _g = guard();
+    let dir = tdir("corrupt");
+    let n = 6usize;
+
+    // Round 1: serve n distinct graphs with the corrupt rule armed, so
+    // every persisted entry carries a flipped byte (the in-memory copies
+    // stay clean — responses still lint).
+    let keys: Vec<u128> = {
+        let _armed = Armed::new("cache_disk_write=corrupt");
+        let svc = PlanService::new(
+            PlanCache::new(CacheCfg {
+                capacity: 32,
+                shards: 2,
+                dir: Some(dir.clone()),
+            }),
+            ServeCfg {
+                roam: quick_roam(),
+                workers: 1,
+                ..Default::default()
+            },
+        );
+        let reqs: Vec<PlanRequest> = (0..n)
+            .map(|i| PlanRequest::plain(graph_of(400 + i as u64, 4 + i % 3)))
+            .collect();
+        let rs = svc.serve_batch(&reqs);
+        for r in &rs {
+            assert!(r.error.is_none() && r.lint_ok, "{:?}", r.outcome);
+        }
+        let (hits, fired) = faults::snapshot()
+            .iter()
+            .find(|(nm, ..)| nm == "cache_disk_write")
+            .map(|&(_, h, f)| (h, f))
+            .expect("armed rule must appear in the snapshot");
+        assert_eq!(fired, hits, "prob 1.0 must fire on every hit");
+        assert_eq!(fired, n as u64, "every persist must pass maybe_corrupt");
+        rs.iter().map(|r| r.key).collect()
+    };
+
+    // Round 2 (disarmed, fresh cache over the same dir): every flipped
+    // entry must fail its checksum, be quarantined, and never be served.
+    let cache = PlanCache::new(CacheCfg {
+        capacity: 32,
+        shards: 2,
+        dir: Some(dir.clone()),
+    });
+    for &key in &keys {
+        assert!(
+            cache.get(key).is_none(),
+            "corrupted entry {key:032x} must never be served"
+        );
+    }
+    let quarantined = cache
+        .stats()
+        .snapshot()
+        .into_iter()
+        .find(|(k, _)| *k == "quarantined")
+        .map(|(_, v)| v)
+        .unwrap_or(0);
+    assert_eq!(quarantined, n as u64, "every corrupted entry must quarantine");
+    let leftover: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
+        .collect();
+    assert!(
+        leftover.is_empty(),
+        "corrupted entries must leave the serving dir: {leftover:?}"
+    );
+    let qdir = dir.join("quarantine");
+    assert_eq!(
+        std::fs::read_dir(&qdir).map(|d| d.count()).unwrap_or(0),
+        n,
+        "all {n} flipped files must land in quarantine/"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// The chaos invariant: with faults armed at EVERY registered failpoint

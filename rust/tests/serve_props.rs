@@ -1,7 +1,9 @@
 //! Property + integration tests for the serving layer (`serve/`): cache
 //! determinism (same graph twice ⇒ byte-identical cached artifact and a
 //! recorded hit), fingerprint invariance under node-id permutation,
-//! batch single-flight dedupe, deadline degradation, and warm-started
+//! batch single-flight dedupe, deadline degradation, cross-process
+//! single-flight through the per-key advisory lockfile (winner plans,
+//! loser waits-then-reads; stale locks are taken over), and warm-started
 //! re-planning validity (lint-clean, never above the cold plan's peak)
 //! on the transformer and mobile workloads.
 
@@ -9,7 +11,9 @@ use roam::graph::random::{random_training_graph, RandomGraphCfg};
 use roam::graph::{Graph, OpId, TensorClass};
 use roam::models::{self, BuildCfg, ModelKind};
 use roam::planner::{assert_plan_ok, roam_plan, RoamCfg};
-use roam::serve::{canonize, CacheCfg, Outcome, PlanCache, PlanRequest, PlanService, ServeCfg};
+use roam::serve::{
+    canonize, CacheCfg, KeyLock, Outcome, PlanCache, PlanRequest, PlanService, ServeCfg,
+};
 use roam::util::quick::forall;
 use roam::util::Pcg64;
 use std::collections::HashMap;
@@ -235,6 +239,167 @@ fn expired_deadline_degrades_to_heuristic_not_a_stall() {
     assert_plan_ok(&g, &rs[0].plan);
     let s: HashMap<_, _> = svc.stats().snapshot().into_iter().collect();
     assert_eq!(s["degraded"], 1);
+}
+
+fn tdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("roam_serve_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// The per-key lockfile protocol on the raw cache API: the winner
+/// acquires; a contender with the key still unplanned times out and
+/// takes the lock over; a contender arriving after the winner committed
+/// gets the committed plan (`Ready`) without planning; a stale lock
+/// (crashed holder) is taken over immediately; dropping the guard
+/// releases the key; and without a persistence directory the whole
+/// mechanism reports `Uncontended`.
+#[test]
+fn per_key_lockfile_winner_then_ready_then_stale_takeover() {
+    use std::time::Duration;
+    let dir = tdir("lockfile");
+    let cache = PlanCache::new(CacheCfg {
+        capacity: 8,
+        shards: 1,
+        dir: Some(dir.clone()),
+    });
+    let key = 0xABCDu128;
+    let max_wait = Duration::from_millis(80);
+    let fresh = Duration::from_secs(60);
+
+    // Winner acquires; the lock file exists while the guard lives.
+    let guard = match cache.lock_key(key, max_wait, fresh) {
+        KeyLock::Acquired(g) => g,
+        other => panic!("first lock_key must acquire, got {other:?}"),
+    };
+    let lock_path = dir.join(format!("{key:032x}.lock"));
+    assert!(lock_path.exists(), "acquire must create the sentinel");
+
+    // A contender with the key still unplanned waits out max_wait, then
+    // takes the lock over (bounded wait beats never answering).
+    let t = std::time::Instant::now();
+    match cache.lock_key(key, max_wait, fresh) {
+        KeyLock::Acquired(g2) => drop(g2),
+        other => panic!("timed-out contender must take over, got {other:?}"),
+    }
+    assert!(
+        t.elapsed() >= max_wait,
+        "takeover must wait out max_wait first"
+    );
+    // The takeover stole the sentinel; re-create the winner's state.
+    drop(guard);
+    let guard = match cache.lock_key(key, max_wait, fresh) {
+        KeyLock::Acquired(g) => g,
+        other => panic!("re-acquire must succeed, got {other:?}"),
+    };
+
+    // Once the winner commits the plan, a contender goes `Ready` without
+    // waiting for the lock to clear.
+    let plan = roam::serve::CachedPlan {
+        key,
+        shape: 1,
+        n_ops: 0,
+        n_tensors: 0,
+        order: Vec::new(),
+        offsets: Vec::new(),
+        planner: "test".to_string(),
+    };
+    cache.put(plan.clone());
+    match cache.lock_key(key, max_wait, fresh) {
+        KeyLock::Ready(p) => assert_eq!(p.key, key),
+        other => panic!("contender after commit must read, got {other:?}"),
+    }
+    drop(guard);
+    assert!(!lock_path.exists(), "dropping the guard must remove the lock");
+
+    // Stale takeover: a lock file left by a crashed process (any age,
+    // with stale_after zero) is removed and re-raced immediately.
+    let key2 = 0xEF01u128;
+    std::fs::write(dir.join(format!("{key2:032x}.lock")), b"").unwrap();
+    let t = std::time::Instant::now();
+    match cache.lock_key(key2, Duration::from_secs(30), Duration::ZERO) {
+        KeyLock::Acquired(g) => drop(g),
+        other => panic!("stale lock must be taken over, got {other:?}"),
+    }
+    assert!(
+        t.elapsed() < Duration::from_secs(5),
+        "stale takeover must not wait out max_wait"
+    );
+
+    // No persistence directory ⇒ nothing to coordinate.
+    let mem_only = PlanCache::new(CacheCfg {
+        capacity: 8,
+        shards: 1,
+        dir: None,
+    });
+    assert!(matches!(
+        mem_only.lock_key(key, max_wait, fresh),
+        KeyLock::Uncontended
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Cross-process single-flight end to end: two service instances (two
+/// in-memory caches, i.e. two simulated `roam serve` processes) share
+/// one cache directory and race the same cold key. Exactly one plans it
+/// cold; the other serves the winner's committed plan as a cache hit —
+/// never a second cold plan of the same key.
+#[test]
+fn two_processes_sharing_a_cache_dir_plan_a_cold_key_once() {
+    let dir = tdir("two_proc");
+    let mk_service = || {
+        PlanService::new(
+            PlanCache::new(CacheCfg {
+                capacity: 8,
+                shards: 1,
+                dir: Some(dir.clone()),
+            }),
+            ServeCfg {
+                roam: quick_roam(),
+                workers: 1,
+                ..Default::default()
+            },
+        )
+    };
+    let svc_a = mk_service();
+    let svc_b = mk_service();
+    let mut rng = Pcg64::new(6060);
+    let g = random_training_graph(&mut rng, &RandomGraphCfg {
+        fwd_ops: 8,
+        ..Default::default()
+    });
+
+    let (ra, rb) = std::thread::scope(|s| {
+        let ha = s.spawn(|| svc_a.serve_batch(&[PlanRequest::plain(g.clone())]));
+        let hb = s.spawn(|| svc_b.serve_batch(&[PlanRequest::plain(g.clone())]));
+        (ha.join().unwrap(), hb.join().unwrap())
+    });
+    assert_eq!(ra[0].key, rb[0].key);
+    for r in [&ra[0], &rb[0]] {
+        assert!(r.error.is_none() && r.lint_ok, "{:?}", r.outcome);
+    }
+    let cold = |svc: &PlanService| {
+        svc.stats()
+            .cold
+            .load(std::sync::atomic::Ordering::Relaxed)
+    };
+    assert_eq!(
+        cold(&svc_a) + cold(&svc_b),
+        1,
+        "the shared cold key must be planned exactly once across processes \
+         (outcomes: {:?} / {:?})",
+        ra[0].outcome,
+        rb[0].outcome
+    );
+    // Both plans answer the same key with identical content.
+    assert_eq!(ra[0].plan.order, rb[0].plan.order);
+    assert!(
+        !dir.read_dir().unwrap().any(|e| {
+            e.unwrap().path().extension().is_some_and(|x| x == "lock")
+        }),
+        "no lock file may outlive the batch"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// Warm-start acceptance on the transformer and mobile workloads: plan a
