@@ -13,11 +13,18 @@ a clobbered placeholder, a bench silently writing the old single-run
 shape — instead of letting CI upload malformed trajectories.
 
 Usage:
-    bench_schema_check.py [--allow-placeholder] FILE...
+    bench_schema_check.py [--allow-placeholder] [--cost-table FILE]...
+                          [--audit FILE]... [FILE...]
 
-Without --allow-placeholder every file must hold at least one run (the
-post-bench CI step); with it, placeholder files (note + empty runs) pass
-(the committed-state check).
+Without --allow-placeholder every trajectory file must hold at least one
+run (the post-bench CI step); with it, placeholder files (note + empty
+runs) pass (the committed-state check).
+
+--cost-table FILE validates a `roam calibrate --out` calibration table
+(schema "cost-table-v1": hex fingerprint plus entries keyed by op kind
+and byte bucket, each with count == len(samples)). --audit FILE
+validates a `roam audit --out` record (schema "audit-v1": predicted vs
+actual fields with relative drifts and the headline max_abs_rel_drift).
 """
 
 import json
@@ -140,20 +147,125 @@ def check_file(path, allow_placeholder):
     return errors
 
 
+def _load(path):
+    """(basename, parsed JSON or None, [error])."""
+    name = os.path.basename(path)
+    try:
+        with open(path) as f:
+            return name, json.load(f), []
+    except (OSError, ValueError) as e:
+        return name, None, [f"{name}: unreadable/unparseable: {e}"]
+
+
+def check_cost_table(path):
+    """Validate a `roam calibrate --out` table (obs::calib::CostTable)."""
+    name, doc, errors = _load(path)
+    if errors:
+        return errors
+    if not isinstance(doc, dict):
+        return [f"{name}: cost table is not an object"]
+    if doc.get("schema") != "cost-table-v1":
+        errors.append(f"{name}: schema {doc.get('schema')!r} != 'cost-table-v1'")
+    fp = doc.get("fingerprint")
+    try:
+        int(fp, 16)
+    except (TypeError, ValueError):
+        errors.append(f"{name}: fingerprint {fp!r} is not a hex string")
+    entries = doc.get("entries")
+    if not isinstance(entries, list) or not entries:
+        return errors + [f"{name}: 'entries' missing, not a list, or empty"]
+    for i, e in enumerate(entries):
+        if not isinstance(e, dict):
+            errors.append(f"{name}: entry {i} is not an object")
+            continue
+        missing = [
+            k
+            for k in ("kind", "bucket", "count", "median_secs", "dispersion", "samples")
+            if k not in e
+        ]
+        if missing:
+            errors.append(f"{name}: entry {i} missing {missing}")
+            continue
+        if not isinstance(e["samples"], list) or e["count"] != len(e["samples"]):
+            errors.append(
+                f"{name}: entry {i} count {e['count']!r} != "
+                f"len(samples) {len(e['samples']) if isinstance(e['samples'], list) else '?'}"
+            )
+        if not isinstance(e["median_secs"], (int, float)) or e["median_secs"] < 0:
+            errors.append(f"{name}: entry {i} bad median_secs {e['median_secs']!r}")
+    return errors
+
+
+def check_audit(path):
+    """Validate a `roam audit --out` record (obs::audit::AuditRecord)."""
+    name, doc, errors = _load(path)
+    if errors:
+        return errors
+    if not isinstance(doc, dict):
+        return [f"{name}: audit record is not an object"]
+    if doc.get("schema") != "audit-v1":
+        errors.append(f"{name}: schema {doc.get('schema')!r} != 'audit-v1'")
+    if not isinstance(doc.get("calibrated"), bool):
+        errors.append(f"{name}: 'calibrated' is not a bool")
+    fp = doc.get("table_fingerprint", "absent")
+    if fp is not None and not isinstance(fp, str):
+        errors.append(f"{name}: table_fingerprint {fp!r} is neither string nor null")
+    if not isinstance(doc.get("max_abs_rel_drift"), (int, float)):
+        errors.append(f"{name}: 'max_abs_rel_drift' is not a number")
+    fields = doc.get("fields")
+    if not isinstance(fields, list) or not fields:
+        return errors + [f"{name}: 'fields' missing, not a list, or empty"]
+    for i, f in enumerate(fields):
+        if not isinstance(f, dict):
+            errors.append(f"{name}: field {i} is not an object")
+            continue
+        missing = [
+            k for k in ("name", "predicted", "actual", "rel_drift") if k not in f
+        ]
+        if missing:
+            errors.append(f"{name}: field {i} missing {missing}")
+    return errors
+
+
 def main(argv):
-    allow_placeholder = "--allow-placeholder" in argv
-    files = [a for a in argv if not a.startswith("--")]
-    if not files:
+    allow_placeholder = False
+    files = []
+    cost_tables = []
+    audits = []
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--allow-placeholder":
+            allow_placeholder = True
+            i += 1
+        elif a in ("--cost-table", "--audit"):
+            if i + 1 >= len(argv):
+                print(f"SCHEMA ERROR: {a} needs a FILE")
+                return 2
+            (cost_tables if a == "--cost-table" else audits).append(argv[i + 1])
+            i += 2
+        elif a.startswith("--"):
+            print(f"SCHEMA ERROR: unknown flag {a!r}")
+            return 2
+        else:
+            files.append(a)
+            i += 1
+    if not files and not cost_tables and not audits:
         print(__doc__)
         return 2
     all_errors = []
     for path in files:
         all_errors += check_file(path, allow_placeholder)
+    for path in cost_tables:
+        all_errors += check_cost_table(path)
+    for path in audits:
+        all_errors += check_audit(path)
     for e in all_errors:
         print(f"SCHEMA ERROR: {e}")
     if all_errors:
         return 1
-    print(f"bench schemas ok: {', '.join(os.path.basename(f) for f in files)}")
+    checked = files + cost_tables + audits
+    print(f"bench schemas ok: {', '.join(os.path.basename(f) for f in checked)}")
     return 0
 
 

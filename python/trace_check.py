@@ -14,10 +14,13 @@ field, an unbalanced span, an exporter emitting non-monotonic chaos —
 instead of letting CI upload traces Perfetto cannot load.
 
 Usage:
-    trace_check.py [--require-span NAME]... FILE...
+    trace_check.py [--require-span NAME]... [--require-instant NAME]... FILE...
 
 Each --require-span NAME asserts at least one "B" event with that name
 exists in every file (CI pins the planner's segment/leaf-solve spans).
+Each --require-instant NAME asserts at least one "i" event with that
+name (CI pins the "op_cost" calibration samples `roam calibrate`
+harvests from).
 """
 
 import json
@@ -28,7 +31,7 @@ REQUIRED_EVENT_KEYS = ("name", "ph", "ts", "pid", "tid")
 PHASES = ("B", "E", "i")
 
 
-def check_file(path, require_spans):
+def check_file(path, require_spans, require_instants):
     errors = []
     name = os.path.basename(path)
     try:
@@ -47,6 +50,7 @@ def check_file(path, require_spans):
 
     stacks = {}  # (pid, tid) -> [span name, ...]
     seen_begin = set()
+    seen_instant = set()
     for i, e in enumerate(events):
         if not isinstance(e, dict):
             errors.append(f"{name}: event {i} is not an object")
@@ -75,19 +79,25 @@ def check_file(path, require_spans):
                 )
             else:
                 stack.pop()
-        elif "s" not in e:
-            errors.append(f"{name}: event {i} instant missing scope 's'")
+        else:
+            seen_instant.add(e["name"])
+            if "s" not in e:
+                errors.append(f"{name}: event {i} instant missing scope 's'")
     for key, stack in stacks.items():
         if stack:
             errors.append(f"{name}: unbalanced spans {stack} left open on {key}")
     for want in require_spans:
         if want not in seen_begin:
             errors.append(f"{name}: required span {want!r} never opened")
+    for want in require_instants:
+        if want not in seen_instant:
+            errors.append(f"{name}: required instant {want!r} never emitted")
     return errors
 
 
 def main(argv):
     require_spans = []
+    require_instants = []
     files = []
     i = 0
     while i < len(argv):
@@ -96,6 +106,13 @@ def main(argv):
                 print("TRACE ERROR: --require-span needs a NAME")
                 return 2
             require_spans.append(argv[i + 1])
+            i += 2
+            continue
+        if argv[i] == "--require-instant":
+            if i + 1 >= len(argv):
+                print("TRACE ERROR: --require-instant needs a NAME")
+                return 2
+            require_instants.append(argv[i + 1])
             i += 2
             continue
         if argv[i].startswith("--"):
@@ -108,7 +125,7 @@ def main(argv):
         return 2
     all_errors = []
     for path in files:
-        all_errors += check_file(path, require_spans)
+        all_errors += check_file(path, require_spans, require_instants)
     for e in all_errors:
         print(f"TRACE ERROR: {e}")
     if all_errors:

@@ -95,18 +95,25 @@ impl CompressModel {
 
     /// Modeled seconds to compress a `size`-byte tensor of `class`
     /// (infinite when no codec applies — the pricing convention that
-    /// makes an absent codec unpickable, never an error).
+    /// makes an absent codec unpickable, never an error). When a codec
+    /// *does* apply, a calibrated `Compress` entry for the byte bucket
+    /// overrides the modeled throughput ([`crate::obs::calib`]); the
+    /// no-codec INFINITY is never overridden — calibration re-prices
+    /// codecs, it cannot conjure one.
     pub fn compress_secs(&self, class: TensorClass, size: u64) -> f64 {
         match self.codec_for(class) {
-            Some(k) => size as f64 / k.compress_bytes_per_sec,
+            Some(k) => crate::obs::calib::lookup("Compress", size)
+                .unwrap_or(size as f64 / k.compress_bytes_per_sec),
             None => f64::INFINITY,
         }
     }
 
-    /// Modeled seconds to decompress back to `size` bytes.
+    /// Modeled seconds to decompress back to `size` bytes (calibrated
+    /// `Decompress` entry first, same no-codec convention).
     pub fn decompress_secs(&self, class: TensorClass, size: u64) -> f64 {
         match self.codec_for(class) {
-            Some(k) => size as f64 / k.decompress_bytes_per_sec,
+            Some(k) => crate::obs::calib::lookup("Decompress", size)
+                .unwrap_or(size as f64 / k.decompress_bytes_per_sec),
             None => f64::INFINITY,
         }
     }

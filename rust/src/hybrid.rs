@@ -794,6 +794,10 @@ impl HybridPlan {
 /// earlier, for the budget to hold mid-transfer.
 pub fn roam_plan_hybrid(g: &Graph, spec: BudgetSpec, cfg: &HybridCfg) -> HybridPlan {
     let sw = Stopwatch::start();
+    // Calibration coverage accounting: the delta of the global fallback
+    // counter across this driver run is how many pricings fell back to
+    // the FLOP proxy because the table lacked a (kind, bucket) entry.
+    let calib_fallbacks0 = crate::obs::calib::fallbacks();
     let mut base = roam_plan(g, &cfg.roam);
     let baseline_total = base.total_bytes();
     let budget = spec.resolve(baseline_total);
@@ -823,6 +827,12 @@ pub fn roam_plan_hybrid(g: &Graph, spec: BudgetSpec, cfg: &HybridCfg) -> HybridP
                 met: true,
             },
         );
+        if crate::obs::calib::enabled() {
+            base.stats.push((
+                "calib_fallbacks".to_string(),
+                (crate::obs::calib::fallbacks() - calib_fallbacks0) as f64,
+            ));
+        }
         base.planning_secs = sw.secs();
         return HybridPlan {
             plan: base,
@@ -922,6 +932,14 @@ pub fn roam_plan_hybrid(g: &Graph, spec: BudgetSpec, cfg: &HybridCfg) -> HybridP
     let met = plan.total_bytes() <= budget;
     let c = Counters { met, ..c };
     annotate(&mut plan, &c);
+    // Gated like the compress stat keys: a calibration-off run's stats
+    // stay byte-identical to the historical driver's.
+    if crate::obs::calib::enabled() {
+        plan.stats.push((
+            "calib_fallbacks".to_string(),
+            (crate::obs::calib::fallbacks() - calib_fallbacks0) as f64,
+        ));
+    }
     plan.planning_secs = sw.secs();
     HybridPlan {
         plan,

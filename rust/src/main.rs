@@ -16,6 +16,8 @@
 //!                [--deadline-secs F] [--no-warm] [--max-inflight N]
 //!                # JSONL batches on stdin
 //! roam batch DIR [same flags]                     # serve request files from a dir
+//! roam calibrate TRACE.json [...] [--out table.json]  # harvest a cost table
+//! roam audit     --model bert [--budget 0.6]      # plan-vs-actual drift report
 //! roam export-dot --model alexnet                 # graphviz to stdout
 //! roam info      --model gpt2-xl                  # graph statistics
 //! roam inspect   --model bert [--width 60] [--top 12] [--out timeline.json]
@@ -24,7 +26,11 @@
 //! `plan` is an alias of `optimize`. Observability flags shared by every
 //! command: `--trace-out PATH` (Chrome trace JSON, loadable in Perfetto),
 //! `--metrics` (enable the metrics registry; serve prints a summary per
-//! batch, other commands print the text exposition), `--log-level
+//! batch, other commands print the text exposition), `--metrics-out PATH`
+//! (implies `--metrics`; additionally write the JSON snapshot to a file
+//! on exit), `--calib-table PATH` (install a measured cost table from
+//! `roam calibrate`: calibrated seconds replace the FLOP proxy across
+//! planning, and every plan gains a drift audit), `--log-level
 //! error|warn|info|debug|off` (also via `ROAM_LOG`; stderr only), and
 //! `--faults SPEC` (arm deterministic fault injection, e.g.
 //! `leaf_solve=panic;prob:0.3@7`; also via `ROAM_FAULTS` — see
@@ -48,12 +54,34 @@ fn main() {
     // the opt-in recorder/registry — both stay a few-ns no-op when off.
     roam::obs::log::init(args.opt("log-level"));
     let metrics = args.bool_flag("metrics");
-    if metrics {
+    let metrics_out = args.opt("metrics-out").map(|s| s.to_string());
+    if metrics || metrics_out.is_some() {
         roam::obs::metrics::set_enabled(true);
     }
     let trace_out = args.opt("trace-out").map(|s| s.to_string());
     if trace_out.is_some() {
         roam::obs::span::set_enabled(true);
+    }
+    // Measured cost table (from `roam calibrate`): installed before
+    // dispatch so every pricing site in the run is calibrated. A table
+    // that fails to load is a usage error — exiting beats silently
+    // planning on the FLOP proxy when the operator believes otherwise.
+    if let Some(path) = args.opt("calib-table") {
+        match roam::obs::calib::CostTable::load(path) {
+            Ok(t) => {
+                roam::log_info!(
+                    "calibration table installed: {} entries, {} samples, fingerprint {:016x}",
+                    t.n_entries(),
+                    t.n_samples(),
+                    t.fingerprint()
+                );
+                roam::obs::calib::install(t);
+            }
+            Err(e) => {
+                roam::log_error!("bad calibration table {path}: {e}");
+                std::process::exit(2);
+            }
+        }
     }
     // Deterministic fault injection (--faults beats ROAM_FAULTS), armed
     // before dispatch so every command sees the same failpoints. A bad
@@ -81,6 +109,8 @@ fn main() {
         "compare" => cmd_compare(&args),
         "serve" => cmd_serve(&args),
         "batch" => cmd_batch(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "audit" => cmd_audit(&args),
         "inspect" => cmd_inspect(&args),
         "export-dot" => cmd_export_dot(&args),
         "info" => cmd_info(&args),
@@ -100,6 +130,13 @@ fn main() {
     // (JSONL) and report through their per-batch summary objects instead.
     if metrics && !matches!(cmd.as_str(), "serve" | "batch") {
         print!("{}", roam::obs::metrics::exposition());
+    }
+    // File snapshot works for every command (it never touches stdout).
+    if let Some(path) = &metrics_out {
+        match std::fs::write(path, roam::obs::metrics::snapshot_json().pretty() + "\n") {
+            Ok(()) => roam::log_info!("wrote metrics snapshot to {path}"),
+            Err(e) => roam::log_error!("failed to write metrics {path}: {e}"),
+        }
     }
     if let Err(e) = r {
         roam::log_error!("{e:#}");
@@ -144,6 +181,15 @@ fn print_help() {
          \x20              jobs per batch, the rest answer with an error)\n\
          \x20 batch       serve every *.json/*.jsonl request file in a\n\
          \x20             directory as one batch (same flags as serve)\n\
+         \x20 calibrate   harvest a measured cost table from one or more\n\
+         \x20             Chrome traces saved with --trace-out\n\
+         \x20             (roam calibrate t1.json t2.json --out table.json;\n\
+         \x20              multiple traces merge commutatively)\n\
+         \x20 audit       re-plan a model under the current flags and report\n\
+         \x20             predicted-vs-resimulated drift per field (peak\n\
+         \x20             bytes, overhead seconds, exposed seconds); pair\n\
+         \x20             with --calib-table to audit calibrated plans\n\
+         \x20             (--budget F audits the hybrid driver; --out FILE)\n\
          \x20 inspect     memory timeline of a plan: ASCII sparkline, peak\n\
          \x20             step, per-tensor peak attribution (--model,\n\
          \x20             --planner, --width N, --top N, --out timeline.json)\n\
@@ -155,6 +201,12 @@ fn print_help() {
          \x20 --metrics          enable the metrics registry; serve emits a\n\
          \x20                    summary per batch, others print the text\n\
          \x20                    exposition on exit\n\
+         \x20 --metrics-out PATH write the metrics JSON snapshot to a file on\n\
+         \x20                    exit (implies --metrics; stdout exposition\n\
+         \x20                    still needs the bare flag)\n\
+         \x20 --calib-table PATH install a measured cost table (from `roam\n\
+         \x20                    calibrate`): calibrated seconds replace the\n\
+         \x20                    FLOP proxy, plans carry a drift audit\n\
          \x20 --log-level L      error|warn|info|debug|off (or ROAM_LOG env)\n\
          \x20 --faults SPEC      arm deterministic fault injection (or\n\
          \x20                    ROAM_FAULTS env); SPEC is ;-separated\n\
@@ -253,9 +305,22 @@ fn maybe_write(args: &Args, p: &ExecutionPlan) -> Result<()> {
     Ok(())
 }
 
+/// Emit one `op_cost` instant per op of `g` into the span recorder — the
+/// raw material `roam calibrate` harvests a [`roam::obs::calib::CostTable`]
+/// from. A no-op unless `--trace-out` armed the recorder, so traced runs
+/// become calibration runs for free.
+fn emit_costs(args: &Args, g: &roam::Graph) {
+    if !roam::obs::span::enabled() {
+        return;
+    }
+    let cm = CompressModel::from_args(args).unwrap_or_default();
+    roam::obs::calib::emit_op_costs(g, &CostModel::from_args(args), &cm);
+}
+
 fn cmd_optimize(args: &Args) -> Result<()> {
     let g = build_graph(args)?;
     let p = run_planner(&g, args)?;
+    emit_costs(args, &g);
     print_plan(&g, &p);
     maybe_write(args, &p)
 }
@@ -293,6 +358,7 @@ fn cmd_recompute(args: &Args) -> Result<()> {
     let spec = budget_spec(args)?;
     let cfg = recompute_cfg(args)?;
     let r = roam_plan_budgeted(&g, spec, &cfg);
+    emit_costs(args, &r.graph);
     println!(
         "budget {} ({})  baseline total {} ({})  strategy {}",
         r.budget,
@@ -367,6 +433,7 @@ fn cmd_swap(args: &Args) -> Result<()> {
     let spec = budget_spec(args)?;
     let cfg = hybrid_cfg(args, Technique::Swap)?;
     let r = roam_plan_hybrid(&g, spec, &cfg);
+    emit_costs(args, &r.graph);
     println!(
         "budget {} ({})  baseline total {} ({})  technique {}",
         r.budget,
@@ -426,6 +493,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let spec = budget_spec(args)?;
     let cfg = hybrid_cfg(args, Technique::Compress)?;
     let r = roam_plan_hybrid(&g, spec, &cfg);
+    emit_costs(args, &r.graph);
     println!(
         "budget {} ({})  baseline total {} ({})  technique {}",
         r.budget,
@@ -539,7 +607,7 @@ fn cmd_compare(args: &Args) -> Result<()> {
 }
 
 /// Build the serving stack from the shared CLI flags.
-fn make_service(args: &Args) -> roam::serve::PlanService {
+fn make_service(args: &Args) -> Result<roam::serve::PlanService> {
     use roam::serve::{CacheCfg, PlanCache, PlanService, ServeCfg};
     let dir = args.opt("cache-dir").map(std::path::PathBuf::from);
     let persistent = dir.is_some();
@@ -561,13 +629,16 @@ fn make_service(args: &Args) -> roam::serve::PlanService {
             rep.tmp_removed
         );
     }
-    PlanService::new(cache, ServeCfg {
+    Ok(PlanService::new(cache, ServeCfg {
         roam: roam_cfg(args),
         workers: args.usize("workers", 0),
         warm_start: !args.bool_flag("no-warm"),
         default_deadline_secs: args.f64("deadline-secs", 0.0),
         max_inflight: args.usize("max-inflight", 0),
-    })
+        // Codec table for budgeted requests; folded into cache keys when
+        // enabled (serve::canon) so differing tables never alias.
+        compress: CompressModel::from_args(args).map_err(|e| roam::err!("{e}"))?,
+    }))
 }
 
 /// Serve one batch of already-parsed requests, printing a JSONL response
@@ -594,7 +665,7 @@ fn serve_and_print(
 
 fn cmd_serve(args: &Args) -> Result<()> {
     use std::io::BufRead as _;
-    let svc = make_service(args);
+    let svc = make_service(args)?;
     let metrics = args.bool_flag("metrics");
     let stdin = std::io::stdin();
     let mut batch: Vec<roam::serve::PlanRequest> = Vec::new();
@@ -674,11 +745,88 @@ fn cmd_batch(args: &Args) -> Result<()> {
     if reqs.is_empty() {
         roam::bail!("no *.json/*.jsonl request files found in {dir}");
     }
-    let svc = make_service(args);
+    let svc = make_service(args)?;
     let n = reqs.len();
     serve_and_print(&svc, reqs, 0, args.bool_flag("metrics"));
     println!("{}", roam::serve::summary_json(&svc));
     roam::log_info!("served {n} request(s) from {} file(s)", paths.len());
+    Ok(())
+}
+
+/// `roam calibrate`: fold one or more saved Chrome traces (`--trace-out`
+/// runs) into a measured cost table. Multiple traces merge
+/// commutatively, so calibration improves by just accumulating runs.
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    use roam::obs::calib::CostTable;
+    let mut paths: Vec<String> = Vec::new();
+    let mut i = 1;
+    while let Some(p) = args.positional(i) {
+        paths.push(p.to_string());
+        i += 1;
+    }
+    if paths.is_empty() {
+        roam::bail!("usage: roam calibrate TRACE.json [TRACE2.json ...] [--out table.json]");
+    }
+    let mut table = CostTable::default();
+    for p in &paths {
+        let text = std::fs::read_to_string(p)?;
+        let doc = roam::util::json::Json::parse(text.trim())
+            .map_err(|e| roam::err!("{p}: not valid JSON: {e}"))?;
+        let t = roam::obs::calib::harvest_chrome_trace(&doc).map_err(|e| roam::err!("{p}: {e}"))?;
+        println!(
+            "harvested {p}: {} entries, {} samples",
+            t.n_entries(),
+            t.n_samples()
+        );
+        table.merge(&t);
+    }
+    if table.is_empty() {
+        roam::bail!(
+            "no `{}` events found — save the trace from a planning run \
+             (e.g. `roam plan --model bert --trace-out trace.json`)",
+            roam::obs::calib::OP_COST_EVENT
+        );
+    }
+    println!(
+        "cost table: {} entries, {} samples, fingerprint {:016x}",
+        table.n_entries(),
+        table.n_samples(),
+        table.fingerprint()
+    );
+    if let Some(path) = args.opt("out") {
+        table.save(path)?;
+        println!("wrote {path}");
+    } else {
+        println!("{}", table.to_json().pretty());
+    }
+    Ok(())
+}
+
+/// `roam audit`: plan a model under the current flags (and the installed
+/// `--calib-table`, if any), then re-simulate the plan's peak bytes,
+/// overhead seconds and exposed seconds and report the relative drift of
+/// each predicted figure. Zero drift certifies that the planner's cost
+/// arithmetic and the auditor's re-simulation agree; non-zero drift
+/// flags a stale table or a cost-model regression.
+fn cmd_audit(args: &Args) -> Result<()> {
+    let g = build_graph(args)?;
+    let budgeted = args.opt("budget").is_some() || args.opt("budget-bytes").is_some();
+    let (graph, plan, cost, compress) = if budgeted {
+        let spec = budget_spec(args)?;
+        let cfg = hybrid_cfg(args, Technique::Hybrid)?;
+        let r = roam_plan_hybrid(&g, spec, &cfg);
+        (r.graph, r.plan, cfg.cost, cfg.compress)
+    } else {
+        let plan = run_planner(&g, args)?;
+        let compress = CompressModel::from_args(args).map_err(|e| roam::err!("{e}"))?;
+        (g.clone(), plan, CostModel::from_args(args), compress)
+    };
+    let rec = roam::obs::audit::audit_plan(&graph, g.n_ops(), &plan, &cost, &compress);
+    println!("{}", rec.to_json().pretty());
+    if let Some(path) = args.opt("out") {
+        std::fs::write(path, rec.to_json().pretty() + "\n")?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 

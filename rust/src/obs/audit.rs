@@ -1,0 +1,351 @@
+//! Plan-vs-actual drift auditing: re-simulate a plan under the active
+//! cost source and compare against what the planner *predicted*.
+//!
+//! A plan's stats carry the planner's predictions — `theoretical_peak`,
+//! `overhead_secs`, `swap_exposed_secs` — all priced by whatever cost
+//! source was active when it planned. [`audit_plan`] independently
+//! re-derives each of those from the plan's schedule and augmented
+//! graph (memory re-profiled with [`crate::sched::sim::profile`], swap
+//! exposure re-serialized with
+//! [`crate::swap::cost::plan_swap_overhead`], recompute and codec
+//! seconds re-summed from the inserted ops) and reports the relative
+//! drift per field.
+//!
+//! The invariant this buys: auditing a plan under the **same** cost
+//! source that planned it reports drift == 0 on every field (pinned in
+//! `tests/calib_props.rs`). So non-zero drift means the cost source
+//! changed out from under the plan — a newly calibrated table against a
+//! proxy-planned cache entry, or a *stale* table against freshly
+//! measured traffic. The serve layer audits every response when a table
+//! is installed ([`crate::obs::calib`]) and counts threshold crossings
+//! (`plan_drift_*` in the batch summary) so mis-pricing shows up in
+//! production telemetry, not in an OOM.
+
+use crate::compress::cost::CompressModel;
+use crate::graph::{Graph, OpKind};
+use crate::obs::{calib, metrics};
+use crate::planner::ExecutionPlan;
+use crate::swap::cost::{plan_swap_overhead, CostModel};
+use crate::swap::rewrite::SwapPair;
+use crate::util::json::Json;
+
+/// Schema tag of the audit JSON shape (validated by
+/// `python/bench_schema_check.py --audit`).
+pub const SCHEMA: &str = "audit-v1";
+
+/// Relative drifts with magnitude below this clamp to exactly 0.0.
+/// Absorbs f64 rounding between the planner's accumulation and the
+/// audit's re-derivation; real drift (a changed table, a different
+/// bandwidth) is orders of magnitude larger.
+pub const DRIFT_EPS: f64 = 1e-9;
+
+/// Default relative-drift magnitude above which serve counts a plan as
+/// drifted (`plan_drift_exceeded_total`): 1%.
+pub const DRIFT_ALERT_REL: f64 = 0.01;
+
+/// One audited quantity: what the planner predicted vs what the
+/// re-simulation measured, with the signed relative drift
+/// `(actual − predicted) / max(|predicted|, |actual|)`.
+#[derive(Clone, Copy, Debug)]
+pub struct AuditField {
+    pub name: &'static str,
+    pub predicted: f64,
+    pub actual: f64,
+    pub rel_drift: f64,
+}
+
+/// Per-plan audit record: the three headline fields plus the identity
+/// of the cost source the *audit* priced with.
+#[derive(Clone, Debug)]
+pub struct AuditRecord {
+    /// Fingerprint of the calibration table the audit ran under, when
+    /// one was installed (`None` = audited under the pure proxy).
+    pub table_fingerprint: Option<u64>,
+    /// `peak_bytes`, `overhead_secs`, `exposed_secs` — in that order.
+    pub fields: Vec<AuditField>,
+}
+
+impl AuditRecord {
+    /// Largest |relative drift| across fields — the headline number.
+    pub fn max_abs_rel_drift(&self) -> f64 {
+        self.fields
+            .iter()
+            .map(|f| f.rel_drift.abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Does any field drift past `rel`?
+    pub fn exceeds(&self, rel: f64) -> bool {
+        self.max_abs_rel_drift() > rel
+    }
+
+    /// JSON form (`audit-v1`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str(SCHEMA.to_string())),
+            ("calibrated", Json::Bool(self.table_fingerprint.is_some())),
+            (
+                "table_fingerprint",
+                match self.table_fingerprint {
+                    Some(fp) => Json::Str(format!("{fp:016x}")),
+                    None => Json::Null,
+                },
+            ),
+            ("max_abs_rel_drift", Json::Num(self.max_abs_rel_drift())),
+            (
+                "fields",
+                Json::Arr(
+                    self.fields
+                        .iter()
+                        .map(|f| {
+                            Json::obj(vec![
+                                ("name", Json::Str(f.name.to_string())),
+                                ("predicted", Json::Num(f.predicted)),
+                                ("actual", Json::Num(f.actual)),
+                                ("rel_drift", Json::Num(f.rel_drift)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Mirror the drift into the metrics registry (no-op while metrics
+    /// are disabled): one gauge per field (`audit_drift_<name>`), a
+    /// log2 histogram of |drift| in parts-per-million
+    /// (`audit_drift_ppm` — ppm so sub-1.0 drifts land above the
+    /// histogram's `le_1` floor bucket), and a total-audits counter.
+    pub fn publish_metrics(&self) {
+        if !metrics::enabled() {
+            return;
+        }
+        metrics::counter_add("plan_audits_total", 1);
+        for f in &self.fields {
+            metrics::gauge_set(&format!("audit_drift_{}", f.name), f.rel_drift);
+            metrics::observe("audit_drift_ppm", f.rel_drift.abs() * 1e6);
+        }
+    }
+}
+
+/// Signed relative drift with the [`DRIFT_EPS`] clamp. Symmetric
+/// denominator (`max(|p|, |a|)`) so a prediction of 0 against a real
+/// actual reads as 100% drift instead of dividing by zero.
+fn rel_drift(predicted: f64, actual: f64) -> f64 {
+    let denom = predicted.abs().max(actual.abs());
+    if denom == 0.0 {
+        return 0.0;
+    }
+    let d = (actual - predicted) / denom;
+    if d.abs() < DRIFT_EPS {
+        0.0
+    } else {
+        d
+    }
+}
+
+/// Reconstruct the swap pairs of an augmented graph from its inserted
+/// `SwapOut`/`SwapIn` ops, in ascending out-op order — exactly the
+/// order `swap/rewrite.rs` created them in, so re-pricing with
+/// [`plan_swap_overhead`] serializes the same job multiset the planner
+/// priced.
+pub fn extract_swap_pairs(g: &Graph) -> Vec<SwapPair> {
+    let mut pairs = Vec::new();
+    for op in &g.ops {
+        if op.kind != OpKind::SwapOut {
+            continue;
+        }
+        let (Some(&original), Some(&handle)) = (op.inputs.first(), op.outputs.first()) else {
+            continue;
+        };
+        let Some(in_op) = g.tensors[handle]
+            .consumers
+            .iter()
+            .copied()
+            .find(|&c| g.ops[c].kind == OpKind::SwapIn)
+        else {
+            continue;
+        };
+        let Some(&clone) = g.ops[in_op].outputs.first() else {
+            continue;
+        };
+        pairs.push(SwapPair {
+            original,
+            handle,
+            clone,
+            out_op: op.id,
+            in_op,
+        });
+    }
+    pairs
+}
+
+/// Audit `plan` over its (possibly augmented) graph `g` against the
+/// active cost source. `base_ops` is the op count of the pre-rewrite
+/// graph — ops at or past it are the rewriter's insertions, which is
+/// how recompute clones are told apart from swap/codec machinery.
+///
+/// Three fields:
+/// * `peak_bytes` — predicted `theoretical_peak` vs a fresh
+///   [`crate::sched::sim::profile`] of the schedule;
+/// * `overhead_secs` — predicted `overhead_secs` stat (0 when absent,
+///   e.g. an unbudgeted plan) vs re-derived
+///   `recompute + exposed + codec` seconds;
+/// * `exposed_secs` — predicted `swap_exposed_secs` stat vs
+///   [`plan_swap_overhead`] on the extracted pairs.
+pub fn audit_plan(
+    g: &Graph,
+    base_ops: usize,
+    plan: &ExecutionPlan,
+    cost: &CostModel,
+    compress: &CompressModel,
+) -> AuditRecord {
+    // Peak: re-profile the schedule.
+    let actual_peak = crate::sched::sim::profile(g, &plan.schedule).peak as f64;
+
+    // Exposed: re-serialize the link with the extracted pairs.
+    let pairs = extract_swap_pairs(g);
+    let actual_exposed = plan_swap_overhead(g, &plan.schedule, cost, &pairs).exposed_secs;
+
+    // Recompute: total cloned output bytes of inserted non-technique
+    // ops, priced in one call — mirroring `recompute/rewrite.rs`'s
+    // byte counter and `hybrid.rs`'s single `recompute_secs` call.
+    let rc_bytes: u64 = g
+        .ops
+        .iter()
+        .skip(base_ops)
+        .filter(|op| {
+            !matches!(
+                op.kind,
+                OpKind::SwapOut | OpKind::SwapIn | OpKind::Compress | OpKind::Decompress
+            )
+        })
+        .flat_map(|op| op.outputs.iter().map(|&t| g.tensors[t].size))
+        .sum();
+    let actual_recompute = if rc_bytes > 0 {
+        cost.recompute_secs(rc_bytes)
+    } else {
+        0.0
+    };
+
+    // Codec: round-trip seconds per inserted Compress op, in op order —
+    // the same `codec_secs` sum the hybrid driver accumulated.
+    let mut actual_codec = 0.0;
+    for op in g.ops.iter().skip(base_ops) {
+        if op.kind != OpKind::Compress {
+            continue;
+        }
+        if let Some(&orig) = op.inputs.first() {
+            let t = &g.tensors[orig];
+            let secs = compress.codec_secs(t.class, t.size);
+            if secs.is_finite() {
+                actual_codec += secs;
+            }
+        }
+    }
+
+    let pred_peak = plan.theoretical_peak as f64;
+    let pred_overhead = plan.stat("overhead_secs").unwrap_or(0.0);
+    let pred_exposed = plan.stat("swap_exposed_secs").unwrap_or(0.0);
+    let actual_overhead = actual_recompute + actual_exposed + actual_codec;
+
+    let field = |name: &'static str, predicted: f64, actual: f64| AuditField {
+        name,
+        predicted,
+        actual,
+        rel_drift: rel_drift(predicted, actual),
+    };
+    AuditRecord {
+        table_fingerprint: calib::installed_fingerprint(),
+        fields: vec![
+            field("peak_bytes", pred_peak, actual_peak),
+            field("overhead_secs", pred_overhead, actual_overhead),
+            field("exposed_secs", pred_exposed, actual_exposed),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{self, BuildCfg, ModelKind};
+    use crate::planner::RoamCfg;
+
+    // Like calib's, these in-crate tests never install a global table —
+    // they audit under the proxy, which must self-agree.
+
+    #[test]
+    fn rel_drift_shape() {
+        assert_eq!(rel_drift(0.0, 0.0), 0.0);
+        assert_eq!(rel_drift(100.0, 100.0), 0.0);
+        assert_eq!(rel_drift(100.0, 100.0 + 1e-8), 0.0); // clamped
+        assert_eq!(rel_drift(0.0, 5.0), 1.0); // zero prediction: 100%
+        assert_eq!(rel_drift(5.0, 0.0), -1.0);
+        assert!((rel_drift(100.0, 150.0) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unbudgeted_proxy_plan_audits_clean() {
+        let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
+        let plan = crate::planner::roam_plan(&g, &RoamCfg::default());
+        let rec = audit_plan(
+            &g,
+            g.n_ops(),
+            &plan,
+            &CostModel::default(),
+            &CompressModel::default(),
+        );
+        assert_eq!(rec.table_fingerprint, None);
+        assert_eq!(rec.fields.len(), 3);
+        assert_eq!(
+            rec.max_abs_rel_drift(),
+            0.0,
+            "proxy plan vs proxy audit must agree: {:?}",
+            rec.fields
+        );
+        assert!(!rec.exceeds(DRIFT_ALERT_REL));
+        let j = rec.to_json();
+        assert_eq!(j.get("schema").and_then(|s| s.as_str()), Some(SCHEMA));
+        assert_eq!(j.get("calibrated").and_then(|b| b.as_bool()), Some(false));
+    }
+
+    #[test]
+    fn budgeted_hybrid_plan_audits_clean_under_same_model() {
+        let g = models::build(ModelKind::Mobilenet, &BuildCfg::default());
+        let base = crate::planner::roam_plan(&g, &RoamCfg::default());
+        let budget = crate::hybrid::BudgetSpec::Fraction(0.8);
+        let cfg = crate::hybrid::HybridCfg::default();
+        let h = crate::hybrid::roam_plan_hybrid(&g, budget, &cfg);
+        assert!(h.plan.total_bytes() <= base.total_bytes());
+        let rec = audit_plan(&h.graph, g.n_ops(), &h.plan, &cfg.cost, &cfg.compress);
+        assert_eq!(
+            rec.max_abs_rel_drift(),
+            0.0,
+            "hybrid stats vs re-simulation must agree: {:?}",
+            rec.fields
+        );
+    }
+
+    #[test]
+    fn stale_cost_model_shows_drift() {
+        let g = models::build(ModelKind::Mobilenet, &BuildCfg::default());
+        let budget = crate::hybrid::BudgetSpec::Fraction(0.7);
+        let cfg = crate::hybrid::HybridCfg::default();
+        let h = crate::hybrid::roam_plan_hybrid(&g, budget, &cfg);
+        let rec = audit_plan(&h.graph, g.n_ops(), &h.plan, &cfg.cost, &cfg.compress);
+        if rec.fields[1].predicted == 0.0 {
+            // Budget met without rewrites on this build: nothing to drift.
+            return;
+        }
+        // Audit under a link 4× slower than the one that planned.
+        let slow = CostModel {
+            pcie_bytes_per_sec: cfg.cost.pcie_bytes_per_sec / 4.0,
+            ..cfg.cost
+        };
+        let drifted = audit_plan(&h.graph, g.n_ops(), &h.plan, &slow, &cfg.compress);
+        assert!(
+            drifted.max_abs_rel_drift() > 0.0 || h.plan.stat("swap_tensors").unwrap_or(0.0) == 0.0,
+            "slower link must surface as drift when swaps exist"
+        );
+    }
+}

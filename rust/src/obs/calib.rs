@@ -1,0 +1,575 @@
+//! Trace-driven cost calibration: harvest measured per-op costs into a
+//! [`CostTable`] and install it so every modeled-seconds site prices
+//! from measurement instead of invented constants.
+//!
+//! Every objective in the stack — the FLOP-proxy seconds of
+//! [`crate::sched::prep::ObjectiveTables`], the PCIe bandwidths of
+//! [`crate::swap::cost::CostModel`], the codec throughputs of
+//! [`crate::compress::cost::CompressModel`] — is a modeled constant.
+//! The `obs/` spans already record what a run *actually* cost, so this
+//! module closes the loop:
+//!
+//! * planning commands emit one [`OP_COST_EVENT`] instant per operator
+//!   (kind, bytes, seconds — see [`emit_op_costs`]) into the span
+//!   recorder, which `--trace-out` persists as a Chrome trace;
+//! * [`harvest_events`] / [`harvest_chrome_trace`] fold those instants
+//!   into a [`CostTable`] keyed by **op kind × log2 byte bucket**, each
+//!   entry a sorted sample set (median, count and dispersion derive from
+//!   it), with lossless JSON round-trip and commutative [`CostTable::merge`]
+//!   of multiple runs (`roam calibrate` on the CLI);
+//! * [`install`] makes the table process-global: the pricing hooks call
+//!   [`lookup`] first and fall back to their modeled constant when the
+//!   kind/bucket has no entry — the miss is *counted*
+//!   ([`fallbacks`], metric `calib_fallback_total`), never an error.
+//!
+//! With no table installed every hook is one relaxed atomic load and the
+//! plan output is byte-identical to the proxy-only planner (pinned by
+//! `tests/calib_props.rs`). [`crate::obs::audit`] re-simulates plans
+//! under the installed table to make drift between the two visible.
+
+use crate::graph::{Graph, Op, OpKind};
+use crate::obs::span::{self, ArgVal, Event, Phase};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Schema tag of the CostTable JSON shape (validated by
+/// `python/bench_schema_check.py --cost-table`).
+pub const SCHEMA: &str = "cost-table-v1";
+
+/// Name of the per-operator cost instant the harvesters consume.
+pub const OP_COST_EVENT: &str = "op_cost";
+
+static CALIB_ON: AtomicBool = AtomicBool::new(false);
+static TABLE: Mutex<Option<(CostTable, u64)>> = Mutex::new(None);
+static FALLBACKS: AtomicU64 = AtomicU64::new(0);
+
+/// Stable name of an op kind — the string key measured costs are filed
+/// under. Covers every [`OpKind`] variant (the rewriter-inserted
+/// `SwapOut`/`SwapIn`/`Compress`/`Decompress` included, so transfer and
+/// codec kernels calibrate like any other op).
+pub fn kind_name(k: OpKind) -> &'static str {
+    match k {
+        OpKind::Conv => "Conv",
+        OpKind::MatMul => "MatMul",
+        OpKind::BatchNorm => "BatchNorm",
+        OpKind::LayerNorm => "LayerNorm",
+        OpKind::Activation => "Activation",
+        OpKind::Softmax => "Softmax",
+        OpKind::Pool => "Pool",
+        OpKind::Elementwise => "Elementwise",
+        OpKind::Reshape => "Reshape",
+        OpKind::Reduce => "Reduce",
+        OpKind::Embed => "Embed",
+        OpKind::Loss => "Loss",
+        OpKind::GradAcc => "GradAcc",
+        OpKind::OptimStep => "OptimStep",
+        OpKind::Input => "Input",
+        OpKind::SwapOut => "SwapOut",
+        OpKind::SwapIn => "SwapIn",
+        OpKind::Compress => "Compress",
+        OpKind::Decompress => "Decompress",
+        OpKind::Other => "Other",
+    }
+}
+
+/// Log2 byte-size bucket: 0 holds `bytes ≤ 1`, bucket `b` holds
+/// `2^(b-1) < bytes ≤ 2^b`. Costs within one bucket are treated as one
+/// population (op cost is near-linear in bytes at this granularity, and
+/// bucketing is what lets a table harvested at one size answer for a
+/// slightly rescaled model).
+pub fn byte_bucket(bytes: u64) -> u32 {
+    if bytes <= 1 {
+        0
+    } else {
+        64 - (bytes - 1).leading_zeros()
+    }
+}
+
+/// Measured cost table: per (op kind, byte bucket), the sorted seconds
+/// samples observed. Medians answer lookups; keeping the raw (sorted)
+/// samples makes [`CostTable::merge`] commutative and the JSON
+/// round-trip lossless.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CostTable {
+    entries: BTreeMap<(String, u32), Vec<f64>>,
+}
+
+impl CostTable {
+    /// Number of (kind, bucket) entries.
+    pub fn n_entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Total sample count across entries.
+    pub fn n_samples(&self) -> usize {
+        self.entries.values().map(|v| v.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Record one measured sample. Non-finite or negative seconds are
+    /// rejected (a poisoned trace must not poison the table).
+    pub fn add_sample(&mut self, kind: &str, bytes: u64, secs: f64) {
+        if !secs.is_finite() || secs < 0.0 {
+            return;
+        }
+        let v = self
+            .entries
+            .entry((kind.to_string(), byte_bucket(bytes)))
+            .or_default();
+        let at = v.partition_point(|&x| x <= secs);
+        v.insert(at, secs);
+    }
+
+    /// Median measured seconds for (kind, bytes-bucket), when present.
+    pub fn secs_for(&self, kind: &str, bytes: u64) -> Option<f64> {
+        let v = self.entries.get(&(kind.to_string(), byte_bucket(bytes)))?;
+        Some(median(v))
+    }
+
+    /// Fold every sample of `other` into `self`. Entries hold sorted
+    /// sample multisets, so the merge is commutative and associative —
+    /// harvesting N runs in any order yields one table.
+    pub fn merge(&mut self, other: &CostTable) {
+        for ((kind, bucket), samples) in &other.entries {
+            let v = self.entries.entry((kind.clone(), *bucket)).or_default();
+            for &s in samples {
+                let at = v.partition_point(|&x| x <= s);
+                v.insert(at, s);
+            }
+        }
+    }
+
+    /// Content fingerprint (FNV-1a over the canonical entry encoding) —
+    /// stamped into plan stats so an audit can tell *which* table priced
+    /// a plan.
+    pub fn fingerprint(&self) -> u64 {
+        let mut buf: Vec<u8> = Vec::new();
+        for ((kind, bucket), samples) in &self.entries {
+            buf.extend_from_slice(kind.as_bytes());
+            buf.push(0);
+            buf.extend_from_slice(&bucket.to_le_bytes());
+            for s in samples {
+                buf.extend_from_slice(&s.to_bits().to_le_bytes());
+            }
+            buf.push(0xff);
+        }
+        fnv1a64(&buf)
+    }
+
+    /// JSON form: schema tag, per-entry kind/bucket/derived summaries and
+    /// the raw sorted samples (the part [`CostTable::from_json`] reads
+    /// back), plus the content fingerprint for human consumption.
+    pub fn to_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|((kind, bucket), samples)| {
+                Json::obj(vec![
+                    ("kind", Json::Str(kind.clone())),
+                    ("bucket", Json::Num(*bucket as f64)),
+                    ("count", Json::Num(samples.len() as f64)),
+                    ("median_secs", Json::Num(median(samples))),
+                    ("dispersion", Json::Num(dispersion(samples))),
+                    (
+                        "samples",
+                        Json::Arr(samples.iter().map(|&s| Json::Num(s)).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::Str(SCHEMA.to_string())),
+            ("fingerprint", Json::Str(format!("{:016x}", self.fingerprint()))),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    /// Parse the [`CostTable::to_json`] shape (summaries are re-derived
+    /// from the samples; the stored fingerprint is informational).
+    pub fn from_json(doc: &Json) -> Result<CostTable, String> {
+        match doc.get("schema").and_then(|j| j.as_str()) {
+            Some(s) if s == SCHEMA => {}
+            other => return Err(format!("cost table schema {other:?}, want {SCHEMA:?}")),
+        }
+        let entries = doc
+            .get("entries")
+            .and_then(|j| j.as_arr())
+            .ok_or("cost table missing 'entries'")?;
+        let mut t = CostTable::default();
+        for (i, e) in entries.iter().enumerate() {
+            let kind = e
+                .get("kind")
+                .and_then(|j| j.as_str())
+                .ok_or_else(|| format!("entry {i}: missing 'kind'"))?;
+            let bucket = e
+                .get("bucket")
+                .and_then(|j| j.as_u64())
+                .ok_or_else(|| format!("entry {i}: missing 'bucket'"))? as u32;
+            let samples = e
+                .get("samples")
+                .and_then(|j| j.as_arr())
+                .ok_or_else(|| format!("entry {i}: missing 'samples'"))?;
+            let v = t.entries.entry((kind.to_string(), bucket)).or_default();
+            for s in samples {
+                let s = s.as_f64().ok_or_else(|| format!("entry {i}: bad sample"))?;
+                if !s.is_finite() || s < 0.0 {
+                    return Err(format!("entry {i}: non-finite/negative sample"));
+                }
+                v.push(s);
+            }
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        }
+        t.entries.retain(|_, v| !v.is_empty());
+        Ok(t)
+    }
+
+    /// Write the table as pretty JSON.
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().pretty() + "\n")
+    }
+
+    /// Load a table from a JSON file.
+    pub fn load(path: &str) -> Result<CostTable, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        let doc = Json::parse(&text).map_err(|e| format!("parse {path}: {e}"))?;
+        CostTable::from_json(&doc)
+    }
+}
+
+/// Median of a sorted, non-empty sample slice.
+fn median(v: &[f64]) -> f64 {
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Relative dispersion: (p90 − p10) / median, 0 for degenerate entries.
+/// A large value flags a bucket whose single median is a poor summary
+/// (e.g. two op populations sharing a kind).
+fn dispersion(v: &[f64]) -> f64 {
+    let m = median(v);
+    if v.len() < 2 || m <= 0.0 {
+        return 0.0;
+    }
+    let q = |p: f64| v[((p * (v.len() - 1) as f64).round() as usize).min(v.len() - 1)];
+    (q(0.9) - q(0.1)) / m
+}
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Install `t` as the process-global calibration table. Every pricing
+/// hook ([`lookup`]) answers from it until [`uninstall`].
+pub fn install(t: CostTable) {
+    let fp = t.fingerprint();
+    *TABLE.lock().unwrap_or_else(|e| e.into_inner()) = Some((t, fp));
+    FALLBACKS.store(0, Ordering::Relaxed);
+    CALIB_ON.store(true, Ordering::Relaxed);
+}
+
+/// Remove the installed table and return every hook to its modeled
+/// constant (the byte-identical no-table path).
+pub fn uninstall() {
+    CALIB_ON.store(false, Ordering::Relaxed);
+    *TABLE.lock().unwrap_or_else(|e| e.into_inner()) = None;
+    FALLBACKS.store(0, Ordering::Relaxed);
+}
+
+/// Is a calibration table installed? One relaxed load — the cost every
+/// pricing site pays when planning uncalibrated.
+#[inline(always)]
+pub fn enabled() -> bool {
+    CALIB_ON.load(Ordering::Relaxed)
+}
+
+/// Fingerprint of the installed table, when one is.
+pub fn installed_fingerprint() -> Option<u64> {
+    if !enabled() {
+        return None;
+    }
+    TABLE
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .as_ref()
+        .map(|(_, fp)| *fp)
+}
+
+/// Calibrated seconds for (kind, bytes), or `None` with the fallback
+/// counted when the installed table has no such entry — the caller then
+/// uses its modeled constant. `None` without any counting when no table
+/// is installed at all.
+pub fn lookup(kind: &str, bytes: u64) -> Option<f64> {
+    if !enabled() {
+        return None;
+    }
+    let hit = TABLE
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .as_ref()
+        .and_then(|(t, _)| t.secs_for(kind, bytes));
+    if hit.is_none() {
+        FALLBACKS.fetch_add(1, Ordering::Relaxed);
+        crate::obs::metrics::counter_add("calib_fallback_total", 1);
+    }
+    hit
+}
+
+/// Number of per-entry fallbacks to the modeled proxy since the table
+/// was installed (0 while uninstalled). Also mirrored to the metric
+/// `calib_fallback_total`.
+pub fn fallbacks() -> u64 {
+    FALLBACKS.load(Ordering::Relaxed)
+}
+
+/// Modeled (bytes, seconds) of one op under the active cost source —
+/// what [`emit_op_costs`] publishes. The byte key matches what each
+/// pricing hook will later look up: moved tensor bytes for
+/// `SwapOut`/`SwapIn`, the original tensor's bytes for codec kernels,
+/// summed output bytes for compute ops.
+fn modeled_op_cost(
+    g: &Graph,
+    op: &Op,
+    m: &crate::swap::cost::CostModel,
+    cm: &crate::compress::cost::CompressModel,
+) -> (u64, f64) {
+    match op.kind {
+        OpKind::SwapOut => {
+            let bytes: u64 = op.inputs.iter().map(|&t| g.tensors[t].size).sum();
+            (bytes, m.out_transfer_secs(bytes))
+        }
+        OpKind::SwapIn => {
+            let bytes: u64 = op.outputs.iter().map(|&t| g.tensors[t].size).sum();
+            (bytes, m.in_transfer_secs(bytes))
+        }
+        OpKind::Compress => {
+            let t = &g.tensors[op.inputs[0]];
+            (t.size, cm.compress_secs(t.class, t.size))
+        }
+        OpKind::Decompress => {
+            let t = &g.tensors[op.outputs[0]];
+            (t.size, cm.decompress_secs(t.class, t.size))
+        }
+        _ => {
+            let bytes: u64 = op.outputs.iter().map(|&t| g.tensors[t].size).sum();
+            (bytes, m.op_secs(g, op.id))
+        }
+    }
+}
+
+/// Emit one [`OP_COST_EVENT`] instant per operator of `g` into the span
+/// recorder (no-op while tracing is off). The seconds are the active
+/// cost source's — so a traced proxy run harvests into a table that
+/// reproduces the proxy, and a PJRT-measured run (which records real
+/// wall-clock spans) harvests real kernels; either way
+/// `trace → calibrate → --calib-table` is self-consistent, which is what
+/// lets `roam audit` pin drift == 0 on an unchanged table.
+pub fn emit_op_costs(
+    g: &Graph,
+    m: &crate::swap::cost::CostModel,
+    cm: &crate::compress::cost::CompressModel,
+) {
+    if !span::enabled() {
+        return;
+    }
+    for op in &g.ops {
+        let (bytes, secs) = modeled_op_cost(g, op, m, cm);
+        if !secs.is_finite() {
+            continue; // codec-less Compress ops price at infinity
+        }
+        span::instant(
+            OP_COST_EVENT,
+            vec![
+                ("kind", ArgVal::Str(kind_name(op.kind).to_string())),
+                ("bytes", ArgVal::Num(bytes as f64)),
+                ("secs", ArgVal::Num(secs)),
+            ],
+        );
+    }
+}
+
+/// Fold drained span events into a table: every [`OP_COST_EVENT`]
+/// instant carrying `kind`/`bytes`/`secs` args becomes one sample.
+pub fn harvest_events(events: &[Event]) -> CostTable {
+    let mut t = CostTable::default();
+    for e in events {
+        if e.phase != Phase::Instant || e.name != OP_COST_EVENT {
+            continue;
+        }
+        let (mut kind, mut bytes, mut secs) = (None, None, None);
+        for (k, v) in &e.args {
+            match (*k, v) {
+                ("kind", ArgVal::Str(s)) => kind = Some(s.as_str()),
+                ("bytes", ArgVal::Num(n)) => bytes = Some(*n as u64),
+                ("secs", ArgVal::Num(n)) => secs = Some(*n),
+                _ => {}
+            }
+        }
+        if let (Some(k), Some(b), Some(s)) = (kind, bytes, secs) {
+            t.add_sample(k, b, s);
+        }
+    }
+    t
+}
+
+/// Fold a saved `--trace-out` Chrome trace document into a table —
+/// identical result to [`harvest_events`] on the events that produced it
+/// (pinned by `tests/calib_props.rs`; the f64 JSON round-trip is exact).
+pub fn harvest_chrome_trace(doc: &Json) -> Result<CostTable, String> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(|j| j.as_arr())
+        .ok_or("trace missing top-level 'traceEvents'")?;
+    let mut t = CostTable::default();
+    for e in events {
+        if e.get("ph").and_then(|j| j.as_str()) != Some("i")
+            || e.get("name").and_then(|j| j.as_str()) != Some(OP_COST_EVENT)
+        {
+            continue;
+        }
+        let Some(args) = e.get("args") else { continue };
+        let kind = args.get("kind").and_then(|j| j.as_str());
+        let bytes = args.get("bytes").and_then(|j| j.as_u64());
+        let secs = args.get("secs").and_then(|j| j.as_f64());
+        if let (Some(k), Some(b), Some(s)) = (kind, bytes, secs) {
+            t.add_sample(k, b, s);
+        }
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The install/lookup global state is exercised only by
+    // `tests/calib_props.rs` (its own process, serialized on a lock) so
+    // these in-crate tests can never race the cost-model unit tests that
+    // pin exact proxy arithmetic. Here: the pure pieces.
+
+    #[test]
+    fn byte_buckets() {
+        assert_eq!(byte_bucket(0), 0);
+        assert_eq!(byte_bucket(1), 0);
+        assert_eq!(byte_bucket(2), 1);
+        assert_eq!(byte_bucket(3), 2);
+        assert_eq!(byte_bucket(4), 2);
+        assert_eq!(byte_bucket(5), 3);
+        assert_eq!(byte_bucket(1 << 20), 20);
+        assert_eq!(byte_bucket((1 << 20) + 1), 21);
+        assert_eq!(byte_bucket(u64::MAX), 64);
+    }
+
+    #[test]
+    fn median_and_lookup() {
+        let mut t = CostTable::default();
+        t.add_sample("Conv", 100, 3.0);
+        t.add_sample("Conv", 101, 1.0);
+        t.add_sample("Conv", 102, 2.0);
+        // 100..=102 share bucket 7; median of {1,2,3} = 2.
+        assert_eq!(t.secs_for("Conv", 100), Some(2.0));
+        assert_eq!(t.secs_for("Conv", 128), Some(2.0));
+        assert_eq!(t.secs_for("Conv", 129), None); // bucket 8
+        assert_eq!(t.secs_for("MatMul", 100), None);
+        t.add_sample("Conv", 100, 10.0);
+        assert_eq!(t.secs_for("Conv", 100), Some(2.5)); // even count
+    }
+
+    #[test]
+    fn rejects_poisoned_samples() {
+        let mut t = CostTable::default();
+        t.add_sample("Conv", 8, f64::NAN);
+        t.add_sample("Conv", 8, f64::INFINITY);
+        t.add_sample("Conv", 8, -1.0);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn merge_is_commutative() {
+        let mut a = CostTable::default();
+        a.add_sample("Conv", 64, 2.0);
+        a.add_sample("MatMul", 64, 5.0);
+        let mut b = CostTable::default();
+        b.add_sample("Conv", 64, 1.0);
+        b.add_sample("Conv", 4096, 9.0);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.fingerprint(), ba.fingerprint());
+        assert_eq!(ab.n_entries(), 3);
+        assert_eq!(ab.n_samples(), 4);
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless() {
+        let mut t = CostTable::default();
+        t.add_sample("Conv", 1 << 20, 1.25e-3);
+        t.add_sample("Conv", 1 << 20, 0.1 + 0.2); // non-terminating repr
+        t.add_sample("SwapOut", 3, 7.0);
+        let doc = t.to_json();
+        let back = CostTable::from_json(&Json::parse(&doc.pretty()).unwrap()).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.fingerprint(), t.fingerprint());
+    }
+
+    #[test]
+    fn from_json_rejects_drift() {
+        assert!(CostTable::from_json(&Json::obj(vec![(
+            "schema",
+            Json::Str("cost-table-v0".into())
+        )]))
+        .is_err());
+        let bad = Json::obj(vec![
+            ("schema", Json::Str(SCHEMA.into())),
+            (
+                "entries",
+                Json::Arr(vec![Json::obj(vec![("kind", Json::Str("Conv".into()))])]),
+            ),
+        ]);
+        assert!(CostTable::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn kind_name_is_total_and_distinct() {
+        let all = [
+            OpKind::Conv,
+            OpKind::MatMul,
+            OpKind::BatchNorm,
+            OpKind::LayerNorm,
+            OpKind::Activation,
+            OpKind::Softmax,
+            OpKind::Pool,
+            OpKind::Elementwise,
+            OpKind::Reshape,
+            OpKind::Reduce,
+            OpKind::Embed,
+            OpKind::Loss,
+            OpKind::GradAcc,
+            OpKind::OptimStep,
+            OpKind::Input,
+            OpKind::SwapOut,
+            OpKind::SwapIn,
+            OpKind::Compress,
+            OpKind::Decompress,
+            OpKind::Other,
+        ];
+        let names: std::collections::BTreeSet<_> = all.iter().map(|&k| kind_name(k)).collect();
+        assert_eq!(names.len(), all.len());
+    }
+}

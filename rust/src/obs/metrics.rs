@@ -142,6 +142,51 @@ pub fn observe(name: &str, value: f64) {
     }
 }
 
+/// Upper-bound quantile estimates from the log2 histogram `name`:
+/// returns `(count, one estimate per q)` where each estimate is the
+/// upper bound of the bucket containing the q-th observation (1.0 for
+/// the `≤ 1` floor bucket, `2^(k-1)` for bucket `k`). `None` while
+/// disabled, for absent names, non-histograms and empty histograms.
+/// Coarse by construction (buckets are powers of two) but monotone and
+/// cheap — what serve's batch summary derives p50/p95/p99 latency from.
+pub fn hist_quantiles(name: &str, qs: &[f64]) -> Option<(u64, Vec<f64>)> {
+    if !enabled() {
+        return None;
+    }
+    let reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    let Some(Metric::Hist { buckets, count, .. }) = reg.get(name) else {
+        return None;
+    };
+    if *count == 0 {
+        return None;
+    }
+    let upper = |i: usize| {
+        if i == 0 {
+            1.0
+        } else {
+            (1u64 << (i - 1)) as f64
+        }
+    };
+    let ests = qs
+        .iter()
+        .map(|&q| {
+            // Rank of the q-th observation, 1-based, clamped into range.
+            let rank = ((q * *count as f64).ceil() as u64).clamp(1, *count);
+            let mut seen = 0u64;
+            let mut est = upper(HIST_BUCKETS - 1);
+            for (i, &n) in buckets.iter().enumerate() {
+                seen += n;
+                if seen >= rank {
+                    est = upper(i);
+                    break;
+                }
+            }
+            est
+        })
+        .collect();
+    Some((*count, ests))
+}
+
 /// Stable JSON snapshot of every metric. Counters/gauges are bare
 /// numbers; histograms are `{count, sum, buckets: {"le_2^k": n, ...}}`
 /// with zero buckets elided.
@@ -247,5 +292,6 @@ mod tests {
         assert!(snap.get("obs_test_never_counter2").is_none());
         assert!(snap.get("obs_test_never_gauge").is_none());
         assert!(snap.get("obs_test_never_hist").is_none());
+        assert!(hist_quantiles("obs_test_never_hist", &[0.5]).is_none());
     }
 }

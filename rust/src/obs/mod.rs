@@ -21,7 +21,18 @@
 //!   `roam inspect` as an ASCII sparkline and exportable as JSON.
 //! * [`log`] — leveled stderr-only diagnostics (`ROAM_LOG` env /
 //!   `--log-level` flag) so serve's JSONL stdout protocol is never polluted.
+//! * [`calib`] — trace-driven cost calibration: harvest per-op `op_cost`
+//!   instants (drained spans or a saved Chrome trace) into a measured
+//!   [`calib::CostTable`] keyed by op kind × byte bucket; an installed
+//!   table (`--calib-table`) replaces the FLOP-proxy seconds and modeled
+//!   bandwidths everywhere, with counted per-entry fallback.
+//! * [`audit`] — plan-vs-actual drift records: re-simulate a plan's
+//!   peak/overhead/exposure under the active cost source and report
+//!   relative drift per field (`roam audit`, serve `audit` sections,
+//!   `plan_drift_*` summary counters).
 
+pub mod audit;
+pub mod calib;
 pub mod log;
 pub mod metrics;
 pub mod span;

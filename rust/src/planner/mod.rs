@@ -212,13 +212,27 @@ pub fn evaluate(
     sched: Schedule,
     layout: &Layout,
     planning_secs: f64,
-    stats: Vec<(String, f64)>,
+    mut stats: Vec<(String, f64)>,
 ) -> ExecutionPlan {
     let items = layout_items(g, &sched);
     debug_assert!(
         conflicts(&items, layout).is_empty(),
         "{planner}: layout has address conflicts"
     );
+    // Stamp which cost source priced this plan: with a calibration table
+    // installed ([`crate::obs::calib`]) the seconds everywhere above came
+    // from measured medians, and the table fingerprint (folded into f64's
+    // exact 53-bit range) makes a plan traceable to the exact table.
+    // Gated so the no-table stats vector stays byte-identical.
+    if crate::obs::calib::enabled() {
+        stats.push(("cost_source".to_string(), 1.0));
+        if let Some(fp) = crate::obs::calib::installed_fingerprint() {
+            stats.push((
+                "calib_fingerprint".to_string(),
+                (fp & ((1u64 << 53) - 1)) as f64,
+            ));
+        }
+    }
     let prof = profile(g, &sched);
     let plan = ExecutionPlan {
         planner: planner.to_string(),

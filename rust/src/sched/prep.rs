@@ -149,6 +149,10 @@ impl ObjectiveTables {
     /// `compute_bytes_per_sec`. Swap events are recognised structurally
     /// from the op kinds, so the same build works on planner leaf
     /// subgraphs (extraction preserves kinds) with no id translation.
+    /// Per-op seconds come from the installed calibration table when its
+    /// (kind, byte-bucket) entry exists ([`crate::obs::calib`]), the
+    /// FLOP proxy otherwise — so a calibrated leaf solve trades peak
+    /// against *measured* exposure.
     pub fn build(g: &Graph, compute_bytes_per_sec: f64) -> ObjectiveTables {
         let n = g.n_ops();
         let mut op_secs = vec![0.0f64; n];
@@ -158,7 +162,8 @@ impl ObjectiveTables {
         let mut events = 0usize;
         for op in &g.ops {
             let bytes: u64 = op.outputs.iter().map(|&t| g.tensors[t].size).sum();
-            let secs = bytes as f64 / compute_bytes_per_sec;
+            let secs = crate::obs::calib::lookup(crate::obs::calib::kind_name(op.kind), bytes)
+                .unwrap_or(bytes as f64 / compute_bytes_per_sec);
             op_secs[op.id] = secs;
             total += secs;
             match op.kind {

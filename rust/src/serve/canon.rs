@@ -120,6 +120,8 @@ fn kind_tag(k: OpKind) -> u64 {
         OpKind::SwapOut => 16,
         OpKind::SwapIn => 17,
         OpKind::Other => 18,
+        OpKind::Compress => 19,
+        OpKind::Decompress => 20,
     }
 }
 
@@ -300,12 +302,27 @@ pub fn canonize(g: &Graph) -> Canon {
 
 /// Canonical 64-bit key of the planner configuration that determines a
 /// plan's identity: the ROAM search knobs plus the budget/technique of a
-/// budgeted request. Wall-clock knobs (`time_limit_secs`) and execution
+/// budgeted request, plus the service's codec table when it can actually
+/// shape the plan. Wall-clock knobs (`time_limit_secs`) and execution
 /// knobs (`parallel`) are deliberately excluded — they control *how long*
 /// and *on how many threads* the planner runs, not which plan the request
 /// asks for (a deadline that actually bites degrades the plan and is
 /// reported in its stats, not in its cache identity).
-pub fn cfg_key(roam: &RoamCfg, budget: Option<BudgetSpec>, technique: Technique) -> u64 {
+///
+/// The codec table folds in **only** for budgeted requests on a service
+/// with codecs enabled: an unbudgeted plan never rewrites, and a
+/// disabled table prices every codec as unpickable, so in both cases the
+/// produced plan is table-independent and the key value stays exactly
+/// what it was before codecs existed (disk caches persist across
+/// versions — key values are compatibility surface). With codecs live,
+/// two services differing only in their tables can never alias one
+/// cache entry.
+pub fn cfg_key(
+    roam: &RoamCfg,
+    budget: Option<BudgetSpec>,
+    technique: Technique,
+    compress: &crate::compress::cost::CompressModel,
+) -> u64 {
     let mut h = smix(0xc0ff_ee00);
     h = mix2(h, roam.node_limit as u64);
     h = mix2(h, roam.delay_radius.to_bits());
@@ -330,7 +347,17 @@ pub fn cfg_key(roam: &RoamCfg, budget: Option<BudgetSpec>, technique: Technique)
         Technique::Compress => 4,
     };
     // The technique only matters for budgeted requests.
-    mix2(h, if budget.is_some() { ttag } else { 0 })
+    h = mix2(h, if budget.is_some() { ttag } else { 0 });
+    if budget.is_some() && compress.enabled() {
+        h = mix2(h, 0xc0de_c5 ^ compress.table.len() as u64);
+        for (class, k) in &compress.table {
+            h = mix2(h, class_tag(*class));
+            h = mix2(h, k.ratio.to_bits());
+            h = mix2(h, k.compress_bytes_per_sec.to_bits());
+            h = mix2(h, k.decompress_bytes_per_sec.to_bits());
+        }
+    }
+    h
 }
 
 /// Fold a config key into a graph fingerprint to form the cache keys.
@@ -413,37 +440,68 @@ mod tests {
 
     #[test]
     fn cfg_key_separates_requests() {
+        use crate::compress::cost::CompressModel;
         let r = RoamCfg::default();
-        let base = cfg_key(&r, None, Technique::Hybrid);
+        let cm = CompressModel::default();
+        let base = cfg_key(&r, None, Technique::Hybrid, &cm);
         // Wall-clock / thread knobs don't change identity.
         let r2 = RoamCfg {
             time_limit_secs: 1.0,
             parallel: false,
             ..RoamCfg::default()
         };
-        assert_eq!(cfg_key(&r2, None, Technique::Hybrid), base);
+        assert_eq!(cfg_key(&r2, None, Technique::Hybrid, &cm), base);
         // Search knobs do.
         let r3 = RoamCfg {
             node_limit: 32,
             ..RoamCfg::default()
         };
-        assert_ne!(cfg_key(&r3, None, Technique::Hybrid), base);
+        assert_ne!(cfg_key(&r3, None, Technique::Hybrid, &cm), base);
         // Budget and technique do (for budgeted requests only).
         assert_ne!(
-            cfg_key(&r, Some(BudgetSpec::Fraction(0.6)), Technique::Hybrid),
+            cfg_key(&r, Some(BudgetSpec::Fraction(0.6)), Technique::Hybrid, &cm),
             base
         );
         assert_ne!(
-            cfg_key(&r, Some(BudgetSpec::Fraction(0.6)), Technique::Swap),
-            cfg_key(&r, Some(BudgetSpec::Fraction(0.6)), Technique::Hybrid)
+            cfg_key(&r, Some(BudgetSpec::Fraction(0.6)), Technique::Swap, &cm),
+            cfg_key(&r, Some(BudgetSpec::Fraction(0.6)), Technique::Hybrid, &cm)
         );
         // Technique is ignored without a budget.
-        assert_eq!(cfg_key(&r, None, Technique::Swap), base);
+        assert_eq!(cfg_key(&r, None, Technique::Swap, &cm), base);
         // Folding into a fingerprint changes both keys.
         let fp = Fingerprint { key: 7, shape: 9 };
         let folded = with_cfg(fp, base);
         assert_ne!(folded.key, fp.key);
         assert_ne!(folded.shape, fp.shape);
         assert_ne!(with_cfg(fp, base ^ 1).key, folded.key);
+    }
+
+    #[test]
+    fn cfg_key_codec_table_scoping() {
+        use crate::compress::cost::{Codec, CompressModel};
+        let r = RoamCfg::default();
+        let off = CompressModel::default();
+        let on = CompressModel::lossless();
+        let budget = Some(BudgetSpec::Fraction(0.6));
+        // Unbudgeted: the table cannot shape the plan — key unchanged.
+        assert_eq!(
+            cfg_key(&r, None, Technique::Hybrid, &on),
+            cfg_key(&r, None, Technique::Hybrid, &off)
+        );
+        // Budgeted + enabled: the table is identity.
+        let base = cfg_key(&r, budget, Technique::Hybrid, &off);
+        let with_on = cfg_key(&r, budget, Technique::Hybrid, &on);
+        assert_ne!(with_on, base);
+        // Two different codec tables never alias.
+        let faster = CompressModel {
+            table: vec![(
+                crate::graph::TensorClass::Activation,
+                Codec {
+                    compress_bytes_per_sec: 200e9,
+                    ..Codec::lossless()
+                },
+            )],
+        };
+        assert_ne!(cfg_key(&r, budget, Technique::Hybrid, &faster), with_on);
     }
 }

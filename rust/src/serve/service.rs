@@ -59,8 +59,12 @@
 use super::cache::{KeyLock, PlanCache};
 use super::canon::{canonize, cfg_key, with_cfg};
 use super::warm;
+use crate::compress::cost::CompressModel;
 use crate::graph::Graph;
 use crate::hybrid::{roam_plan_hybrid, BudgetSpec, HybridCfg, Technique};
+use crate::obs::audit::{audit_plan, AuditRecord, DRIFT_ALERT_REL};
+use crate::obs::calib;
+use crate::swap::cost::CostModel;
 use crate::planner::heuristic::heuristic_plan;
 use crate::planner::{lint_plan, roam_plan_seeded, ExecutionPlan, RoamCfg};
 use crate::sched::Schedule;
@@ -89,6 +93,11 @@ pub struct ServeCfg {
     /// immediately with [`Outcome::Rejected`] and an error message —
     /// first-come, first-admitted in request order.
     pub max_inflight: usize,
+    /// Codec table for budgeted requests (`--codec-table` /
+    /// `--codec-ratio` on `roam serve`). Folded into every cache key
+    /// when enabled so two services with different tables never alias
+    /// one entry; the default is the empty (disabled) table.
+    pub compress: CompressModel,
 }
 
 impl Default for ServeCfg {
@@ -99,6 +108,7 @@ impl Default for ServeCfg {
             warm_start: true,
             default_deadline_secs: 0.0,
             max_inflight: 0,
+            compress: CompressModel::default(),
         }
     }
 }
@@ -185,6 +195,10 @@ pub struct PlanResponse {
     /// Why the request was not planned (`Failed` / `Rejected` only —
     /// `plan` is then an empty placeholder and must not be executed).
     pub error: Option<String>,
+    /// Plan-vs-actual drift record, present only while a calibration
+    /// table is installed ([`crate::obs::calib`]) — the no-table wire
+    /// shape is byte-identical to before audits existed.
+    pub audit: Option<AuditRecord>,
 }
 
 /// The empty placeholder plan carried by `Failed` / `Rejected`
@@ -231,6 +245,10 @@ struct Attempt {
     /// Lint-clean AND addressing the request graph — eligible for the
     /// cache provided the request deadline never expired.
     cacheable: bool,
+    /// Drift record, computed while the (possibly augmented) planning
+    /// graph is still alive. `None` when no calibration table is
+    /// installed.
+    audit: Option<AuditRecord>,
 }
 
 /// Lock-free service counters.
@@ -246,6 +264,13 @@ pub struct ServiceStats {
     pub failed: AtomicU64,
     pub rejected: AtomicU64,
     pub translate_failures: AtomicU64,
+    /// Plans audited against the installed calibration table, and how
+    /// many drifted past [`DRIFT_ALERT_REL`]. Deliberately NOT part of
+    /// [`ServiceStats::snapshot`] — the summary's `service` section must
+    /// stay byte-identical while calibration is off; `summary_json`
+    /// surfaces them in a gated `plan_drift` section instead.
+    pub drift_checks: AtomicU64,
+    pub drift_exceeded: AtomicU64,
 }
 
 impl ServiceStats {
@@ -310,6 +335,39 @@ impl PlanService {
         metrics::gauge_set("plan_cache_len", self.cache.len() as f64);
     }
 
+    /// Audit `plan` against the installed calibration table: `None`
+    /// while no table is installed (the pre-calibration fast path —
+    /// one relaxed atomic load). The cost/codec models passed are
+    /// exactly the ones `run_one`'s planning used
+    /// ([`CostModel::default`] + [`ServeCfg::compress`]), so a serve
+    /// audit of an undrifted table reports zero drift. Side effects:
+    /// bumps the drift counters and publishes the drift gauges /
+    /// histograms into the metrics registry.
+    fn maybe_audit(
+        &self,
+        g: &Graph,
+        base_ops: usize,
+        plan: &ExecutionPlan,
+    ) -> Option<AuditRecord> {
+        if !calib::enabled() {
+            return None;
+        }
+        let rec = audit_plan(g, base_ops, plan, &CostModel::default(), &self.cfg.compress);
+        self.stats.drift_checks.fetch_add(1, Ordering::Relaxed);
+        crate::obs::metrics::counter_add("plan_drift_checks_total", 1);
+        if rec.exceeds(DRIFT_ALERT_REL) {
+            self.stats.drift_exceeded.fetch_add(1, Ordering::Relaxed);
+            crate::obs::metrics::counter_add("plan_drift_exceeded_total", 1);
+            crate::log_warn!(
+                "plan drift exceeds {:.2}%: max |rel drift| {:.4}",
+                DRIFT_ALERT_REL * 100.0,
+                rec.max_abs_rel_drift(),
+            );
+        }
+        rec.publish_metrics();
+        Some(rec)
+    }
+
     /// Serve a batch; responses are positionally aligned with `reqs`.
     pub fn serve_batch(&self, reqs: &[PlanRequest]) -> Vec<PlanResponse> {
         let mut batch_span = crate::obs::span("serve_batch");
@@ -326,7 +384,7 @@ impl PlanService {
             .map(|(r, c)| {
                 with_cfg(
                     c.fingerprint,
-                    cfg_key(&self.cfg.roam, r.budget, r.technique),
+                    cfg_key(&self.cfg.roam, r.budget, r.technique, &self.cfg.compress),
                 )
             })
             .collect();
@@ -428,6 +486,7 @@ impl PlanService {
                          planning jobs, max-inflight is {}",
                         self.cfg.max_inflight,
                     )),
+                    audit: None,
                 };
             }
             let rep = groups[&key][0];
@@ -464,6 +523,15 @@ impl PlanService {
                 resp
             })
             .collect();
+        // Per-request latency histogram (log2 buckets in microseconds):
+        // the batch summary derives p50/p95/p99 from it. Dedupe members
+        // observe their 0-second assembly cost, which is honest — that
+        // IS their request latency.
+        if crate::obs::metrics::enabled() {
+            for r in &out {
+                crate::obs::metrics::observe("serve_request_us", r.secs * 1e6);
+            }
+        }
         self.publish_metrics();
         out
     }
@@ -505,6 +573,7 @@ impl PlanService {
             );
             let plan = heuristic_plan(g);
             let lint_ok = lint_plan(g, &plan).is_empty();
+            let audit = self.maybe_audit(g, g.n_ops(), &plan);
             sp.arg_str("outcome", Outcome::Degraded.name());
             return PlanResponse {
                 key: fp.key,
@@ -513,6 +582,7 @@ impl PlanService {
                 lint_ok,
                 secs: sw.secs(),
                 error: None,
+                audit,
             };
         }
 
@@ -533,6 +603,7 @@ impl PlanService {
                 Some(plan) => {
                     self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
                     let lint_ok = lint_plan(g, &plan).is_empty();
+                    let audit = self.maybe_audit(g, g.n_ops(), &plan);
                     sp.arg_str("outcome", Outcome::CacheHit.name());
                     return PlanResponse {
                         key: fp.key,
@@ -541,6 +612,7 @@ impl PlanService {
                         lint_ok,
                         secs: sw.secs(),
                         error: None,
+                        audit,
                     };
                 }
                 None => {
@@ -581,6 +653,7 @@ impl PlanService {
                     Some(plan) => {
                         self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
                         let lint_ok = lint_plan(g, &plan).is_empty();
+                        let audit = self.maybe_audit(g, g.n_ops(), &plan);
                         sp.arg_str("outcome", Outcome::CacheHit.name());
                         return PlanResponse {
                             key: fp.key,
@@ -589,6 +662,7 @@ impl PlanService {
                             lint_ok,
                             secs: sw.secs(),
                             error: None,
+                            audit,
                         };
                     }
                     None => {
@@ -622,6 +696,7 @@ impl PlanService {
                         let hplan = roam_plan_hybrid(g, spec, &HybridCfg {
                             technique: req.technique,
                             roam,
+                            compress: self.cfg.compress.clone(),
                             ..HybridCfg::default()
                         });
                         // A budgeted plan executes the driver's (possibly
@@ -632,11 +707,15 @@ impl PlanService {
                         // applies); eviction-free ones cache normally.
                         let lint_ok = lint_plan(&hplan.graph, &hplan.plan).is_empty();
                         let cacheable = lint_ok && hplan.graph.n_ops() == g.n_ops();
+                        // Audit against the augmented graph (the one the
+                        // plan executes) while it is still alive.
+                        let audit = self.maybe_audit(&hplan.graph, g.n_ops(), &hplan.plan);
                         Attempt {
                             plan: hplan.plan,
                             outcome: Outcome::Cold,
                             lint_ok,
                             cacheable,
+                            audit,
                         }
                     }
                     None => {
@@ -650,11 +729,13 @@ impl PlanService {
                         let warmed = seed.is_some();
                         let plan = roam_plan_seeded(g, &roam, seed.as_ref());
                         let lint_ok = lint_plan(g, &plan).is_empty();
+                        let audit = self.maybe_audit(g, g.n_ops(), &plan);
                         Attempt {
                             plan,
                             outcome: if warmed { Outcome::Warm } else { Outcome::Cold },
                             lint_ok,
                             cacheable: lint_ok,
+                            audit,
                         }
                     }
                 })
@@ -715,12 +796,14 @@ impl PlanService {
                                     "serve_degraded",
                                     &[("n_ops", g.n_ops() as f64)],
                                 );
+                                let audit = self.maybe_audit(g, g.n_ops(), &plan);
                                 (
                                     Attempt {
                                         plan,
                                         outcome: Outcome::Degraded,
                                         lint_ok,
                                         cacheable: false,
+                                        audit,
                                     },
                                     Outcome::Degraded,
                                 )
@@ -740,6 +823,7 @@ impl PlanService {
                                     lint_ok: false,
                                     secs: sw.secs(),
                                     error: Some(format!("{first}; retry: {second}")),
+                                    audit: None,
                                 };
                             }
                         }
@@ -778,6 +862,7 @@ impl PlanService {
             lint_ok: att.lint_ok,
             secs: sw.secs(),
             error: None,
+            audit: att.audit,
         }
     }
 }
@@ -858,7 +943,7 @@ pub fn response_to_json(id: usize, r: &PlanResponse) -> Json {
         ]);
     }
     let stat = |k: &str| r.plan.stat(k).unwrap_or(0.0);
-    Json::obj(vec![
+    let mut fields = vec![
         ("id", Json::Num(id as f64)),
         ("key", Json::Str(format!("{:032x}", r.key))),
         ("outcome", Json::Str(r.outcome.name().to_string())),
@@ -871,7 +956,13 @@ pub fn response_to_json(id: usize, r: &PlanResponse) -> Json {
         ("secs", Json::Num(r.secs)),
         ("bnb_nodes", Json::Num(stat("order_nodes_explored"))),
         ("warm_seeded", Json::Num(stat("warm_seeded"))),
-    ])
+    ];
+    // Drift audit rides along only while a calibration table is
+    // installed — the no-table wire shape predates audits and is pinned.
+    if let Some(rec) = &r.audit {
+        fields.push(("audit", rec.to_json()));
+    }
+    Json::obj(fields)
 }
 
 /// The end-of-stream summary object (`{"summary": {...}}`).
@@ -889,6 +980,39 @@ pub fn summary_json(svc: &PlanService) -> Json {
         ("cache", counters(svc.cache().stats().snapshot())),
         ("cache_len", Json::Num(svc.cache().len() as f64)),
     ];
+    // Plan-vs-actual drift counters, present only while a calibration
+    // table is installed (the audits that feed them only run then).
+    if calib::enabled() {
+        fields.push((
+            "plan_drift",
+            Json::obj(vec![
+                (
+                    "checks",
+                    Json::Num(svc.stats().drift_checks.load(Ordering::Relaxed) as f64),
+                ),
+                (
+                    "exceeded",
+                    Json::Num(svc.stats().drift_exceeded.load(Ordering::Relaxed) as f64),
+                ),
+            ]),
+        ));
+    }
+    // Request-latency quantiles from the log2 histogram — present only
+    // when metrics were on and at least one request was served (so the
+    // metrics-off summary stays byte-identical to the historical shape).
+    if let Some((count, qs)) =
+        crate::obs::metrics::hist_quantiles("serve_request_us", &[0.5, 0.95, 0.99])
+    {
+        fields.push((
+            "latency",
+            Json::obj(vec![
+                ("count", Json::Num(count as f64)),
+                ("p50_us", Json::Num(qs[0])),
+                ("p95_us", Json::Num(qs[1])),
+                ("p99_us", Json::Num(qs[2])),
+            ]),
+        ));
+    }
     // With faults armed, surface the per-failpoint hit/fired counters:
     // chaos harnesses gate on these deterministic counts (e.g. "did
     // serve_plan actually fire?") instead of on downstream effects that

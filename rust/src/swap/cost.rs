@@ -23,6 +23,13 @@
 //!   a swapped-out tensor stays resident until its DMA completes, so its
 //!   death extends to the step where the modeled transfer finishes
 //!   (via [`crate::sched::sim::peak_with_extended_deaths`]).
+//!
+//! Every modeled-seconds query consults the installed calibration table
+//! first ([`crate::obs::calib`]): op durations by op kind and byte
+//! bucket, transfer directions under the `SwapOut` / `SwapIn` kinds.
+//! With no table installed (one relaxed atomic load) or no matching
+//! entry (a counted fallback) the constants above answer, byte-identical
+//! to the uncalibrated model.
 
 use crate::graph::{Graph, Phase, TensorId};
 use crate::sched::sim::peak_with_extended_deaths;
@@ -68,26 +75,46 @@ impl CostModel {
         }
     }
 
-    /// Modeled seconds for one transfer direction of `bytes`.
+    /// Modeled seconds for one transfer direction of `bytes` — the pure
+    /// link constants, never calibrated (it is the *fallback* the
+    /// calibrated directions below reach for).
     pub fn transfer_secs(&self, bytes: u64) -> f64 {
         self.pcie_latency_secs + bytes as f64 / self.pcie_bytes_per_sec
     }
 
-    /// Full swap round trip (out + in) in seconds.
-    pub fn swap_secs(&self, bytes: u64) -> f64 {
-        2.0 * self.transfer_secs(bytes)
+    /// Seconds to move `bytes` device→host: the calibrated `SwapOut`
+    /// entry when a table has one, else [`CostModel::transfer_secs`].
+    pub fn out_transfer_secs(&self, bytes: u64) -> f64 {
+        crate::obs::calib::lookup("SwapOut", bytes).unwrap_or_else(|| self.transfer_secs(bytes))
     }
 
-    /// FLOP-proxy seconds to recompute `bytes` of tensor material.
+    /// Seconds to fetch `bytes` host→device (calibrated `SwapIn` entry,
+    /// else the link constants).
+    pub fn in_transfer_secs(&self, bytes: u64) -> f64 {
+        crate::obs::calib::lookup("SwapIn", bytes).unwrap_or_else(|| self.transfer_secs(bytes))
+    }
+
+    /// Full swap round trip (out + in) in seconds.
+    pub fn swap_secs(&self, bytes: u64) -> f64 {
+        self.out_transfer_secs(bytes) + self.in_transfer_secs(bytes)
+    }
+
+    /// FLOP-proxy seconds to recompute `bytes` of tensor material. Pure
+    /// proxy by design: recompute bytes aggregate many ops, so there is
+    /// no single op kind to calibrate under — per-op durations go
+    /// through [`CostModel::op_secs`] instead.
     pub fn recompute_secs(&self, bytes: u64) -> f64 {
         bytes as f64 / self.compute_bytes_per_sec
     }
 
-    /// Modeled duration of one op: bytes it produces over the compute
+    /// Modeled duration of one op: the calibrated (kind, output-bytes)
+    /// entry when a table has one, else bytes produced over the compute
     /// throughput.
     pub fn op_secs(&self, g: &Graph, op: crate::graph::OpId) -> f64 {
-        let bytes: u64 = g.ops[op].outputs.iter().map(|&t| g.tensors[t].size).sum();
-        self.recompute_secs(bytes)
+        let o = &g.ops[op];
+        let bytes: u64 = o.outputs.iter().map(|&t| g.tensors[t].size).sum();
+        crate::obs::calib::lookup(crate::obs::calib::kind_name(o.kind), bytes)
+            .unwrap_or_else(|| self.recompute_secs(bytes))
     }
 }
 
@@ -320,14 +347,16 @@ pub fn plan_swap_overhead(
     let mut o = SwapOverhead::default();
     let mut jobs = Vec::with_capacity(2 * pairs.len());
     for p in pairs {
-        let t = m.transfer_secs(g.tensors[p.original].size);
-        o.transfer_secs += 2.0 * t;
+        let size = g.tensors[p.original].size;
+        let t_out = m.out_transfer_secs(size);
+        let t_in = m.in_transfer_secs(size);
+        o.transfer_secs += t_out + t_in;
         // Out: issued after SwapOut's step, must land before SwapIn runs.
         let out_release = tl.end_of_step(tl.step_of(p.out_op));
         jobs.push(DmaJob {
             release: out_release,
             deadline: tl.start_of_step(tl.step_of(p.in_op)).max(out_release),
-            secs: t,
+            secs: t_out,
         });
         // In: issued at SwapIn's step, must land before the clone's first
         // consumer runs.
@@ -341,7 +370,7 @@ pub fn plan_swap_overhead(
         jobs.push(DmaJob {
             release: in_release,
             deadline: tl.start_of_step(first_use).max(in_release),
-            secs: t,
+            secs: t_in,
         });
     }
     o.exposed_secs = serialize_link(jobs);
@@ -361,7 +390,7 @@ pub fn transfer_aware_peak(
     let extend: Vec<(TensorId, usize)> = pairs
         .iter()
         .map(|p| {
-            let t = m.transfer_secs(g.tensors[p.original].size);
+            let t = m.out_transfer_secs(g.tensors[p.original].size);
             (p.original, tl.step_when_done(tl.step_of(p.out_op), t))
         })
         .collect();

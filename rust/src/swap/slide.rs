@@ -130,7 +130,7 @@ fn slide_ins_later(g: &Graph, order: &mut Vec<OpId>, pairs: &[SwapPair], m: &Cos
         if lim <= cur + 1 {
             continue; // already directly before its first consumer
         }
-        let need = m.transfer_secs(g.tensors[p.original].size);
+        let need = m.in_transfer_secs(g.tensors[p.original].size);
         // Largest landing index `t` whose window to the consumer still
         // fits the fetch, floored at the current slot. Landing at `t`
         // leaves exactly the ops now at (t, lim) between the fetch and

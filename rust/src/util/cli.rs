@@ -4,15 +4,19 @@
 //! subcommands. The `roam` binary and every bench/example use it so `--help`
 //! output stays consistent across the repo.
 //!
-//! Four option names are reserved as *global* switches, honoured by the
+//! Six option names are reserved as *global* switches, honoured by the
 //! `roam` binary before command dispatch and therefore available to
 //! every subcommand: `--trace-out PATH` (enables the
 //! [`crate::obs::span`] recorder and writes a Chrome trace on exit),
 //! `--metrics` (enables the [`crate::obs::metrics`] registry),
-//! `--log-level LEVEL` (overrides the `ROAM_LOG` environment variable
-//! for [`crate::obs::log`]), and `--faults SPEC` (arms deterministic
-//! fault injection, overriding the `ROAM_FAULTS` environment variable —
-//! see [`crate::faults`]). Commands should not reuse these names.
+//! `--metrics-out PATH` (implies `--metrics` and writes the JSON
+//! snapshot to a file on exit), `--calib-table PATH` (installs a
+//! measured [`crate::obs::calib::CostTable`], replacing the FLOP-proxy
+//! seconds at every pricing site), `--log-level LEVEL` (overrides the
+//! `ROAM_LOG` environment variable for [`crate::obs::log`]), and
+//! `--faults SPEC` (arms deterministic fault injection, overriding the
+//! `ROAM_FAULTS` environment variable — see [`crate::faults`]).
+//! Commands should not reuse these names.
 
 use std::collections::BTreeMap;
 

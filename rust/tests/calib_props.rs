@@ -1,0 +1,254 @@
+//! Property + integration tests for the trace-driven cost-calibration
+//! layer (`obs/calib` + `obs/audit`): CostTable JSON round-trip and
+//! commutative merge, harvest-from-chrome-trace == harvest-from-events,
+//! fallback counting on table misses, the no-table byte-identity
+//! guarantee on a pinned MobileNet plan, and the end-to-end acceptance
+//! loop — trace a budgeted plan, harvest a table, re-plan under it,
+//! lint clean, audit drift == 0.
+//!
+//! The calibration table, span recorder and metrics registry are all
+//! process-global. Every test here serializes on one mutex and restores
+//! the uninstalled/disabled defaults via a drop guard, so a panicking
+//! test cannot leak a table into its neighbours. In-crate unit tests
+//! deliberately never install a table (they pin exact proxy
+//! arithmetic); this separate test process is the only place global
+//! installs happen.
+
+use roam::compress::cost::CompressModel;
+use roam::hybrid::{roam_plan_hybrid, BudgetSpec, HybridCfg, Technique};
+use roam::models::{self, BuildCfg, ModelKind};
+use roam::obs::audit::audit_plan;
+use roam::obs::calib::{
+    self, emit_op_costs, harvest_chrome_trace, harvest_events, CostTable,
+};
+use roam::obs::span;
+use roam::planner::{lint_plan, roam_plan, ExecutionPlan, RoamCfg};
+use roam::swap::cost::CostModel;
+use roam::util::json::Json;
+use std::sync::Mutex;
+
+/// Serializes every test that touches the process-global table or the
+/// span recorder.
+static CALIB_LOCK: Mutex<()> = Mutex::new(());
+
+fn calib_guard() -> std::sync::MutexGuard<'static, ()> {
+    CALIB_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Restores the global defaults even when an assertion panics while a
+/// table is installed or the recorder is live.
+struct Restore;
+
+impl Drop for Restore {
+    fn drop(&mut self) {
+        calib::uninstall();
+        span::set_enabled(false);
+        span::reset();
+    }
+}
+
+/// Deterministic planner configuration (sequential, CI-sized caps).
+fn det_roam() -> RoamCfg {
+    RoamCfg {
+        parallel: false,
+        order_max_nodes: 4_000,
+        dsa_max_nodes: 4_000,
+        ..RoamCfg::default()
+    }
+}
+
+fn det_hybrid(technique: Technique) -> HybridCfg {
+    HybridCfg {
+        technique,
+        roam: det_roam(),
+        max_rounds: 6,
+        ..HybridCfg::default()
+    }
+}
+
+fn mobilenet() -> roam::Graph {
+    models::build(ModelKind::Mobilenet, &BuildCfg::default())
+}
+
+/// Plan serialisation with the volatile run markers normalised away
+/// (wall-clock `planning_secs`, `*_pool_id` run markers).
+fn normalized_json(mut p: ExecutionPlan) -> String {
+    p.planning_secs = 0.0;
+    p.stats.retain(|(k, _)| !k.ends_with("_pool_id"));
+    p.to_json().to_string()
+}
+
+/// Trace the modeled op costs of `g` and fold them into a table.
+fn harvested_table(g: &roam::Graph, m: &CostModel, cm: &CompressModel) -> CostTable {
+    span::reset();
+    span::set_enabled(true);
+    emit_op_costs(g, m, cm);
+    span::set_enabled(false);
+    let events = span::drain();
+    span::reset();
+    harvest_events(&events)
+}
+
+/// Property: a table survives `to_json` → text → `Json::parse` →
+/// `from_json` losslessly (entries, medians, fingerprint), and `merge`
+/// is commutative and deterministic — the same two tables merged in
+/// either order fingerprint identically.
+#[test]
+fn json_round_trip_and_merge_are_deterministic() {
+    let mut a = CostTable::default();
+    let mut b = CostTable::default();
+    for i in 0..40u64 {
+        a.add_sample("MatMul", 1 << (i % 20), 1e-6 * (i + 1) as f64);
+        b.add_sample("Conv", 3 * (i + 1), 2e-6 * (i + 1) as f64);
+        b.add_sample("MatMul", 1 << (i % 20), 5e-7 * (i + 1) as f64);
+    }
+    let text = a.to_json().to_string();
+    let back = CostTable::from_json(&Json::parse(&text).expect("valid JSON"))
+        .expect("round-trip parse");
+    assert_eq!(back, a, "JSON round-trip must be lossless");
+    assert_eq!(back.fingerprint(), a.fingerprint());
+
+    let mut ab = a.clone();
+    ab.merge(&b);
+    let mut ba = b.clone();
+    ba.merge(&a);
+    assert_eq!(ab, ba, "merge must be commutative");
+    assert_eq!(ab.fingerprint(), ba.fingerprint());
+    assert_eq!(ab.n_samples(), a.n_samples() + b.n_samples());
+}
+
+/// Property: harvesting the rendered Chrome trace gives exactly the
+/// table harvested from the raw events that produced it — the
+/// `trace → roam calibrate` CLI path loses nothing relative to an
+/// in-process drain.
+#[test]
+fn harvest_from_chrome_trace_matches_harvest_from_events() {
+    let _g = calib_guard();
+    let _restore = Restore;
+    let g = mobilenet();
+    span::reset();
+    span::set_enabled(true);
+    emit_op_costs(&g, &CostModel::default(), &CompressModel::default());
+    span::set_enabled(false);
+    let events = span::drain();
+    span::reset();
+
+    let from_events = harvest_events(&events);
+    assert!(
+        !from_events.is_empty(),
+        "a traced MobileNet must yield op_cost samples"
+    );
+    let doc = span::chrome_trace(&events);
+    let from_trace = harvest_chrome_trace(&doc).expect("trace harvest");
+    assert_eq!(from_trace, from_events);
+    assert_eq!(from_trace.fingerprint(), from_events.fingerprint());
+}
+
+/// Property: with a table installed, hits return the measured median
+/// and misses fall back (counted, never an error); with no table
+/// installed, lookups return `None` without counting.
+#[test]
+fn missing_entries_fall_back_and_are_counted() {
+    let _g = calib_guard();
+    let _restore = Restore;
+
+    calib::uninstall();
+    let before = calib::fallbacks();
+    assert_eq!(calib::lookup("MatMul", 4096), None);
+    assert_eq!(
+        calib::fallbacks(),
+        before,
+        "disabled lookups must not count as fallbacks"
+    );
+
+    let mut t = CostTable::default();
+    t.add_sample("MatMul", 4096, 3e-6);
+    t.add_sample("MatMul", 4096, 5e-6);
+    t.add_sample("MatMul", 4096, 4e-6);
+    calib::install(t);
+    assert!(calib::enabled());
+    assert_eq!(calib::lookup("MatMul", 4096), Some(4e-6), "median of 3/4/5µs");
+
+    let before = calib::fallbacks();
+    assert_eq!(calib::lookup("Conv", 4096), None, "missing kind");
+    assert_eq!(calib::lookup("MatMul", 1 << 40), None, "missing bucket");
+    assert_eq!(calib::fallbacks(), before + 2);
+
+    calib::uninstall();
+    assert!(!calib::enabled());
+    assert_eq!(calib::installed_fingerprint(), None);
+}
+
+/// The byte-identity guarantee: planning with no table installed must
+/// produce exactly the plan HEAD produced — installing a table changes
+/// the priced seconds (and stamps `cost_source`), uninstalling it
+/// restores the original bytes.
+#[test]
+fn no_table_replan_is_byte_identical() {
+    let _g = calib_guard();
+    let _restore = Restore;
+    let g = mobilenet();
+
+    calib::uninstall();
+    let p0 = roam_plan(&g, &det_roam());
+    assert!(
+        p0.stat("cost_source").is_none(),
+        "no-table plans must not stamp a cost source"
+    );
+    let base = normalized_json(p0);
+
+    let table = harvested_table(&g, &CostModel::default(), &CompressModel::default());
+    calib::install(table);
+    let p1 = roam_plan(&g, &det_roam());
+    assert_eq!(p1.stat("cost_source"), Some(1.0));
+    assert!(
+        p1.stat("calib_fingerprint").is_some(),
+        "calibrated plans carry the table fingerprint"
+    );
+
+    calib::uninstall();
+    let p2 = roam_plan(&g, &det_roam());
+    assert_eq!(
+        normalized_json(p2),
+        base,
+        "uninstalling the table must restore byte-identical plans"
+    );
+}
+
+/// End-to-end acceptance loop: trace a budgeted MobileNet plan, harvest
+/// the table, re-plan under `--calib-table` semantics — the re-plan is
+/// lint-clean and `audit_plan` under the same models reports zero
+/// drift, because the audit replays the exact pricing sequences the
+/// driver used.
+#[test]
+fn calibrated_replan_is_lint_clean_with_zero_drift() {
+    let _g = calib_guard();
+    let _restore = Restore;
+    let g = mobilenet();
+    let cfg = det_hybrid(Technique::Hybrid);
+    let spec = BudgetSpec::Fraction(0.8);
+
+    // Traced run: plan once, then emit the modeled op costs of the
+    // augmented graph (so SwapOut/SwapIn kernels calibrate too), exactly
+    // as `roam swap --trace-out` does.
+    calib::uninstall();
+    let traced = roam_plan_hybrid(&g, spec, &cfg);
+    let table = harvested_table(&traced.graph, &cfg.cost, &cfg.compress);
+    assert!(!table.is_empty());
+
+    // Calibrated re-plan: same budget, measured seconds.
+    calib::install(table);
+    let r = roam_plan_hybrid(&g, spec, &cfg);
+    let lints = lint_plan(&r.graph, &r.plan);
+    assert!(lints.is_empty(), "calibrated re-plan must lint clean: {lints:?}");
+    assert_eq!(r.plan.stat("cost_source"), Some(1.0));
+
+    let rec = audit_plan(&r.graph, g.n_ops(), &r.plan, &cfg.cost, &cfg.compress);
+    assert_eq!(
+        rec.max_abs_rel_drift(),
+        0.0,
+        "self-audit under an unchanged table must report zero drift: {:?}",
+        rec.to_json().to_string()
+    );
+    calib::uninstall();
+}

@@ -402,6 +402,55 @@ fn two_processes_sharing_a_cache_dir_plan_a_cold_key_once() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Cache-aliasing pin for the codec table: two services that differ
+/// only in `ServeCfg.compress` price budgeted plans differently, so
+/// their budgeted cache keys must differ — otherwise one service would
+/// serve the other's plan from a shared cache directory. Unbudgeted
+/// requests never consult the codec table and must keep colliding (the
+/// fold is gated, preserving every pre-existing cache key).
+#[test]
+fn codec_table_splits_budgeted_cache_keys_only() {
+    use roam::compress::cost::CompressModel;
+    use roam::hybrid::{BudgetSpec, Technique};
+
+    let mk_service = |compress: CompressModel| {
+        PlanService::new(PlanCache::new(CacheCfg::default()), ServeCfg {
+            roam: quick_roam(),
+            workers: 1,
+            compress,
+            ..Default::default()
+        })
+    };
+    let svc_plain = mk_service(CompressModel::default());
+    let svc_codec = mk_service(CompressModel::lossless());
+    let mut rng = Pcg64::new(404);
+    let g = random_training_graph(&mut rng, &RandomGraphCfg {
+        fwd_ops: 6,
+        ..Default::default()
+    });
+
+    let budgeted = || {
+        let mut r = PlanRequest::plain(g.clone());
+        r.budget = Some(BudgetSpec::Fraction(0.8));
+        r.technique = Technique::Hybrid;
+        r
+    };
+    let bp = svc_plain.serve_batch(&[budgeted()]);
+    let bc = svc_codec.serve_batch(&[budgeted()]);
+    assert!(bp[0].error.is_none() && bc[0].error.is_none());
+    assert_ne!(
+        bp[0].key, bc[0].key,
+        "budgeted keys must not alias across different codec tables"
+    );
+
+    let up = svc_plain.serve_batch(&[PlanRequest::plain(g.clone())]);
+    let uc = svc_codec.serve_batch(&[PlanRequest::plain(g.clone())]);
+    assert_eq!(
+        up[0].key, uc[0].key,
+        "unbudgeted keys must be unaffected by the codec table"
+    );
+}
+
 /// Warm-start acceptance on the transformer and mobile workloads: plan a
 /// base model, then serve a *rescaled* variant (same architecture,
 /// doubled batch). The re-plan must be warm-seeded from the shape
