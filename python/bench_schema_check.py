@@ -73,7 +73,7 @@ EXPECTED = {
     },
     "BENCH_serve.json": {
         "bench": "serve_throughput",
-        "schema": "serve-throughput-v1",
+        "schema": "serve-throughput-v2",
         "run_keys": [
             "cold_secs",
             "hit_secs",
@@ -83,6 +83,11 @@ EXPECTED = {
             "warm_outcome",
             "cold_bnb_nodes",
             "warm_bnb_nodes",
+            # v2: edit-localized re-plan latency + 2-shard repeat hit rate.
+            "edit_replan_us",
+            "edit_cold_us",
+            "edit_outcome",
+            "shard_hit_rate",
         ],
         "points": None,
     },

@@ -8,7 +8,7 @@
 
 use roam::benchkit::{mib, Report};
 use roam::models::{self, BuildCfg, ModelKind};
-use roam::planner::{roam_plan, RoamCfg};
+use roam::planner::{PlanRequest, RoamCfg};
 use roam::util::cli::Args;
 
 fn main() {
@@ -28,10 +28,13 @@ fn main() {
     for kind in [ModelKind::Bert, ModelKind::Mobilenet] {
         let g = models::build(kind, &BuildCfg::default());
         for &r in &radii {
-            let plan = roam_plan(&g, &RoamCfg {
-                delay_radius: r,
-                ..Default::default()
-            });
+            let plan = PlanRequest::new(&g)
+                .cfg(RoamCfg {
+                    delay_radius: r,
+                    ..Default::default()
+                })
+                .run()
+                .into_plan();
             let delayed = plan
                 .stats
                 .iter()

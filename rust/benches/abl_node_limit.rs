@@ -7,7 +7,7 @@
 
 use roam::benchkit::{mib, Report};
 use roam::models::{self, BuildCfg, ModelKind};
-use roam::planner::{roam_plan, RoamCfg};
+use roam::planner::{PlanRequest, RoamCfg};
 use roam::util::cli::Args;
 
 fn main() {
@@ -27,10 +27,13 @@ fn main() {
     for kind in [ModelKind::Bert, ModelKind::Efficientnet] {
         let g = models::build(kind, &BuildCfg::default());
         for &nl in &limits {
-            let plan = roam_plan(&g, &RoamCfg {
-                node_limit: nl,
-                ..Default::default()
-            });
+            let plan = PlanRequest::new(&g)
+                .cfg(RoamCfg {
+                    node_limit: nl,
+                    ..Default::default()
+                })
+                .run()
+                .into_plan();
             let leaves = plan
                 .stats
                 .iter()

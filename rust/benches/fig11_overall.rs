@@ -6,7 +6,7 @@
 
 use roam::benchkit::{eval_suite_graphs, mib, reduction_pct, Report};
 use roam::planner::model_baseline::{model_plan, ModelCfg, Streaming};
-use roam::planner::{heuristic::heuristic_plan, pytorch, roam_plan, RoamCfg};
+use roam::planner::{heuristic::heuristic_plan, pytorch, PlanRequest, RoamCfg};
 use roam::util::cli::Args;
 
 fn main() {
@@ -35,10 +35,13 @@ fn main() {
             time_limit_secs: time_limit,
             ..Default::default()
         });
-        let r = roam_plan(&g, &RoamCfg {
-            multi_stream: true,
-            ..Default::default()
-        });
+        let r = PlanRequest::new(&g)
+            .cfg(RoamCfg {
+                multi_stream: true,
+                ..Default::default()
+            })
+            .run()
+            .into_plan();
         rep.row(&[
             label,
             mib(pt.actual_peak),

@@ -6,7 +6,7 @@
 
 use roam::benchkit::{eval_suite_graphs, mib, reduction_pct, Report};
 use roam::planner::model_baseline::whole_graph_order;
-use roam::planner::{roam_plan, RoamCfg};
+use roam::planner::{PlanRequest, RoamCfg};
 use roam::sched::lescea::lescea_order;
 use roam::sched::sim::theoretical_peak;
 use roam::sched::Schedule;
@@ -40,7 +40,7 @@ fn main() {
             Deadline::after_secs(time_limit),
             500_000,
         ));
-        let r = roam_plan(&g, &RoamCfg::default());
+        let r = PlanRequest::new(&g).cfg(RoamCfg::default()).run().into_plan();
         let p_roam = r.theoretical_peak;
         rep.row(&[
             label,

@@ -4,7 +4,7 @@
 //! `cargo bench --bench fig13_time [-- --runs 3]`
 
 use roam::benchkit::{eval_suite_graphs, Report};
-use roam::planner::{roam_plan, RoamCfg};
+use roam::planner::{PlanRequest, RoamCfg};
 use roam::util::cli::Args;
 
 fn main() {
@@ -27,12 +27,15 @@ fn main() {
         let mut ss = 0.0;
         let mut ms = 0.0;
         for _ in 0..runs {
-            ss += roam_plan(&g, &RoamCfg::default()).planning_secs;
-            ms += roam_plan(&g, &RoamCfg {
-                multi_stream: true,
-                ..Default::default()
-            })
-            .planning_secs;
+            ss += PlanRequest::new(&g).cfg(RoamCfg::default()).run().into_plan().planning_secs;
+            ms += PlanRequest::new(&g)
+                .cfg(RoamCfg {
+                    multi_stream: true,
+                    ..Default::default()
+                })
+                .run()
+                .into_plan()
+                .planning_secs;
         }
         rep.row(&[
             label,

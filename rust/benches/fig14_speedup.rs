@@ -7,7 +7,7 @@
 
 use roam::benchkit::{eval_suite_graphs, Report};
 use roam::planner::model_baseline::{model_plan, ModelCfg, Streaming};
-use roam::planner::{heuristic::heuristic_plan, roam_plan, RoamCfg};
+use roam::planner::{heuristic::heuristic_plan, PlanRequest, RoamCfg};
 use roam::util::cli::Args;
 
 fn main() {
@@ -29,7 +29,7 @@ fn main() {
         if label.starts_with("alexnet") || label.starts_with("vgg") {
             continue; // paper: "all methods consume very limited time"
         }
-        let r = roam_plan(&g, &RoamCfg::default());
+        let r = PlanRequest::new(&g).cfg(RoamCfg::default()).run().into_plan();
         let h = heuristic_plan(&g);
         let mm = model_plan(&g, &ModelCfg {
             streaming: Streaming::Multi,

@@ -10,7 +10,7 @@ use roam::benchkit::Report;
 use roam::ilp::order_ilp::formulation_size;
 use roam::models::{self, BuildCfg, ModelKind};
 use roam::planner::model_baseline::{model_plan, ModelCfg, Streaming};
-use roam::planner::{roam_plan, RoamCfg};
+use roam::planner::{PlanRequest, RoamCfg};
 use roam::util::cli::Args;
 
 fn main() {
@@ -46,7 +46,7 @@ fn main() {
     workloads.sort_by_key(|(_, g)| g.n_ops());
 
     for (label, g) in workloads {
-        let r = roam_plan(&g, &RoamCfg::default());
+        let r = PlanRequest::new(&g).cfg(RoamCfg::default()).run().into_plan();
         let mm = model_plan(&g, &ModelCfg {
             streaming: Streaming::Multi,
             time_limit_secs: time_limit,

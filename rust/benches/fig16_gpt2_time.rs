@@ -10,7 +10,7 @@
 use roam::benchkit::Report;
 use roam::ilp::order_ilp::formulation_size;
 use roam::models::{self, BuildCfg, ModelKind};
-use roam::planner::{heuristic::heuristic_plan, roam_plan, RoamCfg};
+use roam::planner::{heuristic::heuristic_plan, PlanRequest, RoamCfg};
 use roam::util::cli::Args;
 
 fn main() {
@@ -33,7 +33,7 @@ fn main() {
             ..Default::default()
         });
         let f = formulation_size(&g, g.n_ops());
-        let r = roam_plan(&g, &RoamCfg::default());
+        let r = PlanRequest::new(&g).cfg(RoamCfg::default()).run().into_plan();
         let h = heuristic_plan(&g);
         rep.row(&[
             format!("bs{batch}"),

@@ -6,7 +6,7 @@
 
 use roam::benchkit::{mib, reduction_pct, Report};
 use roam::models::{self, BuildCfg, ModelKind};
-use roam::planner::{heuristic::heuristic_plan, pytorch, roam_plan, RoamCfg};
+use roam::planner::{heuristic::heuristic_plan, pytorch, PlanRequest, RoamCfg};
 use roam::util::cli::Args;
 
 fn main() {
@@ -33,7 +33,7 @@ fn main() {
         });
         let pt = pytorch(&g);
         let h = heuristic_plan(&g);
-        let r = roam_plan(&g, &RoamCfg::default());
+        let r = PlanRequest::new(&g).cfg(RoamCfg::default()).run().into_plan();
         rep.row(&[
             format!("bs{batch}"),
             mib(pt.actual_peak),

@@ -15,7 +15,7 @@ use roam::layout::dsa_ref::min_arena_layout_ref;
 use roam::layout::Item;
 use roam::models::{self, BuildCfg, ModelKind};
 use roam::planner::roam::extract_subgraph;
-use roam::planner::{roam_plan, RoamCfg};
+use roam::planner::{PlanRequest, RoamCfg};
 use roam::sched::bnb::{min_peak_order, BnbCfg};
 use roam::sched::bnb_ref::min_peak_order_ref;
 use roam::segments::tree::{construct, TreeCfg};
@@ -202,17 +202,20 @@ fn main() {
     // --- 3. end-to-end planner wall-clock per workload --------------------
     let mut rep = Report::new(
         "planner_wall_clock",
-        "Planner wall-clock per workload (roam_plan)",
+        "Planner wall-clock per workload (PlanRequest)",
         &["workload", "node_limit", "secs", "theo_peak_mib", "actual_peak_mib"],
     );
     let node_limits: &[usize] = if small { &[64] } else { &[64, 256] };
     let mut planner_rows = Vec::new();
     for (label, g) in &workloads {
         for &node_limit in node_limits {
-            let plan = roam_plan(g, &RoamCfg {
-                node_limit,
-                ..Default::default()
-            });
+            let plan = PlanRequest::new(g)
+                .cfg(RoamCfg {
+                    node_limit,
+                    ..Default::default()
+                })
+                .run()
+                .into_plan();
             rep.row(&[
                 label.clone(),
                 node_limit.to_string(),
@@ -257,11 +260,11 @@ fn main() {
         let cfg = RoamCfg::default();
         roam::obs::span::set_enabled(false);
         let off_secs = best_of(3, &|| {
-            let _ = roam_plan(g, &cfg);
+            let _ = PlanRequest::new(g).cfg(cfg.clone()).run().into_plan();
         });
         roam::obs::span::set_enabled(true);
         let on_secs = best_of(3, &|| {
-            let _ = roam_plan(g, &cfg);
+            let _ = PlanRequest::new(g).cfg(cfg.clone()).run().into_plan();
         });
         roam::obs::span::set_enabled(false);
         let events = roam::obs::span::drain().len();

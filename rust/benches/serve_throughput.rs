@@ -1,16 +1,23 @@
 //! Serving-layer throughput: cold vs cache-hit vs warm-started planning
-//! latency, batch dedupe ratio, and the warm-start search saving (BnB
-//! nodes explored, cold vs warm) on a rescaled transformer.
+//! latency, batch dedupe ratio, the warm-start search saving (BnB nodes
+//! explored, cold vs warm) on a rescaled transformer, the edit-localized
+//! re-plan latency on a single-tensor edit, and the cache hit rate of a
+//! 2-shard consistent-hash deployment.
 //!
 //! Writes `bench_results/serve_throughput.json` (benchkit table) and
-//! appends a run to the repo-root `BENCH_serve.json` trajectory.
+//! appends a run to the repo-root `BENCH_serve.json` trajectory
+//! (schema `serve-throughput-v2`).
 //!
 //! `cargo bench --bench serve_throughput [-- --small] [--workers N]`
 
 use roam::benchkit::Report;
+use roam::hybrid::Technique;
 use roam::models::{self, BuildCfg, ModelKind};
-use roam::planner::RoamCfg;
-use roam::serve::{CacheCfg, Outcome, PlanCache, PlanRequest, PlanService, ServeCfg};
+use roam::planner::{PlanRequest, RoamCfg};
+use roam::serve::{
+    cfg_key, segment_signature, CacheCfg, Outcome, PlanCache, PlanService, ServeCfg, ServeRequest,
+    ShardTopology,
+};
 use roam::util::cli::Args;
 use roam::util::json::Json;
 use roam::util::Stopwatch;
@@ -43,11 +50,11 @@ fn main() {
     );
 
     // --- 1. cold batch with duplicates: dedupe + cold latency -------------
-    let mut batch1: Vec<PlanRequest> = Vec::new();
+    let mut batch1: Vec<ServeRequest> = Vec::new();
     for _ in 0..3 {
-        batch1.push(PlanRequest::plain(transformer(1, depth)));
+        batch1.push(ServeRequest::plain(transformer(1, depth)));
     }
-    batch1.push(PlanRequest::plain(models::build(
+    batch1.push(ServeRequest::plain(models::build(
         ModelKind::Mobilenet,
         &BuildCfg::default(),
     )));
@@ -78,12 +85,12 @@ fn main() {
     for batch in [2usize, 4, 8] {
         let rescaled = transformer(batch, depth);
         let sw = Stopwatch::start();
-        let cold_plan = roam::planner::roam_plan(&rescaled, &RoamCfg::default());
+        let cold_plan = PlanRequest::new(&rescaled).run().into_plan();
         let rescaled_cold_secs = sw.secs();
         let cold_nodes = stat(&cold_plan, "order_nodes_explored");
 
         let sw = Stopwatch::start();
-        let r3 = svc.serve_batch(&[PlanRequest::plain(rescaled)]);
+        let r3 = svc.serve_batch(&[ServeRequest::plain(rescaled)]);
         let warm_secs = sw.secs();
         let warm_nodes = stat(&r3[0].plan, "order_nodes_explored");
         let outcome = r3[0].outcome.name().to_string();
@@ -99,6 +106,89 @@ fn main() {
     }
     let (rescale_batch, rescaled_cold_secs, cold_nodes, warm_secs, warm_nodes, warm_outcome) =
         pair.expect("at least one rescale pair ran");
+
+    // --- 4. single-tensor edit: edit-localized re-plan vs cold -----------
+    // Resize one tensor of the cached base transformer. The division is
+    // purely structural, so the edited graph keeps the segment family and
+    // dirties only the segments that see the tensor — the service splices
+    // the clean segments' cached orders and re-plans just the dirty ones.
+    let base = transformer(1, depth);
+    let ck = cfg_key(&svc.cfg().roam, None, Technique::Hybrid, &svc.cfg().compress);
+    let sig = segment_signature(&base, ck);
+    let mut edited = base.clone();
+    let t = sig
+        .subs
+        .iter()
+        .flat_map(|s| s.tensors.iter().copied())
+        .find(|&t| edited.tensors[t].size > 0)
+        .expect("a sized tensor inside a segment");
+    edited.tensors[t].size *= 2;
+    let sw = Stopwatch::start();
+    let edit_cold_plan = PlanRequest::new(&edited).run().into_plan();
+    let edit_cold_us = sw.secs() * 1e6;
+    let sw = Stopwatch::start();
+    let r4 = svc.serve_batch(&[ServeRequest::plain(edited)]);
+    let edit_replan_us = sw.secs() * 1e6;
+    let edit_outcome = r4[0].outcome.name().to_string();
+    assert!(r4[0].lint_ok, "edit re-plan must lint");
+    println!(
+        "edit re-plan: {edit_replan_us:.0}µs ({edit_outcome}) vs {edit_cold_us:.0}µs cold, \
+         {:.0} vs {:.0} bnb nodes",
+        stat(&r4[0].plan, "order_nodes_explored"),
+        stat(&edit_cold_plan, "order_nodes_explored"),
+    );
+
+    // --- 5. 2-shard scale-out: exclusive ownership + hit rate -------------
+    // Two instances over the same workload: every fingerprint key must be
+    // cold-planned by exactly one owner, and a repeat of the workload must
+    // hit the owner's cache.
+    let shard_svc: Vec<PlanService> = (0..2u32)
+        .map(|shard_id| {
+            PlanService::new(
+                PlanCache::new(CacheCfg::default()),
+                ServeCfg {
+                    roam: RoamCfg::default(),
+                    workers,
+                    topology: ShardTopology {
+                        shards: 2,
+                        shard_id,
+                    },
+                    ..Default::default()
+                },
+            )
+        })
+        .collect();
+    let workload: Vec<ServeRequest> = (1..=4)
+        .map(|b| ServeRequest::plain(transformer(b, depth)))
+        .chain((1..=2).map(|b| {
+            ServeRequest::plain(models::build(ModelKind::Mobilenet, &BuildCfg {
+                batch: b,
+                ..Default::default()
+            }))
+        }))
+        .collect();
+    let cold: Vec<Vec<roam::serve::PlanResponse>> =
+        shard_svc.iter().map(|s| s.serve_batch(&workload)).collect();
+    for i in 0..workload.len() {
+        let owners = (0..2)
+            .filter(|&s| cold[s][i].outcome != Outcome::NotOwner)
+            .count();
+        assert_eq!(owners, 1, "request {i} must have exactly one owner");
+    }
+    let sw = Stopwatch::start();
+    let again: Vec<Vec<roam::serve::PlanResponse>> =
+        shard_svc.iter().map(|s| s.serve_batch(&workload)).collect();
+    let shard_hit_secs = sw.secs();
+    let shard_hits: usize = again
+        .iter()
+        .flat_map(|rs| rs.iter())
+        .filter(|r| r.outcome == Outcome::CacheHit)
+        .count();
+    let shard_hit_rate = shard_hits as f64 / workload.len() as f64;
+    println!(
+        "2-shard repeat: {shard_hits}/{} cache hits ({shard_hit_rate:.2}) in {shard_hit_secs:.3}s",
+        workload.len()
+    );
 
     // --- table ------------------------------------------------------------
     let mut rep = Report::new(
@@ -126,6 +216,16 @@ fn main() {
         format!("{warm_secs:.3}"),
         format!("{warm_nodes:.0} bnb nodes ({warm_outcome})"),
     ]);
+    rep.row(&[
+        "edit-replan".into(),
+        format!("{:.3}", edit_replan_us / 1e6),
+        format!("{edit_replan_us:.0}µs vs {edit_cold_us:.0}µs cold ({edit_outcome})"),
+    ]);
+    rep.row(&[
+        "2-shard-repeat".into(),
+        format!("{shard_hit_secs:.3}"),
+        format!("{shard_hits}/{} owner cache hits", workload.len()),
+    ]);
     rep.finish();
 
     // --- trajectory -------------------------------------------------------
@@ -147,6 +247,13 @@ fn main() {
         ("cold_bnb_nodes", Json::Num(cold_nodes)),
         ("warm_bnb_nodes", Json::Num(warm_nodes)),
         ("cold_bnb_nodes_base_model", Json::Num(cold_bnb_nodes_b1)),
+        // v2: edit-localized re-plan latency on a single-tensor edit of
+        // the cached base transformer, against a cold plan of the same
+        // edited graph; and the 2-shard consistent-hash repeat hit rate.
+        ("edit_replan_us", Json::Num(edit_replan_us)),
+        ("edit_cold_us", Json::Num(edit_cold_us)),
+        ("edit_outcome", Json::Str(edit_outcome.clone())),
+        ("shard_hit_rate", Json::Num(shard_hit_rate)),
     ]);
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()
@@ -155,18 +262,24 @@ fn main() {
     roam::benchkit::append_trajectory(
         &path,
         "serve_throughput",
-        "serve-throughput-v1",
+        "serve-throughput-v2",
         "cargo bench --bench serve_throughput",
         run,
     );
     println!("--- serve trajectory appended → {}", path.display());
     println!(
         "cold {cold_secs:.3}s  hit {hit_secs:.3}s  warm {warm_secs:.3}s  \
-         dedupe {dedupe_ratio:.2}  bnb nodes cold {cold_nodes:.0} → warm {warm_nodes:.0}"
+         dedupe {dedupe_ratio:.2}  bnb nodes cold {cold_nodes:.0} → warm {warm_nodes:.0}  \
+         edit {edit_replan_us:.0}µs  shard-hit {shard_hit_rate:.2}"
     );
     assert!(hits > 0, "second serve of an identical batch must hit the cache");
     assert!(
         warm_nodes <= cold_nodes,
         "warm-started re-plan explored more bnb nodes ({warm_nodes}) than cold ({cold_nodes})"
+    );
+    assert_eq!(
+        shard_hits,
+        workload.len(),
+        "every owned key must hit its owner's cache on repeat"
     );
 }

@@ -9,7 +9,7 @@ use roam::benchkit::{eval_suite_graphs, Report};
 use roam::layout::greedy_size::greedy_by_size;
 use roam::layout::llfb::llfb;
 use roam::planner::model_baseline::{model_plan, ModelCfg, Streaming};
-use roam::planner::{layout_items, pytorch, roam_plan, RoamCfg};
+use roam::planner::{layout_items, pytorch, PlanRequest, RoamCfg};
 use roam::sched::Schedule;
 use roam::util::cli::Args;
 
@@ -41,8 +41,11 @@ fn main() {
         };
         let llfb_arena = llfb(&items).arena_size(&items);
         // Ours-SS / Ours-MS.
-        let r_ss = roam_plan(&g, &RoamCfg::default());
-        let r_ms = roam_plan(&g, &RoamCfg { multi_stream: true, ..Default::default() });
+        let r_ss = PlanRequest::new(&g).cfg(RoamCfg::default()).run().into_plan();
+        let r_ms = PlanRequest::new(&g)
+            .cfg(RoamCfg { multi_stream: true, ..Default::default() })
+            .run()
+            .into_plan();
         // MODeL-MS.
         let mm = model_plan(&g, &ModelCfg {
             streaming: Streaming::Multi,

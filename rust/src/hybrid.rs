@@ -793,6 +793,12 @@ impl HybridPlan {
 /// many bytes of headroom, or an order that issues its swap-outs
 /// earlier, for the budget to hold mid-transfer.
 pub fn roam_plan_hybrid(g: &Graph, spec: BudgetSpec, cfg: &HybridCfg) -> HybridPlan {
+    crate::planner::PlanRequest::new(g).hybrid_cfg(cfg.clone()).budget(spec).run().into_hybrid()
+}
+
+/// The real hybrid escalation driver behind [`roam_plan_hybrid`] and
+/// [`crate::planner::PlanRequest::budget`].
+pub(crate) fn hybrid_core(g: &Graph, spec: BudgetSpec, cfg: &HybridCfg) -> HybridPlan {
     let sw = Stopwatch::start();
     // Calibration coverage accounting: the delta of the global fallback
     // counter across this driver run is how many pricings fell back to

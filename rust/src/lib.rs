@@ -56,18 +56,26 @@
 //!
 //! ## Quickstart
 //!
+//! Every planning mode — plain, warm-seeded, overlap-aware, budgeted —
+//! goes through one builder, [`planner::PlanRequest`] (the historical
+//! free functions remain as one-line delegations to it):
+//!
 //! ```no_run
 //! use roam::models::{self, ModelKind, BuildCfg};
-//! use roam::planner::{roam_plan, RoamCfg};
-//! use roam::recompute::{roam_plan_budgeted, BudgetSpec, RecomputeCfg};
+//! use roam::planner::{PlanRequest, RoamCfg};
+//! use roam::hybrid::{BudgetSpec, HybridCfg};
 //!
 //! let g = models::build(ModelKind::Bert, &BuildCfg { batch: 1, ..Default::default() });
-//! let plan = roam_plan(&g, &RoamCfg::default());
+//! let plan = PlanRequest::new(&g).cfg(RoamCfg::default()).run().into_plan();
 //! println!("theoretical peak = {} actual peak = {} frag = {:.2}%",
 //!          plan.theoretical_peak, plan.actual_peak, plan.frag_pct());
 //!
 //! // Same model under a hard budget of 60% of the unbudgeted total:
-//! let b = roam_plan_budgeted(&g, BudgetSpec::Fraction(0.6), &RecomputeCfg::default());
+//! let b = PlanRequest::new(&g)
+//!     .hybrid_cfg(HybridCfg::default())
+//!     .budget(BudgetSpec::Fraction(0.6))
+//!     .run()
+//!     .into_hybrid();
 //! println!("budgeted total = {} (met: {}, +{} recompute ops)",
 //!          b.total(), b.met, b.recompute_ops);
 //! ```

@@ -38,11 +38,11 @@
 
 use roam::benchkit::{mib, reduction_pct};
 use roam::compress::CompressModel;
-use roam::hybrid::{roam_plan_hybrid, HybridCfg, Technique};
+use roam::hybrid::{HybridCfg, Technique};
 use roam::models::{self, BuildCfg, ModelKind, Optim};
 use roam::planner::model_baseline::{model_plan, ModelCfg, Streaming};
-use roam::planner::{heuristic::heuristic_plan, pytorch, roam_plan, ExecutionPlan, RoamCfg};
-use roam::recompute::{roam_plan_budgeted, BudgetSpec, RecomputeCfg, Strategy};
+use roam::planner::{heuristic::heuristic_plan, pytorch, ExecutionPlan, PlanRequest, RoamCfg};
+use roam::recompute::{BudgetSpec, RecomputeCfg, Strategy};
 use roam::swap::CostModel;
 use roam::util::cli::Args;
 use roam::util::error::Result;
@@ -172,13 +172,22 @@ fn print_help() {
          \x20              recompute|swap|compress|hybrid for it)\n\
          \x20 serve       planning service: JSONL requests on stdin, one\n\
          \x20             response line each; a blank line flushes a batch\n\
-         \x20             (single-flight dedupe + cache within/across batches).\n\
+         \x20             (single-flight dedupe + cache within/across batches;\n\
+         \x20              edit-localized re-planning for near-miss graphs).\n\
          \x20             Request: {{\"model\":\"bert\",\"batch\":32,\"budget\":0.6,\n\
-         \x20             \"technique\":\"hybrid\",\"deadline_secs\":5}}\n\
+         \x20             \"technique\":\"hybrid\",\"deadline_secs\":5}}; add\n\
+         \x20             \"v\":2 for wire v2 (adds \"tenant\":\"name\"; responses\n\
+         \x20             then echo \"v\"; unknown fields warn, never error)\n\
          \x20             Flags: --cache-capacity N --cache-dir DIR --workers N\n\
-         \x20             --deadline-secs F --no-warm --max-inflight N\n\
+         \x20             --deadline-secs F --no-warm --no-edit-replan\n\
+         \x20             --max-inflight N --max-inflight-per-tenant N\n\
          \x20             (admission control: at most N distinct planning\n\
-         \x20              jobs per batch, the rest answer with an error)\n\
+         \x20              jobs per batch / per wire-v2 tenant, the rest\n\
+         \x20              answer with an error)\n\
+         \x20             --shards N --shard-id I (consistent-hash scale-out:\n\
+         \x20              each fingerprint key has exactly one owner; a\n\
+         \x20              non-owner answers outcome \"not_owner\" and\n\
+         \x20              persists under CACHE_DIR/shard-I)\n\
          \x20 batch       serve every *.json/*.jsonl request file in a\n\
          \x20             directory as one batch (same flags as serve)\n\
          \x20 calibrate   harvest a measured cost table from one or more\n\
@@ -254,16 +263,16 @@ fn run_planner(g: &roam::Graph, args: &Args) -> Result<ExecutionPlan> {
                 ..Default::default()
             },
         ),
-        "roam-ss" | "roam-ms" => roam_plan(
-            g,
-            &RoamCfg {
+        "roam-ss" | "roam-ms" => PlanRequest::new(g)
+            .cfg(RoamCfg {
                 node_limit: args.usize("node-limit", 64),
                 delay_radius: args.f64("delay-radius", 2.0),
                 time_limit_secs: time_limit,
                 multi_stream: planner == "roam-ms",
                 ..Default::default()
-            },
-        ),
+            })
+            .run()
+            .into_plan(),
         other => roam::bail!("unknown planner '{other}'"),
     })
 }
@@ -357,7 +366,11 @@ fn cmd_recompute(args: &Args) -> Result<()> {
     let g = build_graph(args)?;
     let spec = budget_spec(args)?;
     let cfg = recompute_cfg(args)?;
-    let r = roam_plan_budgeted(&g, spec, &cfg);
+    let r = PlanRequest::new(&g)
+        .hybrid_cfg(cfg.to_hybrid())
+        .budget(spec)
+        .run()
+        .into_hybrid();
     emit_costs(args, &r.graph);
     println!(
         "budget {} ({})  baseline total {} ({})  strategy {}",
@@ -432,7 +445,11 @@ fn cmd_swap(args: &Args) -> Result<()> {
     let g = build_graph(args)?;
     let spec = budget_spec(args)?;
     let cfg = hybrid_cfg(args, Technique::Swap)?;
-    let r = roam_plan_hybrid(&g, spec, &cfg);
+    let r = PlanRequest::new(&g)
+        .hybrid_cfg(cfg.clone())
+        .budget(spec)
+        .run()
+        .into_hybrid();
     emit_costs(args, &r.graph);
     println!(
         "budget {} ({})  baseline total {} ({})  technique {}",
@@ -492,7 +509,11 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let g = build_graph(args)?;
     let spec = budget_spec(args)?;
     let cfg = hybrid_cfg(args, Technique::Compress)?;
-    let r = roam_plan_hybrid(&g, spec, &cfg);
+    let r = PlanRequest::new(&g)
+        .hybrid_cfg(cfg.clone())
+        .budget(spec)
+        .run()
+        .into_hybrid();
     emit_costs(args, &r.graph);
     println!(
         "budget {} ({})  baseline total {} ({})  technique {}",
@@ -571,10 +592,13 @@ fn cmd_compare(args: &Args) -> Result<()> {
             time_limit_secs: time_limit,
             ..Default::default()
         }),
-        roam_plan(&g, &RoamCfg {
-            time_limit_secs: time_limit.max(60.0),
-            ..Default::default()
-        }),
+        PlanRequest::new(&g)
+            .cfg(RoamCfg {
+                time_limit_secs: time_limit.max(60.0),
+                ..Default::default()
+            })
+            .run()
+            .into_plan(),
     ];
     // Optional budgeted row: `compare --model vit --budget 0.6
     // [--technique recompute|swap|hybrid]`. Without --technique this is
@@ -584,11 +608,20 @@ fn cmd_compare(args: &Args) -> Result<()> {
         if args.opt("technique").is_some() {
             let mut cfg = hybrid_cfg(args, Technique::Hybrid)?;
             cfg.roam.time_limit_secs = time_limit;
-            plans.push(roam_plan_hybrid(&g, spec, &cfg).plan);
+            plans.push(
+                PlanRequest::new(&g).hybrid_cfg(cfg).budget(spec).run().into_hybrid().plan,
+            );
         } else {
             let mut cfg = recompute_cfg(args)?;
             cfg.roam.time_limit_secs = time_limit;
-            plans.push(roam_plan_budgeted(&g, spec, &cfg).plan);
+            plans.push(
+                PlanRequest::new(&g)
+                    .hybrid_cfg(cfg.to_hybrid())
+                    .budget(spec)
+                    .run()
+                    .into_hybrid()
+                    .plan,
+            );
         }
     }
     let base = plans[0].actual_peak;
@@ -608,8 +641,23 @@ fn cmd_compare(args: &Args) -> Result<()> {
 
 /// Build the serving stack from the shared CLI flags.
 fn make_service(args: &Args) -> Result<roam::serve::PlanService> {
-    use roam::serve::{CacheCfg, PlanCache, PlanService, ServeCfg};
-    let dir = args.opt("cache-dir").map(std::path::PathBuf::from);
+    use roam::serve::{CacheCfg, PlanCache, PlanService, ServeCfg, ShardTopology};
+    let shards = args.usize("shards", 1).max(1) as u32;
+    let shard_id = args.usize("shard-id", 0) as u32;
+    if shard_id >= shards {
+        roam::bail!("--shard-id {shard_id} out of range for --shards {shards}");
+    }
+    let topology = ShardTopology { shards, shard_id };
+    // Each shard owner persists into its own subdirectory so instances
+    // sharing a filesystem never contend on (or cross-load) entries the
+    // ring assigns to another owner.
+    let dir = args.opt("cache-dir").map(std::path::PathBuf::from).map(|d| {
+        if shards > 1 {
+            d.join(format!("shard-{shard_id}"))
+        } else {
+            d
+        }
+    });
     let persistent = dir.is_some();
     let cache = PlanCache::new(CacheCfg {
         capacity: args.usize("cache-capacity", 256),
@@ -635,9 +683,13 @@ fn make_service(args: &Args) -> Result<roam::serve::PlanService> {
         warm_start: !args.bool_flag("no-warm"),
         default_deadline_secs: args.f64("deadline-secs", 0.0),
         max_inflight: args.usize("max-inflight", 0),
+        max_inflight_per_tenant: args.usize("max-inflight-per-tenant", 0),
+        edit_replan: !args.bool_flag("no-edit-replan"),
+        topology,
         // Codec table for budgeted requests; folded into cache keys when
         // enabled (serve::canon) so differing tables never alias.
         compress: CompressModel::from_args(args).map_err(|e| roam::err!("{e}"))?,
+        ..ServeCfg::default()
     }))
 }
 
@@ -647,16 +699,22 @@ fn make_service(args: &Args) -> Result<roam::serve::PlanService> {
 /// visible per flush, not just at end of stream.
 fn serve_and_print(
     svc: &roam::serve::PlanService,
-    reqs: Vec<roam::serve::PlanRequest>,
+    reqs: Vec<roam::serve::ServeRequest>,
+    vers: Vec<u64>,
     base_id: usize,
     metrics: bool,
 ) {
     if reqs.is_empty() {
         return;
     }
+    debug_assert_eq!(reqs.len(), vers.len());
     let responses = svc.serve_batch(&reqs);
     for (i, r) in responses.iter().enumerate() {
-        println!("{}", roam::serve::response_to_json(base_id + i, r));
+        // Each response is rendered at the wire version its request
+        // declared: v1 lines stay byte-identical to the unversioned
+        // protocol, v2+ lines echo a "v" field.
+        let v = vers.get(i).copied().unwrap_or(1);
+        println!("{}", roam::serve::response_to_json_v(base_id + i, r, v));
     }
     if metrics {
         println!("{}", roam::serve::summary_json(svc));
@@ -668,7 +726,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let svc = make_service(args)?;
     let metrics = args.bool_flag("metrics");
     let stdin = std::io::stdin();
-    let mut batch: Vec<roam::serve::PlanRequest> = Vec::new();
+    let mut batch: Vec<roam::serve::ServeRequest> = Vec::new();
+    let mut vers: Vec<u64> = Vec::new();
     let mut served = 0usize;
     let mut rejected = 0usize;
     for line in stdin.lock().lines() {
@@ -678,15 +737,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // Blank line = batch boundary.
             let reqs = std::mem::take(&mut batch);
             let n = reqs.len();
-            serve_and_print(&svc, reqs, served, metrics);
+            serve_and_print(&svc, reqs, std::mem::take(&mut vers), served, metrics);
             served += n;
             continue;
         }
         // A malformed line must not kill the stream (or the batch
         // buffered so far): answer it with an error object and move on
         // (the parse + error shape are unit-tested in serve::service).
-        match roam::serve::request_from_line(trimmed) {
-            Ok(req) => batch.push(req),
+        // Unknown fields are never errors — the typed wire decoder
+        // reports them as warnings, logged here.
+        match roam::serve::wire_request_from_line(trimmed) {
+            Ok(w) => {
+                for warn in &w.warnings {
+                    roam::log_warn!("request {}: {warn}", served + batch.len());
+                }
+                batch.push(w.request);
+                vers.push(w.v);
+            }
             Err(e) => {
                 rejected += 1;
                 println!("{}", roam::serve::error_json(&e));
@@ -694,7 +761,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     let n = batch.len();
-    serve_and_print(&svc, std::mem::take(&mut batch), served, metrics);
+    serve_and_print(
+        &svc,
+        std::mem::take(&mut batch),
+        std::mem::take(&mut vers),
+        served,
+        metrics,
+    );
     served += n;
     println!("{}", roam::serve::summary_json(&svc));
     roam::log_info!("served {served} request(s), rejected {rejected}");
@@ -722,6 +795,7 @@ fn cmd_batch(args: &Args) -> Result<()> {
         .collect();
     paths.sort();
     let mut reqs = Vec::new();
+    let mut vers: Vec<u64> = Vec::new();
     for p in &paths {
         let text = std::fs::read_to_string(p)?;
         // A file is either one JSON document (object, or array of
@@ -739,7 +813,12 @@ fn cmd_batch(args: &Args) -> Result<()> {
                 .collect::<Result<Vec<_>>>()?,
         };
         for j in &docs {
-            reqs.push(roam::serve::request_from_json(j).map_err(|e| roam::err!("{e}"))?);
+            let w = roam::serve::wire_request_from_json(j).map_err(|e| roam::err!("{e}"))?;
+            for warn in &w.warnings {
+                roam::log_warn!("{}: {warn}", p.display());
+            }
+            reqs.push(w.request);
+            vers.push(w.v);
         }
     }
     if reqs.is_empty() {
@@ -747,7 +826,7 @@ fn cmd_batch(args: &Args) -> Result<()> {
     }
     let svc = make_service(args)?;
     let n = reqs.len();
-    serve_and_print(&svc, reqs, 0, args.bool_flag("metrics"));
+    serve_and_print(&svc, reqs, vers, 0, args.bool_flag("metrics"));
     println!("{}", roam::serve::summary_json(&svc));
     roam::log_info!("served {n} request(s) from {} file(s)", paths.len());
     Ok(())
@@ -814,7 +893,11 @@ fn cmd_audit(args: &Args) -> Result<()> {
     let (graph, plan, cost, compress) = if budgeted {
         let spec = budget_spec(args)?;
         let cfg = hybrid_cfg(args, Technique::Hybrid)?;
-        let r = roam_plan_hybrid(&g, spec, &cfg);
+        let r = PlanRequest::new(&g)
+            .hybrid_cfg(cfg.clone())
+            .budget(spec)
+            .run()
+            .into_hybrid();
         (r.graph, r.plan, cfg.cost, cfg.compress)
     } else {
         let plan = run_planner(&g, args)?;
@@ -911,10 +994,13 @@ fn cmd_train(args: &Args) -> Result<()> {
             g.n_ops(),
             g.n_tensors()
         );
-        let p = roam_plan(&g, &RoamCfg {
-            time_limit_secs: args.f64("plan-time-limit", 120.0),
-            ..Default::default()
-        });
+        let p = PlanRequest::new(&g)
+            .cfg(RoamCfg {
+                time_limit_secs: args.f64("plan-time-limit", 120.0),
+                ..Default::default()
+            })
+            .run()
+            .into_plan();
         let base = pytorch(&g);
         println!(
             "  ROAM actual peak {} vs dynamic-allocation {}  (−{:.1}%), frag {:.2}%",

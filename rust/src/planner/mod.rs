@@ -25,9 +25,11 @@
 pub mod heuristic;
 pub mod lint;
 pub mod model_baseline;
+pub mod request;
 pub mod roam;
 
 pub use lint::{assert_plan_ok, lint_plan};
+pub use request::{PlanOutcome, PlanRequest};
 pub use roam::{
     roam_plan, roam_plan_full, roam_plan_seeded, OrderObjectiveCfg, RoamCfg, WarmSeed,
 };

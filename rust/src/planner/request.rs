@@ -1,0 +1,242 @@
+//! Unified planning entrypoint: one [`PlanRequest`] builder replaces the
+//! historical five-way family `roam_plan` / `roam_plan_seeded` /
+//! `roam_plan_full` / `roam_plan_budgeted` / `roam_plan_hybrid`.
+//!
+//! Every way of asking ROAM for a plan is a point in one small space:
+//! a graph, a planner configuration, optionally a warm seed (cache
+//! replay), optionally an overlap-aware ordering objective, and
+//! optionally a hard memory budget with a technique policy. The legacy
+//! entrypoints survive as one-line delegations so call sites migrate
+//! incrementally, but everything internal — the serving layer, the CLI,
+//! the benches — builds through here, which is what lets the serve-side
+//! incremental re-planner have a single construction path.
+//!
+//! ```no_run
+//! use roam::planner::PlanRequest;
+//! use roam::hybrid::BudgetSpec;
+//! # let g = roam::models::build(roam::models::ModelKind::Alexnet,
+//! #                             &roam::models::BuildCfg::default());
+//! // Plain plan with defaults:
+//! let plan = PlanRequest::new(&g).run().into_plan();
+//! // Budgeted plan (hybrid eviction driver):
+//! let out = PlanRequest::new(&g).budget(BudgetSpec::Fraction(0.6)).run();
+//! assert!(out.budgeted().is_some());
+//! ```
+
+use crate::graph::Graph;
+use crate::hybrid::{hybrid_core, BudgetSpec, HybridCfg, HybridPlan, Technique};
+use crate::planner::roam::{plan_core, OrderObjectiveCfg, RoamCfg, WarmSeed};
+use crate::planner::ExecutionPlan;
+
+/// Builder for a single planning run. Construct with [`PlanRequest::new`],
+/// chain the optional knobs, then [`PlanRequest::run`].
+#[derive(Clone, Debug)]
+pub struct PlanRequest<'g> {
+    graph: &'g Graph,
+    cfg: RoamCfg,
+    warm: Option<WarmSeed>,
+    objective: Option<OrderObjectiveCfg>,
+    budget: Option<BudgetSpec>,
+    hybrid: HybridCfg,
+}
+
+impl<'g> PlanRequest<'g> {
+    /// A plain request with default configuration.
+    pub fn new(graph: &'g Graph) -> Self {
+        PlanRequest {
+            graph,
+            cfg: RoamCfg::default(),
+            warm: None,
+            objective: None,
+            budget: None,
+            hybrid: HybridCfg::default(),
+        }
+    }
+
+    /// Planner configuration (also used for every budgeted re-plan round).
+    pub fn cfg(mut self, cfg: RoamCfg) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Warm-start seed (cache replay). Ignored by budgeted runs — the
+    /// hybrid driver re-plans rewritten graphs the seed doesn't describe.
+    pub fn warm(mut self, seed: WarmSeed) -> Self {
+        self.warm = Some(seed);
+        self
+    }
+
+    /// Optional form of [`PlanRequest::warm`], for call sites holding an
+    /// `Option` (the cache lookup path).
+    pub fn warm_opt(mut self, seed: Option<WarmSeed>) -> Self {
+        self.warm = seed;
+        self
+    }
+
+    /// Overlap-aware leaf ordering objective (plain runs only; the hybrid
+    /// driver derives its own per-round objective from `order_lambda`).
+    pub fn objective(mut self, obj: OrderObjectiveCfg) -> Self {
+        self.objective = Some(obj);
+        self
+    }
+
+    /// Optional form of [`PlanRequest::objective`].
+    pub fn objective_opt(mut self, obj: Option<OrderObjectiveCfg>) -> Self {
+        self.objective = obj;
+        self
+    }
+
+    /// Hard memory budget: routes the run through the hybrid eviction
+    /// driver (technique per [`PlanRequest::technique`] /
+    /// [`PlanRequest::hybrid_cfg`]).
+    pub fn budget(mut self, spec: BudgetSpec) -> Self {
+        self.budget = Some(spec);
+        self
+    }
+
+    /// Optional form of [`PlanRequest::budget`].
+    pub fn budget_opt(mut self, spec: Option<BudgetSpec>) -> Self {
+        self.budget = spec;
+        self
+    }
+
+    /// Eviction technique policy for budgeted runs.
+    pub fn technique(mut self, t: Technique) -> Self {
+        self.hybrid.technique = t;
+        self
+    }
+
+    /// Full hybrid-driver configuration for budgeted runs (strategy, cost
+    /// model, codec table, rounds, λ, slide). Also adopts its embedded
+    /// `roam` configuration, so set this *before* [`PlanRequest::cfg`]
+    /// when overriding both.
+    pub fn hybrid_cfg(mut self, h: HybridCfg) -> Self {
+        self.cfg = h.roam.clone();
+        self.hybrid = h;
+        self
+    }
+
+    /// Execute the request.
+    pub fn run(self) -> PlanOutcome {
+        match self.budget {
+            Some(spec) => {
+                let mut h = self.hybrid;
+                h.roam = self.cfg;
+                PlanOutcome {
+                    plan: None,
+                    budgeted: Some(hybrid_core(self.graph, spec, &h)),
+                }
+            }
+            None => PlanOutcome {
+                plan: Some(plan_core(
+                    self.graph,
+                    &self.cfg,
+                    self.warm.as_ref(),
+                    self.objective.as_ref(),
+                )),
+                budgeted: None,
+            },
+        }
+    }
+}
+
+/// Result of [`PlanRequest::run`]: always carries an [`ExecutionPlan`];
+/// budgeted runs additionally carry the full [`HybridPlan`] (rewritten
+/// graph, budget verdict, per-technique eviction counters).
+#[derive(Clone, Debug)]
+pub struct PlanOutcome {
+    plan: Option<ExecutionPlan>,
+    budgeted: Option<HybridPlan>,
+}
+
+impl PlanOutcome {
+    /// The chosen execution plan (plain or budgeted).
+    pub fn plan(&self) -> &ExecutionPlan {
+        match (&self.plan, &self.budgeted) {
+            (Some(p), _) => p,
+            (None, Some(h)) => &h.plan,
+            (None, None) => unreachable!("PlanOutcome holds a plan by construction"),
+        }
+    }
+
+    /// Consume the outcome, keeping only the execution plan.
+    pub fn into_plan(self) -> ExecutionPlan {
+        match (self.plan, self.budgeted) {
+            (Some(p), _) => p,
+            (None, Some(h)) => h.plan,
+            (None, None) => unreachable!("PlanOutcome holds a plan by construction"),
+        }
+    }
+
+    /// Budgeted-run detail, if a budget was set.
+    pub fn budgeted(&self) -> Option<&HybridPlan> {
+        self.budgeted.as_ref()
+    }
+
+    /// Consume the outcome as a budgeted run.
+    ///
+    /// # Panics
+    /// If the request had no budget (the legacy budgeted wrappers always
+    /// set one).
+    pub fn into_hybrid(self) -> HybridPlan {
+        self.budgeted.expect("into_hybrid on a plain (unbudgeted) outcome")
+    }
+
+    /// The graph the plan executes: the hybrid driver's rewritten graph
+    /// for budgeted runs, `None` for plain runs (the caller's graph).
+    pub fn graph(&self) -> Option<&Graph> {
+        self.budgeted.as_ref().map(|h| &h.graph)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{self, BuildCfg, ModelKind};
+    use crate::planner::{lint_plan, roam_plan};
+
+    fn quick() -> RoamCfg {
+        RoamCfg {
+            parallel: false,
+            order_max_nodes: 5_000,
+            dsa_max_nodes: 5_000,
+            ..RoamCfg::default()
+        }
+    }
+
+    #[test]
+    fn plain_request_matches_legacy_wrapper() {
+        let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
+        let a = PlanRequest::new(&g).cfg(quick()).run().into_plan();
+        let b = roam_plan(&g, &quick());
+        assert_eq!(a.order, b.order);
+        assert_eq!(a.actual_peak, b.actual_peak);
+        assert!(lint_plan(&g, &a).is_empty());
+    }
+
+    #[test]
+    fn budgeted_request_carries_hybrid_detail() {
+        let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
+        let out = PlanRequest::new(&g)
+            .cfg(quick())
+            .budget(BudgetSpec::Fraction(1.0))
+            .run();
+        let h = out.budgeted().expect("budget set → budgeted detail");
+        assert!(h.met, "fraction-1.0 budget must be met by the baseline");
+        assert_eq!(out.plan().total_bytes(), h.plan.total_bytes());
+        assert!(out.graph().is_some());
+    }
+
+    #[test]
+    fn warm_seed_round_trips_through_request() {
+        let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
+        let cold = PlanRequest::new(&g).cfg(quick()).run().into_plan();
+        let seed = WarmSeed {
+            order: cold.order.clone(),
+            offsets: cold.offsets.clone(),
+        };
+        let warm = PlanRequest::new(&g).cfg(quick()).warm(seed).run().into_plan();
+        assert_eq!(warm.stat("warm_seeded"), Some(1.0));
+        assert!(warm.actual_peak <= cold.actual_peak);
+    }
+}

@@ -58,8 +58,8 @@
 //! `BENCH_planner.json` trajectory (before/after numbers vs the retained
 //! `*_ref` solvers live there, refreshed by CI's bench-smoke job).
 
-use super::{evaluate, ExecutionPlan};
-use crate::graph::{Graph, OpId, Reachability, TensorClass};
+use super::{evaluate, ExecutionPlan, PlanRequest};
+use crate::graph::{Graph, OpId, Reachability, TensorClass, TensorId};
 use crate::layout::concat::repair_conflicts;
 use crate::layout::dsa::{min_arena_layout_seeded, DsaCfg};
 use crate::layout::fit::{lowest_fit, Placed};
@@ -145,22 +145,45 @@ pub struct OrderObjectiveCfg {
 }
 
 /// Run the full ROAM pipeline on `g`.
+///
+/// Legacy wrapper around [`crate::planner::PlanRequest`] — prefer the
+/// builder in new code.
 pub fn roam_plan(g: &Graph, cfg: &RoamCfg) -> ExecutionPlan {
-    roam_plan_full(g, cfg, None, None)
+    PlanRequest::new(g).cfg(cfg.clone()).run().into_plan()
 }
 
 /// [`roam_plan`] warm-started from a cached plan (see the module docs and
 /// [`WarmSeed`]). With `seed = None` this *is* `roam_plan`.
+///
+/// Legacy wrapper around [`crate::planner::PlanRequest`].
 pub fn roam_plan_seeded(g: &Graph, cfg: &RoamCfg, seed: Option<&WarmSeed>) -> ExecutionPlan {
-    roam_plan_full(g, cfg, seed, None)
+    PlanRequest::new(g).cfg(cfg.clone()).warm_opt(seed.cloned()).run().into_plan()
 }
 
-/// The most general planner entry point: optional warm seed plus an
-/// optional overlap-aware ordering objective ([`OrderObjectiveCfg`] —
-/// the hybrid driver passes one per escalation round so the order
-/// stretches the current victim set's hiding windows). Both `None` makes
-/// this *exactly* [`roam_plan`].
+/// Optional warm seed plus an optional overlap-aware ordering objective
+/// ([`OrderObjectiveCfg`]). Both `None` makes this *exactly*
+/// [`roam_plan`].
+///
+/// Legacy wrapper around [`crate::planner::PlanRequest`].
 pub fn roam_plan_full(
+    g: &Graph,
+    cfg: &RoamCfg,
+    seed: Option<&WarmSeed>,
+    obj: Option<&OrderObjectiveCfg>,
+) -> ExecutionPlan {
+    PlanRequest::new(g)
+        .cfg(cfg.clone())
+        .warm_opt(seed.cloned())
+        .objective_opt(obj.copied())
+        .run()
+        .into_plan()
+}
+
+/// The full ROAM pipeline: optional warm seed plus optional overlap-aware
+/// ordering objective. This is the single real implementation behind
+/// [`crate::planner::PlanRequest`]; the public `roam_plan*` functions are
+/// one-line delegations through the builder.
+pub(crate) fn plan_core(
     g: &Graph,
     cfg: &RoamCfg,
     seed: Option<&WarmSeed>,
@@ -422,6 +445,15 @@ pub fn roam_plan_full(
 /// "within one segment chunk" property). Returns the subgraph and the
 /// local→global op map.
 pub fn extract_subgraph(g: &Graph, ops: &[OpId]) -> (Graph, Vec<OpId>) {
+    let (sub, omap, _) = extract_subgraph_mapped(g, ops);
+    (sub, omap)
+}
+
+/// [`extract_subgraph`] plus the local→global **tensor** map (one global
+/// tensor per local tensor, externals included). The serving layer's
+/// per-segment warm splice needs both maps to translate cached
+/// sub-canonical ranks back into this graph's ids.
+pub fn extract_subgraph_mapped(g: &Graph, ops: &[OpId]) -> (Graph, Vec<OpId>, Vec<TensorId>) {
     let in_set: HashMap<OpId, usize> = ops.iter().enumerate().map(|(i, &v)| (v, i)).collect();
     let mut sub = Graph::new("leaf");
     let mut tmap: HashMap<usize, usize> = HashMap::new(); // global tid -> local tid
@@ -487,7 +519,11 @@ pub fn extract_subgraph(g: &Graph, ops: &[OpId]) -> (Graph, Vec<OpId>) {
             }
         }
     }
-    (sub, ops.to_vec())
+    let mut tvec = vec![0usize; sub.n_tensors()];
+    for (&gt, &lt) in &tmap {
+        tvec[lt] = gt;
+    }
+    (sub, ops.to_vec(), tvec)
 }
 
 /// Class for a leaf-external input tensor: persistent if it outlives the

@@ -12,7 +12,7 @@
 
 use super::select::Strategy;
 use crate::graph::Graph;
-use crate::hybrid::{roam_plan_hybrid, HybridCfg, Technique};
+use crate::hybrid::{HybridCfg, Technique};
 use crate::planner::{ExecutionPlan, RoamCfg};
 use crate::swap::cost::CostModel;
 
@@ -44,7 +44,9 @@ impl Default for RecomputeCfg {
 
 impl RecomputeCfg {
     /// The hybrid-driver configuration this recompute config denotes.
-    pub(crate) fn to_hybrid(&self) -> HybridCfg {
+    /// Public so CLI call sites can route recompute runs through the
+    /// [`crate::planner::PlanRequest`] builder themselves.
+    pub fn to_hybrid(&self) -> HybridCfg {
         HybridCfg {
             technique: Technique::Recompute,
             strategy: self.strategy,
@@ -92,23 +94,31 @@ impl BudgetedPlan {
     }
 }
 
+impl From<crate::hybrid::HybridPlan> for BudgetedPlan {
+    /// Project the recompute-only view out of a hybrid-driver result.
+    fn from(h: crate::hybrid::HybridPlan) -> BudgetedPlan {
+        BudgetedPlan {
+            plan: h.plan,
+            graph: h.graph,
+            budget: h.budget,
+            baseline_total: h.baseline_total,
+            met: h.met,
+            exhausted: h.exhausted,
+            rounds: h.rounds,
+            evicted: h.evicted,
+            recompute_ops: h.recompute_ops,
+            recompute_bytes: h.recompute_bytes,
+        }
+    }
+}
+
 /// Plan `g` under a hard memory budget, trading recompute FLOPs for
 /// memory. Always returns the best plan found; check
 /// [`BudgetedPlan::met`] for whether the budget was achieved.
+///
+/// Legacy wrapper around [`crate::planner::PlanRequest`].
 pub fn roam_plan_budgeted(g: &Graph, spec: BudgetSpec, cfg: &RecomputeCfg) -> BudgetedPlan {
-    let h = roam_plan_hybrid(g, spec, &cfg.to_hybrid());
-    BudgetedPlan {
-        plan: h.plan,
-        graph: h.graph,
-        budget: h.budget,
-        baseline_total: h.baseline_total,
-        met: h.met,
-        exhausted: h.exhausted,
-        rounds: h.rounds,
-        evicted: h.evicted,
-        recompute_ops: h.recompute_ops,
-        recompute_bytes: h.recompute_bytes,
-    }
+    crate::planner::PlanRequest::new(g).hybrid_cfg(cfg.to_hybrid()).budget(spec).run().into_hybrid().into()
 }
 
 #[cfg(test)]

@@ -66,10 +66,34 @@ impl Default for TreeCfg {
     }
 }
 
-/// Construct the subgraph tree (Algorithm 1).
-pub fn construct(g: &Graph, reach: &Reachability, cfg: &TreeCfg) -> SubgraphTree {
+/// The boundary/segment division underlying the tree. Split out of
+/// [`construct`] so the serving layer's per-segment fingerprints
+/// ([`crate::serve::segment_signature`]) use the *same* division — a
+/// "dirty segment" index means the same thing to the cache and to the
+/// planner.
+#[derive(Clone, Debug)]
+pub struct Division {
+    /// Memory-insensitive boundary ops in precedence order.
+    pub boundaries: Vec<OpId>,
+    /// Independent segments between consecutive boundaries; segment `i`
+    /// closes at `boundaries[i]` (the last closes at graph end).
+    pub segments: Vec<Segment>,
+}
+
+/// Compute the boundary/segment division of `g`.
+pub fn division(g: &Graph, reach: &Reachability) -> Division {
     let bounds = boundaries(g, reach);
     let segs = segments(g, reach, &bounds);
+    Division {
+        boundaries: bounds,
+        segments: segs,
+    }
+}
+
+/// Construct the subgraph tree (Algorithm 1).
+pub fn construct(g: &Graph, reach: &Reachability, cfg: &TreeCfg) -> SubgraphTree {
+    let div = division(g, reach);
+    let (bounds, segs) = (div.boundaries, div.segments);
     let wins = windows(segs.len());
 
     let mut nodes = vec![Node {

@@ -60,6 +60,18 @@ pub struct CachedPlan {
     pub offsets: Vec<(u32, u64)>,
     /// Planner label of the producing run ("roam-ss", ...).
     pub planner: String,
+    /// Edit-sibling bucket ([`super::canon::SegmentSig::family`]); `0`
+    /// means the entry carries no per-segment information (for example a
+    /// pre-segment-era disk entry).
+    pub seg_family: u64,
+    /// Per-segment subgraph WL keys, index-aligned with the division.
+    pub seg_keys: Vec<u128>,
+    /// Per segment: its execution order as *sub*-canonical op ranks
+    /// (ranks of the segment's standalone subgraph canon).
+    pub seg_orders: Vec<Vec<u32>>,
+    /// Per segment: `(sub-canonical tensor rank, byte offset)` pairs for
+    /// tensors placed by the plan and visible in the segment subgraph.
+    pub seg_offsets: Vec<Vec<(u32, u64)>>,
 }
 
 fn hex128(k: u128) -> String {
@@ -134,9 +146,11 @@ fn write_atomic(tmp: &Path, dest: &Path, bytes: &[u8]) -> std::io::Result<()> {
 
 impl CachedPlan {
     /// Serialise for disk persistence. Keys are hex strings (`f64` JSON
-    /// numbers cannot carry 128 bits).
+    /// numbers cannot carry 128 bits). The per-segment block is additive
+    /// (written only when present), so pre-segment-era entries keep
+    /// parsing and old readers ignore the extra field.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("schema", Json::Str("roam-cached-plan-v1".to_string())),
             ("key", Json::Str(hex128(self.key))),
             ("shape", Json::Str(hex128(self.shape))),
@@ -156,11 +170,60 @@ impl CachedPlan {
                 ),
             ),
             ("planner", Json::Str(self.planner.clone())),
-        ])
+        ];
+        if self.seg_family != 0 {
+            fields.push((
+                "segments",
+                Json::obj(vec![
+                    ("family", Json::Str(format!("{:016x}", self.seg_family))),
+                    (
+                        "keys",
+                        Json::Arr(self.seg_keys.iter().map(|&k| Json::Str(hex128(k))).collect()),
+                    ),
+                    (
+                        "orders",
+                        Json::Arr(
+                            self.seg_orders
+                                .iter()
+                                .map(|o| {
+                                    Json::Arr(o.iter().map(|&r| Json::Num(r as f64)).collect())
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "offsets",
+                        Json::Arr(
+                            self.seg_offsets
+                                .iter()
+                                .map(|o| {
+                                    Json::Arr(
+                                        o.iter()
+                                            .map(|&(r, off)| {
+                                                Json::Arr(vec![
+                                                    Json::Num(r as f64),
+                                                    Json::Num(off as f64),
+                                                ])
+                                            })
+                                            .collect(),
+                                    )
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ));
+        }
+        Json::obj(fields)
     }
 
-    /// Parse a persisted plan; `None` on any structural mismatch.
+    /// Parse a persisted plan; `None` on any structural mismatch. A
+    /// missing or malformed `segments` block degrades to "no segment
+    /// info" (the entry still serves exact and shape hits).
     pub fn from_json(j: &Json) -> Option<CachedPlan> {
+        let seg = j.get("segments").and_then(parse_segments);
+        let (seg_family, seg_keys, seg_orders, seg_offsets) =
+            seg.unwrap_or((0, Vec::new(), Vec::new(), Vec::new()));
         Some(CachedPlan {
             key: parse_hex128(j.get("key")?.as_str()?)?,
             shape: parse_hex128(j.get("shape")?.as_str()?)?,
@@ -179,8 +242,51 @@ impl CachedPlan {
                 .map(|p| Some((p.at(0)?.as_u64()? as u32, p.at(1)?.as_u64()?)))
                 .collect::<Option<Vec<_>>>()?,
             planner: j.get("planner")?.as_str()?.to_string(),
+            seg_family,
+            seg_keys,
+            seg_orders,
+            seg_offsets,
         })
     }
+}
+
+/// Parse the optional per-segment block; `None` on any malformation
+/// (treated as absent, not as a corrupt entry).
+#[allow(clippy::type_complexity)]
+fn parse_segments(j: &Json) -> Option<(u64, Vec<u128>, Vec<Vec<u32>>, Vec<Vec<(u32, u64)>>)> {
+    let family = u64::from_str_radix(j.get("family")?.as_str()?, 16).ok()?;
+    let keys = j
+        .get("keys")?
+        .as_arr()?
+        .iter()
+        .map(|k| k.as_str().and_then(parse_hex128))
+        .collect::<Option<Vec<_>>>()?;
+    let orders = j
+        .get("orders")?
+        .as_arr()?
+        .iter()
+        .map(|o| {
+            o.as_arr()?
+                .iter()
+                .map(|v| v.as_u64().map(|x| x as u32))
+                .collect::<Option<Vec<_>>>()
+        })
+        .collect::<Option<Vec<_>>>()?;
+    let offsets = j
+        .get("offsets")?
+        .as_arr()?
+        .iter()
+        .map(|o| {
+            o.as_arr()?
+                .iter()
+                .map(|p| Some((p.at(0)?.as_u64()? as u32, p.at(1)?.as_u64()?)))
+                .collect::<Option<Vec<_>>>()
+        })
+        .collect::<Option<Vec<_>>>()?;
+    if keys.len() != orders.len() || keys.len() != offsets.len() {
+        return None;
+    }
+    Some((family, keys, orders, offsets))
 }
 
 /// Cache configuration.
@@ -289,6 +395,68 @@ pub enum KeyLock {
     Uncontended,
 }
 
+/// Topology of a scaled-out serve deployment: this process owns shard
+/// `shard_id` of `shards` instances. Ownership of a fingerprint is
+/// decided by [`owner_of`]; a non-owner instance refuses to cold-plan
+/// the key (see the service), so each key is planned by exactly one
+/// owner and persisted in that owner's disk directory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardTopology {
+    /// Total service instances.
+    pub shards: u32,
+    /// This instance's id in `0..shards`.
+    pub shard_id: u32,
+}
+
+impl Default for ShardTopology {
+    /// Single-instance topology: this process owns every key.
+    fn default() -> Self {
+        ShardTopology {
+            shards: 1,
+            shard_id: 0,
+        }
+    }
+}
+
+/// Virtual ring points per shard: enough to keep the key split within a
+/// few percent of even for small shard counts.
+const RING_POINTS: u32 = 32;
+
+fn ring_point(shard: u32, vnode: u32) -> u64 {
+    let mut b = [0u8; 9];
+    b[0] = 0x5a; // domain tag: shard ring, not an entry checksum
+    b[1..5].copy_from_slice(&shard.to_le_bytes());
+    b[5..9].copy_from_slice(&vnode.to_le_bytes());
+    fnv1a64(&b)
+}
+
+/// Consistent-hash owner of a fingerprint key: the shard whose nearest
+/// clockwise ring point follows the key's position. Adding or removing
+/// one instance moves only ~1/N of the key space, so a resize invalidates
+/// only that fraction of each disk cache.
+pub fn owner_of(key: u128, shards: u32) -> u32 {
+    if shards <= 1 {
+        return 0;
+    }
+    let h = fnv1a64(&key.to_le_bytes());
+    // (ring position, shard) of the first point ≥ h, and of the global
+    // minimum for the wrap-around case.
+    let mut succ: Option<(u64, u32)> = None;
+    let mut first: Option<(u64, u32)> = None;
+    for s in 0..shards {
+        for v in 0..RING_POINTS {
+            let p = ring_point(s, v);
+            if first.is_none_or(|(fp, _)| p < fp) {
+                first = Some((p, s));
+            }
+            if p >= h && succ.is_none_or(|(sp, _)| p < sp) {
+                succ = Some((p, s));
+            }
+        }
+    }
+    succ.or(first).map(|(_, s)| s).unwrap_or(0)
+}
+
 struct Entry {
     plan: CachedPlan,
     stamp: u64,
@@ -300,6 +468,9 @@ pub struct PlanCache {
     shards: Vec<Mutex<HashMap<u128, Entry>>>,
     /// shape key → most recent full key carrying that shape.
     shape_index: Mutex<HashMap<u128, u128>>,
+    /// segment family ([`CachedPlan::seg_family`]) → resident full keys
+    /// carrying per-segment signatures (edit-sibling candidates).
+    edit_index: Mutex<HashMap<u64, Vec<u128>>>,
     clock: AtomicU64,
     stats: CacheStats,
 }
@@ -313,6 +484,7 @@ impl PlanCache {
         PlanCache {
             shards: (0..shards).map(|_| Mutex::new(HashMap::new())).collect(),
             shape_index: Mutex::new(HashMap::new()),
+            edit_index: Mutex::new(HashMap::new()),
             clock: AtomicU64::new(1),
             cfg,
             stats: CacheStats::default(),
@@ -538,22 +710,27 @@ impl PlanCache {
     fn insert_mem(&self, plan: CachedPlan) {
         let key = plan.key;
         let shape = plan.shape;
+        let family = plan.seg_family;
         let per_shard_cap = (self.cfg.capacity / self.shards.len()).max(1);
+        // `(key, shape, family)` of the entry this insert displaced.
+        let mut victim: Option<(u128, u128, u64)> = None;
         {
             let mut shard = self.shard_of(key).lock().unwrap_or_else(|e| e.into_inner());
             let stamp = self.tick();
             if !shard.contains_key(&key) && shard.len() >= per_shard_cap {
                 // Evict the least recently touched entry of this shard.
-                let victim = shard
+                let vk = shard
                     .iter()
                     .min_by_key(|(_, e)| e.stamp)
                     .map(|(&k, _)| k);
-                if let Some(victim) = victim {
-                    shard.remove(&victim);
+                if let Some(vk) = vk {
+                    if let Some(e) = shard.remove(&vk) {
+                        victim = Some((vk, e.plan.shape, e.plan.seg_family));
+                    }
                     // Capacity bounds the disk store too: an append-only
                     // directory would grow without bound under diverse
                     // traffic.
-                    if let Some(path) = self.disk_path(victim) {
+                    if let Some(path) = self.disk_path(vk) {
                         let _ = std::fs::remove_file(path);
                     }
                     self.stats.evicted.fetch_add(1, Ordering::Relaxed);
@@ -561,29 +738,79 @@ impl PlanCache {
             }
             shard.insert(key, Entry { plan, stamp });
         }
-        let mut idx = self.shape_index.lock().unwrap_or_else(|e| e.into_inner());
-        idx.insert(shape, key);
-        // Keep the shape index bounded: eviction removes only the shard
-        // entry, so periodically sweep index entries whose key is no
-        // longer memory-resident. (With disk persistence such shapes lose
-        // their warm candidate until re-planned — a cache-quality nit,
-        // not a correctness one; the alternative is unbounded growth in a
-        // long-lived service.) Lock order is safe: no caller holds a
-        // shard lock while taking the index lock.
-        if idx.len() > self.cfg.capacity.saturating_mul(2).max(16) {
-            let resident: std::collections::HashSet<u128> = self
-                .shards
-                .iter()
-                .flat_map(|s| {
-                    s.lock()
-                        .unwrap_or_else(|e| e.into_inner())
-                        .keys()
-                        .copied()
-                        .collect::<Vec<_>>()
-                })
-                .collect();
-            idx.retain(|_, k| resident.contains(k));
+        // Index maintenance is O(1) per insert/evict: the evicted entry's
+        // shape/family mappings are removed here, so neither index can
+        // accumulate stale entries (the historical whole-cache sweep is
+        // gone). Lock order is safe: the shard lock above is released
+        // before either index lock is taken.
+        {
+            let mut idx = self.shape_index.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some((vk, vshape, _)) = victim {
+                if idx.get(&vshape) == Some(&vk) {
+                    idx.remove(&vshape);
+                }
+            }
+            idx.insert(shape, key);
         }
+        {
+            let mut eidx = self.edit_index.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some((vk, _, vfam)) = victim {
+                if vfam != 0 {
+                    if let Some(keys) = eidx.get_mut(&vfam) {
+                        keys.retain(|&k| k != vk);
+                        if keys.is_empty() {
+                            eidx.remove(&vfam);
+                        }
+                    }
+                }
+            }
+            if family != 0 {
+                let keys = eidx.entry(family).or_default();
+                if !keys.contains(&key) {
+                    keys.push(key);
+                }
+            }
+        }
+    }
+
+    /// Edit-sibling lookup: among resident plans of `family` (same
+    /// division arity and service config), find the one whose per-segment
+    /// keys differ from `keys` in the fewest segments — at least one
+    /// (otherwise the exact path would have hit) and at most `max_dirty`.
+    /// Returns the sibling and the dirty segment indices.
+    pub fn find_edit_sibling(
+        &self,
+        family: u64,
+        keys: &[u128],
+        max_dirty: usize,
+    ) -> Option<(CachedPlan, Vec<usize>)> {
+        if family == 0 || keys.is_empty() {
+            return None;
+        }
+        let candidates: Vec<u128> = self
+            .edit_index
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(&family)
+            .cloned()
+            .unwrap_or_default();
+        let mut best: Option<(CachedPlan, Vec<usize>)> = None;
+        for cand in candidates {
+            let Some(p) = self.peek(cand) else { continue };
+            if p.seg_keys.len() != keys.len() {
+                continue;
+            }
+            let dirty: Vec<usize> = (0..keys.len())
+                .filter(|&i| p.seg_keys[i] != keys[i])
+                .collect();
+            if dirty.is_empty() || dirty.len() > max_dirty {
+                continue;
+            }
+            if best.as_ref().is_none_or(|(_, d)| dirty.len() < d.len()) {
+                best = Some((p, dirty));
+            }
+        }
+        best
     }
 
     /// Insert (or refresh) a plan; persists to disk when configured.
@@ -691,6 +918,20 @@ mod tests {
             order: vec![2, 0, 1],
             offsets: vec![(0, 0), (1, 64), (3, 128)],
             planner: "roam-ss".to_string(),
+            seg_family: 0,
+            seg_keys: Vec::new(),
+            seg_orders: Vec::new(),
+            seg_offsets: Vec::new(),
+        }
+    }
+
+    fn seg_plan(key: u128, family: u64, seg_keys: Vec<u128>) -> CachedPlan {
+        CachedPlan {
+            seg_family: family,
+            seg_orders: seg_keys.iter().map(|_| vec![0u32]).collect(),
+            seg_offsets: seg_keys.iter().map(|_| vec![(0u32, 64u64)]).collect(),
+            seg_keys,
+            ..plan(key, key ^ 0xabcd)
         }
     }
 
@@ -699,6 +940,77 @@ mod tests {
         let p = plan(u128::MAX - 5, 42);
         let back = CachedPlan::from_json(&Json::parse(&p.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(back, p);
+    }
+
+    #[test]
+    fn json_roundtrip_with_segments() {
+        let p = seg_plan(17, 0xfeed, vec![3, u128::MAX, 9]);
+        let back = CachedPlan::from_json(&Json::parse(&p.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, p);
+        // A v1 entry (no segments block) still parses, with empty info.
+        let v1 = plan(17, 42).to_json();
+        assert!(v1.get("segments").is_none());
+        let back = CachedPlan::from_json(&v1).unwrap();
+        assert_eq!(back.seg_family, 0);
+        assert!(back.seg_keys.is_empty());
+    }
+
+    #[test]
+    fn edit_sibling_lookup_and_eviction_pruning() {
+        let c = PlanCache::new(CacheCfg {
+            capacity: 4,
+            shards: 1,
+            dir: None,
+        });
+        c.put(seg_plan(1, 7, vec![10, 20, 30]));
+        // One differing segment → sibling with dirty = [1].
+        let (sib, dirty) = c.find_edit_sibling(7, &[10, 21, 30], 2).expect("sibling");
+        assert_eq!(sib.key, 1);
+        assert_eq!(dirty, vec![1]);
+        // Identical keys are not an edit (the exact path handles those).
+        assert!(c.find_edit_sibling(7, &[10, 20, 30], 2).is_none());
+        // Too many dirty segments → no sibling.
+        assert!(c.find_edit_sibling(7, &[11, 21, 31], 2).is_none());
+        // Wrong family or arity → no sibling.
+        assert!(c.find_edit_sibling(8, &[10, 21, 30], 2).is_none());
+        assert!(c.find_edit_sibling(7, &[10, 21], 2).is_none());
+        // The closest sibling wins.
+        c.put(seg_plan(2, 7, vec![10, 21, 31]));
+        let (sib, dirty) = c.find_edit_sibling(7, &[10, 21, 30], 3).expect("sibling");
+        assert_eq!(sib.key, 2);
+        assert_eq!(dirty, vec![2]);
+        // Eviction prunes the edit index in O(1): fill the single shard
+        // past capacity and verify evicted keys stop being candidates.
+        for i in 10..20u128 {
+            c.put(seg_plan(i, 7, vec![i, i + 1, i + 2]));
+        }
+        let resident: Vec<u128> = {
+            let idx = c.edit_index.lock().unwrap();
+            idx.get(&7).cloned().unwrap_or_default()
+        };
+        assert!(resident.len() <= 4, "edit index holds evicted keys: {resident:?}");
+        for k in &resident {
+            assert!(c.peek(*k).is_some(), "edit index lists non-resident key {k}");
+        }
+    }
+
+    #[test]
+    fn owner_of_is_deterministic_and_covers_all_shards() {
+        for shards in [1u32, 2, 3, 5, 8] {
+            let mut seen = vec![0usize; shards as usize];
+            for i in 0..512u128 {
+                let key = i.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ (i << 64);
+                let o = owner_of(key, shards);
+                assert!(o < shards);
+                assert_eq!(o, owner_of(key, shards), "ownership must be stable");
+                seen[o as usize] += 1;
+            }
+            assert!(
+                seen.iter().all(|&n| n > 0),
+                "{shards} shards: some shard owns nothing ({seen:?})"
+            );
+        }
+        assert_eq!(owner_of(12345, 1), 0);
     }
 
     #[test]

@@ -373,6 +373,101 @@ pub fn with_cfg(fp: Fingerprint, cfg: u64) -> Fingerprint {
     }
 }
 
+/// One segment's extracted subgraph with its canonical coordinates —
+/// everything the warm splice needs to translate a cached per-segment
+/// order/offset list onto this graph's ids.
+#[derive(Clone, Debug)]
+pub struct SegSub {
+    /// The standalone segment subgraph.
+    pub graph: Graph,
+    /// Local op id → global op id (ASAP-sorted segment ops).
+    pub ops: Vec<OpId>,
+    /// Local tensor id → global tensor id (externals included).
+    pub tensors: Vec<TensorId>,
+    /// Canonical coordinates of `graph`.
+    pub canon: Canon,
+}
+
+/// Per-division fingerprints of a graph: one WL key per independent
+/// segment of the planner's task division ([`crate::segments::tree::division`]).
+/// An edited graph diffs its keys against a cached sibling's to identify
+/// exactly the dirty segments; the clean ones warm-seed the re-plan.
+#[derive(Clone, Debug)]
+pub struct SegmentSig {
+    /// Sibling-bucket key: division arity folded with the service's
+    /// [`cfg_key`], so only plans produced under the same configuration
+    /// are candidate siblings.
+    pub family: u64,
+    /// Per-segment subgraph WL key (sizes included), index-aligned with
+    /// the division's segments.
+    pub keys: Vec<u128>,
+    /// Closing boundary op of each segment (`None` for the last).
+    pub closes: Vec<Option<OpId>>,
+    /// ASAP-sorted ops of each segment (execution-order candidates).
+    pub seg_ops: Vec<Vec<OpId>>,
+    /// Extracted per-segment subgraphs with canonical coordinates.
+    pub subs: Vec<SegSub>,
+}
+
+impl SegmentSig {
+    /// Number of segments in the division.
+    pub fn n_segments(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Indices of segments whose keys differ from `other`'s (`None` when
+    /// the divisions are structurally incompatible).
+    pub fn diff(&self, other_keys: &[u128]) -> Option<Vec<usize>> {
+        if self.keys.len() != other_keys.len() {
+            return None;
+        }
+        Some(
+            (0..self.keys.len())
+                .filter(|&i| self.keys[i] != other_keys[i])
+                .collect(),
+        )
+    }
+}
+
+/// Compute the per-segment fingerprint signature of `g` under a service
+/// configuration key (the same `cfg` fold passed to [`with_cfg`]).
+///
+/// Each segment of the boundary division is extracted as a standalone
+/// subgraph and canonized independently, so a single-op edit perturbs
+/// only the keys of the segments whose op set or tensor facets it
+/// touches — the basis of edit-localized re-planning.
+pub fn segment_signature(g: &Graph, cfg: u64) -> SegmentSig {
+    let reach = crate::graph::Reachability::compute(g);
+    let div = crate::segments::tree::division(g, &reach);
+    let family = mix2(smix(0x5e97 ^ div.segments.len() as u64), cfg);
+    let mut keys = Vec::with_capacity(div.segments.len());
+    let mut closes = Vec::with_capacity(div.segments.len());
+    let mut seg_ops = Vec::with_capacity(div.segments.len());
+    let mut subs = Vec::with_capacity(div.segments.len());
+    for seg in &div.segments {
+        let mut ops = seg.ops.clone();
+        ops.sort_by_key(|&v| (reach.asap(v), v));
+        let (sub, omap, tmap) = crate::planner::roam::extract_subgraph_mapped(g, &ops);
+        let canon = canonize(&sub);
+        keys.push(canon.fingerprint.key);
+        closes.push(seg.close);
+        seg_ops.push(ops);
+        subs.push(SegSub {
+            graph: sub,
+            ops: omap,
+            tensors: tmap,
+            canon,
+        });
+    }
+    SegmentSig {
+        family,
+        keys,
+        closes,
+        seg_ops,
+        subs,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -503,5 +598,58 @@ mod tests {
             )],
         };
         assert_ne!(cfg_key(&r, budget, Technique::Hybrid, &faster), with_on);
+    }
+
+    #[test]
+    fn segment_signature_is_deterministic_and_total() {
+        let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
+        let a = segment_signature(&g, 7);
+        let b = segment_signature(&g, 7);
+        assert_eq!(a.family, b.family);
+        assert_eq!(a.keys, b.keys);
+        assert_eq!(a.diff(&b.keys), Some(Vec::new()));
+        // Segments + boundaries cover every op exactly once.
+        let mut seen = vec![false; g.n_ops()];
+        for ops in &a.seg_ops {
+            for &v in ops {
+                assert!(!seen[v], "op {v} in two segments");
+                seen[v] = true;
+            }
+        }
+        for c in a.closes.iter().flatten() {
+            assert!(!seen[*c], "boundary {c} also in a segment");
+            seen[*c] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "op missing from division");
+        // A different cfg fold buckets into a different family.
+        assert_ne!(segment_signature(&g, 8).family, a.family);
+    }
+
+    #[test]
+    fn single_resize_edit_localizes_to_few_segments() {
+        let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
+        let sig = segment_signature(&g, 0);
+        assert!(sig.n_segments() >= 4, "model too coarse for the test");
+        // Resize one tensor that some segment actually sees (a tensor
+        // touching only boundary ops would dirty no segment): only the
+        // segments whose subgraphs contain it may change keys.
+        let mut edited = g.clone();
+        let t = sig
+            .subs
+            .iter()
+            .flat_map(|s| s.tensors.iter().copied())
+            .find(|&t| g.tensors[t].size > 0)
+            .expect("some segment sees a sized tensor");
+        edited.tensors[t].size *= 2;
+        let sig2 = segment_signature(&edited, 0);
+        assert_eq!(sig2.family, sig.family, "resize must not change the division arity");
+        let dirty = sig2.diff(&sig.keys).expect("same arity");
+        assert!(!dirty.is_empty(), "resize must dirty at least one segment");
+        assert!(
+            dirty.len() <= sig.n_segments().div_ceil(2),
+            "resize dirtied {} of {} segments",
+            dirty.len(),
+            sig.n_segments()
+        );
     }
 }

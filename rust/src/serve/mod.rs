@@ -24,23 +24,34 @@
 //! * [`warm`] — the loop back into the search cores: on a shape
 //!   near-miss (same fingerprint modulo tensor sizes) the cached
 //!   operator order replays as the branch-and-bound incumbent and the
-//!   cached layout seeds the DSA incumbents
-//!   ([`crate::planner::roam_plan_seeded`]), so re-planning a rescaled
-//!   model prunes from a real bound instead of cold-starting.
+//!   cached layout seeds the DSA incumbents (a warm seed through the
+//!   [`crate::planner::PlanRequest`] builder), so re-planning a rescaled
+//!   model prunes from a real bound instead of cold-starting. An *edit*
+//!   near-miss (same segment family, a few changed per-segment keys)
+//!   goes further: clean segments splice their cached orders and offsets
+//!   verbatim and only the dirty segments re-plan.
 //!
 //! The CLI exposes this as `roam serve` (JSONL over stdin/stdout, blank
 //! line = batch boundary) and `roam batch <dir>`;
 //! `benches/serve_throughput.rs` measures cold vs warm vs cache-hit
-//! latency and writes the `BENCH_serve.json` trajectory.
+//! latency and writes the `BENCH_serve.json` trajectory. Scale-out runs
+//! pass `--shards N --shard-id I`: fingerprint keys are consistent-hashed
+//! over the instances ([`owner_of`]) and each key is cold-planned and
+//! persisted by exactly one owner.
 
 pub mod cache;
 pub mod canon;
 pub mod service;
 pub mod warm;
 
-pub use cache::{CacheCfg, CachedPlan, KeyLock, PlanCache, PlanLock, RecoverReport};
-pub use canon::{canonize, cfg_key, with_cfg, Canon, Fingerprint};
+pub use cache::{
+    owner_of, CacheCfg, CachedPlan, KeyLock, PlanCache, PlanLock, RecoverReport, ShardTopology,
+};
+pub use canon::{
+    canonize, cfg_key, segment_signature, with_cfg, Canon, Fingerprint, SegSub, SegmentSig,
+};
 pub use service::{
-    error_json, request_from_json, request_from_line, response_to_json, summary_json, Outcome,
-    PlanRequest, PlanResponse, PlanService, ServeCfg,
+    error_json, request_from_json, request_from_line, response_to_json, response_to_json_v,
+    summary_json, wire_request_from_json, wire_request_from_line, Outcome, PlanResponse,
+    PlanService, ServeCfg, ServeRequest, WireRequest, WIRE_VERSION,
 };

@@ -2,7 +2,7 @@
 //! warm-started re-planning and per-request deadlines over one shared
 //! worker pool.
 //!
-//! A batch of [`PlanRequest`]s is served as follows:
+//! A batch of [`ServeRequest`]s is served as follows:
 //!
 //! 1. every request graph is canonized ([`super::canon`]) and its config
 //!    folded in — identical fingerprints within the batch are **deduped**
@@ -10,8 +10,9 @@
 //! 2. distinct fingerprints fan out over a [`crate::util::pool::Pool`];
 //!    each job first consults the [`super::cache::PlanCache`] (hit ⇒
 //!    verified replay, no planning), then — for plain requests — the
-//!    cache's *shape* index (near-miss ⇒ warm-started re-plan via
-//!    [`crate::planner::roam_plan_seeded`]), then cold-plans;
+//!    cache's segment index (edit sibling ⇒ spliced seed) and *shape*
+//!    index (near-miss ⇒ whole-order seed), re-planning through the
+//!    [`crate::planner::PlanRequest`] builder, then cold-plans;
 //! 3. each job carries a **deadline**: a request whose deadline already
 //!    passed when its job starts degrades to the heuristic planner
 //!    (reported as [`Outcome::Degraded`]); otherwise the remaining time
@@ -52,21 +53,44 @@
 //! service answers every request — it never propagates a panic to the
 //! batch caller. Batches are additionally subject to **admission
 //! control**: at most [`ServeCfg::max_inflight`] distinct planning jobs
-//! are admitted per batch (0 ⇒ unlimited); jobs past the cap answer
-//! immediately with `Outcome::Rejected` + an error message rather than
-//! queueing into a pile-up.
+//! are admitted per batch (0 ⇒ unlimited), and at most
+//! [`ServeCfg::max_inflight_per_tenant`] per wire-v2 tenant; jobs past a
+//! cap answer immediately with `Outcome::Rejected` + an error message
+//! rather than queueing into a pile-up.
+//!
+//! ## Edit-localized re-planning
+//!
+//! A plain request that misses the cache is additionally fingerprinted
+//! **per segment** of the planner's own boundary division
+//! ([`super::canon::segment_signature`]). If a cached sibling plan
+//! shares the signature's family (division arity + config) and differs
+//! in at most [`ServeCfg::edit_max_dirty_frac`] of the segment keys, the
+//! clean segments' cached orders and offsets splice into a warm seed
+//! ([`super::warm::splice_seed`]) — effectively only the dirty segments
+//! are re-planned, and the response reports [`Outcome::EditReplan`] plus
+//! the `edit_hits` / `segments_replanned` counters.
+//!
+//! ## Multi-shard scale-out
+//!
+//! With [`ServeCfg::topology`] set to N > 1 instances (`roam serve
+//! --shards N --shard-id I`), fingerprint keys are consistent-hashed
+//! over the instances ([`super::cache::owner_of`]); a non-owner answers
+//! [`Outcome::NotOwner`] with the owner's id instead of planning, so
+//! every cold key is planned (and persisted) by exactly one owner.
 
-use super::cache::{KeyLock, PlanCache};
-use super::canon::{canonize, cfg_key, with_cfg};
+use super::cache::{owner_of, KeyLock, PlanCache, ShardTopology};
+use super::canon::{canonize, cfg_key, segment_signature, with_cfg, SegmentSig};
 use super::warm;
 use crate::compress::cost::CompressModel;
 use crate::graph::Graph;
-use crate::hybrid::{roam_plan_hybrid, BudgetSpec, HybridCfg, Technique};
+use crate::hybrid::{BudgetSpec, HybridCfg, Technique};
 use crate::obs::audit::{audit_plan, AuditRecord, DRIFT_ALERT_REL};
 use crate::obs::calib;
 use crate::swap::cost::CostModel;
 use crate::planner::heuristic::heuristic_plan;
-use crate::planner::{lint_plan, roam_plan_seeded, ExecutionPlan, RoamCfg};
+use crate::planner::{
+    lint_plan, ExecutionPlan, PlanRequest as PlannerRequest, RoamCfg, WarmSeed,
+};
 use crate::sched::Schedule;
 use crate::util::json::Json;
 use crate::util::pool::Pool;
@@ -98,6 +122,18 @@ pub struct ServeCfg {
     /// when enabled so two services with different tables never alias
     /// one entry; the default is the empty (disabled) table.
     pub compress: CompressModel,
+    /// Per-tenant admission control: at most this many distinct planning
+    /// jobs per wire-v2 tenant per batch (0 ⇒ unlimited). Requests
+    /// without a tenant label share one anonymous tenant.
+    pub max_inflight_per_tenant: usize,
+    /// Attempt edit-localized re-planning (per-segment fingerprints +
+    /// sibling splice) for plain requests that miss the cache.
+    pub edit_replan: bool,
+    /// An edit sibling qualifies only when at most this fraction of its
+    /// segment keys differ (at least one segment is always allowed).
+    pub edit_max_dirty_frac: f64,
+    /// Scale-out topology; the single-instance default owns every key.
+    pub topology: ShardTopology,
 }
 
 impl Default for ServeCfg {
@@ -109,13 +145,20 @@ impl Default for ServeCfg {
             default_deadline_secs: 0.0,
             max_inflight: 0,
             compress: CompressModel::default(),
+            max_inflight_per_tenant: 0,
+            edit_replan: true,
+            edit_max_dirty_frac: 0.5,
+            topology: ShardTopology::default(),
         }
     }
 }
 
-/// One planning request.
+/// One planning request as the **service** sees it (decoded from the
+/// wire or built programmatically). Distinct from the planner-level
+/// [`crate::planner::PlanRequest`] builder, which this service drives
+/// internally.
 #[derive(Clone, Debug)]
-pub struct PlanRequest {
+pub struct ServeRequest {
     pub graph: Graph,
     /// Hard memory budget; `None` ⇒ plain (unbudgeted) planning.
     pub budget: Option<BudgetSpec>,
@@ -128,16 +171,20 @@ pub struct PlanRequest {
     /// generous deadline (quality-first — a single-flight answer must
     /// satisfy its least constrained member).
     pub deadline_secs: Option<f64>,
+    /// Wire-v2 tenant label for per-tenant admission control; `None` ⇒
+    /// the anonymous tenant.
+    pub tenant: Option<String>,
 }
 
-impl PlanRequest {
+impl ServeRequest {
     /// A plain request for `graph` with service defaults.
-    pub fn plain(graph: Graph) -> PlanRequest {
-        PlanRequest {
+    pub fn plain(graph: Graph) -> ServeRequest {
+        ServeRequest {
             graph,
             budget: None,
             technique: Technique::Hybrid,
             deadline_secs: None,
+            tenant: None,
         }
     }
 }
@@ -162,8 +209,15 @@ pub enum Outcome {
     /// Every ladder rung failed — the response carries an error message
     /// and an empty plan.
     Failed,
-    /// Refused by admission control (`--max-inflight`) without planning.
+    /// Refused by admission control (`--max-inflight` /
+    /// `--max-inflight-per-tenant`) without planning.
     Rejected,
+    /// Edit-localized re-plan: warm-seeded by splicing a cached
+    /// sibling's clean segments; only the dirty segments re-planned.
+    EditReplan,
+    /// This instance does not own the key (`--shards` topology): the
+    /// error names the owning shard; nothing was planned.
+    NotOwner,
 }
 
 impl Outcome {
@@ -177,6 +231,8 @@ impl Outcome {
             Outcome::Retried => "retried",
             Outcome::Failed => "failed",
             Outcome::Rejected => "rejected",
+            Outcome::EditReplan => "edit_replan",
+            Outcome::NotOwner => "not_owner",
         }
     }
 }
@@ -271,6 +327,16 @@ pub struct ServiceStats {
     /// surfaces them in a gated `plan_drift` section instead.
     pub drift_checks: AtomicU64,
     pub drift_exceeded: AtomicU64,
+    /// Edit-localized replans served, and how many dirty segments those
+    /// replans re-planned in total. Like the drift counters, NOT part of
+    /// [`ServiceStats::snapshot`] — `summary_json` surfaces them in a
+    /// gated `edit_replan` section so the feature-unused summary stays
+    /// byte-identical.
+    pub edit_hits: AtomicU64,
+    pub segments_replanned: AtomicU64,
+    /// Requests refused because their key hashes to another shard
+    /// ([`Outcome::NotOwner`]); surfaced in the gated `shard` section.
+    pub not_owner: AtomicU64,
 }
 
 impl ServiceStats {
@@ -317,6 +383,10 @@ impl PlanService {
         &self.cache
     }
 
+    pub fn cfg(&self) -> &ServeCfg {
+        &self.cfg
+    }
+
     /// Mirror the service + cache counters into the
     /// [`crate::obs::metrics`] registry (no-op while metrics are
     /// disabled). The atomic counter structs stay the source of truth;
@@ -333,6 +403,18 @@ impl PlanService {
             metrics::counter_set(&format!("plan_cache_{k}_total"), v);
         }
         metrics::gauge_set("plan_cache_len", self.cache.len() as f64);
+        metrics::counter_set(
+            "serve_edit_hits_total",
+            self.stats.edit_hits.load(Ordering::Relaxed),
+        );
+        metrics::counter_set(
+            "serve_segments_replanned_total",
+            self.stats.segments_replanned.load(Ordering::Relaxed),
+        );
+        metrics::counter_set(
+            "serve_not_owner_total",
+            self.stats.not_owner.load(Ordering::Relaxed),
+        );
     }
 
     /// Audit `plan` against the installed calibration table: `None`
@@ -369,7 +451,7 @@ impl PlanService {
     }
 
     /// Serve a batch; responses are positionally aligned with `reqs`.
-    pub fn serve_batch(&self, reqs: &[PlanRequest]) -> Vec<PlanResponse> {
+    pub fn serve_batch(&self, reqs: &[ServeRequest]) -> Vec<PlanResponse> {
         let mut batch_span = crate::obs::span("serve_batch");
         batch_span.arg("requests", reqs.len() as f64);
         self.stats
@@ -433,33 +515,88 @@ impl PlanService {
             })
             .collect();
 
-        // Admission control: at most `max_inflight` distinct jobs are
-        // planned per batch (0 ⇒ unlimited); jobs past the cap answer
-        // immediately with a well-formed error response instead of
-        // queueing — first-come, first-admitted in request order. Cache
-        // hits are not exempt: the cap bounds work *admitted*, and
-        // whether a job would hit the cache is unknown until it runs.
+        // Shard ownership, then admission control. With a multi-instance
+        // topology, a key consistent-hashed to another instance answers
+        // `NotOwner` (naming the owner) and is never planned here — each
+        // cold key is planned by exactly one owner. Surviving jobs pass
+        // admission: at most `max_inflight` distinct jobs per batch and
+        // at most `max_inflight_per_tenant` per tenant (0 ⇒ unlimited),
+        // first-come, first-admitted in request order; jobs past a cap
+        // answer immediately with a well-formed error response instead
+        // of queueing. Cache hits are not exempt: the caps bound work
+        // *admitted*, and whether a job would hit the cache is unknown
+        // until it runs.
         let n_jobs = job_of_key.len();
-        let admit = if self.cfg.max_inflight == 0 {
-            n_jobs
-        } else {
-            self.cfg.max_inflight.min(n_jobs)
-        };
-        if admit < n_jobs {
-            let members: u64 = job_of_key[admit..]
-                .iter()
-                .map(|k| groups[k].len() as u64)
-                .sum();
-            self.stats.rejected.fetch_add(members, Ordering::Relaxed);
-            batch_span.arg("rejected_jobs", (n_jobs - admit) as f64);
+        enum Gate {
+            Admit,
+            NotOwner(u32),
+            Reject(String),
+        }
+        let topo = self.cfg.topology;
+        let mut admitted = 0usize;
+        let mut per_tenant: HashMap<&str, usize> = HashMap::new();
+        let gates: Vec<Gate> = job_of_key
+            .iter()
+            .map(|k| {
+                if topo.shards > 1 {
+                    let owner = owner_of(*k, topo.shards);
+                    if owner != topo.shard_id {
+                        return Gate::NotOwner(owner);
+                    }
+                }
+                if self.cfg.max_inflight != 0 && admitted >= self.cfg.max_inflight {
+                    return Gate::Reject(format!(
+                        "rejected by admission control: batch holds {n_jobs} distinct \
+                         planning jobs, max-inflight is {}",
+                        self.cfg.max_inflight,
+                    ));
+                }
+                let tenant = reqs[groups[k][0]].tenant.as_deref().unwrap_or("");
+                if self.cfg.max_inflight_per_tenant != 0 {
+                    let held = per_tenant.get(tenant).copied().unwrap_or(0);
+                    if held >= self.cfg.max_inflight_per_tenant {
+                        return Gate::Reject(format!(
+                            "rejected by admission control: tenant {tenant:?} holds {held} \
+                             distinct planning jobs in this batch, \
+                             max-inflight-per-tenant is {}",
+                            self.cfg.max_inflight_per_tenant,
+                        ));
+                    }
+                    *per_tenant.entry(tenant).or_insert(0) += 1;
+                }
+                admitted += 1;
+                Gate::Admit
+            })
+            .collect();
+        let mut rejected_members = 0u64;
+        let mut rejected_jobs = 0usize;
+        let mut not_owner_members = 0u64;
+        for (j, gate) in gates.iter().enumerate() {
+            let members = groups[&job_of_key[j]].len() as u64;
+            match gate {
+                Gate::Reject(_) => {
+                    rejected_members += members;
+                    rejected_jobs += 1;
+                }
+                Gate::NotOwner(_) => not_owner_members += members,
+                Gate::Admit => {}
+            }
+        }
+        if rejected_members > 0 {
+            self.stats
+                .rejected
+                .fetch_add(rejected_members, Ordering::Relaxed);
+            batch_span.arg("rejected_jobs", rejected_jobs as f64);
             crate::log_warn!(
-                "admission control: rejecting {} of {} distinct jobs ({} requests) — \
-                 batch exceeds max-inflight {}",
-                n_jobs - admit,
-                n_jobs,
-                members,
-                self.cfg.max_inflight,
+                "admission control: rejecting {rejected_jobs} of {n_jobs} distinct jobs \
+                 ({rejected_members} requests) — batch exceeds an inflight cap",
             );
+        }
+        if not_owner_members > 0 {
+            self.stats
+                .not_owner
+                .fetch_add(not_owner_members, Ordering::Relaxed);
+            batch_span.arg("not_owner_requests", not_owner_members as f64);
         }
 
         // Fan the admitted jobs out. When the batch fan-out itself runs
@@ -474,29 +611,40 @@ impl PlanService {
         let inner_parallel = workers.min(n_jobs) <= 1;
         let run_job = |j: usize| -> PlanResponse {
             let key = job_of_key[j];
-            if j >= admit {
-                return PlanResponse {
+            match &gates[j] {
+                Gate::NotOwner(owner) => PlanResponse {
+                    key,
+                    outcome: Outcome::NotOwner,
+                    plan: empty_plan(),
+                    lint_ok: false,
+                    secs: 0.0,
+                    error: Some(format!(
+                        "key {key:032x} is owned by shard {owner} of {} (this instance \
+                         is shard {}); re-route to its owner",
+                        topo.shards, topo.shard_id,
+                    )),
+                    audit: None,
+                },
+                Gate::Reject(msg) => PlanResponse {
                     key,
                     outcome: Outcome::Rejected,
                     plan: empty_plan(),
                     lint_ok: false,
                     secs: 0.0,
-                    error: Some(format!(
-                        "rejected by admission control: batch holds {n_jobs} distinct \
-                         planning jobs, max-inflight is {}",
-                        self.cfg.max_inflight,
-                    )),
+                    error: Some(msg.clone()),
                     audit: None,
-                };
+                },
+                Gate::Admit => {
+                    let rep = groups[&key][0];
+                    self.run_one(
+                        &reqs[rep],
+                        &canons[rep],
+                        fps[rep],
+                        job_deadlines[j],
+                        inner_parallel,
+                    )
+                }
             }
-            let rep = groups[&key][0];
-            self.run_one(
-                &reqs[rep],
-                &canons[rep],
-                fps[rep],
-                job_deadlines[j],
-                inner_parallel,
-            )
         };
         let job_results: Vec<PlanResponse> =
             Pool::new(workers.min(n_jobs.max(1))).run(n_jobs, run_job);
@@ -541,7 +689,7 @@ impl PlanService {
     /// already saturates the machine).
     fn run_one(
         &self,
-        req: &PlanRequest,
+        req: &ServeRequest,
         canon: &super::canon::Canon,
         fp: super::canon::Fingerprint,
         deadline: Deadline,
@@ -677,6 +825,32 @@ impl PlanService {
             KeyLock::Uncontended => None,
         };
 
+        // Edit-localized warm start (plain requests only): fingerprint
+        // every segment of the planner's own boundary division and look
+        // for a cached sibling plan sharing the family (division arity +
+        // config) with few enough differing segment keys. The clean
+        // segments' cached orders/offsets splice into a seed; the seeded
+        // search below then effectively re-plans only the dirty
+        // segments. Panic-isolated and verify-then-use: any failure
+        // falls through to the shape-warm or cold path.
+        let seg: Option<SegmentSig> = if req.budget.is_none() && self.cfg.edit_replan {
+            catch_unwind(AssertUnwindSafe(|| {
+                let ck = cfg_key(&self.cfg.roam, req.budget, req.technique, &self.cfg.compress);
+                segment_signature(g, ck)
+            }))
+            .ok()
+        } else {
+            None
+        };
+        let edit_seed: Option<(WarmSeed, usize)> = seg.as_ref().and_then(|sig| {
+            let max_dirty = ((sig.n_segments() as f64 * self.cfg.edit_max_dirty_frac).floor()
+                as usize)
+                .max(1);
+            let (cp, dirty) = self.cache.find_edit_sibling(sig.family, &sig.keys, max_dirty)?;
+            let seed = warm::splice_seed(g, sig, &cp)?;
+            Some((seed, dirty.len()))
+        });
+
         // One exact-planning attempt (ladder rungs 1–2), panic-isolated.
         // The `serve_plan` failpoint and the planner both run inside the
         // `catch_unwind` so injected panics and real planner panics walk
@@ -693,12 +867,16 @@ impl PlanService {
                 }
                 Ok(match req.budget {
                     Some(spec) => {
-                        let hplan = roam_plan_hybrid(g, spec, &HybridCfg {
-                            technique: req.technique,
-                            roam,
-                            compress: self.cfg.compress.clone(),
-                            ..HybridCfg::default()
-                        });
+                        let hplan = PlannerRequest::new(g)
+                            .hybrid_cfg(HybridCfg {
+                                technique: req.technique,
+                                roam,
+                                compress: self.cfg.compress.clone(),
+                                ..HybridCfg::default()
+                            })
+                            .budget(spec)
+                            .run()
+                            .into_hybrid();
                         // A budgeted plan executes the driver's (possibly
                         // augmented) graph, so it is linted against THAT
                         // graph. The cache stores only plans addressing
@@ -719,20 +897,40 @@ impl PlanService {
                         }
                     }
                     None => {
-                        let seed = if self.cfg.warm_start {
-                            self.cache
-                                .get_by_shape(fp.shape)
-                                .and_then(|cp| warm::seed_from(g, canon, &cp))
-                        } else {
-                            None
+                        // Seed preference: an edit-sibling splice beats a
+                        // shape near-miss (it carries this division's
+                        // clean segments verbatim, not a rescaled
+                        // cousin's whole order).
+                        let (seed, via_edit) = match edit_seed.clone() {
+                            Some((s, _)) => (Some(s), true),
+                            None => (
+                                if self.cfg.warm_start {
+                                    self.cache
+                                        .get_by_shape(fp.shape)
+                                        .and_then(|cp| warm::seed_from(g, canon, &cp))
+                                } else {
+                                    None
+                                },
+                                false,
+                            ),
                         };
                         let warmed = seed.is_some();
-                        let plan = roam_plan_seeded(g, &roam, seed.as_ref());
+                        let plan = PlannerRequest::new(g)
+                            .cfg(roam)
+                            .warm_opt(seed)
+                            .run()
+                            .into_plan();
                         let lint_ok = lint_plan(g, &plan).is_empty();
                         let audit = self.maybe_audit(g, g.n_ops(), &plan);
                         Attempt {
                             plan,
-                            outcome: if warmed { Outcome::Warm } else { Outcome::Cold },
+                            outcome: if via_edit {
+                                Outcome::EditReplan
+                            } else if warmed {
+                                Outcome::Warm
+                            } else {
+                                Outcome::Cold
+                            },
                             lint_ok,
                             cacheable: lint_ok,
                             audit,
@@ -750,10 +948,20 @@ impl PlanService {
         // heuristic rescue → error response.
         let (att, outcome) = match attempt(deadline) {
             Ok(att) => {
-                if att.outcome == Outcome::Warm {
-                    self.stats.warm_starts.fetch_add(1, Ordering::Relaxed);
-                } else {
-                    self.stats.cold.fetch_add(1, Ordering::Relaxed);
+                match att.outcome {
+                    Outcome::Warm => {
+                        self.stats.warm_starts.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Outcome::EditReplan => {
+                        self.stats.edit_hits.fetch_add(1, Ordering::Relaxed);
+                        let dirty = edit_seed.as_ref().map(|(_, n)| *n as u64).unwrap_or(0);
+                        self.stats
+                            .segments_replanned
+                            .fetch_add(dirty, Ordering::Relaxed);
+                    }
+                    _ => {
+                        self.stats.cold.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
                 let outcome = att.outcome;
                 (att, outcome)
@@ -847,7 +1055,14 @@ impl PlanService {
             // injected `cache_disk_write=panic`) costs the cache entry,
             // never the response.
             if catch_unwind(AssertUnwindSafe(|| {
-                self.cache.put(warm::to_cached(g, canon, &att.plan, fp));
+                // Plain plans carry the per-segment facets so later
+                // edited graphs can splice against them; budgeted plans
+                // (no signature computed) cache the flat artifact.
+                let cached = match &seg {
+                    Some(sig) => warm::to_cached_with_segments(g, canon, sig, &att.plan, fp),
+                    None => warm::to_cached(g, canon, &att.plan, fp),
+                };
+                self.cache.put(cached);
             }))
             .is_err()
             {
@@ -869,13 +1084,84 @@ impl PlanService {
 
 // ---------------------------------------------------------------------
 // JSONL request/response encoding (the `roam serve` wire protocol).
+//
+// The protocol is versioned by an optional `"v"` field on every request
+// object; a request without one is **v1** — the original shape, whose
+// responses are byte-identical to the pre-versioning service. **v2**
+// adds the `tenant` field (per-tenant admission control) and echoes
+// `"v"` on each response. Unknown fields never fail a request: they are
+// reported exhaustively as warnings so a client-side typo (`"batc"`)
+// surfaces instead of silently planning with defaults.
 
-/// Parse one JSONL request object. Model-based: `{"model": "bert",
-/// "batch": 32, "depth": 12, "seq_len": 128, "coarse": false, "sgd":
-/// false, "budget": 0.6, "budget_bytes": N, "technique": "hybrid",
-/// "deadline_secs": 5.0}` — only `model` is required.
-pub fn request_from_json(j: &Json) -> Result<PlanRequest, String> {
+/// Fields a wire-**v1** request object may carry (besides `"v"` itself,
+/// which is accepted at every version).
+const WIRE_V1_FIELDS: &[&str] = &[
+    "model",
+    "batch",
+    "depth",
+    "seq_len",
+    "coarse",
+    "sgd",
+    "budget",
+    "budget_bytes",
+    "technique",
+    "deadline_secs",
+];
+
+/// Fields wire **v2** adds on top of v1.
+const WIRE_V2_FIELDS: &[&str] = &["tenant"];
+
+/// Highest wire protocol version this build speaks.
+pub const WIRE_VERSION: u64 = 2;
+
+/// One fully decoded wire request: the negotiated protocol version, the
+/// service request, and every non-fatal diagnostic collected while
+/// parsing (unknown fields, version-gated fields ignored).
+#[derive(Clone, Debug)]
+pub struct WireRequest {
+    /// Protocol version of the request (`"v"`; absent ⇒ 1).
+    pub v: u64,
+    pub request: ServeRequest,
+    /// Exhaustive unknown-field / ignored-field warnings, in key order.
+    pub warnings: Vec<String>,
+}
+
+/// Parse one JSONL request object into a [`WireRequest`]. Model-based:
+/// `{"v": 2, "model": "bert", "batch": 32, "depth": 12, "seq_len": 128,
+/// "coarse": false, "sgd": false, "budget": 0.6, "budget_bytes": N,
+/// "technique": "hybrid", "deadline_secs": 5.0, "tenant": "team-a"}` —
+/// only `model` is required; `tenant` requires v ≥ 2.
+pub fn wire_request_from_json(j: &Json) -> Result<WireRequest, String> {
     use crate::models::{self, BuildCfg, ModelKind, Optim};
+    let v = match j.get("v") {
+        None => 1,
+        Some(x) => x
+            .as_u64()
+            .ok_or_else(|| "\"v\" must be an integer wire version".to_string())?,
+    };
+    if v == 0 || v > WIRE_VERSION {
+        return Err(format!(
+            "unsupported wire version {v} (this build speaks v1..v{WIRE_VERSION})"
+        ));
+    }
+    let mut warnings = Vec::new();
+    if let Json::Obj(m) = j {
+        for k in m.keys() {
+            let k = k.as_str();
+            if k == "v" || WIRE_V1_FIELDS.contains(&k) {
+                continue;
+            }
+            if WIRE_V2_FIELDS.contains(&k) {
+                if v < 2 {
+                    warnings.push(format!(
+                        "field {k:?} requires wire v2 (request is v{v}); ignored"
+                    ));
+                }
+                continue;
+            }
+            warnings.push(format!("unknown field {k:?} (wire v{v}); ignored"));
+        }
+    }
     let name = j
         .get("model")
         .and_then(|m| m.as_str())
@@ -902,19 +1188,45 @@ pub fn request_from_json(j: &Json) -> Result<PlanRequest, String> {
         Some(t) => Technique::from_name(t).ok_or_else(|| format!("unknown technique '{t}'"))?,
         None => Technique::Hybrid,
     };
-    Ok(PlanRequest {
-        graph,
-        budget,
-        technique,
-        deadline_secs: num("deadline_secs"),
+    let tenant = if v >= 2 {
+        j.get("tenant").and_then(|t| t.as_str()).map(str::to_string)
+    } else {
+        None
+    };
+    Ok(WireRequest {
+        v,
+        request: ServeRequest {
+            graph,
+            budget,
+            technique,
+            deadline_secs: num("deadline_secs"),
+            tenant,
+        },
+        warnings,
     })
 }
 
-/// Parse one raw JSONL wire line into a request — the `roam serve` stdin
-/// path. Malformed JSON and bad request bodies both surface as
-/// `Err(message)`; the caller answers with [`error_json`] and keeps the
-/// stream (and the batch buffered so far) alive.
-pub fn request_from_line(line: &str) -> Result<PlanRequest, String> {
+/// Parse one raw JSONL wire line into a [`WireRequest`] — the `roam
+/// serve` stdin path. Malformed JSON and bad request bodies both surface
+/// as `Err(message)`; the caller answers with [`error_json`] and keeps
+/// the stream (and the batch buffered so far) alive.
+pub fn wire_request_from_line(line: &str) -> Result<WireRequest, String> {
+    let j = Json::parse(line.trim()).map_err(|e| e.to_string())?;
+    wire_request_from_json(&j)
+}
+
+/// [`wire_request_from_json`] for callers that only want the request:
+/// warnings are logged (warn level) instead of returned.
+pub fn request_from_json(j: &Json) -> Result<ServeRequest, String> {
+    let w = wire_request_from_json(j)?;
+    for msg in &w.warnings {
+        crate::log_warn!("{msg}");
+    }
+    Ok(w.request)
+}
+
+/// Line-oriented [`request_from_json`].
+pub fn request_from_line(line: &str) -> Result<ServeRequest, String> {
     let j = Json::parse(line.trim()).map_err(|e| e.to_string())?;
     request_from_json(&j)
 }
@@ -965,6 +1277,19 @@ pub fn response_to_json(id: usize, r: &PlanResponse) -> Json {
     Json::obj(fields)
 }
 
+/// [`response_to_json`] for a versioned request: v2+ responses echo the
+/// request's `"v"` so clients can confirm the negotiated version; v1
+/// responses stay byte-identical to the unversioned shape.
+pub fn response_to_json_v(id: usize, r: &PlanResponse, v: u64) -> Json {
+    let mut j = response_to_json(id, r);
+    if v >= 2 {
+        if let Json::Obj(m) = &mut j {
+            m.insert("v".to_string(), Json::Num(v as f64));
+        }
+    }
+    j
+}
+
 /// The end-of-stream summary object (`{"summary": {...}}`).
 pub fn summary_json(svc: &PlanService) -> Json {
     let counters = |pairs: Vec<(&'static str, u64)>| {
@@ -993,6 +1318,37 @@ pub fn summary_json(svc: &PlanService) -> Json {
                 (
                     "exceeded",
                     Json::Num(svc.stats().drift_exceeded.load(Ordering::Relaxed) as f64),
+                ),
+            ]),
+        ));
+    }
+    // Edit-replan counters, present only once an edit-localized replan
+    // actually happened — a service that never serves one keeps the
+    // pre-edit-replan summary shape byte-identical.
+    let edit_hits = svc.stats().edit_hits.load(Ordering::Relaxed);
+    let segments_replanned = svc.stats().segments_replanned.load(Ordering::Relaxed);
+    if edit_hits > 0 || segments_replanned > 0 {
+        fields.push((
+            "edit_replan",
+            Json::obj(vec![
+                ("edit_hits", Json::Num(edit_hits as f64)),
+                (
+                    "segments_replanned",
+                    Json::Num(segments_replanned as f64),
+                ),
+            ]),
+        ));
+    }
+    // Shard topology + ownership refusals, gated on scale-out being on.
+    if svc.cfg.topology.shards > 1 {
+        fields.push((
+            "shard",
+            Json::obj(vec![
+                ("id", Json::Num(svc.cfg.topology.shard_id as f64)),
+                ("of", Json::Num(svc.cfg.topology.shards as f64)),
+                (
+                    "not_owner",
+                    Json::Num(svc.stats().not_owner.load(Ordering::Relaxed) as f64),
                 ),
             ]),
         ));
@@ -1116,10 +1472,10 @@ mod tests {
         // rejected job stays `Rejected`, never masquerades as `Dedup`.
         let g3 = graph_of(3, 6);
         let reqs = vec![
-            PlanRequest::plain(graph_of(1, 4)),
-            PlanRequest::plain(graph_of(2, 5)),
-            PlanRequest::plain(g3.clone()),
-            PlanRequest::plain(g3),
+            ServeRequest::plain(graph_of(1, 4)),
+            ServeRequest::plain(graph_of(2, 5)),
+            ServeRequest::plain(g3.clone()),
+            ServeRequest::plain(g3),
         ];
         let rs = svc.serve_batch(&reqs);
         assert_eq!(rs.len(), 4);
@@ -1152,7 +1508,7 @@ mod tests {
         // (and batch) survive.
         crate::faults::arm_str("serve_plan=err").expect("valid spec");
         let svc = quick_service(0);
-        let rs = svc.serve_batch(&[PlanRequest::plain(graph_of(7, 6))]);
+        let rs = svc.serve_batch(&[ServeRequest::plain(graph_of(7, 6))]);
         crate::faults::disarm();
         assert_eq!(rs.len(), 1);
         assert_eq!(rs[0].outcome, Outcome::Degraded);
@@ -1162,7 +1518,184 @@ mod tests {
         assert_eq!(svc.stats().failed.load(Ordering::Relaxed), 0);
         // The rescue plan is NOT cached — a later fault-free request for
         // the same graph plans cold (full quality), not via cache hit.
-        let rs2 = svc.serve_batch(&[PlanRequest::plain(graph_of(7, 6))]);
+        let rs2 = svc.serve_batch(&[ServeRequest::plain(graph_of(7, 6))]);
         assert_eq!(rs2[0].outcome, Outcome::Cold);
+    }
+
+    use crate::models::{BuildCfg, ModelKind};
+    use crate::serve::cache::ShardTopology;
+
+    fn quick_roam() -> RoamCfg {
+        RoamCfg {
+            parallel: false,
+            order_max_nodes: 2_000,
+            dsa_max_nodes: 2_000,
+            ..RoamCfg::default()
+        }
+    }
+
+    #[test]
+    fn wire_v2_parses_tenant_and_warns_exhaustively() {
+        let w = wire_request_from_line(
+            "{\"v\": 2, \"model\": \"mobilenet\", \"tenant\": \"team-a\", \"wat\": 1, \"batc\": 8}",
+        )
+        .expect("valid v2 request");
+        assert_eq!(w.v, 2);
+        assert_eq!(w.request.tenant.as_deref(), Some("team-a"));
+        assert_eq!(w.warnings.len(), 2, "{:?}", w.warnings);
+        assert!(w.warnings.iter().any(|m| m.contains("\"batc\"")));
+        assert!(w.warnings.iter().any(|m| m.contains("\"wat\"")));
+
+        // v1 (absent "v"): a v2-only field is warned about and ignored.
+        let w = wire_request_from_line("{\"model\": \"mobilenet\", \"tenant\": \"team-a\"}")
+            .expect("v1 request");
+        assert_eq!(w.v, 1);
+        assert!(w.request.tenant.is_none(), "tenant is v2-only");
+        assert!(
+            w.warnings.iter().any(|m| m.contains("\"tenant\"") && m.contains("v2")),
+            "{:?}",
+            w.warnings
+        );
+
+        // Explicit v1 is accepted silently; future versions are refused.
+        let w = wire_request_from_line("{\"v\": 1, \"model\": \"mobilenet\"}").unwrap();
+        assert_eq!((w.v, w.warnings.len()), (1, 0));
+        let e = wire_request_from_line("{\"v\": 3, \"model\": \"mobilenet\"}").unwrap_err();
+        assert!(e.contains("unsupported wire version"), "{e}");
+    }
+
+    #[test]
+    fn versioned_response_echoes_v_only_for_v2() {
+        let svc = quick_service(0);
+        let rs = svc.serve_batch(&[ServeRequest::plain(graph_of(9, 5))]);
+        let v1 = format!("{}", response_to_json(0, &rs[0]));
+        let j1 = format!("{}", response_to_json_v(0, &rs[0], 1));
+        assert_eq!(v1, j1, "v1 responses must stay byte-identical");
+        let j2 = Json::parse(&format!("{}", response_to_json_v(0, &rs[0], 2))).unwrap();
+        assert_eq!(j2.get("v").and_then(|x| x.as_u64()), Some(2));
+    }
+
+    #[test]
+    fn per_tenant_admission_caps_each_tenant_separately() {
+        let svc = PlanService::new(PlanCache::new(CacheCfg::default()), ServeCfg {
+            roam: quick_roam(),
+            workers: 1,
+            max_inflight_per_tenant: 1,
+            ..Default::default()
+        });
+        let t = |seed: u64, tenant: &str| {
+            let mut r = ServeRequest::plain(graph_of(seed, 5));
+            r.tenant = Some(tenant.to_string());
+            r
+        };
+        let rs = svc.serve_batch(&[t(1, "a"), t(2, "a"), t(3, "b")]);
+        assert_ne!(rs[0].outcome, Outcome::Rejected, "first job of tenant a");
+        assert_eq!(rs[1].outcome, Outcome::Rejected, "second job of tenant a");
+        let msg = rs[1].error.as_deref().expect("rejections carry an error");
+        assert!(
+            msg.contains("tenant") && msg.contains("max-inflight-per-tenant"),
+            "{msg}"
+        );
+        assert_ne!(rs[2].outcome, Outcome::Rejected, "tenant b has its own cap");
+        assert_eq!(svc.stats().rejected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn shard_topology_routes_each_key_to_exactly_one_owner() {
+        let mk = |id: u32| {
+            PlanService::new(PlanCache::new(CacheCfg::default()), ServeCfg {
+                roam: quick_roam(),
+                workers: 1,
+                topology: ShardTopology {
+                    shards: 2,
+                    shard_id: id,
+                },
+                ..Default::default()
+            })
+        };
+        let (s0, s1) = (mk(0), mk(1));
+        let reqs: Vec<ServeRequest> = (0..4)
+            .map(|i| ServeRequest::plain(graph_of(40 + i, 5)))
+            .collect();
+        let r0 = s0.serve_batch(&reqs);
+        let r1 = s1.serve_batch(&reqs);
+        for i in 0..reqs.len() {
+            let owned0 = r0[i].outcome != Outcome::NotOwner;
+            let owned1 = r1[i].outcome != Outcome::NotOwner;
+            assert!(owned0 ^ owned1, "request {i} must have exactly one owner");
+            let refused = if owned0 { &r1[i] } else { &r0[i] };
+            let msg = refused.error.as_deref().expect("refusals carry an error");
+            assert!(msg.contains("shard"), "{msg}");
+        }
+        let refusals = s0.stats().not_owner.load(Ordering::Relaxed)
+            + s1.stats().not_owner.load(Ordering::Relaxed);
+        assert_eq!(refusals, reqs.len() as u64);
+        // The wire shape of a refusal is the short error object, and the
+        // multi-shard summary carries the gated `shard` section.
+        let refused = r0
+            .iter()
+            .chain(r1.iter())
+            .find(|r| r.outcome == Outcome::NotOwner)
+            .expect("some refusal");
+        let back = Json::parse(&format!("{}", response_to_json(0, refused))).unwrap();
+        assert_eq!(back.get("outcome").and_then(|v| v.as_str()), Some("not_owner"));
+        assert!(back.get("planner").is_none());
+        let sj = format!("{}", summary_json(&s0));
+        assert!(sj.contains("\"shard\""), "{sj}");
+    }
+
+    #[test]
+    fn edited_graph_is_served_as_edit_replan() {
+        let svc = quick_service(0);
+        let g = crate::models::build(ModelKind::Alexnet, &BuildCfg::default());
+        let rs = svc.serve_batch(&[ServeRequest::plain(g.clone())]);
+        assert_eq!(rs[0].outcome, Outcome::Cold);
+
+        // Resize one tensor that lives inside some segment: same
+        // division (purely structural), a few dirty segment keys.
+        let ck = cfg_key(&svc.cfg.roam, None, Technique::Hybrid, &svc.cfg.compress);
+        let sig = segment_signature(&g, ck);
+        let mut e = g.clone();
+        let t = sig
+            .subs
+            .iter()
+            .flat_map(|s| s.tensors.iter().copied())
+            .find(|&t| e.tensors[t].size > 0)
+            .expect("a sized tensor inside a segment");
+        e.tensors[t].size /= 2;
+        // Reference: what a cold plan of the *edited* graph costs.
+        let cold = PlannerRequest::new(&e).cfg(quick_roam()).run().into_plan();
+        let rs2 = svc.serve_batch(&[ServeRequest::plain(e.clone())]);
+        assert_eq!(rs2[0].outcome, Outcome::EditReplan);
+        assert!(rs2[0].lint_ok, "spliced re-plan must lint clean");
+        assert!(
+            rs2[0].plan.actual_peak <= cold.actual_peak,
+            "edit re-plan peak {} exceeds cold peak {}",
+            rs2[0].plan.actual_peak,
+            cold.actual_peak
+        );
+        assert_eq!(svc.stats().edit_hits.load(Ordering::Relaxed), 1);
+        let segs = svc.stats().segments_replanned.load(Ordering::Relaxed);
+        assert!(
+            segs >= 1 && segs <= sig.n_segments() as u64,
+            "segments_replanned {segs} out of range"
+        );
+        // The summary surfaces the gated edit_replan section.
+        let sj = format!("{}", summary_json(&svc));
+        assert!(sj.contains("\"edit_replan\""), "{sj}");
+        assert!(sj.contains("\"segments_replanned\""), "{sj}");
+        // And with the feature off, the same edit plans cold or warm —
+        // never through the edit path.
+        let off = PlanService::new(PlanCache::new(CacheCfg::default()), ServeCfg {
+            roam: quick_roam(),
+            workers: 1,
+            edit_replan: false,
+            ..Default::default()
+        });
+        let a = off.serve_batch(&[ServeRequest::plain(g)]);
+        let b = off.serve_batch(&[ServeRequest::plain(e)]);
+        assert_eq!(a[0].outcome, Outcome::Cold);
+        assert_ne!(b[0].outcome, Outcome::EditReplan);
+        assert_eq!(off.stats().edit_hits.load(Ordering::Relaxed), 0);
     }
 }

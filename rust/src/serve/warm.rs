@@ -12,7 +12,7 @@
 //! cached one.
 
 use super::cache::CachedPlan;
-use super::canon::{Canon, Fingerprint};
+use super::canon::{Canon, Fingerprint, SegmentSig};
 use crate::graph::Graph;
 use crate::layout::sim::conflicts;
 use crate::layout::Layout;
@@ -34,7 +34,111 @@ pub fn to_cached(g: &Graph, canon: &Canon, plan: &ExecutionPlan, fp: Fingerprint
             .map(|&(t, o)| (canon.tensor_rank[t], o))
             .collect(),
         planner: plan.planner.clone(),
+        seg_family: 0,
+        seg_keys: Vec::new(),
+        seg_orders: Vec::new(),
+        seg_offsets: Vec::new(),
     }
+}
+
+/// [`to_cached`] plus the per-segment edit-replan facets: each segment's
+/// slice of the executed order (expressed in the segment subgraph's
+/// canonical op ranks) and the placed offsets of every tensor the
+/// segment's subgraph can see (in sub-canonical tensor ranks). A later
+/// session whose signature shares this plan's `family` and agrees on the
+/// clean segments' keys can splice these back via [`splice_seed`].
+pub fn to_cached_with_segments(
+    g: &Graph,
+    canon: &Canon,
+    sig: &SegmentSig,
+    plan: &ExecutionPlan,
+    fp: Fingerprint,
+) -> CachedPlan {
+    let mut cp = to_cached(g, canon, plan, fp);
+    let mut pos = vec![usize::MAX; g.n_ops()];
+    for (i, &v) in plan.order.iter().enumerate() {
+        pos[v] = i;
+    }
+    let placed: std::collections::HashMap<usize, u64> = plan.offsets.iter().copied().collect();
+    let mut seg_orders = Vec::with_capacity(sig.subs.len());
+    let mut seg_offsets = Vec::with_capacity(sig.subs.len());
+    for sub in &sig.subs {
+        // The segment's ops in the order the plan executed them, rebased
+        // into the segment subgraph's canonical ranks.
+        let mut by_exec: Vec<usize> = (0..sub.ops.len()).collect();
+        by_exec.sort_by_key(|&l| pos[sub.ops[l]]);
+        seg_orders.push(
+            by_exec
+                .iter()
+                .map(|&l| sub.canon.op_rank[l])
+                .collect::<Vec<u32>>(),
+        );
+        let mut offs = Vec::new();
+        for (l, &gt) in sub.tensors.iter().enumerate() {
+            if let Some(&o) = placed.get(&gt) {
+                offs.push((sub.canon.tensor_rank[l], o));
+            }
+        }
+        seg_offsets.push(offs);
+    }
+    cp.seg_family = sig.family;
+    cp.seg_keys = sig.keys.clone();
+    cp.seg_orders = seg_orders;
+    cp.seg_offsets = seg_offsets;
+    cp
+}
+
+/// Build a warm-start seed for an **edited** graph from a cached sibling
+/// plan: segments whose WL keys still match the sibling's replay the
+/// cached per-segment order (and carry their offsets as packing
+/// priorities); dirty segments fall back to ASAP order and are re-planned
+/// from scratch by the seeded planner. Boundary ops are appended after
+/// each segment, mirroring the division's precedence structure.
+///
+/// Verify-then-use like everything here: `None` unless the spliced order
+/// is a topological permutation of `g` — the caller then cold-plans.
+pub fn splice_seed(g: &Graph, sig: &SegmentSig, cp: &CachedPlan) -> Option<WarmSeed> {
+    let n = sig.n_segments();
+    if cp.seg_keys.len() != n || cp.seg_orders.len() != n || cp.seg_family != sig.family {
+        return None;
+    }
+    let mut order: Vec<usize> = Vec::with_capacity(g.n_ops());
+    let mut offsets: Vec<(usize, u64)> = Vec::new();
+    for s in 0..n {
+        let sub = &sig.subs[s];
+        let cached = &cp.seg_orders[s];
+        let clean = cp.seg_keys[s] == sig.keys[s] && cached.len() == sub.ops.len();
+        let translated: Option<Vec<usize>> = if clean {
+            cached
+                .iter()
+                .map(|&r| sub.canon.op_by_rank.get(r as usize).map(|&l| sub.ops[l]))
+                .collect()
+        } else {
+            None
+        };
+        match translated {
+            Some(seg) => {
+                order.extend_from_slice(&seg);
+                if let Some(offs) = cp.seg_offsets.get(s) {
+                    for &(r, o) in offs {
+                        if let Some(&l) = sub.canon.tensor_by_rank.get(r as usize) {
+                            offsets.push((sub.tensors[l], o));
+                        }
+                    }
+                }
+            }
+            None => order.extend_from_slice(&sig.seg_ops[s]),
+        }
+        if let Some(c) = sig.closes[s] {
+            order.push(c);
+        }
+    }
+    if !crate::graph::topo::is_topological(g, &order) {
+        return None;
+    }
+    offsets.sort_unstable();
+    offsets.dedup();
+    Some(WarmSeed { order, offsets })
 }
 
 /// Translate the cached order into `g`'s op ids; `None` unless the result
@@ -109,7 +213,7 @@ mod tests {
     use super::*;
     use crate::models::{self, BuildCfg, ModelKind};
     use crate::planner::{roam_plan, RoamCfg};
-    use crate::serve::canon::canonize;
+    use crate::serve::canon::{canonize, segment_signature};
 
     fn quick() -> RoamCfg {
         RoamCfg {
@@ -135,6 +239,49 @@ mod tests {
         let seed = seed_from(&g, &canon, &cp).expect("seed");
         assert_eq!(seed.order, plan.order);
         assert_eq!(seed.offsets.len(), plan.offsets.len());
+    }
+
+    #[test]
+    fn segment_plan_splices_onto_self_and_edited_sibling() {
+        let g = models::build(ModelKind::Alexnet, &BuildCfg::default());
+        let canon = canonize(&g);
+        let plan = roam_plan(&g, &quick());
+        let sig = segment_signature(&g, 0x1234);
+        let cp = to_cached_with_segments(&g, &canon, &sig, &plan, canon.fingerprint);
+        assert_eq!(cp.seg_family, sig.family);
+        assert_eq!(cp.seg_keys, sig.keys);
+        assert_eq!(cp.seg_orders.len(), sig.n_segments());
+
+        // Same graph: every segment is clean and the splice verifies.
+        let seed = splice_seed(&g, &sig, &cp).expect("clean splice must verify");
+        assert_eq!(seed.order.len(), g.n_ops());
+        assert!(crate::graph::topo::is_topological(&g, &seed.order));
+
+        // Edited sibling: resize one tensor inside some segment. The
+        // division is purely structural, so arity is preserved; only the
+        // touched segments' keys change, and the splice still verifies.
+        let mut e = g.clone();
+        let t = sig
+            .subs
+            .iter()
+            .flat_map(|s| s.tensors.iter().copied())
+            .find(|&t| e.tensors[t].size > 0)
+            .expect("a sized tensor inside a segment");
+        e.tensors[t].size *= 3;
+        let esig = segment_signature(&e, 0x1234);
+        let dirty = esig.diff(&cp.seg_keys).expect("division arity preserved");
+        assert!(!dirty.is_empty(), "resize must dirty at least one segment");
+        assert!(dirty.len() < esig.n_segments(), "resize must not dirty all");
+        let eseed = splice_seed(&e, &esig, &cp).expect("edited splice must verify");
+        assert!(crate::graph::topo::is_topological(&e, &eseed.order));
+
+        // A signature from a different config key is a different family.
+        let osig = segment_signature(&g, 0x9999);
+        assert!(splice_seed(&g, &osig, &cp).is_none());
+
+        // Plans cached without segment facets never splice.
+        let bare = to_cached(&g, &canon, &plan, canon.fingerprint);
+        assert!(splice_seed(&g, &sig, &bare).is_none());
     }
 
     #[test]

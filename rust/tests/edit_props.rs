@@ -1,0 +1,266 @@
+//! Properties of edit-localized re-planning: random single-edit
+//! perturbations (tensor resize, op insertion, layer removal) of the
+//! transformer and mobilenet graphs must
+//!
+//! * dirty at least one and at most the touching segments of the
+//!   per-segment fingerprint signature (locality),
+//! * splice into verified, lint-clean plans,
+//! * never exceed the peak of a cold plan of the same edited graph, and
+//! * prune the ordering search below the cold node count (the
+//!   clean-segment warm path actually engages),
+//!
+//! while structural edits that change the division arity must be
+//! declined safely (no sibling, no mis-splice, still a lint-clean plan).
+
+use roam::graph::{OpKind, Phase, TensorClass};
+use roam::hybrid::Technique;
+use roam::models::{self, BuildCfg, ModelKind};
+use roam::planner::{assert_plan_ok, PlanRequest, RoamCfg};
+use roam::serve::{
+    canonize, cfg_key, segment_signature, warm, CacheCfg, Outcome, PlanCache, PlanService,
+    SegmentSig, ServeCfg, ServeRequest,
+};
+use roam::util::Pcg64;
+use roam::Graph;
+
+fn quick_roam() -> RoamCfg {
+    RoamCfg {
+        parallel: false,
+        order_max_nodes: 4_000,
+        dsa_max_nodes: 4_000,
+        ..RoamCfg::default()
+    }
+}
+
+fn service() -> PlanService {
+    PlanService::new(PlanCache::new(CacheCfg::default()), ServeCfg {
+        roam: quick_roam(),
+        workers: 1,
+        ..Default::default()
+    })
+}
+
+fn stat(plan: &roam::planner::ExecutionPlan, key: &str) -> f64 {
+    plan.stat(key).unwrap_or(0.0)
+}
+
+fn cases() -> Vec<(&'static str, Graph)> {
+    vec![
+        (
+            "transformer",
+            models::build(ModelKind::SyntheticTransformer, &BuildCfg {
+                depth: 2,
+                ..Default::default()
+            }),
+        ),
+        ("mobilenet", models::build(ModelKind::Mobilenet, &BuildCfg::default())),
+    ]
+}
+
+/// The service-config fold all signatures in this suite use.
+fn ck(cfg: &ServeCfg) -> u64 {
+    cfg_key(&cfg.roam, None, Technique::Hybrid, &cfg.compress)
+}
+
+/// Pick a random tensor that appears inside some segment subgraph (only
+/// those can dirty a segment key) and rescale it by a random factor.
+/// Returns the edited graph and the chosen tensor.
+fn random_resize(g: &Graph, sig: &SegmentSig, rng: &mut Pcg64) -> (Graph, usize) {
+    let inside: Vec<usize> = {
+        let mut v: Vec<usize> = sig
+            .subs
+            .iter()
+            .flat_map(|s| s.tensors.iter().copied())
+            .filter(|&t| g.tensors[t].size > 0)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    assert!(!inside.is_empty(), "no sized tensor inside any segment");
+    let t = inside[rng.gen_range(inside.len() as u64) as usize];
+    let mut e = g.clone();
+    match rng.gen_range(3) {
+        0 => e.tensors[t].size *= 2,
+        1 => e.tensors[t].size *= 5,
+        _ => e.tensors[t].size = (e.tensors[t].size / 2).max(1),
+    }
+    (e, t)
+}
+
+#[test]
+fn resize_edits_localize_to_touching_segments() {
+    for (name, g) in cases() {
+        let cfg = ServeCfg::default();
+        let sig = segment_signature(&g, ck(&cfg));
+        let mut rng = Pcg64::new(0xed17);
+        for trial in 0..8 {
+            let (e, t) = random_resize(&g, &sig, &mut rng);
+            let sig2 = segment_signature(&e, ck(&cfg));
+            assert_eq!(
+                sig.family, sig2.family,
+                "{name} trial {trial}: a resize must not change the division family"
+            );
+            let dirty = sig
+                .diff(&sig2.keys)
+                .unwrap_or_else(|| panic!("{name}: same arity must diff structurally"));
+            // Locality: at least the segment that keyed the tensor, at
+            // most the segments whose subgraph contains it.
+            let touching: Vec<usize> = (0..sig.n_segments())
+                .filter(|&s| sig.subs[s].tensors.contains(&t))
+                .collect();
+            assert!(
+                !dirty.is_empty(),
+                "{name} trial {trial}: resizing tensor {t} dirtied no segment"
+            );
+            assert!(
+                dirty.len() <= touching.len(),
+                "{name} trial {trial}: {} dirty segments but only {} touch tensor {t}",
+                dirty.len(),
+                touching.len()
+            );
+            for s in &dirty {
+                assert!(
+                    touching.contains(s),
+                    "{name} trial {trial}: segment {s} dirtied without touching tensor {t}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn spliced_seeds_verify_and_produce_lint_clean_plans() {
+    for (name, g) in cases() {
+        let cfg = ServeCfg::default();
+        let roam = quick_roam();
+        let sig = segment_signature(&g, ck(&cfg));
+        let canon = canonize(&g);
+        let cold = PlanRequest::new(&g).cfg(roam.clone()).run().into_plan();
+        let fp = canon.fingerprint;
+        let cp = warm::to_cached_with_segments(&g, &canon, &sig, &cold, fp);
+        let mut rng = Pcg64::new(0x5eed);
+        for trial in 0..4 {
+            let (e, _) = random_resize(&g, &sig, &mut rng);
+            let sig2 = segment_signature(&e, ck(&cfg));
+            let seed = warm::splice_seed(&e, &sig2, &cp)
+                .unwrap_or_else(|| panic!("{name} trial {trial}: splice must verify"));
+            assert_eq!(seed.order.len(), e.n_ops(), "{name}: spliced order is complete");
+            let plan = PlanRequest::new(&e)
+                .cfg(roam.clone())
+                .warm_opt(Some(seed))
+                .run()
+                .into_plan();
+            assert_plan_ok(&e, &plan);
+            assert_eq!(stat(&plan, "warm_seeded"), 1.0, "{name} trial {trial}");
+        }
+    }
+}
+
+#[test]
+fn service_edit_path_meets_peak_and_search_gates() {
+    for (name, g) in cases() {
+        let svc = service();
+        let rs = svc.serve_batch(&[ServeRequest::plain(g.clone())]);
+        assert_eq!(rs[0].outcome, Outcome::Cold, "{name}");
+
+        let sig = segment_signature(&g, ck(svc.cfg()));
+        let mut rng = Pcg64::new(0xfeed ^ g.n_ops() as u64);
+        let (e, _) = random_resize(&g, &sig, &mut rng);
+        let cold = PlanRequest::new(&e).cfg(quick_roam()).run().into_plan();
+        let rs2 = svc.serve_batch(&[ServeRequest::plain(e.clone())]);
+        assert_eq!(
+            rs2[0].outcome,
+            Outcome::EditReplan,
+            "{name}: a single resize of a cached graph must take the edit path"
+        );
+        assert!(rs2[0].lint_ok, "{name}: edit re-plan must lint clean");
+        assert_plan_ok(&e, &rs2[0].plan);
+        let warm = &rs2[0].plan;
+        assert_eq!(stat(warm, "warm_seeded"), 1.0, "{name}: splice must seed the search");
+        assert!(
+            warm.actual_peak <= cold.actual_peak,
+            "{name}: edit re-plan peak {} exceeds cold peak {}",
+            warm.actual_peak,
+            cold.actual_peak
+        );
+        // The clean-segment warm path pins the search saving: the seeded
+        // run prunes from the spliced incumbent and explores strictly
+        // fewer ordering nodes than cold — unless the cold search itself
+        // was trivial (zero nodes), where there is nothing to prune.
+        let (wn, cn) = (stat(warm, "order_nodes_explored"), stat(&cold, "order_nodes_explored"));
+        assert!(
+            wn < cn || cn == 0.0,
+            "{name}: warm explored {wn} ordering nodes, cold {cn}"
+        );
+        let stats = svc.stats();
+        assert_eq!(stats.edit_hits.load(std::sync::atomic::Ordering::Relaxed), 1, "{name}");
+        let segs = stats
+            .segments_replanned
+            .load(std::sync::atomic::Ordering::Relaxed);
+        assert!(
+            segs >= 1 && segs <= sig.n_segments() as u64,
+            "{name}: segments_replanned {segs} out of [1, {}]",
+            sig.n_segments()
+        );
+    }
+}
+
+#[test]
+fn structural_edits_decline_safely() {
+    let cs = cases();
+    let g = &cs[0].1;
+    let cfg = ServeCfg::default();
+    let sig = segment_signature(g, ck(&cfg));
+
+    // Op insertion: append an elementwise consumer of an activation. The
+    // division may change arity; whatever happens, the signature must
+    // either decline the diff (different arity) or localize it, and the
+    // service must still produce a lint-clean plan.
+    let mut added = g.clone();
+    let src = added
+        .tensors
+        .iter()
+        .find(|t| t.class == TensorClass::Activation && t.size > 0)
+        .map(|t| t.id)
+        .expect("an activation to consume");
+    let sz = added.tensors[src].size;
+    added.add_op("edit-probe", OpKind::Elementwise, Phase::Backward, &[src], &[(
+        "edit-probe-out",
+        sz,
+        TensorClass::TempBuffer,
+    )]);
+    let sig_add = segment_signature(&added, ck(&cfg));
+    match sig.diff(&sig_add.keys) {
+        None => assert_ne!(
+            (sig.family, sig.n_segments()),
+            (sig_add.family, sig_add.n_segments()),
+            "diff may only decline when the division changed"
+        ),
+        Some(dirty) => assert!(!dirty.is_empty(), "an op insertion cannot be a no-op edit"),
+    }
+
+    // Layer removal: a shallower transformer is a different division
+    // arity — the sibling search must decline rather than mis-splice.
+    let removed = models::build(ModelKind::SyntheticTransformer, &BuildCfg {
+        depth: 1,
+        ..Default::default()
+    });
+    let sig_rm = segment_signature(&removed, ck(&cfg));
+    if sig_rm.n_segments() != sig.n_segments() {
+        assert!(sig.diff(&sig_rm.keys).is_none(), "arity change must decline the diff");
+    }
+
+    // End to end: cache the base, then serve both structural edits. Any
+    // outcome is acceptable except a panic or an unverified plan.
+    let svc = service();
+    let rs = svc.serve_batch(&[
+        ServeRequest::plain(g.clone()),
+        ServeRequest::plain(added.clone()),
+        ServeRequest::plain(removed.clone()),
+    ]);
+    assert!(rs.iter().all(|r| r.error.is_none()), "structural edits must plan");
+    assert!(rs.iter().all(|r| r.lint_ok), "structural edits must lint clean");
+    assert_plan_ok(&added, &rs[1].plan);
+    assert_plan_ok(&removed, &rs[2].plan);
+}

@@ -18,7 +18,7 @@ use roam::graph::random::{random_training_graph, RandomGraphCfg};
 use roam::hybrid::BudgetSpec;
 use roam::planner::{lint_plan, roam_plan, ExecutionPlan, RoamCfg};
 use roam::serve::{
-    response_to_json, CacheCfg, Outcome, PlanCache, PlanRequest, PlanService, ServeCfg,
+    response_to_json, CacheCfg, Outcome, PlanCache, PlanService, ServeCfg, ServeRequest,
 };
 use roam::util::json::Json;
 use roam::util::Pcg64;
@@ -203,7 +203,7 @@ fn cache_entry_truncated_at_every_offset_is_never_served() {
             ..Default::default()
         },
     );
-    let rs = svc.serve_batch(&[PlanRequest::plain(graph_of(5, 5))]);
+    let rs = svc.serve_batch(&[ServeRequest::plain(graph_of(5, 5))]);
     assert!(rs[0].lint_ok && rs[0].error.is_none());
     let key = rs[0].key;
     let file = format!("{key:032x}.json");
@@ -323,8 +323,8 @@ fn corrupted_cache_entries_are_quarantined_never_served() {
                 ..Default::default()
             },
         );
-        let reqs: Vec<PlanRequest> = (0..n)
-            .map(|i| PlanRequest::plain(graph_of(400 + i as u64, 4 + i % 3)))
+        let reqs: Vec<ServeRequest> = (0..n)
+            .map(|i| ServeRequest::plain(graph_of(400 + i as u64, 4 + i % 3)))
             .collect();
         let rs = svc.serve_batch(&reqs);
         for r in &rs {
@@ -402,13 +402,13 @@ fn chaos_every_failpoint_keeps_serve_answering() {
 
             // A batch with plain requests, one duplicate (dedupe path)
             // and one budgeted request (hybrid_round coverage).
-            let mut reqs: Vec<PlanRequest> = (0..3)
+            let mut reqs: Vec<ServeRequest> = (0..3)
                 .map(|_| {
                     let fwd = rng.usize_in(3, 7);
-                    PlanRequest::plain(graph_of(rng.next_u64(), fwd))
+                    ServeRequest::plain(graph_of(rng.next_u64(), fwd))
                 })
                 .collect();
-            let mut budgeted = PlanRequest::plain(graph_of(rng.next_u64(), 5));
+            let mut budgeted = ServeRequest::plain(graph_of(rng.next_u64(), 5));
             budgeted.budget = Some(BudgetSpec::Fraction(0.7));
             reqs.push(budgeted);
             reqs.push(reqs[0].clone());

@@ -12,7 +12,7 @@ use roam::graph::{Graph, OpId, TensorClass};
 use roam::models::{self, BuildCfg, ModelKind};
 use roam::planner::{assert_plan_ok, roam_plan, RoamCfg};
 use roam::serve::{
-    canonize, CacheCfg, KeyLock, Outcome, PlanCache, PlanRequest, PlanService, ServeCfg,
+    canonize, CacheCfg, KeyLock, Outcome, PlanCache, PlanService, ServeCfg, ServeRequest,
 };
 use roam::util::quick::forall;
 use roam::util::Pcg64;
@@ -152,8 +152,8 @@ fn same_graph_twice_yields_byte_identical_cached_plan_and_a_hit() {
     // (a) determinism: two fresh services cache byte-identical artifacts.
     let svc1 = service(quick_roam());
     let svc2 = service(quick_roam());
-    let r1 = svc1.serve_batch(&[PlanRequest::plain(g.clone())]);
-    let r2 = svc2.serve_batch(&[PlanRequest::plain(g.clone())]);
+    let r1 = svc1.serve_batch(&[ServeRequest::plain(g.clone())]);
+    let r2 = svc2.serve_batch(&[ServeRequest::plain(g.clone())]);
     assert_eq!(r1[0].key, r2[0].key);
     assert!(r1[0].lint_ok && r2[0].lint_ok);
     let cached1 = svc1.cache().get(r1[0].key).expect("cached after serve");
@@ -170,7 +170,7 @@ fn same_graph_twice_yields_byte_identical_cached_plan_and_a_hit() {
         .stats()
         .hits
         .load(std::sync::atomic::Ordering::Relaxed);
-    let r3 = svc1.serve_batch(&[PlanRequest::plain(g.clone())]);
+    let r3 = svc1.serve_batch(&[ServeRequest::plain(g.clone())]);
     assert_eq!(r3[0].outcome, Outcome::CacheHit);
     assert!(r3[0].lint_ok);
     assert_plan_ok(&g, &r3[0].plan);
@@ -198,10 +198,10 @@ fn batch_dedupes_identical_requests_single_flight() {
     });
     let svc = service(quick_roam());
     let reqs = vec![
-        PlanRequest::plain(g.clone()),
-        PlanRequest::plain(g.clone()),
-        PlanRequest::plain(g.clone()),
-        PlanRequest::plain(h.clone()),
+        ServeRequest::plain(g.clone()),
+        ServeRequest::plain(g.clone()),
+        ServeRequest::plain(g.clone()),
+        ServeRequest::plain(h.clone()),
     ];
     let rs = svc.serve_batch(&reqs);
     assert_eq!(rs.len(), 4);
@@ -231,7 +231,7 @@ fn expired_deadline_degrades_to_heuristic_not_a_stall() {
         ..Default::default()
     });
     let svc = service(quick_roam());
-    let mut req = PlanRequest::plain(g.clone());
+    let mut req = ServeRequest::plain(g.clone());
     req.deadline_secs = Some(1e-9);
     let rs = svc.serve_batch(&[req]);
     assert_eq!(rs[0].outcome, Outcome::Degraded);
@@ -303,6 +303,10 @@ fn per_key_lockfile_winner_then_ready_then_stale_takeover() {
         order: Vec::new(),
         offsets: Vec::new(),
         planner: "test".to_string(),
+        seg_family: 0,
+        seg_keys: Vec::new(),
+        seg_orders: Vec::new(),
+        seg_offsets: Vec::new(),
     };
     cache.put(plan.clone());
     match cache.lock_key(key, max_wait, fresh) {
@@ -370,8 +374,8 @@ fn two_processes_sharing_a_cache_dir_plan_a_cold_key_once() {
     });
 
     let (ra, rb) = std::thread::scope(|s| {
-        let ha = s.spawn(|| svc_a.serve_batch(&[PlanRequest::plain(g.clone())]));
-        let hb = s.spawn(|| svc_b.serve_batch(&[PlanRequest::plain(g.clone())]));
+        let ha = s.spawn(|| svc_a.serve_batch(&[ServeRequest::plain(g.clone())]));
+        let hb = s.spawn(|| svc_b.serve_batch(&[ServeRequest::plain(g.clone())]));
         (ha.join().unwrap(), hb.join().unwrap())
     });
     assert_eq!(ra[0].key, rb[0].key);
@@ -430,7 +434,7 @@ fn codec_table_splits_budgeted_cache_keys_only() {
     });
 
     let budgeted = || {
-        let mut r = PlanRequest::plain(g.clone());
+        let mut r = ServeRequest::plain(g.clone());
         r.budget = Some(BudgetSpec::Fraction(0.8));
         r.technique = Technique::Hybrid;
         r
@@ -443,8 +447,8 @@ fn codec_table_splits_budgeted_cache_keys_only() {
         "budgeted keys must not alias across different codec tables"
     );
 
-    let up = svc_plain.serve_batch(&[PlanRequest::plain(g.clone())]);
-    let uc = svc_codec.serve_batch(&[PlanRequest::plain(g.clone())]);
+    let up = svc_plain.serve_batch(&[ServeRequest::plain(g.clone())]);
+    let uc = svc_codec.serve_batch(&[ServeRequest::plain(g.clone())]);
     assert_eq!(
         up[0].key, uc[0].key,
         "unbudgeted keys must be unaffected by the codec table"
@@ -492,12 +496,12 @@ fn warm_started_replans_are_valid_and_never_worse() {
         assert_ne!(cb.key, cr.key, "{name}: full keys must differ");
 
         let svc = service(det_roam());
-        let r0 = svc.serve_batch(&[PlanRequest::plain(base.clone())]);
+        let r0 = svc.serve_batch(&[ServeRequest::plain(base.clone())]);
         assert_eq!(r0[0].outcome, Outcome::Cold, "{name}");
         assert!(r0[0].lint_ok, "{name}");
 
         let cold = roam_plan(&rescaled, &det_roam());
-        let r1 = svc.serve_batch(&[PlanRequest::plain(rescaled.clone())]);
+        let r1 = svc.serve_batch(&[ServeRequest::plain(rescaled.clone())]);
         assert_eq!(
             r1[0].outcome,
             Outcome::Warm,
